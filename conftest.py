@@ -1,0 +1,7 @@
+"""Repo-root pytest shim: make `pytest python/tests/` work from the
+workspace root (the Makefile runs pytest from python/, where the
+`compile` package resolves naturally)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,9 @@
+use aimet::coordinator::experiments::*;
+fn main() {
+    let rows = table_4_2(Effort::Fast);
+    print!("{}", render_table_4_2(&rows));
+    let r51 = table_5_1(Effort::Fast);
+    print!("{}", render_table_5_1(&r51));
+    let r52 = table_5_2(Effort::Fast);
+    print!("{}", render_table_5_2(&r52));
+}

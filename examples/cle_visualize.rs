@@ -1,0 +1,17 @@
+//! Figures 4.2/4.3 — per-channel weight ranges of the first depthwise
+//! layer before and after cross-layer equalization, as ASCII boxplots and
+//! CSV (written next to the binary for plotting).
+//!
+//! Run: `cargo run --release --example cle_visualize`
+
+use aimet::coordinator::experiments::{fig_4_2_4_3, render_fig_4_2_4_3, Effort};
+
+fn main() {
+    let res = fig_4_2_4_3(Effort::Fast);
+    print!("{}", render_fig_4_2_4_3(&res));
+    let dir = std::env::temp_dir().join("aimet_cle_ranges");
+    std::fs::create_dir_all(&dir).ok();
+    std::fs::write(dir.join("fig4_2_before.csv"), res.before.to_csv()).unwrap();
+    std::fs::write(dir.join("fig4_3_after.csv"), res.after.to_csv()).unwrap();
+    println!("CSV written to {}", dir.display());
+}

@@ -1,0 +1,54 @@
+//! The PTQ debugging flow (fig 4.5) on a deliberately broken model:
+//! W4 weights, no CLE, on the pathological MobiMini — then follows the
+//! flow's own advice and shows the fix working.
+//!
+//! Run: `cargo run --release --example debug_flow`
+
+use aimet::coordinator::experiments::{trained_model, Effort};
+use aimet::ptq::{run_debug_flow, standard_ptq_pipeline, BiasCorrection, PtqOptions};
+use aimet::quantsim::QuantParams;
+use aimet::task::{evaluate_graph, evaluate_sim};
+
+fn main() {
+    let model = "mobimini";
+    println!("== fig 4.5 debugging flow ==");
+    let (g, data, _) = trained_model(model, Effort::Fast, 999);
+    let fp32 = evaluate_graph(&g, model, &data, 4, 16);
+    let calib = data.calibration(3, 16);
+
+    // A broken configuration: W4 per-tensor, no CLE, min-max everywhere.
+    let broken = standard_ptq_pipeline(
+        &g,
+        &calib,
+        &PtqOptions {
+            qp: QuantParams {
+                param_bw: 4,
+                ..Default::default()
+            },
+            use_cle: false,
+            bias_correction: BiasCorrection::None,
+            ..Default::default()
+        },
+    );
+    let report = run_debug_flow(&broken.sim, fp32, &|sim| {
+        evaluate_sim(sim, model, &data, 2, 16)
+    });
+    print!("{}", report.render());
+
+    // Follow the advice: CLE + AdaRound at the same bit-width.
+    println!("\n== applying the flow's advice (CLE + AdaRound at W4) ==");
+    let mut fixed_opts = PtqOptions {
+        qp: QuantParams {
+            param_bw: 4,
+            ..Default::default()
+        },
+        use_adaround: true,
+        ..Default::default()
+    };
+    fixed_opts.adaround.iterations = 200;
+    let fixed = standard_ptq_pipeline(&g, &calib, &fixed_opts);
+    let before = report.full_quant_metric;
+    let after = evaluate_sim(&fixed.sim, model, &data, 4, 16);
+    println!("broken W4 sim : {before:.2}");
+    println!("fixed  W4 sim : {after:.2}  (fp32 {fp32:.2})");
+}

@@ -1,0 +1,113 @@
+//! End-to-end driver — the full three-layer system on a real workload.
+//!
+//! 1. Trains MobiMini FP32 on SynthImageNet **through the PJRT artifact**
+//!    (`mobimini_fp32_step`, the JAX L2 train step AOT-lowered to HLO) for
+//!    a few hundred steps, logging the loss curve. Python never runs.
+//! 2. Calibrates a quantization sim and runs the fig 4.1 PTQ pipeline.
+//! 3. QAT fine-tunes with STE (chapter 5) from the PTQ init.
+//! 4. Prints a Table-4.1/5.1-shaped report; the run is recorded in
+//!    EXPERIMENTS.md §End-to-end.
+//!
+//! Requires `make artifacts`. Run:
+//! `cargo run --release --example e2e_quantize [steps]`
+
+use aimet::ptq::{standard_ptq_pipeline, PtqOptions};
+use aimet::qat::{fit_qat, TrainConfig};
+use aimet::runtime::{graph_param_tensors, set_graph_params, Runtime};
+use aimet::task::{evaluate_graph, evaluate_sim, TaskData, Targets};
+use aimet::tensor::Tensor;
+use aimet::zoo;
+use std::time::Instant;
+
+fn main() {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+    let model = "mobimini";
+    let dir = Runtime::artifacts_dir();
+    if !Runtime::available(&dir) {
+        eprintln!("no artifacts at {} — run `make artifacts` first", dir.display());
+        std::process::exit(1);
+    }
+    let mut rt = Runtime::open(&dir).expect("runtime");
+    println!("== e2e: train (PJRT) → PTQ → QAT → report ==");
+
+    // ---- 1. FP32 training through the AOT train-step artifact ---------
+    let mut g = zoo::build(model, 1234).unwrap();
+    let data = TaskData::new(model, 1235);
+    let spec = rt.spec("mobimini_fp32_step").expect("step program").clone();
+    let batch = spec.inputs[spec.inputs.len() - 3][0];
+    let t0 = Instant::now();
+    let mut lr = 0.1f32;
+    for step in 0..steps {
+        if step > 0 && step % (steps / 2).max(1) == 0 {
+            lr /= 10.0; // paper §5.2: divide LR by 10 on a schedule
+        }
+        let (x, targets) = data.batch(step as u64, batch);
+        let Targets::Labels(labels) = targets else { unreachable!() };
+        let mut y = Tensor::zeros(&[batch, zoo::CLS_CLASSES]);
+        for (i, &l) in labels.iter().enumerate() {
+            y.data_mut()[i * zoo::CLS_CLASSES + l] = 1.0;
+        }
+        let mut inputs = graph_param_tensors(&g);
+        inputs.push(x);
+        inputs.push(y);
+        inputs.push(Tensor::scalar(lr));
+        let outs = rt.execute("mobimini_fp32_step", &inputs).expect("train step");
+        let k = outs.len() - 1;
+        set_graph_params(&mut g, &outs[..k]);
+        if step % 25 == 0 || step + 1 == steps {
+            println!(
+                "step {step:>4}  loss {:.4}  lr {lr:.0e}  ({:.1} steps/s)",
+                outs[k].data()[0],
+                (step + 1) as f64 / t0.elapsed().as_secs_f64()
+            );
+        }
+    }
+    let fp32 = evaluate_graph(&g, model, &data, 6, 16);
+    println!(
+        "FP32 after {steps} PJRT steps: top-1 {fp32:.2}% ({:.1}s)",
+        t0.elapsed().as_secs_f64()
+    );
+
+    // ---- 2. PTQ (fig 4.1) ---------------------------------------------
+    let calib = data.calibration(4, 16);
+    let rtn = standard_ptq_pipeline(
+        &g,
+        &calib,
+        &PtqOptions {
+            use_cle: false,
+            bias_correction: aimet::ptq::BiasCorrection::None,
+            ..Default::default()
+        },
+    );
+    let rtn_acc = evaluate_sim(&rtn.sim, model, &data, 6, 16);
+    let ptq_out = standard_ptq_pipeline(&g, &calib, &PtqOptions::default());
+    for line in &ptq_out.log {
+        println!("ptq: {line}");
+    }
+    let ptq = evaluate_sim(&ptq_out.sim, model, &data, 6, 16);
+
+    // ---- 3. QAT (fig 5.2) ---------------------------------------------
+    let mut sim = ptq_out.sim.clone();
+    let cfg = TrainConfig {
+        steps: steps / 2,
+        lr: 0.01,
+        lr_decay_every: steps / 4,
+        ..Default::default()
+    };
+    let qlog = fit_qat(&mut sim, model, &data, &cfg);
+    println!("qat: {} points, final loss {:.4}", qlog.points.len(), qlog.final_loss());
+    let qat = evaluate_sim(&sim, model, &data, 6, 16);
+
+    // ---- 4. Report ------------------------------------------------------
+    println!("\n== report (top-1 %) ==");
+    println!("FP32 baseline        : {fp32:6.2}");
+    println!("W8/A8 round-to-near  : {rtn_acc:6.2}");
+    println!("W8/A8 PTQ (CLE/BC)   : {ptq:6.2}");
+    println!("W8/A8 QAT            : {qat:6.2}");
+    let out = std::env::temp_dir().join("aimet_e2e");
+    sim.export(&out, model).expect("export");
+    println!("exported final model + encodings to {}", out.display());
+}

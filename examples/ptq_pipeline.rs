@@ -1,0 +1,65 @@
+//! The standard PTQ pipeline (fig 4.1) narrated step by step, with an
+//! ablation over each stage: RTN only → +CLE → +BC → +AdaRound.
+//!
+//! Run: `cargo run --release --example ptq_pipeline [model]`
+
+use aimet::coordinator::experiments::{trained_model, Effort};
+use aimet::ptq::{standard_ptq_pipeline, AdaroundParameters, BiasCorrection, PtqOptions};
+use aimet::quant::QuantScheme;
+use aimet::task::{evaluate_graph, evaluate_sim};
+
+fn main() {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "mobimini".into());
+    println!("== fig 4.1 standard PTQ pipeline on {model} ==");
+    let (g, data, _) = trained_model(&model, Effort::Fast, 777);
+    let fp32 = evaluate_graph(&g, &model, &data, 6, 16);
+    println!("FP32 baseline: {fp32:.2}");
+    let calib = data.calibration(4, 16);
+
+    let variants: Vec<(&str, PtqOptions)> = vec![
+        (
+            "RTN only (min-max, no CLE/BC)",
+            PtqOptions {
+                use_cle: false,
+                bias_correction: BiasCorrection::None,
+                weight_scheme: QuantScheme::Tf,
+                act_scheme: QuantScheme::Tf,
+                ..Default::default()
+            },
+        ),
+        (
+            "+ SQNR range setting",
+            PtqOptions {
+                use_cle: false,
+                bias_correction: BiasCorrection::None,
+                ..Default::default()
+            },
+        ),
+        (
+            "+ CLE",
+            PtqOptions {
+                bias_correction: BiasCorrection::None,
+                ..Default::default()
+            },
+        ),
+        ("+ empirical bias correction", PtqOptions::default()),
+        (
+            "+ AdaRound",
+            PtqOptions {
+                use_adaround: true,
+                adaround: AdaroundParameters {
+                    iterations: 200,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        ),
+    ];
+
+    println!("{:<34} {:>8} {:>8}", "pipeline stage", "top-1 %", "Δ fp32");
+    for (label, opts) in variants {
+        let out = standard_ptq_pipeline(&g, &calib, &opts);
+        let acc = evaluate_sim(&out.sim, &model, &data, 6, 16);
+        println!("{label:<34} {acc:>8.2} {:>+8.2}", acc - fp32);
+    }
+}

@@ -1,0 +1,51 @@
+//! The QAT pipeline (fig 5.2): PTQ-initialized STE fine-tuning at W8 and
+//! W4, showing where QAT pays off over PTQ (chapter 5's motivation).
+//!
+//! Run: `cargo run --release --example qat_pipeline [model]`
+
+use aimet::coordinator::experiments::{trained_model, Effort};
+use aimet::ptq::{standard_ptq_pipeline, PtqOptions};
+use aimet::qat::{fit_qat, TrainConfig};
+use aimet::quantsim::QuantParams;
+use aimet::task::{evaluate_graph, evaluate_sim};
+
+fn main() {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "resmini".into());
+    println!("== fig 5.2 QAT pipeline on {model} ==");
+    let (g, data, _) = trained_model(&model, Effort::Fast, 888);
+    let fp32 = evaluate_graph(&g, &model, &data, 6, 16);
+    println!("FP32 baseline: {fp32:.2}\n");
+    let calib = data.calibration(4, 16);
+
+    println!(
+        "{:<8} {:>10} {:>10} {:>10}",
+        "config", "PTQ", "QAT", "Δ(QAT-PTQ)"
+    );
+    for (w_bw, a_bw) in [(8u32, 8u32), (4, 8)] {
+        let opts = PtqOptions {
+            qp: QuantParams {
+                param_bw: w_bw,
+                act_bw: a_bw,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        // Fig 5.2 steps: CLE → add quantizers → range setting (all inside
+        // the PTQ pipeline) → train → export.
+        let ptq_out = standard_ptq_pipeline(&g, &calib, &opts);
+        let ptq = evaluate_sim(&ptq_out.sim, &model, &data, 6, 16);
+        let mut sim = ptq_out.sim.clone();
+        let cfg = TrainConfig {
+            steps: 150,
+            lr: 0.01,
+            lr_decay_every: 75,
+            ..Default::default()
+        };
+        fit_qat(&mut sim, &model, &data, &cfg);
+        let qat = evaluate_sim(&sim, &model, &data, 6, 16);
+        println!(
+            "W{w_bw}/A{a_bw}   {ptq:>10.2} {qat:>10.2} {:>+10.2}",
+            qat - ptq
+        );
+    }
+}

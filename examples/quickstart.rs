@@ -1,0 +1,59 @@
+//! Quickstart — the 60-second AIMET tour (code block 3.1 in Rust).
+//!
+//! Builds a model, creates a `QuantizationSimModel`, calibrates encodings
+//! from representative data, and evaluates the simulated W8/A8 accuracy as
+//! a drop-in replacement for the FP32 model. Also prints the fig 2.3
+//! quantization-grid demo.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use aimet::quant::{Encoding, Quantizer};
+use aimet::quantsim::{QuantParams, QuantizationSimModel};
+use aimet::task::{evaluate_graph, evaluate_sim, TaskData};
+use aimet::tensor::Tensor;
+use aimet::zoo;
+
+fn main() {
+    // --- fig 2.3: asymmetric vs symmetric uniform grids ----------------
+    println!("== quantization grids (fig 2.3, b = 4 for legibility) ==");
+    let x = Tensor::new(&[9], vec![-1.0, -0.6, -0.3, -0.05, 0.0, 0.2, 0.5, 0.8, 1.2]);
+    for (label, enc) in [
+        ("asymmetric", Encoding::from_min_max(-1.0, 1.2, 4, false)),
+        ("symmetric signed", Encoding::from_min_max(-1.0, 1.2, 4, true)),
+        ("symmetric unsigned", Encoding::from_min_max(0.0, 1.2, 4, true)),
+    ] {
+        let q = Quantizer::per_tensor(enc).qdq(&x);
+        println!(
+            "{label:<19} s={:.4} z={:<3} -> {:?}",
+            enc.scale,
+            enc.offset,
+            q.data().iter().map(|v| (v * 100.0).round() / 100.0).collect::<Vec<_>>()
+        );
+    }
+
+    // --- code block 3.1: QuantizationSimModel --------------------------
+    println!("\n== quantization simulation (code block 3.1) ==");
+    let model = "resmini";
+    let g = zoo::build(model, 7).expect("zoo model");
+    let data = TaskData::new(model, 8);
+
+    let fp32 = evaluate_graph(&g, model, &data, 4, 16);
+    println!("FP32 {model}: top-1 {fp32:.2}% (untrained weights — quickstart only)");
+
+    // sim = QuantizationSimModel(model, default_output_bw=8, default_param_bw=8)
+    let mut sim = QuantizationSimModel::with_defaults(g, QuantParams::default());
+    let (na, np) = sim.quantizer_counts();
+    println!("inserted {na} activation + {np} parameter quantizers");
+
+    // sim.compute_encodings(forward_pass_callback=send_samples)
+    sim.compute_encodings(&data.calibration(4, 16));
+
+    // quantized_accuracy = eval_function(model=sim.model)
+    let quantized = evaluate_sim(&sim, model, &data, 4, 16);
+    println!("W8/A8 sim: top-1 {quantized:.2}%  (drop {:+.2})", quantized - fp32);
+
+    // Export (§3.3): model + JSON encodings for an on-target runtime.
+    let out = std::env::temp_dir().join("aimet_quickstart");
+    sim.export(&out, model).expect("export");
+    println!("exported model + encodings to {}", out.display());
+}

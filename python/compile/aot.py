@@ -1,0 +1,179 @@
+"""AOT compile path: lower every L2 program to HLO text + manifest.
+
+`make artifacts` runs this once. Each program is jitted, lowered to
+stablehlo, converted to an XlaComputation, and dumped as **HLO text**
+(NOT `lowered.compiler_ir("hlo")`-proto or `.serialize()`: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly — see /opt/xla-example/README.md).
+
+The manifest records every program's input/output shapes so the Rust
+runtime (`rust/src/runtime.rs`) can validate tensors before dispatch.
+Python never runs after this script exits.
+
+Usage: python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.qmatmul import qmatmul
+from .kernels.range_stats import range_stats
+
+FWD_BATCH = 8
+STEP_BATCH = 16
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def param_structs(name):
+    return [f32(s) for _, s in model.param_specs(name)]
+
+
+def programs():
+    """(name, fn returning a tuple, example_args, description) table."""
+    progs = []
+
+    # Forward passes for every zoo model.
+    for m in model.ARCHS:
+        x = f32((FWD_BATCH,) + model.INPUT_SHAPES[m])
+
+        def fwd(params_and_x, m=m):
+            *params, xv = params_and_x
+            return (model.forward(m, params, xv),)
+
+        progs.append(
+            (
+                f"{m}_fwd",
+                lambda *a, m=m: (model.forward(m, list(a[:-1]), a[-1]),),
+                param_structs(m) + [x],
+                f"FP32 forward of {m} (batch {FWD_BATCH})",
+            )
+        )
+
+    # Quantsim forward for the cross-engine check (mobimini, default config).
+    m = "mobimini"
+    n_act = len(model.act_slots(m)) + 1
+    n_param = len(model.param_slots(m))
+    progs.append(
+        (
+            "mobimini_qsim_fwd",
+            lambda *a: (
+                model.qsim_forward(m, list(a[:-3]), a[-3], a[-2], a[-1]),
+            ),
+            param_structs(m)
+            + [f32((FWD_BATCH,) + model.INPUT_SHAPES[m]), f32((n_act, 2)), f32((n_param, 2))],
+            "Quantsim forward of mobimini via the Pallas fake-quant kernel "
+            "(default config placement; act/param encodings as inputs)",
+        )
+    )
+
+    # Training steps (FP32 SGD + QAT STE) for the classifiers.
+    for m in ("mobimini", "resmini"):
+        x = f32((STEP_BATCH,) + model.INPUT_SHAPES[m])
+        y = f32((STEP_BATCH, model.CLS_CLASSES))
+        lr = f32(())
+        progs.append(
+            (
+                f"{m}_fp32_step",
+                lambda *a, m=m: model.fp32_step(m, list(a[:-3]), a[-3], a[-2], a[-1]),
+                param_structs(m) + [x, y, lr],
+                f"One FP32 SGD step of {m}: (params..., x, y_onehot, lr) -> "
+                "(params'..., loss)",
+            )
+        )
+    m = "mobimini"
+    progs.append(
+        (
+            "mobimini_qat_step",
+            lambda *a: model.qat_step(
+                m, list(a[:-5]), a[-5], a[-4], a[-3], a[-2], a[-1]
+            ),
+            param_structs(m)
+            + [
+                f32((STEP_BATCH,) + model.INPUT_SHAPES[m]),
+                f32((STEP_BATCH, model.CLS_CLASSES)),
+                f32((n_act, 2)),
+                f32((n_param, 2)),
+                f32(()),
+            ],
+            "One QAT STE step of mobimini (fig 5.1): fake-quant forward, "
+            "straight-through backward",
+        )
+    )
+
+    # Standalone kernel demos (fig 2.2 MAC pipeline, range observation).
+    progs.append(
+        (
+            "qmatmul_demo",
+            lambda x, w, b, s: (
+                qmatmul(x, w, b, s[0], s[1], s[2], s[3]),
+            ),
+            [f32((128, 256)), f32((256, 128)), f32((128,)), f32((4,))],
+            "Quantized 128x256x128 matmul + requantize via the Pallas "
+            "qmatmul kernel (INT8 grids as f32)",
+        )
+    )
+    progs.append(
+        (
+            "range_stats_demo",
+            lambda x: (range_stats(x),),
+            [f32((STEP_BATCH, 3, 32, 32))],
+            "Per-tensor (min, max) via the Pallas streaming reduction",
+        )
+    )
+    return progs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="lower a single program")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"programs": {}}
+    for name, fn, example_args, desc in programs():
+        if args.only and name != args.only:
+            continue
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        # Output shapes from the jitted function's abstract eval.
+        out_shapes = [
+            list(o.shape) for o in jax.eval_shape(fn, *example_args)
+        ]
+        manifest["programs"][name] = {
+            "file": fname,
+            "inputs": [list(a.shape) for a in example_args],
+            "outputs": out_shapes,
+            "desc": desc,
+        }
+        print(f"lowered {name:<24} ({len(text) / 1024:.0f} KiB)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest['programs'])} programs to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

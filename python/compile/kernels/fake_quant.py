@@ -1,0 +1,115 @@
+"""L1 Pallas kernel: fake quantization (quantize-dequantize, fig 3.1).
+
+The simulation op the whole toolkit is built on. It is memory-bound and
+elementwise, so the TPU mapping is a tiled 2-D streaming kernel: each grid
+step pulls one (BLOCK_M, BLOCK_N) tile of the tensor HBM->VMEM, applies the
+branch-free qdq (round, clip, shift, rescale -- all VPU ops), and streams it
+back. Scale/zero-point ride along as tiny (1,1) / (C,1) blocks that every
+grid step maps to the same VMEM-resident slot.
+
+Hardware adaptation (DESIGN.md section Hardware-Adaptation): AIMET's C++
+backend runs this on the host; on a fixed-point accelerator it *is* the
+requantize unit of fig 2.2. Here the BlockSpec expresses the HBM<->VMEM
+schedule; interpret=True keeps it executable on the CPU PJRT client.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile: 256x256 f32 = 256 KiB VMEM per operand slot, far under the
+# ~16 MiB VMEM budget even with double buffering (DESIGN.md section Perf).
+BLOCK_M = 256
+BLOCK_N = 256
+
+
+def _qdq_kernel(x_ref, s_ref, z_ref, o_ref, *, int_min, int_max):
+    s = s_ref[0, 0]
+    z = z_ref[0, 0]
+    q = jnp.clip(jnp.round(x_ref[...] / s) + z, int_min, int_max)
+    o_ref[...] = (q - z) * s
+
+
+def _qdq_kernel_per_channel(x_ref, s_ref, z_ref, o_ref, *, int_min, int_max):
+    s = s_ref[...]  # [bc, 1] broadcasts down the row tile
+    z = z_ref[...]
+    q = jnp.clip(jnp.round(x_ref[...] / s) + z, int_min, int_max)
+    o_ref[...] = (q - z) * s
+
+
+def _pad2(x2, bm, bn):
+    m, n = x2.shape
+    pm = (-m) % bm
+    pn = (-n) % bn
+    if pm or pn:
+        x2 = jnp.pad(x2, ((0, pm), (0, pn)))
+    return x2, m, n
+
+
+@functools.partial(jax.jit, static_argnames=("int_min", "int_max"))
+def fake_quant(x, scale, zero_point, *, int_min, int_max):
+    """Per-tensor qdq of an arbitrary-rank tensor.
+
+    `scale`/`zero_point` are scalars (Python or 0-d); `int_min`/`int_max`
+    are the static integer-grid bounds (asymmetric: 0..2^b-1, symmetric
+    signed: -(2^{b-1}-1)..2^{b-1}-1).
+    """
+    shape = x.shape
+    flat = x.reshape((-1,))
+    # Lay the tensor out as [M, N] tiles.
+    n = min(flat.shape[0], BLOCK_N)
+    m = -(-flat.shape[0] // n)
+    x2, m0, n0 = _pad2(jnp.pad(flat, (0, m * n - flat.shape[0])).reshape(m, n), 1, 1)
+    bm = min(BLOCK_M, x2.shape[0])
+    bn = min(BLOCK_N, x2.shape[1])
+    x2, _, _ = _pad2(x2, bm, bn)
+    grid = (x2.shape[0] // bm, x2.shape[1] // bn)
+    s = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+    z = jnp.asarray(zero_point, jnp.float32).reshape(1, 1)
+    out = pl.pallas_call(
+        functools.partial(_qdq_kernel, int_min=float(int_min), int_max=float(int_max)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, jnp.float32),
+        interpret=True,
+    )(x2, s, z)
+    return out[:m0, :n0].reshape(-1)[: flat.shape[0]].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("int_min", "int_max"))
+def fake_quant_per_channel(x, scales, zero_points, *, int_min, int_max):
+    """Per-channel (axis 0) qdq of a weight tensor [C, ...] (section 2.3).
+
+    `scales`/`zero_points` have shape [C]. Channels map to tile rows so a
+    [bc, 1] scale block broadcasts across each channel's row in VMEM.
+    """
+    c = x.shape[0]
+    flat = x.reshape(c, -1)
+    bn = min(BLOCK_N, flat.shape[1])
+    bc = min(8, c)
+    x2, c0, n0 = _pad2(flat, bc, bn)
+    s = jnp.pad(scales.astype(jnp.float32), (0, x2.shape[0] - c)).reshape(-1, 1)
+    z = jnp.pad(zero_points.astype(jnp.float32), (0, x2.shape[0] - c)).reshape(-1, 1)
+    grid = (x2.shape[0] // bc, x2.shape[1] // bn)
+    out = pl.pallas_call(
+        functools.partial(
+            _qdq_kernel_per_channel, int_min=float(int_min), int_max=float(int_max)
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bc, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bc, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bc, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bc, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, jnp.float32),
+        interpret=True,
+    )(x2, s, z)
+    return out[:c0, :n0].reshape(x.shape)

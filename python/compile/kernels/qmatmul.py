@@ -1,0 +1,75 @@
+"""L1 Pallas kernel: quantized matmul + requantize (figs 2.1/2.2).
+
+The accelerator MAC pipeline of the paper's hardware chapter, expressed as
+one Pallas kernel:
+
+  * the (bm, K) x (K, bn) `jnp.dot` tile is the PE array / MXU step —
+    integer products accumulated exactly (f32 holds integers exactly up to
+    2^24, standing in for the INT32 accumulators of fig 2.2);
+  * the per-output-channel bias load is the accumulator initialisation
+    A_n = b_n of eq 2.1;
+  * the final rescale by s_x*s_w/s_y + zero-point + clamp is the
+    *requantization* unit that returns activations to INT8 before they are
+    written back to memory.
+
+Hardware adaptation: the paper's fixed-point accelerator streams weights
+and activations through a systolic array; on TPU the analogous schedule is
+(bm, K)/(K, bn) VMEM tiles feeding the 128x128 MXU, with the requantize
+fused into the same kernel so the INT32 accumulator never round-trips to
+HBM. interpret=True keeps the kernel runnable on the CPU PJRT client.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned tile sizes (128-lane); one (bm,K)+(K,bn)+(bm,bn) f32 tile set
+# at K=512 is ~0.6 MiB VMEM — comfortably double-bufferable.
+BLOCK_M = 128
+BLOCK_N = 128
+
+
+def _qmatmul_kernel(x_ref, w_ref, b_ref, s_ref, o_ref, *, out_min, out_max):
+    # PE-array step: integer MAC with exact accumulation (eq 2.3).
+    acc = jnp.dot(x_ref[...], w_ref[...]) + b_ref[...]
+    # Requantization step (fig 2.2): INT32 -> INT8 of the next layer.
+    requant = s_ref[0, 0]  # s_x*s_w/s_y
+    zp = s_ref[0, 1]
+    o_ref[...] = jnp.clip(jnp.round(acc * requant) + zp, out_min, out_max)
+
+
+@functools.partial(jax.jit, static_argnames=("bw_out",))
+def qmatmul(x_int, w_int, bias_i32, s_x, s_w, s_y, z_y, *, bw_out=8):
+    """Quantized matmul: integer grids in, requantized integer grid out.
+
+    x_int [M, K], w_int [K, N] and bias_i32 [N] hold integer values as f32
+    (the INT32-accumulator simulation); scales are f32 scalars.
+    """
+    m, k = x_int.shape
+    k2, n = w_int.shape
+    assert k == k2
+    bm = min(BLOCK_M, m)
+    bn = min(BLOCK_N, n)
+    pm, pn = (-m) % bm, (-n) % bn
+    x_p = jnp.pad(x_int, ((0, pm), (0, 0)))
+    w_p = jnp.pad(w_int, ((0, 0), (0, pn)))
+    b_p = jnp.pad(bias_i32, (0, pn)).reshape(1, -1)
+    requant = jnp.stack([s_x * s_w / s_y, z_y]).astype(jnp.float32).reshape(1, 2)
+    lo, hi = 0.0, float(2**bw_out - 1)
+    grid = (x_p.shape[0] // bm, w_p.shape[1] // bn)
+    out = pl.pallas_call(
+        functools.partial(_qmatmul_kernel, out_min=lo, out_max=hi),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 2), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((x_p.shape[0], w_p.shape[1]), jnp.float32),
+        interpret=True,
+    )(x_p, w_p, b_p, requant)
+    return out[:m, :n]

@@ -1,0 +1,55 @@
+"""L1 Pallas kernel: streaming min/max range statistics (section 4.4).
+
+The observation half of quantization range setting: `compute_encodings`
+feeds ~1000 calibration samples through the model and tracks each tensor's
+dynamic range. This kernel is that reduction as a tiled streaming pass —
+one (1, BLOCK) tile per grid step, a running (min, max) pair held in the
+output VMEM slot (every grid step maps to the same (1, 2) block, the
+standard Pallas sequential-reduction idiom).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 1024
+
+
+def _minmax_kernel(x_ref, o_ref):
+    i = pl.program_id(0)
+    tile_min = jnp.min(x_ref[...])
+    tile_max = jnp.max(x_ref[...])
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[0, 0] = tile_min
+        o_ref[0, 1] = tile_max
+
+    @pl.when(i > 0)
+    def _merge():
+        o_ref[0, 0] = jnp.minimum(o_ref[0, 0], tile_min)
+        o_ref[0, 1] = jnp.maximum(o_ref[0, 1], tile_max)
+
+
+@functools.partial(jax.jit)
+def range_stats(x):
+    """Per-tensor [min, max] of an arbitrary-rank tensor, shape (2,)."""
+    flat = x.reshape(1, -1)
+    n = flat.shape[1]
+    block = min(BLOCK, n)
+    pad = (-n) % block
+    if pad:
+        # Pad with the first element so padding never moves min/max.
+        flat = jnp.concatenate([flat, jnp.broadcast_to(flat[:, :1], (1, pad))], axis=1)
+    grid = (flat.shape[1] // block,)
+    out = pl.pallas_call(
+        _minmax_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, block), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, 2), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 2), jnp.float32),
+        interpret=True,
+    )(flat)
+    return out.reshape(2)

@@ -1,0 +1,56 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Each function here is the straight-line textbook definition of the paper's
+math (eqs 2.4-2.8 for uniform quantization, eq 2.3 + fig 2.2 for the
+quantized MAC pipeline). pytest compares every Pallas kernel against these
+under hypothesis-driven shape/value sweeps; the Rust quant core implements
+the same equations, so these oracles are the shared ground truth of all
+three layers.
+"""
+
+import jax.numpy as jnp
+
+
+def asym_grid(bw: int):
+    """Unsigned asymmetric integer grid {0, ..., 2^b - 1} (eq 2.4)."""
+    return 0.0, float(2**bw - 1)
+
+
+def sym_grid(bw: int):
+    """Signed symmetric restricted grid +/-(2^{b-1} - 1) (eq 2.8c)."""
+    half = float(2 ** (bw - 1) - 1)
+    return -half, half
+
+
+def fake_quant_ref(x, scale, zero_point, int_min, int_max):
+    """Quantize-dequantize (eq 2.7): s * (clamp(round(x/s) + z) - z).
+
+    `scale`/`zero_point` broadcast against `x`, so the same oracle covers
+    per-tensor (scalars) and per-channel (shape [C, 1, ...]) quantization.
+    """
+    q = jnp.clip(jnp.round(x / scale) + zero_point, int_min, int_max)
+    return (q - zero_point) * scale
+
+
+def quantize_ref(x, scale, zero_point, int_min, int_max):
+    """Quantization only (eq 2.4): the integer-grid values as f32."""
+    return jnp.clip(jnp.round(x / scale) + zero_point, int_min, int_max)
+
+
+def qmatmul_ref(x_int, w_int, bias_i32, s_x, s_w, s_y, z_y, bw_out=8):
+    """Integer matmul + requantization — fig 2.2's accelerator pipeline.
+
+    x_int [M,K] and w_int [K,N] hold integer values stored as f32 (exact
+    up to 2^24, simulating the INT32 accumulator); bias_i32 [N] is the
+    INT32 bias already at scale s_x*s_w (eq 2.3). The output is the next
+    layer's integer grid: clamp(round((s_x*s_w/s_y) * acc) + z_y).
+    """
+    acc = x_int @ w_int + bias_i32  # INT32 accumulator (eq 2.3)
+    lo, hi = asym_grid(bw_out)
+    y = jnp.round(acc * (s_x * s_w / s_y)) + z_y
+    return jnp.clip(y, lo, hi)
+
+
+def range_stats_ref(x):
+    """Per-tensor (min, max) — the observation step of range setting (4.4)."""
+    return jnp.stack([jnp.min(x), jnp.max(x)])

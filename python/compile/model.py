@@ -1,0 +1,503 @@
+"""L2: the zoo's JAX compute graphs, mirrored 1:1 from `rust/src/zoo.rs`.
+
+The Rust coordinator owns the model *weights* (its graph IR); the JAX side
+owns the *computation*. Every program lowered by `aot.py` takes the
+flattened parameter list as runtime inputs in the exact order of
+`rust/src/runtime.rs::graph_param_tensors` (conv/linear -> [weight, bias],
+batchnorm -> [gamma, beta, mean, var], lstm -> [w_ih, w_hh, bias]), so the
+Rust engine can feed its own weights through the PJRT artifacts and
+cross-validate numerics engine-against-engine.
+
+The architecture is expressed as a node table (the same IR shape as the
+Rust `Graph`) and interpreted by `forward`; the quantsim variant threads
+encodings through the L1 Pallas fake-quant kernel, reproducing fig 3.1's
+quantizer placement under the default runtime config (supergroup fusion
+included).
+"""
+
+from collections import namedtuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.fake_quant import fake_quant
+
+# ---------------------------------------------------------------------
+# Architecture tables (node lists in Rust Graph order).
+# ---------------------------------------------------------------------
+
+# inputs: list of node indices, or "x" for the graph input.
+Node = namedtuple("Node", "name kind inputs cfg")
+
+CLS_CLASSES = 10
+SEG_CLASSES = 6
+DET_CLASSES = 4
+SPEECH_FEATS = 8
+SPEECH_TOKENS = 6
+SPEECH_T = 20
+LSTM_HIDDEN = 16
+
+
+def _seq(nodes_spec):
+    """Build a sequential-by-default node list from (name, kind, cfg[, inputs])."""
+    nodes = []
+    for spec in nodes_spec:
+        name, kind, cfg = spec[0], spec[1], spec[2]
+        inputs = spec[3] if len(spec) > 3 else (["x"] if not nodes else [len(nodes) - 1])
+        nodes.append(Node(name, kind, inputs, cfg))
+    return nodes
+
+
+def mobimini_arch():
+    n = []
+    n += [("stem.conv", "conv", dict(o=16, i=3, k=3, stride=2, pad=1))]
+    n += [("stem.bn", "bn", dict(c=16)), ("stem.relu6", "relu6", {})]
+    for b, (cin, cout, stride) in enumerate([(16, 32, 2), (32, 64, 2), (64, 64, 1)]):
+        s = f"b{b + 1}"
+        n += [(f"{s}.dw", "dwconv", dict(c=cin, k=3, stride=stride, pad=1))]
+        n += [(f"{s}.dw_bn", "bn", dict(c=cin)), (f"{s}.dw_relu6", "relu6", {})]
+        n += [(f"{s}.pw", "conv", dict(o=cout, i=cin, k=1, stride=1, pad=0))]
+        n += [(f"{s}.pw_bn", "bn", dict(c=cout)), (f"{s}.pw_relu6", "relu6", {})]
+    n += [("gap", "gap", {}), ("fc", "linear", dict(o=CLS_CLASSES, i=64))]
+    return _seq(n)
+
+
+def resmini_arch():
+    n = _seq(
+        [
+            ("stem.conv", "conv", dict(o=16, i=3, k=3, stride=2, pad=1)),
+            ("stem.bn", "bn", dict(c=16)),
+            ("stem.relu", "relu", {}),
+        ]
+    )
+    prev = 2
+    for stage, (cin, cout, stride) in enumerate([(16, 32, 2), (32, 64, 2)]):
+        s = f"s{stage + 1}"
+        base = len(n)
+        n.append(Node(f"{s}.conv1", "conv", [prev], dict(o=cout, i=cin, k=3, stride=stride, pad=1)))
+        n.append(Node(f"{s}.bn1", "bn", [base], dict(c=cout)))
+        n.append(Node(f"{s}.relu1", "relu", [base + 1], {}))
+        n.append(Node(f"{s}.conv2", "conv", [base + 2], dict(o=cout, i=cout, k=3, stride=1, pad=1)))
+        n.append(Node(f"{s}.bn2", "bn", [base + 3], dict(c=cout)))
+        n.append(Node(f"{s}.sc_conv", "conv", [prev], dict(o=cout, i=cin, k=1, stride=stride, pad=0)))
+        n.append(Node(f"{s}.sc_bn", "bn", [base + 5], dict(c=cout)))
+        n.append(Node(f"{s}.add", "add", [base + 4, base + 6], {}))
+        n.append(Node(f"{s}.relu2", "relu", [base + 7], {}))
+        prev = base + 8
+    n.append(Node("gap", "gap", [prev], {}))
+    n.append(Node("fc", "linear", [len(n) - 1], dict(o=CLS_CLASSES, i=64)))
+    return n
+
+
+def segmini_arch():
+    return _seq(
+        [
+            ("enc1.conv", "conv", dict(o=16, i=3, k=3, stride=2, pad=1)),
+            ("enc1.bn", "bn", dict(c=16)),
+            ("enc1.relu", "relu", {}),
+            ("enc2.conv", "conv", dict(o=32, i=16, k=3, stride=2, pad=1)),
+            ("enc2.bn", "bn", dict(c=32)),
+            ("enc2.relu", "relu", {}),
+            ("mid.conv", "conv", dict(o=32, i=32, k=3, stride=1, pad=1)),
+            ("mid.bn", "bn", dict(c=32)),
+            ("mid.relu", "relu", {}),
+            ("dec1.up", "upsample2", {}),
+            ("dec1.conv", "conv", dict(o=16, i=32, k=3, stride=1, pad=1)),
+            ("dec1.bn", "bn", dict(c=16)),
+            ("dec1.relu", "relu", {}),
+            ("dec2.up", "upsample2", {}),
+            ("dec2.conv", "conv", dict(o=16, i=16, k=3, stride=1, pad=1)),
+            ("dec2.bn", "bn", dict(c=16)),
+            ("dec2.relu", "relu", {}),
+            ("head", "conv", dict(o=SEG_CLASSES, i=16, k=1, stride=1, pad=0)),
+        ]
+    )
+
+
+def detmini_arch():
+    return _seq(
+        [
+            ("bb1.conv", "conv", dict(o=16, i=3, k=3, stride=2, pad=1)),
+            ("bb1.bn", "bn", dict(c=16)),
+            ("bb1.relu", "relu", {}),
+            ("bb2.conv", "conv", dict(o=32, i=16, k=3, stride=2, pad=1)),
+            ("bb2.bn", "bn", dict(c=32)),
+            ("bb2.relu", "relu", {}),
+            ("bb3.conv", "conv", dict(o=64, i=32, k=3, stride=2, pad=1)),
+            ("bb3.bn", "bn", dict(c=64)),
+            ("bb3.relu", "relu", {}),
+            ("neck.conv", "conv", dict(o=64, i=64, k=3, stride=1, pad=1)),
+            ("neck.bn", "bn", dict(c=64)),
+            ("neck.relu", "relu", {}),
+            ("head", "conv", dict(o=5 + DET_CLASSES, i=64, k=1, stride=1, pad=0)),
+        ]
+    )
+
+
+def speechmini_arch():
+    h = LSTM_HIDDEN
+    return [
+        Node("lstm.fwd", "lstm", ["x"], dict(hidden=h, feats=SPEECH_FEATS, reverse=False)),
+        Node("lstm.bwd", "lstm", ["x"], dict(hidden=h, feats=SPEECH_FEATS, reverse=True)),
+        Node("concat", "concat", [0, 1], dict(axis=2)),
+        Node("fc", "linear", [2], dict(o=SPEECH_TOKENS, i=2 * h)),
+    ]
+
+
+ARCHS = {
+    "mobimini": mobimini_arch,
+    "resmini": resmini_arch,
+    "segmini": segmini_arch,
+    "detmini": detmini_arch,
+    "speechmini": speechmini_arch,
+}
+
+INPUT_SHAPES = {
+    "mobimini": (3, 32, 32),
+    "resmini": (3, 32, 32),
+    "segmini": (3, 32, 32),
+    "detmini": (3, 64, 64),
+    "speechmini": (SPEECH_T, SPEECH_FEATS),
+}
+
+
+def param_specs(model):
+    """[(name, shape)] in the Rust graph_param_tensors order."""
+    specs = []
+    for node in ARCHS[model]():
+        c = node.cfg
+        if node.kind == "conv":
+            specs += [
+                (f"{node.name}.weight", (c["o"], c["i"], c["k"], c["k"])),
+                (f"{node.name}.bias", (c["o"],)),
+            ]
+        elif node.kind == "dwconv":
+            specs += [
+                (f"{node.name}.weight", (c["c"], 1, c["k"], c["k"])),
+                (f"{node.name}.bias", (c["c"],)),
+            ]
+        elif node.kind == "linear":
+            specs += [
+                (f"{node.name}.weight", (c["o"], c["i"])),
+                (f"{node.name}.bias", (c["o"],)),
+            ]
+        elif node.kind == "bn":
+            specs += [
+                (f"{node.name}.{p}", (c["c"],)) for p in ("gamma", "beta", "mean", "var")
+            ]
+        elif node.kind == "lstm":
+            h, f = c["hidden"], c["feats"]
+            specs += [
+                (f"{node.name}.w_ih", (4 * h, f)),
+                (f"{node.name}.w_hh", (4 * h, h)),
+                (f"{node.name}.bias", (4 * h,)),
+            ]
+    return specs
+
+
+# ---------------------------------------------------------------------
+# Node evaluation.
+# ---------------------------------------------------------------------
+
+
+def _conv(x, w, b, stride, pad):
+    y = lax.conv_general_dilated(
+        x, w, (stride, stride), [(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return y + b.reshape(1, -1, 1, 1)
+
+
+def _dwconv(x, w, b, stride, pad):
+    c = x.shape[1]
+    y = lax.conv_general_dilated(
+        x, w, (stride, stride), [(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=c,
+    )
+    return y + b.reshape(1, -1, 1, 1)
+
+
+def _lstm(x, w_ih, w_hh, bias, hidden, reverse):
+    n, t, f = x.shape
+    xp = (x.reshape(n * t, f) @ w_ih.T).reshape(n, t, 4 * hidden)
+    xs = jnp.flip(xp, axis=1) if reverse else xp
+
+    def step(carry, xt):
+        h, c = carry
+        a = xt + h @ w_hh.T + bias
+        i, fg, g, o = jnp.split(a, 4, axis=-1)
+        i, fg, o = jax.nn.sigmoid(i), jax.nn.sigmoid(fg), jax.nn.sigmoid(o)
+        g = jnp.tanh(g)
+        c = fg * c + i * g
+        h = o * jnp.tanh(c)
+        return (h, c), h
+
+    init = (jnp.zeros((n, hidden)), jnp.zeros((n, hidden)))
+    _, hs = lax.scan(step, init, jnp.transpose(xs, (1, 0, 2)))
+    hs = jnp.transpose(hs, (1, 0, 2))  # [N, T, H]
+    return jnp.flip(hs, axis=1) if reverse else hs
+
+
+def eval_node(node, ins, params, weight_tf=None):
+    """Evaluate one node. `params` is a dict name->array for this node's
+    tensors; `weight_tf` optionally transforms the weight before use (the
+    on_weight hook — quantsim's parameter quantizer)."""
+    k, c = node.kind, node.cfg
+    x = ins[0] if ins else None
+    tf = weight_tf if weight_tf is not None else (lambda name, w: w)
+    if k == "conv":
+        return _conv(x, tf(node.name, params[f"{node.name}.weight"]),
+                     params[f"{node.name}.bias"], c["stride"], c["pad"])
+    if k == "dwconv":
+        return _dwconv(x, tf(node.name, params[f"{node.name}.weight"]),
+                       params[f"{node.name}.bias"], c["stride"], c["pad"])
+    if k == "linear":
+        w = tf(node.name, params[f"{node.name}.weight"])
+        return x @ w.T + params[f"{node.name}.bias"]
+    if k == "bn":
+        g, b = params[f"{node.name}.gamma"], params[f"{node.name}.beta"]
+        m, v = params[f"{node.name}.mean"], params[f"{node.name}.var"]
+        shape = (1, -1) + (1,) * (x.ndim - 2)
+        scale = (g / jnp.sqrt(v + 1e-5)).reshape(shape)
+        shift = (b - m * g / jnp.sqrt(v + 1e-5)).reshape(shape)
+        return x * scale + shift
+    if k == "relu":
+        return jax.nn.relu(x)
+    if k == "relu6":
+        return jnp.clip(x, 0.0, 6.0)
+    if k == "maxpool2":
+        return lax.reduce_window(x, -jnp.inf, lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
+    if k == "avgpool2":
+        s = lax.reduce_window(x, 0.0, lax.add, (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
+        return s / 4.0
+    if k == "gap":
+        return jnp.mean(x, axis=(2, 3))
+    if k == "upsample2":
+        return jnp.repeat(jnp.repeat(x, 2, axis=2), 2, axis=3)
+    if k == "add":
+        return sum(ins[1:], ins[0])
+    if k == "concat":
+        return jnp.concatenate(ins, axis=c["axis"])
+    if k == "flatten":
+        return x.reshape(x.shape[0], -1)
+    if k == "lstm":
+        return _lstm(
+            x,
+            tf(node.name, params[f"{node.name}.w_ih"]),
+            params[f"{node.name}.w_hh"],
+            params[f"{node.name}.bias"],
+            c["hidden"],
+            c["reverse"],
+        )
+    raise ValueError(f"unknown node kind {k}")
+
+
+def params_dict(model, flat):
+    """Zip a flat parameter list into a name->array dict."""
+    specs = param_specs(model)
+    assert len(flat) == len(specs), (len(flat), len(specs))
+    return {name: p for (name, _), p in zip(specs, flat)}
+
+
+def forward(model, flat_params, x, weight_tf=None, output_tf=None):
+    """FP32 forward of `model`. `weight_tf(name, w)` / `output_tf(name, y)`
+    are the quantsim hook points (identity by default)."""
+    arch = ARCHS[model]()
+    params = params_dict(model, flat_params)
+    otf = output_tf if output_tf is not None else (lambda name, y: y)
+    acts = []
+    for node in arch:
+        ins = [x if i == "x" else acts[i] for i in node.inputs]
+        y = eval_node(node, ins, params, weight_tf)
+        acts.append(otf(node.name, y))
+    return acts[-1]
+
+
+def forward_train(model, flat_params, x):
+    """Training-mode forward: BatchNorm nodes normalize with *batch*
+    statistics (differentiated through, like framework BN in train mode).
+    Returns (logits, {bn_name: (batch_mean, batch_var)}) so the train step
+    can update the running statistics — mirrors the Rust engine's
+    `Graph::forward_train`."""
+    arch = ARCHS[model]()
+    params = params_dict(model, flat_params)
+    acts = []
+    stats = {}
+    for node in arch:
+        ins = [x if i == "x" else acts[i] for i in node.inputs]
+        if node.kind == "bn":
+            xin = ins[0]
+            axes = tuple(i for i in range(xin.ndim) if i != 1)
+            mu = jnp.mean(xin, axis=axes)
+            var = jnp.mean((xin - mu.reshape((1, -1) + (1,) * (xin.ndim - 2))) ** 2, axis=axes)
+            stats[node.name] = (mu, var)
+            g, b = params[f"{node.name}.gamma"], params[f"{node.name}.beta"]
+            shape = (1, -1) + (1,) * (xin.ndim - 2)
+            y = (xin - mu.reshape(shape)) / jnp.sqrt(var.reshape(shape) + 1e-5)
+            y = y * g.reshape(shape) + b.reshape(shape)
+        else:
+            y = eval_node(node, ins, params)
+        acts.append(y)
+    return acts[-1], stats
+
+
+# ---------------------------------------------------------------------
+# Quantsim forward (fig 3.1 placement under the default runtime config).
+# ---------------------------------------------------------------------
+
+# Ops that do not requantize their output (§7.3.1 / Op::requantizes_output).
+NO_REQUANT = {"flatten", "maxpool2"}
+WEIGHTED = {"conv", "dwconv", "linear", "lstm"}
+# Default-config supergroups: the weighted/BN outputs inside fused chains
+# carry no activation quantizer; the trailing activation does.
+FUSE_HEADS = {"conv", "dwconv", "linear"}
+FUSE_TAILS = {"bn", "relu", "relu6"}
+
+
+def act_slots(model):
+    """Node names that carry an activation quantizer under the default
+    config (mirrors quantsim::config::supergroup_suppressed)."""
+    arch = ARCHS[model]()
+    consumers = {i: [] for i in range(len(arch))}
+    for j, node in enumerate(arch):
+        for i in node.inputs:
+            if i != "x":
+                consumers[i].append(j)
+    suppressed = set()
+    for i, node in enumerate(arch):
+        if node.kind in FUSE_HEADS or node.kind == "bn":
+            cons = consumers[i]
+            if len(cons) == 1 and arch[cons[0]].kind in FUSE_TAILS:
+                suppressed.add(i)
+    return [
+        n.name
+        for i, n in enumerate(arch)
+        if n.kind not in NO_REQUANT and i not in suppressed
+    ]
+
+
+def param_slots(model):
+    """Weighted-layer names (parameter quantizers), in node order."""
+    return [n.name for n in ARCHS[model]() if n.kind in WEIGHTED]
+
+
+def qsim_forward(model, flat_params, x, act_enc, param_enc, act_bw=8, param_bw=8):
+    """Quantized-sim forward: per-tensor asymmetric activations, symmetric
+    signed weights — the default-config placement of chapter 3, with the
+    qdq ops running through the L1 Pallas fake-quant kernel.
+
+    act_enc [n_act + 1, 2]: (scale, zero_point) rows — row 0 is the model
+    input quantizer, then one per act slot in node order. param_enc
+    [n_param, 2]: (scale, 0) rows in weighted-node order.
+    """
+    a_names = act_slots(model)
+    p_names = param_slots(model)
+    a_idx = {n: i + 1 for i, n in enumerate(a_names)}
+    p_idx = {n: i for i, n in enumerate(p_names)}
+    a_lo, a_hi = 0.0, float(2**act_bw - 1)
+    half = float(2 ** (param_bw - 1) - 1)
+
+    def weight_tf(name, w):
+        s = param_enc[p_idx[name], 0]
+        return fake_quant(w, s, 0.0, int_min=-half, int_max=half)
+
+    def output_tf(name, y):
+        if name not in a_idx:
+            return y
+        row = a_idx[name]
+        return fake_quant(y, act_enc[row, 0], act_enc[row, 1], int_min=a_lo, int_max=a_hi)
+
+    xq = fake_quant(x, act_enc[0, 0], act_enc[0, 1], int_min=a_lo, int_max=a_hi)
+    return forward(model, flat_params, xq, weight_tf=weight_tf, output_tf=output_tf)
+
+
+# ---------------------------------------------------------------------
+# Training steps (SGD in-graph; lowered once, driven from Rust).
+# ---------------------------------------------------------------------
+
+
+def ce_loss(model, flat_params, x, y_onehot):
+    logits = forward(model, flat_params, x)
+    logz = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(y_onehot * logz, axis=-1))
+
+
+def fp32_step(model, flat_params, x, y_onehot, lr):
+    """One FP32 SGD step with training-mode BN: returns
+    (new_params..., loss). BatchNorm layers normalize with batch stats
+    (exact BN gradient via autodiff) and their running mean/var parameters
+    receive the 0.9-EMA update, exactly like the Rust trainer."""
+
+    def loss_fn(params):
+        logits, stats = forward_train(model, params, x)
+        logz = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.mean(jnp.sum(y_onehot * logz, axis=-1)), stats
+
+    (loss, stats), grads = jax.value_and_grad(loss_fn, has_aux=True)(list(flat_params))
+    new = [p - lr * g for p, g in zip(flat_params, grads)]
+    # Running-stat EMA: overwrite the (gradient-free) mean/var params.
+    for i, (name, _) in enumerate(param_specs(model)):
+        for suffix, k in ((".mean", 0), (".var", 1)):
+            if name.endswith(suffix):
+                bn = name[: -len(suffix)]
+                if bn in stats:
+                    new[i] = 0.9 * flat_params[i] + 0.1 * stats[bn][k]
+    return (*new, loss)
+
+
+def _make_ste(int_min, int_max):
+    """STE-wrapped Pallas fake-quant (fig 5.1): the custom VJP passes the
+    upstream gradient straight through the quantizer (Bengio et al. 2013)
+    and — crucially — keeps jax.grad from trying to linearize through the
+    pallas_call interior, which interpret-mode kernels do not support."""
+
+    @jax.custom_vjp
+    def ste(v, s, z):
+        return fake_quant(v, s, z, int_min=int_min, int_max=int_max)
+
+    def fwd(v, s, z):
+        return ste(v, s, z), None
+
+    def bwd(_res, g):
+        return (g, jnp.zeros(()), jnp.zeros(()))
+
+    ste.defvjp(fwd, bwd)
+    return ste
+
+
+_ste_act8 = _make_ste(0.0, 255.0)
+_ste_w8 = _make_ste(-127.0, 127.0)
+
+
+def qat_ce_loss(model, flat_params, x, y_onehot, act_enc, param_enc):
+    """Fake-quant CE loss with STE (fig 5.1): forward through qdq, backward
+    skips the quantizers via the custom straight-through VJP."""
+    a_names = act_slots(model)
+    p_names = param_slots(model)
+    a_idx = {n: i + 1 for i, n in enumerate(a_names)}
+    p_idx = {n: i for i, n in enumerate(p_names)}
+
+    def weight_tf(name, w):
+        return _ste_w8(w, param_enc[p_idx[name], 0], jnp.zeros(()))
+
+    def output_tf(name, y):
+        if name not in a_idx:
+            return y
+        r = a_idx[name]
+        return _ste_act8(y, act_enc[r, 0], act_enc[r, 1])
+
+    xq = _ste_act8(x, act_enc[0, 0], act_enc[0, 1])
+    logits = forward(model, flat_params, xq, weight_tf=weight_tf, output_tf=output_tf)
+    logz = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(y_onehot * logz, axis=-1))
+
+
+def qat_step(model, flat_params, x, y_onehot, act_enc, param_enc, lr):
+    """One QAT STE SGD step: returns (new_params..., loss)."""
+    loss, grads = jax.value_and_grad(qat_ce_loss, argnums=1)(
+        model, flat_params, x, y_onehot, act_enc, param_enc
+    )
+    new = [p - lr * g for p, g in zip(flat_params, grads)]
+    return (*new, loss)

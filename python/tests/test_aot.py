@@ -1,0 +1,60 @@
+"""AOT export smoke tests: HLO text round-trips through the interchange
+format the Rust runtime consumes."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+
+
+def test_to_hlo_text_produces_parseable_module():
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(fn).lower(spec, spec))
+    assert text.startswith("HloModule")
+    assert "parameter(0)" in text
+    assert "ROOT" in text
+
+
+def test_program_table_covers_every_model_and_kernel():
+    names = {name for name, *_ in aot.programs()}
+    for m in model.ARCHS:
+        assert f"{m}_fwd" in names
+    assert {"mobimini_qsim_fwd", "mobimini_fp32_step", "mobimini_qat_step",
+            "qmatmul_demo", "range_stats_demo"} <= names
+
+
+def test_manifest_matches_program_shapes(tmp_path):
+    # Lower one small program end-to-end and check the manifest entry.
+    import sys
+    from unittest import mock
+
+    argv = ["aot", "--out", str(tmp_path), "--only", "range_stats_demo"]
+    with mock.patch.object(sys, "argv", argv):
+        aot.main()
+    manifest = json.load(open(tmp_path / "manifest.json"))
+    entry = manifest["programs"]["range_stats_demo"]
+    assert entry["inputs"] == [[aot.STEP_BATCH, 3, 32, 32]]
+    assert entry["outputs"] == [[2]]
+    text = open(tmp_path / entry["file"]).read()
+    assert text.startswith("HloModule")
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_built_manifest_is_complete():
+    path = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")
+    manifest = json.load(open(path))
+    progs = manifest["programs"]
+    assert len(progs) >= 11
+    for name, entry in progs.items():
+        assert os.path.exists(os.path.join(os.path.dirname(path), entry["file"])), name
+        assert entry["inputs"] and entry["outputs"], name

@@ -1,0 +1,163 @@
+"""L1 Pallas kernels vs pure-jnp oracles — the core correctness signal.
+
+hypothesis sweeps shapes and quantization parameters; every kernel must
+match its `ref.py` oracle bit-for-bit (same jnp ops, same order) or to
+float tolerance where accumulation order differs.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.fake_quant import fake_quant, fake_quant_per_channel
+from compile.kernels.qmatmul import qmatmul
+from compile.kernels.range_stats import range_stats
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def rand(shape, scale=2.0, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------------
+# fake_quant
+# ---------------------------------------------------------------------
+
+
+@given(
+    m=st.integers(1, 70),
+    n=st.integers(1, 70),
+    bw=st.sampled_from([2, 4, 8]),
+    scale=st.floats(1e-3, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_fake_quant_matches_ref_asymmetric(m, n, bw, scale, seed):
+    x = rand((m, n), seed=seed)
+    zp = float((2**bw - 1) // 2)
+    got = fake_quant(jnp.array(x), scale, zp, int_min=0, int_max=2**bw - 1)
+    want = ref.fake_quant_ref(jnp.array(x), scale, zp, 0, 2**bw - 1)
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+@given(
+    rank=st.integers(1, 4),
+    bw=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**16),
+)
+def test_fake_quant_arbitrary_rank_symmetric(rank, bw, seed):
+    rng = np.random.default_rng(seed)
+    shape = tuple(rng.integers(1, 9, size=rank))
+    x = rand(shape, seed=seed + 1)
+    half = float(2 ** (bw - 1) - 1)
+    got = fake_quant(jnp.array(x), 0.1, 0.0, int_min=-half, int_max=half)
+    want = ref.fake_quant_ref(jnp.array(x), 0.1, 0.0, -half, half)
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+    assert got.shape == x.shape
+
+
+def test_fake_quant_grid_points_are_fixpoints():
+    # Values already on the grid must survive qdq exactly (eq 2.7).
+    s, z = 0.25, 8.0
+    grid = (np.arange(0, 16) - z) * s
+    got = fake_quant(jnp.array(grid, jnp.float32), s, z, int_min=0, int_max=15)
+    np.testing.assert_allclose(got, grid, atol=0)
+
+
+def test_fake_quant_clips_out_of_range():
+    got = fake_quant(jnp.array([1e6, -1e6], jnp.float32), 0.1, 0.0, int_min=-127, int_max=127)
+    np.testing.assert_allclose(got, [12.7, -12.7], rtol=1e-6)
+
+
+@given(
+    c=st.integers(1, 20),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**16),
+)
+def test_fake_quant_per_channel_matches_ref(c, n, seed):
+    x = rand((c, n), seed=seed)
+    rng = np.random.default_rng(seed + 7)
+    scales = rng.uniform(0.01, 0.5, size=c).astype(np.float32)
+    zps = rng.integers(0, 255, size=c).astype(np.float32)
+    got = fake_quant_per_channel(
+        jnp.array(x), jnp.array(scales), jnp.array(zps), int_min=0, int_max=255
+    )
+    want = ref.fake_quant_ref(
+        jnp.array(x), scales.reshape(-1, 1), zps.reshape(-1, 1), 0, 255
+    )
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+def test_per_channel_channels_independent():
+    # Channel 0 tiny scale, channel 1 huge: quantizing ch1 must not move ch0.
+    x = np.array([[0.5, -0.5], [50.0, -50.0]], np.float32)
+    got = fake_quant_per_channel(
+        jnp.array(x),
+        jnp.array([1 / 254, 100 / 127], np.float32),
+        jnp.array([127.0, 0.0], np.float32),
+        int_min=0,
+        int_max=255,
+    )
+    np.testing.assert_allclose(got[0], x[0], atol=1e-2)
+
+
+# ---------------------------------------------------------------------
+# qmatmul
+# ---------------------------------------------------------------------
+
+
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 40),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**16),
+)
+def test_qmatmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 256, size=(m, k)).astype(np.float32)
+    w = rng.integers(-127, 128, size=(k, n)).astype(np.float32)
+    b = rng.integers(-1000, 1000, size=(n,)).astype(np.float32)
+    s_x, s_w, s_y, z_y = 0.02, 0.01, 0.05, 128.0
+    got = qmatmul(jnp.array(x), jnp.array(w), jnp.array(b), s_x, s_w, s_y, z_y)
+    want = ref.qmatmul_ref(jnp.array(x), jnp.array(w), jnp.array(b), s_x, s_w, s_y, z_y)
+    np.testing.assert_allclose(got, want, atol=1.0)  # +/- 1 int on round ties
+    # Output must be on the INT8 grid.
+    assert float(got.min()) >= 0.0 and float(got.max()) <= 255.0
+    np.testing.assert_allclose(got, jnp.round(got), atol=0)
+
+
+def test_qmatmul_integer_exactness():
+    # Accumulation of integer products is exact (INT32-sim in f32): a
+    # known-product case must match exactly, not approximately.
+    x = jnp.full((4, 8), 255.0)
+    w = jnp.full((8, 4), 127.0)
+    b = jnp.zeros(4)
+    got = qmatmul(x, w, b, 1.0, 1.0, 255.0 * 127.0 * 8.0, 0.0)
+    np.testing.assert_allclose(got, jnp.ones((4, 4)), atol=0)
+
+
+# ---------------------------------------------------------------------
+# range_stats
+# ---------------------------------------------------------------------
+
+
+@given(
+    n=st.integers(1, 5000),
+    seed=st.integers(0, 2**16),
+)
+def test_range_stats_matches_ref(n, seed):
+    x = rand((n,), seed=seed)
+    got = range_stats(jnp.array(x))
+    want = ref.range_stats_ref(jnp.array(x))
+    np.testing.assert_allclose(got, want, atol=0)
+
+
+def test_range_stats_multiblock_and_rank():
+    x = rand((3, 7, 41), seed=3)  # padded, multi-tile path
+    got = range_stats(jnp.array(x))
+    assert got[0] == pytest.approx(x.min())
+    assert got[1] == pytest.approx(x.max())

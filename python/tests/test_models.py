@@ -1,0 +1,174 @@
+"""L2 JAX model checks: shapes, quantizer placement, train-step behavior,
+and quantsim-vs-oracle composition."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+EXPECTED_OUT = {
+    "mobimini": (2, 10),
+    "resmini": (2, 10),
+    "segmini": (2, 6, 32, 32),
+    "detmini": (2, 9, 8, 8),
+    "speechmini": (2, 20, 6),
+}
+
+
+def make_params(m, seed=0, scale=0.1):
+    rng = np.random.default_rng(seed)
+    params = []
+    for name, shape in model.param_specs(m):
+        if name.endswith(".var"):
+            params.append(jnp.array(rng.uniform(0.5, 1.5, shape).astype(np.float32)))
+        elif name.endswith(".gamma"):
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            params.append(jnp.array((rng.standard_normal(shape) * scale).astype(np.float32)))
+    return params
+
+
+@pytest.mark.parametrize("m", list(model.ARCHS))
+def test_forward_shapes(m):
+    params = make_params(m)
+    x = jnp.array(np.random.default_rng(1).standard_normal((2,) + model.INPUT_SHAPES[m]), jnp.float32)
+    y = model.forward(m, params, x)
+    assert y.shape == EXPECTED_OUT[m]
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_quantizer_placement_matches_rust_counts():
+    # rust/src/quantsim tests pin (acts=10, params=8) for mobimini under
+    # the default config; the JAX mirror must agree (cross-engine contract).
+    assert len(model.act_slots("mobimini")) + 1 == 10
+    assert len(model.param_slots("mobimini")) == 8
+
+
+def test_act_slots_skip_fused_and_no_requant_ops():
+    slots = set(model.act_slots("mobimini"))
+    assert "stem.conv" not in slots  # fused into conv+bn+relu6 supergroup
+    assert "stem.bn" not in slots
+    assert "stem.relu6" in slots
+    assert "gap" in slots
+    assert "fc" in slots
+
+
+def test_qsim_forward_equals_oracle_composition():
+    m = "mobimini"
+    params = make_params(m, seed=2)
+    x = jnp.array(np.random.default_rng(3).standard_normal((2,) + model.INPUT_SHAPES[m]), jnp.float32)
+    n_act = len(model.act_slots(m)) + 1
+    n_par = len(model.param_slots(m))
+    rng = np.random.default_rng(4)
+    act_enc = jnp.array(
+        np.stack(
+            [rng.uniform(0.01, 0.1, n_act), rng.integers(0, 255, n_act).astype(float)],
+            axis=1,
+        ),
+        jnp.float32,
+    )
+    par_enc = jnp.array(
+        np.stack([rng.uniform(0.001, 0.05, n_par), np.zeros(n_par)], axis=1), jnp.float32
+    )
+    got = model.qsim_forward(m, params, x, act_enc, par_enc)
+
+    # Oracle: same placement, ref fake-quant instead of the Pallas kernel.
+    a_idx = {n: i + 1 for i, n in enumerate(model.act_slots(m))}
+    p_idx = {n: i for i, n in enumerate(model.param_slots(m))}
+
+    def wtf(name, w):
+        return ref.fake_quant_ref(w, par_enc[p_idx[name], 0], 0.0, -127.0, 127.0)
+
+    def otf(name, y):
+        if name not in a_idx:
+            return y
+        r = a_idx[name]
+        return ref.fake_quant_ref(y, act_enc[r, 0], act_enc[r, 1], 0.0, 255.0)
+
+    xq = ref.fake_quant_ref(x, act_enc[0, 0], act_enc[0, 1], 0.0, 255.0)
+    want = model.forward(m, params, xq, weight_tf=wtf, output_tf=otf)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_qsim_differs_from_fp32_but_tracks_it():
+    m = "mobimini"
+    params = make_params(m, seed=5)
+    x = jnp.array(np.random.default_rng(6).standard_normal((2,) + model.INPUT_SHAPES[m]), jnp.float32)
+    fp = model.forward(m, params, x)
+    n_act = len(model.act_slots(m)) + 1
+    n_par = len(model.param_slots(m))
+    # Generous 8-bit encodings around the actual ranges.
+    act_enc = jnp.tile(jnp.array([[0.05, 128.0]], jnp.float32), (n_act, 1))
+    par_enc = jnp.tile(jnp.array([[0.005, 0.0]], jnp.float32), (n_par, 1))
+    q = model.qsim_forward(m, params, x, act_enc, par_enc)
+    diff = float(jnp.max(jnp.abs(q - fp)))
+    assert diff > 0.0
+    assert diff < 5.0 * float(jnp.max(jnp.abs(fp)) + 1.0)
+
+
+def _one_hot(labels, k):
+    return jnp.eye(k, dtype=jnp.float32)[labels]
+
+
+def test_fp32_step_reduces_loss():
+    m = "mobimini"
+    params = make_params(m, seed=7)
+    rng = np.random.default_rng(8)
+    x = jnp.array(rng.standard_normal((8,) + model.INPUT_SHAPES[m]), jnp.float32)
+    y = _one_hot(jnp.array(rng.integers(0, 10, 8)), 10)
+    lr = jnp.float32(0.05)
+    first = None
+    for _ in range(10):
+        *params, loss = model.fp32_step(m, params, x, y, lr)
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first, f"loss did not fall: {first} -> {float(loss)}"
+
+
+def test_qat_step_reduces_loss_and_moves_weights():
+    m = "mobimini"
+    params = make_params(m, seed=9)
+    rng = np.random.default_rng(10)
+    x = jnp.array(rng.standard_normal((8,) + model.INPUT_SHAPES[m]), jnp.float32)
+    y = _one_hot(jnp.array(rng.integers(0, 10, 8)), 10)
+    n_act = len(model.act_slots(m)) + 1
+    n_par = len(model.param_slots(m))
+    act_enc = jnp.tile(jnp.array([[0.05, 128.0]], jnp.float32), (n_act, 1))
+    par_enc = jnp.tile(jnp.array([[0.005, 0.0]], jnp.float32), (n_par, 1))
+    w0 = params[0]
+    first = None
+    for _ in range(8):
+        *params, loss = model.qat_step(m, params, x, y, act_enc, par_enc, jnp.float32(0.05))
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first
+    assert float(jnp.max(jnp.abs(params[0] - w0))) > 0.0
+
+
+def test_param_specs_order_is_stable():
+    specs = model.param_specs("speechmini")
+    names = [n for n, _ in specs]
+    assert names == [
+        "lstm.fwd.w_ih", "lstm.fwd.w_hh", "lstm.fwd.bias",
+        "lstm.bwd.w_ih", "lstm.bwd.w_hh", "lstm.bwd.bias",
+        "fc.weight", "fc.bias",
+    ]
+
+
+def test_lstm_reverse_differs_and_is_time_aligned():
+    h, f, t = 4, 3, 6
+    rng = np.random.default_rng(11)
+    x = jnp.array(rng.standard_normal((2, t, f)), jnp.float32)
+    w_ih = jnp.array(rng.standard_normal((4 * h, f)) * 0.3, jnp.float32)
+    w_hh = jnp.array(rng.standard_normal((4 * h, h)) * 0.3, jnp.float32)
+    b = jnp.zeros(4 * h, jnp.float32)
+    fwd = model._lstm(x, w_ih, w_hh, b, h, False)
+    bwd = model._lstm(x, w_ih, w_hh, b, h, True)
+    assert fwd.shape == (2, t, h)
+    assert float(jnp.max(jnp.abs(fwd - bwd))) > 0.0
+    # Reversed input through forward LSTM == flipped reverse LSTM output.
+    fwd_of_flipped = model._lstm(jnp.flip(x, 1), w_ih, w_hh, b, h, False)
+    np.testing.assert_allclose(jnp.flip(bwd, 1), fwd_of_flipped, rtol=1e-5, atol=1e-6)

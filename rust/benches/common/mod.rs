@@ -1,0 +1,37 @@
+#![allow(dead_code)] // shared across benches; each bench uses a subset
+//! Shared bench scaffolding: effort selection + a tiny timing helper
+//! (harness = false; the in-repo substitute for criterion in this
+//! offline build).
+
+use aimet::coordinator::experiments::Effort;
+use std::time::Instant;
+
+/// `AIMET_BENCH_FULL=1` switches every bench to the EXPERIMENTS.md
+/// configuration; default keeps `cargo bench` minutes-scale.
+pub fn effort() -> Effort {
+    match std::env::var("AIMET_BENCH_FULL").as_deref() {
+        Ok("1") | Ok("true") => Effort::Full,
+        _ => Effort::Fast,
+    }
+}
+
+/// Time a closure, printing `label: value (elapsed)`.
+pub fn timed<T>(label: &str, f: impl FnOnce() -> T) -> T {
+    let t0 = Instant::now();
+    let out = f();
+    eprintln!("[bench] {label}: {:.2}s", t0.elapsed().as_secs_f64());
+    out
+}
+
+/// Median wall-time of `iters` runs of `f` (for hot-path micro timing).
+pub fn median_secs(iters: usize, mut f: impl FnMut()) -> f64 {
+    let mut times: Vec<f64> = (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}

@@ -1,0 +1,25 @@
+//! Regenerates figures 4.2/4.3: per-channel weight ranges of the first
+//! depthwise-separable layer before and after CLE (the paper's boxplots;
+//! ASCII here, CSV for plotting).
+//!
+//! Run: `cargo bench --bench fig_4_2_4_3`
+
+mod common;
+
+use aimet::coordinator::experiments::{fig_4_2_4_3, render_fig_4_2_4_3};
+
+fn main() {
+    let effort = common::effort();
+    let res = common::timed("fig 4.2/4.3", || fig_4_2_4_3(effort));
+    println!();
+    print!("{}", render_fig_4_2_4_3(&res));
+    println!(
+        "paper shape: before CLE the channel ranges span orders of \
+         magnitude; after CLE they are uniform"
+    );
+    let dir = std::env::temp_dir().join("aimet_bench_fig42");
+    std::fs::create_dir_all(&dir).ok();
+    std::fs::write(dir.join("before.csv"), res.before.to_csv()).unwrap();
+    std::fs::write(dir.join("after.csv"), res.after.to_csv()).unwrap();
+    println!("CSV written to {}", dir.display());
+}

@@ -1,0 +1,100 @@
+//! Hot-path profile of the toolkit itself (EXPERIMENTS.md §Perf): where
+//! the PTQ/QAT wall-time goes and how fast the building blocks are.
+//!
+//!   * FP32 forward vs quantsim forward (the "≤3x" perf target)
+//!   * compute_encodings (Tf vs TfEnhanced analyzers)
+//!   * AdaRound per-layer optimization throughput
+//!   * end-to-end fig 4.1 pipeline wall time
+//!   * one QAT STE step (fwd + bwd + update)
+//!
+//! Run: `cargo bench --bench hotpath`
+
+mod common;
+
+use aimet::coordinator::experiments::{trained_model, Effort};
+use aimet::ptq::{apply_adaround, standard_ptq_pipeline, AdaroundParameters, PtqOptions};
+use aimet::qat::{fit_qat, TrainConfig};
+use aimet::quant::QuantScheme;
+use aimet::quantsim::{QuantParams, QuantizationSimModel};
+use aimet::task::TaskData;
+
+
+fn main() {
+    let model = "mobimini";
+    let (g, data, _) = trained_model(model, Effort::Fast, 3100);
+    let calib = data.calibration(4, 16);
+    let (x, _) = data.batch(0, 16);
+
+    println!("== hot paths ({model}, batch 16, {} threads) ==", aimet::pool::num_threads());
+
+    // FP32 vs quantsim forward.
+    let t_fp = common::median_secs(15, || {
+        std::hint::black_box(g.forward(&x));
+    });
+    let mut sim = QuantizationSimModel::with_defaults(g.clone(), QuantParams::default());
+    sim.compute_encodings(&calib);
+    let t_sim = common::median_secs(15, || {
+        std::hint::black_box(sim.forward(&x));
+    });
+    println!(
+        "fp32 forward     : {:7.2} ms\nquantsim forward : {:7.2} ms  ({:.2}x fp32; target ≤3x)",
+        t_fp * 1e3,
+        t_sim * 1e3,
+        t_sim / t_fp
+    );
+
+    // compute_encodings under both schemes.
+    for (label, scheme) in [("min-max (tf)", QuantScheme::Tf), ("SQNR (tf_enhanced)", QuantScheme::TfEnhanced)] {
+        let t = common::median_secs(5, || {
+            let mut s = QuantizationSimModel::with_defaults(
+                g.clone(),
+                QuantParams {
+                    scheme,
+                    ..Default::default()
+                },
+            );
+            s.compute_encodings(&calib);
+            std::hint::black_box(&s);
+        });
+        println!("compute_encodings {label:<20}: {:7.2} ms (4 batches)", t * 1e3);
+    }
+
+    // AdaRound throughput.
+    let params = AdaroundParameters {
+        iterations: 100,
+        max_rows: 1024,
+        ..Default::default()
+    };
+    let t_ada = common::timed("adaround 100 iters x 8 layers", || {
+        apply_adaround(&g, QuantParams::default(), &Default::default(), &calib, &params)
+    });
+    let total_flips: f32 = t_ada.reports.iter().map(|r| r.flipped).sum();
+    println!("adaround flipped fraction (sum over layers): {total_flips:.3}");
+
+    // Full fig 4.1 pipeline.
+    common::timed("standard PTQ pipeline (CLE+BC)", || {
+        standard_ptq_pipeline(&g, &calib, &PtqOptions::default())
+    });
+
+    // One QAT step.
+    let mut qat_sim = sim.clone();
+    let cfg = TrainConfig {
+        steps: 10,
+        batch_size: 16,
+        recalibrate_every: 0,
+        log_every: 1,
+        ..Default::default()
+    };
+    let t_qat = common::median_secs(3, || {
+        let mut s = qat_sim.clone();
+        fit_qat(&mut s, model, &data, &cfg);
+    });
+    println!("QAT 10 steps (fwd+bwd+update): {:7.2} ms ({:.2} ms/step)", t_qat * 1e3, t_qat * 1e2);
+    let _ = &mut qat_sim;
+
+    // Calibration data generation (should be negligible).
+    let t_data = common::median_secs(9, || {
+        std::hint::black_box(TaskData::new(model, 9).batch(3, 16));
+    });
+    println!("synthetic batch gen: {:7.3} ms", t_data * 1e3);
+}

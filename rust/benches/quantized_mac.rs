@@ -1,0 +1,105 @@
+//! Figures 2.1/2.2 — the quantized MAC pipeline, three ways:
+//!
+//! 1. Rust integer-exact quantized matmul (`quant::qops`, INT32
+//!    accumulators) vs the FP32 matmul it replaces — the "is the math
+//!    right and what does the requantize cost" check.
+//! 2. The PJRT `qmatmul_demo` artifact (L1 Pallas kernel) end-to-end.
+//! 3. Throughput of the fake-quant (qdq) simulation op — the hot path of
+//!    every quantsim forward.
+//!
+//! Run: `cargo bench --bench quantized_mac`
+
+mod common;
+
+use aimet::quant::{quantized_matmul_i32, Encoding, Quantizer};
+use aimet::rng::Rng;
+use aimet::runtime::Runtime;
+use aimet::tensor::{matmul, Tensor};
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let (m, k, n) = (128usize, 256, 128);
+    let x = Tensor::randn(&mut rng, &[m, k], 1.0);
+    let w = Tensor::randn(&mut rng, &[k, n], 0.2);
+
+    // --- 1. integer-exact quantized matmul vs FP32 ---------------------
+    // quantized_matmul_i32 computes W[m,k]·X[k,n] with symmetric weights
+    // and asymmetric activations (fig 2.2's pipeline incl. the eq 2.9
+    // zero-point correction folded into the bias).
+    let ew = Encoding::from_min_max(x.min(), x.max(), 8, true); // "weights" = x here
+    let ex = Encoding::from_min_max(w.min(), w.max(), 8, false);
+
+    let t_fp = common::median_secs(9, || {
+        std::hint::black_box(matmul(&x, &w));
+    });
+    let t_q = common::median_secs(9, || {
+        std::hint::black_box(quantized_matmul_i32(&x, &ew, &w, &ex, None));
+    });
+    let flops = 2.0 * (m * k * n) as f64;
+    println!("== quantized MAC pipeline ({m}x{k}x{n}) ==");
+    println!(
+        "fp32 matmul          : {:8.3} ms  ({:6.2} GFLOP/s)",
+        t_fp * 1e3,
+        flops / t_fp / 1e9
+    );
+    println!(
+        "int8 MAC (INT32 acc) : {:8.3} ms  ({:6.2} Gop/s, incl. quantize)",
+        t_q * 1e3,
+        flops / t_q / 1e9
+    );
+
+    // Accuracy of the integer pipeline vs fp32 reference.
+    let y_q = quantized_matmul_i32(&x, &ew, &w, &ex, None);
+    let y_fp = matmul(&x, &w);
+    let rel = (y_q.sq_err(&y_fp) as f64
+        / y_fp.data().iter().map(|v| (*v as f64).powi(2)).sum::<f64>())
+    .sqrt();
+    println!("int8 vs fp32 rel-L2 error: {rel:.4} (expect ~1e-2 for 8-bit)");
+
+    // Integer grids for the PJRT artifact below.
+    let x_int: Vec<i32> = x.data().iter().map(|&v| ew.quantize(v) + 128).collect();
+    let w_int: Vec<i32> = w.data().iter().map(|&v| ex.quantize(v)).collect();
+
+    // --- 2. the PJRT Pallas qmatmul artifact ----------------------------
+    let dir = Runtime::artifacts_dir();
+    if Runtime::available(&dir) {
+        let mut rt = Runtime::open(&dir).expect("runtime");
+        let xq = Tensor::new(&[m, k], x_int.iter().map(|&v| v as f32).collect());
+        let wq = Tensor::new(&[k, n], w_int.iter().map(|&v| v as f32).collect());
+        let bias = Tensor::zeros(&[n]);
+        let scales = Tensor::new(&[4], vec![ex.scale, ew.scale, 0.05, 128.0]);
+        // First call includes PJRT compilation; report steady state.
+        rt.execute("qmatmul_demo", &[xq.clone(), wq.clone(), bias.clone(), scales.clone()])
+            .expect("warmup");
+        let t_pjrt = common::median_secs(9, || {
+            rt.execute(
+                "qmatmul_demo",
+                &[xq.clone(), wq.clone(), bias.clone(), scales.clone()],
+            )
+            .expect("qmatmul");
+        });
+        println!(
+            "PJRT Pallas qmatmul (incl. literal copies): {:8.3} ms",
+            t_pjrt * 1e3
+        );
+    } else {
+        println!("PJRT qmatmul: skipped (no artifacts — run `make artifacts`)");
+    }
+
+    // --- 3. fake-quant (qdq) throughput ---------------------------------
+    let big = Tensor::randn(&mut rng, &[1 << 22], 1.0); // 16 MiB
+    for (label, enc) in [
+        ("asymmetric 8-bit", Encoding::from_min_max(-3.0, 3.0, 8, false)),
+        ("symmetric  8-bit", Encoding::from_min_max(-3.0, 3.0, 8, true)),
+    ] {
+        let q = Quantizer::per_tensor(enc);
+        let t = common::median_secs(7, || {
+            std::hint::black_box(q.qdq(&big));
+        });
+        println!(
+            "qdq {label}: {:7.3} ms for 4M elems ({:6.2} Gelem/s)",
+            t * 1e3,
+            big.len() as f64 / t / 1e9
+        );
+    }
+}

@@ -1,0 +1,22 @@
+//! Regenerates Table 4.1: W8/A8 PTQ accuracy with and without CLE/BC on
+//! the classification/segmentation zoo (paper: MobileNetV2 collapses to
+//! 0.09% without CLE/BC and recovers to ≤1% of FP32 with it; ResNet-50 is
+//! robust either way).
+//!
+//! Run: `cargo bench --bench table_4_1` (AIMET_BENCH_FULL=1 for the
+//! EXPERIMENTS.md configuration).
+
+mod common;
+
+use aimet::coordinator::experiments::{render_table_4_1, table_4_1};
+
+fn main() {
+    let effort = common::effort();
+    let rows = common::timed("table 4.1", || table_4_1(effort));
+    println!();
+    print!("{}", render_table_4_1(&rows));
+    println!(
+        "\npaper shape: MobileNetV2 71.72 -> 0.09 (RTN) -> 71.08 (CLE/BC); \
+         ResNet-50 76.05 -> 75.42 -> 75.45"
+    );
+}

@@ -1,0 +1,18 @@
+//! Regenerates Table 4.2: round-to-nearest vs AdaRound on the ADAS-analog
+//! object detector (paper: mAP 82.20 FP32, 49.85 RTN, 81.21 AdaRound at
+//! W8/A8), plus the W4/A8 ablation where AdaRound's advantage is
+//! structural (§4.6).
+//!
+//! Run: `cargo bench --bench table_4_2`
+
+mod common;
+
+use aimet::coordinator::experiments::{render_table_4_2, table_4_2};
+
+fn main() {
+    let effort = common::effort();
+    let rows = common::timed("table 4.2", || table_4_2(effort));
+    println!();
+    print!("{}", render_table_4_2(&rows));
+    println!("\npaper shape: 82.20 FP32 | 49.85 RTN | 81.21 AdaRound (W8/A8)");
+}

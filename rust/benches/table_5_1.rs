@@ -1,0 +1,17 @@
+//! Regenerates Table 5.1: PTQ vs PTQ-initialized QAT at W8/A8 (paper:
+//! MobileNetV2 71.72 FP32 / 71.08 PTQ / 71.23 QAT; ResNet50 76.05 / 75.45
+//! / 76.44 — QAT can exceed FP32).
+//!
+//! Run: `cargo bench --bench table_5_1`
+
+mod common;
+
+use aimet::coordinator::experiments::{render_table_5_1, table_5_1};
+
+fn main() {
+    let effort = common::effort();
+    let rows = common::timed("table 5.1", || table_5_1(effort));
+    println!();
+    print!("{}", render_table_5_1(&rows));
+    println!("\npaper shape: QAT ≥ PTQ on both; ResNet50 QAT exceeds FP32");
+}

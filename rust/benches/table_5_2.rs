@@ -1,0 +1,16 @@
+//! Regenerates Table 5.2: bi-directional-LSTM QAT (paper: DeepSpeech2 WER
+//! 9.92% FP32 -> 10.22% QAT W8/A8 — a small degradation).
+//!
+//! Run: `cargo bench --bench table_5_2`
+
+mod common;
+
+use aimet::coordinator::experiments::{render_table_5_2, table_5_2};
+
+fn main() {
+    let effort = common::effort();
+    let row = common::timed("table 5.2", || table_5_2(effort));
+    println!();
+    print!("{}", render_table_5_2(&row));
+    println!("\npaper shape: QAT TER within ~a point of FP32 (9.92 -> 10.22)");
+}

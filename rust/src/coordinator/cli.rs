@@ -1,0 +1,346 @@
+//! The `aimet` command-line interface.
+//!
+//! Hand-rolled argument parsing (the offline build carries no clap); every
+//! command maps to one paper workflow:
+//!
+//! ```text
+//! aimet models                         list zoo models
+//! aimet config                         print the default runtime config JSON
+//! aimet train      --model M [...]     FP32 training (loss curve)
+//! aimet ptq        --model M [...]     fig 4.1 pipeline + eval report
+//! aimet qat        --model M [...]     fig 5.2 pipeline + eval report
+//! aimet debug      --model M           fig 4.5 debugging flow
+//! aimet export     --model M --out D   train + ptq + export encodings (§3.3)
+//! aimet experiment <id>                table4.1|table4.2|table5.1|table5.2|fig4.2|all
+//! aimet runtime    [--run NAME]        list / smoke-run PJRT artifacts
+//! ```
+
+use super::experiments::{self, Effort};
+use crate::ptq::{standard_ptq_pipeline, PtqOptions};
+use crate::qat::{fit_qat, TrainConfig};
+use crate::quantsim::default_config_json;
+use crate::runtime::{graph_param_tensors, Runtime};
+use crate::task::{evaluate_graph, evaluate_sim, TaskData};
+use crate::{metrics, zoo};
+
+/// Minimal flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    flags: std::collections::BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(rest: &[String]) -> Args {
+        let mut flags = std::collections::BTreeMap::new();
+        let mut i = 0;
+        while i < rest.len() {
+            if let Some(key) = rest[i].strip_prefix("--") {
+                let val = rest.get(i + 1).cloned().unwrap_or_default();
+                flags.insert(key.to_string(), val);
+                i += 2;
+            } else {
+                i += 1;
+            }
+        }
+        Args { flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn model(&self) -> String {
+        self.get("model").unwrap_or("mobimini").to_string()
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn f32_or(&self, key: &str, default: f32) -> f32 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn effort(&self) -> Effort {
+        match self.get("effort") {
+            Some("full") => Effort::Full,
+            _ => Effort::Fast,
+        }
+    }
+}
+
+const USAGE: &str = "aimet — neural network quantization toolkit (AIMET reproduction)
+
+USAGE: aimet <command> [--flags]
+
+COMMANDS
+  models                         list available zoo models
+  config                         print the default runtime-config JSON (fig 3.4)
+  train   --model M [--steps N --lr F --effort fast|full]
+  ptq     --model M [--adaround true --effort fast|full]
+  qat     --model M [--steps N --effort fast|full]
+  debug   --model M [--effort fast|full]
+  export  --model M --out DIR
+  experiment <table4.1|table4.2|table5.1|table5.2|fig4.2|debug|all>
+  runtime [--dir D --run NAME]   list / smoke-run the PJRT artifacts
+";
+
+/// Entry point for `aimet` (called from `rust/src/main.rs`).
+pub fn cli_main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = run(&argv);
+    std::process::exit(code);
+}
+
+/// Testable command dispatcher; returns the process exit code.
+pub fn run(argv: &[String]) -> i32 {
+    let Some(cmd) = argv.first() else {
+        print!("{USAGE}");
+        return 2;
+    };
+    let args = Args::parse(&argv[1..]);
+    match cmd.as_str() {
+        "models" => {
+            for m in zoo::MODEL_NAMES {
+                let g = zoo::build(m, 1).unwrap();
+                println!(
+                    "{m:<11} input {:?}  params {}  metric {}",
+                    zoo::input_shape(m).unwrap(),
+                    g.param_count(),
+                    metrics::metric_name(m)
+                );
+            }
+            0
+        }
+        "config" => {
+            println!("{}", default_config_json());
+            0
+        }
+        "train" => cmd_train(&args),
+        "ptq" => cmd_ptq(&args),
+        "qat" => cmd_qat(&args),
+        "debug" => cmd_debug(&args),
+        "export" => cmd_export(&args),
+        "experiment" => cmd_experiment(argv.get(1).map(|s| s.as_str()).unwrap_or("all"), &args),
+        "runtime" => cmd_runtime(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            0
+        }
+        other => {
+            eprintln!("unknown command: {other}\n{USAGE}");
+            2
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    let model = args.model();
+    let effort = args.effort();
+    let (g, data, log) = experiments::trained_model(&model, effort, 1234);
+    println!("{}", log.render());
+    let metric = evaluate_graph(&g, &model, &data, 6, 16);
+    println!(
+        "trained {model}: final loss {:.4}, {} = {:.2}",
+        log.final_loss(),
+        metrics::metric_name(&model),
+        metric
+    );
+    0
+}
+
+fn cmd_ptq(args: &Args) -> i32 {
+    let model = args.model();
+    let effort = args.effort();
+    let (g, data, _) = experiments::trained_model(&model, effort, 1234);
+    let fp32 = evaluate_graph(&g, &model, &data, 6, 16);
+    let calib = data.calibration(4, 16);
+    let mut opts = PtqOptions::default();
+    if args.get("adaround") == Some("true") {
+        opts.use_adaround = true;
+        opts.adaround.iterations = args.usize_or("adaround-iters", 300);
+    }
+    let out = standard_ptq_pipeline(&g, &calib, &opts);
+    for line in &out.log {
+        println!("ptq: {line}");
+    }
+    let q = evaluate_sim(&out.sim, &model, &data, 6, 16);
+    println!(
+        "{model}: FP32 {fp32:.2} -> W8/A8 PTQ {q:.2} ({})",
+        metrics::metric_name(&model)
+    );
+    0
+}
+
+fn cmd_qat(args: &Args) -> i32 {
+    let model = args.model();
+    let effort = args.effort();
+    let (g, data, _) = experiments::trained_model(&model, effort, 1234);
+    let fp32 = evaluate_graph(&g, &model, &data, 6, 16);
+    let calib = data.calibration(4, 16);
+    let out = standard_ptq_pipeline(&g, &calib, &PtqOptions::default());
+    let ptq = evaluate_sim(&out.sim, &model, &data, 6, 16);
+    let mut sim = out.sim;
+    let cfg = TrainConfig {
+        steps: args.usize_or("steps", 120),
+        lr: args.f32_or("lr", 0.01),
+        ..Default::default()
+    };
+    let log = fit_qat(&mut sim, &model, &data, &cfg);
+    println!("{}", log.render());
+    let qat = evaluate_sim(&sim, &model, &data, 6, 16);
+    println!(
+        "{model}: FP32 {fp32:.2} | PTQ {ptq:.2} | QAT {qat:.2} ({})",
+        metrics::metric_name(&model)
+    );
+    0
+}
+
+fn cmd_debug(args: &Args) -> i32 {
+    let _ = args;
+    let report = experiments::debug_flow_demo(args.effort());
+    print!("{}", report.render());
+    0
+}
+
+fn cmd_export(args: &Args) -> i32 {
+    let model = args.model();
+    let out_dir = std::path::PathBuf::from(args.get("out").unwrap_or("./exported"));
+    let (g, data, _) = experiments::trained_model(&model, args.effort(), 1234);
+    let calib = data.calibration(4, 16);
+    let out = standard_ptq_pipeline(&g, &calib, &PtqOptions::default());
+    match out.sim.export(&out_dir, &model) {
+        Ok(()) => {
+            println!(
+                "exported {model} model + encodings to {} ({}.json/.bin, {}_encodings.json)",
+                out_dir.display(),
+                model,
+                model
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("export failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_experiment(id: &str, args: &Args) -> i32 {
+    let effort = args.effort();
+    let run_one = |id: &str| match id {
+        "table4.1" => print!("{}", experiments::render_table_4_1(&experiments::table_4_1(effort))),
+        "table4.2" => print!("{}", experiments::render_table_4_2(&experiments::table_4_2(effort))),
+        "table5.1" => print!("{}", experiments::render_table_5_1(&experiments::table_5_1(effort))),
+        "table5.2" => print!("{}", experiments::render_table_5_2(&experiments::table_5_2(effort))),
+        "fig4.2" | "fig4.3" => {
+            print!("{}", experiments::render_fig_4_2_4_3(&experiments::fig_4_2_4_3(effort)))
+        }
+        "debug" | "fig4.5" => print!("{}", experiments::debug_flow_demo(effort).render()),
+        other => eprintln!("unknown experiment {other}"),
+    };
+    if id == "all" {
+        for id in ["table4.1", "table4.2", "table5.1", "table5.2", "fig4.2", "debug"] {
+            println!("=== {id} ===");
+            run_one(id);
+            println!();
+        }
+    } else {
+        run_one(id);
+    }
+    0
+}
+
+fn cmd_runtime(args: &Args) -> i32 {
+    let dir = args
+        .get("dir")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(Runtime::artifacts_dir);
+    if !Runtime::available(&dir) {
+        eprintln!(
+            "no artifacts at {} — run `make artifacts` first",
+            dir.display()
+        );
+        return 1;
+    }
+    let mut rt = match Runtime::open(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("runtime open failed: {e:#}");
+            return 1;
+        }
+    };
+    if let Some(name) = args.get("run").map(str::to_string) {
+        // Smoke-run a forward program with zoo weights + a synthetic batch.
+        let Some(model) = name.strip_suffix("_fwd").map(str::to_string) else {
+            eprintln!("--run expects a *_fwd program");
+            return 2;
+        };
+        let g = zoo::build(&model, 1234).unwrap();
+        let data = TaskData::new(&model, 7);
+        let spec = rt.spec(&name).expect("program in manifest").clone();
+        let batch = spec.inputs.last().unwrap()[0];
+        let (x, _) = data.batch(0, batch);
+        let mut inputs = graph_param_tensors(&g);
+        inputs.push(x);
+        match rt.execute(&name, &inputs) {
+            Ok(outs) => {
+                println!(
+                    "{name}: ok, output shapes {:?}",
+                    outs.iter().map(|t| t.shape().to_vec()).collect::<Vec<_>>()
+                );
+                0
+            }
+            Err(e) => {
+                eprintln!("{name} failed: {e:#}");
+                1
+            }
+        }
+    } else {
+        for p in rt.programs() {
+            println!(
+                "{:<24} {:<28} {} inputs, {} outputs — {}",
+                p.name,
+                p.file,
+                p.inputs.len(),
+                p.outputs.len(),
+                p.desc
+            );
+        }
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn no_args_prints_usage() {
+        assert_eq!(run(&[]), 2);
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert_eq!(run(&sv(&["frobnicate"])), 2);
+    }
+
+    #[test]
+    fn models_and_config_succeed() {
+        assert_eq!(run(&sv(&["models"])), 0);
+        assert_eq!(run(&sv(&["config"])), 0);
+        assert_eq!(run(&sv(&["help"])), 0);
+    }
+
+    #[test]
+    fn flag_parser_handles_pairs() {
+        let a = Args::parse(&sv(&["--model", "resmini", "--steps", "42"]));
+        assert_eq!(a.model(), "resmini");
+        assert_eq!(a.usize_or("steps", 0), 42);
+        assert_eq!(a.usize_or("missing", 7), 7);
+        assert_eq!(a.f32_or("lr", 0.5), 0.5);
+    }
+}

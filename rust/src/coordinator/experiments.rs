@@ -1,0 +1,463 @@
+//! Experiment runners — one per paper table/figure (DESIGN.md §5).
+//!
+//! Each runner trains the relevant zoo model on its synthetic workload,
+//! applies the quantization treatment under test, and returns rows shaped
+//! like the paper's table. The benches (`rust/benches/table_*.rs`) and the
+//! CLI (`aimet experiment <id>`) both call straight into these functions,
+//! so the reproduced numbers in EXPERIMENTS.md are regenerable from either
+//! entry point.
+//!
+//! Acceptance is *shape*, not absolute numbers (DESIGN.md §5): who wins,
+//! by roughly what factor, and where the crossovers fall.
+
+use crate::graph::Graph;
+use crate::ptq::{
+    equalize_model, fold_all_batch_norms, run_debug_flow, standard_ptq_pipeline, BiasCorrection,
+    DebugReport, PtqOptions,
+};
+use crate::qat::{fit_fp32, fit_qat, TrainConfig, TrainLog};
+use crate::quant::QuantScheme;
+use crate::quantsim::{QuantParams, QuantizationSimModel};
+use crate::task::{evaluate_graph, evaluate_sim, TaskData};
+use crate::visualize::{weight_ranges, ChannelRanges};
+use crate::zoo;
+
+/// Experiment speed preset. `fast` keeps every experiment under ~a minute
+/// for CI and `cargo bench`; `full` is the EXPERIMENTS.md configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Effort {
+    Fast,
+    Full,
+}
+
+impl Effort {
+    fn train_steps(self) -> usize {
+        match self {
+            Effort::Fast => 150,
+            Effort::Full => 500,
+        }
+    }
+    fn eval_batches(self) -> usize {
+        match self {
+            Effort::Fast => 4,
+            Effort::Full => 12,
+        }
+    }
+    fn calib_batches(self) -> usize {
+        match self {
+            Effort::Fast => 3,
+            Effort::Full => 8,
+        }
+    }
+    fn qat_steps(self) -> usize {
+        match self {
+            Effort::Fast => 80,
+            Effort::Full => 300,
+        }
+    }
+    fn adaround_iters(self) -> usize {
+        match self {
+            Effort::Fast => 300,
+            Effort::Full => 600,
+        }
+    }
+}
+
+const EVAL_BATCH: usize = 16;
+
+/// Train one zoo model to a usable FP32 baseline on its synthetic task.
+///
+/// For MobiMini the trained model is additionally put into the fig 4.2
+/// regime: real MobileNetV2 checkpoints arrive with wildly disparate
+/// per-channel depthwise weight ranges (an artifact of training dynamics
+/// our short synthetic runs cannot reproduce), so we synthesize that exact
+/// pathology with *inverse CLE scales* — a function-preserving
+/// re-parameterization (ReLU scale equivariance) that per-tensor weight
+/// quantization cannot survive but CLE can undo. DESIGN.md §3 documents
+/// the substitution.
+pub fn trained_model(model: &str, effort: Effort, seed: u64) -> (Graph, TaskData, TrainLog) {
+    let mut g = zoo::build(model, seed).unwrap();
+    let data = TaskData::new(model, seed + 1);
+    // Per-model budgets: the detector's objectness head needs far more
+    // steps than the classifiers (1–3 positives per 64 cells), and the
+    // recurrent model prefers a hotter LR.
+    let (steps, lr) = match (model, effort) {
+        ("detmini", Effort::Fast) => (1200, 0.1),
+        ("detmini", Effort::Full) => (2500, 0.1),
+        ("speechmini", _) => (effort.train_steps(), 0.15),
+        _ => (effort.train_steps(), 0.05),
+    };
+    let cfg = TrainConfig {
+        steps,
+        lr,
+        lr_decay_every: steps / 2,
+        ..Default::default()
+    };
+    let log = fit_fp32(&mut g, model, &data, &cfg);
+    if model == "mobimini" {
+        seed_cle_pathology(&mut g);
+    }
+    (g, data, log)
+}
+
+/// Inject fig 4.2's per-channel weight-range disparity into a trained
+/// MobiMini: fold BNs, replace ReLU6 (→ exact scale equivariance), then
+/// push inverse-CLE scales through every depthwise pair.
+pub fn seed_cle_pathology(g: &mut Graph) {
+    crate::ptq::fold_all_batch_norms(g);
+    crate::ptq::replace_relu6_with_relu(g);
+    crate::ptq::unequalize_depthwise(g, &[1.0, 32.0, 8.0, 160.0]);
+}
+
+// ---------------------------------------------------------------------
+// Table 4.1 — PTQ with CLE/BC (W8/A8) vs plain round-to-nearest.
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Table41Row {
+    pub model: String,
+    pub fp32: f32,
+    pub rtn_w8a8: f32,
+    pub clebc_w8a8: f32,
+}
+
+pub fn table_4_1(effort: Effort) -> Vec<Table41Row> {
+    ["mobimini", "resmini", "segmini"]
+        .iter()
+        .map(|&model| {
+            let (g, data, _) = trained_model(model, effort, 100);
+            let fp32 = evaluate_graph(&g, model, &data, effort.eval_batches(), EVAL_BATCH);
+            let calib = data.calibration(effort.calib_batches(), EVAL_BATCH);
+
+            // "W8/A8 without CLE/BC": BN fold + min-max ranges only.
+            let rtn_opts = PtqOptions {
+                use_cle: false,
+                bias_correction: BiasCorrection::None,
+                weight_scheme: QuantScheme::Tf,
+                act_scheme: QuantScheme::Tf,
+                ..Default::default()
+            };
+            let rtn = standard_ptq_pipeline(&g, &calib, &rtn_opts);
+            let rtn_acc = evaluate_sim(&rtn.sim, model, &data, effort.eval_batches(), EVAL_BATCH);
+
+            // "AIMET W8/A8 with CLE/BC" (fig 4.1 defaults).
+            let full = standard_ptq_pipeline(&g, &calib, &PtqOptions::default());
+            let full_acc =
+                evaluate_sim(&full.sim, model, &data, effort.eval_batches(), EVAL_BATCH);
+
+            Table41Row {
+                model: model.to_string(),
+                fp32,
+                rtn_w8a8: rtn_acc,
+                clebc_w8a8: full_acc,
+            }
+        })
+        .collect()
+}
+
+pub fn render_table_4_1(rows: &[Table41Row]) -> String {
+    let mut s = String::from(
+        "Table 4.1 — ImageNet-analog accuracy with AIMET PTQ (CLE + bias correction)\n\
+         model      | FP32    | W8/A8 no CLE/BC | W8/A8 CLE/BC\n\
+         -----------+---------+-----------------+-------------\n",
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "{:<10} | {:6.2}% | {:14.2}% | {:11.2}%\n",
+            r.model, r.fp32, r.rtn_w8a8, r.clebc_w8a8
+        ));
+    }
+    s
+}
+
+// ---------------------------------------------------------------------
+// Table 4.2 — AdaRound vs round-to-nearest on the detection model.
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Table42Row {
+    pub config: String,
+    pub fp32_map: f32,
+    pub rtn_map: f32,
+    pub adaround_map: f32,
+}
+
+pub fn table_4_2(effort: Effort) -> Vec<Table42Row> {
+    let model = "detmini";
+    let (g, data, _) = trained_model(model, effort, 200);
+    let fp32 = evaluate_graph(&g, model, &data, effort.eval_batches(), EVAL_BATCH);
+    let calib = data.calibration(effort.calib_batches(), EVAL_BATCH);
+    // The paper's ADAS row is W8/A8 on a production model that RTN
+    // collapses; our laptop-scale detector is more robust at W8, so the
+    // RTN-collapse -> AdaRound-recovery crossover appears at W4/A8 here
+    // (consistent with §4.6: AdaRound is what *enables low-bit weight
+    // quantization*). Both arms get CLE + bias correction, like the
+    // paper's "despite the use of CLE/BC" setup.
+    [(8u32, 8u32), (4, 8)]
+        .iter()
+        .map(|&(w_bw, a_bw)| {
+            let qp = QuantParams {
+                param_bw: w_bw,
+                act_bw: a_bw,
+                ..Default::default()
+            };
+            let rtn_opts = PtqOptions {
+                qp,
+                ..Default::default()
+            };
+            let rtn = standard_ptq_pipeline(&g, &calib, &rtn_opts);
+            let rtn_map = evaluate_sim(&rtn.sim, model, &data, effort.eval_batches(), EVAL_BATCH);
+
+            let mut ada_opts = PtqOptions {
+                qp,
+                use_adaround: true,
+                ..Default::default()
+            };
+            ada_opts.adaround.iterations = effort.adaround_iters();
+            ada_opts.adaround.max_rows = 2048;
+            let ada = standard_ptq_pipeline(&g, &calib, &ada_opts);
+            let ada_map = evaluate_sim(&ada.sim, model, &data, effort.eval_batches(), EVAL_BATCH);
+
+            Table42Row {
+                config: format!("W{w_bw}/A{a_bw}"),
+                fp32_map: fp32,
+                rtn_map,
+                adaround_map: ada_map,
+            }
+        })
+        .collect()
+}
+
+pub fn render_table_4_2(rows: &[Table42Row]) -> String {
+    let mut s = String::from(
+        "Table 4.2 — ADAS-analog object detection (mAP), round-to-nearest vs AdaRound\n\
+         config | FP32    | round-to-nearest | AdaRound\n\
+         -------+---------+------------------+---------\n",
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "{:<6} | {:6.2}% | {:15.2}% | {:7.2}%\n",
+            r.config, r.fp32_map, r.rtn_map, r.adaround_map
+        ));
+    }
+    s
+}
+
+// ---------------------------------------------------------------------
+// Table 5.1 — QAT vs PTQ (W8/A8, PTQ-initialized QAT).
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Table51Row {
+    pub model: String,
+    pub fp32: f32,
+    pub ptq: f32,
+    pub qat: f32,
+}
+
+pub fn table_5_1(effort: Effort) -> Vec<Table51Row> {
+    ["mobimini", "resmini"]
+        .iter()
+        .map(|&model| {
+            let (g, data, _) = trained_model(model, effort, 300);
+            let fp32 = evaluate_graph(&g, model, &data, effort.eval_batches(), EVAL_BATCH);
+            let calib = data.calibration(effort.calib_batches(), EVAL_BATCH);
+            let ptq_out = standard_ptq_pipeline(&g, &calib, &PtqOptions::default());
+            let ptq = evaluate_sim(&ptq_out.sim, model, &data, effort.eval_batches(), EVAL_BATCH);
+
+            // Fig 5.2: QAT starts from the PTQ-initialized sim.
+            let mut sim = ptq_out.sim.clone();
+            let qat_cfg = TrainConfig {
+                steps: effort.qat_steps(),
+                lr: 0.01,
+                lr_decay_every: effort.qat_steps() / 2,
+                ..Default::default()
+            };
+            fit_qat(&mut sim, model, &data, &qat_cfg);
+            let qat = evaluate_sim(&sim, model, &data, effort.eval_batches(), EVAL_BATCH);
+
+            Table51Row {
+                model: model.to_string(),
+                fp32,
+                ptq,
+                qat,
+            }
+        })
+        .collect()
+}
+
+pub fn render_table_5_1(rows: &[Table51Row]) -> String {
+    let mut s = String::from(
+        "Table 5.1 — QAT results (W8/A8, PTQ-initialized)\n\
+         model      | FP32    | AIMET PTQ | AIMET QAT\n\
+         -----------+---------+-----------+----------\n",
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "{:<10} | {:6.2}% | {:8.2}% | {:8.2}%\n",
+            r.model, r.fp32, r.ptq, r.qat
+        ));
+    }
+    s
+}
+
+// ---------------------------------------------------------------------
+// Table 5.2 — bi-LSTM QAT (token error rate; lower is better).
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Table52Row {
+    pub fp32_ter: f32,
+    pub qat_ter: f32,
+}
+
+pub fn table_5_2(effort: Effort) -> Table52Row {
+    let model = "speechmini";
+    let (g, data, _) = trained_model(model, effort, 400);
+    // evaluate_* return 100−TER (higher-better); flip back to TER.
+    let fp32_ter =
+        100.0 - evaluate_graph(&g, model, &data, effort.eval_batches(), EVAL_BATCH);
+    let calib = data.calibration(effort.calib_batches(), EVAL_BATCH);
+    let mut sim = QuantizationSimModel::with_defaults(g, QuantParams::default());
+    sim.compute_encodings(&calib);
+    let qat_cfg = TrainConfig {
+        steps: effort.qat_steps(),
+        lr: 0.05,
+        lr_decay_every: effort.qat_steps() / 2,
+        ..Default::default()
+    };
+    fit_qat(&mut sim, model, &data, &qat_cfg);
+    let qat_ter = 100.0 - evaluate_sim(&sim, model, &data, effort.eval_batches(), EVAL_BATCH);
+    Table52Row { fp32_ter, qat_ter }
+}
+
+pub fn render_table_5_2(row: &Table52Row) -> String {
+    format!(
+        "Table 5.2 — DeepSpeech2-analog bi-LSTM QAT (token error rate, lower is better)\n\
+         model       | FP32 TER | AIMET QAT TER\n\
+         ------------+----------+--------------\n\
+         speechmini  | {:7.2}% | {:12.2}%\n",
+        row.fp32_ter, row.qat_ter
+    )
+}
+
+// ---------------------------------------------------------------------
+// Figures 4.2 / 4.3 — per-channel weight ranges before/after CLE.
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct CleRangesResult {
+    pub layer: String,
+    pub before: ChannelRanges,
+    pub after: ChannelRanges,
+}
+
+/// Per-channel weight ranges of the first depthwise layer of MobiMini
+/// after BN folding, before vs after CLE (the paper's figs 4.2/4.3).
+pub fn fig_4_2_4_3(effort: Effort) -> CleRangesResult {
+    let (g, _, _) = trained_model("mobimini", effort, 500);
+    let mut folded = g.clone();
+    fold_all_batch_norms(&mut folded);
+    let before = weight_ranges(&folded)
+        .into_iter()
+        .find(|r| r.layer == "b1.dw")
+        .expect("b1.dw ranges");
+    let mut equalized = g.clone();
+    equalize_model(&mut equalized);
+    let after = weight_ranges(&equalized)
+        .into_iter()
+        .find(|r| r.layer == "b1.dw")
+        .expect("b1.dw ranges");
+    CleRangesResult {
+        layer: "b1.dw".to_string(),
+        before,
+        after,
+    }
+}
+
+pub fn render_fig_4_2_4_3(res: &CleRangesResult) -> String {
+    format!(
+        "Figures 4.2/4.3 — per-channel weight ranges of {} (MobiMini)\n\
+         BEFORE CLE (spread {:.1}x):\n{}\n\
+         AFTER CLE (spread {:.1}x):\n{}\n",
+        res.layer,
+        res.before.spread(),
+        res.before.to_ascii(60),
+        res.after.spread(),
+        res.after.to_ascii(60)
+    )
+}
+
+// ---------------------------------------------------------------------
+// Fig 4.5 — the debugging flow on a deliberately hurt model.
+// ---------------------------------------------------------------------
+
+pub fn debug_flow_demo(effort: Effort) -> DebugReport {
+    let model = "mobimini";
+    let (g, data, _) = trained_model(model, effort, 600);
+    let fp32 = evaluate_graph(&g, model, &data, effort.eval_batches(), EVAL_BATCH);
+    let calib = data.calibration(effort.calib_batches(), EVAL_BATCH);
+    // A W4/A8 no-CLE sim: broken enough for the flow to say something.
+    let opts = PtqOptions {
+        qp: QuantParams {
+            param_bw: 4,
+            ..Default::default()
+        },
+        use_cle: false,
+        bias_correction: BiasCorrection::None,
+        ..Default::default()
+    };
+    let out = standard_ptq_pipeline(&g, &calib, &opts);
+    let eval_batches = effort.eval_batches().min(2);
+    run_debug_flow(&out.sim, fp32, &|sim| {
+        evaluate_sim(sim, model, &data, eval_batches, EVAL_BATCH)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // One smoke test per experiment at minimum effort; the benches run
+    // the real thing. These are the most expensive unit tests in the
+    // crate but they pin the *shape* claims of DESIGN.md §5.
+
+    #[test]
+    fn table_4_1_shape_holds() {
+        let rows = table_4_1(Effort::Fast);
+        assert_eq!(rows.len(), 3);
+        let mobi = &rows[0];
+        let res = &rows[1];
+        // (i) RTN collapses MobiMini but not ResMini;
+        assert!(
+            mobi.rtn_w8a8 < mobi.fp32 - 10.0,
+            "mobimini RTN should collapse: fp32 {} rtn {}",
+            mobi.fp32,
+            mobi.rtn_w8a8
+        );
+        assert!(
+            res.rtn_w8a8 > res.fp32 - 15.0,
+            "resmini RTN should roughly hold: fp32 {} rtn {}",
+            res.fp32,
+            res.rtn_w8a8
+        );
+        // (ii) CLE/BC recovers MobiMini most of the way.
+        assert!(
+            mobi.clebc_w8a8 > mobi.rtn_w8a8 + 5.0,
+            "CLE/BC must recover mobimini: rtn {} clebc {}",
+            mobi.rtn_w8a8,
+            mobi.clebc_w8a8
+        );
+    }
+
+    #[test]
+    fn fig_4_2_4_3_cle_flattens_ranges() {
+        let res = fig_4_2_4_3(Effort::Fast);
+        assert!(
+            res.after.spread() < 0.5 * res.before.spread(),
+            "CLE must flatten channel ranges: {} -> {}",
+            res.before.spread(),
+            res.after.spread()
+        );
+    }
+}

@@ -1,0 +1,13 @@
+//! L3 coordinator — the toolkit's command-line frontend and experiment
+//! orchestration.
+//!
+//! The paper's contribution is a *toolkit*, so the coordinator is the
+//! AIMET user surface rendered as a CLI: `train`, `ptq`, `qat`, `debug`,
+//! `export` are the workflows of chapters 3–5, and `experiment <id>`
+//! regenerates each paper table/figure via [`experiments`].
+
+pub mod experiments;
+
+mod cli;
+
+pub use cli::cli_main;

@@ -1,0 +1,407 @@
+//! Synthetic dataset substrate (DESIGN.md §3: ImageNet / Cityscapes-like /
+//! ADAS traces / LibriSpeech are data gates — we generate procedural
+//! equivalents that exercise the same code paths and give the models a real
+//! signal to learn, so quantization has real accuracy to destroy/recover).
+//!
+//! All generators are deterministic in (seed, index): batch `i` of a
+//! dataset is identical across runs, processes, and the Rust/PJRT engines.
+
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+use crate::zoo;
+
+/// Class-conditional procedural images ("SynthImageNet").
+///
+/// Each class has a fixed signature: a 2-D sinusoidal texture with
+/// class-specific frequency/phase per RGB channel. A sample is its class
+/// signature + brightness jitter + pixel noise. Linear classifiers cannot
+/// solve it perfectly at the noise level we use, so accuracy responds
+/// smoothly to quantization noise — like real vision tasks.
+pub struct SynthImageNet {
+    pub classes: usize,
+    seed: u64,
+    /// Per class, per channel: (fx, fy, phase, amp).
+    sigs: Vec<[(f32, f32, f32, f32); 3]>,
+    pub noise: f32,
+}
+
+impl SynthImageNet {
+    pub fn new(seed: u64) -> SynthImageNet {
+        let classes = zoo::CLS_CLASSES;
+        let mut rng = Rng::new(seed ^ 0x5117_1e7);
+        let sigs = (0..classes)
+            .map(|_| {
+                [0, 1, 2].map(|_| {
+                    (
+                        rng.uniform_in(0.5, 3.5),
+                        rng.uniform_in(0.5, 3.5),
+                        rng.uniform_in(0.0, std::f32::consts::TAU),
+                        rng.uniform_in(0.35, 0.7),
+                    )
+                })
+            })
+            .collect();
+        SynthImageNet {
+            classes,
+            seed,
+            sigs,
+            // High enough that the task is not linearly saturable: trained
+            // accuracy sits in the ~85-95% band, leaving quantization a
+            // measurable margin to destroy (and PTQ/QAT to recover).
+            noise: 0.85,
+        }
+    }
+
+    /// Deterministic batch `index` of size `n`: (images [N,3,32,32] in
+    /// roughly [-1, 1.5], labels).
+    pub fn batch(&self, index: u64, n: usize) -> (Tensor, Vec<usize>) {
+        let mut rng = Rng::new(self.seed.wrapping_add(index.wrapping_mul(0x9e37)));
+        let (h, w) = (32usize, 32usize);
+        let mut data = vec![0.0f32; n * 3 * h * w];
+        let mut labels = Vec::with_capacity(n);
+        for ni in 0..n {
+            let label = rng.below(self.classes);
+            labels.push(label);
+            let bright = rng.uniform_in(0.8, 1.2);
+            for c in 0..3 {
+                let (fx, fy, ph, amp) = self.sigs[label][c];
+                let base = (ni * 3 + c) * h * w;
+                for y in 0..h {
+                    for x in 0..w {
+                        let v = amp
+                            * ((fx * x as f32 * std::f32::consts::TAU / w as f32
+                                + fy * y as f32 * std::f32::consts::TAU / h as f32
+                                + ph)
+                                .sin());
+                        data[base + y * w + x] =
+                            bright * v + self.noise * rng.normal();
+                    }
+                }
+            }
+        }
+        (Tensor::new(&[n, 3, h, w], data), labels)
+    }
+}
+
+/// Procedural segmentation scenes ("SynthSeg"): background (class 0) plus
+/// 1–3 axis-aligned rectangles of classes 1..SEG_CLASSES, each rendered
+/// with a class-specific color and texture into the image. Per-pixel labels.
+pub struct SynthSeg {
+    seed: u64,
+    pub classes: usize,
+}
+
+impl SynthSeg {
+    pub fn new(seed: u64) -> SynthSeg {
+        SynthSeg {
+            seed,
+            classes: zoo::SEG_CLASSES,
+        }
+    }
+
+    /// (images [N,3,32,32], labels [N,32,32] row-major).
+    pub fn batch(&self, index: u64, n: usize) -> (Tensor, Vec<usize>) {
+        let mut rng = Rng::new(self.seed.wrapping_add(index.wrapping_mul(0x51ab)));
+        let (h, w) = (32usize, 32usize);
+        let mut data = vec![0.0f32; n * 3 * h * w];
+        let mut labels = vec![0usize; n * h * w];
+        for ni in 0..n {
+            // Background texture.
+            for c in 0..3 {
+                let base = (ni * 3 + c) * h * w;
+                for k in 0..h * w {
+                    data[base + k] = 0.1 * rng.normal();
+                }
+            }
+            let num_rects = 1 + rng.below(3);
+            for _ in 0..num_rects {
+                let class = 1 + rng.below(self.classes - 1);
+                let rw = 6 + rng.below(14);
+                let rh = 6 + rng.below(14);
+                let x0 = rng.below(w - rw);
+                let y0 = rng.below(h - rh);
+                // Class-specific color: channel weights from class id.
+                let col = [
+                    ((class * 37) % 7) as f32 / 7.0 + 0.3,
+                    ((class * 53) % 7) as f32 / 7.0 + 0.3,
+                    ((class * 71) % 7) as f32 / 7.0 + 0.3,
+                ];
+                for y in y0..y0 + rh {
+                    for x in x0..x0 + rw {
+                        labels[ni * h * w + y * w + x] = class;
+                        for c in 0..3 {
+                            data[(ni * 3 + c) * h * w + y * w + x] =
+                                col[c] + 0.15 * rng.normal();
+                        }
+                    }
+                }
+            }
+        }
+        (Tensor::new(&[n, 3, h, w], data), labels)
+    }
+}
+
+/// Ground-truth object for SynthDet.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DetObject {
+    /// Grid cell (row, col) containing the object center.
+    pub cell: (usize, usize),
+    pub class: usize,
+    /// Center offset within the cell, in [0,1)².
+    pub offset: (f32, f32),
+    /// Width/height as a fraction of image size.
+    pub size: (f32, f32),
+}
+
+/// ADAS-like detection scenes ("SynthDet"): 64×64 images with 1–3 colored
+/// square "vehicles"; targets per 8×8 grid cell (objectness, class, box).
+pub struct SynthDet {
+    seed: u64,
+    pub classes: usize,
+}
+
+impl SynthDet {
+    pub fn new(seed: u64) -> SynthDet {
+        SynthDet {
+            seed,
+            classes: zoo::DET_CLASSES,
+        }
+    }
+
+    /// (images [N,3,64,64], per-image object lists).
+    pub fn batch(&self, index: u64, n: usize) -> (Tensor, Vec<Vec<DetObject>>) {
+        let mut rng = Rng::new(self.seed.wrapping_add(index.wrapping_mul(0xde7)));
+        let (h, w) = (64usize, 64usize);
+        let g = zoo::DET_GRID;
+        let cell = w / g;
+        let mut data = vec![0.0f32; n * 3 * h * w];
+        let mut objects = Vec::with_capacity(n);
+        for ni in 0..n {
+            for c in 0..3 {
+                let base = (ni * 3 + c) * h * w;
+                for k in 0..h * w {
+                    data[base + k] = 0.1 * rng.normal();
+                }
+            }
+            let count = 1 + rng.below(3);
+            let mut objs: Vec<DetObject> = Vec::new();
+            for _ in 0..count {
+                let class = rng.below(self.classes);
+                let size_px = 8 + rng.below(10);
+                let cx = size_px / 2 + rng.below(w - size_px);
+                let cy = size_px / 2 + rng.below(h - size_px);
+                let cell_rc = (cy / cell, cx / cell);
+                if objs.iter().any(|o| o.cell == cell_rc) {
+                    continue; // one object per cell (YOLO-v1 style)
+                }
+                let col = [
+                    ((class * 41) % 5) as f32 / 5.0 + 0.4,
+                    ((class * 59) % 5) as f32 / 5.0 + 0.4,
+                    ((class * 83) % 5) as f32 / 5.0 + 0.4,
+                ];
+                let (x0, y0) = (cx - size_px / 2, cy - size_px / 2);
+                for y in y0..(y0 + size_px).min(h) {
+                    for x in x0..(x0 + size_px).min(w) {
+                        for c in 0..3 {
+                            data[(ni * 3 + c) * h * w + y * w + x] =
+                                col[c] + 0.12 * rng.normal();
+                        }
+                    }
+                }
+                objs.push(DetObject {
+                    cell: cell_rc,
+                    class,
+                    offset: (
+                        (cy % cell) as f32 / cell as f32,
+                        (cx % cell) as f32 / cell as f32,
+                    ),
+                    size: (size_px as f32 / h as f32, size_px as f32 / w as f32),
+                });
+            }
+            objects.push(objs);
+        }
+        (Tensor::new(&[n, 3, h, w], data), objects)
+    }
+}
+
+/// Token-sequence "speech" ("SynthSpeech"): each frame carries one of
+/// `SPEECH_TOKENS` tokens rendered as a token-specific feature pattern, with
+/// temporal smearing between adjacent frames (the reason bi-directional
+/// context helps). Per-frame token labels; the metric is token error rate.
+pub struct SynthSpeech {
+    seed: u64,
+    pub tokens: usize,
+    /// Per token: feature signature [F].
+    sigs: Vec<Vec<f32>>,
+}
+
+impl SynthSpeech {
+    pub fn new(seed: u64) -> SynthSpeech {
+        let tokens = zoo::SPEECH_TOKENS;
+        let f = zoo::SPEECH_FEATS;
+        let mut rng = Rng::new(seed ^ 0x57ee_c4);
+        let sigs = (0..tokens)
+            .map(|_| rng.normal_vec(f, 1.0))
+            .collect();
+        SynthSpeech {
+            seed,
+            tokens,
+            sigs,
+        }
+    }
+
+    /// (sequences [N,T,F], labels [N,T] row-major).
+    pub fn batch(&self, index: u64, n: usize) -> (Tensor, Vec<usize>) {
+        let mut rng = Rng::new(self.seed.wrapping_add(index.wrapping_mul(0xabcd)));
+        let (t, f) = (zoo::SPEECH_T, zoo::SPEECH_FEATS);
+        let mut data = vec![0.0f32; n * t * f];
+        let mut labels = vec![0usize; n * t];
+        for ni in 0..n {
+            // Random token run-lengths (tokens persist 2-5 frames).
+            let mut ti = 0usize;
+            while ti < t {
+                let tok = rng.below(self.tokens);
+                let run = 2 + rng.below(4);
+                for _ in 0..run {
+                    if ti >= t {
+                        break;
+                    }
+                    labels[ni * t + ti] = tok;
+                    ti += 1;
+                }
+            }
+            // Render: signature + smear from neighbours + noise.
+            for ti in 0..t {
+                let tok = labels[ni * t + ti];
+                let prev = if ti > 0 { labels[ni * t + ti - 1] } else { tok };
+                let next = if ti + 1 < t {
+                    labels[ni * t + ti + 1]
+                } else {
+                    tok
+                };
+                for fi in 0..f {
+                    // Noise level tuned so trained FP32 TER sits in the
+                    // ~5-15% band (Table 5.2's regime), not at zero.
+                    data[(ni * t + ti) * f + fi] = 0.55 * self.sigs[tok][fi]
+                        + 0.225 * self.sigs[prev][fi]
+                        + 0.225 * self.sigs[next][fi]
+                        + 0.9 * rng.normal();
+                }
+            }
+        }
+        (Tensor::new(&[n, t, f], data), labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn imagenet_batches_deterministic() {
+        let d = SynthImageNet::new(1);
+        let (x1, y1) = d.batch(5, 4);
+        let (x2, y2) = d.batch(5, 4);
+        assert_eq!(x1, x2);
+        assert_eq!(y1, y2);
+        let (x3, _) = d.batch(6, 4);
+        assert_ne!(x1, x3);
+    }
+
+    #[test]
+    fn imagenet_labels_in_range_and_varied() {
+        let d = SynthImageNet::new(2);
+        let (_, labels) = d.batch(0, 128);
+        assert!(labels.iter().all(|&l| l < d.classes));
+        let distinct: std::collections::HashSet<_> = labels.iter().collect();
+        assert!(distinct.len() >= 8);
+    }
+
+    #[test]
+    fn imagenet_classes_are_separable_by_signature() {
+        // Same-class images should correlate more than cross-class ones.
+        let d = SynthImageNet::new(3);
+        let (x, y) = d.batch(0, 64);
+        let img = |i: usize| &x.data()[i * 3 * 1024..(i + 1) * 3 * 1024];
+        let dot = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(u, v)| u * v).sum::<f32>() / a.len() as f32
+        };
+        let mut same = Vec::new();
+        let mut diff = Vec::new();
+        for i in 0..64 {
+            for j in (i + 1)..64 {
+                let c = dot(img(i), img(j));
+                if y[i] == y[j] {
+                    same.push(c);
+                } else {
+                    diff.push(c);
+                }
+            }
+        }
+        let mean = |v: &[f32]| v.iter().sum::<f32>() / v.len().max(1) as f32;
+        assert!(mean(&same) > mean(&diff) + 0.05, "{} vs {}", mean(&same), mean(&diff));
+    }
+
+    #[test]
+    fn seg_labels_match_shapes() {
+        let d = SynthSeg::new(4);
+        let (x, labels) = d.batch(0, 2);
+        assert_eq!(x.shape(), &[2, 3, 32, 32]);
+        assert_eq!(labels.len(), 2 * 32 * 32);
+        assert!(labels.iter().all(|&l| l < d.classes));
+        // Non-trivial foreground.
+        let fg = labels.iter().filter(|&&l| l > 0).count();
+        assert!(fg > 50, "fg={fg}");
+    }
+
+    #[test]
+    fn det_objects_well_formed() {
+        let d = SynthDet::new(5);
+        let (x, objs) = d.batch(0, 8);
+        assert_eq!(x.shape(), &[8, 3, 64, 64]);
+        for img_objs in &objs {
+            assert!(!img_objs.is_empty());
+            for o in img_objs {
+                assert!(o.cell.0 < 8 && o.cell.1 < 8);
+                assert!(o.class < d.classes);
+                assert!(o.offset.0 >= 0.0 && o.offset.0 < 1.0);
+            }
+            // One object per cell.
+            let mut cells: Vec<_> = img_objs.iter().map(|o| o.cell).collect();
+            cells.sort();
+            cells.dedup();
+            assert_eq!(cells.len(), img_objs.len());
+        }
+    }
+
+    #[test]
+    fn speech_sequences_deterministic_and_labeled() {
+        let d = SynthSpeech::new(6);
+        let (x, y) = d.batch(3, 4);
+        assert_eq!(x.shape(), &[4, zoo::SPEECH_T, zoo::SPEECH_FEATS]);
+        assert_eq!(y.len(), 4 * zoo::SPEECH_T);
+        let (x2, y2) = d.batch(3, 4);
+        assert_eq!(x, x2);
+        assert_eq!(y, y2);
+        assert!(y.iter().all(|&l| l < d.tokens));
+    }
+
+    #[test]
+    fn speech_tokens_form_runs() {
+        let d = SynthSpeech::new(7);
+        let (_, y) = d.batch(0, 16);
+        // Adjacent-frame agreement should be well above chance (1/6).
+        let t = zoo::SPEECH_T;
+        let mut agree = 0usize;
+        let mut total = 0usize;
+        for ni in 0..16 {
+            for ti in 1..t {
+                total += 1;
+                if y[ni * t + ti] == y[ni * t + ti - 1] {
+                    agree += 1;
+                }
+            }
+        }
+        assert!(agree as f32 / total as f32 > 0.5);
+    }
+}

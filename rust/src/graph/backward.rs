@@ -1,0 +1,490 @@
+//! Reverse-mode differentiation of a [`Graph`] — the pure-Rust training
+//! engine used by QAT (§5) when running without PJRT artifacts, and by the
+//! finite-difference tests.
+//!
+//! The straight-through estimator (§5.1, fig 5.1) falls out of the calling
+//! convention: the caller passes the *quantized* weights used in the
+//! forward pass via `weight_overrides`, gradients are computed at the
+//! quantized points, and the optimizer applies them to the FP32 shadow
+//! weights — exactly "skip the quantizer block in the backward pass".
+
+use super::{Graph, Input, Op};
+use crate::tensor::{
+    conv2d_backward, depthwise_conv2d_backward, matmul_at_b, max_pool2_backward,
+    upsample2_backward, Tensor,
+};
+
+/// Parameter gradients of one node.
+#[derive(Debug, Clone, Default)]
+pub struct NodeGrads {
+    pub weight: Option<Tensor>,
+    /// Second-weight gradient (LSTM recurrent weights `w_hh`).
+    pub weight2: Option<Tensor>,
+    pub bias: Option<Vec<f32>>,
+    /// BatchNorm affine grads.
+    pub gamma: Option<Vec<f32>>,
+    pub beta: Option<Vec<f32>>,
+}
+
+/// All gradients of one backward pass.
+#[derive(Debug, Clone)]
+pub struct GraphGrads {
+    pub nodes: Vec<NodeGrads>,
+    /// Gradient w.r.t. the graph input.
+    pub input: Tensor,
+}
+
+/// Back-propagate `d_out` (gradient w.r.t. the output node's output)
+/// through the graph.
+///
+/// * `x` — the graph input used in the forward pass.
+/// * `acts` — per-node outputs from [`Graph::forward_all`] /
+///   [`Graph::forward_hooked`] (post-hook, i.e. post-fake-quant for QAT).
+/// * `weight_overrides` — per-node replacement weights (the qdq'd weights
+///   the forward pass actually used); empty slice ⇒ use stored weights.
+pub fn backward(
+    g: &Graph,
+    x: &Tensor,
+    acts: &[Tensor],
+    d_out: &Tensor,
+    weight_overrides: &[Option<Tensor>],
+) -> GraphGrads {
+    backward_train(g, x, acts, d_out, weight_overrides, &[])
+}
+
+/// [`backward`] with training-mode BatchNorm: where `bn_stats[idx]` is
+/// present (from [`Graph::forward_train`]), the exact batch-statistics BN
+/// backward is used instead of the inference-form affine one.
+pub fn backward_train(
+    g: &Graph,
+    x: &Tensor,
+    acts: &[Tensor],
+    d_out: &Tensor,
+    weight_overrides: &[Option<Tensor>],
+    bn_stats: &[Option<super::BnBatchStats>],
+) -> GraphGrads {
+    assert_eq!(acts.len(), g.nodes.len());
+    let mut d_acts: Vec<Option<Tensor>> = vec![None; g.nodes.len()];
+    let mut grads: Vec<NodeGrads> = (0..g.nodes.len()).map(|_| NodeGrads::default()).collect();
+    let mut d_input: Option<Tensor> = None;
+    d_acts[g.output] = Some(d_out.clone());
+
+    let input_of = |i: &Input, acts: &[Tensor]| -> Tensor {
+        match i {
+            Input::Graph => x.clone(),
+            Input::Node(j) => acts[*j].clone(),
+        }
+    };
+
+    for idx in (0..g.nodes.len()).rev() {
+        let Some(dy) = d_acts[idx].take() else {
+            continue;
+        };
+        let node = &g.nodes[idx];
+        let weight = || -> &Tensor {
+            weight_overrides
+                .get(idx)
+                .and_then(|o| o.as_ref())
+                .unwrap_or_else(|| node.op.weight().expect("weighted op"))
+        };
+        // Gradients w.r.t. each input of this node, in input order.
+        let d_ins: Vec<Tensor> = match &node.op {
+            Op::Conv2d { spec, .. } => {
+                let xin = input_of(&node.inputs[0], acts);
+                let (dx, dw, db) = conv2d_backward(&xin, weight(), &dy, *spec);
+                grads[idx].weight = Some(dw);
+                grads[idx].bias = Some(db);
+                vec![dx]
+            }
+            Op::DepthwiseConv2d { spec, .. } => {
+                let xin = input_of(&node.inputs[0], acts);
+                let (dx, dw, db) = depthwise_conv2d_backward(&xin, weight(), &dy, *spec);
+                grads[idx].weight = Some(dw);
+                grads[idx].bias = Some(db);
+                vec![dx]
+            }
+            Op::Linear { .. } => {
+                let w = weight().clone();
+                let (o, f) = (w.dim(0), w.dim(1));
+                let xin = input_of(&node.inputs[0], acts);
+                let lead: usize = xin.shape()[..xin.rank() - 1].iter().product();
+                let x2 = xin.reshape(&[lead, f]);
+                let dy2 = dy.reshape(&[lead, o]);
+                // dW[o,f] = dyᵀ · x ; dx = dy · W
+                grads[idx].weight = Some(matmul_at_b(&dy2, &x2));
+                let mut db = vec![0.0f32; o];
+                for r in 0..lead {
+                    for (c, dbv) in db.iter_mut().enumerate() {
+                        *dbv += dy2.data()[r * o + c];
+                    }
+                }
+                grads[idx].bias = Some(db);
+                let dx = crate::tensor::matmul(&dy2, &w).reshape(xin.shape());
+                vec![dx]
+            }
+            Op::BatchNorm {
+                gamma,
+                mean,
+                var,
+                eps,
+                ..
+            } => {
+                // Training mode (batch stats captured): exact BN backward.
+                // Inference mode: BN is a per-channel affine transform.
+                let (mean, var, train) = match bn_stats.get(idx).and_then(|s| s.as_ref()) {
+                    Some(s) => (&s.mean, &s.var, true),
+                    None => (mean, var, false),
+                };
+                let xin = input_of(&node.inputs[0], acts);
+                let c = xin.dim(1);
+                let n = xin.dim(0);
+                let inner: usize = xin.shape()[2..].iter().product();
+                let count = (n * inner) as f32;
+                let mut dgamma = vec![0.0f32; c];
+                let mut dbeta = vec![0.0f32; c];
+                // First pass: dβ = Σdy, dγ = Σ dy·x̂.
+                for ni in 0..n {
+                    for ci in 0..c {
+                        let inv_std = 1.0 / (var[ci] + eps).sqrt();
+                        let base = (ni * c + ci) * inner;
+                        for k in 0..inner {
+                            let dyv = dy.data()[base + k];
+                            dbeta[ci] += dyv;
+                            dgamma[ci] += dyv * (xin.data()[base + k] - mean[ci]) * inv_std;
+                        }
+                    }
+                }
+                let mut dx = dy.clone();
+                let dxd = dx.data_mut();
+                for ni in 0..n {
+                    for ci in 0..c {
+                        let inv_std = 1.0 / (var[ci] + eps).sqrt();
+                        let scale = gamma[ci] * inv_std;
+                        let base = (ni * c + ci) * inner;
+                        for k in 0..inner {
+                            let dyv = dy.data()[base + k];
+                            dxd[base + k] = if train {
+                                // dx = γ/σ · (dy − mean(dy) − x̂·mean(dy·x̂))
+                                let xhat = (xin.data()[base + k] - mean[ci]) * inv_std;
+                                scale
+                                    * (dyv
+                                        - dbeta[ci] / count
+                                        - xhat * dgamma[ci] / count)
+                            } else {
+                                dyv * scale
+                            };
+                        }
+                    }
+                }
+                grads[idx].gamma = Some(dgamma);
+                grads[idx].beta = Some(dbeta);
+                vec![dx]
+            }
+            Op::Relu => {
+                let y = &acts[idx];
+                vec![dy.zip(y, |g, yv| if yv > 0.0 { g } else { 0.0 })]
+            }
+            Op::Relu6 => {
+                let y = &acts[idx];
+                vec![dy.zip(y, |g, yv| if yv > 0.0 && yv < 6.0 { g } else { 0.0 })]
+            }
+            Op::MaxPool2 => {
+                let xin = input_of(&node.inputs[0], acts);
+                vec![max_pool2_backward(&xin, &dy)]
+            }
+            Op::AvgPool2 => {
+                let xin = input_of(&node.inputs[0], acts);
+                let (n, c, h, w) = (xin.dim(0), xin.dim(1), xin.dim(2), xin.dim(3));
+                let (oh, ow) = (h / 2, w / 2);
+                let mut dx = Tensor::zeros(xin.shape());
+                let dxd = dx.data_mut();
+                for ni in 0..n {
+                    for ci in 0..c {
+                        let ibase = (ni * c + ci) * h * w;
+                        let obase = (ni * c + ci) * oh * ow;
+                        for oy in 0..oh {
+                            for ox in 0..ow {
+                                let gv = 0.25 * dy.data()[obase + oy * ow + ox];
+                                let i00 = ibase + 2 * oy * w + 2 * ox;
+                                dxd[i00] += gv;
+                                dxd[i00 + 1] += gv;
+                                dxd[i00 + w] += gv;
+                                dxd[i00 + w + 1] += gv;
+                            }
+                        }
+                    }
+                }
+                vec![dx]
+            }
+            Op::GlobalAvgPool => {
+                let xin = input_of(&node.inputs[0], acts);
+                let (n, c) = (xin.dim(0), xin.dim(1));
+                let inner: usize = xin.shape()[2..].iter().product();
+                let mut dx = Tensor::zeros(xin.shape());
+                let dxd = dx.data_mut();
+                for ni in 0..n {
+                    for ci in 0..c {
+                        let gv = dy.data()[ni * c + ci] / inner as f32;
+                        let base = (ni * c + ci) * inner;
+                        for v in &mut dxd[base..base + inner] {
+                            *v = gv;
+                        }
+                    }
+                }
+                vec![dx]
+            }
+            Op::Upsample2 => vec![upsample2_backward(&dy)],
+            Op::Add => node.inputs.iter().map(|_| dy.clone()).collect(),
+            Op::Concat { axis } => {
+                // Split dy back along the axis.
+                let axis = *axis;
+                let mut outs = Vec::with_capacity(node.inputs.len());
+                let mut offset = 0usize;
+                let total_axis = dy.dim(axis);
+                let outer: usize = dy.shape()[..axis].iter().product();
+                let inner: usize = dy.shape()[axis + 1..].iter().product();
+                for inp in &node.inputs {
+                    let xin = input_of(inp, acts);
+                    let a = xin.dim(axis);
+                    let mut part = Tensor::zeros(xin.shape());
+                    let pd = part.data_mut();
+                    for o in 0..outer {
+                        let src = (o * total_axis + offset) * inner;
+                        let dst = o * a * inner;
+                        pd[dst..dst + a * inner]
+                            .copy_from_slice(&dy.data()[src..src + a * inner]);
+                    }
+                    offset += a;
+                    outs.push(part);
+                }
+                outs
+            }
+            Op::Flatten => {
+                let xin = input_of(&node.inputs[0], acts);
+                vec![dy.reshape(xin.shape())]
+            }
+            Op::Lstm {
+                w_hh,
+                bias,
+                hidden,
+                reverse,
+                ..
+            } => {
+                let xin = input_of(&node.inputs[0], acts);
+                let (dx, dw_ih, dw_hh, db) = super::lstm::lstm_backward(
+                    &xin, weight(), w_hh, bias, *hidden, *reverse, &dy,
+                );
+                grads[idx].weight = Some(dw_ih);
+                grads[idx].weight2 = Some(dw_hh);
+                grads[idx].bias = Some(db);
+                vec![dx]
+            }
+        };
+        // Accumulate into producers.
+        for (inp, d_in) in node.inputs.iter().zip(d_ins) {
+            match inp {
+                Input::Graph => {
+                    d_input = Some(match d_input.take() {
+                        Some(acc) => acc.add(&d_in),
+                        None => d_in,
+                    });
+                }
+                Input::Node(j) => {
+                    d_acts[*j] = Some(match d_acts[*j].take() {
+                        Some(acc) => acc.add(&d_in),
+                        None => d_in,
+                    });
+                }
+            }
+        }
+    }
+
+    GraphGrads {
+        nodes: grads,
+        input: d_input.unwrap_or_else(|| Tensor::zeros(x.shape())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Graph, Input, Op};
+    use crate::rng::Rng;
+    use crate::tensor::Conv2dSpec;
+
+    /// Scalar loss = sum of graph output; compare analytic grads to central
+    /// finite differences for every parameter of a small but structurally
+    /// complete model (conv, dwconv, bn, relu6, residual add, pools, fc).
+    #[test]
+    fn full_graph_finite_difference() {
+        let mut rng = Rng::new(1);
+        let mut g = Graph::new();
+        g.push(
+            "conv1",
+            Op::Conv2d {
+                weight: Tensor::randn(&mut rng, &[4, 2, 3, 3], 0.3),
+                bias: rng.normal_vec(4, 0.1),
+                spec: Conv2dSpec::same(3),
+            },
+        );
+        g.push(
+            "bn1",
+            Op::BatchNorm {
+                gamma: vec![1.1, 0.9, 1.0, 1.2],
+                beta: vec![0.1, -0.1, 0.0, 0.2],
+                mean: vec![0.2, 0.0, -0.1, 0.1],
+                var: vec![1.0, 0.8, 1.2, 0.9],
+                eps: 1e-5,
+            },
+        );
+        g.push("relu6", Op::Relu6);
+        let dw = g.push(
+            "dw1",
+            Op::DepthwiseConv2d {
+                weight: Tensor::randn(&mut rng, &[4, 1, 3, 3], 0.3),
+                bias: rng.normal_vec(4, 0.1),
+                spec: Conv2dSpec::same(3),
+            },
+        );
+        let relu = g.push("relu2", Op::Relu);
+        g.push_with("res", Op::Add, vec![Input::Node(relu), Input::Node(dw - 1)]);
+        g.push("pool", Op::AvgPool2);
+        g.push("gap", Op::GlobalAvgPool);
+        g.push(
+            "fc",
+            Op::Linear {
+                weight: Tensor::randn(&mut rng, &[3, 4], 0.4),
+                bias: rng.normal_vec(3, 0.1),
+            },
+        );
+
+        let x = Tensor::randn(&mut rng, &[2, 2, 4, 4], 1.0);
+        let acts = g.forward_all(&x);
+        let dy = Tensor::full(acts.last().unwrap().shape(), 1.0);
+        let grads = backward(&g, &x, &acts, &dy, &[]);
+
+        let loss = |g: &Graph| -> f32 { g.forward(&x).data().iter().sum() };
+        let eps = 1e-2;
+
+        // Weight grads for conv1, dw1, fc.
+        for (name, probe) in [("conv1", 5usize), ("dw1", 9), ("fc", 3)] {
+            let idx = g.find(name).unwrap();
+            let mut gp = g.clone();
+            gp.nodes[idx].op.weight_mut().unwrap().data_mut()[probe] += eps;
+            let mut gm = g.clone();
+            gm.nodes[idx].op.weight_mut().unwrap().data_mut()[probe] -= eps;
+            let num = (loss(&gp) - loss(&gm)) / (2.0 * eps);
+            let ana = grads.nodes[idx].weight.as_ref().unwrap().data()[probe];
+            assert!(
+                (num - ana).abs() < 0.05 * (1.0 + num.abs()),
+                "{name}[{probe}]: fd {num} vs analytic {ana}"
+            );
+        }
+        // Bias grads.
+        for name in ["conv1", "dw1", "fc"] {
+            let idx = g.find(name).unwrap();
+            let mut gp = g.clone();
+            gp.nodes[idx].op.bias_mut().unwrap()[0] += eps;
+            let mut gm = g.clone();
+            gm.nodes[idx].op.bias_mut().unwrap()[0] -= eps;
+            let num = (loss(&gp) - loss(&gm)) / (2.0 * eps);
+            let ana = grads.nodes[idx].bias.as_ref().unwrap()[0];
+            assert!(
+                (num - ana).abs() < 0.05 * (1.0 + num.abs()),
+                "{name} bias: fd {num} vs analytic {ana}"
+            );
+        }
+        // BN gamma/beta.
+        let bn = g.find("bn1").unwrap();
+        for (field, ana) in [
+            ("gamma", grads.nodes[bn].gamma.as_ref().unwrap()[1]),
+            ("beta", grads.nodes[bn].beta.as_ref().unwrap()[1]),
+        ] {
+            let bump = |gg: &mut Graph, delta: f32| {
+                if let Op::BatchNorm { gamma, beta, .. } = &mut gg.nodes[bn].op {
+                    match field {
+                        "gamma" => gamma[1] += delta,
+                        _ => beta[1] += delta,
+                    }
+                }
+            };
+            let mut gp = g.clone();
+            bump(&mut gp, eps);
+            let mut gm = g.clone();
+            bump(&mut gm, -eps);
+            let num = (loss(&gp) - loss(&gm)) / (2.0 * eps);
+            assert!(
+                (num - ana).abs() < 0.05 * (1.0 + num.abs()),
+                "bn {field}: fd {num} vs analytic {ana}"
+            );
+        }
+    }
+
+    #[test]
+    fn input_gradient_flows() {
+        let mut rng = Rng::new(2);
+        let mut g = Graph::new();
+        g.push(
+            "fc",
+            Op::Linear {
+                weight: Tensor::randn(&mut rng, &[2, 3], 0.5),
+                bias: vec![0.0; 2],
+            },
+        );
+        let x = Tensor::randn(&mut rng, &[1, 3], 1.0);
+        let acts = g.forward_all(&x);
+        let dy = Tensor::full(&[1, 2], 1.0);
+        let grads = backward(&g, &x, &acts, &dy, &[]);
+        // d input = column sums of W.
+        let w = g.nodes[0].op.weight().unwrap();
+        for j in 0..3 {
+            let want = w.data()[j] + w.data()[3 + j];
+            assert!((grads.input.data()[j] - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn weight_override_changes_grads() {
+        // STE: gradient of the input must be computed with the overridden
+        // (quantized) weight, not the stored one.
+        let mut rng = Rng::new(3);
+        let mut g = Graph::new();
+        g.push(
+            "fc",
+            Op::Linear {
+                weight: Tensor::randn(&mut rng, &[1, 2], 1.0),
+                bias: vec![0.0],
+            },
+        );
+        let x = Tensor::new(&[1, 2], vec![1.0, 1.0]);
+        let acts = g.forward_all(&x);
+        let dy = Tensor::full(&[1, 1], 1.0);
+        let zero_w = Tensor::zeros(&[1, 2]);
+        let grads = backward(&g, &x, &acts, &dy, &[Some(zero_w)]);
+        assert_eq!(grads.input.data(), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn maxpool_concat_upsample_paths() {
+        let mut rng = Rng::new(4);
+        let mut g = Graph::new();
+        let a = g.push("pool", Op::MaxPool2);
+        let b = g.push_with("up", Op::Upsample2, vec![Input::Node(a)]);
+        g.push_with(
+            "cat",
+            Op::Concat { axis: 1 },
+            vec![Input::Node(b), Input::Graph],
+        );
+        let x = Tensor::randn(&mut rng, &[1, 2, 4, 4], 1.0);
+        let acts = g.forward_all(&x);
+        assert_eq!(acts.last().unwrap().shape(), &[1, 4, 4, 4]);
+        let dy = Tensor::full(&[1, 4, 4, 4], 1.0);
+        let grads = backward(&g, &x, &acts, &dy, &[]);
+        // Graph input receives grad from both the concat branch (ones) and
+        // the pooled/upsampled branch (4 per max location).
+        assert_eq!(grads.input.shape(), x.shape());
+        let total: f32 = grads.input.data().iter().sum();
+        // concat direct: 32 ones; pool/upsample path: 8 max positions × 4.
+        assert!((total - (32.0 + 32.0)).abs() < 1e-4, "total {total}");
+    }
+}

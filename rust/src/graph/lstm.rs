@@ -1,0 +1,288 @@
+//! LSTM forward (inference) — the recurrent substrate behind Table 5.2
+//! (DeepSpeech2-style bi-directional LSTM QAT).
+//!
+//! Gate order follows the common (i, f, g, o) convention; the JAX model in
+//! `python/compile/model.py` uses the same packing so weights interchange.
+
+use crate::tensor::{matmul_a_bt, Tensor};
+
+/// Run an LSTM over `x` of shape [N, T, F] producing [N, T, H].
+///
+/// `w_ih` is [4H, F], `w_hh` is [4H, H], `bias` is [4H]. With `reverse` the
+/// sequence is processed back-to-front (the output remains time-aligned
+/// with the input, as in standard bidirectional stacks).
+pub fn lstm_forward(
+    x: &Tensor,
+    w_ih: &Tensor,
+    w_hh: &Tensor,
+    bias: &[f32],
+    hidden: usize,
+    reverse: bool,
+) -> Tensor {
+    let (n, t, f) = (x.dim(0), x.dim(1), x.dim(2));
+    let h4 = 4 * hidden;
+    assert_eq!(w_ih.shape(), &[h4, f], "w_ih shape");
+    assert_eq!(w_hh.shape(), &[h4, hidden], "w_hh shape");
+    assert_eq!(bias.len(), h4);
+
+    // Precompute input projections for all timesteps at once:
+    // [N*T, F] · w_ihᵀ -> [N*T, 4H]. This is the batched hot path.
+    let x2 = x.reshape(&[n * t, f]);
+    let xproj = matmul_a_bt(&x2, w_ih); // [N*T, 4H]
+
+    let mut h_state = vec![0.0f32; n * hidden];
+    let mut c_state = vec![0.0f32; n * hidden];
+    let mut out = vec![0.0f32; n * t * hidden];
+
+    let steps: Vec<usize> = if reverse {
+        (0..t).rev().collect()
+    } else {
+        (0..t).collect()
+    };
+
+    for &ti in &steps {
+        // Recurrent projection: [N, H] · w_hhᵀ -> [N, 4H].
+        let hmat = Tensor::new(&[n, hidden], h_state.clone());
+        let hproj = matmul_a_bt(&hmat, w_hh);
+        for ni in 0..n {
+            let xrow = &xproj.data()[(ni * t + ti) * h4..(ni * t + ti + 1) * h4];
+            let hrow = &hproj.data()[ni * h4..(ni + 1) * h4];
+            for hi in 0..hidden {
+                let pre_i = xrow[hi] + hrow[hi] + bias[hi];
+                let pre_f = xrow[hidden + hi] + hrow[hidden + hi] + bias[hidden + hi];
+                let pre_g = xrow[2 * hidden + hi] + hrow[2 * hidden + hi] + bias[2 * hidden + hi];
+                let pre_o = xrow[3 * hidden + hi] + hrow[3 * hidden + hi] + bias[3 * hidden + hi];
+                let i_g = sigmoid(pre_i);
+                let f_g = sigmoid(pre_f);
+                let g_g = pre_g.tanh();
+                let o_g = sigmoid(pre_o);
+                let c = f_g * c_state[ni * hidden + hi] + i_g * g_g;
+                let h = o_g * c.tanh();
+                c_state[ni * hidden + hi] = c;
+                h_state[ni * hidden + hi] = h;
+                out[(ni * t + ti) * hidden + hi] = h;
+            }
+        }
+    }
+    Tensor::new(&[n, t, hidden], out)
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// LSTM backward (truncated-nowhere BPTT) — enables QAT on the recurrent
+/// models of Table 5.2. Gates are *recomputed* during the backward pass
+/// (memory-lean rematerialization: the forward only caches outputs).
+///
+/// Returns `(dx, d_w_ih, d_w_hh, d_bias)` for upstream gradient `dy` of
+/// shape [N, T, H].
+#[allow(clippy::too_many_arguments)]
+pub fn lstm_backward(
+    x: &Tensor,
+    w_ih: &Tensor,
+    w_hh: &Tensor,
+    bias: &[f32],
+    hidden: usize,
+    reverse: bool,
+    dy: &Tensor,
+) -> (Tensor, Tensor, Tensor, Vec<f32>) {
+    let (n, t, f) = (x.dim(0), x.dim(1), x.dim(2));
+    let h4 = 4 * hidden;
+    assert_eq!(dy.shape(), &[n, t, hidden]);
+
+    // --- Rematerialized forward, caching gates and cell states. ---------
+    let x2 = x.reshape(&[n * t, f]);
+    let xproj = matmul_a_bt(&x2, w_ih); // [N*T, 4H]
+    let steps: Vec<usize> = if reverse {
+        (0..t).rev().collect()
+    } else {
+        (0..t).collect()
+    };
+    let mut h_state = vec![0.0f32; n * hidden];
+    let mut c_state = vec![0.0f32; n * hidden];
+    // Per processed step s: gates [N,4H] (post-nonlinearity), c_prev, c.
+    let mut gates = vec![0.0f32; t * n * h4];
+    let mut c_all = vec![0.0f32; t * n * hidden];
+    let mut c_prev_all = vec![0.0f32; t * n * hidden];
+    let mut h_prev_all = vec![0.0f32; t * n * hidden];
+    for (s, &ti) in steps.iter().enumerate() {
+        h_prev_all[s * n * hidden..(s + 1) * n * hidden].copy_from_slice(&h_state);
+        c_prev_all[s * n * hidden..(s + 1) * n * hidden].copy_from_slice(&c_state);
+        let hmat = Tensor::new(&[n, hidden], h_state.clone());
+        let hproj = matmul_a_bt(&hmat, w_hh);
+        for ni in 0..n {
+            let xrow = &xproj.data()[(ni * t + ti) * h4..(ni * t + ti + 1) * h4];
+            let hrow = &hproj.data()[ni * h4..(ni + 1) * h4];
+            for hi in 0..hidden {
+                let i_g = sigmoid(xrow[hi] + hrow[hi] + bias[hi]);
+                let f_g =
+                    sigmoid(xrow[hidden + hi] + hrow[hidden + hi] + bias[hidden + hi]);
+                let g_g = (xrow[2 * hidden + hi] + hrow[2 * hidden + hi]
+                    + bias[2 * hidden + hi])
+                    .tanh();
+                let o_g =
+                    sigmoid(xrow[3 * hidden + hi] + hrow[3 * hidden + hi] + bias[3 * hidden + hi]);
+                let c = f_g * c_state[ni * hidden + hi] + i_g * g_g;
+                let gb = s * n * h4 + ni * h4;
+                gates[gb + hi] = i_g;
+                gates[gb + hidden + hi] = f_g;
+                gates[gb + 2 * hidden + hi] = g_g;
+                gates[gb + 3 * hidden + hi] = o_g;
+                c_all[s * n * hidden + ni * hidden + hi] = c;
+                c_state[ni * hidden + hi] = c;
+                h_state[ni * hidden + hi] = o_g * c.tanh();
+            }
+        }
+    }
+
+    // --- Backward through processed steps in reverse. -------------------
+    let mut d_w_ih = Tensor::zeros(&[h4, f]);
+    let mut d_w_hh = Tensor::zeros(&[h4, hidden]);
+    let mut d_bias = vec![0.0f32; h4];
+    let mut d_x = Tensor::zeros(&[n, t, f]);
+    let mut dh_next = vec![0.0f32; n * hidden];
+    let mut dc_next = vec![0.0f32; n * hidden];
+    let dyd = dy.data();
+    for s in (0..steps.len()).rev() {
+        let ti = steps[s];
+        // Pre-activation gate grads for this step: [N, 4H].
+        let mut da = vec![0.0f32; n * h4];
+        for ni in 0..n {
+            for hi in 0..hidden {
+                let gb = s * n * h4 + ni * h4;
+                let (i_g, f_g, g_g, o_g) = (
+                    gates[gb + hi],
+                    gates[gb + hidden + hi],
+                    gates[gb + 2 * hidden + hi],
+                    gates[gb + 3 * hidden + hi],
+                );
+                let c = c_all[s * n * hidden + ni * hidden + hi];
+                let c_prev = c_prev_all[s * n * hidden + ni * hidden + hi];
+                let tc = c.tanh();
+                let dh = dyd[(ni * t + ti) * hidden + hi] + dh_next[ni * hidden + hi];
+                let mut dc = dc_next[ni * hidden + hi] + dh * o_g * (1.0 - tc * tc);
+                let d_o = dh * tc;
+                let d_i = dc * g_g;
+                let d_g = dc * i_g;
+                let d_f = dc * c_prev;
+                dc *= f_g;
+                dc_next[ni * hidden + hi] = dc;
+                da[ni * h4 + hi] = d_i * i_g * (1.0 - i_g);
+                da[ni * h4 + hidden + hi] = d_f * f_g * (1.0 - f_g);
+                da[ni * h4 + 2 * hidden + hi] = d_g * (1.0 - g_g * g_g);
+                da[ni * h4 + 3 * hidden + hi] = d_o * o_g * (1.0 - o_g);
+            }
+        }
+        let da_t = Tensor::new(&[n, h4], da);
+        // dW_ih += daᵀ · x_t ; dW_hh += daᵀ · h_prev ; db += Σ da.
+        let mut xt = Vec::with_capacity(n * f);
+        for ni in 0..n {
+            xt.extend_from_slice(&x.data()[(ni * t + ti) * f..(ni * t + ti + 1) * f]);
+        }
+        let xt = Tensor::new(&[n, f], xt);
+        let hprev = Tensor::new(
+            &[n, hidden],
+            h_prev_all[s * n * hidden..(s + 1) * n * hidden].to_vec(),
+        );
+        d_w_ih = d_w_ih.add(&crate::tensor::matmul_at_b(&da_t, &xt));
+        d_w_hh = d_w_hh.add(&crate::tensor::matmul_at_b(&da_t, &hprev));
+        for ni in 0..n {
+            for k in 0..h4 {
+                d_bias[k] += da_t.data()[ni * h4 + k];
+            }
+        }
+        // dx_t = da · W_ih ; dh_prev = da · W_hh.
+        let dxt = crate::tensor::matmul(&da_t, w_ih); // [N, F]
+        let dhp = crate::tensor::matmul(&da_t, w_hh); // [N, H]
+        let dxd = d_x.data_mut();
+        for ni in 0..n {
+            for k in 0..f {
+                dxd[(ni * t + ti) * f + k] += dxt.data()[ni * f + k];
+            }
+        }
+        dh_next.copy_from_slice(dhp.data());
+    }
+    (d_x, d_w_ih, d_w_hh, d_bias)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn small_weights(rng: &mut Rng, f: usize, h: usize) -> (Tensor, Tensor, Vec<f32>) {
+        (
+            Tensor::randn(rng, &[4 * h, f], 0.4),
+            Tensor::randn(rng, &[4 * h, h], 0.4),
+            rng.normal_vec(4 * h, 0.1),
+        )
+    }
+
+    #[test]
+    fn shapes_and_determinism() {
+        let mut rng = Rng::new(1);
+        let (wi, wh, b) = small_weights(&mut rng, 5, 3);
+        let x = Tensor::randn(&mut rng, &[2, 7, 5], 1.0);
+        let y = lstm_forward(&x, &wi, &wh, &b, 3, false);
+        assert_eq!(y.shape(), &[2, 7, 3]);
+        let y2 = lstm_forward(&x, &wi, &wh, &b, 3, false);
+        assert_eq!(y, y2);
+    }
+
+    #[test]
+    fn outputs_bounded_by_tanh() {
+        let mut rng = Rng::new(2);
+        let (wi, wh, b) = small_weights(&mut rng, 4, 6);
+        let x = Tensor::randn(&mut rng, &[1, 10, 4], 5.0);
+        let y = lstm_forward(&x, &wi, &wh, &b, 6, false);
+        assert!(y.data().iter().all(|v| v.abs() <= 1.0));
+    }
+
+    #[test]
+    fn reverse_mirrors_time() {
+        // Reversing the input sequence and the direction must give the
+        // time-mirrored output.
+        let mut rng = Rng::new(3);
+        let (wi, wh, b) = small_weights(&mut rng, 3, 2);
+        let t = 5;
+        let x = Tensor::randn(&mut rng, &[1, t, 3], 1.0);
+        // x reversed along time.
+        let mut xrev = vec![0.0f32; x.len()];
+        for ti in 0..t {
+            xrev[(t - 1 - ti) * 3..(t - ti) * 3].copy_from_slice(&x.data()[ti * 3..(ti + 1) * 3]);
+        }
+        let xrev = Tensor::new(&[1, t, 3], xrev);
+        let fwd_on_rev = lstm_forward(&xrev, &wi, &wh, &b, 2, false);
+        let rev_on_orig = lstm_forward(&x, &wi, &wh, &b, 2, true);
+        for ti in 0..t {
+            let a = &fwd_on_rev.data()[(t - 1 - ti) * 2..(t - ti) * 2];
+            let bslice = &rev_on_orig.data()[ti * 2..(ti + 1) * 2];
+            for (u, v) in a.iter().zip(bslice) {
+                assert!((u - v).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn first_step_matches_hand_rolled_cell() {
+        // Single timestep, zero initial state: out = o⊙tanh(i⊙g).
+        let mut rng = Rng::new(4);
+        let (wi, wh, b) = small_weights(&mut rng, 2, 1);
+        let x = Tensor::new(&[1, 1, 2], vec![0.3, -0.7]);
+        let y = lstm_forward(&x, &wi, &wh, &b, 1, false);
+        let pre: Vec<f32> = (0..4)
+            .map(|g| wi.data()[g * 2] * 0.3 + wi.data()[g * 2 + 1] * -0.7 + b[g])
+            .collect();
+        let (i_g, f_g, g_g, o_g) = (
+            sigmoid(pre[0]),
+            sigmoid(pre[1]),
+            pre[2].tanh(),
+            sigmoid(pre[3]),
+        );
+        let _ = f_g;
+        let want = o_g * (i_g * g_g).tanh();
+        assert!((y.data()[0] - want).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,737 @@
+//! Model-graph IR — the structure AIMET's algorithms operate on.
+//!
+//! A [`Graph`] is a topologically-ordered list of [`Node`]s; each node
+//! consumes the graph input or earlier node outputs. This mirrors the
+//! "model definition" AIMET walks when it inserts quantization simulation
+//! ops (§3.1), folds batch norms (§3.2), pattern-matches CLE pairs (§4.3),
+//! and so on. The JAX L2 models in `python/compile/model.py` are built from
+//! the same node list (see [`crate::zoo`]), which is what lets the PJRT and
+//! Rust engines cross-validate.
+
+mod backward;
+mod lstm;
+mod serde;
+
+pub use backward::{backward, backward_train, GraphGrads, NodeGrads};
+pub use lstm::{lstm_backward, lstm_forward};
+pub use serde::{load_graph, save_graph};
+
+use crate::tensor::{
+    avg_pool2, conv2d, depthwise_conv2d, global_avg_pool, max_pool2, upsample2, Conv2dSpec,
+    Tensor,
+};
+
+/// Where a node's input comes from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Input {
+    /// The graph's external input tensor.
+    Graph,
+    /// Output of an earlier node (index into `Graph::nodes`).
+    Node(usize),
+}
+
+/// Layer operations. Parameter-carrying ops hold their tensors inline —
+/// AIMET's algorithms are weight *surgery* (CLE rescales, BC shifts biases,
+/// AdaRound rewrites rounding), so the IR owns the parameters.
+#[derive(Debug, Clone)]
+pub enum Op {
+    /// weight [O,I,kh,kw]
+    Conv2d {
+        weight: Tensor,
+        bias: Vec<f32>,
+        spec: Conv2dSpec,
+    },
+    /// weight [C,1,kh,kw]
+    DepthwiseConv2d {
+        weight: Tensor,
+        bias: Vec<f32>,
+        spec: Conv2dSpec,
+    },
+    /// weight [O,F]; input [..., F] (leading dims flattened)
+    Linear { weight: Tensor, bias: Vec<f32> },
+    /// Inference-form batch norm over the channel axis (axis 1).
+    BatchNorm {
+        gamma: Vec<f32>,
+        beta: Vec<f32>,
+        mean: Vec<f32>,
+        var: Vec<f32>,
+        eps: f32,
+    },
+    Relu,
+    Relu6,
+    MaxPool2,
+    AvgPool2,
+    GlobalAvgPool,
+    Upsample2,
+    /// Elementwise sum of all inputs (residual connections, §7.3.1).
+    Add,
+    /// Concatenation along `axis` (§7.3.1).
+    Concat { axis: usize },
+    /// Flatten to [N, rest].
+    Flatten,
+    /// Unidirectional LSTM over [N,T,F] → [N,T,H]. Bi-LSTM = two of these
+    /// (one `reverse`) + Concat{axis:2}.
+    Lstm {
+        /// [4H, F] input-to-hidden (gate order i,f,g,o)
+        w_ih: Tensor,
+        /// [4H, H] hidden-to-hidden
+        w_hh: Tensor,
+        bias: Vec<f32>,
+        hidden: usize,
+        reverse: bool,
+    },
+}
+
+impl Op {
+    /// Kind string used by config op_type rules, serialization, and
+    /// encodings export.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Op::Conv2d { .. } => "Conv2d",
+            Op::DepthwiseConv2d { .. } => "DepthwiseConv2d",
+            Op::Linear { .. } => "Linear",
+            Op::BatchNorm { .. } => "BatchNorm",
+            Op::Relu => "Relu",
+            Op::Relu6 => "Relu6",
+            Op::MaxPool2 => "MaxPool2",
+            Op::AvgPool2 => "AvgPool2",
+            Op::GlobalAvgPool => "GlobalAvgPool",
+            Op::Upsample2 => "Upsample2",
+            Op::Add => "Add",
+            Op::Concat { .. } => "Concat",
+            Op::Flatten => "Flatten",
+            Op::Lstm { .. } => "Lstm",
+        }
+    }
+
+    /// The quantizable weight tensor, if any. LSTM exposes `w_ih` here and
+    /// `w_hh` via [`Op::weight2`].
+    pub fn weight(&self) -> Option<&Tensor> {
+        match self {
+            Op::Conv2d { weight, .. }
+            | Op::DepthwiseConv2d { weight, .. }
+            | Op::Linear { weight, .. }
+            | Op::Lstm { w_ih: weight, .. } => Some(weight),
+            _ => None,
+        }
+    }
+
+    pub fn weight_mut(&mut self) -> Option<&mut Tensor> {
+        match self {
+            Op::Conv2d { weight, .. }
+            | Op::DepthwiseConv2d { weight, .. }
+            | Op::Linear { weight, .. }
+            | Op::Lstm { w_ih: weight, .. } => Some(weight),
+            _ => None,
+        }
+    }
+
+    /// Second weight (LSTM recurrent weights).
+    pub fn weight2(&self) -> Option<&Tensor> {
+        match self {
+            Op::Lstm { w_hh, .. } => Some(w_hh),
+            _ => None,
+        }
+    }
+
+    pub fn bias(&self) -> Option<&[f32]> {
+        match self {
+            Op::Conv2d { bias, .. }
+            | Op::DepthwiseConv2d { bias, .. }
+            | Op::Linear { bias, .. }
+            | Op::Lstm { bias, .. } => Some(bias),
+            _ => None,
+        }
+    }
+
+    pub fn bias_mut(&mut self) -> Option<&mut Vec<f32>> {
+        match self {
+            Op::Conv2d { bias, .. }
+            | Op::DepthwiseConv2d { bias, .. }
+            | Op::Linear { bias, .. }
+            | Op::Lstm { bias, .. } => Some(bias),
+            _ => None,
+        }
+    }
+
+    /// Output channel count for weighted layers (per-channel quant axis 0).
+    pub fn out_channels(&self) -> Option<usize> {
+        match self {
+            Op::Conv2d { weight, .. } | Op::DepthwiseConv2d { weight, .. } => Some(weight.dim(0)),
+            Op::Linear { weight, .. } => Some(weight.dim(0)),
+            _ => None,
+        }
+    }
+
+    /// True for ops whose output is data-dependent and therefore carries an
+    /// activation quantizer in the simulation (§3.1). Pure-reshape ops do
+    /// not requantize; max-pool preserves the input grid (§7.3.1).
+    pub fn requantizes_output(&self) -> bool {
+        !matches!(self, Op::Flatten | Op::MaxPool2)
+    }
+
+    pub fn is_weighted(&self) -> bool {
+        self.weight().is_some()
+    }
+}
+
+/// A named node. `name`s are unique within a graph and keyed by the
+/// encodings export and the runtime-config op-level overrides.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub name: String,
+    pub op: Op,
+    pub inputs: Vec<Input>,
+}
+
+/// A model graph in topological order.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+    /// Index of the output node (defaults to the last node).
+    pub output: usize,
+}
+
+impl Graph {
+    pub fn new() -> Graph {
+        Graph {
+            nodes: Vec::new(),
+            output: 0,
+        }
+    }
+
+    /// Append a node consuming the previous node (or the graph input when
+    /// empty); returns its index. The common sequential case.
+    pub fn push(&mut self, name: &str, op: Op) -> usize {
+        let input = if self.nodes.is_empty() {
+            Input::Graph
+        } else {
+            Input::Node(self.nodes.len() - 1)
+        };
+        self.push_with(name, op, vec![input])
+    }
+
+    /// Append a node with explicit inputs; returns its index.
+    pub fn push_with(&mut self, name: &str, op: Op, inputs: Vec<Input>) -> usize {
+        for i in &inputs {
+            if let Input::Node(idx) = i {
+                assert!(*idx < self.nodes.len(), "forward reference in graph");
+            }
+        }
+        debug_assert!(
+            self.nodes.iter().all(|n| n.name != name),
+            "duplicate node name {name}"
+        );
+        self.nodes.push(Node {
+            name: name.to_string(),
+            op,
+            inputs,
+        });
+        self.output = self.nodes.len() - 1;
+        self.output
+    }
+
+    pub fn find(&self, name: &str) -> Option<usize> {
+        self.nodes.iter().position(|n| n.name == name)
+    }
+
+    /// Remove node `idx`, rewiring its consumers to its first input (only
+    /// valid for single-input pass-through-shaped nodes — e.g. a BatchNorm
+    /// being folded away, §3.2). All later node indices shift down by one.
+    pub fn remove_node(&mut self, idx: usize) {
+        assert!(idx < self.nodes.len());
+        let replacement = self.nodes[idx].inputs[0];
+        for node in &mut self.nodes {
+            for input in &mut node.inputs {
+                if let Input::Node(j) = input {
+                    if *j == idx {
+                        *input = replacement;
+                    } else if *j > idx {
+                        *input = Input::Node(*j - 1);
+                    }
+                }
+            }
+        }
+        self.nodes.remove(idx);
+        if self.output == idx {
+            self.output = match replacement {
+                Input::Node(j) => j,
+                Input::Graph => 0,
+            };
+        } else if self.output > idx {
+            self.output -= 1;
+        }
+    }
+
+    /// Consumers of node `idx`.
+    pub fn consumers(&self, idx: usize) -> Vec<usize> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.inputs.contains(&Input::Node(idx)))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.nodes
+            .iter()
+            .map(|n| {
+                n.op.weight().map(|w| w.len()).unwrap_or(0)
+                    + n.op.weight2().map(|w| w.len()).unwrap_or(0)
+                    + n.op.bias().map(|b| b.len()).unwrap_or(0)
+                    + match &n.op {
+                        Op::BatchNorm { gamma, .. } => 4 * gamma.len(),
+                        _ => 0,
+                    }
+            })
+            .sum()
+    }
+
+    /// Plain forward pass; returns the output tensor.
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        self.forward_hooked(x, &mut NoHook).remove(self.output)
+    }
+
+    /// Forward pass retaining every node's output (calibration, empirical
+    /// bias correction and AdaRound need intermediate activations).
+    pub fn forward_all(&self, x: &Tensor) -> Vec<Tensor> {
+        self.forward_hooked(x, &mut NoHook)
+    }
+
+    /// Forward pass with a [`ForwardHook`] — the mechanism quantization
+    /// simulation uses to wrap weights and activations with qdq ops without
+    /// rewriting the graph (fig 3.1's quantizer nodes).
+    pub fn forward_hooked(&self, x: &Tensor, hook: &mut dyn ForwardHook) -> Vec<Tensor> {
+        let gx = hook.on_graph_input(x);
+        let mut acts: Vec<Tensor> = Vec::with_capacity(self.nodes.len());
+        for (idx, node) in self.nodes.iter().enumerate() {
+            let ins: Vec<&Tensor> = node
+                .inputs
+                .iter()
+                .map(|i| match i {
+                    Input::Graph => &gx,
+                    Input::Node(j) => &acts[*j],
+                })
+                .collect();
+            let y = eval_node(idx, node, &ins, hook);
+            let y = hook.on_output(idx, node, y);
+            acts.push(y);
+        }
+        acts
+    }
+
+    /// Training-mode forward: BatchNorm nodes normalize with *batch*
+    /// statistics (and update their running `mean`/`var` fields with
+    /// `momentum`), exactly like framework BN in train mode. Returns each
+    /// node's output plus the batch stats the backward pass needs.
+    ///
+    /// This is what keeps trained activations normalized — without it the
+    /// zoo's ReLU6 layers saturate during training and CLE's ReLU6→ReLU
+    /// replacement (§4.3.1) would change the learned function.
+    pub fn forward_train(
+        &mut self,
+        x: &Tensor,
+        momentum: f32,
+    ) -> (Vec<Tensor>, Vec<Option<BnBatchStats>>) {
+        let mut acts: Vec<Tensor> = Vec::with_capacity(self.nodes.len());
+        let mut stats: Vec<Option<BnBatchStats>> = vec![None; self.nodes.len()];
+        for idx in 0..self.nodes.len() {
+            let ins: Vec<Tensor> = self.nodes[idx]
+                .inputs
+                .iter()
+                .map(|i| match i {
+                    Input::Graph => x.clone(),
+                    Input::Node(j) => acts[*j].clone(),
+                })
+                .collect();
+            let in_refs: Vec<&Tensor> = ins.iter().collect();
+            let y = if let Op::BatchNorm {
+                gamma,
+                beta,
+                mean,
+                var,
+                eps,
+            } = &mut self.nodes[idx].op
+            {
+                let xin = in_refs[0];
+                let (mu, v) = batch_stats(xin);
+                for c in 0..mu.len() {
+                    mean[c] = momentum * mean[c] + (1.0 - momentum) * mu[c];
+                    var[c] = momentum * var[c] + (1.0 - momentum) * v[c];
+                }
+                let y = batchnorm_forward(xin, gamma, beta, &mu, &v, *eps);
+                stats[idx] = Some(BnBatchStats { mean: mu, var: v });
+                y
+            } else {
+                eval_node(idx, &self.nodes[idx], &in_refs, &mut NoHook)
+            };
+            acts.push(y);
+        }
+        (acts, stats)
+    }
+
+    /// Shape dry-run: forward on a zero tensor, returning each node's
+    /// output shape (model validation à la AIMET's Model Validator).
+    pub fn output_shapes(&self, input_shape: &[usize]) -> Vec<Vec<usize>> {
+        let x = Tensor::zeros(input_shape);
+        self.forward_all(&x)
+            .iter()
+            .map(|t| t.shape().to_vec())
+            .collect()
+    }
+}
+
+impl Default for Graph {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Per-batch BatchNorm statistics captured by [`Graph::forward_train`] —
+/// the exact BN backward needs them.
+#[derive(Debug, Clone)]
+pub struct BnBatchStats {
+    pub mean: Vec<f32>,
+    pub var: Vec<f32>,
+}
+
+/// Per-channel (axis 1) batch mean and (biased) variance of NCHW / [N, C].
+pub fn batch_stats(x: &Tensor) -> (Vec<f32>, Vec<f32>) {
+    let (n, c) = (x.dim(0), x.dim(1));
+    let inner: usize = x.shape()[2..].iter().product();
+    let count = (n * inner) as f32;
+    let mut mu = vec![0.0f32; c];
+    let mut v = vec![0.0f32; c];
+    let xd = x.data();
+    for ni in 0..n {
+        for ci in 0..c {
+            let base = (ni * c + ci) * inner;
+            for &val in &xd[base..base + inner] {
+                mu[ci] += val;
+            }
+        }
+    }
+    mu.iter_mut().for_each(|m| *m /= count);
+    for ni in 0..n {
+        for ci in 0..c {
+            let base = (ni * c + ci) * inner;
+            for &val in &xd[base..base + inner] {
+                let d = val - mu[ci];
+                v[ci] += d * d;
+            }
+        }
+    }
+    v.iter_mut().for_each(|x| *x /= count);
+    (mu, v)
+}
+
+/// Hook points used by quantsim / QAT to transform parameters and
+/// activations during a forward pass.
+pub trait ForwardHook {
+    /// Transform the graph input (model_input quantizer in the config).
+    fn on_graph_input(&mut self, x: &Tensor) -> Tensor {
+        x.clone()
+    }
+    /// Transform a node's weight before use (parameter quantizer).
+    fn on_weight(&mut self, _idx: usize, _node: &Node, w: &Tensor) -> Tensor {
+        w.clone()
+    }
+    /// Transform a node's output after compute (activation quantizer).
+    fn on_output(&mut self, _idx: usize, _node: &Node, y: Tensor) -> Tensor {
+        y
+    }
+}
+
+/// The identity hook.
+pub struct NoHook;
+impl ForwardHook for NoHook {}
+
+/// Evaluate one node given resolved inputs.
+fn eval_node(idx: usize, node: &Node, ins: &[&Tensor], hook: &mut dyn ForwardHook) -> Tensor {
+    let x = ins[0];
+    match &node.op {
+        Op::Conv2d { weight, bias, spec } => {
+            let w = hook.on_weight(idx, node, weight);
+            conv2d(x, &w, Some(bias), *spec)
+        }
+        Op::DepthwiseConv2d { weight, bias, spec } => {
+            let w = hook.on_weight(idx, node, weight);
+            depthwise_conv2d(x, &w, Some(bias), *spec)
+        }
+        Op::Linear { weight, bias } => {
+            let w = hook.on_weight(idx, node, weight);
+            linear_forward(x, &w, bias)
+        }
+        Op::BatchNorm {
+            gamma,
+            beta,
+            mean,
+            var,
+            eps,
+        } => batchnorm_forward(x, gamma, beta, mean, var, *eps),
+        Op::Relu => x.relu(),
+        Op::Relu6 => x.relu6(),
+        Op::MaxPool2 => max_pool2(x),
+        Op::AvgPool2 => avg_pool2(x),
+        Op::GlobalAvgPool => global_avg_pool(x),
+        Op::Upsample2 => upsample2(x),
+        Op::Add => {
+            let mut acc = ins[0].clone();
+            for other in &ins[1..] {
+                acc = acc.add(other);
+            }
+            acc
+        }
+        Op::Concat { axis } => concat_axis(ins, *axis),
+        Op::Flatten => {
+            let n = x.dim(0);
+            x.reshape(&[n, x.len() / n])
+        }
+        Op::Lstm {
+            w_ih,
+            w_hh,
+            bias,
+            hidden,
+            reverse,
+        } => {
+            let wi = hook.on_weight(idx, node, w_ih);
+            lstm_forward(x, &wi, w_hh, bias, *hidden, *reverse)
+        }
+    }
+}
+
+/// Linear over [..., F]: leading dims are flattened to a batch.
+pub fn linear_forward(x: &Tensor, weight: &Tensor, bias: &[f32]) -> Tensor {
+    let f = *x.shape().last().unwrap();
+    let (o, f2) = (weight.dim(0), weight.dim(1));
+    assert_eq!(f, f2, "linear feature mismatch");
+    let lead: usize = x.shape()[..x.rank() - 1].iter().product();
+    let x2 = x.reshape(&[lead, f]);
+    // y = x · Wᵀ + b
+    let mut y = crate::tensor::matmul_a_bt(&x2, weight);
+    let yd = y.data_mut();
+    for r in 0..lead {
+        for (c, &b) in bias.iter().enumerate().take(o) {
+            yd[r * o + c] += b;
+        }
+    }
+    let mut shape = x.shape()[..x.rank() - 1].to_vec();
+    shape.push(o);
+    y.reshape(&shape)
+}
+
+/// Inference-form batch norm over channel axis 1 of NCHW or [N, C].
+pub fn batchnorm_forward(
+    x: &Tensor,
+    gamma: &[f32],
+    beta: &[f32],
+    mean: &[f32],
+    var: &[f32],
+    eps: f32,
+) -> Tensor {
+    let c = x.dim(1);
+    assert_eq!(gamma.len(), c);
+    let inner: usize = x.shape()[2..].iter().product();
+    let n = x.dim(0);
+    let mut out = x.clone();
+    let data = out.data_mut();
+    for ni in 0..n {
+        for ci in 0..c {
+            let scale = gamma[ci] / (var[ci] + eps).sqrt();
+            let shift = beta[ci] - mean[ci] * scale;
+            let base = (ni * c + ci) * inner;
+            for v in &mut data[base..base + inner] {
+                *v = *v * scale + shift;
+            }
+        }
+    }
+    out
+}
+
+/// Concatenate along an arbitrary axis.
+pub fn concat_axis(parts: &[&Tensor], axis: usize) -> Tensor {
+    assert!(!parts.is_empty());
+    let rank = parts[0].rank();
+    for p in parts {
+        assert_eq!(p.rank(), rank);
+        for d in 0..rank {
+            if d != axis {
+                assert_eq!(p.dim(d), parts[0].dim(d), "concat dim {d}");
+            }
+        }
+    }
+    let outer: usize = parts[0].shape()[..axis].iter().product();
+    let inner: usize = parts[0].shape()[axis + 1..].iter().product();
+    let total_axis: usize = parts.iter().map(|p| p.dim(axis)).sum();
+    let mut shape = parts[0].shape().to_vec();
+    shape[axis] = total_axis;
+    let mut data = Vec::with_capacity(outer * total_axis * inner);
+    for o in 0..outer {
+        for p in parts {
+            let a = p.dim(axis);
+            let base = o * a * inner;
+            data.extend_from_slice(&p.data()[base..base + a * inner]);
+        }
+    }
+    Tensor::new(&shape, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn tiny_cnn(rng: &mut Rng) -> Graph {
+        let mut g = Graph::new();
+        g.push(
+            "conv1",
+            Op::Conv2d {
+                weight: Tensor::randn(rng, &[4, 3, 3, 3], 0.3),
+                bias: vec![0.0; 4],
+                spec: Conv2dSpec::same(3),
+            },
+        );
+        g.push(
+            "bn1",
+            Op::BatchNorm {
+                gamma: vec![1.0; 4],
+                beta: vec![0.0; 4],
+                mean: vec![0.0; 4],
+                var: vec![1.0; 4],
+                eps: 1e-5,
+            },
+        );
+        g.push("relu1", Op::Relu);
+        g.push("pool", Op::MaxPool2);
+        g.push("gap", Op::GlobalAvgPool);
+        g.push(
+            "fc",
+            Op::Linear {
+                weight: Tensor::randn(rng, &[10, 4], 0.3),
+                bias: vec![0.0; 10],
+            },
+        );
+        g
+    }
+
+    #[test]
+    fn sequential_forward_shapes() {
+        let mut rng = Rng::new(1);
+        let g = tiny_cnn(&mut rng);
+        let shapes = g.output_shapes(&[2, 3, 8, 8]);
+        assert_eq!(shapes[0], vec![2, 4, 8, 8]);
+        assert_eq!(shapes[3], vec![2, 4, 4, 4]);
+        assert_eq!(shapes[5], vec![2, 10]);
+    }
+
+    #[test]
+    fn residual_add_forward() {
+        let mut rng = Rng::new(2);
+        let mut g = Graph::new();
+        let c1 = g.push(
+            "conv1",
+            Op::Conv2d {
+                weight: Tensor::randn(&mut rng, &[4, 4, 3, 3], 0.2),
+                bias: vec![0.0; 4],
+                spec: Conv2dSpec::same(3),
+            },
+        );
+        // Residual: add(conv1(x), x)
+        g.push_with("add", Op::Add, vec![Input::Node(c1), Input::Graph]);
+        let x = Tensor::randn(&mut rng, &[1, 4, 6, 6], 1.0);
+        let y = g.forward(&x);
+        let conv_out = g.forward_all(&x)[c1].clone();
+        assert!(y.max_abs_diff(&conv_out.add(&x)) < 1e-6);
+    }
+
+    #[test]
+    fn concat_axis_mixed() {
+        let a = Tensor::new(&[1, 2, 1, 1], vec![1., 2.]);
+        let b = Tensor::new(&[1, 1, 1, 1], vec![9.]);
+        let c = concat_axis(&[&a, &b], 1);
+        assert_eq!(c.shape(), &[1, 3, 1, 1]);
+        assert_eq!(c.data(), &[1., 2., 9.]);
+        // Rank-3 concat on last axis (bi-LSTM merge).
+        let a = Tensor::new(&[1, 2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::new(&[1, 2, 1], vec![8., 9.]);
+        let c = concat_axis(&[&a, &b], 2);
+        assert_eq!(c.shape(), &[1, 2, 3]);
+        assert_eq!(c.data(), &[1., 2., 8., 3., 4., 9.]);
+    }
+
+    #[test]
+    fn batchnorm_normalizes() {
+        let x = Tensor::new(&[1, 2, 1, 2], vec![2.0, 4.0, -1.0, 1.0]);
+        let y = batchnorm_forward(
+            &x,
+            &[1.0, 2.0],
+            &[0.5, 0.0],
+            &[3.0, 0.0],
+            &[1.0, 1.0],
+            0.0,
+        );
+        // ch0: (x-3)*1 + 0.5 -> [-0.5, 1.5]; ch1: x*2 -> [-2, 2]
+        assert!(y.max_abs_diff(&Tensor::new(&[1, 2, 1, 2], vec![-0.5, 1.5, -2.0, 2.0])) < 1e-6);
+    }
+
+    #[test]
+    fn linear_rank3() {
+        let w = Tensor::new(&[2, 3], vec![1., 0., 0., 0., 1., 0.]);
+        let x = Tensor::new(&[1, 2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let y = linear_forward(&x, &w, &[10.0, 20.0]);
+        assert_eq!(y.shape(), &[1, 2, 2]);
+        assert_eq!(y.data(), &[11., 22., 14., 25.]);
+    }
+
+    #[test]
+    fn hook_sees_weights_and_outputs() {
+        struct Counting {
+            weights: usize,
+            outputs: usize,
+        }
+        impl ForwardHook for Counting {
+            fn on_weight(&mut self, _i: usize, _n: &Node, w: &Tensor) -> Tensor {
+                self.weights += 1;
+                w.clone()
+            }
+            fn on_output(&mut self, _i: usize, _n: &Node, y: Tensor) -> Tensor {
+                self.outputs += 1;
+                y
+            }
+        }
+        let mut rng = Rng::new(3);
+        let g = tiny_cnn(&mut rng);
+        let mut hook = Counting {
+            weights: 0,
+            outputs: 0,
+        };
+        g.forward_hooked(&Tensor::zeros(&[1, 3, 8, 8]), &mut hook);
+        assert_eq!(hook.weights, 2); // conv1 + fc
+        assert_eq!(hook.outputs, 6);
+    }
+
+    #[test]
+    fn consumers_and_find() {
+        let mut rng = Rng::new(4);
+        let g = tiny_cnn(&mut rng);
+        assert_eq!(g.find("relu1"), Some(2));
+        assert_eq!(g.consumers(0), vec![1]);
+        assert_eq!(g.consumers(5), Vec::<usize>::new());
+    }
+
+    #[test]
+    #[should_panic]
+    fn forward_reference_rejected() {
+        let mut g = Graph::new();
+        g.push_with("bad", Op::Add, vec![Input::Node(3)]);
+    }
+
+    #[test]
+    fn param_count_counts_everything() {
+        let mut rng = Rng::new(5);
+        let g = tiny_cnn(&mut rng);
+        // conv1: 4*3*3*3 + 4; bn: 4*4; fc: 10*4 + 10
+        assert_eq!(g.param_count(), 108 + 4 + 16 + 40 + 10);
+    }
+}

@@ -1,0 +1,361 @@
+//! Graph persistence: a JSON manifest (`<prefix>.json`) describing the
+//! topology plus a raw little-endian f32 blob (`<prefix>.bin`) holding all
+//! parameters in node order.
+//!
+//! This is the "export the model" half of `sim.export()` (§3.3) and the
+//! interchange format between the trainer (which may run via PJRT) and the
+//! PTQ pipelines. It is deliberately trivial to parse from any language.
+
+use super::{Graph, Input, Node, Op};
+use crate::json::{parse, Json};
+use crate::tensor::{Conv2dSpec, Tensor};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+/// Serialize `g` to `<prefix>.json` + `<prefix>.bin`.
+pub fn save_graph(g: &Graph, prefix: &Path) -> Result<()> {
+    let mut blob: Vec<f32> = Vec::new();
+    let mut nodes = Vec::new();
+    for node in &g.nodes {
+        let mut j = Json::obj();
+        j.set("name", Json::from(node.name.as_str()));
+        j.set("kind", Json::from(node.op.kind()));
+        j.set(
+            "inputs",
+            Json::Arr(
+                node.inputs
+                    .iter()
+                    .map(|i| match i {
+                        Input::Graph => Json::from("graph"),
+                        Input::Node(n) => Json::from(*n),
+                    })
+                    .collect(),
+            ),
+        );
+        let mut attrs = Json::obj();
+        match &node.op {
+            Op::Conv2d { weight, bias, spec } | Op::DepthwiseConv2d { weight, bias, spec } => {
+                attrs.set(
+                    "weight_shape",
+                    Json::Arr(weight.shape().iter().map(|&d| Json::from(d)).collect()),
+                );
+                attrs.set("stride", Json::from(spec.stride));
+                attrs.set("pad", Json::from(spec.pad));
+                blob.extend_from_slice(weight.data());
+                blob.extend_from_slice(bias);
+            }
+            Op::Linear { weight, bias } => {
+                attrs.set(
+                    "weight_shape",
+                    Json::Arr(weight.shape().iter().map(|&d| Json::from(d)).collect()),
+                );
+                blob.extend_from_slice(weight.data());
+                blob.extend_from_slice(bias);
+            }
+            Op::BatchNorm {
+                gamma,
+                beta,
+                mean,
+                var,
+                eps,
+            } => {
+                attrs.set("channels", Json::from(gamma.len()));
+                attrs.set("eps", Json::from(*eps as f64));
+                blob.extend_from_slice(gamma);
+                blob.extend_from_slice(beta);
+                blob.extend_from_slice(mean);
+                blob.extend_from_slice(var);
+            }
+            Op::Concat { axis } => {
+                attrs.set("axis", Json::from(*axis));
+            }
+            Op::Lstm {
+                w_ih,
+                w_hh,
+                bias,
+                hidden,
+                reverse,
+            } => {
+                attrs.set("hidden", Json::from(*hidden));
+                attrs.set("features", Json::from(w_ih.dim(1)));
+                attrs.set("reverse", Json::from(*reverse));
+                blob.extend_from_slice(w_ih.data());
+                blob.extend_from_slice(w_hh.data());
+                blob.extend_from_slice(bias);
+            }
+            _ => {}
+        }
+        j.set("attrs", attrs);
+        nodes.push(j);
+    }
+    let mut root = Json::obj();
+    root.set("format", Json::from("aimet-rs/graph/v1"));
+    root.set("nodes", Json::Arr(nodes));
+    root.set("output", Json::from(g.output));
+    root.set("param_floats", Json::from(blob.len()));
+
+    let json_path = prefix.with_extension("json");
+    let bin_path = prefix.with_extension("bin");
+    std::fs::write(&json_path, root.pretty())
+        .with_context(|| format!("writing {}", json_path.display()))?;
+    let bytes: Vec<u8> = blob.iter().flat_map(|f| f.to_le_bytes()).collect();
+    std::fs::write(&bin_path, bytes).with_context(|| format!("writing {}", bin_path.display()))?;
+    Ok(())
+}
+
+/// Load a graph saved by [`save_graph`].
+pub fn load_graph(prefix: &Path) -> Result<Graph> {
+    let json_path = prefix.with_extension("json");
+    let bin_path = prefix.with_extension("bin");
+    let text = std::fs::read_to_string(&json_path)
+        .with_context(|| format!("reading {}", json_path.display()))?;
+    let root = parse(&text).map_err(|e| anyhow!("parsing {}: {e}", json_path.display()))?;
+    if root.get("format").and_then(|f| f.as_str()) != Some("aimet-rs/graph/v1") {
+        bail!("unrecognized graph format");
+    }
+    let bytes =
+        std::fs::read(&bin_path).with_context(|| format!("reading {}", bin_path.display()))?;
+    if bytes.len() % 4 != 0 {
+        bail!("blob length not a multiple of 4");
+    }
+    let blob: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    let mut cursor = 0usize;
+    let mut take = |n: usize| -> Result<Vec<f32>> {
+        if cursor + n > blob.len() {
+            bail!("parameter blob truncated at float {cursor} (+{n})");
+        }
+        let out = blob[cursor..cursor + n].to_vec();
+        cursor += n;
+        Ok(out)
+    };
+
+    let mut g = Graph::new();
+    let nodes = root
+        .get("nodes")
+        .and_then(|n| n.as_arr())
+        .ok_or_else(|| anyhow!("missing nodes"))?;
+    for nj in nodes {
+        let name = nj
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("node missing name"))?
+            .to_string();
+        let kind = nj
+            .get("kind")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("node missing kind"))?;
+        let inputs: Vec<Input> = nj
+            .get("inputs")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("node missing inputs"))?
+            .iter()
+            .map(|i| match i {
+                Json::Str(s) if s == "graph" => Ok(Input::Graph),
+                Json::Num(n) => Ok(Input::Node(*n as usize)),
+                other => Err(anyhow!("bad input ref {other:?}")),
+            })
+            .collect::<Result<_>>()?;
+        let attrs = nj.get("attrs").cloned().unwrap_or_else(Json::obj);
+        let shape = |key: &str| -> Result<Vec<usize>> {
+            attrs
+                .get(key)
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().map(|d| d.as_f64().unwrap_or(0.0) as usize).collect())
+                .ok_or_else(|| anyhow!("missing attr {key}"))
+        };
+        let num = |key: &str| -> Result<usize> {
+            attrs
+                .get(key)
+                .and_then(|v| v.as_f64())
+                .map(|f| f as usize)
+                .ok_or_else(|| anyhow!("missing attr {key}"))
+        };
+        let op = match kind {
+            "Conv2d" | "DepthwiseConv2d" => {
+                let ws = shape("weight_shape")?;
+                let spec = Conv2dSpec {
+                    stride: num("stride")?,
+                    pad: num("pad")?,
+                };
+                let wlen: usize = ws.iter().product();
+                let weight = Tensor::new(&ws, take(wlen)?);
+                let bias = take(ws[0])?;
+                if kind == "Conv2d" {
+                    Op::Conv2d { weight, bias, spec }
+                } else {
+                    Op::DepthwiseConv2d { weight, bias, spec }
+                }
+            }
+            "Linear" => {
+                let ws = shape("weight_shape")?;
+                let wlen: usize = ws.iter().product();
+                let weight = Tensor::new(&ws, take(wlen)?);
+                let bias = take(ws[0])?;
+                Op::Linear { weight, bias }
+            }
+            "BatchNorm" => {
+                let c = num("channels")?;
+                let eps = attrs
+                    .get("eps")
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(1e-5) as f32;
+                Op::BatchNorm {
+                    gamma: take(c)?,
+                    beta: take(c)?,
+                    mean: take(c)?,
+                    var: take(c)?,
+                    eps,
+                }
+            }
+            "Relu" => Op::Relu,
+            "Relu6" => Op::Relu6,
+            "MaxPool2" => Op::MaxPool2,
+            "AvgPool2" => Op::AvgPool2,
+            "GlobalAvgPool" => Op::GlobalAvgPool,
+            "Upsample2" => Op::Upsample2,
+            "Add" => Op::Add,
+            "Concat" => Op::Concat { axis: num("axis")? },
+            "Flatten" => Op::Flatten,
+            "Lstm" => {
+                let hidden = num("hidden")?;
+                let features = num("features")?;
+                let reverse = attrs
+                    .get("reverse")
+                    .and_then(|v| v.as_bool())
+                    .unwrap_or(false);
+                let w_ih = Tensor::new(&[4 * hidden, features], take(4 * hidden * features)?);
+                let w_hh = Tensor::new(&[4 * hidden, hidden], take(4 * hidden * hidden)?);
+                let bias = take(4 * hidden)?;
+                Op::Lstm {
+                    w_ih,
+                    w_hh,
+                    bias,
+                    hidden,
+                    reverse,
+                }
+            }
+            other => bail!("unknown op kind {other}"),
+        };
+        g.nodes.push(Node { name, op, inputs });
+    }
+    g.output = root
+        .get("output")
+        .and_then(|v| v.as_f64())
+        .map(|f| f as usize)
+        .unwrap_or(g.nodes.len().saturating_sub(1));
+    if cursor != blob.len() {
+        bail!("parameter blob has {} unread floats", blob.len() - cursor);
+    }
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn roundtrip_preserves_forward() {
+        let mut rng = Rng::new(1);
+        let mut g = Graph::new();
+        let c1 = g.push(
+            "conv1",
+            Op::Conv2d {
+                weight: Tensor::randn(&mut rng, &[4, 3, 3, 3], 0.3),
+                bias: rng.normal_vec(4, 0.1),
+                spec: Conv2dSpec { stride: 2, pad: 1 },
+            },
+        );
+        g.push(
+            "bn",
+            Op::BatchNorm {
+                gamma: rng.normal_vec(4, 0.2),
+                beta: rng.normal_vec(4, 0.2),
+                mean: rng.normal_vec(4, 0.2),
+                var: vec![1.0, 0.9, 1.1, 1.3],
+                eps: 1e-5,
+            },
+        );
+        g.push("relu", Op::Relu6);
+        g.push(
+            "dw",
+            Op::DepthwiseConv2d {
+                weight: Tensor::randn(&mut rng, &[4, 1, 3, 3], 0.3),
+                bias: vec![0.0; 4],
+                spec: Conv2dSpec::same(3),
+            },
+        );
+        g.push_with(
+            "cat",
+            Op::Concat { axis: 1 },
+            vec![Input::Node(3), Input::Node(c1)],
+        );
+        g.push("gap", Op::GlobalAvgPool);
+        g.push(
+            "fc",
+            Op::Linear {
+                weight: Tensor::randn(&mut rng, &[5, 8], 0.3),
+                bias: rng.normal_vec(5, 0.1),
+            },
+        );
+
+        let dir = std::env::temp_dir().join("aimet_serde_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let prefix = dir.join("model");
+        save_graph(&g, &prefix).unwrap();
+        let g2 = load_graph(&prefix).unwrap();
+
+        let x = Tensor::randn(&mut rng, &[2, 3, 8, 8], 1.0);
+        assert!(g.forward(&x).max_abs_diff(&g2.forward(&x)) < 1e-7);
+        assert_eq!(g2.nodes.len(), g.nodes.len());
+        assert_eq!(g2.nodes[4].inputs, g.nodes[4].inputs);
+    }
+
+    #[test]
+    fn lstm_roundtrip() {
+        let mut rng = Rng::new(2);
+        let mut g = Graph::new();
+        g.push(
+            "lstm",
+            Op::Lstm {
+                w_ih: Tensor::randn(&mut rng, &[8, 3], 0.4),
+                w_hh: Tensor::randn(&mut rng, &[8, 2], 0.4),
+                bias: rng.normal_vec(8, 0.1),
+                hidden: 2,
+                reverse: true,
+            },
+        );
+        let dir = std::env::temp_dir().join("aimet_serde_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let prefix = dir.join("lstm");
+        save_graph(&g, &prefix).unwrap();
+        let g2 = load_graph(&prefix).unwrap();
+        let x = Tensor::randn(&mut rng, &[1, 4, 3], 1.0);
+        assert!(g.forward(&x).max_abs_diff(&g2.forward(&x)) < 1e-7);
+    }
+
+    #[test]
+    fn truncated_blob_rejected() {
+        let mut rng = Rng::new(3);
+        let mut g = Graph::new();
+        g.push(
+            "fc",
+            Op::Linear {
+                weight: Tensor::randn(&mut rng, &[2, 2], 0.3),
+                bias: vec![0.0; 2],
+            },
+        );
+        let dir = std::env::temp_dir().join("aimet_serde_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let prefix = dir.join("trunc");
+        save_graph(&g, &prefix).unwrap();
+        // Chop the blob.
+        let bin = prefix.with_extension("bin");
+        let bytes = std::fs::read(&bin).unwrap();
+        std::fs::write(&bin, &bytes[..bytes.len() - 4]).unwrap();
+        assert!(load_graph(&prefix).is_err());
+    }
+}

@@ -1,0 +1,38 @@
+//! # aimet-rs — Neural Network Quantization Toolkit
+//!
+//! A from-scratch reproduction of the system described in *"Neural Network
+//! Quantization with AI Model Efficiency Toolkit (AIMET)"* (Qualcomm AI
+//! Research, 2022) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate plays the role of AIMET's compiled Model Optimization backend:
+//! it owns the model-graph IR, the quantization simulation
+//! ([`quantsim::QuantizationSimModel`]), the full post-training-quantization
+//! suite ([`ptq`]: batch-norm folding, cross-layer equalization, bias
+//! correction, AdaRound, range setting, the standard pipeline and the
+//! debugging flow), quantization-aware training ([`qat`]), synthetic
+//! datasets ([`data`]), metrics, and a PJRT runtime ([`runtime`]) that
+//! executes JAX/Pallas programs AOT-lowered to HLO text at build time.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the L2
+//! JAX models (which call the L1 Pallas kernels) once, and everything else
+//! is this crate.
+
+pub mod coordinator;
+pub mod data;
+pub mod graph;
+pub mod json;
+pub mod metrics;
+pub mod pool;
+pub mod ptq;
+pub mod qat;
+pub mod quant;
+pub mod quantsim;
+pub mod rng;
+pub mod task;
+pub mod runtime;
+pub mod tensor;
+pub mod testutil;
+pub mod visualize;
+pub mod zoo;
+
+pub use tensor::Tensor;

@@ -1,0 +1,5 @@
+//! `aimet` CLI entrypoint — see [`aimet::coordinator`] for the command
+//! surface.
+fn main() {
+    aimet::coordinator::cli_main();
+}

@@ -1,0 +1,406 @@
+//! Task metrics and loss functions for the experiment harness: top-1
+//! accuracy (Tables 4.1/5.1), mIoU (DeepLab analog), mAP-style detection
+//! score (Table 4.2), token error rate (WER analog, Table 5.2), plus the
+//! cross-entropy losses + gradients the pure-Rust trainer uses.
+
+use crate::data::DetObject;
+use crate::tensor::Tensor;
+use crate::zoo;
+
+/// Top-1 accuracy of logits [N, C] against labels, in percent.
+pub fn top1_accuracy(logits: &Tensor, labels: &[usize]) -> f32 {
+    let preds = logits.argmax_rows();
+    assert_eq!(preds.len(), labels.len());
+    let correct = preds.iter().zip(labels).filter(|(p, l)| p == l).count();
+    100.0 * correct as f32 / labels.len().max(1) as f32
+}
+
+/// Softmax cross-entropy over [N, C] logits; returns (mean loss, d logits).
+pub fn softmax_ce(logits: &Tensor, labels: &[usize]) -> (f32, Tensor) {
+    let (n, c) = (logits.dim(0), logits.dim(1));
+    assert_eq!(labels.len(), n);
+    let probs = logits.softmax_rows();
+    let mut loss = 0.0f64;
+    let mut grad = probs.clone();
+    let gd = grad.data_mut();
+    for i in 0..n {
+        let p = probs.data()[i * c + labels[i]].max(1e-12);
+        loss -= (p as f64).ln();
+        gd[i * c + labels[i]] -= 1.0;
+    }
+    let scale = 1.0 / n as f32;
+    for v in gd.iter_mut() {
+        *v *= scale;
+    }
+    ((loss / n as f64) as f32, grad)
+}
+
+/// Per-pixel softmax CE over [N, C, H, W] logits with labels [N*H*W]
+/// (row-major); returns (mean loss, d logits).
+pub fn pixel_ce(logits: &Tensor, labels: &[usize]) -> (f32, Tensor) {
+    let (n, c, h, w) = (logits.dim(0), logits.dim(1), logits.dim(2), logits.dim(3));
+    assert_eq!(labels.len(), n * h * w);
+    let mut grad = Tensor::zeros(logits.shape());
+    let gd = grad.data_mut();
+    let ld = logits.data();
+    let mut loss = 0.0f64;
+    let count = (n * h * w) as f32;
+    for ni in 0..n {
+        for y in 0..h {
+            for x in 0..w {
+                // Softmax across channel axis at this pixel.
+                let mut maxv = f32::NEG_INFINITY;
+                for ci in 0..c {
+                    maxv = maxv.max(ld[((ni * c + ci) * h + y) * w + x]);
+                }
+                let mut denom = 0.0f32;
+                for ci in 0..c {
+                    denom += (ld[((ni * c + ci) * h + y) * w + x] - maxv).exp();
+                }
+                let label = labels[ni * h * w + y * w + x];
+                for ci in 0..c {
+                    let p = (ld[((ni * c + ci) * h + y) * w + x] - maxv).exp() / denom;
+                    let idx = ((ni * c + ci) * h + y) * w + x;
+                    gd[idx] = (p - if ci == label { 1.0 } else { 0.0 }) / count;
+                    if ci == label {
+                        loss -= (p.max(1e-12) as f64).ln();
+                    }
+                }
+            }
+        }
+    }
+    ((loss / count as f64) as f32, grad)
+}
+
+/// Mean intersection-over-union (percent) of per-pixel argmax predictions.
+pub fn mean_iou(logits: &Tensor, labels: &[usize]) -> f32 {
+    let (n, c, h, w) = (logits.dim(0), logits.dim(1), logits.dim(2), logits.dim(3));
+    let ld = logits.data();
+    let mut inter = vec![0u64; c];
+    let mut union = vec![0u64; c];
+    for ni in 0..n {
+        for y in 0..h {
+            for x in 0..w {
+                let mut best = 0usize;
+                let mut bestv = f32::NEG_INFINITY;
+                for ci in 0..c {
+                    let v = ld[((ni * c + ci) * h + y) * w + x];
+                    if v > bestv {
+                        bestv = v;
+                        best = ci;
+                    }
+                }
+                let gt = labels[ni * h * w + y * w + x];
+                if best == gt {
+                    inter[gt] += 1;
+                    union[gt] += 1;
+                } else {
+                    union[gt] += 1;
+                    union[best] += 1;
+                }
+            }
+        }
+    }
+    let mut total = 0.0f32;
+    let mut present = 0usize;
+    for ci in 0..c {
+        if union[ci] > 0 {
+            total += inter[ci] as f32 / union[ci] as f32;
+            present += 1;
+        }
+    }
+    100.0 * total / present.max(1) as f32
+}
+
+/// Detection loss for DetMini's [N, 5+K, G, G] head:
+/// BCE on objectness + CE on class + L2 on box (positive cells only).
+/// Returns (loss, d logits).
+pub fn det_loss(pred: &Tensor, targets: &[Vec<DetObject>]) -> (f32, Tensor) {
+    let (n, ch, g, _) = (pred.dim(0), pred.dim(1), pred.dim(2), pred.dim(3));
+    let k = ch - 5;
+    let pd = pred.data();
+    let mut grad = Tensor::zeros(pred.shape());
+    let gd = grad.data_mut();
+    let cells = (n * g * g) as f32;
+    let mut loss = 0.0f64;
+    let at = |ni: usize, ci: usize, r: usize, c: usize| ((ni * ch + ci) * g + r) * g + c;
+    for ni in 0..n {
+        let mut cell_obj = vec![None; g * g];
+        for o in &targets[ni] {
+            cell_obj[o.cell.0 * g + o.cell.1] = Some(*o);
+        }
+        for r in 0..g {
+            for c in 0..g {
+                let obj = cell_obj[r * g + c];
+                // Objectness BCE with positive-cell upweighting: 1-3
+                // objects vs ~61 background cells per image is a heavy
+                // class imbalance; without the weight the objectness head
+                // learns background-everywhere and ranking (mAP) stalls.
+                const POS_W: f32 = 8.0;
+                let z = pd[at(ni, 0, r, c)];
+                let p = 1.0 / (1.0 + (-z).exp());
+                let (t, w) = if obj.is_some() { (1.0, POS_W) } else { (0.0, 1.0) };
+                loss -= w as f64
+                    * ((t as f64) * (p.max(1e-9) as f64).ln()
+                        + ((1.0 - t) as f64) * ((1.0 - p).max(1e-9) as f64).ln());
+                gd[at(ni, 0, r, c)] = w * (p - t) / cells;
+                if let Some(o) = obj {
+                    // Box regression (offsets + sizes), weight 5.
+                    let tgt = [o.offset.0, o.offset.1, o.size.0, o.size.1];
+                    for (bi, &tv) in tgt.iter().enumerate() {
+                        let v = pd[at(ni, 1 + bi, r, c)];
+                        loss += 5.0 * ((v - tv) * (v - tv)) as f64;
+                        gd[at(ni, 1 + bi, r, c)] = 10.0 * (v - tv) / cells;
+                    }
+                    // Class CE.
+                    let mut maxv = f32::NEG_INFINITY;
+                    for ci in 0..k {
+                        maxv = maxv.max(pd[at(ni, 5 + ci, r, c)]);
+                    }
+                    let mut denom = 0.0f32;
+                    for ci in 0..k {
+                        denom += (pd[at(ni, 5 + ci, r, c)] - maxv).exp();
+                    }
+                    for ci in 0..k {
+                        let pc = (pd[at(ni, 5 + ci, r, c)] - maxv).exp() / denom;
+                        gd[at(ni, 5 + ci, r, c)] =
+                            (pc - if ci == o.class { 1.0 } else { 0.0 }) / cells;
+                        if ci == o.class {
+                            loss -= (pc.max(1e-12) as f64).ln();
+                        }
+                    }
+                }
+            }
+        }
+    }
+    ((loss / cells as f64) as f32, grad)
+}
+
+/// mAP-style detection score (percent): rank all cells by predicted
+/// objectness; a detection is true-positive if its cell contains an object
+/// of the predicted class. Average precision over the ranking, averaged
+/// over classes present.
+pub fn det_map(pred: &Tensor, targets: &[Vec<DetObject>]) -> f32 {
+    let (n, ch, g, _) = (pred.dim(0), pred.dim(1), pred.dim(2), pred.dim(3));
+    let k = ch - 5;
+    let pd = pred.data();
+    let at = |ni: usize, ci: usize, r: usize, c: usize| ((ni * ch + ci) * g + r) * g + c;
+    let mut ap_sum = 0.0f32;
+    let mut classes_present = 0usize;
+    for class in 0..k {
+        // Gather detections of this class: (score, is_tp).
+        let mut dets: Vec<(f32, bool)> = Vec::new();
+        let mut gt_count = 0usize;
+        for ni in 0..n {
+            let mut cell_obj = vec![None; g * g];
+            for o in &targets[ni] {
+                cell_obj[o.cell.0 * g + o.cell.1] = Some(*o);
+                if o.class == class {
+                    gt_count += 1;
+                }
+            }
+            for r in 0..g {
+                for c in 0..g {
+                    // Predicted class = argmax of class logits.
+                    let mut best = 0usize;
+                    let mut bestv = f32::NEG_INFINITY;
+                    for ci in 0..k {
+                        let v = pd[at(ni, 5 + ci, r, c)];
+                        if v > bestv {
+                            bestv = v;
+                            best = ci;
+                        }
+                    }
+                    if best != class {
+                        continue;
+                    }
+                    let score = pd[at(ni, 0, r, c)];
+                    let tp = matches!(cell_obj[r * g + c], Some(o) if o.class == class);
+                    dets.push((score, tp));
+                }
+            }
+        }
+        if gt_count == 0 {
+            continue;
+        }
+        classes_present += 1;
+        dets.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let mut tp = 0usize;
+        let mut ap = 0.0f32;
+        for (rank, (_, is_tp)) in dets.iter().enumerate() {
+            if *is_tp {
+                tp += 1;
+                ap += tp as f32 / (rank + 1) as f32;
+            }
+        }
+        ap_sum += ap / gt_count as f32;
+    }
+    100.0 * ap_sum / classes_present.max(1) as f32
+}
+
+/// Token error rate (percent) for per-frame logits [N, T, K] — the WER
+/// analog of Table 5.2 (lower is better).
+pub fn token_error_rate(logits: &Tensor, labels: &[usize]) -> f32 {
+    let (n, t, k) = (logits.dim(0), logits.dim(1), logits.dim(2));
+    assert_eq!(labels.len(), n * t);
+    let flat = logits.reshape(&[n * t, k]);
+    100.0 - top1_accuracy(&flat, labels)
+}
+
+/// Per-frame CE for [N, T, K] logits; returns (mean loss, d logits).
+pub fn frame_ce(logits: &Tensor, labels: &[usize]) -> (f32, Tensor) {
+    let (n, t, k) = (logits.dim(0), logits.dim(1), logits.dim(2));
+    let flat = logits.reshape(&[n * t, k]);
+    let (loss, grad) = softmax_ce(&flat, labels);
+    (loss, grad.reshape(&[n, t, k]))
+}
+
+/// Quality metric dispatcher used by the experiment harness.
+pub fn metric_name(model: &str) -> &'static str {
+    match model {
+        "segmini" => "mIoU %",
+        "detmini" => "mAP %",
+        "speechmini" => "TER % (lower better)",
+        _ => "top-1 %",
+    }
+}
+
+/// Chance-level score for each model's metric (useful in assertions).
+pub fn chance_level(model: &str) -> f32 {
+    match model {
+        "segmini" => 100.0 / zoo::SEG_CLASSES as f32, // very rough
+        "detmini" => 5.0,
+        "speechmini" => 100.0 * (1.0 - 1.0 / zoo::SPEECH_TOKENS as f32),
+        _ => 100.0 / zoo::CLS_CLASSES as f32,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn top1_basic() {
+        let logits = Tensor::new(&[2, 3], vec![1., 5., 0., 9., 0., 0.]);
+        assert_eq!(top1_accuracy(&logits, &[1, 0]), 100.0);
+        assert_eq!(top1_accuracy(&logits, &[0, 0]), 50.0);
+    }
+
+    #[test]
+    fn softmax_ce_gradient_fd() {
+        let mut rng = Rng::new(1);
+        let logits = Tensor::randn(&mut rng, &[3, 4], 1.0);
+        let labels = vec![0usize, 2, 3];
+        let (_, grad) = softmax_ce(&logits, &labels);
+        let eps = 1e-3;
+        for idx in [0usize, 5, 11] {
+            let mut lp = logits.clone();
+            lp.data_mut()[idx] += eps;
+            let mut lm = logits.clone();
+            lm.data_mut()[idx] -= eps;
+            let num = (softmax_ce(&lp, &labels).0 - softmax_ce(&lm, &labels).0) / (2.0 * eps);
+            assert!((num - grad.data()[idx]).abs() < 1e-3, "idx {idx}");
+        }
+    }
+
+    #[test]
+    fn pixel_ce_gradient_fd() {
+        let mut rng = Rng::new(2);
+        let logits = Tensor::randn(&mut rng, &[1, 3, 2, 2], 1.0);
+        let labels = vec![0usize, 1, 2, 0];
+        let (_, grad) = pixel_ce(&logits, &labels);
+        let eps = 1e-3;
+        for idx in [0usize, 4, 9] {
+            let mut lp = logits.clone();
+            lp.data_mut()[idx] += eps;
+            let mut lm = logits.clone();
+            lm.data_mut()[idx] -= eps;
+            let num = (pixel_ce(&lp, &labels).0 - pixel_ce(&lm, &labels).0) / (2.0 * eps);
+            assert!((num - grad.data()[idx]).abs() < 1e-3, "idx {idx}");
+        }
+    }
+
+    #[test]
+    fn perfect_segmentation_gets_100_miou() {
+        // Logits that put all mass on the right class everywhere.
+        let labels = vec![0usize, 1, 1, 0];
+        let mut logits = Tensor::zeros(&[1, 2, 2, 2]);
+        for (i, &l) in labels.iter().enumerate() {
+            let (y, x) = (i / 2, i % 2);
+            logits.data_mut()[((l) * 2 + y) * 2 + x] = 10.0;
+        }
+        assert_eq!(mean_iou(&logits, &labels), 100.0);
+    }
+
+    #[test]
+    fn det_loss_gradient_fd() {
+        let mut rng = Rng::new(3);
+        let pred = Tensor::randn(&mut rng, &[1, 5 + 4, 8, 8], 0.5);
+        let targets = vec![vec![DetObject {
+            cell: (2, 3),
+            class: 1,
+            offset: (0.4, 0.6),
+            size: (0.2, 0.2),
+        }]];
+        let (_, grad) = det_loss(&pred, &targets);
+        let eps = 1e-3;
+        // Probe objectness, a box coord at the object cell, a class logit.
+        let at = |ci: usize, r: usize, c: usize| ((ci) * 8 + r) * 8 + c;
+        for idx in [at(0, 2, 3), at(1, 2, 3), at(6, 2, 3), at(0, 0, 0)] {
+            let mut pp = pred.clone();
+            pp.data_mut()[idx] += eps;
+            let mut pm = pred.clone();
+            pm.data_mut()[idx] -= eps;
+            let num = (det_loss(&pp, &targets).0 - det_loss(&pm, &targets).0) / (2.0 * eps);
+            assert!(
+                (num - grad.data()[idx]).abs() < 1e-3 * (1.0 + num.abs()),
+                "idx {idx}: {num} vs {}",
+                grad.data()[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn det_map_perfect_predictor() {
+        let targets = vec![vec![
+            DetObject {
+                cell: (1, 1),
+                class: 0,
+                offset: (0.5, 0.5),
+                size: (0.2, 0.2),
+            },
+            DetObject {
+                cell: (4, 6),
+                class: 2,
+                offset: (0.5, 0.5),
+                size: (0.2, 0.2),
+            },
+        ]];
+        let mut pred = Tensor::full(&[1, 9, 8, 8], -5.0);
+        // High objectness + correct class at the two object cells.
+        let at = |ci: usize, r: usize, c: usize| ((ci) * 8 + r) * 8 + c;
+        pred.data_mut()[at(0, 1, 1)] = 5.0;
+        pred.data_mut()[at(5, 1, 1)] = 5.0;
+        pred.data_mut()[at(0, 4, 6)] = 5.0;
+        pred.data_mut()[at(7, 4, 6)] = 5.0;
+        let map = det_map(&pred, &targets);
+        assert!(map > 99.0, "map={map}");
+    }
+
+    #[test]
+    fn det_map_random_predictor_is_low() {
+        let mut rng = Rng::new(4);
+        let d = crate::data::SynthDet::new(1);
+        let (_, targets) = d.batch(0, 8);
+        let pred = Tensor::randn(&mut rng, &[8, 9, 8, 8], 1.0);
+        assert!(det_map(&pred, &targets) < 40.0);
+    }
+
+    #[test]
+    fn ter_complements_accuracy() {
+        let logits = Tensor::new(&[1, 2, 3], vec![5., 0., 0., 0., 5., 0.]);
+        assert_eq!(token_error_rate(&logits, &[0, 1]), 0.0);
+        assert_eq!(token_error_rate(&logits, &[1, 0]), 100.0);
+    }
+}

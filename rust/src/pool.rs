@@ -1,0 +1,161 @@
+//! Parallelism substrate: a scoped parallel-for built on `std::thread`.
+//!
+//! The offline vendor set has neither `rayon` nor `tokio`, so the hot loops
+//! (im2col matmul, calibration forward passes, per-quantizer sensitivity
+//! sweeps) use this module. Work is divided into contiguous chunks, one per
+//! worker, which is the right shape for our dense-compute loops.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use: `AIMET_THREADS` env override, else the
+/// available parallelism, clamped to [1, 32].
+pub fn num_threads() -> usize {
+    static CACHED: AtomicUsize = AtomicUsize::new(0);
+    let v = CACHED.load(Ordering::Relaxed);
+    if v != 0 {
+        return v;
+    }
+    let n = std::env::var("AIMET_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        })
+        .clamp(1, 32);
+    CACHED.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Run `f(start, end)` over disjoint chunks of `0..n` on up to
+/// [`num_threads`] scoped threads. Falls back to a single inline call for
+/// small `n` (below `grain`) to avoid thread overhead on tiny work items.
+pub fn parallel_chunks<F>(n: usize, grain: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let workers = num_threads().min(n.div_ceil(grain.max(1))).max(1);
+    if workers <= 1 || n == 0 {
+        if n > 0 {
+            f(0, n);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let start = w * chunk;
+            let end = ((w + 1) * chunk).min(n);
+            if start >= end {
+                break;
+            }
+            let f = &f;
+            scope.spawn(move || f(start, end));
+        }
+    });
+}
+
+/// Parallel map over indices `0..n`, collecting results in order.
+pub fn parallel_map<T, F>(n: usize, grain: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    {
+        let slots = SyncSlice::new(out.as_mut_ptr());
+        parallel_chunks(n, grain, |start, end| {
+            for i in start..end {
+                // SAFETY: each index is written by exactly one worker
+                // (chunks are disjoint) and the Vec outlives the scope.
+                unsafe {
+                    *slots.ptr().add(i) = Some(f(i));
+                }
+            }
+        });
+    }
+    out.into_iter().map(|x| x.unwrap()).collect()
+}
+
+/// Mutate disjoint rows of a flat buffer in parallel: `f(i, row_slice)` for
+/// each row of length `row_len`.
+pub fn parallel_rows<F>(buf: &mut [f32], row_len: usize, grain: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    assert!(row_len > 0 && buf.len() % row_len == 0);
+    let rows = buf.len() / row_len;
+    let base = SyncSlice::new(buf.as_mut_ptr());
+    parallel_chunks(rows, grain, |start, end| {
+        for i in start..end {
+            // SAFETY: rows are disjoint per index and chunks are disjoint.
+            let row =
+                unsafe { std::slice::from_raw_parts_mut(base.ptr().add(i * row_len), row_len) };
+            f(i, row);
+        }
+    });
+}
+
+/// Pointer wrapper that is Sync because all concurrent accesses are to
+/// provably disjoint regions (enforced by the chunking above).
+///
+/// Accessed via [`SyncSlice::ptr`] rather than field access so closures
+/// capture the whole wrapper (edition-2021 disjoint capture would otherwise
+/// capture the bare raw pointer, which is not `Sync`).
+pub(crate) struct SyncSlice<T>(*mut T);
+unsafe impl<T> Sync for SyncSlice<T> {}
+unsafe impl<T> Send for SyncSlice<T> {}
+
+impl<T> SyncSlice<T> {
+    pub(crate) fn new(p: *mut T) -> SyncSlice<T> {
+        SyncSlice(p)
+    }
+
+    #[inline]
+    pub(crate) fn ptr(&self) -> *mut T {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn chunks_cover_range_exactly_once() {
+        let sum = AtomicU64::new(0);
+        parallel_chunks(10_000, 1, |s, e| {
+            let local: u64 = (s..e).map(|i| i as u64).sum();
+            sum.fetch_add(local, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 9999 * 10_000 / 2);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let out = parallel_map(1000, 1, |i| i * 2);
+        assert_eq!(out, (0..1000).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn rows_disjoint_mutation() {
+        let mut buf = vec![0f32; 64 * 8];
+        parallel_rows(&mut buf, 8, 1, |i, row| {
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = (i * 8 + j) as f32;
+            }
+        });
+        for (i, v) in buf.iter().enumerate() {
+            assert_eq!(*v, i as f32);
+        }
+    }
+
+    #[test]
+    fn empty_and_tiny() {
+        parallel_chunks(0, 16, |_, _| panic!("should not run"));
+        let out = parallel_map(1, 1024, |i| i + 1);
+        assert_eq!(out, vec![1]);
+    }
+}

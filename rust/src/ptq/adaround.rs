@@ -1,0 +1,646 @@
+//! AdaRound — adaptive rounding for post-training quantization (paper
+//! §4.6, code block 4.5; Nagel et al. 2020).
+//!
+//! Round-to-nearest is not the rounding that minimizes the *task* loss.
+//! AdaRound learns, per weight, whether to round **up or down** by
+//! optimizing a local per-layer reconstruction loss over a small unlabeled
+//! calibration set:
+//!
+//! ```text
+//!   argmin_V ‖ W·x − W̃(V)·x ‖²_F + λ · f_reg(V)
+//!   W̃(V)    = s · clamp( ⌊W/s⌋ + h(V), int_min, int_max )
+//!   h(V)    = clip( σ(V)·(ζ−γ) + γ, 0, 1 )        (rectified sigmoid)
+//!   f_reg   = Σ_ij 1 − |2·h(V_ij) − 1|^β           (β annealed 20 → 2)
+//! ```
+//!
+//! After optimization every `h` has been pushed to {0, 1} by the annealed
+//! regularizer and the weight is committed to the chosen grid point. The
+//! adarounded weights **assume the encoding grid they were optimized on**,
+//! which is why the caller must freeze the returned parameter encodings in
+//! any subsequent [`QuantizationSimModel`]
+//! (`set_and_freeze_param_encodings`, usage note of code block 4.5).
+
+use crate::graph::{Graph, Input, Op};
+use crate::quant::{
+    per_channel_weight_encodings, weight_encoding, Encoding, Quantizer,
+};
+use crate::quantsim::{QuantParams, SimConfig};
+use crate::tensor::{im2col, matmul_a_bt, matmul_at_b, Tensor};
+use std::collections::BTreeMap;
+
+/// Rectified-sigmoid stretch limits (Nagel et al. 2020, eq. 23).
+const ZETA: f32 = 1.1;
+const GAMMA: f32 = -0.1;
+
+/// AdaRound hyperparameters (`AdaroundParameters` in the AIMET API).
+/// Defaults mirror the paper's guidance: the *number of iterations* and the
+/// amount of calibration data are the influential knobs; `reg_param`,
+/// `beta_range` and `warm_start` rarely need changing.
+#[derive(Debug, Clone, Copy)]
+pub struct AdaroundParameters {
+    /// Optimization steps per layer (AIMET default 10 000; our layers are
+    /// orders of magnitude smaller, so the default is scaled down — the
+    /// loss plateaus well before this on every zoo model).
+    pub iterations: usize,
+    /// Regularizer weight λ.
+    pub reg_param: f32,
+    /// β annealing range (start, end) for the rounding regularizer.
+    pub beta_range: (f32, f32),
+    /// Fraction of iterations with the regularizer disabled (pure
+    /// reconstruction warm start).
+    pub warm_start: f32,
+    /// Adam learning rate on V.
+    pub lr: f32,
+    /// Cap on reconstruction rows (input patches) kept per layer; rows are
+    /// strided-subsampled beyond this to bound the per-iteration matmul.
+    pub max_rows: usize,
+}
+
+impl Default for AdaroundParameters {
+    fn default() -> Self {
+        AdaroundParameters {
+            iterations: 500,
+            reg_param: 0.01,
+            beta_range: (20.0, 2.0),
+            warm_start: 0.2,
+            lr: 1e-2,
+            max_rows: 2048,
+        }
+    }
+}
+
+/// Per-layer optimization report.
+#[derive(Debug, Clone)]
+pub struct AdaroundLayerReport {
+    pub layer: String,
+    /// Mean-squared reconstruction error of plain round-to-nearest.
+    pub mse_rtn: f32,
+    /// Reconstruction error after AdaRound (soft, pre-commit).
+    pub mse_soft: f32,
+    /// Reconstruction error of the committed hard rounding.
+    pub mse_hard: f32,
+    /// Fraction of weights whose rounding flipped vs round-to-nearest.
+    pub flipped: f32,
+    pub iterations: usize,
+}
+
+/// Output of [`apply_adaround`]: the weight-adjusted model plus the frozen
+/// parameter encodings the weights were optimized against (what AIMET
+/// writes to the `.encodings` JSON for `set_and_freeze_param_encodings`).
+#[derive(Debug, Clone)]
+pub struct AdaroundResult {
+    pub graph: Graph,
+    pub param_encodings: BTreeMap<String, Quantizer>,
+    pub reports: Vec<AdaroundLayerReport>,
+}
+
+/// Apply AdaRound to every Conv2d / DepthwiseConv2d / Linear layer
+/// (`Adaround.apply_adaround` in the AIMET API). `batches` is the small
+/// unlabeled calibration set (500–2000 samples in the paper).
+///
+/// Layers are optimized **sequentially in topological order with
+/// asymmetric reconstruction**: layer inputs come from the
+/// partially-quantized model (all earlier layers already committed to
+/// their adarounded grids) while the reconstruction target is the FP32
+/// layer's output on FP32 inputs. Each layer therefore also absorbs the
+/// accumulated upstream quantization drift — without this, per-layer
+/// optimization that wins locally can lose end-to-end (Nagel et al. 2020,
+/// §6; AIMET does the same).
+pub fn apply_adaround(
+    g: &Graph,
+    qp: QuantParams,
+    cfg: &SimConfig,
+    batches: &[Tensor],
+    params: &AdaroundParameters,
+) -> AdaroundResult {
+    assert!(!batches.is_empty(), "AdaRound requires calibration data");
+    let mut out = g.clone();
+    let mut encodings = BTreeMap::new();
+    let mut reports = Vec::new();
+
+    // FP32 activations per batch (targets), cached once.
+    let acts_fp: Vec<Vec<Tensor>> = batches.iter().map(|b| g.forward_all(b)).collect();
+
+    for idx in 0..g.nodes.len() {
+        let node = &g.nodes[idx];
+        let (weight, per_channel) = match &node.op {
+            Op::Conv2d { weight, .. } | Op::Linear { weight, .. } => {
+                (weight, cfg.per_channel)
+            }
+            Op::DepthwiseConv2d { weight, .. } => (weight, cfg.per_channel),
+            // LSTM weights stay round-to-nearest (AdaRound targets conv +
+            // fully-connected layers, §4.6).
+            _ => continue,
+        };
+
+        // The quantization grid this layer is optimized against (derived
+        // from the ORIGINAL weights, as AIMET freezes it).
+        let encs: Vec<Encoding> = if per_channel {
+            per_channel_weight_encodings(weight, qp.scheme, qp.param_bw, cfg.param_symmetric, 0)
+        } else {
+            vec![weight_encoding(weight, qp.scheme, qp.param_bw, cfg.param_symmetric)]
+        };
+
+        // Inputs from the partially-quantized model (earlier layers in
+        // `out` are already committed to their grids).
+        let acts_q: Vec<Vec<Tensor>> = batches.iter().map(|b| out.forward_all(b)).collect();
+        let input_of = |b: usize| -> &Tensor {
+            match out.nodes[idx].inputs[0] {
+                Input::Graph => &batches[b],
+                Input::Node(j) => &acts_q[b][j],
+            }
+        };
+        // FP32 target inputs (for the FP32 reconstruction target).
+        let input_fp = |b: usize| -> &Tensor {
+            match g.nodes[idx].inputs[0] {
+                Input::Graph => &batches[b],
+                Input::Node(j) => &acts_fp[b][j],
+            }
+        };
+
+        let problem = build_problem(g, idx, params.max_rows, input_of, batches.len());
+        let target_problem = build_problem(g, idx, params.max_rows, input_fp, batches.len());
+        let report = optimize_layer(
+            &node.name,
+            weight,
+            out.nodes.len(), // sanity only
+            &encs,
+            &problem,
+            &target_problem,
+            params,
+        );
+        // Commit the hard-rounded weight into the working graph.
+        *out.nodes[idx].op.weight_mut().unwrap() = report.1;
+        reports.push(report.0);
+
+        let q = if per_channel {
+            Quantizer::per_channel(encs, 0)
+        } else {
+            Quantizer::per_tensor(encs[0])
+        };
+        encodings.insert(node.name.clone(), q);
+    }
+
+    AdaroundResult {
+        graph: out,
+        param_encodings: encodings,
+        reports,
+    }
+}
+
+/// A layer's linearized reconstruction problem. For Conv2d and Linear the
+/// layer is one matmul `Y[R,O] = X[R,F] · W[O,F]ᵀ`; for DepthwiseConv2d it
+/// is one independent problem per channel (each output channel sees only
+/// its own `kh·kw` patch columns).
+struct Problem {
+    /// Per-group (X columns, rows×feat). One group for conv/linear; C
+    /// groups for depthwise.
+    groups: Vec<Tensor>,
+    /// Weight rows covered by each group (start, end).
+    row_span: Vec<(usize, usize)>,
+}
+
+fn build_problem<'a>(
+    g: &Graph,
+    idx: usize,
+    max_rows: usize,
+    input_of: impl Fn(usize) -> &'a Tensor,
+    n_batches: usize,
+) -> Problem {
+    let node = &g.nodes[idx];
+    match &node.op {
+        Op::Conv2d { weight, spec, .. } => {
+            let (kh, kw) = (weight.dim(2), weight.dim(3));
+            // im2col emits [F, R]; the optimizer wants rows = locations.
+            let cols: Vec<Tensor> = (0..n_batches)
+                .map(|b| im2col(input_of(b), kh, kw, *spec).transpose2())
+                .collect();
+            let x = stack_rows(&cols, max_rows);
+            let o = weight.dim(0);
+            Problem {
+                groups: vec![x],
+                row_span: vec![(0, o)],
+            }
+        }
+        Op::Linear { weight, .. } => {
+            let f = weight.dim(1);
+            let cols: Vec<Tensor> = (0..n_batches)
+                .map(|b| {
+                    let x = input_of(b);
+                    let lead: usize = x.len() / f;
+                    x.reshape(&[lead, f])
+                })
+                .collect();
+            let x = stack_rows(&cols, max_rows);
+            let o = weight.dim(0);
+            Problem {
+                groups: vec![x],
+                row_span: vec![(0, o)],
+            }
+        }
+        Op::DepthwiseConv2d { weight, spec, .. } => {
+            let (c, kh, kw) = (weight.dim(0), weight.dim(2), weight.dim(3));
+            let kk = kh * kw;
+            let cols: Vec<Tensor> = (0..n_batches)
+                .map(|b| im2col(input_of(b), kh, kw, *spec).transpose2())
+                .collect();
+            let full = stack_rows(&cols, max_rows);
+            let rows = full.dim(0);
+            // Split the [R, C·kh·kw] patch matrix into C per-channel
+            // [R, kh·kw] groups.
+            let mut groups = Vec::with_capacity(c);
+            let mut row_span = Vec::with_capacity(c);
+            for ci in 0..c {
+                let mut data = Vec::with_capacity(rows * kk);
+                for r in 0..rows {
+                    let base = r * c * kk + ci * kk;
+                    data.extend_from_slice(&full.data()[base..base + kk]);
+                }
+                groups.push(Tensor::new(&[rows, kk], data));
+                row_span.push((ci, ci + 1));
+            }
+            Problem { groups, row_span }
+        }
+        _ => unreachable!("non-weighted layer in build_problem"),
+    }
+}
+
+/// Vertically concatenate row matrices, strided-subsampling to `max_rows`.
+fn stack_rows(parts: &[Tensor], max_rows: usize) -> Tensor {
+    let f = parts[0].dim(1);
+    let total: usize = parts.iter().map(|p| p.dim(0)).sum();
+    let keep = total.min(max_rows);
+    let stride = (total as f32 / keep as f32).max(1.0);
+    let mut data = Vec::with_capacity(keep * f);
+    let mut wanted = 0.0f32;
+    let mut seen = 0usize;
+    let mut taken = 0usize;
+    for p in parts {
+        for r in 0..p.dim(0) {
+            if taken < keep && seen as f32 >= wanted {
+                data.extend_from_slice(&p.data()[r * f..(r + 1) * f]);
+                taken += 1;
+                wanted += stride;
+            }
+            seen += 1;
+        }
+    }
+    Tensor::new(&[taken, f], data)
+}
+
+/// Per-element optimization for one layer. `problem` holds the
+/// quantized-model inputs X̂; `target_problem` the FP32 inputs X (same
+/// deterministic row sampling, so rows correspond). The reconstruction is
+/// asymmetric: argmin ‖W·X − W̃(V)·X̂‖². Returns the report and the
+/// committed (hard-rounded, on-grid) weight.
+fn optimize_layer(
+    name: &str,
+    weight: &Tensor,
+    _n_nodes: usize,
+    encs: &[Encoding],
+    problem: &Problem,
+    target_problem: &Problem,
+    params: &AdaroundParameters,
+) -> (AdaroundLayerReport, Tensor) {
+    let w_shape = weight.shape().to_vec();
+    let o = w_shape[0];
+    let feat: usize = w_shape[1..].iter().product();
+    let wd = weight.data();
+
+    // Per-row encoding lookup (per-tensor ⇒ one encoding for all rows).
+    let enc_of = |row: usize| -> &Encoding {
+        if encs.len() == 1 {
+            &encs[0]
+        } else {
+            &encs[row]
+        }
+    };
+
+    // Grid decomposition of each weight: w = s·(floor + r), r ∈ [0,1).
+    let mut floor_int = vec![0.0f32; o * feat];
+    let mut v = vec![0.0f32; o * feat]; // rounding logits
+    let mut lo = vec![0.0f32; o * feat];
+    let mut hi = vec![0.0f32; o * feat];
+    for row in 0..o {
+        let e = enc_of(row);
+        let (gl, gh) = (
+            (e.int_min - e.offset) as f32,
+            (e.int_max - e.offset) as f32,
+        );
+        for j in 0..feat {
+            let i = row * feat + j;
+            let t = wd[i] / e.scale;
+            let f = t.floor();
+            let r = (t - f).clamp(1e-4, 1.0 - 1e-4);
+            floor_int[i] = f;
+            // σ(v)·(ζ−γ)+γ = r  ⇒  v = −ln((ζ−γ)/(r−γ) − 1)
+            v[i] = -(((ZETA - GAMMA) / (r - GAMMA) - 1.0).ln());
+            lo[i] = gl;
+            hi[i] = gh;
+        }
+    }
+
+    // Reconstruction target per group: Y = X_fp32 · W_fp32ᵀ.
+    let targets: Vec<Tensor> = target_problem
+        .groups
+        .iter()
+        .zip(&target_problem.row_span)
+        .map(|(x, &(r0, r1))| {
+            let wsub = Tensor::new(
+                &[r1 - r0, feat],
+                wd[r0 * feat..r1 * feat].to_vec(),
+            );
+            matmul_a_bt(x, &wsub)
+        })
+        .collect();
+
+    // RTN baseline error.
+    let mut w_rtn = vec![0.0f32; o * feat];
+    for row in 0..o {
+        let e = enc_of(row);
+        for j in 0..feat {
+            let i = row * feat + j;
+            let q = (wd[i] / e.scale).round().clamp(lo[i], hi[i]);
+            w_rtn[i] = q * e.scale;
+        }
+    }
+    let mse_rtn = problem_mse(problem, &targets, &w_rtn, feat);
+
+    // Adam state.
+    let mut m = vec![0.0f32; o * feat];
+    let mut s2 = vec![0.0f32; o * feat];
+    let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
+    let warm = (params.iterations as f32 * params.warm_start) as usize;
+    let anneal_len = (params.iterations - warm).max(1) as f32;
+
+    let mut h = vec![0.0f32; o * feat];
+    let mut w_soft = vec![0.0f32; o * feat];
+    let mut grad = vec![0.0f32; o * feat];
+    let mut mse_soft = mse_rtn;
+
+    for it in 0..params.iterations {
+        // h(V) and the soft-quantized weight.
+        for row in 0..o {
+            let e = enc_of(row);
+            for j in 0..feat {
+                let i = row * feat + j;
+                let sg = 1.0 / (1.0 + (-v[i]).exp());
+                let hr = sg * (ZETA - GAMMA) + GAMMA;
+                h[i] = hr.clamp(0.0, 1.0);
+                let q = (floor_int[i] + h[i]).clamp(lo[i], hi[i]);
+                w_soft[i] = q * e.scale;
+            }
+        }
+
+        // Reconstruction gradient dL/dW_soft (MSE over all group outputs).
+        grad.iter_mut().for_each(|g| *g = 0.0);
+        let mut recon = 0.0f64;
+        let mut count = 0usize;
+        for (gi, x) in problem.groups.iter().enumerate() {
+            let (r0, r1) = problem.row_span[gi];
+            let wsub = Tensor::new(
+                &[r1 - r0, feat],
+                w_soft[r0 * feat..r1 * feat].to_vec(),
+            );
+            let y = matmul_a_bt(x, &wsub); // [R, rows]
+            let d = y.sub(&targets[gi]);
+            recon += d.data().iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>();
+            count += d.len();
+            // dL/dWsub = 2/N · dᵀ · X  → [rows, feat]
+            let gsub = matmul_at_b(&d, x);
+            for (k, gv) in gsub.data().iter().enumerate() {
+                grad[r0 * feat + k] += 2.0 * gv;
+            }
+        }
+        let inv_n = 1.0 / count.max(1) as f32;
+        mse_soft = (recon / count.max(1) as f64) as f32;
+
+        // β-annealed rounding regularizer (cosine, AIMET-style), after the
+        // warm start.
+        let beta = if it < warm {
+            f32::INFINITY
+        } else {
+            let t = (it - warm) as f32 / anneal_len;
+            params.beta_range.1
+                + 0.5 * (params.beta_range.0 - params.beta_range.1)
+                    * (1.0 + (std::f32::consts::PI * t).cos())
+        };
+
+        // Chain rule into V, plus regularizer.
+        for row in 0..o {
+            let e = enc_of(row);
+            for j in 0..feat {
+                let i = row * feat + j;
+                let mut gh = grad[i] * inv_n * e.scale;
+                // Clamp gates.
+                let pre = floor_int[i] + h[i];
+                if pre <= lo[i] || pre >= hi[i] {
+                    gh = 0.0;
+                }
+                if it >= warm && h[i] > 0.0 && h[i] < 1.0 {
+                    // d/dh [1 − |2h−1|^β] = −2β·|2h−1|^{β−1}·sign(2h−1)
+                    let u = 2.0 * h[i] - 1.0;
+                    let du = -2.0 * beta * u.abs().powf(beta - 1.0) * u.signum();
+                    gh += params.reg_param * du;
+                }
+                // dh/dv (rectified sigmoid interior).
+                let sg = 1.0 / (1.0 + (-v[i]).exp());
+                let hr = sg * (ZETA - GAMMA) + GAMMA;
+                let dv = if hr > 0.0 && hr < 1.0 {
+                    gh * (ZETA - GAMMA) * sg * (1.0 - sg)
+                } else {
+                    0.0
+                };
+                // Adam step.
+                m[i] = b1 * m[i] + (1.0 - b1) * dv;
+                s2[i] = b2 * s2[i] + (1.0 - b2) * dv * dv;
+                let mh = m[i] / (1.0 - b1.powi(it as i32 + 1));
+                let sh = s2[i] / (1.0 - b2.powi(it as i32 + 1));
+                v[i] -= params.lr * mh / (sh.sqrt() + eps);
+            }
+        }
+    }
+
+    // Commit: h ≥ 0.5 rounds up, else down; write the grid value back as
+    // the layer's FP32 weight (RTN on the frozen grid then reproduces it).
+    let mut flipped = 0usize;
+    let mut w_hard = vec![0.0f32; o * feat];
+    for row in 0..o {
+        let e = enc_of(row);
+        for j in 0..feat {
+            let i = row * feat + j;
+            let up = if h[i] >= 0.5 { 1.0 } else { 0.0 };
+            let q = (floor_int[i] + up).clamp(lo[i], hi[i]);
+            w_hard[i] = q * e.scale;
+            let rtn_q = (wd[i] / e.scale).round().clamp(lo[i], hi[i]);
+            if (q - rtn_q).abs() > 0.5 {
+                flipped += 1;
+            }
+        }
+    }
+    let mse_hard = problem_mse(problem, &targets, &w_hard, feat);
+    let committed = Tensor::new(&w_shape, w_hard);
+
+    (
+        AdaroundLayerReport {
+            layer: name.to_string(),
+            mse_rtn,
+            mse_soft,
+            mse_hard,
+            flipped: flipped as f32 / (o * feat) as f32,
+            iterations: params.iterations,
+        },
+        committed,
+    )
+}
+
+fn problem_mse(problem: &Problem, targets: &[Tensor], w: &[f32], feat: usize) -> f32 {
+    let mut err = 0.0f64;
+    let mut count = 0usize;
+    for (gi, x) in problem.groups.iter().enumerate() {
+        let (r0, r1) = problem.row_span[gi];
+        let wsub = Tensor::new(&[r1 - r0, feat], w[r0 * feat..r1 * feat].to_vec());
+        let y = matmul_a_bt(x, &wsub);
+        err += y.sq_err(&targets[gi]) as f64;
+        count += y.len();
+    }
+    (err / count.max(1) as f64) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthImageNet;
+    use crate::rng::Rng;
+    use crate::tensor::Conv2dSpec;
+    use crate::zoo;
+
+    fn quick_params() -> AdaroundParameters {
+        AdaroundParameters {
+            iterations: 120,
+            max_rows: 256,
+            ..Default::default()
+        }
+    }
+
+    fn calib(n: usize) -> Vec<Tensor> {
+        let ds = SynthImageNet::new(77);
+        (0..n).map(|i| ds.batch(i as u64, 4).0).collect()
+    }
+
+    #[test]
+    fn adaround_beats_rtn_reconstruction() {
+        let g = zoo::build("mobimini", 21).unwrap();
+        let res = apply_adaround(
+            &g,
+            QuantParams {
+                param_bw: 4,
+                ..Default::default()
+            },
+            &SimConfig::default(),
+            &calib(2),
+            &quick_params(),
+        );
+        assert!(!res.reports.is_empty());
+        for r in &res.reports {
+            assert!(
+                r.mse_hard <= r.mse_rtn * 1.02,
+                "{}: hard {} !<= rtn {}",
+                r.layer,
+                r.mse_hard,
+                r.mse_rtn
+            );
+        }
+        // At 4 bits at least one layer should improve decisively.
+        let best = res
+            .reports
+            .iter()
+            .map(|r| r.mse_hard / r.mse_rtn.max(1e-20))
+            .fold(f32::INFINITY, f32::min);
+        assert!(best < 0.9, "best ratio {best}");
+    }
+
+    #[test]
+    fn adarounded_weights_lie_on_the_frozen_grid() {
+        let g = zoo::build("mobimini", 22).unwrap();
+        let qp = QuantParams::default();
+        let res = apply_adaround(&g, qp, &SimConfig::default(), &calib(1), &quick_params());
+        for (idx, node) in res.graph.nodes.iter().enumerate() {
+            let Some(w) = node.op.weight() else { continue };
+            if matches!(node.op, Op::Lstm { .. }) {
+                continue;
+            }
+            let q = &res.param_encodings[&g.nodes[idx].name];
+            // qdq on the frozen grid must be exact identity on the
+            // committed weights.
+            let round_trip = q.qdq(w);
+            assert!(
+                round_trip.max_abs_diff(w) < 1e-5,
+                "{} not on grid",
+                node.name
+            );
+        }
+    }
+
+    #[test]
+    fn rounding_decisions_actually_flip_somewhere() {
+        let g = zoo::build("detmini", 23).unwrap();
+        let ds = crate::data::SynthDet::new(5);
+        let batches: Vec<Tensor> = (0..2).map(|i| ds.batch(i, 4).0).collect();
+        let res = apply_adaround(
+            &g,
+            QuantParams {
+                param_bw: 4,
+                ..Default::default()
+            },
+            &SimConfig::default(),
+            &batches,
+            &quick_params(),
+        );
+        let total_flipped: f32 = res.reports.iter().map(|r| r.flipped).sum();
+        assert!(total_flipped > 0.0, "AdaRound degenerated to RTN");
+    }
+
+    #[test]
+    fn depthwise_groups_isolate_channels() {
+        // A depthwise layer where channel 0 has huge weights and channel 1
+        // tiny ones: the groups must not mix.
+        let mut rng = Rng::new(3);
+        let mut g = Graph::new();
+        let mut w = Tensor::randn(&mut rng, &[2, 1, 3, 3], 1.0);
+        for v in &mut w.data_mut()[9..18] {
+            *v *= 0.01;
+        }
+        g.push(
+            "dw",
+            Op::DepthwiseConv2d {
+                weight: w,
+                bias: vec![0.0; 2],
+                spec: Conv2dSpec::same(3),
+            },
+        );
+        let x = Tensor::randn(&mut rng, &[2, 2, 8, 8], 1.0);
+        let res = apply_adaround(
+            &g,
+            QuantParams::default(),
+            &SimConfig::default(),
+            &[x],
+            &quick_params(),
+        );
+        assert_eq!(res.reports.len(), 1);
+        assert!(res.reports[0].mse_hard <= res.reports[0].mse_rtn * 1.02);
+    }
+
+    #[test]
+    fn stack_rows_subsamples_deterministically() {
+        let a = Tensor::new(&[4, 2], (0..8).map(|v| v as f32).collect());
+        let b = Tensor::new(&[4, 2], (8..16).map(|v| v as f32).collect());
+        let s = stack_rows(&[&a, &b].map(|t| t.clone()), 4);
+        assert_eq!(s.dim(0), 4);
+        assert_eq!(s.dim(1), 2);
+        // First row always kept.
+        assert_eq!(&s.data()[0..2], &[0.0, 1.0]);
+        let s2 = stack_rows(&[a, b], 100);
+        assert_eq!(s2.dim(0), 8);
+    }
+}

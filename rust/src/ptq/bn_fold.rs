@@ -1,0 +1,209 @@
+//! Batch-normalization folding (paper §3.2, code block 3.2).
+//!
+//! Folds every `Conv/DepthwiseConv/Linear → BatchNorm` pair into the
+//! preceding layer's weights and bias, then removes the BN node from the
+//! graph: `W' = (γ/σ)·W`, `b' = (b − μ)·(γ/σ) + β`. The returned
+//! [`FoldInfo`] preserves the BN statistics, which high-bias absorption
+//! (§4.3) and analytic bias correction (§4.5) still need afterwards.
+
+use crate::graph::{Graph, Input, Op};
+
+/// BN statistics preserved per folded layer.
+#[derive(Debug, Clone)]
+pub struct FoldedBn {
+    /// Name of the layer the BN folded into.
+    pub layer: String,
+    pub gamma: Vec<f32>,
+    pub beta: Vec<f32>,
+    pub mean: Vec<f32>,
+    pub var: Vec<f32>,
+    pub eps: f32,
+}
+
+/// Result of [`fold_all_batch_norms`].
+#[derive(Debug, Clone, Default)]
+pub struct FoldInfo {
+    pub folded: Vec<FoldedBn>,
+}
+
+impl FoldInfo {
+    pub fn for_layer(&self, name: &str) -> Option<&FoldedBn> {
+        self.folded.iter().find(|f| f.layer == name)
+    }
+}
+
+/// Fold all foldable batch norms in place (`fold_all_batch_norms` in the
+/// AIMET API). A BN folds when its producer is a weighted layer whose only
+/// consumer is the BN.
+pub fn fold_all_batch_norms(g: &mut Graph) -> FoldInfo {
+    let mut info = FoldInfo::default();
+    loop {
+        // Find the next foldable BN.
+        let mut target = None;
+        for (idx, node) in g.nodes.iter().enumerate() {
+            let Op::BatchNorm { .. } = node.op else {
+                continue;
+            };
+            let [Input::Node(prev)] = node.inputs[..] else {
+                continue;
+            };
+            let foldable = matches!(
+                g.nodes[prev].op,
+                Op::Conv2d { .. } | Op::DepthwiseConv2d { .. } | Op::Linear { .. }
+            ) && g.consumers(prev) == vec![idx];
+            if foldable {
+                target = Some((idx, prev));
+                break;
+            }
+        }
+        let Some((bn_idx, conv_idx)) = target else {
+            break;
+        };
+        let (gamma, beta, mean, var, eps) = match &g.nodes[bn_idx].op {
+            Op::BatchNorm {
+                gamma,
+                beta,
+                mean,
+                var,
+                eps,
+            } => (gamma.clone(), beta.clone(), mean.clone(), var.clone(), *eps),
+            _ => unreachable!(),
+        };
+        let scale: Vec<f32> = gamma
+            .iter()
+            .zip(&var)
+            .map(|(&g, &v)| g / (v + eps).sqrt())
+            .collect();
+        // Fold into the producer.
+        let layer_name = g.nodes[conv_idx].name.clone();
+        {
+            let op = &mut g.nodes[conv_idx].op;
+            let w = op.weight_mut().expect("weighted producer");
+            let o = w.dim(0);
+            assert_eq!(o, scale.len(), "BN channel mismatch on {layer_name}");
+            let inner = w.len() / o;
+            let wd = w.data_mut();
+            for oi in 0..o {
+                for v in &mut wd[oi * inner..(oi + 1) * inner] {
+                    *v *= scale[oi];
+                }
+            }
+            let b = op.bias_mut().expect("weighted producer bias");
+            for oi in 0..o {
+                b[oi] = (b[oi] - mean[oi]) * scale[oi] + beta[oi];
+            }
+        }
+        g.remove_node(bn_idx);
+        info.folded.push(FoldedBn {
+            layer: layer_name,
+            gamma,
+            beta,
+            mean,
+            var,
+            eps,
+        });
+    }
+    info
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::tensor::{Conv2dSpec, Tensor};
+
+    fn conv_bn_relu(rng: &mut Rng) -> Graph {
+        let mut g = Graph::new();
+        g.push(
+            "conv",
+            Op::Conv2d {
+                weight: Tensor::randn(rng, &[4, 3, 3, 3], 0.4),
+                bias: rng.normal_vec(4, 0.2),
+                spec: Conv2dSpec::same(3),
+            },
+        );
+        g.push(
+            "bn",
+            Op::BatchNorm {
+                gamma: vec![1.2, 0.7, 1.0, 2.0],
+                beta: vec![0.3, -0.2, 0.0, 1.0],
+                mean: vec![0.5, -0.5, 0.1, 0.0],
+                var: vec![1.5, 0.5, 1.0, 2.0],
+                eps: 1e-5,
+            },
+        );
+        g.push("relu", Op::Relu);
+        g
+    }
+
+    #[test]
+    fn folding_preserves_forward() {
+        let mut rng = Rng::new(1);
+        let g = conv_bn_relu(&mut rng);
+        let mut folded = g.clone();
+        let info = fold_all_batch_norms(&mut folded);
+        assert_eq!(info.folded.len(), 1);
+        assert_eq!(info.folded[0].layer, "conv");
+        assert_eq!(folded.nodes.len(), 2); // BN removed
+        let x = Tensor::randn(&mut rng, &[2, 3, 6, 6], 1.0);
+        assert!(g.forward(&x).max_abs_diff(&folded.forward(&x)) < 1e-4);
+    }
+
+    #[test]
+    fn folds_whole_zoo_models() {
+        for name in ["mobimini", "resmini", "segmini", "detmini"] {
+            let g = crate::zoo::build(name, 3).unwrap();
+            let mut folded = g.clone();
+            let info = fold_all_batch_norms(&mut folded);
+            assert!(!info.folded.is_empty(), "{name}");
+            assert!(
+                !folded.nodes.iter().any(|n| n.op.kind() == "BatchNorm"),
+                "{name} has unfolded BN"
+            );
+            let shape: Vec<usize> = std::iter::once(2)
+                .chain(crate::zoo::input_shape(name).unwrap())
+                .collect();
+            let mut rng = Rng::new(9);
+            let x = Tensor::randn(&mut rng, &shape, 1.0);
+            let diff = g.forward(&x).max_abs_diff(&folded.forward(&x));
+            assert!(diff < 1e-3, "{name}: diff {diff}");
+        }
+    }
+
+    #[test]
+    fn bn_with_multiple_consumers_not_folded() {
+        let mut rng = Rng::new(2);
+        let mut g = Graph::new();
+        let c = g.push(
+            "conv",
+            Op::Conv2d {
+                weight: Tensor::randn(&mut rng, &[2, 2, 1, 1], 0.5),
+                bias: vec![0.0; 2],
+                spec: Conv2dSpec::unit(),
+            },
+        );
+        g.push("bn", Op::BatchNorm {
+            gamma: vec![1.0; 2],
+            beta: vec![0.0; 2],
+            mean: vec![0.0; 2],
+            var: vec![1.0; 2],
+            eps: 1e-5,
+        });
+        // conv also feeds an Add directly → conv has 2 consumers.
+        g.push_with("add", Op::Add, vec![Input::Node(1), Input::Node(c)]);
+        let mut folded = g.clone();
+        let info = fold_all_batch_norms(&mut folded);
+        assert!(info.folded.is_empty());
+        assert_eq!(folded.nodes.len(), 3);
+    }
+
+    #[test]
+    fn fold_info_lookup() {
+        let mut rng = Rng::new(3);
+        let mut g = conv_bn_relu(&mut rng);
+        let info = fold_all_batch_norms(&mut g);
+        assert!(info.for_layer("conv").is_some());
+        assert!(info.for_layer("nope").is_none());
+        assert_eq!(info.for_layer("conv").unwrap().gamma.len(), 4);
+    }
+}

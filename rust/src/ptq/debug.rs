@@ -1,0 +1,244 @@
+//! The PTQ debugging flow (paper §4.8, fig 4.5).
+//!
+//! Not an algorithm but a diagnosis procedure: when the standard pipeline
+//! leaves the quantized model short of the FP32 baseline, these steps
+//! localize the damage — FP32 sanity check, weights-vs-activations split,
+//! then a per-quantizer sensitivity sweep — and emit actionable advice
+//! ("apply CLE", "try SQNR range setting", "raise this quantizer's
+//! bit-width", "fall back to QAT").
+
+use crate::quantsim::QuantizationSimModel;
+
+/// One per-quantizer sensitivity measurement: the metric with *only* this
+/// quantizer at target bit-width and everything else at FP32 (the inner
+/// for-loop of fig 4.5).
+#[derive(Debug, Clone)]
+pub struct SensitivityEntry {
+    pub name: String,
+    /// `"act"` or `"param"`.
+    pub kind: &'static str,
+    pub metric: f32,
+    /// Metric drop vs the FP32 baseline (positive = this quantizer hurts).
+    pub drop: f32,
+}
+
+/// Full debug-flow report.
+#[derive(Debug, Clone)]
+pub struct DebugReport {
+    /// The caller's FP32 baseline metric.
+    pub fp32_metric: f32,
+    /// Step 1 — all quantizers bypassed: must match `fp32_metric`.
+    pub sanity_metric: f32,
+    /// Everything quantized (the starting point of the flow).
+    pub full_quant_metric: f32,
+    /// Step 2 — only weights quantized.
+    pub weights_only_metric: f32,
+    /// Step 2 — only activations quantized.
+    pub acts_only_metric: f32,
+    /// Step 3 — per-quantizer sweep, sorted worst-first.
+    pub sensitivity: Vec<SensitivityEntry>,
+    /// Derived guidance.
+    pub advice: Vec<String>,
+}
+
+impl DebugReport {
+    /// Render as the flow-chart-shaped text report the CLI prints.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "FP32 baseline          : {:8.3}\n\
+             sanity (all bypassed)  : {:8.3}\n\
+             full quantization      : {:8.3}\n\
+             weights-only quantized : {:8.3}\n\
+             acts-only quantized    : {:8.3}\n",
+            self.fp32_metric,
+            self.sanity_metric,
+            self.full_quant_metric,
+            self.weights_only_metric,
+            self.acts_only_metric
+        ));
+        s.push_str("per-quantizer sensitivity (worst 10):\n");
+        for e in self.sensitivity.iter().take(10) {
+            s.push_str(&format!(
+                "  {:5} {:24} metric {:8.3} (drop {:+.3})\n",
+                e.kind, e.name, e.metric, e.drop
+            ));
+        }
+        for a in &self.advice {
+            s.push_str(&format!("advice: {a}\n"));
+        }
+        s
+    }
+}
+
+/// Run the fig 4.5 debugging flow. `eval` maps a sim to the task metric
+/// (higher = better, e.g. top-1); the sweep clones the sim per toggle so
+/// the caller's sim is untouched.
+pub fn run_debug_flow(
+    sim: &QuantizationSimModel,
+    fp32_metric: f32,
+    eval: &dyn Fn(&QuantizationSimModel) -> f32,
+) -> DebugReport {
+    // Step 1 — FP32 sanity check: bypass everything.
+    let mut bypass = sim.clone();
+    bypass.set_all_act_enabled(false);
+    bypass.set_all_param_enabled(false);
+    let sanity_metric = eval(&bypass);
+
+    let full_quant_metric = eval(sim);
+
+    // Step 2 — weights or activations?
+    let mut weights_only = sim.clone();
+    weights_only.set_all_act_enabled(false);
+    let weights_only_metric = eval(&weights_only);
+
+    let mut acts_only = sim.clone();
+    acts_only.set_all_param_enabled(false);
+    let acts_only_metric = eval(&acts_only);
+
+    // Step 3 — per-quantizer sweep: enable exactly one quantizer at a
+    // time on top of the all-bypassed model.
+    let mut sensitivity = Vec::new();
+    for (idx, node) in sim.graph.nodes.iter().enumerate() {
+        if sim.acts[idx].placed && sim.acts[idx].quantizer.is_some() {
+            let mut probe = bypass.clone();
+            probe.acts[idx].enabled = true;
+            let metric = eval(&probe);
+            sensitivity.push(SensitivityEntry {
+                name: node.name.clone(),
+                kind: "act",
+                metric,
+                drop: fp32_metric - metric,
+            });
+        }
+        if sim.params[idx].as_ref().is_some_and(|s| s.quantizer.is_some()) {
+            let mut probe = bypass.clone();
+            probe.params[idx].as_mut().unwrap().enabled = true;
+            let metric = eval(&probe);
+            sensitivity.push(SensitivityEntry {
+                name: node.name.clone(),
+                kind: "param",
+                metric,
+                drop: fp32_metric - metric,
+            });
+        }
+    }
+    sensitivity.sort_by(|a, b| b.drop.partial_cmp(&a.drop).unwrap());
+
+    // Advice per the flow chart.
+    let mut advice = Vec::new();
+    let tol = (fp32_metric.abs() * 0.02).max(1e-3);
+    if (sanity_metric - fp32_metric).abs() > tol {
+        advice.push(
+            "sanity check FAILED: bypassed sim deviates from FP32 — inspect the \
+             simulation pipeline itself before quantization"
+                .to_string(),
+        );
+    }
+    let w_drop = fp32_metric - weights_only_metric;
+    let a_drop = fp32_metric - acts_only_metric;
+    if w_drop > tol {
+        advice.push(
+            "weight quantization hurts: apply CLE (depthwise-separable layers), \
+             bias correction, or AdaRound; consider per-channel weights"
+                .to_string(),
+        );
+    }
+    if a_drop > tol {
+        advice.push(
+            "activation quantization hurts: try SQNR range setting or re-balance \
+             CLE for activation ranges"
+                .to_string(),
+        );
+    }
+    if let Some(worst) = sensitivity.first() {
+        if worst.drop > tol {
+            advice.push(format!(
+                "most sensitive quantizer: {} ({}) — consider custom range \
+                 setting or a higher bit-width there",
+                worst.name, worst.kind
+            ));
+        }
+    }
+    if w_drop <= tol && a_drop <= tol && fp32_metric - full_quant_metric > tol {
+        advice.push(
+            "individual quantizers look fine but the combination hurts — \
+             consider quantization-aware training (chapter 5)"
+                .to_string(),
+        );
+    }
+    if advice.is_empty() {
+        advice.push("quantized model is within tolerance of FP32 — ship it".to_string());
+    }
+
+    DebugReport {
+        fp32_metric,
+        sanity_metric,
+        full_quant_metric,
+        weights_only_metric,
+        acts_only_metric,
+        sensitivity,
+        advice,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthImageNet;
+    use crate::metrics::top1_accuracy;
+    use crate::quantsim::QuantParams;
+    use crate::zoo;
+
+    fn setup(bw: u32) -> (QuantizationSimModel, f32, Vec<crate::tensor::Tensor>, Vec<usize>) {
+        let g = zoo::build("mobimini", 70).unwrap();
+        let ds = SynthImageNet::new(71);
+        let calib: Vec<_> = (0..3).map(|i| ds.batch(i, 8).0).collect();
+        let (x, labels) = ds.batch(10, 16);
+        let fp32_metric = top1_accuracy(&g.forward(&x), &labels);
+        let mut sim = QuantizationSimModel::with_defaults(
+            g,
+            QuantParams {
+                act_bw: bw,
+                param_bw: bw,
+                ..Default::default()
+            },
+        );
+        sim.compute_encodings(&calib);
+        (sim, fp32_metric, vec![x], labels)
+    }
+
+    #[test]
+    fn sanity_check_passes_for_bypassed_sim() {
+        let (sim, fp32, xs, labels) = setup(8);
+        let report = run_debug_flow(&sim, fp32, &|s| {
+            top1_accuracy(&s.forward(&xs[0]), &labels)
+        });
+        assert_eq!(report.sanity_metric, report.fp32_metric);
+    }
+
+    #[test]
+    fn sweep_covers_every_placed_quantizer() {
+        let (sim, fp32, xs, labels) = setup(8);
+        let report = run_debug_flow(&sim, fp32, &|s| {
+            top1_accuracy(&s.forward(&xs[0]), &labels)
+        });
+        let (na, np) = sim.quantizer_counts();
+        // Input-slot quantizer is not swept per-node; node sweeps only.
+        assert_eq!(report.sensitivity.len(), na - 1 + np);
+        // Sorted worst-first.
+        for w in report.sensitivity.windows(2) {
+            assert!(w[0].drop >= w[1].drop);
+        }
+    }
+
+    #[test]
+    fn low_bitwidth_generates_advice() {
+        let (sim, fp32, xs, labels) = setup(3);
+        let report = run_debug_flow(&sim, fp32, &|s| {
+            top1_accuracy(&s.forward(&xs[0]), &labels)
+        });
+        assert!(!report.advice.is_empty());
+        assert!(report.render().contains("advice:"));
+    }
+}

@@ -1,0 +1,35 @@
+//! Post-training quantization (paper chapter 4).
+//!
+//! The PTQ suite takes a pretrained FP32 graph and optimizes its weights
+//! and quantization parameters *without fine-tuning*:
+//!
+//! * [`fold_all_batch_norms`] — batch-normalization folding (§3.2).
+//! * [`equalize_model`] — cross-layer equalization + high-bias absorption
+//!   (§4.3), including the ReLU6→ReLU caveat helper (§4.3.1).
+//! * [`set_weight_ranges`] / [`set_activation_ranges`] — min-max vs SQNR
+//!   clipping-threshold choice (§4.4).
+//! * [`empirical_bias_correction`] / [`analytic_bias_correction`] (§4.5).
+//! * [`apply_adaround`] — adaptive rounding (§4.6).
+//! * [`standard_ptq_pipeline`] — the fig 4.1 pipeline tying it together.
+//! * [`run_debug_flow`] — the fig 4.5 debugging flow.
+
+mod adaround;
+mod bias_correction;
+mod bn_fold;
+mod cle;
+mod debug;
+mod pipeline;
+mod range_setting;
+
+pub use adaround::{apply_adaround, AdaroundLayerReport, AdaroundParameters, AdaroundResult};
+pub use bias_correction::{
+    analytic_bias_correction, empirical_bias_correction, expected_relu,
+};
+pub use bn_fold::{fold_all_batch_norms, FoldInfo, FoldedBn};
+pub use cle::{
+    absorb_high_bias, cross_layer_scale, equalize_model, equalize_pair, find_cle_pairs,
+    replace_relu6_with_relu, scale_pair, unequalize_depthwise, ClePair, ScaleLog,
+};
+pub use debug::{run_debug_flow, DebugReport, SensitivityEntry};
+pub use pipeline::{standard_ptq_pipeline, BiasCorrection, PtqOptions, PtqOutcome};
+pub use range_setting::{scheme_mse, set_activation_ranges, set_weight_ranges};

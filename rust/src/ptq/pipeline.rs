@@ -1,0 +1,276 @@
+//! The standard PTQ pipeline (paper §4.2, fig 4.1).
+//!
+//! ```text
+//!   FP32 model
+//!     → Cross-layer equalization            (recommended; always BN fold)
+//!     → Add quantizers                       (QuantizationSimModel)
+//!     → Weight range setting                 (SQNR recommended)
+//!     → AdaRound                             (if calibration data)
+//!     → Bias correction                      (if no data / analytic)
+//!     → Activation range setting             (SQNR, needs calibration)
+//!     → quantized sim, drop-in for eval
+//! ```
+//!
+//! Every step is optional and independently controllable so the debugging
+//! flow (§4.8) and the ablation benches can switch pieces on and off.
+
+use crate::graph::Graph;
+use crate::ptq::{
+    analytic_bias_correction, apply_adaround, empirical_bias_correction, equalize_model,
+    fold_all_batch_norms, set_activation_ranges, set_weight_ranges, AdaroundParameters,
+    AdaroundResult, FoldInfo,
+};
+use crate::quant::QuantScheme;
+use crate::quantsim::{set_and_freeze_param_encodings, QuantParams, QuantizationSimModel, SimConfig};
+use crate::tensor::Tensor;
+
+/// Bias-correction variant (§4.5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BiasCorrection {
+    None,
+    /// Compare quantized vs FP32 activations on calibration data.
+    Empirical,
+    /// Data-free: clipped-normal moments from BN statistics (DFQ).
+    Analytic,
+}
+
+/// Pipeline configuration. [`PtqOptions::default`] reproduces the
+/// recommended fig 4.1 settings minus AdaRound (which fig 4.1 gates on a
+/// calibration set being available — enable it explicitly).
+#[derive(Debug, Clone)]
+pub struct PtqOptions {
+    pub qp: QuantParams,
+    pub cfg: SimConfig,
+    /// Apply cross-layer equalization (BN fold happens regardless).
+    pub use_cle: bool,
+    /// Optimize weight rounding with AdaRound.
+    pub use_adaround: bool,
+    pub adaround: AdaroundParameters,
+    pub bias_correction: BiasCorrection,
+    /// Scheme for weight range setting (fig 4.1 recommends SQNR, min-max
+    /// can win for per-channel).
+    pub weight_scheme: QuantScheme,
+    /// Scheme for the final activation range setting.
+    pub act_scheme: QuantScheme,
+}
+
+impl Default for PtqOptions {
+    fn default() -> Self {
+        PtqOptions {
+            qp: QuantParams::default(),
+            cfg: SimConfig::default(),
+            use_cle: true,
+            use_adaround: false,
+            adaround: AdaroundParameters::default(),
+            bias_correction: BiasCorrection::Empirical,
+            weight_scheme: QuantScheme::TfEnhanced,
+            act_scheme: QuantScheme::TfEnhanced,
+        }
+    }
+}
+
+/// What the pipeline did, for reports and EXPERIMENTS.md.
+#[derive(Debug, Clone)]
+pub struct PtqOutcome {
+    pub sim: QuantizationSimModel,
+    pub fold_info: FoldInfo,
+    pub adaround: Option<AdaroundResult>,
+    pub corrected_layers: usize,
+    /// Human-readable trace of the steps taken.
+    pub log: Vec<String>,
+}
+
+/// Run the standard PTQ pipeline of fig 4.1 over a pretrained FP32 graph.
+/// `calib` is the representative unlabeled calibration set (order of 1000
+/// samples in the paper; a few small batches here).
+pub fn standard_ptq_pipeline(g: &Graph, calib: &[Tensor], opts: &PtqOptions) -> PtqOutcome {
+    assert!(!calib.is_empty(), "PTQ range setting requires calibration data");
+    let mut log = Vec::new();
+    let mut g = g.clone();
+
+    // 1. CLE (includes BN folding) or plain BN folding (§3.2 recommends
+    //    folding before simulation either way).
+    let fold_info = if opts.use_cle {
+        let info = equalize_model(&mut g);
+        log.push(format!(
+            "cross-layer equalization (folded {} batch norms)",
+            info.folded.len()
+        ));
+        info
+    } else {
+        let info = fold_all_batch_norms(&mut g);
+        log.push(format!("batch-norm folding ({} folded)", info.folded.len()));
+        info
+    };
+
+    // FP32 reference for empirical bias correction: the equalized/folded
+    // model (numerically ≈ the original FP32 model).
+    let fp32_ref = g.clone();
+
+    // 2. AdaRound rewrites the weights before the sim is built; its grid
+    //    must then be frozen in the sim (code block 4.5 usage note).
+    let adaround = if opts.use_adaround {
+        let res = apply_adaround(&g, opts.qp, &opts.cfg, calib, &opts.adaround);
+        log.push(format!(
+            "adaround over {} layers ({} iterations each)",
+            res.reports.len(),
+            opts.adaround.iterations
+        ));
+        g = res.graph.clone();
+        Some(res)
+    } else {
+        None
+    };
+
+    // 3. Add quantizers.
+    let mut sim = QuantizationSimModel::new(g, opts.cfg.clone(), opts.qp);
+    let (na, np) = sim.quantizer_counts();
+    log.push(format!("added quantizers ({na} activation, {np} parameter)"));
+
+    if let Some(res) = &adaround {
+        set_and_freeze_param_encodings(&mut sim, &res.param_encodings);
+        log.push("froze adarounded parameter encodings".to_string());
+    }
+
+    // 4. Range setting: weights first, then a calibration pass for
+    //    activations (needed before bias correction's quantized forwards).
+    sim.compute_encodings(calib);
+    set_weight_ranges(&mut sim, opts.weight_scheme);
+    set_activation_ranges(&mut sim, calib, opts.act_scheme);
+    log.push(format!(
+        "range setting (weights {:?}, activations {:?})",
+        opts.weight_scheme, opts.act_scheme
+    ));
+
+    // 5. Bias correction.
+    let corrected_layers = match opts.bias_correction {
+        BiasCorrection::None => 0,
+        BiasCorrection::Empirical => {
+            let n = empirical_bias_correction(&mut sim, &fp32_ref, calib);
+            log.push(format!("empirical bias correction ({n} layers)"));
+            n
+        }
+        BiasCorrection::Analytic => {
+            let n = analytic_bias_correction(&mut sim, &fold_info);
+            log.push(format!("analytic bias correction ({n} layers)"));
+            n
+        }
+    };
+
+    // 6. Final activation range setting over the corrected model (the last
+    //    box of fig 4.1) — bias shifts move activation ranges slightly.
+    if corrected_layers > 0 {
+        set_activation_ranges(&mut sim, calib, opts.act_scheme);
+        log.push("re-set activation ranges after bias correction".to_string());
+    }
+
+    PtqOutcome {
+        sim,
+        fold_info,
+        adaround,
+        corrected_layers,
+        log,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthImageNet;
+    use crate::metrics::top1_accuracy;
+    use crate::zoo;
+
+    fn calib(n: usize) -> Vec<Tensor> {
+        let ds = SynthImageNet::new(55);
+        (0..n).map(|i| ds.batch(i as u64, 8).0).collect()
+    }
+
+    #[test]
+    fn pipeline_produces_runnable_sim() {
+        let g = zoo::build("mobimini", 60).unwrap();
+        let out = standard_ptq_pipeline(&g, &calib(3), &PtqOptions::default());
+        assert!(out.log.len() >= 4);
+        let (x, labels) = SynthImageNet::new(56).batch(0, 8);
+        let acc = top1_accuracy(&out.sim.forward(&x), &labels);
+        assert!((0.0..=100.0).contains(&acc));
+        // BN folding removed all BatchNorm nodes.
+        assert!(out
+            .sim
+            .graph
+            .nodes
+            .iter()
+            .all(|n| n.op.kind() != "BatchNorm"));
+    }
+
+    #[test]
+    fn cle_pipeline_beats_no_cle_on_mobimini_output_error() {
+        // The Table 4.1 phenomenon at unit scale: per-tensor W8 on a
+        // depthwise model with disparate channel ranges is rescued by CLE.
+        let mut g = zoo::build("mobimini", 61).unwrap();
+        crate::ptq::fold_all_batch_norms(&mut g);
+        crate::ptq::replace_relu6_with_relu(&mut g);
+        crate::ptq::unequalize_depthwise(&mut g, &[1.0, 16.0, 4.0, 64.0]);
+        let data = calib(3);
+        let (x, _) = SynthImageNet::new(57).batch(0, 8);
+        let y_fp = g.forward(&x);
+        let mut no_cle = PtqOptions::default();
+        no_cle.use_cle = false;
+        no_cle.bias_correction = BiasCorrection::None;
+        let mut with_cle = PtqOptions::default();
+        with_cle.bias_correction = BiasCorrection::None;
+        let e_no = standard_ptq_pipeline(&g, &data, &no_cle)
+            .sim
+            .forward(&x)
+            .sq_err(&y_fp);
+        let e_yes = standard_ptq_pipeline(&g, &data, &with_cle)
+            .sim
+            .forward(&x)
+            .sq_err(&y_fp);
+        assert!(
+            e_yes < 0.7 * e_no,
+            "CLE {e_yes} should clearly beat no-CLE {e_no}"
+        );
+    }
+
+    #[test]
+    fn empirical_bc_reduces_output_bias() {
+        let g = zoo::build("mobimini", 62).unwrap();
+        let data = calib(3);
+        let (x, _) = SynthImageNet::new(58).batch(0, 8);
+        let y_fp = g.forward(&x);
+        let mut no_bc = PtqOptions::default();
+        no_bc.bias_correction = BiasCorrection::None;
+        let mut bc = PtqOptions::default();
+        bc.bias_correction = BiasCorrection::Empirical;
+        let mean_shift = |y: &Tensor| -> f32 {
+            y.data()
+                .iter()
+                .zip(y_fp.data())
+                .map(|(a, b)| a - b)
+                .sum::<f32>()
+                .abs()
+                / y.len() as f32
+        };
+        let s_no = mean_shift(&standard_ptq_pipeline(&g, &data, &no_bc).sim.forward(&x));
+        let s_bc = mean_shift(&standard_ptq_pipeline(&g, &data, &bc).sim.forward(&x));
+        assert!(
+            s_bc <= s_no * 1.05,
+            "bias correction should not increase output bias ({s_bc} vs {s_no})"
+        );
+    }
+
+    #[test]
+    fn adaround_slot_freezes_encodings() {
+        let g = zoo::build("mobimini", 63).unwrap();
+        let mut opts = PtqOptions::default();
+        opts.use_adaround = true;
+        opts.adaround.iterations = 60;
+        opts.adaround.max_rows = 128;
+        opts.bias_correction = BiasCorrection::None;
+        let out = standard_ptq_pipeline(&g, &calib(2), &opts);
+        assert!(out.adaround.is_some());
+        for slot in out.sim.params.iter().flatten() {
+            assert!(slot.frozen, "adarounded params must be frozen");
+        }
+    }
+}

@@ -1,0 +1,358 @@
+//! Quantization-aware training (paper chapter 5).
+//!
+//! QAT models quantization noise *during* training: the forward pass runs
+//! through the simulation quantizers (fig 5.1 top) and the backward pass
+//! treats each quantizer as identity — the straight-through estimator
+//! (STE, Bengio et al. 2013) — so gradients flow to the underlying FP32
+//! shadow weights (fig 5.1 bottom).
+//!
+//! The implementation follows the recommended fig 5.2 pipeline:
+//! PTQ-initialized sim (CLE + range setting) → static BN folding (§5.2.1;
+//! folding happened when the sim was built) → STE fine-tuning with
+//! periodic range updates → export.
+//!
+//! Two engines run the same math:
+//! * the pure-Rust trainer here ([`fit_qat`] / [`fit_fp32`]), built on
+//!   [`crate::graph::backward`];
+//! * the PJRT artifacts (`*_fp32_step` / `*_qat_step`) lowered from the
+//!   JAX L2 models, driven by [`crate::runtime`] — the cross-engine tests
+//!   check they agree.
+
+use crate::graph::{backward, backward_train, Graph};
+use crate::quantsim::QuantizationSimModel;
+use crate::task::{loss_and_grad, TaskData};
+use crate::tensor::Tensor;
+
+/// Trainer configuration (paper §5.2 usage note: 10–20% of original
+/// epochs, LR comparable to the FP32 model's final LR, divide by 10 every
+/// few epochs).
+#[derive(Debug, Clone, Copy)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub batch_size: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    /// Divide LR by `lr_decay` every `lr_decay_every` steps (0 = constant).
+    pub lr_decay_every: usize,
+    pub lr_decay: f32,
+    /// Record a loss point every `log_every` steps.
+    pub log_every: usize,
+    /// QAT: re-run range setting every N steps (0 = freeze initial ranges).
+    /// This is the "quantization ranges … updated at each iteration"
+    /// min-max variant of §5.1 at configurable granularity.
+    pub recalibrate_every: usize,
+    /// Calibration batches used per recalibration.
+    pub calib_batches: usize,
+    /// Global L2 gradient-norm clip (0 = off). Keeps the hotter detector
+    /// LRs stable across seeds.
+    pub clip_norm: f32,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 300,
+            batch_size: 16,
+            lr: 0.05,
+            momentum: 0.9,
+            lr_decay_every: 120,
+            lr_decay: 10.0,
+            log_every: 20,
+            recalibrate_every: 50,
+            calib_batches: 2,
+            clip_norm: 5.0,
+        }
+    }
+}
+
+/// One logged training point.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainPoint {
+    pub step: usize,
+    pub loss: f32,
+    pub lr: f32,
+}
+
+/// Loss curve of one run.
+#[derive(Debug, Clone, Default)]
+pub struct TrainLog {
+    pub points: Vec<TrainPoint>,
+}
+
+impl TrainLog {
+    pub fn final_loss(&self) -> f32 {
+        self.points.last().map(|p| p.loss).unwrap_or(f32::NAN)
+    }
+
+    /// Mean loss of the first / last `k` logged points — a robust
+    /// "did it learn" signal for tests and reports.
+    pub fn head_tail_mean(&self, k: usize) -> (f32, f32) {
+        let n = self.points.len();
+        let k = k.min(n).max(1);
+        let head = self.points[..k].iter().map(|p| p.loss).sum::<f32>() / k as f32;
+        let tail = self.points[n - k..].iter().map(|p| p.loss).sum::<f32>() / k as f32;
+        (head, tail)
+    }
+
+    pub fn render(&self) -> String {
+        self.points
+            .iter()
+            .map(|p| format!("step {:>5}  loss {:.4}  lr {:.2e}", p.step, p.loss, p.lr))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+/// SGD-with-momentum state per node.
+#[derive(Default, Clone)]
+struct Momentum {
+    weight: Option<Vec<f32>>,
+    weight2: Option<Vec<f32>>,
+    bias: Option<Vec<f32>>,
+    gamma: Option<Vec<f32>>,
+    beta: Option<Vec<f32>>,
+}
+
+fn sgd_update(buf: &mut Option<Vec<f32>>, grad: &[f32], param: &mut [f32], lr: f32, mu: f32) {
+    let b = buf.get_or_insert_with(|| vec![0.0; grad.len()]);
+    for ((bv, &gv), pv) in b.iter_mut().zip(grad).zip(param.iter_mut()) {
+        *bv = mu * *bv + gv;
+        *pv -= lr * *bv;
+    }
+}
+
+/// Global L2 norm of all parameter gradients.
+fn grad_norm(grads: &crate::graph::GraphGrads) -> f32 {
+    let mut sq = 0.0f64;
+    for ng in &grads.nodes {
+        for t in [&ng.weight, &ng.weight2] {
+            if let Some(t) = t {
+                sq += t.data().iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>();
+            }
+        }
+        for v in [&ng.bias, &ng.gamma, &ng.beta] {
+            if let Some(v) = v {
+                sq += v.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>();
+            }
+        }
+    }
+    (sq as f32).sqrt()
+}
+
+fn apply_grads(
+    g: &mut Graph,
+    grads: &crate::graph::GraphGrads,
+    momenta: &mut [Momentum],
+    lr: f32,
+    mu: f32,
+    clip_norm: f32,
+) {
+    // Global-norm gradient clipping (scales LR rather than copying grads).
+    let mut lr = lr;
+    if clip_norm > 0.0 {
+        let norm = grad_norm(grads);
+        if norm > clip_norm {
+            lr *= clip_norm / norm;
+        }
+    }
+    for (idx, ng) in grads.nodes.iter().enumerate() {
+        let m = &mut momenta[idx];
+        let op = &mut g.nodes[idx].op;
+        if let (Some(dw), Some(w)) = (&ng.weight, op.weight_mut()) {
+            sgd_update(&mut m.weight, dw.data(), w.data_mut(), lr, mu);
+        }
+        if let Some(dw2) = &ng.weight2 {
+            if let crate::graph::Op::Lstm { w_hh, .. } = op {
+                sgd_update(&mut m.weight2, dw2.data(), w_hh.data_mut(), lr, mu);
+            }
+        }
+        if let (Some(db), Some(b)) = (&ng.bias, op.bias_mut()) {
+            sgd_update(&mut m.bias, db, b, lr, mu);
+        }
+        if let crate::graph::Op::BatchNorm { gamma, beta, .. } = op {
+            if let Some(dg) = &ng.gamma {
+                sgd_update(&mut m.gamma, dg, gamma, lr, mu);
+            }
+            if let Some(dbta) = &ng.beta {
+                sgd_update(&mut m.beta, dbta, beta, lr, mu);
+            }
+        }
+    }
+}
+
+fn lr_at(cfg: &TrainConfig, step: usize) -> f32 {
+    // Linear warmup over the first 5% of steps, then step decay.
+    let warmup = (cfg.steps / 20).max(1);
+    let base = if cfg.lr_decay_every == 0 {
+        cfg.lr
+    } else {
+        cfg.lr / cfg.lr_decay.powi((step / cfg.lr_decay_every) as i32)
+    };
+    if step < warmup {
+        base * (step + 1) as f32 / warmup as f32
+    } else {
+        base
+    }
+}
+
+/// Train an FP32 graph in place. This is the "pretrained FP32 model"
+/// producer every paper pipeline starts from.
+pub fn fit_fp32(g: &mut Graph, model: &str, data: &TaskData, cfg: &TrainConfig) -> TrainLog {
+    let mut momenta = vec![Momentum::default(); g.nodes.len()];
+    let mut log = TrainLog::default();
+    let no_overrides: Vec<Option<Tensor>> = vec![None; g.nodes.len()];
+    for step in 0..cfg.steps {
+        let (x, targets) = data.batch(step as u64, cfg.batch_size);
+        // Training-mode BN: batch statistics + running-stat updates.
+        let (acts, bn_stats) = g.forward_train(&x, 0.9);
+        let (loss, d_out) = loss_and_grad(model, &acts[g.output], &targets);
+        let grads = backward_train(g, &x, &acts, &d_out, &no_overrides, &bn_stats);
+        apply_grads(g, &grads, &mut momenta, lr_at(cfg, step), cfg.momentum, cfg.clip_norm);
+        if step % cfg.log_every.max(1) == 0 || step + 1 == cfg.steps {
+            log.points.push(TrainPoint {
+                step,
+                loss,
+                lr: lr_at(cfg, step),
+            });
+        }
+    }
+    log
+}
+
+/// Quantization-aware fine-tuning of a PTQ-initialized sim, in place
+/// (code block 5.1's `trainer_function(model=sim.model, …)`).
+///
+/// STE: the forward uses the qdq'd weights/activations; the backward
+/// receives those same qdq'd weights as `weight_overrides` and skips the
+/// quantizer blocks, so the computed gradient is exactly fig 5.1's.
+/// Updates land on the FP32 shadow weights inside `sim.graph`.
+pub fn fit_qat(
+    sim: &mut QuantizationSimModel,
+    model: &str,
+    data: &TaskData,
+    cfg: &TrainConfig,
+) -> TrainLog {
+    let mut momenta = vec![Momentum::default(); sim.graph.nodes.len()];
+    let mut log = TrainLog::default();
+    for step in 0..cfg.steps {
+        if cfg.recalibrate_every > 0 && step % cfg.recalibrate_every == 0 && step > 0 {
+            // Range update (§5.1): weights moved, so re-set encodings.
+            // Frozen (AdaRound) parameter encodings survive.
+            let calib = data.calibration(cfg.calib_batches, cfg.batch_size);
+            sim.compute_encodings(&calib);
+        }
+        let (x, targets) = data.batch(step as u64, cfg.batch_size);
+        let (acts, captured) = sim.forward_capturing(&x);
+        let (loss, d_out) = loss_and_grad(model, &acts[sim.graph.output], &targets);
+        let grads = backward(&sim.graph, &x, &acts, &d_out, &captured);
+        apply_grads(
+            &mut sim.graph,
+            &grads,
+            &mut momenta,
+            lr_at(cfg, step),
+            cfg.momentum,
+            cfg.clip_norm,
+        );
+        if step % cfg.log_every.max(1) == 0 || step + 1 == cfg.steps {
+            log.points.push(TrainPoint {
+                step,
+                loss,
+                lr: lr_at(cfg, step),
+            });
+        }
+    }
+    // Final range refresh so exported encodings match the trained weights.
+    let calib = data.calibration(cfg.calib_batches, cfg.batch_size);
+    sim.compute_encodings(&calib);
+    log
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quantsim::{QuantParams, QuantizationSimModel};
+    use crate::task::TaskData;
+    use crate::zoo;
+
+    fn quick_cfg(steps: usize) -> TrainConfig {
+        TrainConfig {
+            steps,
+            batch_size: 8,
+            lr: 0.05,
+            lr_decay_every: 0,
+            log_every: 5,
+            recalibrate_every: 20,
+            calib_batches: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fp32_training_reduces_loss() {
+        let mut g = zoo::build("mobimini", 80).unwrap();
+        let data = TaskData::new("mobimini", 81);
+        let log = fit_fp32(&mut g, "mobimini", &data, &quick_cfg(120));
+        let (head, tail) = log.head_tail_mean(3);
+        assert!(tail < 0.9 * head, "loss did not fall: {head} -> {tail}");
+    }
+
+    #[test]
+    fn qat_training_reduces_loss_through_quantizers() {
+        let mut g = zoo::build("mobimini", 82).unwrap();
+        let data = TaskData::new("mobimini", 83);
+        // Short FP32 warmup so quantization has signal to preserve.
+        fit_fp32(&mut g, "mobimini", &data, &quick_cfg(40));
+        let mut sim = QuantizationSimModel::with_defaults(g, QuantParams::default());
+        sim.compute_encodings(&data.calibration(2, 8));
+        let log = fit_qat(&mut sim, "mobimini", &data, &quick_cfg(60));
+        let (head, tail) = log.head_tail_mean(3);
+        assert!(tail < head, "QAT loss did not fall: {head} -> {tail}");
+    }
+
+    #[test]
+    fn qat_trains_recurrent_models() {
+        // Table 5.2's substrate: bi-LSTM QAT must be trainable.
+        let mut g = zoo::build("speechmini", 84).unwrap();
+        let data = TaskData::new("speechmini", 85);
+        fit_fp32(&mut g, "speechmini", &data, &quick_cfg(30));
+        let mut sim = QuantizationSimModel::with_defaults(g, QuantParams::default());
+        sim.compute_encodings(&data.calibration(1, 8));
+        let log = fit_qat(&mut sim, "speechmini", &data, &quick_cfg(30));
+        let (head, tail) = log.head_tail_mean(2);
+        assert!(tail <= head * 1.05, "LSTM QAT diverged: {head} -> {tail}");
+    }
+
+    #[test]
+    fn lr_schedule_divides() {
+        let cfg = TrainConfig {
+            steps: 40, // warmup = max(40/20, 1) = 2 steps
+            lr: 1.0,
+            lr_decay_every: 10,
+            lr_decay: 10.0,
+            ..Default::default()
+        };
+        // Linear warmup over the first steps/20 steps…
+        assert!((lr_at(&cfg, 0) - 0.5).abs() < 1e-9);
+        // …then the step-decay schedule.
+        assert_eq!(lr_at(&cfg, 5), 1.0);
+        assert!((lr_at(&cfg, 10) - 0.1).abs() < 1e-9);
+        assert!((lr_at(&cfg, 25) - 0.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn qat_updates_shadow_weights_not_quantized_copies() {
+        let mut g = zoo::build("resmini", 86).unwrap();
+        let data = TaskData::new("resmini", 87);
+        fit_fp32(&mut g, "resmini", &data, &quick_cfg(10));
+        let mut sim = QuantizationSimModel::with_defaults(g, QuantParams::default());
+        sim.compute_encodings(&data.calibration(1, 8));
+        let idx = sim.graph.find("stem.conv").unwrap();
+        let before = sim.graph.nodes[idx].op.weight().unwrap().clone();
+        fit_qat(&mut sim, "resmini", &data, &quick_cfg(5));
+        let after = sim.graph.nodes[idx].op.weight().unwrap();
+        assert!(after.max_abs_diff(&before) > 0.0, "weights must move");
+        // Shadow weights are FP32 (off-grid): qdq must still perturb them.
+        let q = sim.quantized_weight(idx).unwrap();
+        assert!(q.max_abs_diff(after) > 0.0);
+    }
+}

@@ -1,0 +1,294 @@
+//! Uniform affine / symmetric quantization encodings (paper §2.2).
+//!
+//! An [`Encoding`] is the full set of quantization parameters of one
+//! quantizer: scale `s`, zero-point `z`, bit-width `b`, plus the derived
+//! grid limits `(q_min, q_max)`. Asymmetric encodings use the unsigned grid
+//! `{0, …, 2^b − 1}` with a zero-point (eq 2.4/2.7); symmetric encodings
+//! restrict `z = 0` on the signed grid `{−(2^{b−1}−1), …, 2^{b−1}−1}`
+//! (eq 2.8c, the restricted-range variant common on fixed-point HW), or the
+//! unsigned grid (eq 2.8b) when the data is one-tailed.
+
+/// Range-setting scheme (paper §4.4 / code block 4.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantScheme {
+    /// `QuantScheme.post_training_tf`: plain min-max.
+    Tf,
+    /// `QuantScheme.post_training_tf_enhanced`: SQNR/MSE-optimal range
+    /// search.
+    TfEnhanced,
+}
+
+impl QuantScheme {
+    pub fn parse(s: &str) -> Option<QuantScheme> {
+        match s {
+            "tf" | "post_training_tf" | "minmax" => Some(QuantScheme::Tf),
+            "tf_enhanced" | "post_training_tf_enhanced" | "sqnr" => Some(QuantScheme::TfEnhanced),
+            _ => None,
+        }
+    }
+}
+
+/// One quantizer's parameters. `offset` is the zero-point on the integer
+/// grid; for symmetric encodings it is 0 (signed) and the grid is
+/// `[int_min, int_max]`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Encoding {
+    pub min: f32,
+    pub max: f32,
+    pub scale: f32,
+    pub offset: i32,
+    pub bw: u32,
+    pub symmetric: bool,
+    /// Integer grid bounds implied by (bw, symmetric, signedness).
+    pub int_min: i32,
+    pub int_max: i32,
+}
+
+impl Encoding {
+    /// Build an encoding covering `[min, max]` (the range is first nudged
+    /// so that real zero is exactly representable — §2.2: "the zero-point
+    /// … ensures that real zero is quantized without error").
+    pub fn from_min_max(min: f32, max: f32, bw: u32, symmetric: bool) -> Encoding {
+        if bw >= 32 {
+            return Encoding::passthrough();
+        }
+        assert!(bw >= 1, "bitwidth {bw}");
+        assert!(min.is_finite() && max.is_finite());
+        let levels = (1u64 << bw) as f32 - 1.0;
+        // Always include zero in the range.
+        let min = min.min(0.0);
+        let max = max.max(0.0).max(min + 1e-8);
+        if symmetric {
+            if min >= 0.0 {
+                // One-tailed → unsigned symmetric (eq 2.8b).
+                let scale = (max / levels).max(f32::MIN_POSITIVE);
+                Encoding {
+                    min: 0.0,
+                    max: scale * levels,
+                    scale,
+                    offset: 0,
+                    bw,
+                    symmetric,
+                    int_min: 0,
+                    int_max: levels as i32,
+                }
+            } else {
+                // Signed symmetric restricted grid (eq 2.8c with ±(2^{b−1}−1)).
+                let half = (1i64 << (bw - 1)) as i32 - 1;
+                let amax = max.abs().max(min.abs());
+                let scale = (amax / half as f32).max(f32::MIN_POSITIVE);
+                Encoding {
+                    min: -scale * half as f32,
+                    max: scale * half as f32,
+                    scale,
+                    offset: 0,
+                    bw,
+                    symmetric,
+                    int_min: -half,
+                    int_max: half,
+                }
+            }
+        } else {
+            // Asymmetric affine (eq 2.4/2.7): unsigned grid with zero-point.
+            let scale = ((max - min) / levels).max(f32::MIN_POSITIVE);
+            let zero_point = (-min / scale).round() as i32;
+            let zero_point = zero_point.clamp(0, levels as i32);
+            Encoding {
+                min: -scale * zero_point as f32,
+                max: scale * (levels - zero_point as f32),
+                scale,
+                offset: zero_point,
+                bw,
+                symmetric,
+                int_min: 0,
+                int_max: levels as i32,
+            }
+        }
+    }
+
+    /// 32-bit passthrough encoding (the debug flow's "set bit-width to 32 /
+    /// bypass quantization" sanity check, §4.8). `qdq` is exact identity —
+    /// bit-widths ≥ 32 short-circuit the grid entirely.
+    pub fn passthrough() -> Encoding {
+        Encoding {
+            min: f32::MIN,
+            max: f32::MAX,
+            scale: 1.0,
+            offset: 0,
+            bw: 32,
+            symmetric: true,
+            int_min: i32::MIN + 1,
+            int_max: i32::MAX,
+        }
+    }
+
+    /// True when this encoding bypasses quantization (bw ≥ 32).
+    #[inline]
+    pub fn is_passthrough(&self) -> bool {
+        self.bw >= 32
+    }
+
+    /// Quantize one value to the integer grid (eq 2.4 / 2.8).
+    #[inline]
+    pub fn quantize(&self, x: f32) -> i32 {
+        // round-half-to-even: matches XLA/jnp rounding bit-for-bit (the
+        // cross-engine contract) and vectorizes (vroundps), unlike
+        // f32::round's half-away-from-zero.
+        let q = (x / self.scale).round_ties_even() as i64 + self.offset as i64;
+        q.clamp(self.int_min as i64, self.int_max as i64) as i32
+    }
+
+    /// De-quantize an integer back to real values (eq 2.6).
+    #[inline]
+    pub fn dequantize(&self, q: i32) -> f32 {
+        self.scale * (q - self.offset) as f32
+    }
+
+    /// Quantize-dequantize one value (eq 2.7).
+    #[inline]
+    pub fn qdq(&self, x: f32) -> f32 {
+        if self.is_passthrough() {
+            return x;
+        }
+        self.dequantize(self.quantize(x))
+    }
+
+    /// In-place qdq over a slice (hot path: branch-free clamp).
+    pub fn qdq_slice(&self, xs: &mut [f32]) {
+        if self.is_passthrough() {
+            return;
+        }
+        let inv_s = 1.0 / self.scale;
+        let lo = self.int_min as f32;
+        let hi = self.int_max as f32;
+        let z = self.offset as f32;
+        // Round-ties-even via the 1.5*2^23 magic constant: exact for
+        // |v| < 2^22 (our integer grids are tiny), branch-free, and
+        // vectorizes on plain SSE2 where round_ties_even falls back to a
+        // libm call. Clamp-before-round is equivalent for integer bounds.
+        const MAGIC: f32 = 12_582_912.0; // 1.5 * 2^23
+        for x in xs {
+            let q = (*x * inv_s + z).clamp(lo, hi);
+            let q = (q + MAGIC) - MAGIC;
+            *x = self.scale * (q - z);
+        }
+    }
+
+    pub fn qdq_tensor(&self, x: &crate::tensor::Tensor) -> crate::tensor::Tensor {
+        let mut out = x.clone();
+        self.qdq_slice(out.data_mut());
+        out
+    }
+
+    /// Grid limits (§2.2): values outside [grid_min, grid_max] clip.
+    pub fn grid_min(&self) -> f32 {
+        self.scale * (self.int_min - self.offset) as f32
+    }
+
+    pub fn grid_max(&self) -> f32 {
+        self.scale * (self.int_max - self.offset) as f32
+    }
+
+    /// Number of representable levels.
+    pub fn levels(&self) -> u64 {
+        (self.int_max as i64 - self.int_min as i64 + 1) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_is_exactly_representable() {
+        for (lo, hi, sym) in [
+            (-1.3f32, 2.7f32, false),
+            (0.1, 5.0, false),
+            (-4.0, -0.5, false),
+            (-3.0, 3.0, true),
+            (0.0, 6.0, true),
+        ] {
+            let e = Encoding::from_min_max(lo, hi, 8, sym);
+            assert_eq!(e.qdq(0.0), 0.0, "({lo},{hi},{sym})");
+        }
+    }
+
+    #[test]
+    fn asymmetric_grid_limits() {
+        let e = Encoding::from_min_max(-1.0, 1.0, 8, false);
+        assert_eq!(e.int_min, 0);
+        assert_eq!(e.int_max, 255);
+        assert!((e.grid_min() - e.min).abs() < 1e-6);
+        assert!((e.grid_max() - e.max).abs() < 1e-6);
+        // Clipping beyond limits.
+        assert!((e.qdq(10.0) - e.grid_max()).abs() < 1e-6);
+        assert!((e.qdq(-10.0) - e.grid_min()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn symmetric_signed_grid() {
+        let e = Encoding::from_min_max(-2.0, 1.0, 8, true);
+        assert_eq!(e.offset, 0);
+        assert_eq!(e.int_min, -127);
+        assert_eq!(e.int_max, 127);
+        assert!((e.scale - 2.0 / 127.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn symmetric_unsigned_for_one_tailed() {
+        // ReLU-style data (fig 2.3 middle grid).
+        let e = Encoding::from_min_max(0.0, 6.0, 8, true);
+        assert_eq!(e.int_min, 0);
+        assert_eq!(e.int_max, 255);
+        assert!((e.scale - 6.0 / 255.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn rounding_error_bounded_by_half_scale() {
+        let e = Encoding::from_min_max(-1.0, 1.0, 8, false);
+        for i in 0..1000 {
+            let x = -1.0 + 2.0 * (i as f32) / 999.0;
+            assert!((e.qdq(x) - x).abs() <= 0.5 * e.scale + 1e-7);
+        }
+    }
+
+    #[test]
+    fn quantize_dequantize_integers() {
+        let e = Encoding::from_min_max(-1.0, 1.0, 8, false);
+        assert_eq!(e.quantize(e.dequantize(17)), 17);
+        assert_eq!(e.quantize(e.dequantize(e.int_max)), e.int_max);
+    }
+
+    #[test]
+    fn degenerate_range_does_not_blow_up() {
+        let e = Encoding::from_min_max(0.0, 0.0, 8, false);
+        assert!(e.scale > 0.0);
+        assert_eq!(e.qdq(0.0), 0.0);
+    }
+
+    #[test]
+    fn passthrough_is_exact_identity() {
+        let e = Encoding::passthrough();
+        assert!(e.is_passthrough());
+        for x in [-1234.5f32, 0.0, 3.25e4, f32::MIN_POSITIVE] {
+            assert_eq!(e.qdq(x), x);
+        }
+        // And slice form.
+        let mut xs = vec![0.1f32, -7.77, 9e9];
+        let orig = xs.clone();
+        e.qdq_slice(&mut xs);
+        assert_eq!(xs, orig);
+        // from_min_max with bw >= 32 also yields passthrough.
+        assert!(Encoding::from_min_max(-1.0, 1.0, 32, false).is_passthrough());
+    }
+
+    #[test]
+    fn scheme_parse() {
+        assert_eq!(QuantScheme::parse("tf"), Some(QuantScheme::Tf));
+        assert_eq!(
+            QuantScheme::parse("post_training_tf_enhanced"),
+            Some(QuantScheme::TfEnhanced)
+        );
+        assert_eq!(QuantScheme::parse("bogus"), None);
+    }
+}

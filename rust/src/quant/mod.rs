@@ -1,0 +1,169 @@
+//! Quantization core: uniform affine/symmetric quantizers, encoding
+//! analyzers (min-max `tf` and SQNR `tf_enhanced`, §4.4 of the paper), and
+//! integer-exact quantized kernels that mirror the accelerator MAC pipeline
+//! of figs 2.1/2.2.
+
+mod analyzer;
+mod encoding;
+mod qops;
+
+pub use analyzer::{
+    per_channel_weight_encodings, weight_encoding, EncodingAnalyzer, Histogram, SQNR_GAMMA,
+};
+pub use encoding::{Encoding, QuantScheme};
+pub use qops::{quantized_conv2d, quantized_linear, quantized_matmul_i32};
+
+use crate::tensor::Tensor;
+
+/// Quantizer granularity (§2.2 "Quantization granularity").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Granularity {
+    PerTensor,
+    /// Per output channel (axis 0 of OIHW / [out,in] weights). Activations
+    /// are always per-tensor (§2.3: per-channel activations would require
+    /// rescaling the accumulator per input channel).
+    PerChannel,
+}
+
+/// A configured quantizer: one encoding per tensor, or one per channel.
+#[derive(Debug, Clone)]
+pub struct Quantizer {
+    pub encodings: Vec<Encoding>,
+    pub granularity: Granularity,
+    /// Channel axis for per-channel mode (0 for weights).
+    pub axis: usize,
+    pub enabled: bool,
+}
+
+impl Quantizer {
+    pub fn per_tensor(enc: Encoding) -> Quantizer {
+        Quantizer {
+            encodings: vec![enc],
+            granularity: Granularity::PerTensor,
+            axis: 0,
+            enabled: true,
+        }
+    }
+
+    pub fn per_channel(encs: Vec<Encoding>, axis: usize) -> Quantizer {
+        Quantizer {
+            encodings: encs,
+            granularity: Granularity::PerChannel,
+            axis,
+            enabled: true,
+        }
+    }
+
+    pub fn bitwidth(&self) -> u32 {
+        self.encodings[0].bw
+    }
+
+    /// Quantize-dequantize (the simulation op of fig 3.1). Identity when
+    /// disabled — used by the debugging flow's per-quantizer sweeps.
+    pub fn qdq(&self, x: &Tensor) -> Tensor {
+        if !self.enabled {
+            return x.clone();
+        }
+        match self.granularity {
+            Granularity::PerTensor => self.encodings[0].qdq_tensor(x),
+            Granularity::PerChannel => {
+                let ch = x.dim(self.axis);
+                assert_eq!(self.encodings.len(), ch, "per-channel encoding count");
+                let outer: usize = x.shape()[..self.axis].iter().product();
+                let inner: usize = x.shape()[self.axis + 1..].iter().product();
+                let mut out = x.clone();
+                let data = out.data_mut();
+                for o in 0..outer {
+                    for c in 0..ch {
+                        let base = (o * ch + c) * inner;
+                        self.encodings[c].qdq_slice(&mut data[base..base + inner]);
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Mean squared quantization error on a tensor — the unit the debug
+    /// flow and range-setting experiments report.
+    pub fn mse(&self, x: &Tensor) -> f32 {
+        let q = self.qdq(x);
+        q.sq_err(x) / x.len().max(1) as f32
+    }
+}
+
+/// Signal-to-quantization-noise ratio in dB: 10·log10(‖x‖² / ‖x−x̂‖²).
+pub fn sqnr_db(x: &Tensor, xhat: &Tensor) -> f32 {
+    let signal: f32 = x.data().iter().map(|v| v * v).sum();
+    let noise: f32 = x.sq_err(xhat);
+    if noise <= f32::MIN_POSITIVE {
+        return f32::INFINITY;
+    }
+    10.0 * (signal / noise).log10()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn per_tensor_qdq_roundtrip_on_grid() {
+        // Values already on the quantization grid must be fix-points.
+        let enc = Encoding::from_min_max(0.0, 2.55, 8, false);
+        let x = Tensor::new(&[4], vec![0.0, 0.01, 1.28, 2.55]);
+        let q = Quantizer::per_tensor(enc).qdq(&x);
+        assert!(q.max_abs_diff(&x) < 1e-6);
+    }
+
+    #[test]
+    fn disabled_quantizer_is_identity() {
+        let mut rng = Rng::new(1);
+        let x = Tensor::randn(&mut rng, &[32], 3.0);
+        let mut q = Quantizer::per_tensor(Encoding::from_min_max(-1.0, 1.0, 8, false));
+        q.enabled = false;
+        assert_eq!(q.qdq(&x), x);
+    }
+
+    #[test]
+    fn per_channel_uses_distinct_encodings() {
+        // Channel 0 spans [-1,1]; channel 1 spans [-100,100]. Per-channel
+        // quantization must keep channel-0 error small.
+        let x = Tensor::new(&[2, 1, 1, 2], vec![0.5, -0.5, 60.0, -60.0]);
+        let encs = vec![
+            Encoding::from_min_max(-1.0, 1.0, 8, true),
+            Encoding::from_min_max(-100.0, 100.0, 8, true),
+        ];
+        let q = Quantizer::per_channel(encs, 0);
+        let y = q.qdq(&x);
+        assert!((y.data()[0] - 0.5).abs() < 0.01);
+        assert!((y.data()[2] - 60.0).abs() < 1.0);
+        // A per-tensor quantizer at the wide range murders channel 0.
+        let qt = Quantizer::per_tensor(Encoding::from_min_max(-100.0, 100.0, 8, true));
+        let yt = qt.qdq(&x);
+        assert!((yt.data()[0] - 0.5).abs() > 0.1);
+    }
+
+    #[test]
+    fn sqnr_improves_with_bitwidth() {
+        let mut rng = Rng::new(2);
+        let x = Tensor::randn(&mut rng, &[4096], 1.0);
+        let mut last = f32::NEG_INFINITY;
+        for bw in [2u32, 4, 6, 8, 12] {
+            let enc = Encoding::from_min_max(x.min(), x.max(), bw, false);
+            let q = Quantizer::per_tensor(enc).qdq(&x);
+            let s = sqnr_db(&x, &q);
+            assert!(s > last, "bw={bw}: {s} !> {last}");
+            last = s;
+        }
+        // ~6 dB/bit law should put 8-bit min-max normal data above 30 dB.
+        assert!(last > 40.0);
+    }
+
+    #[test]
+    fn quantizer_mse_positive_for_off_grid() {
+        let enc = Encoding::from_min_max(-1.0, 1.0, 4, false);
+        let x = Tensor::new(&[3], vec![0.123, -0.777, 0.999]);
+        assert!(Quantizer::per_tensor(enc).mse(&x) > 0.0);
+    }
+}

@@ -1,0 +1,196 @@
+//! Integer-exact quantized kernels — the accelerator MAC pipeline of
+//! figs 2.1/2.2 and eq 2.3/2.9, executed with real INT32 accumulators.
+//!
+//! These are not the simulation path (that is [`super::Quantizer::qdq`] on
+//! f32); they exist to *prove* the simulation is faithful: a fake-quant
+//! forward and this integer pipeline must agree to float tolerance, which
+//! `rust/tests/properties.rs` and the `quantized_mac` bench check. They
+//! also demonstrate the asymmetric-input decomposition of eq 2.9 (the
+//! data-dependent second term, and why weights stay symmetric).
+
+use super::encoding::Encoding;
+use crate::tensor::{Conv2dSpec, Tensor};
+
+/// Integer matmul with INT32 accumulation:
+/// `acc[m,n] = Σ_k w_int[m,k] · x_int[k,n]` followed by the requantization
+/// step back to real values:
+/// `y = s_w·s_x·(acc − z_x·Σ_k w_int[m,k]) + bias` (eq 2.9 with symmetric
+/// weights, i.e. `z_w = 0`).
+///
+/// Weights must use a symmetric encoding — asymmetric weights would add the
+/// data-dependent cross term the paper recommends avoiding (§2.3).
+pub fn quantized_matmul_i32(
+    w: &Tensor,
+    w_enc: &Encoding,
+    x: &Tensor,
+    x_enc: &Encoding,
+    bias: Option<&[f32]>,
+) -> Tensor {
+    assert_eq!(w_enc.offset, 0, "weights must be symmetric (z_w = 0)");
+    let (m, k) = (w.dim(0), w.dim(1));
+    let (k2, n) = (x.dim(0), x.dim(1));
+    assert_eq!(k, k2);
+    // Quantize both operands to their integer grids.
+    let w_int: Vec<i32> = w.data().iter().map(|&v| w_enc.quantize(v)).collect();
+    let x_int: Vec<i32> = x.data().iter().map(|&v| x_enc.quantize(v)).collect();
+    let zx = x_enc.offset;
+    let s = w_enc.scale * x_enc.scale;
+    let mut out = vec![0.0f32; m * n];
+    for mi in 0..m {
+        let wrow = &w_int[mi * k..(mi + 1) * k];
+        // Row sum of integer weights — precomputable, folds into bias
+        // (the "third term" of eq 2.9).
+        let wsum: i64 = wrow.iter().map(|&v| v as i64).sum();
+        let b = bias.map(|bs| bs[mi]).unwrap_or(0.0);
+        for ni in 0..n {
+            // INT32 accumulator (i64 here to detect overflow in debug).
+            let mut acc: i64 = 0;
+            for kk in 0..k {
+                acc += wrow[kk] as i64 * x_int[kk * n + ni] as i64;
+            }
+            debug_assert!(
+                acc.abs() <= i32::MAX as i64,
+                "INT32 accumulator overflow — paper §2.1: keep accumulators 32-bit"
+            );
+            let corrected = acc - zx as i64 * wsum;
+            out[mi * n + ni] = s * corrected as f32 + b;
+        }
+    }
+    Tensor::new(&[m, n], out)
+}
+
+/// Quantized linear layer `y = W·x + b` for x of shape [N, F] (batch-major);
+/// returns [N, O]. Weight is [O, F].
+pub fn quantized_linear(
+    weight: &Tensor,
+    w_enc: &Encoding,
+    x: &Tensor,
+    x_enc: &Encoding,
+    bias: Option<&[f32]>,
+) -> Tensor {
+    let xt = x.transpose2(); // [F, N]
+    let y = quantized_matmul_i32(weight, w_enc, &xt, x_enc, bias); // [O, N]
+    y.transpose2()
+}
+
+/// Quantized conv via im2col + the integer matmul. Weight [O,I,kh,kw].
+pub fn quantized_conv2d(
+    x: &Tensor,
+    x_enc: &Encoding,
+    weight: &Tensor,
+    w_enc: &Encoding,
+    bias: Option<&[f32]>,
+    spec: Conv2dSpec,
+) -> Tensor {
+    let (n, _c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let (o, i, kh, kw) = (weight.dim(0), weight.dim(1), weight.dim(2), weight.dim(3));
+    let (oh, ow) = spec.out_hw(h, w, kh, kw);
+    let cols = crate::tensor::im2col(x, kh, kw, spec); // [I*kh*kw, N*OH*OW]
+    let wmat = weight.reshape(&[o, i * kh * kw]);
+    let ymat = quantized_matmul_i32(&wmat, w_enc, &cols, x_enc, bias); // [O, L]
+    // [O, N, OH, OW] -> [N, O, OH, OW]
+    let inner = oh * ow;
+    let mut out = vec![0.0f32; n * o * inner];
+    let yd = ymat.data();
+    for oi in 0..o {
+        for ni in 0..n {
+            let src = (oi * n + ni) * inner;
+            let dst = (ni * o + oi) * inner;
+            out[dst..dst + inner].copy_from_slice(&yd[src..src + inner]);
+        }
+    }
+    Tensor::new(&[n, o, oh, ow], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::Quantizer;
+    use crate::rng::Rng;
+    use crate::tensor::conv2d;
+
+    /// Integer pipeline == fake-quant simulation (conv): the core claim of
+    /// quantization simulation (§3.1) on our stack.
+    #[test]
+    fn integer_conv_matches_fake_quant_sim() {
+        let mut rng = Rng::new(1);
+        let spec = Conv2dSpec::same(3);
+        let x = Tensor::rand_uniform(&mut rng, &[1, 3, 6, 6], 0.0, 4.0);
+        let w = Tensor::randn(&mut rng, &[4, 3, 3, 3], 0.4);
+        let b: Vec<f32> = rng.normal_vec(4, 0.1);
+        let x_enc = Encoding::from_min_max(0.0, 4.0, 8, false);
+        let w_enc = Encoding::from_min_max(w.min(), w.max(), 8, true);
+        // Simulation: conv(qdq(x), qdq(w)).
+        let xq = Quantizer::per_tensor(x_enc).qdq(&x);
+        let wq = Quantizer::per_tensor(w_enc).qdq(&w);
+        let sim = conv2d(&xq, &wq, Some(&b), spec);
+        // Integer-exact path.
+        let int = quantized_conv2d(&x, &x_enc, &w, &w_enc, Some(&b), spec);
+        assert!(
+            sim.max_abs_diff(&int) < 1e-3,
+            "sim vs int: {}",
+            sim.max_abs_diff(&int)
+        );
+    }
+
+    #[test]
+    fn integer_matmul_matches_fake_quant_sim() {
+        let mut rng = Rng::new(2);
+        let w = Tensor::randn(&mut rng, &[8, 16], 0.5);
+        let x = Tensor::rand_uniform(&mut rng, &[16, 5], -2.0, 2.0);
+        let w_enc = Encoding::from_min_max(w.min(), w.max(), 8, true);
+        let x_enc = Encoding::from_min_max(-2.0, 2.0, 8, false);
+        let wq = Quantizer::per_tensor(w_enc).qdq(&w);
+        let xq = Quantizer::per_tensor(x_enc).qdq(&x);
+        let sim = crate::tensor::matmul(&wq, &xq);
+        let int = quantized_matmul_i32(&w, &w_enc, &x, &x_enc, None);
+        assert!(sim.max_abs_diff(&int) < 1e-3);
+    }
+
+    #[test]
+    fn zero_point_correction_term_matters() {
+        // With a nonzero activation zero-point, omitting the correction term
+        // must change the answer — guards against silently dropping the
+        // second term of eq 2.9.
+        let w = Tensor::new(&[1, 2], vec![1.0, 1.0]);
+        let x = Tensor::new(&[2, 1], vec![1.0, 3.0]);
+        let w_enc = Encoding::from_min_max(-1.0, 1.0, 8, true);
+        let x_enc = Encoding::from_min_max(-4.0, 4.0, 8, false);
+        assert_ne!(x_enc.offset, 0);
+        let y = quantized_matmul_i32(&w, &w_enc, &x, &x_enc, None);
+        assert!((y.data()[0] - 4.0).abs() < 0.1, "{}", y.data()[0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn asymmetric_weights_rejected() {
+        let w = Tensor::new(&[1, 1], vec![0.7]);
+        let x = Tensor::new(&[1, 1], vec![1.0]);
+        let w_enc = Encoding::from_min_max(-0.3, 0.9, 8, false); // z_w != 0
+        assert_ne!(w_enc.offset, 0);
+        let x_enc = Encoding::from_min_max(0.0, 1.0, 8, false);
+        quantized_matmul_i32(&w, &w_enc, &x, &x_enc, None);
+    }
+
+    #[test]
+    fn quantized_linear_batched() {
+        let mut rng = Rng::new(3);
+        let w = Tensor::randn(&mut rng, &[4, 6], 0.5);
+        let x = Tensor::rand_uniform(&mut rng, &[3, 6], -1.0, 1.0);
+        let b: Vec<f32> = rng.normal_vec(4, 0.1);
+        let w_enc = Encoding::from_min_max(w.min(), w.max(), 8, true);
+        let x_enc = Encoding::from_min_max(-1.0, 1.0, 8, false);
+        let y = quantized_linear(&w, &w_enc, &x, &x_enc, Some(&b));
+        assert_eq!(y.shape(), &[3, 4]);
+        // Compare to fp32 with qdq'd operands.
+        let wq = Quantizer::per_tensor(w_enc).qdq(&w);
+        let xq = Quantizer::per_tensor(x_enc).qdq(&x);
+        let r = crate::tensor::matmul(&xq, &wq.transpose2());
+        for ni in 0..3 {
+            for oi in 0..4 {
+                let want = r.data()[ni * 4 + oi] + b[oi];
+                assert!((y.data()[ni * 4 + oi] - want).abs() < 1e-3);
+            }
+        }
+    }
+}

@@ -1,0 +1,399 @@
+//! Runtime-configuration parsing (paper §3.4, fig 3.4).
+//!
+//! The JSON file has six sections of increasing specificity — `defaults`,
+//! `params`, `op_type`, `supergroups`, `model_input`, `model_output` — and
+//! tailors the simulation to a target runtime/hardware. This module parses
+//! it into [`SimConfig`] and resolves, per graph node, whether its output
+//! and parameters are quantized and with what scheme.
+
+use crate::json::{parse, Json};
+use crate::quant::QuantScheme;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+/// Per-op-type overrides (the `op_type` section).
+#[derive(Debug, Clone, Default)]
+pub struct OpTypeRule {
+    pub is_output_quantized: Option<bool>,
+    pub is_symmetric: Option<bool>,
+    pub bitwidth: Option<u32>,
+}
+
+/// Parsed runtime configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    // defaults.ops
+    pub act_quantized: bool,
+    pub act_symmetric: bool,
+    // defaults.params
+    pub param_quantized: bool,
+    pub param_symmetric: bool,
+    pub per_channel: bool,
+    // params section (by param name, e.g. "bias")
+    pub bias_quantized: bool,
+    // op_type section
+    pub op_type: BTreeMap<String, OpTypeRule>,
+    // supergroups: op-kind chains whose intermediate outputs skip quantizers
+    pub supergroups: Vec<Vec<String>>,
+    // model_input / model_output
+    pub quantize_model_input: bool,
+    pub quantize_model_output: bool,
+}
+
+impl Default for SimConfig {
+    /// AIMET's recommended default for common AI accelerators (§4.2):
+    /// asymmetric activations, symmetric weights, per-tensor, unquantized
+    /// bias (stored INT32 on target, §2.1), conv/linear+activation fused
+    /// supergroups, quantized model input.
+    fn default() -> SimConfig {
+        let mut op_type = BTreeMap::new();
+        // Flatten/MaxPool produce no new values (§7.3.1).
+        op_type.insert(
+            "Flatten".to_string(),
+            OpTypeRule {
+                is_output_quantized: Some(false),
+                ..Default::default()
+            },
+        );
+        op_type.insert(
+            "MaxPool2".to_string(),
+            OpTypeRule {
+                is_output_quantized: Some(false),
+                ..Default::default()
+            },
+        );
+        let supergroups = [
+            vec!["Conv2d", "BatchNorm", "Relu"],
+            vec!["Conv2d", "BatchNorm", "Relu6"],
+            vec!["DepthwiseConv2d", "BatchNorm", "Relu"],
+            vec!["DepthwiseConv2d", "BatchNorm", "Relu6"],
+            vec!["Conv2d", "BatchNorm"],
+            vec!["DepthwiseConv2d", "BatchNorm"],
+            vec!["Conv2d", "Relu"],
+            vec!["Conv2d", "Relu6"],
+            vec!["DepthwiseConv2d", "Relu"],
+            vec!["DepthwiseConv2d", "Relu6"],
+            vec!["Linear", "Relu"],
+        ]
+        .into_iter()
+        .map(|v| v.into_iter().map(String::from).collect())
+        .collect();
+        SimConfig {
+            act_quantized: true,
+            act_symmetric: false,
+            param_quantized: true,
+            param_symmetric: true,
+            per_channel: false,
+            bias_quantized: false,
+            op_type,
+            supergroups,
+            quantize_model_input: true,
+            quantize_model_output: true,
+        }
+    }
+}
+
+impl SimConfig {
+    /// Parse an AIMET-style runtime-config JSON document.
+    pub fn from_json(text: &str) -> Result<SimConfig> {
+        let root = parse(text).map_err(|e| anyhow!("config parse error: {e}"))?;
+        let mut cfg = SimConfig::default();
+        // Parsed configs start from an *empty* supergroup set — the file is
+        // the authority on fusion for its target runtime.
+        cfg.supergroups.clear();
+        cfg.op_type.clear();
+
+        let get_bool = |obj: &Json, key: &str| obj.get(key).and_then(|v| v.as_bool());
+
+        if let Some(defaults) = root.get("defaults") {
+            if let Some(ops) = defaults.get("ops") {
+                if let Some(b) = get_bool(ops, "is_output_quantized") {
+                    cfg.act_quantized = b;
+                }
+                if let Some(b) = get_bool(ops, "is_symmetric") {
+                    cfg.act_symmetric = b;
+                }
+            }
+            if let Some(params) = defaults.get("params") {
+                if let Some(b) = get_bool(params, "is_quantized") {
+                    cfg.param_quantized = b;
+                }
+                if let Some(b) = get_bool(params, "is_symmetric") {
+                    cfg.param_symmetric = b;
+                }
+            }
+            if let Some(b) = get_bool(defaults, "per_channel_quantization") {
+                cfg.per_channel = b;
+            }
+        }
+        if let Some(params) = root.get("params") {
+            if let Some(bias) = params.get("bias") {
+                if let Some(b) = get_bool(bias, "is_quantized") {
+                    cfg.bias_quantized = b;
+                }
+            }
+        }
+        if let Some(op_type) = root.get("op_type").and_then(|v| v.as_obj()) {
+            for (kind, rule) in op_type {
+                cfg.op_type.insert(
+                    kind.clone(),
+                    OpTypeRule {
+                        is_output_quantized: get_bool(rule, "is_output_quantized"),
+                        is_symmetric: get_bool(rule, "is_symmetric"),
+                        bitwidth: rule.get("bitwidth").and_then(|v| v.as_u32()),
+                    },
+                );
+            }
+        }
+        if let Some(groups) = root.get("supergroups").and_then(|v| v.as_arr()) {
+            for gr in groups {
+                if let Some(ops) = gr.get("op_list").and_then(|v| v.as_arr()) {
+                    cfg.supergroups.push(
+                        ops.iter()
+                            .filter_map(|o| o.as_str().map(String::from))
+                            .collect(),
+                    );
+                }
+            }
+        }
+        if let Some(mi) = root.get("model_input") {
+            if let Some(b) = get_bool(mi, "is_input_quantized") {
+                cfg.quantize_model_input = b;
+            }
+        }
+        if let Some(mo) = root.get("model_output") {
+            if let Some(b) = get_bool(mo, "is_output_quantized") {
+                cfg.quantize_model_output = b;
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Effective output-quantization decision for an op kind.
+    pub fn output_quantized(&self, kind: &str) -> bool {
+        self.op_type
+            .get(kind)
+            .and_then(|r| r.is_output_quantized)
+            .unwrap_or(self.act_quantized)
+    }
+
+    /// Effective activation symmetry for an op kind.
+    pub fn act_symmetric_for(&self, kind: &str) -> bool {
+        self.op_type
+            .get(kind)
+            .and_then(|r| r.is_symmetric)
+            .unwrap_or(self.act_symmetric)
+    }
+
+    /// Per-op bitwidth override.
+    pub fn bw_override(&self, kind: &str) -> Option<u32> {
+        self.op_type.get(kind).and_then(|r| r.bitwidth)
+    }
+}
+
+/// Mark which node outputs are *suppressed* by supergroup fusion: for each
+/// matched chain, every op but the last loses its output quantizer
+/// (on-target the fused kernel produces one output). Chains match along
+/// single-consumer edges only.
+pub fn supergroup_suppressed(g: &crate::graph::Graph, cfg: &SimConfig) -> Vec<bool> {
+    let n = g.nodes.len();
+    let mut suppressed = vec![false; n];
+    // Longest-match-first so Conv+BN+Relu wins over Conv+BN.
+    let mut groups = cfg.supergroups.clone();
+    groups.sort_by_key(|b| std::cmp::Reverse(b.len()));
+    for start in 0..n {
+        for group in &groups {
+            if group.is_empty() || g.nodes[start].op.kind() != group[0] {
+                continue;
+            }
+            // Try to follow the chain.
+            let mut chain = vec![start];
+            let mut cur = start;
+            let mut ok = true;
+            for want in &group[1..] {
+                let cons = g.consumers(cur);
+                if cons.len() != 1 || g.nodes[cons[0]].op.kind() != want {
+                    ok = false;
+                    break;
+                }
+                cur = cons[0];
+                chain.push(cur);
+            }
+            if ok {
+                for &idx in &chain[..chain.len() - 1] {
+                    suppressed[idx] = true;
+                }
+                break; // longest match consumed; move to next start
+            }
+        }
+    }
+    suppressed
+}
+
+/// The shipped default runtime config as a JSON document (written next to
+/// exports so downstream users can see exactly what was simulated).
+pub fn default_config_json() -> String {
+    let cfg = SimConfig::default();
+    let mut root = Json::obj();
+    let mut defaults = Json::obj();
+    let mut ops = Json::obj();
+    ops.set("is_output_quantized", Json::from("True"));
+    ops.set("is_symmetric", Json::from("False"));
+    defaults.set("ops", ops);
+    let mut params = Json::obj();
+    params.set("is_quantized", Json::from("True"));
+    params.set("is_symmetric", Json::from("True"));
+    defaults.set("params", params);
+    defaults.set("per_channel_quantization", Json::from("False"));
+    root.set("defaults", defaults);
+    let mut bias = Json::obj();
+    bias.set("is_quantized", Json::from("False"));
+    let mut params_sec = Json::obj();
+    params_sec.set("bias", bias);
+    root.set("params", params_sec);
+    let mut op_type = Json::obj();
+    for (kind, rule) in &cfg.op_type {
+        let mut r = Json::obj();
+        if let Some(b) = rule.is_output_quantized {
+            r.set("is_output_quantized", Json::from(if b { "True" } else { "False" }));
+        }
+        op_type.set(kind, r);
+    }
+    root.set("op_type", op_type);
+    let groups: Vec<Json> = cfg
+        .supergroups
+        .iter()
+        .map(|gr| {
+            let mut o = Json::obj();
+            o.set(
+                "op_list",
+                Json::Arr(gr.iter().map(|s| Json::from(s.as_str())).collect()),
+            );
+            o
+        })
+        .collect();
+    root.set("supergroups", Json::Arr(groups));
+    let mut mi = Json::obj();
+    mi.set("is_input_quantized", Json::from("True"));
+    root.set("model_input", mi);
+    root.set("model_output", Json::obj());
+    root.pretty()
+}
+
+/// Scheme + bitwidth bundle the sim is created with (code block 4.3/4.6).
+#[derive(Debug, Clone, Copy)]
+pub struct QuantParams {
+    pub scheme: QuantScheme,
+    pub act_bw: u32,
+    pub param_bw: u32,
+}
+
+impl Default for QuantParams {
+    fn default() -> Self {
+        QuantParams {
+            scheme: QuantScheme::TfEnhanced,
+            act_bw: 8,
+            param_bw: 8,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Graph, Op};
+    use crate::rng::Rng;
+    use crate::tensor::{Conv2dSpec, Tensor};
+
+    #[test]
+    fn default_roundtrips_through_json() {
+        let text = default_config_json();
+        let cfg = SimConfig::from_json(&text).unwrap();
+        assert!(cfg.act_quantized);
+        assert!(!cfg.act_symmetric);
+        assert!(cfg.param_symmetric);
+        assert!(!cfg.bias_quantized);
+        assert!(cfg.quantize_model_input);
+        assert_eq!(cfg.supergroups.len(), SimConfig::default().supergroups.len());
+        assert!(!cfg.output_quantized("MaxPool2"));
+        assert!(cfg.output_quantized("Conv2d"));
+    }
+
+    #[test]
+    fn custom_overrides() {
+        let cfg = SimConfig::from_json(
+            r#"{
+                "defaults": {
+                    "ops": {"is_output_quantized": "True", "is_symmetric": "True"},
+                    "params": {"is_quantized": "True", "is_symmetric": "False"},
+                    "per_channel_quantization": "True"
+                },
+                "op_type": {"Relu": {"is_output_quantized": "False", "bitwidth": 16}},
+                "supergroups": [{"op_list": ["Conv2d", "Relu"]}],
+                "model_input": {"is_input_quantized": "False"},
+                "model_output": {}
+            }"#,
+        )
+        .unwrap();
+        assert!(cfg.act_symmetric);
+        assert!(!cfg.param_symmetric);
+        assert!(cfg.per_channel);
+        assert!(!cfg.output_quantized("Relu"));
+        assert_eq!(cfg.bw_override("Relu"), Some(16));
+        assert!(!cfg.quantize_model_input);
+        assert_eq!(cfg.supergroups, vec![vec!["Conv2d".to_string(), "Relu".to_string()]]);
+    }
+
+    #[test]
+    fn supergroup_suppression_on_chain() {
+        let mut rng = Rng::new(1);
+        let mut g = Graph::new();
+        g.push(
+            "conv",
+            Op::Conv2d {
+                weight: Tensor::randn(&mut rng, &[2, 2, 1, 1], 0.5),
+                bias: vec![0.0; 2],
+                spec: Conv2dSpec::unit(),
+            },
+        );
+        g.push(
+            "bn",
+            Op::BatchNorm {
+                gamma: vec![1.0; 2],
+                beta: vec![0.0; 2],
+                mean: vec![0.0; 2],
+                var: vec![1.0; 2],
+                eps: 1e-5,
+            },
+        );
+        g.push("relu", Op::Relu);
+        g.push("gap", Op::GlobalAvgPool);
+        let cfg = SimConfig::default();
+        let sup = supergroup_suppressed(&g, &cfg);
+        // Conv+BN+Relu fuse: conv and bn outputs suppressed, relu's kept.
+        assert_eq!(sup, vec![true, true, false, false]);
+    }
+
+    #[test]
+    fn supergroup_requires_single_consumer() {
+        let mut rng = Rng::new(2);
+        let mut g = Graph::new();
+        let c = g.push(
+            "conv",
+            Op::Conv2d {
+                weight: Tensor::randn(&mut rng, &[2, 2, 1, 1], 0.5),
+                bias: vec![0.0; 2],
+                spec: Conv2dSpec::unit(),
+            },
+        );
+        g.push("relu", Op::Relu);
+        // Second consumer of conv breaks the fusion.
+        g.push_with(
+            "add",
+            Op::Add,
+            vec![crate::graph::Input::Node(c), crate::graph::Input::Node(c)],
+        );
+        let sup = supergroup_suppressed(&g, &SimConfig::default());
+        assert!(!sup[0]);
+    }
+}

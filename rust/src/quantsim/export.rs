@@ -1,0 +1,207 @@
+//! Quantization-encodings export/import (paper §3.3, fig 3.3).
+//!
+//! `sim.export()` writes a JSON file an on-target runtime (the paper's
+//! Qualcomm Neural Processing SDK; here, our own PJRT runtime and tests)
+//! can import instead of computing encodings itself. The schema follows
+//! AIMET's: `activation_encodings` and `param_encodings` maps keyed by
+//! tensor (node) name, each a list of per-channel encoding dicts with
+//! `min`, `max`, `scale`, `offset`, `bitwidth`, `dtype`, `is_symmetric`.
+
+use super::QuantizationSimModel;
+use crate::json::{parse, Json};
+use crate::quant::{Encoding, Quantizer};
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+fn encoding_to_json(e: &Encoding) -> Json {
+    let mut o = Json::obj();
+    o.set("min", Json::from(e.min as f64));
+    o.set("max", Json::from(e.max as f64));
+    o.set("scale", Json::from(e.scale as f64));
+    o.set("offset", Json::from(e.offset as f64));
+    o.set("bitwidth", Json::from(e.bw));
+    o.set("dtype", Json::from("int"));
+    o.set(
+        "is_symmetric",
+        Json::from(if e.symmetric { "True" } else { "False" }),
+    );
+    o
+}
+
+fn encoding_from_json(j: &Json) -> Result<Encoding> {
+    let f = |k: &str| -> Result<f64> {
+        j.get(k)
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow!("encoding missing {k}"))
+    };
+    let symmetric = j
+        .get("is_symmetric")
+        .and_then(|v| v.as_bool())
+        .unwrap_or(false);
+    let bw = f("bitwidth")? as u32;
+    // Rebuild from (min, max) so derived fields stay consistent.
+    Ok(Encoding::from_min_max(
+        f("min")? as f32,
+        f("max")? as f32,
+        bw,
+        symmetric,
+    ))
+}
+
+/// Render the sim's current encodings as the export JSON document.
+pub fn export_encodings_json(sim: &QuantizationSimModel) -> String {
+    let mut act = Json::obj();
+    if sim.input_slot.enabled {
+        if let Some(q) = &sim.input_slot.quantizer {
+            act.set(
+                "model_input",
+                Json::Arr(q.encodings.iter().map(encoding_to_json).collect()),
+            );
+        }
+    }
+    for (idx, slot) in sim.acts.iter().enumerate() {
+        if !slot.enabled {
+            continue;
+        }
+        if let Some(q) = &slot.quantizer {
+            act.set(
+                &sim.graph.nodes[idx].name,
+                Json::Arr(q.encodings.iter().map(encoding_to_json).collect()),
+            );
+        }
+    }
+    let mut params = Json::obj();
+    for (idx, slot) in sim.params.iter().enumerate() {
+        let Some(slot) = slot else { continue };
+        if !slot.enabled {
+            continue;
+        }
+        if let Some(q) = &slot.quantizer {
+            params.set(
+                &format!("{}.weight", sim.graph.nodes[idx].name),
+                Json::Arr(q.encodings.iter().map(encoding_to_json).collect()),
+            );
+        }
+    }
+    let mut root = Json::obj();
+    root.set("version", Json::from("0.6.1"));
+    root.set("activation_encodings", act);
+    root.set("param_encodings", params);
+    root.pretty()
+}
+
+/// Parse a `param_encodings` section back into per-node quantizers, keyed
+/// by node name — the import half of AdaRound's
+/// `set_and_freeze_param_encodings` (code block 4.5).
+pub fn load_param_encodings(text: &str) -> Result<BTreeMap<String, Quantizer>> {
+    let root = parse(text).map_err(|e| anyhow!("encodings parse error: {e}"))?;
+    let params = root
+        .get("param_encodings")
+        .and_then(|v| v.as_obj())
+        .ok_or_else(|| anyhow!("missing param_encodings"))?;
+    let mut out = BTreeMap::new();
+    for (key, val) in params {
+        let encs: Vec<Encoding> = val
+            .as_arr()
+            .ok_or_else(|| anyhow!("param {key} not a list"))?
+            .iter()
+            .map(encoding_from_json)
+            .collect::<Result<_>>()?;
+        let name = key.strip_suffix(".weight").unwrap_or(key).to_string();
+        let q = if encs.len() == 1 {
+            Quantizer::per_tensor(encs[0])
+        } else {
+            Quantizer::per_channel(encs, 0)
+        };
+        out.insert(name, q);
+    }
+    Ok(out)
+}
+
+/// Install imported parameter encodings into a sim and freeze them.
+pub fn set_and_freeze_param_encodings(
+    sim: &mut QuantizationSimModel,
+    encodings: &BTreeMap<String, Quantizer>,
+) {
+    for (name, q) in encodings {
+        if let Some(idx) = sim.graph.find(name) {
+            if let Some(slot) = &mut sim.params[idx] {
+                slot.quantizer = Some(q.clone());
+                slot.frozen = true;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quantsim::QuantParams;
+    use crate::zoo;
+
+    fn calibrated_sim() -> QuantizationSimModel {
+        let g = zoo::build("mobimini", 1).unwrap();
+        let mut sim = QuantizationSimModel::with_defaults(g, QuantParams::default());
+        let ds = crate::data::SynthImageNet::new(1);
+        let batches: Vec<_> = (0..2).map(|i| ds.batch(i, 4).0).collect();
+        sim.compute_encodings(&batches);
+        sim
+    }
+
+    #[test]
+    fn export_contains_all_enabled_quantizers() {
+        let sim = calibrated_sim();
+        let text = export_encodings_json(&sim);
+        let doc = parse(&text).unwrap();
+        let acts = doc.get("activation_encodings").unwrap().as_obj().unwrap();
+        let params = doc.get("param_encodings").unwrap().as_obj().unwrap();
+        let (na, np) = sim.quantizer_counts();
+        assert_eq!(acts.len(), na);
+        assert_eq!(params.len(), np);
+        assert!(acts.contains_key("model_input"));
+        assert!(params.contains_key("stem.conv.weight"));
+    }
+
+    #[test]
+    fn roundtrip_param_encodings() {
+        let sim = calibrated_sim();
+        let text = export_encodings_json(&sim);
+        let loaded = load_param_encodings(&text).unwrap();
+        let idx = sim.graph.find("stem.conv").unwrap();
+        let orig = &sim.params[idx].as_ref().unwrap().quantizer.as_ref().unwrap().encodings[0];
+        let back = &loaded["stem.conv"].encodings[0];
+        assert!((orig.scale - back.scale).abs() < 1e-9 * orig.scale.abs().max(1.0));
+        assert_eq!(orig.bw, back.bw);
+        assert_eq!(orig.symmetric, back.symmetric);
+    }
+
+    #[test]
+    fn set_and_freeze_installs() {
+        let mut sim = calibrated_sim();
+        let text = export_encodings_json(&sim);
+        let loaded = load_param_encodings(&text).unwrap();
+        // Wipe, then restore from the file.
+        for s in sim.params.iter_mut().flatten() {
+            s.quantizer = None;
+            s.frozen = false;
+        }
+        set_and_freeze_param_encodings(&mut sim, &loaded);
+        let idx = sim.graph.find("fc").unwrap();
+        let slot = sim.params[idx].as_ref().unwrap();
+        assert!(slot.frozen);
+        assert!(slot.quantizer.is_some());
+    }
+
+    #[test]
+    fn export_writes_files() {
+        let sim = calibrated_sim();
+        let dir = std::env::temp_dir().join("aimet_export_test");
+        sim.export(&dir, "mobimini_q").unwrap();
+        assert!(dir.join("mobimini_q.json").exists());
+        assert!(dir.join("mobimini_q.bin").exists());
+        assert!(dir.join("mobimini_q_encodings.json").exists());
+        // Exported graph reloads and matches.
+        let g2 = crate::graph::load_graph(&dir.join("mobimini_q")).unwrap();
+        assert_eq!(g2.nodes.len(), sim.graph.nodes.len());
+    }
+}

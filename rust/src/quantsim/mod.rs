@@ -1,0 +1,516 @@
+//! Quantization simulation (paper chapter 3): `QuantizationSimModel`.
+//!
+//! Given a model graph and a runtime configuration, the sim decides which
+//! tensors carry quantizers (fig 3.1), calibrates their encodings from
+//! representative data (`compute_encodings`, code block 3.1), and then acts
+//! as a drop-in replacement for the FP32 model in any evaluation loop —
+//! its [`QuantizationSimModel::forward`] simulates on-target quantized
+//! inference. Encodings export (§3.3) lives in [`export`].
+
+mod config;
+mod export;
+
+pub use config::{
+    default_config_json, supergroup_suppressed, OpTypeRule, QuantParams, SimConfig,
+};
+pub use export::{export_encodings_json, load_param_encodings, set_and_freeze_param_encodings};
+
+use crate::graph::{ForwardHook, Graph, Node};
+use crate::quant::{
+    per_channel_weight_encodings, weight_encoding, EncodingAnalyzer, QuantScheme,
+    Quantizer,
+};
+use crate::tensor::Tensor;
+use anyhow::Result;
+use std::path::Path;
+
+/// One activation quantizer slot (a node output, or the model input).
+#[derive(Debug, Clone)]
+pub struct ActSlot {
+    /// Whether the config placed a quantizer here at all (immutable after
+    /// construction — debug-flow toggles cannot exceed the placement).
+    pub placed: bool,
+    /// Disabled slots pass through (config decision or debug-flow toggle).
+    pub enabled: bool,
+    pub bw: u32,
+    pub symmetric: bool,
+    pub scheme: QuantScheme,
+    /// Present after `compute_encodings`.
+    pub quantizer: Option<Quantizer>,
+    /// Frozen slots survive later `compute_encodings` calls.
+    pub frozen: bool,
+}
+
+/// One parameter (weight) quantizer slot.
+#[derive(Debug, Clone)]
+pub struct ParamSlot {
+    pub enabled: bool,
+    pub bw: u32,
+    pub symmetric: bool,
+    pub per_channel: bool,
+    pub scheme: QuantScheme,
+    pub quantizer: Option<Quantizer>,
+    pub frozen: bool,
+}
+
+/// The quantization simulation model (chapter 3). Owns a copy of the graph
+/// plus per-tensor quantizer state.
+#[derive(Debug, Clone)]
+pub struct QuantizationSimModel {
+    pub graph: Graph,
+    pub cfg: SimConfig,
+    pub qp: QuantParams,
+    /// Per-node activation slots (index-aligned with `graph.nodes`).
+    pub acts: Vec<ActSlot>,
+    /// Per-node parameter slots.
+    pub params: Vec<Option<ParamSlot>>,
+    /// Model-input quantizer (`model_input` config section).
+    pub input_slot: ActSlot,
+}
+
+impl QuantizationSimModel {
+    /// Create a sim over `graph` (code block 3.1 / 4.3): decide quantizer
+    /// placement from the runtime config, including supergroup fusion.
+    pub fn new(graph: Graph, cfg: SimConfig, qp: QuantParams) -> QuantizationSimModel {
+        let suppressed = supergroup_suppressed(&graph, &cfg);
+        let mut acts = Vec::with_capacity(graph.nodes.len());
+        let mut params = Vec::with_capacity(graph.nodes.len());
+        for (idx, node) in graph.nodes.iter().enumerate() {
+            let kind = node.op.kind();
+            let is_output = idx == graph.output;
+            let enabled = node.op.requantizes_output()
+                && cfg.output_quantized(kind)
+                && !suppressed[idx]
+                && (!is_output || cfg.quantize_model_output);
+            acts.push(ActSlot {
+                placed: enabled,
+                enabled,
+                bw: cfg.bw_override(kind).unwrap_or(qp.act_bw),
+                symmetric: cfg.act_symmetric_for(kind),
+                scheme: qp.scheme,
+                quantizer: None,
+                frozen: false,
+            });
+            params.push(if node.op.is_weighted() && cfg.param_quantized {
+                Some(ParamSlot {
+                    enabled: true,
+                    bw: qp.param_bw,
+                    symmetric: cfg.param_symmetric,
+                    per_channel: cfg.per_channel && node.op.out_channels().is_some(),
+                    scheme: qp.scheme,
+                    quantizer: None,
+                    frozen: false,
+                })
+            } else {
+                None
+            });
+        }
+        let input_slot = ActSlot {
+            placed: cfg.quantize_model_input,
+            enabled: cfg.quantize_model_input,
+            bw: qp.act_bw,
+            symmetric: false,
+            scheme: qp.scheme,
+            quantizer: None,
+            frozen: false,
+        };
+        QuantizationSimModel {
+            graph,
+            cfg,
+            qp,
+            acts,
+            params,
+            input_slot,
+        }
+    }
+
+    /// Convenience: default config.
+    pub fn with_defaults(graph: Graph, qp: QuantParams) -> QuantizationSimModel {
+        QuantizationSimModel::new(graph, SimConfig::default(), qp)
+    }
+
+    /// Compute encodings from calibration batches (code block 3.1's
+    /// `compute_encodings`; the callback-feeding-samples pattern becomes an
+    /// explicit batch slice here). Frozen slots are preserved.
+    pub fn compute_encodings(&mut self, batches: &[Tensor]) {
+        assert!(!batches.is_empty(), "calibration data required");
+        // Parameter encodings come straight from the weights.
+        for (idx, slot) in self.params.iter_mut().enumerate() {
+            let Some(slot) = slot else { continue };
+            if slot.frozen || !slot.enabled {
+                continue;
+            }
+            let w = self.graph.nodes[idx].op.weight().unwrap();
+            slot.quantizer = Some(if slot.per_channel {
+                Quantizer::per_channel(
+                    per_channel_weight_encodings(w, slot.scheme, slot.bw, slot.symmetric, 0),
+                    0,
+                )
+            } else {
+                Quantizer::per_tensor(weight_encoding(w, slot.scheme, slot.bw, slot.symmetric))
+            });
+        }
+        // Activation encodings from observed FP32 ranges.
+        let mut analyzers: Vec<Option<EncodingAnalyzer>> = self
+            .acts
+            .iter()
+            .map(|s| {
+                (s.enabled && !s.frozen)
+                    .then(|| EncodingAnalyzer::new(s.scheme, s.bw, s.symmetric))
+            })
+            .collect();
+        let mut input_an = (self.input_slot.enabled && !self.input_slot.frozen).then(|| {
+            EncodingAnalyzer::new(
+                self.input_slot.scheme,
+                self.input_slot.bw,
+                self.input_slot.symmetric,
+            )
+        });
+        for batch in batches {
+            if let Some(a) = input_an.as_mut() {
+                a.observe_tensor(batch);
+            }
+            let acts = self.graph.forward_all(batch);
+            for (i, a) in analyzers.iter_mut().enumerate() {
+                if let Some(a) = a {
+                    a.observe_tensor(&acts[i]);
+                }
+            }
+        }
+        for (slot, an) in self.acts.iter_mut().zip(analyzers) {
+            if let Some(an) = an {
+                slot.quantizer = Some(Quantizer::per_tensor(an.compute()));
+            }
+        }
+        if let Some(an) = input_an {
+            self.input_slot.quantizer = Some(Quantizer::per_tensor(an.compute()));
+        }
+    }
+
+    /// Quantized forward — the drop-in eval path.
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        let mut hook = SimHook {
+            sim: self,
+            captured: None,
+        };
+        let mut acts = self.graph.forward_hooked(x, &mut hook);
+        acts.remove(self.graph.output)
+    }
+
+    /// Quantized forward retaining all node outputs.
+    pub fn forward_all(&self, x: &Tensor) -> Vec<Tensor> {
+        let mut hook = SimHook {
+            sim: self,
+            captured: None,
+        };
+        self.graph.forward_hooked(x, &mut hook)
+    }
+
+    /// Quantized forward that also captures the qdq'd weights used — the
+    /// STE backward pass needs exactly these (fig 5.1).
+    pub fn forward_capturing(&self, x: &Tensor) -> (Vec<Tensor>, Vec<Option<Tensor>>) {
+        let mut captured = vec![None; self.graph.nodes.len()];
+        let mut hook = SimHook {
+            sim: self,
+            captured: Some(&mut captured),
+        };
+        let acts = self.graph.forward_hooked(x, &mut hook);
+        (acts, captured)
+    }
+
+    /// The qdq'd weight of node `idx` under its current param encoding.
+    pub fn quantized_weight(&self, idx: usize) -> Option<Tensor> {
+        let w = self.graph.nodes[idx].op.weight()?;
+        match &self.params[idx] {
+            Some(slot) if slot.enabled => {
+                Some(slot.quantizer.as_ref().map(|q| q.qdq(w)).unwrap_or_else(|| w.clone()))
+            }
+            _ => Some(w.clone()),
+        }
+    }
+
+    // ---- debug-flow toggles (§4.8) ---------------------------------------
+
+    /// Enable/disable every activation quantizer (within the placement).
+    pub fn set_all_act_enabled(&mut self, enabled: bool) {
+        for s in &mut self.acts {
+            s.enabled = enabled && s.placed;
+        }
+        self.input_slot.enabled = enabled && self.input_slot.placed;
+    }
+
+    /// Enable/disable every parameter quantizer.
+    pub fn set_all_param_enabled(&mut self, enabled: bool) {
+        for s in self.params.iter_mut().flatten() {
+            s.enabled = enabled;
+        }
+    }
+
+    /// Set one activation quantizer's enablement by node name.
+    pub fn set_act_enabled(&mut self, name: &str, enabled: bool) -> bool {
+        if let Some(i) = self.graph.find(name) {
+            self.acts[i].enabled = enabled;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Set one parameter quantizer's enablement by node name.
+    pub fn set_param_enabled(&mut self, name: &str, enabled: bool) -> bool {
+        if let Some(i) = self.graph.find(name) {
+            if let Some(s) = &mut self.params[i] {
+                s.enabled = enabled;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Change a quantizer's bit-width (debug flow: "allow a higher
+    /// bit-width for problematic quantizer"). Requires re-calibration.
+    pub fn set_act_bw(&mut self, name: &str, bw: u32) -> bool {
+        if let Some(i) = self.graph.find(name) {
+            self.acts[i].bw = bw;
+            self.acts[i].quantizer = None;
+            self.acts[i].frozen = false;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn set_param_bw(&mut self, name: &str, bw: u32) -> bool {
+        if let Some(i) = self.graph.find(name) {
+            if let Some(s) = &mut self.params[i] {
+                s.bw = bw;
+                s.quantizer = None;
+                s.frozen = false;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Freeze parameter encodings (code block 4.5: AdaRound'ed weights
+    /// assume a fixed grid — `set_and_freeze_param_encodings`).
+    pub fn freeze_param_encodings(&mut self) {
+        for s in self.params.iter_mut().flatten() {
+            if s.quantizer.is_some() {
+                s.frozen = true;
+            }
+        }
+    }
+
+    /// Export model + encodings (§3.3): `<prefix>.json/.bin` (the plain
+    /// graph, no sim ops) and `<prefix>_encodings.json`.
+    pub fn export(&self, dir: &Path, prefix: &str) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        crate::graph::save_graph(&self.graph, &dir.join(prefix))?;
+        let enc = export_encodings_json(self);
+        std::fs::write(dir.join(format!("{prefix}_encodings.json")), enc)?;
+        Ok(())
+    }
+
+    /// Number of placed (enabled) quantizers — used in reports.
+    pub fn quantizer_counts(&self) -> (usize, usize) {
+        let a = self.acts.iter().filter(|s| s.enabled).count()
+            + usize::from(self.input_slot.enabled);
+        let p = self.params.iter().flatten().filter(|s| s.enabled).count();
+        (a, p)
+    }
+}
+
+/// The forward hook implementing fig 3.1's quantizer placement.
+struct SimHook<'a> {
+    sim: &'a QuantizationSimModel,
+    captured: Option<&'a mut Vec<Option<Tensor>>>,
+}
+
+impl ForwardHook for SimHook<'_> {
+    fn on_graph_input(&mut self, x: &Tensor) -> Tensor {
+        let s = &self.sim.input_slot;
+        match (&s.quantizer, s.enabled) {
+            (Some(q), true) => q.qdq(x),
+            _ => x.clone(),
+        }
+    }
+
+    fn on_weight(&mut self, idx: usize, _node: &Node, w: &Tensor) -> Tensor {
+        let out = match &self.sim.params[idx] {
+            Some(slot) if slot.enabled => match &slot.quantizer {
+                Some(q) => q.qdq(w),
+                None => w.clone(),
+            },
+            _ => w.clone(),
+        };
+        if let Some(cap) = self.captured.as_deref_mut() {
+            cap[idx] = Some(out.clone());
+        }
+        out
+    }
+
+    fn on_output(&mut self, idx: usize, _node: &Node, y: Tensor) -> Tensor {
+        let s = &self.sim.acts[idx];
+        match (&s.quantizer, s.enabled) {
+            (Some(q), true) => q.qdq(&y),
+            _ => y,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zoo;
+
+    fn calib(rng_seed: u64, n: usize) -> Vec<Tensor> {
+        let ds = crate::data::SynthImageNet::new(rng_seed);
+        (0..n).map(|i| ds.batch(i as u64, 8).0).collect()
+    }
+
+    #[test]
+    fn placement_respects_supergroups() {
+        let g = zoo::build("mobimini", 1).unwrap();
+        let sim = QuantizationSimModel::with_defaults(g, QuantParams::default());
+        // Conv/BN outputs inside Conv+BN+Relu6 chains are suppressed.
+        let conv_idx = sim.graph.find("stem.conv").unwrap();
+        let bn_idx = sim.graph.find("stem.bn").unwrap();
+        let relu_idx = sim.graph.find("stem.relu6").unwrap();
+        assert!(!sim.acts[conv_idx].enabled);
+        assert!(!sim.acts[bn_idx].enabled);
+        assert!(sim.acts[relu_idx].enabled);
+        // Weighted layers all get param quantizers.
+        assert!(sim.params[conv_idx].is_some());
+        assert!(sim.params[bn_idx].is_none());
+    }
+
+    #[test]
+    fn compute_encodings_then_forward_differs_from_fp32_but_tracks_it() {
+        let g = zoo::build("mobimini", 2).unwrap();
+        let fp32 = g.clone();
+        let mut sim = QuantizationSimModel::with_defaults(g, QuantParams::default());
+        sim.compute_encodings(&calib(7, 4));
+        let (x, _) = crate::data::SynthImageNet::new(9).batch(0, 4);
+        let yq = sim.forward(&x);
+        let yf = fp32.forward(&x);
+        let diff = yq.max_abs_diff(&yf);
+        assert!(diff > 0.0, "quantization must perturb outputs");
+        // 8-bit should stay in the same ballpark.
+        let scale = yf.abs_max().max(1e-6);
+        assert!(diff / scale < 0.8, "relative diff {}", diff / scale);
+    }
+
+    #[test]
+    fn disabling_all_quantizers_recovers_fp32() {
+        // The §4.8 FP32 sanity check.
+        let g = zoo::build("resmini", 3).unwrap();
+        let fp32 = g.clone();
+        let mut sim = QuantizationSimModel::with_defaults(g, QuantParams::default());
+        sim.compute_encodings(&calib(1, 2));
+        sim.set_all_act_enabled(false);
+        sim.set_all_param_enabled(false);
+        sim.input_slot.enabled = false;
+        let (x, _) = crate::data::SynthImageNet::new(2).batch(0, 2);
+        assert_eq!(sim.forward(&x), fp32.forward(&x));
+    }
+
+    #[test]
+    fn lower_bitwidth_is_noisier() {
+        let g = zoo::build("mobimini", 4).unwrap();
+        let fp32 = g.clone();
+        let data = calib(5, 4);
+        let (x, _) = crate::data::SynthImageNet::new(11).batch(0, 4);
+        let yf = fp32.forward(&x);
+        let mut errs = Vec::new();
+        for bw in [8u32, 4] {
+            let mut sim = QuantizationSimModel::with_defaults(
+                fp32.clone(),
+                QuantParams {
+                    act_bw: bw,
+                    param_bw: bw,
+                    ..Default::default()
+                },
+            );
+            sim.compute_encodings(&data);
+            errs.push(sim.forward(&x).sq_err(&yf));
+        }
+        assert!(errs[1] > errs[0] * 2.0, "W4A4 {} !>> W8A8 {}", errs[1], errs[0]);
+    }
+
+    #[test]
+    fn per_channel_beats_per_tensor_on_disparate_weights() {
+        // A depthwise model with strong channel-range disparity (the fig
+        // 4.2 regime, seeded via inverse CLE); §2.3 says per-channel
+        // weight quantization should help decisively there.
+        let mut g = zoo::build("mobimini", 5).unwrap();
+        crate::ptq::fold_all_batch_norms(&mut g);
+        crate::ptq::replace_relu6_with_relu(&mut g);
+        crate::ptq::unequalize_depthwise(&mut g, &[1.0, 16.0, 4.0, 64.0]);
+        let fp32 = g.clone();
+        let data = calib(6, 4);
+        let (x, _) = crate::data::SynthImageNet::new(13).batch(0, 4);
+        let yf = fp32.forward(&x);
+        let mut errs = Vec::new();
+        for per_channel in [false, true] {
+            let mut cfg = SimConfig::default();
+            cfg.per_channel = per_channel;
+            let mut sim =
+                QuantizationSimModel::new(fp32.clone(), cfg, QuantParams::default());
+            sim.compute_encodings(&data);
+            // Isolate the weight-quantization error (the §4.8 debugging
+            // flow's "weights or activations" step does exactly this).
+            sim.set_all_act_enabled(false);
+            errs.push(sim.forward(&x).sq_err(&yf));
+        }
+        assert!(
+            errs[1] < 0.8 * errs[0],
+            "per-channel {} !< per-tensor {}",
+            errs[1],
+            errs[0]
+        );
+    }
+
+    #[test]
+    fn capturing_returns_quantized_weights() {
+        let g = zoo::build("mobimini", 6).unwrap();
+        let mut sim = QuantizationSimModel::with_defaults(g, QuantParams::default());
+        sim.compute_encodings(&calib(8, 2));
+        let (x, _) = crate::data::SynthImageNet::new(3).batch(0, 2);
+        let (_, captured) = sim.forward_capturing(&x);
+        let idx = sim.graph.find("stem.conv").unwrap();
+        let cap = captured[idx].as_ref().unwrap();
+        let w = sim.graph.nodes[idx].op.weight().unwrap();
+        assert!(cap.max_abs_diff(w) > 0.0); // actually quantized
+        assert_eq!(cap, &sim.quantized_weight(idx).unwrap());
+    }
+
+    #[test]
+    fn frozen_params_survive_recalibration() {
+        let g = zoo::build("mobimini", 7).unwrap();
+        let mut sim = QuantizationSimModel::with_defaults(g, QuantParams::default());
+        sim.compute_encodings(&calib(1, 2));
+        let idx = sim.graph.find("stem.conv").unwrap();
+        let before = sim.params[idx].as_ref().unwrap().quantizer.clone().unwrap();
+        sim.freeze_param_encodings();
+        // Perturb the weight, recalibrate: frozen encoding must not move.
+        sim.graph.nodes[idx]
+            .op
+            .weight_mut()
+            .unwrap()
+            .map_inplace(|v| v * 2.0);
+        sim.compute_encodings(&calib(2, 2));
+        let after = sim.params[idx].as_ref().unwrap().quantizer.clone().unwrap();
+        assert_eq!(before.encodings[0], after.encodings[0]);
+    }
+
+    #[test]
+    fn quantizer_counts_sane() {
+        let g = zoo::build("mobimini", 8).unwrap();
+        let sim = QuantizationSimModel::with_defaults(g, QuantParams::default());
+        let (a, p) = sim.quantizer_counts();
+        assert_eq!(p, 8); // 8 weighted layers
+        // One act quantizer per relu6 (7) + gap + fc + model input.
+        assert_eq!(a, 10);
+    }
+}

@@ -1,0 +1,179 @@
+//! Deterministic pseudo-random substrate: xoshiro256++ plus the sampling
+//! and weight-initialization helpers the toolkit needs.
+//!
+//! Everything in the repo that touches randomness (synthetic datasets,
+//! weight init, data shuffling, property-test generators) goes through this
+//! module so experiments are bit-reproducible across runs and across the
+//! Rust/JAX engine boundary (weights are initialized here and fed to both).
+
+/// xoshiro256++ PRNG (Blackman & Vigna). Small, fast, and good enough for
+/// simulation workloads; not cryptographic.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seed via splitmix64 so small/consecutive seeds still give
+    /// well-distributed states.
+    pub fn new(seed: u64) -> Rng {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9e3779b97f4a7c15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+            z ^ (z >> 31)
+        };
+        Rng {
+            s: [next(), next(), next(), next()],
+        }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let result = (self.s[0].wrapping_add(self.s[3]))
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f32 {
+        // 24 mantissa bits of a u64 → exact dyadic in [0,1).
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn uniform_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Standard normal via Box–Muller (one value per call; the pair is not
+    /// cached to keep the generator state trivially cloneable).
+    pub fn normal(&mut self) -> f32 {
+        loop {
+            let u1 = self.uniform();
+            if u1 <= f32::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            return r * (2.0 * std::f32::consts::PI * u2).cos();
+        }
+    }
+
+    /// Integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Rejection-free modulo bias is negligible for our n << 2^64.
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Split off an independent stream (for parallel workers).
+    pub fn split(&mut self) -> Rng {
+        Rng::new(self.next_u64())
+    }
+
+    /// Vector of iid normals scaled by `std`.
+    pub fn normal_vec(&mut self, n: usize, std: f32) -> Vec<f32> {
+        (0..n).map(|_| self.normal() * std).collect()
+    }
+
+    /// Vector of iid uniforms in [lo, hi).
+    pub fn uniform_vec(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.uniform_in(lo, hi)).collect()
+    }
+}
+
+/// Kaiming/He-normal fan-in init for conv/linear weights (matches the JAX
+/// side, which consumes the same blobs rather than re-initializing).
+pub fn kaiming_normal(rng: &mut Rng, n: usize, fan_in: usize) -> Vec<f32> {
+    let std = (2.0 / fan_in.max(1) as f32).sqrt();
+    rng.normal_vec(n, std)
+}
+
+/// Xavier-uniform init for recurrent weights.
+pub fn xavier_uniform(rng: &mut Rng, n: usize, fan_in: usize, fan_out: usize) -> Vec<f32> {
+    let a = (6.0 / (fan_in + fan_out).max(1) as f32).sqrt();
+    rng.uniform_vec(n, -a, a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        assert_ne!(Rng::new(1).next_u64(), Rng::new(2).next_u64());
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut rng = Rng::new(7);
+        let xs = rng.uniform_vec(20_000, 0.0, 1.0);
+        assert!(xs.iter().all(|&x| (0.0..1.0).contains(&x)));
+        let mean = xs.iter().sum::<f32>() / xs.len() as f32;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::new(9);
+        let xs = rng.normal_vec(50_000, 1.0);
+        let mean = xs.iter().sum::<f32>() / xs.len() as f32;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / xs.len() as f32;
+        assert!(mean.abs() < 0.03, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Rng::new(3);
+        let mut xs: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn kaiming_std_scales_with_fan_in() {
+        let mut rng = Rng::new(11);
+        let w = kaiming_normal(&mut rng, 40_000, 8);
+        let var = w.iter().map(|x| x * x).sum::<f32>() / w.len() as f32;
+        assert!((var - 0.25).abs() < 0.02, "var={var}"); // 2/8
+    }
+
+    #[test]
+    fn split_streams_are_independent() {
+        let mut rng = Rng::new(5);
+        let mut a = rng.split();
+        let mut b = rng.split();
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

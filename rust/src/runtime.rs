@@ -1,0 +1,331 @@
+//! PJRT runtime — loads and executes the AOT-compiled JAX/Pallas programs.
+//!
+//! `make artifacts` runs `python/compile/aot.py` once: it lowers each L2
+//! JAX program (which may call L1 Pallas kernels, interpret-mode) to **HLO
+//! text** and writes `artifacts/manifest.json` describing every program's
+//! input/output shapes. This module is the L3 side: a
+//! [`Runtime`] owns a PJRT CPU client, compiles programs on first use, and
+//! executes them with [`Tensor`] inputs — Python never runs again.
+//!
+//! HLO *text* (not serialized `HloModuleProto`) is the interchange format:
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids which xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids and round-trips cleanly.
+
+use crate::graph::{Graph, Op};
+use crate::json::{parse, Json};
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::path::{Path, PathBuf};
+
+/// One AOT program as described by `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ProgramSpec {
+    pub name: String,
+    pub file: String,
+    /// Expected input shapes, in parameter order.
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shapes (the program returns a tuple).
+    pub outputs: Vec<Vec<usize>>,
+    pub desc: String,
+}
+
+/// PJRT runtime over an artifacts directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    specs: BTreeMap<String, ProgramSpec>,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Default artifacts directory: `$AIMET_ARTIFACTS`, else
+    /// `<workspace>/artifacts`.
+    pub fn artifacts_dir() -> PathBuf {
+        if let Ok(p) = std::env::var("AIMET_ARTIFACTS") {
+            return PathBuf::from(p);
+        }
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// Whether a manifest exists at `dir` (lets tests/examples skip
+    /// gracefully when `make artifacts` has not been run).
+    pub fn available(dir: &Path) -> bool {
+        dir.join("manifest.json").is_file()
+    }
+
+    /// Open the runtime: create the PJRT CPU client and parse the
+    /// manifest. Programs compile lazily on first execution.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {} (run `make artifacts`)", dir.display()))?;
+        let root = parse(&text).map_err(|e| anyhow!("manifest parse error: {e}"))?;
+        let mut specs = BTreeMap::new();
+        let programs = root
+            .get("programs")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing programs object"))?;
+        for (name, p) in programs {
+            let shapes = |key: &str| -> Result<Vec<Vec<usize>>> {
+                p.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("program {name}: missing {key}"))?
+                    .iter()
+                    .map(|s| {
+                        s.as_arr()
+                            .ok_or_else(|| anyhow!("program {name}: bad shape"))?
+                            .iter()
+                            .map(|d| {
+                                d.as_f64()
+                                    .map(|v| v as usize)
+                                    .ok_or_else(|| anyhow!("program {name}: bad dim"))
+                            })
+                            .collect()
+                    })
+                    .collect()
+            };
+            specs.insert(
+                name.clone(),
+                ProgramSpec {
+                    name: name.clone(),
+                    file: p
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("program {name}: missing file"))?
+                        .to_string(),
+                    inputs: shapes("inputs")?,
+                    outputs: shapes("outputs")?,
+                    desc: p
+                        .get("desc")
+                        .and_then(Json::as_str)
+                        .unwrap_or("")
+                        .to_string(),
+                },
+            );
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir,
+            specs,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn programs(&self) -> impl Iterator<Item = &ProgramSpec> {
+        self.specs.values()
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&ProgramSpec> {
+        self.specs.get(name)
+    }
+
+    /// Compile (or fetch the cached executable for) one program.
+    fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self
+            .specs
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown program {name}"))?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute a program with `Tensor` inputs; returns the tuple of output
+    /// tensors. Shapes are validated against the manifest.
+    pub fn execute(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.ensure_compiled(name)?;
+        let spec = &self.specs[name];
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "program {name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, want)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            // Rank-0 manifest entries accept single-element tensors (the
+            // Rust Tensor has no rank-0; scalars are shape [1]).
+            if want.is_empty() && t.len() == 1 {
+                continue;
+            }
+            if t.shape() != want.as_slice() {
+                bail!(
+                    "program {name}: input {i} shape {:?} != manifest {:?}",
+                    t.shape(),
+                    want
+                );
+            }
+        }
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(&spec.inputs)
+            .map(|(t, want)| tensor_to_literal(t, want))
+            .collect::<Result<_>>()?;
+        let exe = &self.cache[name];
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling {name} result: {e:?}"))?;
+        parts.into_iter().map(literal_to_tensor).collect()
+    }
+}
+
+fn tensor_to_literal(t: &Tensor, want: &[usize]) -> Result<xla::Literal> {
+    // Use the manifest shape (handles rank-0 scalars, which the Rust
+    // Tensor represents as shape [1]).
+    let dims: Vec<i64> = if want.is_empty() && t.len() == 1 {
+        Vec::new()
+    } else {
+        t.shape().iter().map(|&d| d as i64).collect()
+    };
+    xla::Literal::vec1(t.data())
+        .reshape(&dims)
+        .map_err(|e| anyhow!("literal reshape: {e:?}"))
+}
+
+fn literal_to_tensor(lit: xla::Literal) -> Result<Tensor> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| anyhow!("literal shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit
+        .to_vec::<f32>()
+        .map_err(|e| anyhow!("literal to_vec: {e:?}"))?;
+    Ok(if dims.is_empty() {
+        Tensor::scalar(data[0])
+    } else {
+        Tensor::new(&dims, data)
+    })
+}
+
+/// Canonical flattening of a graph's parameters, mirrored exactly by
+/// `python/compile/model.py::param_specs`: for each node in topological
+/// order — Conv/DepthwiseConv/Linear contribute `[weight, bias]`,
+/// BatchNorm `[gamma, beta, mean, var]`, LSTM `[w_ih, w_hh, bias]`.
+pub fn graph_param_tensors(g: &Graph) -> Vec<Tensor> {
+    let mut out = Vec::new();
+    for node in &g.nodes {
+        match &node.op {
+            Op::Conv2d { weight, bias, .. }
+            | Op::DepthwiseConv2d { weight, bias, .. }
+            | Op::Linear { weight, bias } => {
+                out.push(weight.clone());
+                out.push(Tensor::new(&[bias.len()], bias.clone()));
+            }
+            Op::BatchNorm {
+                gamma,
+                beta,
+                mean,
+                var,
+                ..
+            } => {
+                out.push(Tensor::new(&[gamma.len()], gamma.clone()));
+                out.push(Tensor::new(&[beta.len()], beta.clone()));
+                out.push(Tensor::new(&[mean.len()], mean.clone()));
+                out.push(Tensor::new(&[var.len()], var.clone()));
+            }
+            Op::Lstm {
+                w_ih, w_hh, bias, ..
+            } => {
+                out.push(w_ih.clone());
+                out.push(w_hh.clone());
+                out.push(Tensor::new(&[bias.len()], bias.clone()));
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Inverse of [`graph_param_tensors`]: write a parameter list back into
+/// the graph (used by the PJRT training drivers after `*_step` programs
+/// return updated weights).
+pub fn set_graph_params(g: &mut Graph, params: &[Tensor]) {
+    let mut it = params.iter();
+    let mut next = || it.next().expect("param list too short");
+    for node in &mut g.nodes {
+        match &mut node.op {
+            Op::Conv2d { weight, bias, .. }
+            | Op::DepthwiseConv2d { weight, bias, .. }
+            | Op::Linear { weight, bias } => {
+                *weight = next().clone();
+                *bias = next().data().to_vec();
+            }
+            Op::BatchNorm {
+                gamma,
+                beta,
+                mean,
+                var,
+                ..
+            } => {
+                *gamma = next().data().to_vec();
+                *beta = next().data().to_vec();
+                *mean = next().data().to_vec();
+                *var = next().data().to_vec();
+            }
+            Op::Lstm {
+                w_ih, w_hh, bias, ..
+            } => {
+                *w_ih = next().clone();
+                *w_hh = next().clone();
+                *bias = next().data().to_vec();
+            }
+            _ => {}
+        }
+    }
+    assert!(it.next().is_none(), "param list too long");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zoo;
+
+    #[test]
+    fn param_roundtrip_every_model() {
+        for model in zoo::MODEL_NAMES {
+            let g = zoo::build(model, 9).unwrap();
+            let params = graph_param_tensors(&g);
+            assert!(!params.is_empty(), "{model} has no params?");
+            let mut g2 = zoo::build(model, 10).unwrap();
+            set_graph_params(&mut g2, &params);
+            let p2 = graph_param_tensors(&g2);
+            assert_eq!(params.len(), p2.len());
+            for (a, b) in params.iter().zip(&p2) {
+                assert_eq!(a, b, "{model} param mismatch");
+            }
+        }
+    }
+
+    #[test]
+    fn available_is_false_for_missing_dir() {
+        assert!(!Runtime::available(Path::new("/nonexistent/nowhere")));
+    }
+
+    #[test]
+    fn manifest_parse_errors_are_reported() {
+        let dir = std::env::temp_dir().join("aimet_rt_test_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), "{not json").unwrap();
+        assert!(Runtime::open(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,197 @@
+//! Task dispatch — maps each zoo model to its dataset, loss, and quality
+//! metric, so the trainers ([`crate::qat`]), the PTQ pipeline drivers, the
+//! CLI and the benches all speak one vocabulary.
+//!
+//! | model      | dataset         | loss       | metric            |
+//! |------------|-----------------|------------|-------------------|
+//! | mobimini   | SynthImageNet   | softmax CE | top-1 %           |
+//! | resmini    | SynthImageNet   | softmax CE | top-1 %           |
+//! | segmini    | SynthSeg        | pixel CE   | mIoU %            |
+//! | detmini    | SynthDet        | det loss   | mAP %             |
+//! | speechmini | SynthSpeech     | frame CE   | TER % (lower = better, reported as 100−TER accuracy internally) |
+
+use crate::data::{DetObject, SynthDet, SynthImageNet, SynthSeg, SynthSpeech};
+use crate::graph::Graph;
+use crate::metrics::{
+    det_loss, det_map, frame_ce, mean_iou, pixel_ce, softmax_ce, token_error_rate,
+    top1_accuracy,
+};
+use crate::quantsim::QuantizationSimModel;
+use crate::tensor::Tensor;
+
+/// Supervision targets for one batch.
+#[derive(Debug, Clone)]
+pub enum Targets {
+    /// Class/pixel/frame labels (classification, segmentation, speech).
+    Labels(Vec<usize>),
+    /// Detection ground truth.
+    Objects(Vec<Vec<DetObject>>),
+}
+
+/// A deterministic batch source for one model's task.
+pub struct TaskData {
+    model: String,
+    imagenet: Option<SynthImageNet>,
+    seg: Option<SynthSeg>,
+    det: Option<SynthDet>,
+    speech: Option<SynthSpeech>,
+}
+
+impl TaskData {
+    pub fn new(model: &str, seed: u64) -> TaskData {
+        let mut d = TaskData {
+            model: model.to_string(),
+            imagenet: None,
+            seg: None,
+            det: None,
+            speech: None,
+        };
+        match model {
+            "mobimini" | "resmini" => d.imagenet = Some(SynthImageNet::new(seed)),
+            "segmini" => d.seg = Some(SynthSeg::new(seed)),
+            "detmini" => d.det = Some(SynthDet::new(seed)),
+            "speechmini" => d.speech = Some(SynthSpeech::new(seed)),
+            _ => panic!("unknown model {model}"),
+        }
+        d
+    }
+
+    /// Deterministic batch `index` of size `n`.
+    pub fn batch(&self, index: u64, n: usize) -> (Tensor, Targets) {
+        match self.model.as_str() {
+            "mobimini" | "resmini" => {
+                let (x, y) = self.imagenet.as_ref().unwrap().batch(index, n);
+                (x, Targets::Labels(y))
+            }
+            "segmini" => {
+                let (x, y) = self.seg.as_ref().unwrap().batch(index, n);
+                (x, Targets::Labels(y))
+            }
+            "detmini" => {
+                let (x, y) = self.det.as_ref().unwrap().batch(index, n);
+                (x, Targets::Objects(y))
+            }
+            "speechmini" => {
+                let (x, y) = self.speech.as_ref().unwrap().batch(index, n);
+                (x, Targets::Labels(y))
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    /// Calibration batches (inputs only) — the "representative data
+    /// samples" of code block 3.1.
+    pub fn calibration(&self, n_batches: usize, batch_size: usize) -> Vec<Tensor> {
+        (0..n_batches)
+            .map(|i| self.batch(1000 + i as u64, batch_size).0)
+            .collect()
+    }
+}
+
+/// Loss + gradient w.r.t. logits for one model's task.
+pub fn loss_and_grad(model: &str, logits: &Tensor, targets: &Targets) -> (f32, Tensor) {
+    match (model, targets) {
+        ("mobimini" | "resmini", Targets::Labels(y)) => softmax_ce(logits, y),
+        ("segmini", Targets::Labels(y)) => pixel_ce(logits, y),
+        ("detmini", Targets::Objects(y)) => det_loss(logits, y),
+        ("speechmini", Targets::Labels(y)) => frame_ce(logits, y),
+        _ => panic!("targets do not match model {model}"),
+    }
+}
+
+/// Task quality metric, higher-is-better (TER is reported as 100−TER so
+/// that every model shares the same comparison direction; the CLI flips it
+/// back when printing Table 5.2).
+pub fn quality(model: &str, logits: &Tensor, targets: &Targets) -> f32 {
+    match (model, targets) {
+        ("mobimini" | "resmini", Targets::Labels(y)) => top1_accuracy(logits, y),
+        ("segmini", Targets::Labels(y)) => mean_iou(logits, y),
+        ("detmini", Targets::Objects(y)) => det_map(logits, y),
+        ("speechmini", Targets::Labels(y)) => 100.0 - token_error_rate(logits, y),
+        _ => panic!("targets do not match model {model}"),
+    }
+}
+
+/// Evaluate an FP32 graph over `n_batches` deterministic eval batches.
+pub fn evaluate_graph(
+    g: &Graph,
+    model: &str,
+    data: &TaskData,
+    n_batches: usize,
+    batch_size: usize,
+) -> f32 {
+    let mut total = 0.0;
+    for i in 0..n_batches {
+        let (x, t) = data.batch(50_000 + i as u64, batch_size);
+        total += quality(model, &g.forward(&x), &t);
+    }
+    total / n_batches as f32
+}
+
+/// Evaluate a quantization sim over the same eval batches (the "drop-in
+/// replacement" path of code block 3.1).
+pub fn evaluate_sim(
+    sim: &QuantizationSimModel,
+    model: &str,
+    data: &TaskData,
+    n_batches: usize,
+    batch_size: usize,
+) -> f32 {
+    let mut total = 0.0;
+    for i in 0..n_batches {
+        let (x, t) = data.batch(50_000 + i as u64, batch_size);
+        total += quality(model, &sim.forward(&x), &t);
+    }
+    total / n_batches as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quantsim::QuantParams;
+    use crate::zoo;
+
+    #[test]
+    fn every_model_dispatches() {
+        for model in zoo::MODEL_NAMES {
+            let g = zoo::build(model, 1).unwrap();
+            let data = TaskData::new(model, 2);
+            let (x, t) = data.batch(0, 4);
+            let logits = g.forward(&x);
+            let (loss, grad) = loss_and_grad(model, &logits, &t);
+            assert!(loss.is_finite(), "{model} loss");
+            assert_eq!(grad.shape(), logits.shape(), "{model} grad shape");
+            let q = quality(model, &logits, &t);
+            assert!((0.0..=100.0).contains(&q), "{model} quality {q}");
+        }
+    }
+
+    #[test]
+    fn eval_batches_are_deterministic() {
+        let g = zoo::build("mobimini", 3).unwrap();
+        let data = TaskData::new("mobimini", 4);
+        let a = evaluate_graph(&g, "mobimini", &data, 2, 8);
+        let b = evaluate_graph(&g, "mobimini", &data, 2, 8);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sim_eval_matches_graph_eval_when_bypassed() {
+        let g = zoo::build("resmini", 5).unwrap();
+        let data = TaskData::new("resmini", 6);
+        let fp32 = evaluate_graph(&g, "resmini", &data, 2, 8);
+        let mut sim = QuantizationSimModel::with_defaults(g, QuantParams::default());
+        sim.compute_encodings(&data.calibration(2, 8));
+        sim.set_all_act_enabled(false);
+        sim.set_all_param_enabled(false);
+        assert_eq!(evaluate_sim(&sim, "resmini", &data, 2, 8), fp32);
+    }
+
+    #[test]
+    fn calibration_batches_differ_from_eval_batches() {
+        let data = TaskData::new("mobimini", 7);
+        let c = data.calibration(1, 4);
+        let (e, _) = data.batch(50_000, 4);
+        assert!(c[0].max_abs_diff(&e) > 0.0);
+    }
+}

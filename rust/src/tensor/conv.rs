@@ -1,0 +1,470 @@
+//! Convolutions via im2col + the blocked matmul, plus direct depthwise
+//! convolution (im2col is wasteful for 1-input-channel kernels).
+//!
+//! Layouts follow the repo convention: activations NCHW, weights OIHW,
+//! depthwise weights [C,1,kh,kw]. The JAX L2 models use
+//! `lax.conv_general_dilated` with the same dimension numbers so the Rust
+//! and PJRT engines agree bit-for-bit up to float reassociation.
+
+use super::{matmul, matmul_a_bt, matmul_at_b, Tensor};
+
+/// Geometry of a conv: symmetric zero padding + stride (dilation 1 — the
+/// zoo does not use dilated convs; SegMini's receptive field comes from
+/// pooling instead, see DESIGN.md §3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Conv2dSpec {
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl Conv2dSpec {
+    pub fn unit() -> Conv2dSpec {
+        Conv2dSpec { stride: 1, pad: 0 }
+    }
+
+    pub fn same(k: usize) -> Conv2dSpec {
+        Conv2dSpec {
+            stride: 1,
+            pad: k / 2,
+        }
+    }
+
+    pub fn out_hw(&self, h: usize, w: usize, kh: usize, kw: usize) -> (usize, usize) {
+        (
+            (h + 2 * self.pad - kh) / self.stride + 1,
+            (w + 2 * self.pad - kw) / self.stride + 1,
+        )
+    }
+}
+
+/// Unfold NCHW input into a [C·kh·kw, N·OH·OW] patch matrix.
+pub fn im2col(x: &Tensor, kh: usize, kw: usize, spec: Conv2dSpec) -> Tensor {
+    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let (oh, ow) = spec.out_hw(h, w, kh, kw);
+    let l = n * oh * ow;
+    let rows = c * kh * kw;
+    let mut out = vec![0.0f32; rows * l];
+    let xd = x.data();
+    // Row r = (ci, ky, kx); column j = (ni, oy, ox). Workers write disjoint
+    // rows of `out`.
+    crate::pool::parallel_rows(&mut out, l, 4, |r, row| {
+        {
+            let ci = r / (kh * kw);
+            let ky = (r / kw) % kh;
+            let kx = r % kw;
+            let mut j = 0usize;
+            for ni in 0..n {
+                let plane = (ni * c + ci) * h * w;
+                for oy in 0..oh {
+                    let iy = (oy * spec.stride + ky) as isize - spec.pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        j += ow;
+                        continue;
+                    }
+                    let row_base = plane + iy as usize * w;
+                    for ox in 0..ow {
+                        let ix = (ox * spec.stride + kx) as isize - spec.pad as isize;
+                        row[j] = if ix < 0 || ix >= w as isize {
+                            0.0
+                        } else {
+                            xd[row_base + ix as usize]
+                        };
+                        j += 1;
+                    }
+                }
+            }
+        }
+    });
+    Tensor::new(&[rows, l], out)
+}
+
+/// Fold a [C·kh·kw, N·OH·OW] patch-gradient matrix back to NCHW (adjoint of
+/// [`im2col`]).
+pub fn col2im(
+    cols: &Tensor,
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    spec: Conv2dSpec,
+) -> Tensor {
+    let (oh, ow) = spec.out_hw(h, w, kh, kw);
+    let l = n * oh * ow;
+    assert_eq!(cols.shape(), &[c * kh * kw, l]);
+    let mut out = vec![0.0f32; n * c * h * w];
+    let cd = cols.data();
+    for r in 0..c * kh * kw {
+        let ci = r / (kh * kw);
+        let ky = (r / kw) % kh;
+        let kx = r % kw;
+        let row = &cd[r * l..(r + 1) * l];
+        let mut j = 0usize;
+        for ni in 0..n {
+            let plane = (ni * c + ci) * h * w;
+            for oy in 0..oh {
+                let iy = (oy * spec.stride + ky) as isize - spec.pad as isize;
+                if iy < 0 || iy >= h as isize {
+                    j += ow;
+                    continue;
+                }
+                let row_base = plane + iy as usize * w;
+                for ox in 0..ow {
+                    let ix = (ox * spec.stride + kx) as isize - spec.pad as isize;
+                    if ix >= 0 && ix < w as isize {
+                        out[row_base + ix as usize] += row[j];
+                    }
+                    j += 1;
+                }
+            }
+        }
+    }
+    Tensor::new(&[n, c, h, w], out)
+}
+
+/// `y = conv2d(x, w) + b` with weight [O,I,kh,kw], bias per output channel.
+pub fn conv2d(x: &Tensor, weight: &Tensor, bias: Option<&[f32]>, spec: Conv2dSpec) -> Tensor {
+    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let (o, i, kh, kw) = (weight.dim(0), weight.dim(1), weight.dim(2), weight.dim(3));
+    assert_eq!(c, i, "conv2d channel mismatch");
+    let (oh, ow) = spec.out_hw(h, w, kh, kw);
+    let cols = im2col(x, kh, kw, spec);
+    let wmat = weight.reshape(&[o, i * kh * kw]);
+    let ymat = matmul(&wmat, &cols); // [O, N*OH*OW]
+    // Reorder [O, N, OH, OW] -> [N, O, OH, OW] and add bias.
+    let mut out = vec![0.0f32; n * o * oh * ow];
+    let yd = ymat.data();
+    let inner = oh * ow;
+    for oi in 0..o {
+        let b = bias.map(|bs| bs[oi]).unwrap_or(0.0);
+        for ni in 0..n {
+            let src = (oi * n + ni) * inner;
+            let dst = (ni * o + oi) * inner;
+            for k in 0..inner {
+                out[dst + k] = yd[src + k] + b;
+            }
+        }
+    }
+    Tensor::new(&[n, o, oh, ow], out)
+}
+
+/// Backward of [`conv2d`]: returns (dx, dw, db).
+pub fn conv2d_backward(
+    x: &Tensor,
+    weight: &Tensor,
+    dy: &Tensor,
+    spec: Conv2dSpec,
+) -> (Tensor, Tensor, Vec<f32>) {
+    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let (o, i, kh, kw) = (weight.dim(0), weight.dim(1), weight.dim(2), weight.dim(3));
+    let (oh, ow) = spec.out_hw(h, w, kh, kw);
+    assert_eq!(dy.shape(), &[n, o, oh, ow]);
+    let inner = oh * ow;
+    // dy as [O, N*OH*OW]
+    let mut dymat = vec![0.0f32; o * n * inner];
+    let dyd = dy.data();
+    for ni in 0..n {
+        for oi in 0..o {
+            let src = (ni * o + oi) * inner;
+            let dst = (oi * n + ni) * inner;
+            dymat[dst..dst + inner].copy_from_slice(&dyd[src..src + inner]);
+        }
+    }
+    let dymat = Tensor::new(&[o, n * inner], dymat);
+    let cols = im2col(x, kh, kw, spec);
+    // dW = dY_mat · colsᵀ
+    let dw = matmul_a_bt(&dymat, &cols).reshape(&[o, i, kh, kw]);
+    // dX = col2im(W_matᵀ · dY_mat)
+    let wmat = weight.reshape(&[o, i * kh * kw]);
+    let dcols = matmul_at_b(&wmat, &dymat);
+    let dx = col2im(&dcols, n, c, h, w, kh, kw, spec);
+    // db = sum over batch/space of dy, per output channel.
+    let mut db = vec![0.0f32; o];
+    for ni in 0..n {
+        for oi in 0..o {
+            let src = (ni * o + oi) * inner;
+            db[oi] += dyd[src..src + inner].iter().sum::<f32>();
+        }
+    }
+    (dx, dw, db)
+}
+
+/// Depthwise conv: weight [C,1,kh,kw], one filter per input channel.
+pub fn depthwise_conv2d(
+    x: &Tensor,
+    weight: &Tensor,
+    bias: Option<&[f32]>,
+    spec: Conv2dSpec,
+) -> Tensor {
+    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let (co, _one, kh, kw) = (weight.dim(0), weight.dim(1), weight.dim(2), weight.dim(3));
+    assert_eq!(co, c, "depthwise channel mismatch");
+    let (oh, ow) = spec.out_hw(h, w, kh, kw);
+    let mut out = vec![0.0f32; n * c * oh * ow];
+    let xd = x.data();
+    let wd = weight.data();
+    crate::pool::parallel_rows(&mut out, oh * ow, 1, |p, plane| {
+        {
+            let ci = p % c;
+            let in_plane = p * h * w;
+            let wbase = ci * kh * kw;
+            let b = bias.map(|bs| bs[ci]).unwrap_or(0.0);
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = b;
+                    for ky in 0..kh {
+                        let iy = (oy * spec.stride + ky) as isize - spec.pad as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..kw {
+                            let ix = (ox * spec.stride + kx) as isize - spec.pad as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            acc += xd[in_plane + iy as usize * w + ix as usize]
+                                * wd[wbase + ky * kw + kx];
+                        }
+                    }
+                    plane[oy * ow + ox] = acc;
+                }
+            }
+        }
+    });
+    Tensor::new(&[n, c, oh, ow], out)
+}
+
+/// Backward of [`depthwise_conv2d`]: returns (dx, dw, db).
+pub fn depthwise_conv2d_backward(
+    x: &Tensor,
+    weight: &Tensor,
+    dy: &Tensor,
+    spec: Conv2dSpec,
+) -> (Tensor, Tensor, Vec<f32>) {
+    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let (kh, kw) = (weight.dim(2), weight.dim(3));
+    let (oh, ow) = spec.out_hw(h, w, kh, kw);
+    let mut dx = vec![0.0f32; x.len()];
+    let mut dw = vec![0.0f32; weight.len()];
+    let mut db = vec![0.0f32; c];
+    let xd = x.data();
+    let wd = weight.data();
+    let dyd = dy.data();
+    for ni in 0..n {
+        for ci in 0..c {
+            let in_plane = (ni * c + ci) * h * w;
+            let out_plane = (ni * c + ci) * oh * ow;
+            let wbase = ci * kh * kw;
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let g = dyd[out_plane + oy * ow + ox];
+                    if g == 0.0 {
+                        continue;
+                    }
+                    db[ci] += g;
+                    for ky in 0..kh {
+                        let iy = (oy * spec.stride + ky) as isize - spec.pad as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..kw {
+                            let ix = (ox * spec.stride + kx) as isize - spec.pad as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            let xi = in_plane + iy as usize * w + ix as usize;
+                            dw[wbase + ky * kw + kx] += g * xd[xi];
+                            dx[xi] += g * wd[wbase + ky * kw + kx];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // db double counts? no: one accumulation per output element. But the
+    // g == 0.0 early-continue must not skip db; g==0 contributes 0 anyway.
+    (
+        Tensor::new(x.shape(), dx),
+        Tensor::new(weight.shape(), dw),
+        db,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// Naive direct convolution for cross-checking.
+    fn conv_naive(x: &Tensor, w: &Tensor, bias: Option<&[f32]>, spec: Conv2dSpec) -> Tensor {
+        let (n, c, h, ww) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+        let (o, _i, kh, kw) = (w.dim(0), w.dim(1), w.dim(2), w.dim(3));
+        let (oh, ow) = spec.out_hw(h, ww, kh, kw);
+        let mut out = Tensor::zeros(&[n, o, oh, ow]);
+        for ni in 0..n {
+            for oi in 0..o {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let mut acc = bias.map(|b| b[oi]).unwrap_or(0.0);
+                        for ci in 0..c {
+                            for ky in 0..kh {
+                                for kx in 0..kw {
+                                    let iy =
+                                        (oy * spec.stride + ky) as isize - spec.pad as isize;
+                                    let ix =
+                                        (ox * spec.stride + kx) as isize - spec.pad as isize;
+                                    if iy < 0 || ix < 0 || iy >= h as isize || ix >= ww as isize
+                                    {
+                                        continue;
+                                    }
+                                    acc += x.data()
+                                        [((ni * c + ci) * h + iy as usize) * ww + ix as usize]
+                                        * w.data()[((oi * c + ci) * kh + ky) * kw + kx];
+                                }
+                            }
+                        }
+                        out.data_mut()[((ni * o + oi) * oh + oy) * ow + ox] = acc;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn conv_matches_naive() {
+        let mut rng = Rng::new(1);
+        for &(spec, n, c, h, w, o, k) in &[
+            (Conv2dSpec::unit(), 2usize, 3usize, 5usize, 5usize, 4usize, 3usize),
+            (Conv2dSpec::same(3), 1, 2, 6, 7, 3, 3),
+            (Conv2dSpec { stride: 2, pad: 1 }, 2, 3, 8, 8, 5, 3),
+            (Conv2dSpec { stride: 1, pad: 0 }, 1, 4, 4, 4, 2, 1),
+        ] {
+            let x = Tensor::randn(&mut rng, &[n, c, h, w], 1.0);
+            let wt = Tensor::randn(&mut rng, &[o, c, k, k], 0.5);
+            let b: Vec<f32> = rng.normal_vec(o, 0.1);
+            let fast = conv2d(&x, &wt, Some(&b), spec);
+            let slow = conv_naive(&x, &wt, Some(&b), spec);
+            assert!(
+                fast.max_abs_diff(&slow) < 1e-4,
+                "spec {spec:?} diff {}",
+                fast.max_abs_diff(&slow)
+            );
+        }
+    }
+
+    #[test]
+    fn depthwise_matches_grouped_naive() {
+        // Depthwise == full conv with block-diagonal weights.
+        let mut rng = Rng::new(2);
+        let (n, c, h, w, k) = (2, 3, 6, 6, 3);
+        let spec = Conv2dSpec::same(3);
+        let x = Tensor::randn(&mut rng, &[n, c, h, w], 1.0);
+        let dwt = Tensor::randn(&mut rng, &[c, 1, k, k], 0.5);
+        let b: Vec<f32> = rng.normal_vec(c, 0.1);
+        // Build equivalent [C, C, k, k] weight with zeros off-diagonal.
+        let mut full = Tensor::zeros(&[c, c, k, k]);
+        for ci in 0..c {
+            for kk in 0..k * k {
+                full.data_mut()[((ci * c + ci) * k * k) + kk] = dwt.data()[ci * k * k + kk];
+            }
+        }
+        let fast = depthwise_conv2d(&x, &dwt, Some(&b), spec);
+        let slow = conv_naive(&x, &full, Some(&b), spec);
+        assert!(fast.max_abs_diff(&slow) < 1e-4);
+    }
+
+    #[test]
+    fn im2col_col2im_adjoint() {
+        // <im2col(x), y> == <x, col2im(y)> for random x, y — the defining
+        // property of an adjoint pair, which conv backward relies on.
+        let mut rng = Rng::new(3);
+        let spec = Conv2dSpec { stride: 2, pad: 1 };
+        let (n, c, h, w, kh, kw) = (2, 3, 5, 6, 3, 3);
+        let x = Tensor::randn(&mut rng, &[n, c, h, w], 1.0);
+        let cols = im2col(&x, kh, kw, spec);
+        let y = Tensor::randn(&mut rng, cols.shape(), 1.0);
+        let lhs: f32 = cols.data().iter().zip(y.data()).map(|(a, b)| a * b).sum();
+        let back = col2im(&y, n, c, h, w, kh, kw, spec);
+        let rhs: f32 = x.data().iter().zip(back.data()).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() < 1e-2 * lhs.abs().max(1.0), "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn conv_backward_finite_difference() {
+        let mut rng = Rng::new(4);
+        let spec = Conv2dSpec::same(3);
+        let x = Tensor::randn(&mut rng, &[1, 2, 4, 4], 1.0);
+        let w = Tensor::randn(&mut rng, &[2, 2, 3, 3], 0.5);
+        // Loss = sum(conv(x, w)); dL/dy = ones.
+        let y = conv2d(&x, &w, None, spec);
+        let dy = Tensor::full(y.shape(), 1.0);
+        let (dx, dw, db) = conv2d_backward(&x, &w, &dy, spec);
+        let eps = 1e-3;
+        // Check a scattering of weight coords.
+        for &idx in &[0usize, 7, 17, 35] {
+            let mut wp = w.clone();
+            wp.data_mut()[idx] += eps;
+            let mut wm = w.clone();
+            wm.data_mut()[idx] -= eps;
+            let fp: f32 = conv2d(&x, &wp, None, spec).data().iter().sum();
+            let fm: f32 = conv2d(&x, &wm, None, spec).data().iter().sum();
+            let num = (fp - fm) / (2.0 * eps);
+            assert!((num - dw.data()[idx]).abs() < 2e-2, "dw[{idx}]: {num} vs {}", dw.data()[idx]);
+        }
+        // Check a scattering of input coords.
+        for &idx in &[0usize, 5, 13, 31] {
+            let mut xp = x.clone();
+            xp.data_mut()[idx] += eps;
+            let mut xm = x.clone();
+            xm.data_mut()[idx] -= eps;
+            let fp: f32 = conv2d(&xp, &w, None, spec).data().iter().sum();
+            let fm: f32 = conv2d(&xm, &w, None, spec).data().iter().sum();
+            let num = (fp - fm) / (2.0 * eps);
+            assert!((num - dx.data()[idx]).abs() < 2e-2, "dx[{idx}]");
+        }
+        // Bias gradient is the output count per channel here.
+        let per_ch = (y.len() / y.dim(1)) as f32;
+        for &g in &db {
+            assert!((g - per_ch).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn depthwise_backward_finite_difference() {
+        let mut rng = Rng::new(5);
+        let spec = Conv2dSpec::same(3);
+        let x = Tensor::randn(&mut rng, &[1, 2, 4, 4], 1.0);
+        let w = Tensor::randn(&mut rng, &[2, 1, 3, 3], 0.5);
+        let y = depthwise_conv2d(&x, &w, None, spec);
+        let dy = Tensor::full(y.shape(), 1.0);
+        let (dx, dw, _db) = depthwise_conv2d_backward(&x, &w, &dy, spec);
+        let eps = 1e-3;
+        for &idx in &[0usize, 8, 12, 17] {
+            let mut wp = w.clone();
+            wp.data_mut()[idx] += eps;
+            let mut wm = w.clone();
+            wm.data_mut()[idx] -= eps;
+            let fp: f32 = depthwise_conv2d(&x, &wp, None, spec).data().iter().sum();
+            let fm: f32 = depthwise_conv2d(&x, &wm, None, spec).data().iter().sum();
+            assert!(((fp - fm) / (2.0 * eps) - dw.data()[idx]).abs() < 2e-2);
+        }
+        for &idx in &[0usize, 9, 21, 30] {
+            let mut xp = x.clone();
+            xp.data_mut()[idx] += eps;
+            let mut xm = x.clone();
+            xm.data_mut()[idx] -= eps;
+            let fp: f32 = depthwise_conv2d(&xp, &w, None, spec).data().iter().sum();
+            let fm: f32 = depthwise_conv2d(&xm, &w, None, spec).data().iter().sum();
+            assert!(((fp - fm) / (2.0 * eps) - dx.data()[idx]).abs() < 2e-2);
+        }
+    }
+
+    #[test]
+    fn stride_two_shapes() {
+        let spec = Conv2dSpec { stride: 2, pad: 1 };
+        assert_eq!(spec.out_hw(8, 8, 3, 3), (4, 4));
+        assert_eq!(Conv2dSpec::same(3).out_hw(7, 9, 3, 3), (7, 9));
+    }
+}

@@ -1,0 +1,194 @@
+//! Blocked, multi-threaded matrix multiplication — the L3 hot path.
+//!
+//! Everything convolutional in the Rust engine lowers to one of these three
+//! products via im2col, so this file is where the §Perf effort for L3 dense
+//! compute concentrates: row-parallel outer loop, k-blocked inner loop
+//! written so LLVM auto-vectorizes the AXPY over contiguous `b` rows.
+
+use super::Tensor;
+use crate::pool::parallel_rows;
+
+/// `C[M,N] = A[M,K] · B[K,N]`.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.rank(), 2);
+    assert_eq!(b.rank(), 2);
+    let (m, k) = (a.dim(0), a.dim(1));
+    let (k2, n) = (b.dim(0), b.dim(1));
+    assert_eq!(k, k2, "matmul inner dims: {k} vs {k2}");
+    let mut out = vec![0.0f32; m * n];
+    let ad = a.data();
+    let bd = b.data();
+    // Each output row C[i,:] = sum_k A[i,k] * B[k,:] — an AXPY per k over a
+    // contiguous slice of B, which vectorizes well and has unit-stride loads.
+    // 4-row register blocking: each B row load is reused across four
+    // output rows, quadrupling arithmetic intensity vs the naive AXPY
+    // (EXPERIMENTS.md §Perf). Remainder rows fall back to single-row AXPY.
+    let blocks = m / 4;
+    crate::pool::parallel_chunks(blocks, 1, |b0, b1| {
+        // Safety: blocks write disjoint out rows.
+        let out_ptr = out.as_ptr() as *mut f32;
+        for blk in b0..b1 {
+            let i = blk * 4;
+            let a0 = &ad[i * k..(i + 1) * k];
+            let a1 = &ad[(i + 1) * k..(i + 2) * k];
+            let a2 = &ad[(i + 2) * k..(i + 3) * k];
+            let a3 = &ad[(i + 3) * k..(i + 4) * k];
+            let rows = unsafe { std::slice::from_raw_parts_mut(out_ptr.add(i * n), 4 * n) };
+            let (r0, rest) = rows.split_at_mut(n);
+            let (r1, rest) = rest.split_at_mut(n);
+            let (r2, r3) = rest.split_at_mut(n);
+            for kk in 0..k {
+                let (v0, v1, v2, v3) = (a0[kk], a1[kk], a2[kk], a3[kk]);
+                let brow = &bd[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    let bv = brow[j];
+                    r0[j] += v0 * bv;
+                    r1[j] += v1 * bv;
+                    r2[j] += v2 * bv;
+                    r3[j] += v3 * bv;
+                }
+            }
+        }
+    });
+    for i in blocks * 4..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        let crow = &mut out[i * n..(i + 1) * n];
+        for (kk, &aik) in arow.iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &bd[kk * n..(kk + 1) * n];
+            for (c, &bv) in crow.iter_mut().zip(brow) {
+                *c += aik * bv;
+            }
+        }
+    }
+    Tensor::new(&[m, n], out)
+}
+
+/// `C[K,N] = Aᵀ[K,M] · B[M,N]` computed without materializing Aᵀ
+/// (A is [M,K]). Used for weight gradients: dW = dYᵀ · X.
+pub fn matmul_at_b(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.rank(), 2);
+    assert_eq!(b.rank(), 2);
+    let (m, k) = (a.dim(0), a.dim(1));
+    let (m2, n) = (b.dim(0), b.dim(1));
+    assert_eq!(m, m2, "matmul_at_b outer dims: {m} vs {m2}");
+    let mut out = vec![0.0f32; k * n];
+    let ad = a.data();
+    let bd = b.data();
+    parallel_rows(&mut out, n, 8, |i, crow| {
+        // C[i,:] = sum_m A[m,i] * B[m,:]
+        for mm in 0..m {
+            let av = ad[mm * k + i];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &bd[mm * n..(mm + 1) * n];
+            for (c, &bv) in crow.iter_mut().zip(brow) {
+                *c += av * bv;
+            }
+        }
+    });
+    Tensor::new(&[k, n], out)
+}
+
+/// `C[M,K] = A[M,N] · Bᵀ[N,K]` computed without materializing Bᵀ
+/// (B is [K,N]). Used for input gradients: dX = Wᵀ-style products where
+/// both operands are row-major.
+pub fn matmul_a_bt(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.rank(), 2);
+    assert_eq!(b.rank(), 2);
+    let (m, n) = (a.dim(0), a.dim(1));
+    let (k, n2) = (b.dim(0), b.dim(1));
+    assert_eq!(n, n2, "matmul_a_bt inner dims: {n} vs {n2}");
+    let mut out = vec![0.0f32; m * k];
+    let ad = a.data();
+    let bd = b.data();
+    parallel_rows(&mut out, k, 8, |i, crow| {
+        let arow = &ad[i * n..(i + 1) * n];
+        for (j, c) in crow.iter_mut().enumerate() {
+            let brow = &bd[j * n..(j + 1) * n];
+            // Dot product over contiguous rows — vectorizes.
+            let mut acc = 0.0f32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            *c = acc;
+        }
+    });
+    Tensor::new(&[m, k], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn naive(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = (a.dim(0), a.dim(1));
+        let n = b.dim(1);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for kk in 0..k {
+                    acc += a.data()[i * k + kk] * b.data()[kk * n + j];
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        Tensor::new(&[m, n], out)
+    }
+
+    #[test]
+    fn small_exact() {
+        let a = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = Tensor::new(&[3, 2], vec![7., 8., 9., 10., 11., 12.]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn random_matches_naive() {
+        let mut rng = Rng::new(1);
+        for &(m, k, n) in &[(5, 7, 3), (17, 33, 9), (64, 31, 64)] {
+            let a = Tensor::randn(&mut rng, &[m, k], 1.0);
+            let b = Tensor::randn(&mut rng, &[k, n], 1.0);
+            let c = matmul(&a, &b);
+            let r = naive(&a, &b);
+            assert!(c.max_abs_diff(&r) < 1e-4, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn at_b_matches_transpose() {
+        let mut rng = Rng::new(2);
+        let a = Tensor::randn(&mut rng, &[11, 5], 1.0);
+        let b = Tensor::randn(&mut rng, &[11, 7], 1.0);
+        let c = matmul_at_b(&a, &b);
+        let r = matmul(&a.transpose2(), &b);
+        assert!(c.max_abs_diff(&r) < 1e-4);
+    }
+
+    #[test]
+    fn a_bt_matches_transpose() {
+        let mut rng = Rng::new(3);
+        let a = Tensor::randn(&mut rng, &[6, 13], 1.0);
+        let b = Tensor::randn(&mut rng, &[9, 13], 1.0);
+        let c = matmul_a_bt(&a, &b);
+        let r = matmul(&a, &b.transpose2());
+        assert!(c.max_abs_diff(&r) < 1e-4);
+    }
+
+    #[test]
+    fn identity() {
+        let mut eye = Tensor::zeros(&[4, 4]);
+        for i in 0..4 {
+            eye.data_mut()[i * 4 + i] = 1.0;
+        }
+        let mut rng = Rng::new(4);
+        let x = Tensor::randn(&mut rng, &[4, 4], 1.0);
+        assert!(matmul(&eye, &x).max_abs_diff(&x) < 1e-6);
+    }
+}

@@ -1,0 +1,618 @@
+//! Dense f32 tensor substrate (NCHW layout convention).
+//!
+//! This is the compute engine AIMET's algorithms run on inside the Rust
+//! coordinator: quantizer calibration, CLE weight surgery, bias correction,
+//! AdaRound's per-layer optimization, the pure-Rust QAT fallback, and all
+//! unit tests. The PJRT runtime ([`crate::runtime`]) is the *fast* full-
+//! model path; this engine is the *reference* path and the two are
+//! cross-checked in `rust/tests/cross_engine.rs`.
+
+mod conv;
+mod matmul;
+
+pub use conv::{col2im, conv2d, conv2d_backward, depthwise_conv2d, depthwise_conv2d_backward, im2col, Conv2dSpec};
+pub use matmul::{matmul, matmul_at_b, matmul_a_bt};
+
+use crate::rng::Rng;
+
+/// A dense, row-major f32 tensor. Shapes are dynamic; rank ≤ 4 in practice
+/// (NCHW activations, OIHW weights, [T,N,F] sequences).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} does not match data length {}",
+            shape,
+            data.len()
+        );
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![v; shape.iter().product()],
+        }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor::new(&[1], vec![v])
+    }
+
+    pub fn randn(rng: &mut Rng, shape: &[usize], std: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::new(shape, rng.normal_vec(n, std))
+    }
+
+    pub fn rand_uniform(rng: &mut Rng, shape: &[usize], lo: f32, hi: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::new(shape, rng.uniform_vec(n, lo, hi))
+    }
+
+    #[inline]
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    #[inline]
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reshape without copying; total element count must match.
+    pub fn reshape(&self, shape: &[usize]) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.data.len(),
+            "reshape {:?} -> {:?}",
+            self.shape,
+            shape
+        );
+        Tensor {
+            shape: shape.to_vec(),
+            data: self.data.clone(),
+        }
+    }
+
+    /// Dimension `i`, panicking with context if out of range.
+    pub fn dim(&self, i: usize) -> usize {
+        self.shape[i]
+    }
+
+    // ---- elementwise ----------------------------------------------------
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+    }
+
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+        assert_eq!(self.shape, other.shape, "zip shape mismatch");
+        Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn mul(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a * b)
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    pub fn relu(&self) -> Tensor {
+        self.map(|x| x.max(0.0))
+    }
+
+    pub fn relu6(&self) -> Tensor {
+        self.map(|x| x.clamp(0.0, 6.0))
+    }
+
+    pub fn sigmoid(&self) -> Tensor {
+        self.map(|x| 1.0 / (1.0 + (-x).exp()))
+    }
+
+    pub fn tanh(&self) -> Tensor {
+        self.map(|x| x.tanh())
+    }
+
+    // ---- reductions ------------------------------------------------------
+
+    pub fn min(&self) -> f32 {
+        self.data.iter().copied().fold(f32::INFINITY, f32::min)
+    }
+
+    pub fn max(&self) -> f32 {
+        self.data.iter().copied().fold(f32::NEG_INFINITY, f32::max)
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            0.0
+        } else {
+            self.data.iter().sum::<f32>() / self.data.len() as f32
+        }
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Sum of squared differences against `other` (the PTQ objective unit).
+    pub fn sq_err(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| (a - b) * (a - b))
+            .sum()
+    }
+
+    /// Max |a-b| over all elements.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Per-channel (axis 0 for weights [O,...], axis 1 for NCHW
+    /// activations) min/max. `axis` is the channel axis.
+    pub fn channel_min_max(&self, axis: usize) -> Vec<(f32, f32)> {
+        let ch = self.shape[axis];
+        let outer: usize = self.shape[..axis].iter().product();
+        let inner: usize = self.shape[axis + 1..].iter().product();
+        let mut out = vec![(f32::INFINITY, f32::NEG_INFINITY); ch];
+        for o in 0..outer {
+            for c in 0..ch {
+                let base = (o * ch + c) * inner;
+                let slice = &self.data[base..base + inner];
+                let (lo, hi) = &mut out[c];
+                for &v in slice {
+                    *lo = lo.min(v);
+                    *hi = hi.max(v);
+                }
+            }
+        }
+        out
+    }
+
+    /// Per-channel mean along `axis`.
+    pub fn channel_mean(&self, axis: usize) -> Vec<f32> {
+        let ch = self.shape[axis];
+        let outer: usize = self.shape[..axis].iter().product();
+        let inner: usize = self.shape[axis + 1..].iter().product();
+        let mut out = vec![0.0f64; ch];
+        for o in 0..outer {
+            for c in 0..ch {
+                let base = (o * ch + c) * inner;
+                out[c] += self.data[base..base + inner]
+                    .iter()
+                    .map(|&v| v as f64)
+                    .sum::<f64>();
+            }
+        }
+        let denom = (outer * inner) as f64;
+        out.into_iter().map(|s| (s / denom) as f32).collect()
+    }
+
+    // ---- NCHW structural ops ---------------------------------------------
+
+    /// Add a per-channel bias to an NCHW tensor (channel axis 1).
+    pub fn add_channel_bias(&self, bias: &[f32]) -> Tensor {
+        let (n, c) = (self.shape[0], self.shape[1]);
+        assert_eq!(bias.len(), c);
+        let inner: usize = self.shape[2..].iter().product();
+        let mut out = self.clone();
+        for ni in 0..n {
+            for ci in 0..c {
+                let base = (ni * c + ci) * inner;
+                let b = bias[ci];
+                for v in &mut out.data[base..base + inner] {
+                    *v += b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Concatenate along channel axis (axis 1) of NCHW tensors.
+    pub fn concat_channels(parts: &[&Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let n = parts[0].shape[0];
+        let spatial = &parts[0].shape[2..];
+        let inner: usize = spatial.iter().product();
+        let c_total: usize = parts.iter().map(|p| p.shape[1]).sum();
+        for p in parts {
+            assert_eq!(p.shape[0], n);
+            assert_eq!(&p.shape[2..], spatial);
+        }
+        let mut shape = vec![n, c_total];
+        shape.extend_from_slice(spatial);
+        let mut data = Vec::with_capacity(n * c_total * inner);
+        for ni in 0..n {
+            for p in parts {
+                let c = p.shape[1];
+                let base = ni * c * inner;
+                data.extend_from_slice(&p.data[base..base + c * inner]);
+            }
+        }
+        Tensor::new(&shape, data)
+    }
+
+    /// Batch slice [start, end) along axis 0.
+    pub fn batch_slice(&self, start: usize, end: usize) -> Tensor {
+        let inner: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = end - start;
+        Tensor::new(&shape, self.data[start * inner..end * inner].to_vec())
+    }
+
+    /// 2-D transpose.
+    pub fn transpose2(&self) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor::new(&[n, m], out)
+    }
+
+    /// Row-wise softmax of a [N, C] tensor.
+    pub fn softmax_rows(&self) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (n, c) = (self.shape[0], self.shape[1]);
+        let mut out = self.data.clone();
+        for i in 0..n {
+            let row = &mut out[i * c..(i + 1) * c];
+            let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0;
+            for v in row.iter_mut() {
+                *v = (*v - m).exp();
+                sum += *v;
+            }
+            for v in row.iter_mut() {
+                *v /= sum;
+            }
+        }
+        Tensor::new(&[n, c], out)
+    }
+
+    /// Argmax per row of a [N, C] tensor.
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        assert_eq!(self.rank(), 2);
+        let (n, c) = (self.shape[0], self.shape[1]);
+        (0..n)
+            .map(|i| {
+                let row = &self.data[i * c..(i + 1) * c];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j)
+                    .unwrap()
+            })
+            .collect()
+    }
+}
+
+/// Global average pool of NCHW → [N, C].
+pub fn global_avg_pool(x: &Tensor) -> Tensor {
+    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let inner = h * w;
+    let mut out = vec![0.0f32; n * c];
+    for ni in 0..n {
+        for ci in 0..c {
+            let base = (ni * c + ci) * inner;
+            out[ni * c + ci] =
+                x.data()[base..base + inner].iter().sum::<f32>() / inner as f32;
+        }
+    }
+    Tensor::new(&[n, c], out)
+}
+
+/// 2×2 stride-2 max pool of NCHW (the only pooling geometry the zoo uses).
+pub fn max_pool2(x: &Tensor) -> Tensor {
+    pool2(x, true)
+}
+
+/// 2×2 stride-2 average pool of NCHW.
+pub fn avg_pool2(x: &Tensor) -> Tensor {
+    pool2(x, false)
+}
+
+fn pool2(x: &Tensor, is_max: bool) -> Tensor {
+    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = vec![0.0f32; n * c * oh * ow];
+    let xd = x.data();
+    for ni in 0..n {
+        for ci in 0..c {
+            let in_base = (ni * c + ci) * h * w;
+            let out_base = (ni * c + ci) * oh * ow;
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let i00 = in_base + (2 * oy) * w + 2 * ox;
+                    let a = xd[i00];
+                    let b = xd[i00 + 1];
+                    let cc = xd[i00 + w];
+                    let d = xd[i00 + w + 1];
+                    out[out_base + oy * ow + ox] = if is_max {
+                        a.max(b).max(cc).max(d)
+                    } else {
+                        0.25 * (a + b + cc + d)
+                    };
+                }
+            }
+        }
+    }
+    Tensor::new(&[n, c, oh, ow], out)
+}
+
+/// Backward of 2×2 stride-2 max pool: routes gradient to the argmax.
+pub fn max_pool2_backward(x: &Tensor, dy: &Tensor) -> Tensor {
+    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let (oh, ow) = (h / 2, w / 2);
+    let mut dx = vec![0.0f32; x.len()];
+    let xd = x.data();
+    let dyd = dy.data();
+    for ni in 0..n {
+        for ci in 0..c {
+            let in_base = (ni * c + ci) * h * w;
+            let out_base = (ni * c + ci) * oh * ow;
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let i00 = in_base + (2 * oy) * w + 2 * ox;
+                    let idxs = [i00, i00 + 1, i00 + w, i00 + w + 1];
+                    let best = idxs
+                        .iter()
+                        .copied()
+                        .max_by(|&a, &b| xd[a].partial_cmp(&xd[b]).unwrap())
+                        .unwrap();
+                    dx[best] += dyd[out_base + oy * ow + ox];
+                }
+            }
+        }
+    }
+    Tensor::new(x.shape(), dx)
+}
+
+/// Nearest-neighbour 2× upsample of NCHW (SegMini decoder).
+pub fn upsample2(x: &Tensor) -> Tensor {
+    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let (oh, ow) = (h * 2, w * 2);
+    let mut out = vec![0.0f32; n * c * oh * ow];
+    let xd = x.data();
+    for ni in 0..n {
+        for ci in 0..c {
+            let in_base = (ni * c + ci) * h * w;
+            let out_base = (ni * c + ci) * oh * ow;
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    out[out_base + oy * ow + ox] = xd[in_base + (oy / 2) * w + ox / 2];
+                }
+            }
+        }
+    }
+    Tensor::new(&[n, c, oh, ow], out)
+}
+
+/// Backward of nearest-neighbour 2× upsample (sums the 2×2 fan-out).
+pub fn upsample2_backward(dy: &Tensor) -> Tensor {
+    let (n, c, oh, ow) = (dy.dim(0), dy.dim(1), dy.dim(2), dy.dim(3));
+    let (h, w) = (oh / 2, ow / 2);
+    let mut dx = vec![0.0f32; n * c * h * w];
+    let dyd = dy.data();
+    for ni in 0..n {
+        for ci in 0..c {
+            let in_base = (ni * c + ci) * h * w;
+            let out_base = (ni * c + ci) * oh * ow;
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    dx[in_base + (oy / 2) * w + ox / 2] += dyd[out_base + oy * ow + ox];
+                }
+            }
+        }
+    }
+    Tensor::new(&[n, c, h, w], dx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_reshape() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.dim(0), 2);
+        let r = t.reshape(&[3, 2]);
+        assert_eq!(r.shape(), &[3, 2]);
+        assert_eq!(r.data(), t.data());
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Tensor::new(&[2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn elementwise() {
+        let a = Tensor::new(&[3], vec![1., -2., 3.]);
+        let b = Tensor::new(&[3], vec![10., 20., 30.]);
+        assert_eq!(a.add(&b).data(), &[11., 18., 33.]);
+        assert_eq!(a.relu().data(), &[1., 0., 3.]);
+        assert_eq!(a.scale(2.0).data(), &[2., -4., 6.]);
+        let c = Tensor::new(&[3], vec![-1., 3., 7.]);
+        assert_eq!(c.relu6().data(), &[0., 3., 6.]);
+    }
+
+    #[test]
+    fn reductions() {
+        let t = Tensor::new(&[4], vec![-3., 0., 2., 5.]);
+        assert_eq!(t.min(), -3.0);
+        assert_eq!(t.max(), 5.0);
+        assert_eq!(t.mean(), 1.0);
+        assert_eq!(t.abs_max(), 5.0);
+    }
+
+    #[test]
+    fn channel_min_max_axis0() {
+        // Weight-style [O=2, I=1, 1, 2].
+        let w = Tensor::new(&[2, 1, 1, 2], vec![1., -4., 0.5, 2.]);
+        let mm = w.channel_min_max(0);
+        assert_eq!(mm, vec![(-4.0, 1.0), (0.5, 2.0)]);
+    }
+
+    #[test]
+    fn channel_min_max_axis1_nchw() {
+        // [N=2, C=2, 1, 1]
+        let x = Tensor::new(&[2, 2, 1, 1], vec![1., 10., -2., 20.]);
+        let mm = x.channel_min_max(1);
+        assert_eq!(mm, vec![(-2.0, 1.0), (10.0, 20.0)]);
+    }
+
+    #[test]
+    fn channel_mean() {
+        let x = Tensor::new(&[2, 2, 1, 1], vec![1., 10., 3., 20.]);
+        assert_eq!(x.channel_mean(1), vec![2.0, 15.0]);
+    }
+
+    #[test]
+    fn add_channel_bias_nchw() {
+        let x = Tensor::zeros(&[1, 2, 2, 2]);
+        let y = x.add_channel_bias(&[1.0, -1.0]);
+        assert_eq!(y.data()[..4], [1., 1., 1., 1.]);
+        assert_eq!(y.data()[4..], [-1., -1., -1., -1.]);
+    }
+
+    #[test]
+    fn concat_channels_two_parts() {
+        let a = Tensor::full(&[2, 1, 1, 2], 1.0);
+        let b = Tensor::full(&[2, 2, 1, 2], 2.0);
+        let c = Tensor::concat_channels(&[&a, &b]);
+        assert_eq!(c.shape(), &[2, 3, 1, 2]);
+        assert_eq!(c.data()[..2], [1., 1.]);
+        assert_eq!(c.data()[2..6], [2., 2., 2., 2.]);
+        assert_eq!(c.data()[6..8], [1., 1.]);
+    }
+
+    #[test]
+    fn pools() {
+        let x = Tensor::new(&[1, 1, 2, 2], vec![1., 2., 3., 4.]);
+        assert_eq!(max_pool2(&x).data(), &[4.0]);
+        assert_eq!(avg_pool2(&x).data(), &[2.5]);
+        assert_eq!(global_avg_pool(&x).data(), &[2.5]);
+    }
+
+    #[test]
+    fn max_pool_backward_routes_to_argmax() {
+        let x = Tensor::new(&[1, 1, 2, 2], vec![1., 5., 3., 4.]);
+        let dy = Tensor::new(&[1, 1, 1, 1], vec![2.0]);
+        let dx = max_pool2_backward(&x, &dy);
+        assert_eq!(dx.data(), &[0., 2., 0., 0.]);
+    }
+
+    #[test]
+    fn upsample_and_backward_are_adjoint() {
+        let x = Tensor::new(&[1, 1, 1, 2], vec![3., 7.]);
+        let y = upsample2(&x);
+        assert_eq!(y.shape(), &[1, 1, 2, 4]);
+        assert_eq!(y.data(), &[3., 3., 7., 7., 3., 3., 7., 7.]);
+        let dy = Tensor::full(&[1, 1, 2, 4], 1.0);
+        assert_eq!(upsample2_backward(&dy).data(), &[4., 4.]);
+    }
+
+    #[test]
+    fn softmax_and_argmax() {
+        let t = Tensor::new(&[2, 3], vec![0., 1., 2., 5., 1., 1.]);
+        let s = t.softmax_rows();
+        let rows: Vec<f32> = s.data()[..3].to_vec();
+        assert!((rows.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert_eq!(t.argmax_rows(), vec![2, 0]);
+    }
+
+    #[test]
+    fn transpose() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let tt = t.transpose2();
+        assert_eq!(tt.shape(), &[3, 2]);
+        assert_eq!(tt.data(), &[1., 4., 2., 5., 3., 6.]);
+    }
+
+    #[test]
+    fn batch_slice_axis0() {
+        let t = Tensor::new(&[3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let s = t.batch_slice(1, 3);
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.data(), &[3., 4., 5., 6.]);
+    }
+}

@@ -1,0 +1,112 @@
+//! Property-testing substrate (the offline vendor set has no `proptest`):
+//! seeded random case generation with failure reporting of the seed, so a
+//! failing case is reproducible by construction.
+
+use crate::rng::Rng;
+
+/// Run `f` on `cases` random inputs drawn via `gen`. On failure, panics
+/// with the case index and seed so the exact input can be regenerated.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    base_seed: u64,
+    gen: impl Fn(&mut Rng) -> T,
+    f: impl Fn(&T) -> Result<(), String>,
+) {
+    for i in 0..cases {
+        let seed = base_seed.wrapping_add(i as u64);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = f(&input) {
+            panic!(
+                "property '{name}' failed on case {i} (seed {seed}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use crate::rng::Rng;
+    use crate::tensor::Tensor;
+
+    /// Random shape of `rank` dims, each in [1, max_dim].
+    pub fn shape(rng: &mut Rng, rank: usize, max_dim: usize) -> Vec<usize> {
+        (0..rank).map(|_| 1 + rng.below(max_dim)).collect()
+    }
+
+    /// Random tensor with values ~ N(0, std) and the given shape.
+    pub fn tensor(rng: &mut Rng, shape: &[usize], std: f32) -> Tensor {
+        Tensor::randn(rng, shape, std)
+    }
+
+    /// Random tensor with a random rank-1..3 shape.
+    pub fn any_tensor(rng: &mut Rng, max_dim: usize) -> Tensor {
+        let rank = 1 + rng.below(3);
+        let s = shape(rng, rank, max_dim);
+        let std = 1.0 + 3.0 * rng.uniform();
+        tensor(rng, &s, std)
+    }
+
+    /// Random bitwidth in {2,…,8} ∪ {16}.
+    pub fn bitwidth(rng: &mut Rng) -> u32 {
+        *[2u32, 3, 4, 5, 6, 7, 8, 16]
+            .get(rng.below(8))
+            .unwrap()
+    }
+}
+
+/// Assert two f32 slices are close; returns Err with context for use inside
+/// [`check`] properties.
+pub fn close(a: &[f32], b: &[f32], atol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if (x - y).abs() > atol {
+            return Err(format!("elem {i}: {x} vs {y} (atol {atol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_good_property() {
+        check(
+            "abs is non-negative",
+            50,
+            1,
+            |rng| rng.normal(),
+            |x| {
+                if x.abs() >= 0.0 {
+                    Ok(())
+                } else {
+                    Err("negative abs".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn check_reports_failures() {
+        check(
+            "always fails",
+            5,
+            2,
+            |rng| rng.normal(),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn close_detects_mismatch() {
+        assert!(close(&[1.0, 2.0], &[1.0, 2.0001], 1e-3).is_ok());
+        assert!(close(&[1.0], &[1.1], 1e-3).is_err());
+        assert!(close(&[1.0], &[1.0, 2.0], 1.0).is_err());
+    }
+}

@@ -1,0 +1,117 @@
+//! Weight-range visualization (paper §4.3, figs 4.2/4.3): per-channel
+//! min/max "boxplots" rendered as ASCII for the terminal plus CSV export
+//! for external plotting. AIMET ships this as its visualization API; the
+//! debug flow (§4.8 "Visualizing layers") leans on it.
+
+use crate::graph::Graph;
+use crate::tensor::Tensor;
+
+/// Per-channel range summary of a weight tensor (channel axis 0).
+#[derive(Debug, Clone)]
+pub struct ChannelRanges {
+    pub layer: String,
+    pub ranges: Vec<(f32, f32)>,
+}
+
+impl ChannelRanges {
+    pub fn of(layer: &str, w: &Tensor) -> ChannelRanges {
+        ChannelRanges {
+            layer: layer.to_string(),
+            ranges: w.channel_min_max(0),
+        }
+    }
+
+    /// Spread statistic the CLE experiments report: max over channels of
+    /// |range| divided by min over channels (∞-safe).
+    pub fn spread(&self) -> f32 {
+        let amax = |&(lo, hi): &(f32, f32)| hi.max(-lo).max(1e-12);
+        let hi = self.ranges.iter().map(amax).fold(0.0f32, f32::max);
+        let lo = self.ranges.iter().map(amax).fold(f32::INFINITY, f32::min);
+        hi / lo
+    }
+
+    /// CSV rows: `channel,min,max`.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("channel,min,max\n");
+        for (i, (lo, hi)) in self.ranges.iter().enumerate() {
+            out.push_str(&format!("{i},{lo},{hi}\n"));
+        }
+        out
+    }
+
+    /// ASCII boxplot: one row per channel, bar spanning [min, max] over the
+    /// global range (the fig 4.2/4.3 visual).
+    pub fn to_ascii(&self, width: usize) -> String {
+        let gmin = self
+            .ranges
+            .iter()
+            .map(|r| r.0)
+            .fold(f32::INFINITY, f32::min);
+        let gmax = self
+            .ranges
+            .iter()
+            .map(|r| r.1)
+            .fold(f32::NEG_INFINITY, f32::max);
+        let span = (gmax - gmin).max(1e-12);
+        let mut out = format!(
+            "{} — per-channel weight ranges [{:.4}, {:.4}] (spread {:.1}×)\n",
+            self.layer,
+            gmin,
+            gmax,
+            self.spread()
+        );
+        for (i, (lo, hi)) in self.ranges.iter().enumerate() {
+            let a = (((lo - gmin) / span) * (width - 1) as f32).round() as usize;
+            let b = (((hi - gmin) / span) * (width - 1) as f32).round() as usize;
+            let mut row: Vec<char> = vec![' '; width];
+            let zero = (((0.0 - gmin) / span) * (width - 1) as f32).round() as usize;
+            if zero < width {
+                row[zero] = '|';
+            }
+            for cell in row.iter_mut().take(b.min(width - 1) + 1).skip(a) {
+                *cell = '█';
+            }
+            out.push_str(&format!("ch{i:>3} {}\n", row.into_iter().collect::<String>()));
+        }
+        out
+    }
+}
+
+/// Collect per-channel ranges of every weighted layer in a graph.
+pub fn weight_ranges(g: &Graph) -> Vec<ChannelRanges> {
+    g.nodes
+        .iter()
+        .filter_map(|n| n.op.weight().map(|w| ChannelRanges::of(&n.name, w)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spread_and_csv() {
+        let w = Tensor::new(&[2, 1, 1, 2], vec![-1.0, 1.0, -0.1, 0.1]);
+        let cr = ChannelRanges::of("dw", &w);
+        assert!((cr.spread() - 10.0).abs() < 1e-4);
+        let csv = cr.to_csv();
+        assert!(csv.starts_with("channel,min,max\n"));
+        assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    fn ascii_renders_rows() {
+        let w = Tensor::new(&[3, 1, 1, 2], vec![-2.0, 2.0, -0.5, 0.5, -1.0, 0.2]);
+        let art = ChannelRanges::of("layer", &w).to_ascii(40);
+        assert_eq!(art.lines().count(), 4); // header + 3 channels
+        assert!(art.contains('█'));
+    }
+
+    #[test]
+    fn graph_ranges_cover_weighted_layers() {
+        let g = crate::zoo::build("mobimini", 1).unwrap();
+        let ranges = weight_ranges(&g);
+        // 1 stem + 3 dw + 3 pw + 1 fc = 8 weighted layers.
+        assert_eq!(ranges.len(), 8);
+    }
+}

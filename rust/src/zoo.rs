@@ -1,0 +1,370 @@
+//! Model zoo — the evaluation workloads of the paper, scaled to this
+//! testbed (DESIGN.md §3 maps each to its paper counterpart):
+//!
+//! * [`mobimini`]   — MobileNetV2 analog: depthwise-separable + ReLU6 + BN
+//!   (Table 4.1 row 1, figs 4.2/4.3, Table 5.1).
+//! * [`resmini`]    — ResNet-50 analog: residual blocks (Table 4.1 row 2,
+//!   Table 5.1).
+//! * [`segmini`]    — DeepLabV3 analog: encoder/decoder semantic
+//!   segmentation (Table 4.1 row 3).
+//! * [`detmini`]    — ADAS object-detector analog: grid detection head
+//!   (Table 4.2).
+//! * [`speechmini`] — DeepSpeech2 analog: bi-directional LSTM sequence
+//!   model (Table 5.2).
+//!
+//! Each builder is mirrored 1:1 (same node order, same shapes, same init)
+//! by `python/compile/model.py`; the cross-engine test relies on that.
+
+use crate::graph::{Graph, Input, Op};
+use crate::rng::{kaiming_normal, Rng};
+use crate::tensor::{Conv2dSpec, Tensor};
+
+/// Classification input: [N, 3, 32, 32], 10 classes.
+pub const CLS_INPUT: [usize; 3] = [3, 32, 32];
+pub const CLS_CLASSES: usize = 10;
+/// Segmentation: [N, 3, 32, 32] → [N, 6, 32, 32].
+pub const SEG_CLASSES: usize = 6;
+/// Detection: [N, 3, 64, 64] → [N, 5+DET_CLASSES, 8, 8] grid.
+pub const DET_INPUT: [usize; 3] = [3, 64, 64];
+pub const DET_CLASSES: usize = 4;
+pub const DET_GRID: usize = 8;
+/// Speech: [N, T=20, F=8] → [N, T, SPEECH_TOKENS].
+pub const SPEECH_FEATS: usize = 8;
+pub const SPEECH_TOKENS: usize = 6;
+pub const SPEECH_T: usize = 20;
+
+fn conv(rng: &mut Rng, o: usize, i: usize, k: usize, spec: Conv2dSpec) -> Op {
+    let fan_in = i * k * k;
+    Op::Conv2d {
+        weight: Tensor::new(&[o, i, k, k], kaiming_normal(rng, o * i * k * k, fan_in)),
+        bias: vec![0.0; o],
+        spec,
+    }
+}
+
+/// Depthwise conv with *heterogeneous per-channel scales*: MobileNet-family
+/// depthwise layers are exactly where the paper observes wildly varying
+/// per-channel weight ranges (figs 4.2/4.3) — the phenomenon CLE exists to
+/// fix. We seed that disparity at init (×2 … ÷16 channel scales) so a short
+/// synthetic training run preserves it.
+fn dwconv_disparate(rng: &mut Rng, c: usize, k: usize, spec: Conv2dSpec) -> Op {
+    let mut w = kaiming_normal(rng, c * k * k, k * k);
+    for ci in 0..c {
+        let s = match ci % 4 {
+            0 => 2.0,
+            1 => 0.25,
+            2 => 1.0,
+            _ => 0.06,
+        };
+        for v in &mut w[ci * k * k..(ci + 1) * k * k] {
+            *v *= s;
+        }
+    }
+    Op::DepthwiseConv2d {
+        weight: Tensor::new(&[c, 1, k, k], w),
+        bias: vec![0.0; c],
+        spec,
+    }
+}
+
+fn bn(c: usize) -> Op {
+    Op::BatchNorm {
+        gamma: vec![1.0; c],
+        beta: vec![0.0; c],
+        mean: vec![0.0; c],
+        var: vec![1.0; c],
+        eps: 1e-5,
+    }
+}
+
+fn linear(rng: &mut Rng, o: usize, i: usize) -> Op {
+    Op::Linear {
+        weight: Tensor::new(&[o, i], kaiming_normal(rng, o * i, i)),
+        bias: vec![0.0; o],
+    }
+}
+
+/// MobileNetV2 analog: stem conv + 3 depthwise-separable blocks + GAP + FC.
+/// ReLU6 activations throughout (the CLE caveat of §4.3.1 applies).
+pub fn mobimini(rng: &mut Rng) -> Graph {
+    let mut g = Graph::new();
+    // Stem: 3 -> 16, stride 2 (32 -> 16).
+    g.push("stem.conv", conv(rng, 16, 3, 3, Conv2dSpec { stride: 2, pad: 1 }));
+    g.push("stem.bn", bn(16));
+    g.push("stem.relu6", Op::Relu6);
+    // Block 1: dw16 + pw 16->32, stride 2 (16 -> 8).
+    g.push("b1.dw", dwconv_disparate(rng, 16, 3, Conv2dSpec { stride: 2, pad: 1 }));
+    g.push("b1.dw_bn", bn(16));
+    g.push("b1.dw_relu6", Op::Relu6);
+    g.push("b1.pw", conv(rng, 32, 16, 1, Conv2dSpec::unit()));
+    g.push("b1.pw_bn", bn(32));
+    g.push("b1.pw_relu6", Op::Relu6);
+    // Block 2: dw32 + pw 32->64, stride 2 (8 -> 4).
+    g.push("b2.dw", dwconv_disparate(rng, 32, 3, Conv2dSpec { stride: 2, pad: 1 }));
+    g.push("b2.dw_bn", bn(32));
+    g.push("b2.dw_relu6", Op::Relu6);
+    g.push("b2.pw", conv(rng, 64, 32, 1, Conv2dSpec::unit()));
+    g.push("b2.pw_bn", bn(64));
+    g.push("b2.pw_relu6", Op::Relu6);
+    // Block 3: dw64 + pw 64->64, stride 1.
+    g.push("b3.dw", dwconv_disparate(rng, 64, 3, Conv2dSpec::same(3)));
+    g.push("b3.dw_bn", bn(64));
+    g.push("b3.dw_relu6", Op::Relu6);
+    g.push("b3.pw", conv(rng, 64, 64, 1, Conv2dSpec::unit()));
+    g.push("b3.pw_bn", bn(64));
+    g.push("b3.pw_relu6", Op::Relu6);
+    // Head.
+    g.push("gap", Op::GlobalAvgPool);
+    g.push("fc", linear(rng, CLS_CLASSES, 64));
+    g
+}
+
+/// ResNet-50 analog: stem + two residual stages.
+pub fn resmini(rng: &mut Rng) -> Graph {
+    let mut g = Graph::new();
+    g.push("stem.conv", conv(rng, 16, 3, 3, Conv2dSpec { stride: 2, pad: 1 }));
+    g.push("stem.bn", bn(16));
+    let mut prev = g.push("stem.relu", Op::Relu);
+
+    for (stage, (cin, cout, stride)) in [(16usize, 32usize, 2usize), (32, 64, 2)]
+        .into_iter()
+        .enumerate()
+    {
+        let s = format!("s{}", stage + 1);
+        // Main branch: conv-bn-relu-conv-bn.
+        g.push_with(
+            &format!("{s}.conv1"),
+            conv(rng, cout, cin, 3, Conv2dSpec { stride, pad: 1 }),
+            vec![Input::Node(prev)],
+        );
+        g.push(&format!("{s}.bn1"), bn(cout));
+        g.push(&format!("{s}.relu1"), Op::Relu);
+        g.push(&format!("{s}.conv2"), conv(rng, cout, cout, 3, Conv2dSpec::same(3)));
+        let main = g.push(&format!("{s}.bn2"), bn(cout));
+        // Shortcut: 1x1 stride-s conv + bn.
+        g.push_with(
+            &format!("{s}.sc_conv"),
+            conv(rng, cout, cin, 1, Conv2dSpec { stride, pad: 0 }),
+            vec![Input::Node(prev)],
+        );
+        let sc_bn = g.push(&format!("{s}.sc_bn"), bn(cout));
+        let add = g.push_with(
+            &format!("{s}.add"),
+            Op::Add,
+            vec![Input::Node(main), Input::Node(sc_bn)],
+        );
+        prev = g.push_with(&format!("{s}.relu2"), Op::Relu, vec![Input::Node(add)]);
+    }
+    g.push("gap", Op::GlobalAvgPool);
+    g.push("fc", linear(rng, CLS_CLASSES, 64));
+    g
+}
+
+/// DeepLabV3 analog: conv encoder (÷4), bottleneck, nearest-neighbour
+/// decoder (×4), 1×1 classifier head → per-pixel logits [N, 6, 32, 32].
+pub fn segmini(rng: &mut Rng) -> Graph {
+    let mut g = Graph::new();
+    g.push("enc1.conv", conv(rng, 16, 3, 3, Conv2dSpec { stride: 2, pad: 1 }));
+    g.push("enc1.bn", bn(16));
+    g.push("enc1.relu", Op::Relu);
+    g.push("enc2.conv", conv(rng, 32, 16, 3, Conv2dSpec { stride: 2, pad: 1 }));
+    g.push("enc2.bn", bn(32));
+    g.push("enc2.relu", Op::Relu);
+    g.push("mid.conv", conv(rng, 32, 32, 3, Conv2dSpec::same(3)));
+    g.push("mid.bn", bn(32));
+    g.push("mid.relu", Op::Relu);
+    g.push("dec1.up", Op::Upsample2);
+    g.push("dec1.conv", conv(rng, 16, 32, 3, Conv2dSpec::same(3)));
+    g.push("dec1.bn", bn(16));
+    g.push("dec1.relu", Op::Relu);
+    g.push("dec2.up", Op::Upsample2);
+    g.push("dec2.conv", conv(rng, 16, 16, 3, Conv2dSpec::same(3)));
+    g.push("dec2.bn", bn(16));
+    g.push("dec2.relu", Op::Relu);
+    g.push("head", conv(rng, SEG_CLASSES, 16, 1, Conv2dSpec::unit()));
+    g
+}
+
+/// ADAS-detector analog: conv backbone (÷8) + grid head predicting, per
+/// 8×8 cell: [objectness, 4 box offsets, 4 class logits].
+pub fn detmini(rng: &mut Rng) -> Graph {
+    let mut g = Graph::new();
+    g.push("bb1.conv", conv(rng, 16, 3, 3, Conv2dSpec { stride: 2, pad: 1 }));
+    g.push("bb1.bn", bn(16));
+    g.push("bb1.relu", Op::Relu);
+    g.push("bb2.conv", conv(rng, 32, 16, 3, Conv2dSpec { stride: 2, pad: 1 }));
+    g.push("bb2.bn", bn(32));
+    g.push("bb2.relu", Op::Relu);
+    g.push("bb3.conv", conv(rng, 64, 32, 3, Conv2dSpec { stride: 2, pad: 1 }));
+    g.push("bb3.bn", bn(64));
+    g.push("bb3.relu", Op::Relu);
+    g.push("neck.conv", conv(rng, 64, 64, 3, Conv2dSpec::same(3)));
+    g.push("neck.bn", bn(64));
+    g.push("neck.relu", Op::Relu);
+    g.push("head", conv(rng, 5 + DET_CLASSES, 64, 1, Conv2dSpec::unit()));
+    g
+}
+
+/// DeepSpeech2 analog: bi-directional LSTM + per-frame classifier.
+/// [N, T, F] → [N, T, SPEECH_TOKENS].
+pub fn speechmini(rng: &mut Rng) -> Graph {
+    let hidden = 16;
+    let mut g = Graph::new();
+    let fwd = g.push_with(
+        "lstm.fwd",
+        Op::Lstm {
+            w_ih: Tensor::new(
+                &[4 * hidden, SPEECH_FEATS],
+                crate::rng::xavier_uniform(rng, 4 * hidden * SPEECH_FEATS, SPEECH_FEATS, hidden),
+            ),
+            w_hh: Tensor::new(
+                &[4 * hidden, hidden],
+                crate::rng::xavier_uniform(rng, 4 * hidden * hidden, hidden, hidden),
+            ),
+            bias: vec![0.0; 4 * hidden],
+            hidden,
+            reverse: false,
+        },
+        vec![Input::Graph],
+    );
+    let bwd = g.push_with(
+        "lstm.bwd",
+        Op::Lstm {
+            w_ih: Tensor::new(
+                &[4 * hidden, SPEECH_FEATS],
+                crate::rng::xavier_uniform(rng, 4 * hidden * SPEECH_FEATS, SPEECH_FEATS, hidden),
+            ),
+            w_hh: Tensor::new(
+                &[4 * hidden, hidden],
+                crate::rng::xavier_uniform(rng, 4 * hidden * hidden, hidden, hidden),
+            ),
+            bias: vec![0.0; 4 * hidden],
+            hidden,
+            reverse: true,
+        },
+        vec![Input::Graph],
+    );
+    g.push_with(
+        "concat",
+        Op::Concat { axis: 2 },
+        vec![Input::Node(fwd), Input::Node(bwd)],
+    );
+    g.push("fc", linear(rng, SPEECH_TOKENS, 2 * hidden));
+    g
+}
+
+/// Model registry for the CLI / experiment harness.
+pub fn build(name: &str, seed: u64) -> Option<Graph> {
+    let mut rng = Rng::new(seed);
+    match name {
+        "mobimini" => Some(mobimini(&mut rng)),
+        "resmini" => Some(resmini(&mut rng)),
+        "segmini" => Some(segmini(&mut rng)),
+        "detmini" => Some(detmini(&mut rng)),
+        "speechmini" => Some(speechmini(&mut rng)),
+        _ => None,
+    }
+}
+
+/// Input shape (without batch dim) per model.
+pub fn input_shape(name: &str) -> Option<Vec<usize>> {
+    match name {
+        "mobimini" | "resmini" | "segmini" => Some(CLS_INPUT.to_vec()),
+        "detmini" => Some(DET_INPUT.to_vec()),
+        "speechmini" => Some(vec![SPEECH_T, SPEECH_FEATS]),
+        _ => None,
+    }
+}
+
+pub const MODEL_NAMES: [&str; 5] = ["mobimini", "resmini", "segmini", "detmini", "speechmini"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mobimini_shapes() {
+        let mut rng = Rng::new(1);
+        let g = mobimini(&mut rng);
+        let shapes = g.output_shapes(&[2, 3, 32, 32]);
+        assert_eq!(shapes.last().unwrap(), &vec![2, CLS_CLASSES]);
+        // Spatial pyramid 32 -> 16 -> 8 -> 4.
+        assert_eq!(shapes[g.find("stem.relu6").unwrap()], vec![2, 16, 16, 16]);
+        assert_eq!(shapes[g.find("b1.pw_relu6").unwrap()], vec![2, 32, 8, 8]);
+        assert_eq!(shapes[g.find("b3.pw_relu6").unwrap()], vec![2, 64, 4, 4]);
+    }
+
+    #[test]
+    fn resmini_shapes_and_residuals() {
+        let mut rng = Rng::new(2);
+        let g = resmini(&mut rng);
+        let shapes = g.output_shapes(&[1, 3, 32, 32]);
+        assert_eq!(shapes.last().unwrap(), &vec![1, CLS_CLASSES]);
+        for name in ["s1.add", "s2.add"] {
+            let n = &g.nodes[g.find(name).unwrap()];
+            assert_eq!(n.inputs.len(), 2);
+        }
+    }
+
+    #[test]
+    fn segmini_full_resolution_output() {
+        let mut rng = Rng::new(3);
+        let g = segmini(&mut rng);
+        let shapes = g.output_shapes(&[1, 3, 32, 32]);
+        assert_eq!(shapes.last().unwrap(), &vec![1, SEG_CLASSES, 32, 32]);
+    }
+
+    #[test]
+    fn detmini_grid_output() {
+        let mut rng = Rng::new(4);
+        let g = detmini(&mut rng);
+        let shapes = g.output_shapes(&[1, 3, 64, 64]);
+        assert_eq!(
+            shapes.last().unwrap(),
+            &vec![1, 5 + DET_CLASSES, DET_GRID, DET_GRID]
+        );
+    }
+
+    #[test]
+    fn speechmini_per_frame_logits() {
+        let mut rng = Rng::new(5);
+        let g = speechmini(&mut rng);
+        let shapes = g.output_shapes(&[2, SPEECH_T, SPEECH_FEATS]);
+        assert_eq!(shapes.last().unwrap(), &vec![2, SPEECH_T, SPEECH_TOKENS]);
+    }
+
+    #[test]
+    fn registry_covers_all() {
+        for name in MODEL_NAMES {
+            assert!(build(name, 7).is_some(), "{name}");
+            assert!(input_shape(name).is_some(), "{name}");
+        }
+        assert!(build("nope", 0).is_none());
+    }
+
+    #[test]
+    fn deterministic_build() {
+        let a = build("mobimini", 11).unwrap();
+        let b = build("mobimini", 11).unwrap();
+        let x = Tensor::zeros(&[1, 3, 32, 32]);
+        assert!(a.forward(&x).max_abs_diff(&b.forward(&x)) == 0.0);
+    }
+
+    #[test]
+    fn depthwise_disparity_is_seeded() {
+        // The per-channel range spread CLE will equalize must exist at init.
+        let g = build("mobimini", 1).unwrap();
+        let dw = &g.nodes[g.find("b1.dw").unwrap()];
+        let ranges: Vec<f32> = dw
+            .op
+            .weight()
+            .unwrap()
+            .channel_min_max(0)
+            .iter()
+            .map(|(lo, hi)| hi.max(-lo))
+            .collect();
+        let max = ranges.iter().cloned().fold(0.0f32, f32::max);
+        let min = ranges.iter().cloned().fold(f32::INFINITY, f32::min);
+        assert!(max / min > 5.0, "spread {}", max / min);
+    }
+}

@@ -1,0 +1,224 @@
+//! Cross-engine validation: the Rust graph engine and the PJRT-executed
+//! JAX/Pallas artifacts must agree on the same weights and inputs.
+//!
+//! This is the load-bearing test of the three-layer architecture: the L3
+//! coordinator's numerics (used by every PTQ/QAT algorithm) are checked
+//! against the L2 JAX models (which route the quantization ops through the
+//! L1 Pallas kernels). Skips cleanly when `make artifacts` has not run.
+
+use aimet::quant::{weight_encoding, QuantScheme};
+use aimet::quantsim::{QuantParams, QuantizationSimModel};
+use aimet::runtime::{graph_param_tensors, set_graph_params, Runtime};
+use aimet::task::TaskData;
+use aimet::tensor::Tensor;
+use aimet::zoo;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = Runtime::artifacts_dir();
+    if !Runtime::available(&dir) {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(Runtime::open(&dir).expect("runtime open"))
+}
+
+fn fwd_batch(rt: &Runtime, model: &str) -> usize {
+    rt.spec(&format!("{model}_fwd")).unwrap().inputs.last().unwrap()[0]
+}
+
+#[test]
+fn fp32_forward_matches_for_every_model() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    for model in zoo::MODEL_NAMES {
+        let g = zoo::build(model, 42).unwrap();
+        let data = TaskData::new(model, 43);
+        let n = fwd_batch(&rt, model);
+        let (x, _) = data.batch(0, n);
+        let rust_y = g.forward(&x);
+        let mut inputs = graph_param_tensors(&g);
+        inputs.push(x);
+        let outs = rt.execute(&format!("{model}_fwd"), &inputs).expect(model);
+        assert_eq!(outs.len(), 1, "{model} output arity");
+        let pjrt_y = &outs[0];
+        assert_eq!(pjrt_y.shape(), rust_y.shape(), "{model} shape");
+        let scale = rust_y.abs_max().max(1.0);
+        let diff = pjrt_y.max_abs_diff(&rust_y);
+        assert!(
+            diff / scale < 1e-3,
+            "{model}: engines disagree, max abs diff {diff} (scale {scale})"
+        );
+    }
+}
+
+#[test]
+fn quantsim_forward_matches_pallas_fake_quant_path() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let model = "mobimini";
+    let g = zoo::build(model, 44).unwrap();
+    let data = TaskData::new(model, 45);
+    let mut sim = QuantizationSimModel::with_defaults(g, QuantParams::default());
+    sim.compute_encodings(&data.calibration(3, 8));
+
+    // Flatten the sim's encodings in the order the JAX program expects:
+    // act rows = [model input] + node-order placed act slots; param rows =
+    // weighted nodes in node order. The JAX side uses per-tensor symmetric
+    // weights, so re-derive per-tensor weight encodings for the check.
+    let mut act_rows: Vec<f32> = Vec::new();
+    let q_in = sim.input_slot.quantizer.as_ref().unwrap();
+    act_rows.extend([q_in.encodings[0].scale, q_in.encodings[0].offset as f32]);
+    for (idx, slot) in sim.acts.iter().enumerate() {
+        if !slot.placed {
+            continue;
+        }
+        let _ = idx;
+        let e = &slot.quantizer.as_ref().unwrap().encodings[0];
+        act_rows.extend([e.scale, e.offset as f32]);
+    }
+    let mut par_rows: Vec<f32> = Vec::new();
+    let weighted: Vec<usize> = (0..sim.graph.nodes.len())
+        .filter(|&i| sim.params[i].is_some())
+        .collect();
+    for idx in weighted {
+        let e = {
+            let w = sim.graph.nodes[idx].op.weight().unwrap();
+            weight_encoding(w, QuantScheme::TfEnhanced, 8, true)
+        };
+        par_rows.extend([e.scale, 0.0]);
+        // Align the Rust sim to exactly these per-tensor encodings.
+        sim.params[idx].as_mut().unwrap().quantizer =
+            Some(aimet::quant::Quantizer::per_tensor(e));
+    }
+    let n_act = act_rows.len() / 2;
+    let n_par = par_rows.len() / 2;
+    let spec = rt.spec("mobimini_qsim_fwd").unwrap().clone();
+    assert_eq!(spec.inputs[spec.inputs.len() - 2], vec![n_act, 2], "act rows");
+    assert_eq!(spec.inputs[spec.inputs.len() - 1], vec![n_par, 2], "param rows");
+
+    let n = spec.inputs[spec.inputs.len() - 3][0];
+    let (x, _) = data.batch(1, n);
+    let rust_y = sim.forward(&x);
+
+    let mut inputs = graph_param_tensors(&sim.graph);
+    inputs.push(x);
+    inputs.push(Tensor::new(&[n_act, 2], act_rows));
+    inputs.push(Tensor::new(&[n_par, 2], par_rows));
+    let outs = rt.execute("mobimini_qsim_fwd", &inputs).expect("qsim fwd");
+    let scale = rust_y.abs_max().max(1.0);
+    let diff = outs[0].max_abs_diff(&rust_y);
+    assert!(
+        diff / scale < 1e-2,
+        "quantsim engines disagree: max abs diff {diff} (scale {scale})"
+    );
+}
+
+#[test]
+fn fp32_step_trains_identically_shaped_params() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let model = "mobimini";
+    let g = zoo::build(model, 46).unwrap();
+    let data = TaskData::new(model, 47);
+    let spec = rt.spec("mobimini_fp32_step").unwrap().clone();
+    let n = spec.inputs[spec.inputs.len() - 3][0];
+    let (x, targets) = data.batch(0, n);
+    let aimet::task::Targets::Labels(labels) = targets else { panic!() };
+    let mut y_onehot = Tensor::zeros(&[n, zoo::CLS_CLASSES]);
+    for (i, &l) in labels.iter().enumerate() {
+        y_onehot.data_mut()[i * zoo::CLS_CLASSES + l] = 1.0;
+    }
+    let params = graph_param_tensors(&g);
+    let mut inputs = params.clone();
+    inputs.push(x);
+    inputs.push(y_onehot);
+    inputs.push(Tensor::scalar(0.05));
+    let outs = rt.execute("mobimini_fp32_step", &inputs).expect("step");
+    assert_eq!(outs.len(), params.len() + 1, "params' + loss");
+    let loss = outs.last().unwrap().data()[0];
+    assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+    // Updated params keep shapes and actually move.
+    let mut moved = 0;
+    for (p_new, p_old) in outs[..params.len()].iter().zip(&params) {
+        assert_eq!(p_new.shape(), p_old.shape());
+        if p_new.max_abs_diff(p_old) > 0.0 {
+            moved += 1;
+        }
+    }
+    assert!(moved > params.len() / 2, "only {moved} params moved");
+
+    // Drive a few dozen steps from Rust and require the loss trend to
+    // fall — the e2e_quantize example does exactly this at larger scale.
+    let mut g2 = g.clone();
+    let mut losses = vec![loss];
+    for step in 1..30 {
+        let (x, targets) = data.batch(step, n);
+        let aimet::task::Targets::Labels(labels) = targets else { panic!() };
+        let mut y1 = Tensor::zeros(&[n, zoo::CLS_CLASSES]);
+        for (i, &l) in labels.iter().enumerate() {
+            y1.data_mut()[i * zoo::CLS_CLASSES + l] = 1.0;
+        }
+        let mut inputs = graph_param_tensors(&g2);
+        inputs.push(x);
+        inputs.push(y1);
+        inputs.push(Tensor::scalar(0.1));
+        let outs = rt.execute("mobimini_fp32_step", &inputs).expect("step");
+        let k = outs.len() - 1;
+        set_graph_params(&mut g2, &outs[..k]);
+        losses.push(outs[k].data()[0]);
+    }
+    let head: f32 = losses[..5].iter().sum::<f32>() / 5.0;
+    let tail: f32 = losses[losses.len() - 5..].iter().sum::<f32>() / 5.0;
+    assert!(
+        tail < head,
+        "PJRT training did not reduce loss: {head} -> {tail} ({losses:?})"
+    );
+}
+
+#[test]
+fn qmatmul_demo_matches_rust_quantized_matmul() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    use aimet::rng::Rng;
+    let mut rng = Rng::new(7);
+    let (m, k, n) = (128usize, 256usize, 128usize);
+    let x = Tensor::new(
+        &[m, k],
+        (0..m * k).map(|_| rng.below(256) as f32).collect(),
+    );
+    let w = Tensor::new(
+        &[k, n],
+        (0..k * n).map(|_| rng.below(255) as f32 - 127.0).collect(),
+    );
+    let bias = Tensor::new(&[n], (0..n).map(|_| rng.below(2000) as f32 - 1000.0).collect());
+    let (s_x, s_w, s_y, z_y) = (0.02f32, 0.01, 0.05, 128.0);
+    let scales = Tensor::new(&[4], vec![s_x, s_w, s_y, z_y]);
+    let outs = rt
+        .execute("qmatmul_demo", &[x.clone(), w.clone(), bias.clone(), scales])
+        .expect("qmatmul");
+    // Rust oracle: integer matmul + requant (mirrors quant::qops).
+    let mut want = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = bias.data()[j] as f64;
+            for kk in 0..k {
+                acc += (x.data()[i * k + kk] * w.data()[kk * n + j]) as f64;
+            }
+            let y = (acc * (s_x as f64 * s_w as f64 / s_y as f64)).round() + z_y as f64;
+            want[i * n + j] = y.clamp(0.0, 255.0) as f32;
+        }
+    }
+    let want = Tensor::new(&[m, n], want);
+    // ±1 int tolerance on round-half ties between engines.
+    let diff = outs[0].max_abs_diff(&want);
+    assert!(diff <= 1.0, "qmatmul mismatch: {diff}");
+}
+
+#[test]
+fn range_stats_demo_matches_rust_min_max() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let data = TaskData::new("mobimini", 48);
+    let spec = rt.spec("range_stats_demo").unwrap().clone();
+    let n = spec.inputs[0][0];
+    let (x, _) = data.batch(0, n);
+    let outs = rt.execute("range_stats_demo", &[x.clone()]).expect("range stats");
+    assert_eq!(outs[0].shape(), &[2]);
+    assert_eq!(outs[0].data()[0], x.min());
+    assert_eq!(outs[0].data()[1], x.max());
+}

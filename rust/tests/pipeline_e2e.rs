@@ -1,0 +1,99 @@
+//! End-to-end pipeline test: train → PTQ → QAT → export, exactly the
+//! lifecycle a toolkit user runs, on two representative models.
+
+use aimet::coordinator::experiments::{trained_model, Effort};
+use aimet::ptq::{standard_ptq_pipeline, PtqOptions};
+use aimet::qat::{fit_qat, TrainConfig};
+use aimet::quantsim::load_param_encodings;
+use aimet::task::{evaluate_graph, evaluate_sim};
+
+#[test]
+fn train_ptq_qat_export_lifecycle() {
+    let model = "resmini";
+    let (g, data, train_log) = trained_model(model, Effort::Fast, 2000);
+
+    // Training must actually have learned something.
+    let (head, tail) = train_log.head_tail_mean(3);
+    assert!(tail < head, "training failed: {head} -> {tail}");
+    let fp32 = evaluate_graph(&g, model, &data, 3, 16);
+    assert!(fp32 > 40.0, "fp32 baseline too weak: {fp32}");
+
+    // PTQ (fig 4.1).
+    let calib = data.calibration(3, 16);
+    let ptq_out = standard_ptq_pipeline(&g, &calib, &PtqOptions::default());
+    let ptq = evaluate_sim(&ptq_out.sim, model, &data, 3, 16);
+    assert!(
+        ptq > fp32 - 15.0,
+        "W8/A8 PTQ should be near FP32: {fp32} vs {ptq}"
+    );
+
+    // QAT (fig 5.2), PTQ-initialized.
+    let mut sim = ptq_out.sim.clone();
+    let cfg = TrainConfig {
+        steps: 60,
+        lr: 0.01,
+        lr_decay_every: 30,
+        ..Default::default()
+    };
+    fit_qat(&mut sim, model, &data, &cfg);
+    let qat = evaluate_sim(&sim, model, &data, 3, 16);
+    assert!(
+        qat >= ptq - 3.0,
+        "QAT should not regress from PTQ init: {ptq} vs {qat}"
+    );
+
+    // Export (§3.3): model + encodings, reload and re-evaluate.
+    let dir = std::env::temp_dir().join("aimet_e2e_export");
+    std::fs::create_dir_all(&dir).unwrap();
+    sim.export(&dir, model).unwrap();
+    let reloaded = aimet::graph::load_graph(&dir.join(model)).unwrap();
+    let (x, _) = data.batch(50_000, 8);
+    assert!(
+        reloaded.forward(&x).max_abs_diff(&sim.graph.forward(&x)) < 1e-6,
+        "exported model must match the sim's shadow weights"
+    );
+    let enc = std::fs::read_to_string(dir.join(format!("{model}_encodings.json"))).unwrap();
+    let params = load_param_encodings(&enc).unwrap();
+    assert!(!params.is_empty(), "encodings export is empty");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn detection_lifecycle_with_adaround() {
+    let model = "detmini";
+    let (g, data, _) = trained_model(model, Effort::Fast, 2100);
+    let fp32 = evaluate_graph(&g, model, &data, 3, 16);
+    let calib = data.calibration(3, 16);
+    let mut opts = PtqOptions {
+        use_adaround: true,
+        ..Default::default()
+    };
+    opts.adaround.iterations = 120;
+    opts.adaround.max_rows = 512;
+    let out = standard_ptq_pipeline(&g, &calib, &opts);
+    let q = evaluate_sim(&out.sim, model, &data, 3, 16);
+    assert!(
+        q > fp32 - 20.0,
+        "W8/A8 AdaRound PTQ should hold mAP: {fp32} vs {q}"
+    );
+    // Pipeline log records every fig 4.1 stage it ran.
+    let log = out.log.join("\n");
+    assert!(log.contains("adaround"));
+    assert!(log.contains("range setting"));
+}
+
+#[test]
+fn speech_lifecycle_recurrent() {
+    let model = "speechmini";
+    let (g, data, _) = trained_model(model, Effort::Fast, 2200);
+    let fp32 = evaluate_graph(&g, model, &data, 3, 16);
+    let calib = data.calibration(2, 16);
+    // LSTMs: no BN to fold, no CLE pairs — pipeline must degrade to plain
+    // range setting without erroring.
+    let out = standard_ptq_pipeline(&g, &calib, &PtqOptions::default());
+    let q = evaluate_sim(&out.sim, model, &data, 3, 16);
+    assert!(
+        q > fp32 - 15.0,
+        "W8/A8 LSTM sim should be near FP32: {fp32} vs {q}"
+    );
+}

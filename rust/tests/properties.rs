@@ -1,0 +1,344 @@
+//! Property-based tests on the toolkit's core invariants, driven by the
+//! in-repo deterministic generator (`testutil::gen`) — the offline build
+//! carries no proptest, so cases are swept explicitly over seeded shapes,
+//! values, bit-widths and schemes.
+
+use aimet::graph::{batch_stats, Graph, Op};
+use aimet::ptq::{equalize_model, fold_all_batch_norms, scheme_mse};
+use aimet::quant::{sqnr_db, weight_encoding, Encoding, QuantScheme, Quantizer};
+use aimet::quantsim::{QuantParams, QuantizationSimModel};
+use aimet::rng::Rng;
+use aimet::tensor::{Conv2dSpec, Tensor};
+use aimet::testutil::gen;
+use aimet::zoo;
+
+const CASES: usize = 40;
+
+/// qdq is idempotent: qdq(qdq(x)) == qdq(x) for every scheme/bw/shape.
+#[test]
+fn prop_qdq_idempotent() {
+    let mut rng = Rng::new(0xA11CE);
+    for case in 0..CASES {
+        let x = gen::any_tensor(&mut rng, 24);
+        let bw = gen::bitwidth(&mut rng);
+        let symmetric = rng.below(2) == 0;
+        let enc = Encoding::from_min_max(x.min(), x.max(), bw, symmetric);
+        let q = Quantizer::per_tensor(enc);
+        let once = q.qdq(&x);
+        let twice = q.qdq(&once);
+        assert_eq!(once, twice, "case {case}: qdq not idempotent (bw {bw})");
+    }
+}
+
+/// Real zero is always exactly representable (§2.2's zero-point promise).
+#[test]
+fn prop_zero_is_exact() {
+    let mut rng = Rng::new(0xBEEF);
+    for _ in 0..CASES {
+        let lo = rng.uniform_in(-8.0, -0.01);
+        let hi = rng.uniform_in(0.01, 8.0);
+        let bw = gen::bitwidth(&mut rng);
+        let symmetric = rng.below(2) == 0;
+        let enc = Encoding::from_min_max(lo, hi, bw, symmetric);
+        let z = Quantizer::per_tensor(enc).qdq(&Tensor::new(&[1], vec![0.0]));
+        assert_eq!(z.data()[0], 0.0, "zero must quantize exactly");
+    }
+}
+
+/// Quantization error is bounded by half a step inside the clip range.
+#[test]
+fn prop_rounding_error_bounded_by_half_scale() {
+    let mut rng = Rng::new(0xC0DE);
+    for _ in 0..CASES {
+        let x = gen::tensor(&mut rng, &[257], 1.0);
+        let enc = Encoding::from_min_max(x.min(), x.max(), 8, false);
+        let q = Quantizer::per_tensor(enc).qdq(&x);
+        for (a, b) in x.data().iter().zip(q.data()) {
+            if *a >= enc.min && *a <= enc.max {
+                assert!(
+                    (a - b).abs() <= 0.5 * enc.scale + 1e-6,
+                    "error {} > s/2 {}",
+                    (a - b).abs(),
+                    enc.scale * 0.5
+                );
+            }
+        }
+    }
+}
+
+/// SQNR grows monotonically with bit-width on the same data.
+#[test]
+fn prop_sqnr_monotone_in_bitwidth() {
+    let mut rng = Rng::new(0xD1CE);
+    for _ in 0..10 {
+        let std = rng.uniform_in(0.1, 4.0);
+        let x = gen::tensor(&mut rng, &[2048], std);
+        let mut last = f32::NEG_INFINITY;
+        for bw in [2u32, 4, 6, 8, 10] {
+            let enc = Encoding::from_min_max(x.min(), x.max(), bw, false);
+            let q = Quantizer::per_tensor(enc).qdq(&x);
+            let s = sqnr_db(&x, &q);
+            assert!(s >= last, "SQNR fell with more bits: {last} -> {s} at bw {bw}");
+            last = s;
+        }
+    }
+}
+
+/// The SQNR scheme never does worse than min-max by more than 10%
+/// (it degenerates to min-max when no clipping helps).
+#[test]
+fn prop_tf_enhanced_never_much_worse_than_tf() {
+    let mut rng = Rng::new(0xE44);
+    for _ in 0..20 {
+        let std = rng.uniform_in(0.2, 3.0);
+        let x = gen::tensor(&mut rng, &[1024], std);
+        for bw in [4u32, 8] {
+            let (tf, enhanced) = scheme_mse(&x, bw, false);
+            assert!(
+                enhanced <= tf * 1.1 + 1e-9,
+                "tf_enhanced {enhanced} ≫ tf {tf} at bw {bw}"
+            );
+        }
+    }
+}
+
+/// BN folding preserves the FP32 function on every zoo model.
+#[test]
+fn prop_bn_fold_function_preserving() {
+    for (i, model) in zoo::MODEL_NAMES.iter().enumerate() {
+        let g = zoo::build(model, 0x50 + i as u64).unwrap();
+        let mut folded = g.clone();
+        fold_all_batch_norms(&mut folded);
+        let data = aimet::task::TaskData::new(model, 7);
+        let (x, _) = data.batch(0, 4);
+        let y0 = g.forward(&x);
+        let y1 = folded.forward(&x);
+        let scale = y0.abs_max().max(1.0);
+        assert!(
+            y1.max_abs_diff(&y0) / scale < 1e-4,
+            "{model}: BN fold changed the function"
+        );
+    }
+}
+
+/// CLE preserves the FP32 function on ReLU-only graphs for arbitrary
+/// random weighted chains (not just the zoo).
+#[test]
+fn prop_cle_function_preserving_on_random_chains() {
+    let mut rng = Rng::new(0xF00D);
+    for case in 0..10 {
+        let c1 = 2 + rng.below(6);
+        let c2 = 2 + rng.below(6);
+        let mut g = Graph::new();
+        g.push(
+            "conv1",
+            Op::Conv2d {
+                weight: {
+                    let std = rng.uniform_in(0.05, 2.0);
+                    Tensor::randn(&mut rng, &[c1, 3, 3, 3], std)
+                },
+                bias: rng.normal_vec(c1, 0.5),
+                spec: Conv2dSpec::same(3),
+            },
+        );
+        g.push("relu1", Op::Relu);
+        g.push(
+            "conv2",
+            Op::Conv2d {
+                weight: {
+                    let std = rng.uniform_in(0.05, 2.0);
+                    Tensor::randn(&mut rng, &[c2, c1, 3, 3], std)
+                },
+                bias: rng.normal_vec(c2, 0.5),
+                spec: Conv2dSpec::same(3),
+            },
+        );
+        let x = Tensor::randn(&mut rng, &[2, 3, 8, 8], 1.0);
+        let y0 = g.forward(&x);
+        equalize_model(&mut g);
+        let y1 = g.forward(&x);
+        let scale = y0.abs_max().max(1.0);
+        assert!(
+            y1.max_abs_diff(&y0) / scale < 1e-4,
+            "case {case}: CLE changed the function"
+        );
+        // And the per-pair ranges are actually equalized.
+        let ranges = aimet::visualize::weight_ranges(&g);
+        assert_eq!(ranges.len(), 2);
+    }
+}
+
+/// Per-channel quantization has a per-element error *bound* of s_c/2 ≤
+/// s_t/2, so its MSE is no worse than per-tensor in expectation (it can
+/// lose on individual finite samples by rounding luck). Check the bound
+/// per element, the aggregate MSE across cases, and a loose per-case cap.
+#[test]
+fn prop_per_channel_no_worse_than_per_tensor() {
+    let mut rng = Rng::new(0xFACE);
+    let (mut sum_pt, mut sum_pc) = (0.0f64, 0.0f64);
+    for case in 0..20 {
+        let o = 2 + rng.below(8);
+        let f = 1 + rng.below(32);
+        let mut w = Tensor::randn(&mut rng, &[o, f], 1.0);
+        // Random per-channel scaling to create disparity sometimes.
+        for ci in 0..o {
+            let s = rng.uniform_in(0.05, 4.0);
+            for v in &mut w.data_mut()[ci * f..(ci + 1) * f] {
+                *v *= s;
+            }
+        }
+        let pt_enc = weight_encoding(&w, QuantScheme::Tf, 8, true);
+        let pt = Quantizer::per_tensor(pt_enc);
+        let pc_encs =
+            aimet::quant::per_channel_weight_encodings(&w, QuantScheme::Tf, 8, true, 0);
+        // The per-element bound: every channel's step ≤ the tensor step.
+        for e in &pc_encs {
+            assert!(
+                e.scale <= pt_enc.scale * 1.0001,
+                "channel scale {} > tensor scale {}",
+                e.scale,
+                pt_enc.scale
+            );
+        }
+        let pc = Quantizer::per_channel(pc_encs, 0);
+        let e_pt = pt.qdq(&w).sq_err(&w);
+        let e_pc = pc.qdq(&w).sq_err(&w);
+        sum_pt += e_pt as f64;
+        sum_pc += e_pc as f64;
+        assert!(
+            e_pc <= e_pt * 1.5 + 1e-12,
+            "case {case}: per-channel {e_pc} ≫ per-tensor {e_pt}"
+        );
+    }
+    assert!(
+        sum_pc <= sum_pt,
+        "aggregate per-channel MSE {sum_pc} worse than per-tensor {sum_pt}"
+    );
+}
+
+/// Graph save/load round-trips weights and topology on the whole zoo.
+#[test]
+fn prop_graph_serde_roundtrip() {
+    let dir = std::env::temp_dir().join("aimet_prop_serde");
+    std::fs::create_dir_all(&dir).unwrap();
+    for model in zoo::MODEL_NAMES {
+        let g = zoo::build(model, 99).unwrap();
+        aimet::graph::save_graph(&g, &dir.join(model)).unwrap();
+        let g2 = aimet::graph::load_graph(&dir.join(model)).unwrap();
+        let data = aimet::task::TaskData::new(model, 3);
+        let (x, _) = data.batch(0, 2);
+        assert_eq!(g.forward(&x), g2.forward(&x), "{model} serde mismatch");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Training-mode batch stats: normalizing by them yields mean≈0, var≈1.
+#[test]
+fn prop_batch_stats_normalize() {
+    let mut rng = Rng::new(0xAB);
+    for _ in 0..10 {
+        let std = rng.uniform_in(0.5, 3.0);
+        let x = Tensor::randn(&mut rng, &[4, 3, 6, 6], std);
+        let (mu, var) = batch_stats(&x);
+        let normalized = aimet::graph::batchnorm_forward(
+            &x,
+            &[1.0; 3],
+            &[0.0; 3],
+            &mu,
+            &var,
+            1e-5,
+        );
+        let (mu2, var2) = batch_stats(&normalized);
+        for c in 0..3 {
+            assert!(mu2[c].abs() < 1e-4, "mean {}", mu2[c]);
+            assert!((var2[c] - 1.0).abs() < 1e-2, "var {}", var2[c]);
+        }
+    }
+}
+
+/// The quantsim placement never exceeds one activation quantizer per node
+/// plus the input slot, and never quantizes a disabled placement.
+#[test]
+fn prop_placement_bounds() {
+    let mut rng = Rng::new(0xCC);
+    for model in zoo::MODEL_NAMES {
+        let g = zoo::build(model, rng.next_u64()).unwrap();
+        let n_nodes = g.nodes.len();
+        let sim = QuantizationSimModel::with_defaults(g, QuantParams::default());
+        let (a, p) = sim.quantizer_counts();
+        assert!(a <= n_nodes + 1, "{model}: too many act quantizers");
+        assert!(p <= n_nodes, "{model}: too many param quantizers");
+        for slot in &sim.acts {
+            assert!(slot.placed || !slot.enabled, "{model}: enabled unplaced slot");
+        }
+    }
+}
+
+/// LSTM backward matches numeric gradients (spot check on small dims).
+#[test]
+fn prop_lstm_backward_numeric() {
+    use aimet::graph::{lstm_backward, lstm_forward};
+    let mut rng = Rng::new(0xDD);
+    let (n, t, f, h) = (2usize, 3usize, 2usize, 2usize);
+    let x = Tensor::randn(&mut rng, &[n, t, f], 0.8);
+    let w_ih = Tensor::randn(&mut rng, &[4 * h, f], 0.5);
+    let w_hh = Tensor::randn(&mut rng, &[4 * h, h], 0.5);
+    let bias = rng.normal_vec(4 * h, 0.1);
+    let dy = Tensor::randn(&mut rng, &[n, t, h], 1.0);
+    let loss = |xv: &Tensor, w1: &Tensor, w2: &Tensor, b: &[f32]| -> f32 {
+        let y = lstm_forward(xv, w1, w2, b, h, false);
+        y.data().iter().zip(dy.data()).map(|(a, g)| a * g).sum()
+    };
+    let (dx, dwih, dwhh, db) = lstm_backward(&x, &w_ih, &w_hh, &bias, h, false, &dy);
+    let eps = 1e-3;
+    // Spot-check a handful of coordinates in each gradient.
+    let check = |analytic: f32, plus: f32, minus: f32, what: &str| {
+        let numeric = (plus - minus) / (2.0 * eps);
+        assert!(
+            (analytic - numeric).abs() < 2e-2 * (1.0 + numeric.abs()),
+            "{what}: analytic {analytic} vs numeric {numeric}"
+        );
+    };
+    for &i in &[0usize, 3, 7] {
+        let mut xp = x.clone();
+        xp.data_mut()[i] += eps;
+        let mut xm = x.clone();
+        xm.data_mut()[i] -= eps;
+        check(
+            dx.data()[i],
+            loss(&xp, &w_ih, &w_hh, &bias),
+            loss(&xm, &w_ih, &w_hh, &bias),
+            "dx",
+        );
+        let mut wp = w_ih.clone();
+        wp.data_mut()[i] += eps;
+        let mut wm = w_ih.clone();
+        wm.data_mut()[i] -= eps;
+        check(
+            dwih.data()[i],
+            loss(&x, &wp, &w_hh, &bias),
+            loss(&x, &wm, &w_hh, &bias),
+            "dw_ih",
+        );
+        let mut wp = w_hh.clone();
+        wp.data_mut()[i] += eps;
+        let mut wm = w_hh.clone();
+        wm.data_mut()[i] -= eps;
+        check(
+            dwhh.data()[i],
+            loss(&x, &w_ih, &wp, &bias),
+            loss(&x, &w_ih, &wm, &bias),
+            "dw_hh",
+        );
+        let mut bp = bias.clone();
+        bp[i] += eps;
+        let mut bm = bias.clone();
+        bm[i] -= eps;
+        check(
+            db[i],
+            loss(&x, &w_ih, &w_hh, &bp),
+            loss(&x, &w_ih, &w_hh, &bm),
+            "db",
+        );
+    }
+}

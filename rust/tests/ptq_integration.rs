@@ -1,0 +1,226 @@
+//! Integration tests over the full PTQ suite (chapter 4): CLE, bias
+//! correction, AdaRound and the standard pipeline composed end-to-end on
+//! trained models.
+
+use aimet::coordinator::experiments::{trained_model, Effort};
+use aimet::ptq::{
+    apply_adaround, equalize_model, fold_all_batch_norms, replace_relu6_with_relu,
+    run_debug_flow, standard_ptq_pipeline, unequalize_depthwise, AdaroundParameters,
+    BiasCorrection, PtqOptions,
+};
+use aimet::quantsim::{set_and_freeze_param_encodings, QuantParams, QuantizationSimModel};
+use aimet::task::{evaluate_graph, evaluate_sim};
+use aimet::visualize::weight_ranges;
+use aimet::zoo;
+
+#[test]
+fn equalize_model_preserves_fp32_function_on_relu_nets() {
+    // ResMini is ReLU-only: unified CLE must be numerically invisible.
+    let (g, data, _) = trained_model("resmini", Effort::Fast, 900);
+    let mut eq = g.clone();
+    equalize_model(&mut eq);
+    let (x, _) = data.batch(0, 8);
+    let diff = eq.forward(&x).max_abs_diff(&g.forward(&x));
+    let scale = g.forward(&x).abs_max().max(1.0);
+    assert!(diff / scale < 1e-3, "CLE changed a ReLU net: {diff}");
+}
+
+#[test]
+fn cle_flattens_weight_ranges_on_pathological_model() {
+    // Figs 4.2 → 4.3 as an invariant.
+    let mut g = zoo::build("mobimini", 901).unwrap();
+    fold_all_batch_norms(&mut g);
+    replace_relu6_with_relu(&mut g);
+    unequalize_depthwise(&mut g, &[1.0, 16.0, 4.0, 64.0]);
+    let spread_before: f32 = weight_ranges(&g)
+        .iter()
+        .filter(|r| r.layer.contains(".dw"))
+        .map(|r| r.spread())
+        .fold(0.0, f32::max);
+    equalize_model(&mut g);
+    let spread_after: f32 = weight_ranges(&g)
+        .iter()
+        .filter(|r| r.layer.contains(".dw"))
+        .map(|r| r.spread())
+        .fold(0.0, f32::max);
+    assert!(
+        spread_after < 0.2 * spread_before,
+        "CLE must flatten: {spread_before} -> {spread_after}"
+    );
+}
+
+#[test]
+fn pipeline_recovers_pathological_mobimini() {
+    // Table 4.1's row 1 end-to-end on a trained model.
+    let (g, data, _) = trained_model("mobimini", Effort::Fast, 902);
+    let fp32 = evaluate_graph(&g, "mobimini", &data, 3, 16);
+    let calib = data.calibration(3, 16);
+
+    let rtn = standard_ptq_pipeline(
+        &g,
+        &calib,
+        &PtqOptions {
+            use_cle: false,
+            bias_correction: BiasCorrection::None,
+            ..Default::default()
+        },
+    );
+    let rtn_acc = evaluate_sim(&rtn.sim, "mobimini", &data, 3, 16);
+
+    let full = standard_ptq_pipeline(&g, &calib, &PtqOptions::default());
+    let full_acc = evaluate_sim(&full.sim, "mobimini", &data, 3, 16);
+
+    assert!(rtn_acc < fp32 - 8.0, "RTN should hurt: fp32 {fp32} rtn {rtn_acc}");
+    assert!(
+        full_acc > rtn_acc + 5.0,
+        "CLE/BC must recover: rtn {rtn_acc} full {full_acc}"
+    );
+    assert!(
+        (fp32 - full_acc).abs() < 8.0,
+        "CLE/BC should land near FP32: {fp32} vs {full_acc}"
+    );
+}
+
+#[test]
+fn adaround_beats_rtn_at_low_bitwidth_end_to_end() {
+    // Table 4.2's mechanism on the detection model at W4.
+    let (g, data, _) = trained_model("detmini", Effort::Fast, 903);
+    let calib = data.calibration(3, 16);
+    let qp = QuantParams {
+        param_bw: 4,
+        ..Default::default()
+    };
+    // Both arms include CLE + BC, like table_4_2 (the paper applies the
+    // full pipeline to the ADAS model; only the rounding differs).
+    let rtn = standard_ptq_pipeline(&g, &calib, &PtqOptions { qp, ..Default::default() });
+    let rtn_map = evaluate_sim(&rtn.sim, "detmini", &data, 6, 16);
+    let mut opts = PtqOptions {
+        qp,
+        use_adaround: true,
+        ..Default::default()
+    };
+    opts.adaround = AdaroundParameters {
+        iterations: 300,
+        max_rows: 2048,
+        ..Default::default()
+    };
+    let ada = standard_ptq_pipeline(&g, &calib, &opts);
+    let ada_map = evaluate_sim(&ada.sim, "detmini", &data, 6, 16);
+    assert!(
+        ada_map >= rtn_map - 1.0,
+        "AdaRound must not lose to RTN at W4: {ada_map} vs {rtn_map}"
+    );
+}
+
+#[test]
+fn adaround_standalone_freeze_flow_matches_code_block_4_5() {
+    // The exact API sequence of code block 4.5: apply_adaround → sim →
+    // set_and_freeze_param_encodings → compute_encodings.
+    let (g, data, _) = trained_model("resmini", Effort::Fast, 904);
+    let calib = data.calibration(2, 16);
+    let res = apply_adaround(
+        &g,
+        QuantParams::default(),
+        &Default::default(),
+        &calib,
+        &AdaroundParameters {
+            iterations: 80,
+            max_rows: 256,
+            ..Default::default()
+        },
+    );
+    let mut sim = QuantizationSimModel::with_defaults(res.graph.clone(), QuantParams::default());
+    set_and_freeze_param_encodings(&mut sim, &res.param_encodings);
+    sim.compute_encodings(&calib);
+    // Frozen grids: the adarounded weights must be exact fixpoints.
+    for (idx, node) in sim.graph.nodes.iter().enumerate() {
+        let Some(slot) = &sim.params[idx] else { continue };
+        if node.op.kind() == "Lstm" {
+            continue;
+        }
+        assert!(slot.frozen, "{} not frozen", node.name);
+        let w = node.op.weight().unwrap();
+        let q = slot.quantizer.as_ref().unwrap().qdq(w);
+        assert!(q.max_abs_diff(w) < 1e-5, "{} off its grid", node.name);
+    }
+}
+
+#[test]
+fn empirical_bc_beats_no_bc_on_biased_low_bit_model() {
+    // §4.5: at W4 the clipped weights shift E[Wx]; empirical BC corrects.
+    let (g, data, _) = trained_model("segmini", Effort::Fast, 905);
+    let calib = data.calibration(3, 16);
+    let qp = QuantParams {
+        param_bw: 4,
+        ..Default::default()
+    };
+    let base = PtqOptions {
+        qp,
+        bias_correction: BiasCorrection::None,
+        ..Default::default()
+    };
+    let bc = PtqOptions {
+        qp,
+        bias_correction: BiasCorrection::Empirical,
+        ..Default::default()
+    };
+    let (x, _) = data.batch(50_100, 16);
+    let y_fp = g.forward(&x);
+    let e_base = standard_ptq_pipeline(&g, &calib, &base).sim.forward(&x).sq_err(&y_fp);
+    let e_bc = standard_ptq_pipeline(&g, &calib, &bc).sim.forward(&x).sq_err(&y_fp);
+    assert!(
+        e_bc < e_base * 1.1,
+        "BC should not increase output error: {e_bc} vs {e_base}"
+    );
+}
+
+#[test]
+fn analytic_bc_runs_data_free_on_bn_model() {
+    // DFQ path: no calibration needed beyond range setting.
+    let (g, data, _) = trained_model("detmini", Effort::Fast, 906);
+    let calib = data.calibration(2, 16);
+    let out = standard_ptq_pipeline(
+        &g,
+        &calib,
+        &PtqOptions {
+            use_cle: false,
+            bias_correction: BiasCorrection::Analytic,
+            ..Default::default()
+        },
+    );
+    // detmini has conv→bn chains, so analytic BC must find candidates.
+    assert!(out.corrected_layers > 0, "analytic BC found no BN-fed layers");
+}
+
+#[test]
+fn debug_flow_on_trained_model_produces_ranked_report() {
+    let (g, data, _) = trained_model("mobimini", Effort::Fast, 907);
+    // Use the same eval configuration as the sweep closure below — the
+    // sanity check compares against exactly this number.
+    let fp32 = evaluate_graph(&g, "mobimini", &data, 1, 16);
+    let calib = data.calibration(2, 16);
+    let out = standard_ptq_pipeline(
+        &g,
+        &calib,
+        &PtqOptions {
+            qp: QuantParams {
+                param_bw: 4,
+                ..Default::default()
+            },
+            use_cle: false,
+            bias_correction: BiasCorrection::None,
+            ..Default::default()
+        },
+    );
+    let report = run_debug_flow(&out.sim, fp32, &|sim| {
+        evaluate_sim(sim, "mobimini", &data, 1, 16)
+    });
+    assert_eq!(report.sanity_metric, fp32);
+    assert!(!report.sensitivity.is_empty());
+    assert!(!report.advice.is_empty());
+    // On this pathological W4 no-CLE model, weights must be the culprit.
+    assert!(
+        report.weights_only_metric < report.acts_only_metric + 5.0,
+        "weights should dominate the damage"
+    );
+}

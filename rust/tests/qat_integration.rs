@@ -1,0 +1,141 @@
+//! Integration tests over QAT (chapter 5): the fig 5.2 pipeline on trained
+//! models, PTQ-initialized fine-tuning, and the recurrent (Table 5.2) path.
+
+use aimet::coordinator::experiments::{trained_model, Effort};
+use aimet::ptq::{standard_ptq_pipeline, PtqOptions};
+use aimet::qat::{fit_qat, TrainConfig};
+use aimet::quantsim::{QuantParams, QuantizationSimModel};
+use aimet::task::{evaluate_graph, evaluate_sim};
+
+fn qat_cfg(steps: usize) -> TrainConfig {
+    TrainConfig {
+        steps,
+        batch_size: 16,
+        lr: 0.01,
+        lr_decay_every: steps / 2,
+        recalibrate_every: 25,
+        calib_batches: 2,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn qat_improves_over_ptq_at_low_bitwidth() {
+    // The chapter-5 motivation: where PTQ is insufficient (W4), QAT
+    // recovers accuracy by training through the quantizers.
+    let (g, data, _) = trained_model("resmini", Effort::Fast, 910);
+    let calib = data.calibration(3, 16);
+    let opts = PtqOptions {
+        qp: QuantParams {
+            param_bw: 4,
+            act_bw: 8,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let ptq_out = standard_ptq_pipeline(&g, &calib, &opts);
+    let ptq_acc = evaluate_sim(&ptq_out.sim, "resmini", &data, 3, 16);
+
+    let mut sim = ptq_out.sim.clone();
+    fit_qat(&mut sim, "resmini", &data, &qat_cfg(80));
+    let qat_acc = evaluate_sim(&sim, "resmini", &data, 3, 16);
+    assert!(
+        qat_acc >= ptq_acc - 1.0,
+        "QAT must not lose to its PTQ init: ptq {ptq_acc} qat {qat_acc}"
+    );
+}
+
+#[test]
+fn qat_pipeline_static_bn_fold_first() {
+    // §5.2.1: AIMET folds BN statically before QAT; the PTQ-initialized
+    // sim must contain no BatchNorm nodes.
+    let (g, data, _) = trained_model("resmini", Effort::Fast, 911);
+    let calib = data.calibration(2, 16);
+    let out = standard_ptq_pipeline(&g, &calib, &PtqOptions::default());
+    assert!(out.sim.graph.nodes.iter().all(|n| n.op.kind() != "BatchNorm"));
+    let mut sim = out.sim;
+    let log = fit_qat(&mut sim, "resmini", &data, &qat_cfg(20));
+    assert!(log.points.iter().all(|p| p.loss.is_finite()));
+}
+
+#[test]
+fn qat_recovers_speechmini_to_near_fp32() {
+    // Table 5.2's shape: bi-LSTM QAT degrades only slightly vs FP32.
+    let (g, data, _) = trained_model("speechmini", Effort::Fast, 912);
+    let fp32 = evaluate_graph(&g, "speechmini", &data, 3, 16);
+    let mut sim = QuantizationSimModel::with_defaults(g, QuantParams::default());
+    sim.compute_encodings(&data.calibration(2, 16));
+    let mut cfg = qat_cfg(60);
+    cfg.lr = 0.05;
+    fit_qat(&mut sim, "speechmini", &data, &cfg);
+    let qat = evaluate_sim(&sim, "speechmini", &data, 3, 16);
+    assert!(
+        qat > fp32 - 10.0,
+        "LSTM QAT degraded too far: fp32 {fp32} qat {qat}"
+    );
+}
+
+#[test]
+fn frozen_adaround_encodings_survive_qat_recalibration() {
+    use aimet::ptq::AdaroundParameters;
+    let (g, data, _) = trained_model("mobimini", Effort::Fast, 913);
+    let calib = data.calibration(2, 16);
+    let mut opts = PtqOptions {
+        use_adaround: true,
+        ..Default::default()
+    };
+    opts.adaround = AdaroundParameters {
+        iterations: 60,
+        max_rows: 128,
+        ..Default::default()
+    };
+    let out = standard_ptq_pipeline(&g, &calib, &opts);
+    let mut sim = out.sim;
+    let idx = sim.graph.find("b1.pw").unwrap();
+    let frozen_scale = sim.params[idx]
+        .as_ref()
+        .unwrap()
+        .quantizer
+        .as_ref()
+        .unwrap()
+        .encodings[0]
+        .scale;
+    fit_qat(&mut sim, "mobimini", &data, &qat_cfg(30));
+    let after = sim.params[idx]
+        .as_ref()
+        .unwrap()
+        .quantizer
+        .as_ref()
+        .unwrap()
+        .encodings[0]
+        .scale;
+    assert_eq!(frozen_scale, after, "frozen encoding moved during QAT");
+}
+
+#[test]
+fn qat_loss_curve_is_logged_with_schedule() {
+    let (g, data, _) = trained_model("mobimini", Effort::Fast, 914);
+    let mut sim = QuantizationSimModel::with_defaults(g, QuantParams::default());
+    sim.compute_encodings(&data.calibration(2, 16));
+    let cfg = TrainConfig {
+        steps: 40,
+        lr: 0.02,
+        lr_decay_every: 20,
+        lr_decay: 10.0,
+        log_every: 10,
+        ..Default::default()
+    };
+    let log = fit_qat(&mut sim, "mobimini", &data, &cfg);
+    assert!(log.points.len() >= 4);
+    // Compare a post-warmup point against the end of the run (the first
+    // logged point sits inside the linear warmup ramp).
+    let mid_lr = log
+        .points
+        .iter()
+        .find(|p| p.step >= 10 && p.step < 20)
+        .unwrap()
+        .lr;
+    let last_lr = log.points.last().unwrap().lr;
+    assert!((mid_lr / last_lr - 10.0).abs() < 1e-3, "LR schedule not applied");
+    assert!(!log.render().is_empty());
+}

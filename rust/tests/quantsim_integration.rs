@@ -1,0 +1,143 @@
+//! Integration tests over the quantization simulation (chapter 3):
+//! config-driven placement, calibration, export round-trips, and the §4.8
+//! sanity invariants across the whole zoo.
+
+use aimet::quantsim::{
+    default_config_json, load_param_encodings, QuantParams, QuantizationSimModel, SimConfig,
+};
+use aimet::task::{evaluate_graph, evaluate_sim, TaskData};
+use aimet::zoo;
+
+#[test]
+fn every_zoo_model_simulates_and_stays_in_band() {
+    for model in zoo::MODEL_NAMES {
+        let g = zoo::build(model, 11).unwrap();
+        let data = TaskData::new(model, 12);
+        let fp32 = evaluate_graph(&g, model, &data, 2, 8);
+        let mut sim = QuantizationSimModel::with_defaults(g, QuantParams::default());
+        sim.compute_encodings(&data.calibration(2, 8));
+        let q = evaluate_sim(&sim, model, &data, 2, 8);
+        // Untrained models: W8/A8 noise must not move the metric wildly.
+        assert!(
+            (q - fp32).abs() <= 60.0,
+            "{model}: fp32 {fp32} vs sim {q} out of band"
+        );
+    }
+}
+
+#[test]
+fn bypassed_sim_is_bit_exact_with_fp32_on_all_models() {
+    // §4.8 step 1 as an invariant across the zoo.
+    for model in zoo::MODEL_NAMES {
+        let g = zoo::build(model, 13).unwrap();
+        let data = TaskData::new(model, 14);
+        let (x, _) = data.batch(0, 4);
+        let fp32_y = g.forward(&x);
+        let mut sim = QuantizationSimModel::with_defaults(g, QuantParams::default());
+        sim.compute_encodings(&data.calibration(1, 4));
+        sim.set_all_act_enabled(false);
+        sim.set_all_param_enabled(false);
+        assert_eq!(sim.forward(&x), fp32_y, "{model} bypass mismatch");
+    }
+}
+
+#[test]
+fn config_json_roundtrip_drives_placement() {
+    // A config that disables model-input quantization and forces Linear
+    // outputs unquantized must be visible in the placement.
+    let cfg_text = r#"{
+        "defaults": {
+            "ops": {"is_output_quantized": "True", "is_symmetric": "False"},
+            "params": {"is_quantized": "True", "is_symmetric": "True"}
+        },
+        "op_type": {"Linear": {"is_output_quantized": "False"}},
+        "supergroups": [],
+        "model_input": {"is_input_quantized": "False"},
+        "model_output": {}
+    }"#;
+    let cfg = SimConfig::from_json(cfg_text).unwrap();
+    let g = zoo::build("mobimini", 15).unwrap();
+    let sim = QuantizationSimModel::new(g, cfg, QuantParams::default());
+    assert!(!sim.input_slot.placed, "model input must be unquantized");
+    let fc = sim.graph.find("fc").unwrap();
+    assert!(!sim.acts[fc].placed, "Linear op_type override must hold");
+    // No supergroups: conv outputs now carry quantizers.
+    let conv = sim.graph.find("stem.conv").unwrap();
+    assert!(sim.acts[conv].placed);
+}
+
+#[test]
+fn default_config_matches_builtin_defaults() {
+    let parsed = SimConfig::from_json(&default_config_json()).unwrap();
+    let g = zoo::build("resmini", 16).unwrap();
+    let sim_a = QuantizationSimModel::new(g.clone(), parsed, QuantParams::default());
+    let sim_b = QuantizationSimModel::with_defaults(g, QuantParams::default());
+    let (aa, ap) = sim_a.quantizer_counts();
+    let (ba, bp) = sim_b.quantizer_counts();
+    assert_eq!((aa, ap), (ba, bp));
+}
+
+#[test]
+fn export_and_reimport_encodings_roundtrip() {
+    let dir = std::env::temp_dir().join("aimet_qsim_export_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let g = zoo::build("mobimini", 17).unwrap();
+    let data = TaskData::new("mobimini", 18);
+    let mut sim = QuantizationSimModel::with_defaults(g, QuantParams::default());
+    sim.compute_encodings(&data.calibration(2, 8));
+    sim.export(&dir, "mobi").unwrap();
+
+    // The exported artifacts of §3.3: plain model + encodings JSON.
+    let reloaded = aimet::graph::load_graph(&dir.join("mobi")).unwrap();
+    let (x, _) = data.batch(0, 4);
+    assert!(reloaded.forward(&x).max_abs_diff(&sim.graph.forward(&x)) < 1e-6);
+
+    let enc_text = std::fs::read_to_string(dir.join("mobi_encodings.json")).unwrap();
+    let params = load_param_encodings(&enc_text).unwrap();
+    let idx = sim.graph.find("stem.conv").unwrap();
+    let orig = sim.params[idx].as_ref().unwrap().quantizer.as_ref().unwrap();
+    let loaded = &params["stem.conv"];
+    assert_eq!(orig.encodings[0].scale, loaded.encodings[0].scale);
+    assert_eq!(orig.encodings[0].offset, loaded.encodings[0].offset);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn per_quantizer_bitwidth_overrides_recalibrate() {
+    // The §4.8 "higher bit-width for problematic quantizer" move.
+    let g = zoo::build("mobimini", 19).unwrap();
+    let data = TaskData::new("mobimini", 20);
+    let calib = data.calibration(2, 8);
+    let mut sim = QuantizationSimModel::with_defaults(
+        g,
+        QuantParams {
+            act_bw: 4,
+            param_bw: 4,
+            ..Default::default()
+        },
+    );
+    sim.compute_encodings(&calib);
+    let (x, _) = data.batch(0, 8);
+    let fp32_y = sim.graph.forward(&x);
+    let err4 = sim.forward(&x).sq_err(&fp32_y);
+    // Raise the most error-prone quantizers to 8 bits.
+    assert!(sim.set_param_bw("b1.dw", 8));
+    assert!(sim.set_param_bw("b2.dw", 8));
+    assert!(sim.set_param_bw("b3.dw", 8));
+    sim.compute_encodings(&calib);
+    let err_mixed = sim.forward(&x).sq_err(&fp32_y);
+    assert!(
+        err_mixed < err4,
+        "raising dw bit-widths must reduce error: {err_mixed} !< {err4}"
+    );
+}
+
+#[test]
+fn unknown_names_are_rejected_by_toggles() {
+    let g = zoo::build("mobimini", 21).unwrap();
+    let mut sim = QuantizationSimModel::with_defaults(g, QuantParams::default());
+    assert!(!sim.set_act_enabled("nonexistent", false));
+    assert!(!sim.set_param_enabled("nonexistent", false));
+    assert!(!sim.set_act_bw("nonexistent", 8));
+    assert!(!sim.set_param_bw("nonexistent", 8));
+}
