@@ -6,18 +6,30 @@
 //!   * AdaRound per-layer optimization throughput
 //!   * end-to-end fig 4.1 pipeline wall time
 //!   * one QAT STE step (fwd + bwd + update)
+//!   * the blocked integer GEMM vs the naive reference kernel
+//!
+//! Besides the human-readable printout, the medians are written to
+//! `BENCH_hotpath.json` at the repo root so every PR has a
+//! machine-readable before/after record (`scripts/bench_check.sh` gates
+//! on it).
 //!
 //! Run: `cargo bench --bench hotpath`
 
 mod common;
 
 use aimet::coordinator::experiments::{trained_model, Effort};
+use aimet::json::Json;
 use aimet::ptq::{apply_adaround, standard_ptq_pipeline, AdaroundParameters, PtqOptions};
 use aimet::qat::{fit_qat, TrainConfig};
-use aimet::quant::QuantScheme;
+use aimet::quant::{
+    quantized_matmul_i32_ref, Encoding, QTensor, QuantScheme,
+};
 use aimet::quantsim::{QuantParams, QuantizationSimModel};
+use aimet::rng::Rng;
 use aimet::task::TaskData;
-
+use aimet::tensor::Tensor;
+use std::path::Path;
+use std::time::Instant;
 
 fn main() {
     let model = "mobimini";
@@ -25,7 +37,13 @@ fn main() {
     let calib = data.calibration(4, 16);
     let (x, _) = data.batch(0, 16);
 
-    println!("== hot paths ({model}, batch 16, {} threads) ==", aimet::pool::num_threads());
+    let threads = aimet::pool::num_threads();
+    println!("== hot paths ({model}, batch 16, {threads} threads) ==");
+
+    let mut report = Json::obj();
+    report.set("model", Json::from(model));
+    report.set("threads", Json::from(threads as u32));
+    report.set("batch", Json::from(16u32));
 
     // FP32 vs quantsim forward.
     let t_fp = common::median_secs(15, || {
@@ -42,9 +60,19 @@ fn main() {
         t_sim * 1e3,
         t_sim / t_fp
     );
+    report.set("fp32_forward_ms", Json::from(t_fp * 1e3));
+    report.set("quantsim_forward_ms", Json::from(t_sim * 1e3));
+    report.set("quantsim_over_fp32", Json::from(t_sim / t_fp));
 
     // compute_encodings under both schemes.
-    for (label, scheme) in [("min-max (tf)", QuantScheme::Tf), ("SQNR (tf_enhanced)", QuantScheme::TfEnhanced)] {
+    for (label, key, scheme) in [
+        ("min-max (tf)", "compute_encodings_tf_ms", QuantScheme::Tf),
+        (
+            "SQNR (tf_enhanced)",
+            "compute_encodings_tf_enhanced_ms",
+            QuantScheme::TfEnhanced,
+        ),
+    ] {
         let t = common::median_secs(5, || {
             let mut s = QuantizationSimModel::with_defaults(
                 g.clone(),
@@ -57,6 +85,7 @@ fn main() {
             std::hint::black_box(&s);
         });
         println!("compute_encodings {label:<20}: {:7.2} ms (4 batches)", t * 1e3);
+        report.set(key, Json::from(t * 1e3));
     }
 
     // AdaRound throughput.
@@ -65,19 +94,30 @@ fn main() {
         max_rows: 1024,
         ..Default::default()
     };
-    let t_ada = common::timed("adaround 100 iters x 8 layers", || {
-        apply_adaround(&g, QuantParams::default(), &Default::default(), &calib, &params)
-    });
-    let total_flips: f32 = t_ada.reports.iter().map(|r| r.flipped).sum();
-    println!("adaround flipped fraction (sum over layers): {total_flips:.3}");
+    let t0 = Instant::now();
+    let ada = apply_adaround(&g, QuantParams::default(), &Default::default(), &calib, &params);
+    let ada_secs = t0.elapsed().as_secs_f64();
+    let ada_iters = (params.iterations * ada.reports.len()) as f64;
+    let total_flips: f32 = ada.reports.iter().map(|r| r.flipped).sum();
+    println!(
+        "adaround: {:.2}s for {} layers x {} iters = {:.0} iters/s (flipped fraction sum {:.3})",
+        ada_secs,
+        ada.reports.len(),
+        params.iterations,
+        ada_iters / ada_secs,
+        total_flips
+    );
+    report.set("adaround_iters_per_s", Json::from(ada_iters / ada_secs));
 
     // Full fig 4.1 pipeline.
-    common::timed("standard PTQ pipeline (CLE+BC)", || {
-        standard_ptq_pipeline(&g, &calib, &PtqOptions::default())
-    });
+    let t0 = Instant::now();
+    std::hint::black_box(standard_ptq_pipeline(&g, &calib, &PtqOptions::default()));
+    let ptq_secs = t0.elapsed().as_secs_f64();
+    println!("standard PTQ pipeline (CLE+BC): {ptq_secs:.2}s");
+    report.set("ptq_pipeline_s", Json::from(ptq_secs));
 
     // One QAT step.
-    let mut qat_sim = sim.clone();
+    let qat_sim = sim.clone();
     let cfg = TrainConfig {
         steps: 10,
         batch_size: 16,
@@ -89,12 +129,53 @@ fn main() {
         let mut s = qat_sim.clone();
         fit_qat(&mut s, model, &data, &cfg);
     });
-    println!("QAT 10 steps (fwd+bwd+update): {:7.2} ms ({:.2} ms/step)", t_qat * 1e3, t_qat * 1e2);
-    let _ = &mut qat_sim;
+    println!(
+        "QAT 10 steps (fwd+bwd+update): {:7.2} ms ({:.2} ms/step)",
+        t_qat * 1e3,
+        t_qat * 1e2
+    );
+    report.set("qat_ms_per_step", Json::from(t_qat * 1e2));
+
+    // Blocked parallel integer GEMM vs the retained naive reference at
+    // (M,K,N) = (256,256,256) — the acceptance point for the perf PR.
+    let (m, k, n) = (256usize, 256usize, 256usize);
+    let mut rng = Rng::new(3200);
+    let wm = Tensor::randn(&mut rng, &[m, k], 0.5);
+    let xm = Tensor::rand_uniform(&mut rng, &[k, n], -2.0, 2.0);
+    let w_enc = Encoding::from_min_max(wm.min(), wm.max(), 8, true);
+    let x_enc = Encoding::from_min_max(-2.0, 2.0, 8, false);
+    let t_naive = common::median_secs(3, || {
+        std::hint::black_box(quantized_matmul_i32_ref(&wm, &w_enc, &xm, &x_enc, None));
+    });
+    let qw = QTensor::from_matrix(&wm, &w_enc);
+    let t_blocked = common::median_secs(15, || {
+        std::hint::black_box(qw.matmul(&xm, &x_enc, None));
+    });
+    let gops = 2.0 * (m * k * n) as f64 / t_blocked / 1e9;
+    println!(
+        "int GEMM 256^3: naive {:7.2} ms, blocked {:7.2} ms ({:.1}x, {:.2} GOP/s int-MAC)",
+        t_naive * 1e3,
+        t_blocked * 1e3,
+        t_naive / t_blocked,
+        gops
+    );
+    report.set("int_gemm_naive_ms", Json::from(t_naive * 1e3));
+    report.set("int_gemm_blocked_ms", Json::from(t_blocked * 1e3));
+    report.set("int_gemm_speedup_vs_naive", Json::from(t_naive / t_blocked));
+    report.set("int_gemm_gops", Json::from(gops));
 
     // Calibration data generation (should be negligible).
     let t_data = common::median_secs(9, || {
         std::hint::black_box(TaskData::new(model, 9).batch(3, 16));
     });
     println!("synthetic batch gen: {:7.3} ms", t_data * 1e3);
+    report.set("synth_batch_gen_ms", Json::from(t_data * 1e3));
+
+    // Machine-readable record at the repo root.
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent")
+        .join("BENCH_hotpath.json");
+    std::fs::write(&path, report.pretty()).expect("write BENCH_hotpath.json");
+    println!("wrote {}", path.display());
 }

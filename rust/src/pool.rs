@@ -1,14 +1,32 @@
-//! Parallelism substrate: a scoped parallel-for built on `std::thread`.
+//! Parallelism substrate: a persistent worker pool with a scoped
+//! parallel-for API.
 //!
 //! The offline vendor set has neither `rayon` nor `tokio`, so the hot loops
-//! (im2col matmul, calibration forward passes, per-quantizer sensitivity
-//! sweeps) use this module. Work is divided into contiguous chunks, one per
-//! worker, which is the right shape for our dense-compute loops.
+//! (im2col matmul, the integer GEMM, calibration forward passes,
+//! per-quantizer sensitivity sweeps) use this module. Work is divided into
+//! contiguous chunks which is the right shape for our dense-compute loops.
+//!
+//! Workers are spawned once, lazily, on the first multi-threaded call and
+//! then live for the process lifetime, parked on a condvar between calls.
+//! This replaces the original per-call `thread::scope` design: a QAT step
+//! at batch 16 issues hundreds of parallel regions, and paying OS
+//! spawn+join for each dominated small-kernel wall time.
+//!
+//! Scheduling rules:
+//! * The submitting thread always participates in its own job, so progress
+//!   is guaranteed even when every worker is busy with other jobs.
+//! * A call made from inside a pool-executed closure (nested parallelism)
+//!   runs inline — no worker handoff, no deadlock.
+//! * `AIMET_THREADS=1` is a true deterministic single-thread mode: every
+//!   call runs inline on the caller and the pool is never even spawned.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Number of worker threads to use: `AIMET_THREADS` env override, else the
-/// available parallelism, clamped to [1, 32].
+/// available parallelism, clamped to [1, 32]. Read once and cached; set the
+/// env var before first use.
 pub fn num_threads() -> usize {
     static CACHED: AtomicUsize = AtomicUsize::new(0);
     let v = CACHED.load(Ordering::Relaxed);
@@ -28,32 +46,180 @@ pub fn num_threads() -> usize {
     n
 }
 
-/// Run `f(start, end)` over disjoint chunks of `0..n` on up to
-/// [`num_threads`] scoped threads. Falls back to a single inline call for
-/// small `n` (below `grain`) to avoid thread overhead on tiny work items.
+thread_local! {
+    /// True while this thread is executing chunks of a pool job; nested
+    /// `parallel_chunks` calls then run inline instead of re-entering the
+    /// pool.
+    static IN_POOL_JOB: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Type-erased pointer to the caller's `Fn(start, end)` closure. The
+/// lifetime is erased (scoped-thread discipline): `parallel_chunks` does
+/// not return until every chunk has finished executing, so the pointee
+/// outlives all dereferences.
+struct FnPtr(*const (dyn Fn(usize, usize) + Sync));
+unsafe impl Send for FnPtr {}
+unsafe impl Sync for FnPtr {}
+
+/// One parallel-for job: a closure plus an atomic cursor over `0..n`.
+struct Job {
+    f: FnPtr,
+    /// Total iteration count.
+    n: usize,
+    /// Chunk size claimed per grab.
+    chunk: usize,
+    /// Next unclaimed iteration index (may overshoot `n`).
+    next: AtomicUsize,
+    /// Unfinished chunk count; guarded by a mutex so the submitter can
+    /// condvar-wait for completion.
+    remaining: Mutex<usize>,
+    done_cv: Condvar,
+    /// Set when any chunk panicked; the submitter re-raises.
+    panicked: AtomicBool,
+}
+
+impl Job {
+    /// Claim and run chunks until the cursor is exhausted. Runs on both
+    /// workers and the submitting thread.
+    fn run_chunks(&self) {
+        let was_in_job = IN_POOL_JOB.with(|c| c.replace(true));
+        loop {
+            let start = self.next.fetch_add(self.chunk, Ordering::Relaxed);
+            if start >= self.n {
+                break;
+            }
+            let end = (start + self.chunk).min(self.n);
+            // SAFETY: the submitter keeps the closure alive until
+            // `remaining` hits zero, which cannot happen before this chunk
+            // finishes (we only decrement below).
+            let f = unsafe { &*self.f.0 };
+            let result =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(start, end)));
+            if result.is_err() {
+                self.panicked.store(true, Ordering::Relaxed);
+            }
+            let mut rem = self.remaining.lock().unwrap();
+            *rem -= 1;
+            if *rem == 0 {
+                self.done_cv.notify_all();
+            }
+        }
+        IN_POOL_JOB.with(|c| c.set(was_in_job));
+    }
+
+    fn exhausted(&self) -> bool {
+        self.next.load(Ordering::Relaxed) >= self.n
+    }
+}
+
+/// Shared pool state: a queue of in-flight jobs plus the condvar workers
+/// park on while the queue has no claimable work.
+struct PoolInner {
+    queue: Mutex<Vec<Arc<Job>>>,
+    work_cv: Condvar,
+}
+
+static POOL: OnceLock<Arc<PoolInner>> = OnceLock::new();
+
+/// The global pool, spawning `num_threads() - 1` workers on first use (the
+/// submitting thread is the final lane of parallelism).
+fn pool() -> &'static Arc<PoolInner> {
+    POOL.get_or_init(|| {
+        let inner = Arc::new(PoolInner {
+            queue: Mutex::new(Vec::new()),
+            work_cv: Condvar::new(),
+        });
+        for w in 0..num_threads().saturating_sub(1) {
+            let inner = Arc::clone(&inner);
+            std::thread::Builder::new()
+                .name(format!("aimet-pool-{w}"))
+                .spawn(move || worker_loop(inner))
+                .expect("spawn pool worker");
+        }
+        inner
+    })
+}
+
+fn worker_loop(pool: Arc<PoolInner>) {
+    loop {
+        let job = {
+            let mut q = pool.queue.lock().unwrap();
+            loop {
+                // Drop fully-claimed jobs, then pick any with work left.
+                q.retain(|j| !j.exhausted());
+                if let Some(j) = q.first() {
+                    break Arc::clone(j);
+                }
+                q = pool.work_cv.wait(q).unwrap();
+            }
+        };
+        job.run_chunks();
+    }
+}
+
+/// Run `f(start, end)` over disjoint chunks of `0..n`, in parallel on the
+/// persistent pool. Falls back to a single inline call when `n` is small
+/// (below `grain`), when `AIMET_THREADS=1`, or when already running inside
+/// a pool job (nested use). Blocks until every chunk has completed; a panic
+/// in any chunk is re-raised here.
 pub fn parallel_chunks<F>(n: usize, grain: usize, f: F)
 where
     F: Fn(usize, usize) + Sync,
 {
-    let workers = num_threads().min(n.div_ceil(grain.max(1))).max(1);
-    if workers <= 1 || n == 0 {
-        if n > 0 {
-            f(0, n);
-        }
+    if n == 0 {
         return;
     }
-    let chunk = n.div_ceil(workers);
-    std::thread::scope(|scope| {
-        for w in 0..workers {
-            let start = w * chunk;
-            let end = ((w + 1) * chunk).min(n);
-            if start >= end {
-                break;
-            }
-            let f = &f;
-            scope.spawn(move || f(start, end));
-        }
+    let threads = num_threads();
+    let grain = grain.max(1);
+    if threads <= 1 || n <= grain || IN_POOL_JOB.with(|c| c.get()) {
+        f(0, n);
+        return;
+    }
+    // Over-decompose ~4x relative to thread count for load balancing, but
+    // never below the caller's grain.
+    let chunk = n.div_ceil(threads * 4).max(grain);
+    let chunks = n.div_ceil(chunk);
+    if chunks <= 1 {
+        f(0, n);
+        return;
+    }
+    // Erase the closure's lifetime: safe because we do not return until
+    // `remaining == 0`, i.e. every dereference has completed.
+    let f_obj: &(dyn Fn(usize, usize) + Sync) = &f;
+    let f_static: &'static (dyn Fn(usize, usize) + Sync) =
+        unsafe { std::mem::transmute(f_obj) };
+    let job = Arc::new(Job {
+        f: FnPtr(f_static as *const _),
+        n,
+        chunk,
+        next: AtomicUsize::new(0),
+        remaining: Mutex::new(chunks),
+        done_cv: Condvar::new(),
+        panicked: AtomicBool::new(false),
     });
+    let p = pool();
+    {
+        let mut q = p.queue.lock().unwrap();
+        q.push(Arc::clone(&job));
+        p.work_cv.notify_all();
+    }
+    // Participate: guarantees progress even with zero free workers.
+    job.run_chunks();
+    // Wait for chunks claimed by workers to finish.
+    {
+        let mut rem = job.remaining.lock().unwrap();
+        while *rem > 0 {
+            rem = job.done_cv.wait(rem).unwrap();
+        }
+    }
+    // Drop our queue entry if no worker got to it first.
+    {
+        let mut q = p.queue.lock().unwrap();
+        q.retain(|j| !Arc::ptr_eq(j, &job));
+    }
+    if job.panicked.load(Ordering::Relaxed) {
+        panic!("aimet pool: a parallel_chunks closure panicked");
+    }
 }
 
 /// Parallel map over indices `0..n`, collecting results in order.
@@ -68,7 +234,7 @@ where
         parallel_chunks(n, grain, |start, end| {
             for i in start..end {
                 // SAFETY: each index is written by exactly one worker
-                // (chunks are disjoint) and the Vec outlives the scope.
+                // (chunks are disjoint) and the Vec outlives the job.
                 unsafe {
                     *slots.ptr().add(i) = Some(f(i));
                 }
@@ -157,5 +323,61 @@ mod tests {
         parallel_chunks(0, 16, |_, _| panic!("should not run"));
         let out = parallel_map(1, 1024, |i| i + 1);
         assert_eq!(out, vec![1]);
+    }
+
+    #[test]
+    fn pool_survives_sequential_reuse() {
+        // Hundreds of parallel regions back-to-back — the QAT-step shape
+        // that motivated the persistent pool.
+        for round in 0..200 {
+            let sum = AtomicU64::new(0);
+            parallel_chunks(997, 1, |s, e| {
+                sum.fetch_add((e - s) as u64, Ordering::Relaxed);
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), 997, "round {round}");
+        }
+    }
+
+    #[test]
+    fn nested_parallel_runs_inline_and_correct() {
+        // Outer parallel_map whose closure itself calls parallel_chunks —
+        // the inner call must not deadlock on the shared pool.
+        let out = parallel_map(64, 1, |i| {
+            let sum = AtomicU64::new(0);
+            parallel_chunks(100, 1, |s, e| {
+                sum.fetch_add((s..e).map(|j| j as u64).sum::<u64>(), Ordering::Relaxed);
+            });
+            sum.load(Ordering::Relaxed) + i as u64
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, 4950 + i as u64);
+        }
+    }
+
+    #[test]
+    fn concurrent_submissions_from_many_threads() {
+        // Multiple entry points submitting jobs simultaneously must all
+        // complete with correct results (the pool is a shared resource for
+        // every test thread in this binary already).
+        std::thread::scope(|scope| {
+            for t in 0..8 {
+                scope.spawn(move || {
+                    for _ in 0..20 {
+                        let out = parallel_map(257, 1, |i| i * (t + 1));
+                        for (i, v) in out.iter().enumerate() {
+                            assert_eq!(*v, i * (t + 1));
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn worker_panic_propagates_to_submitter() {
+        // Panics in whichever lane runs a chunk (worker or submitter) must
+        // surface on the submitting thread, not vanish or deadlock.
+        parallel_chunks(1000, 1, |_s, _e| panic!("boom"));
     }
 }

@@ -37,6 +37,7 @@ pub fn set_weight_ranges(sim: &mut QuantizationSimModel, scheme: QuantScheme) ->
         });
         updated += 1;
     }
+    sim.invalidate_weight_cache();
     updated
 }
 

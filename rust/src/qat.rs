@@ -253,6 +253,8 @@ pub fn fit_qat(
             cfg.momentum,
             cfg.clip_norm,
         );
+        // The shadow weights moved: the next forward must re-quantize.
+        sim.invalidate_weight_cache();
         if step % cfg.log_every.max(1) == 0 || step + 1 == cfg.steps {
             log.points.push(TrainPoint {
                 step,

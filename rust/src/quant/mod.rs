@@ -11,7 +11,9 @@ pub use analyzer::{
     per_channel_weight_encodings, weight_encoding, EncodingAnalyzer, Histogram, SQNR_GAMMA,
 };
 pub use encoding::{Encoding, QuantScheme};
-pub use qops::{quantized_conv2d, quantized_linear, quantized_matmul_i32};
+pub use qops::{
+    quantized_conv2d, quantized_linear, quantized_matmul_i32, quantized_matmul_i32_ref, QTensor,
+};
 
 use crate::tensor::Tensor;
 

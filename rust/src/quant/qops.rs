@@ -7,9 +7,234 @@
 //! `rust/tests/properties.rs` and the `quantized_mac` bench check. They
 //! also demonstrate the asymmetric-input decomposition of eq 2.9 (the
 //! data-dependent second term, and why weights stay symmetric).
+//!
+//! The hot path is [`QTensor`]: a weight matrix quantized once to its
+//! integer grid with per-row sums precomputed (eq 2.9's correction term
+//! folded into the bias), driven through a 4-row-blocked, pool-parallel
+//! GEMM in the style of the fp32 [`crate::tensor::matmul`]. The naive
+//! triple loop is retained as [`quantized_matmul_i32_ref`] — the bit-exact
+//! reference the property tests and the hotpath bench compare against.
 
 use super::encoding::Encoding;
+use crate::pool::{parallel_chunks, SyncSlice};
 use crate::tensor::{Conv2dSpec, Tensor};
+
+/// Quantize a float slice to its integer grid, in parallel for large
+/// inputs. Element-for-element identical to [`Encoding::quantize`].
+fn quantize_ints(xs: &[f32], enc: &Encoding) -> Vec<i32> {
+    let mut out = vec![0i32; xs.len()];
+    let base = SyncSlice::new(out.as_mut_ptr());
+    parallel_chunks(xs.len(), 16 * 1024, |s, e| {
+        // SAFETY: chunks are disjoint ranges of `out`.
+        let dst = unsafe { std::slice::from_raw_parts_mut(base.ptr().add(s), e - s) };
+        for (d, &v) in dst.iter_mut().zip(&xs[s..e]) {
+            *d = enc.quantize(v);
+        }
+    });
+    out
+}
+
+/// A weight matrix pre-quantized to its integer grid: the reusable operand
+/// of the integer GEMM. Holds the INT values, the encoding that produced
+/// them, and the per-row integer sums (the precomputable third term of
+/// eq 2.9, folded into the requantization step). Build once, multiply many
+/// times — calibration sweeps, AdaRound iterations and batched serving all
+/// reuse the same weights.
+#[derive(Debug, Clone)]
+pub struct QTensor {
+    rows: usize,
+    cols: usize,
+    data: Vec<i32>,
+    enc: Encoding,
+    row_sums: Vec<i64>,
+}
+
+impl QTensor {
+    /// Quantize a 2-D weight matrix. Weights must use a symmetric encoding
+    /// — asymmetric weights would add the data-dependent cross term the
+    /// paper recommends avoiding (§2.3).
+    pub fn from_matrix(w: &Tensor, enc: &Encoding) -> QTensor {
+        assert_eq!(w.rank(), 2, "QTensor wants a [rows, cols] matrix");
+        assert_eq!(enc.offset, 0, "weights must be symmetric (z_w = 0)");
+        let (rows, cols) = (w.dim(0), w.dim(1));
+        let data = quantize_ints(w.data(), enc);
+        let row_sums = (0..rows)
+            .map(|r| data[r * cols..(r + 1) * cols].iter().map(|&v| v as i64).sum())
+            .collect();
+        QTensor {
+            rows,
+            cols,
+            data,
+            enc: *enc,
+            row_sums,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn encoding(&self) -> &Encoding {
+        &self.enc
+    }
+
+    /// Reject shapes whose worst-case |accumulator| could exceed INT32
+    /// (paper §2.1: accumulators stay 32-bit). A hard assert — O(1) per
+    /// call — so out-of-contract shapes fail loudly in release builds
+    /// instead of silently wrapping the i32 accumulators.
+    fn check_acc_bounds(&self, x_enc: &Encoding) {
+        let wmax = self.enc.int_min.unsigned_abs().max(self.enc.int_max.unsigned_abs()) as i64;
+        let xmax = x_enc.int_min.unsigned_abs().max(x_enc.int_max.unsigned_abs()) as i64;
+        assert!(
+            self.cols as i64 * wmax * xmax <= i32::MAX as i64,
+            "INT32 accumulator may overflow: K={} bw_w={} bw_x={}",
+            self.cols,
+            self.enc.bw,
+            x_enc.bw
+        );
+    }
+
+    /// `y[M,N] = requant(Wq · quant(X))` for X of shape [K, N]:
+    /// `y = s_w·s_x·(acc − z_x·Σ_k w_int[m,k]) + bias` (eq 2.9 with
+    /// symmetric weights). Blocked and parallel; bit-exact against
+    /// [`quantized_matmul_i32_ref`].
+    pub fn matmul(&self, x: &Tensor, x_enc: &Encoding, bias: Option<&[f32]>) -> Tensor {
+        let (k, n) = (x.dim(0), x.dim(1));
+        assert_eq!(k, self.cols, "QTensor::matmul inner dims: {} vs {k}", self.cols);
+        let x_int = quantize_ints(x.data(), x_enc);
+        let mut out = vec![0.0f32; self.rows * n];
+        self.gemm_scatter(&x_int, n, x_enc, bias, 1, n, &mut out);
+        Tensor::new(&[self.rows, n], out)
+    }
+
+    /// `y[N,M] = requant(quant(X) · Wqᵀ)` for batch-major X of shape
+    /// [N, K] — the linear-layer shape. Computes dot products over
+    /// contiguous rows of both operands, so no transpose of X or of the
+    /// output is ever materialized.
+    pub fn matmul_xt(&self, x: &Tensor, x_enc: &Encoding, bias: Option<&[f32]>) -> Tensor {
+        let (nb, k) = (x.dim(0), x.dim(1));
+        assert_eq!(k, self.cols, "QTensor::matmul_xt inner dims: {} vs {k}", self.cols);
+        self.check_acc_bounds(x_enc);
+        let x_int = quantize_ints(x.data(), x_enc);
+        let m = self.rows;
+        let zx = x_enc.offset as i64;
+        let s = self.enc.scale * x_enc.scale;
+        let mut out = vec![0.0f32; nb * m];
+        let base = SyncSlice::new(out.as_mut_ptr());
+        parallel_chunks(nb, 1, |r0, r1| {
+            for ni in r0..r1 {
+                let xrow = &x_int[ni * k..(ni + 1) * k];
+                // SAFETY: output rows are disjoint per `ni`.
+                let orow = unsafe { std::slice::from_raw_parts_mut(base.ptr().add(ni * m), m) };
+                for (oi, o) in orow.iter_mut().enumerate() {
+                    let wrow = &self.data[oi * k..(oi + 1) * k];
+                    let mut acc: i32 = 0;
+                    for (&wv, &xv) in wrow.iter().zip(xrow) {
+                        acc += wv * xv;
+                    }
+                    let corrected = acc as i64 - zx * self.row_sums[oi];
+                    let b = bias.map(|bs| bs[oi]).unwrap_or(0.0);
+                    *o = s * corrected as f32 + b;
+                }
+            }
+        });
+        Tensor::new(&[nb, m], out)
+    }
+
+    /// The blocked integer GEMM core. Computes `acc[m_i, l] = Σ_k
+    /// w_int[m_i, k]·x_int[k, l]` with 4-row register blocking over INT32
+    /// accumulators, then requantizes and scatters each output row into
+    /// `out` as `batch` segments of length `inner` at
+    /// `out[(seg·M + m_i)·inner ..]` (with `batch = 1, inner = n` this is
+    /// plain row-major [M, N]; the conv path uses it to write
+    /// [N, O, OH·OW] directly, killing the old [O, L] → NCHW permute copy).
+    fn gemm_scatter(
+        &self,
+        x_int: &[i32],
+        n: usize,
+        x_enc: &Encoding,
+        bias: Option<&[f32]>,
+        batch: usize,
+        inner: usize,
+        out: &mut [f32],
+    ) {
+        assert_eq!(batch * inner, n, "scatter segments must tile the row");
+        assert_eq!(out.len(), self.rows * n);
+        assert_eq!(x_int.len(), self.cols * n);
+        self.check_acc_bounds(x_enc);
+        let (m, k) = (self.rows, self.cols);
+        let zx = x_enc.offset as i64;
+        let s = self.enc.scale * x_enc.scale;
+        let blocks = m.div_ceil(4);
+        let base = SyncSlice::new(out.as_mut_ptr());
+        parallel_chunks(blocks, 1, |b0, b1| {
+            // Per-worker accumulator scratch, reused across blocks.
+            let mut acc = vec![0i32; 4 * n];
+            for blk in b0..b1 {
+                let i0 = blk * 4;
+                let rb = (m - i0).min(4);
+                let accs = &mut acc[..rb * n];
+                accs.fill(0);
+                if rb == 4 {
+                    let (a0, rest) = accs.split_at_mut(n);
+                    let (a1, rest) = rest.split_at_mut(n);
+                    let (a2, a3) = rest.split_at_mut(n);
+                    let w0 = &self.data[i0 * k..(i0 + 1) * k];
+                    let w1 = &self.data[(i0 + 1) * k..(i0 + 2) * k];
+                    let w2 = &self.data[(i0 + 2) * k..(i0 + 3) * k];
+                    let w3 = &self.data[(i0 + 3) * k..(i0 + 4) * k];
+                    for kk in 0..k {
+                        let (v0, v1, v2, v3) = (w0[kk], w1[kk], w2[kk], w3[kk]);
+                        let xrow = &x_int[kk * n..(kk + 1) * n];
+                        for j in 0..n {
+                            let xv = xrow[j];
+                            a0[j] += v0 * xv;
+                            a1[j] += v1 * xv;
+                            a2[j] += v2 * xv;
+                            a3[j] += v3 * xv;
+                        }
+                    }
+                } else {
+                    for r in 0..rb {
+                        let wr = &self.data[(i0 + r) * k..(i0 + r + 1) * k];
+                        let ar = &mut accs[r * n..(r + 1) * n];
+                        for kk in 0..k {
+                            let v = wr[kk];
+                            let xrow = &x_int[kk * n..(kk + 1) * n];
+                            for (a, &xv) in ar.iter_mut().zip(xrow) {
+                                *a += v * xv;
+                            }
+                        }
+                    }
+                }
+                // Requantize + scatter (eq 2.9: subtract z_x·Σw, rescale,
+                // add bias). Same FP expression as the naive reference, so
+                // results are bit-exact.
+                for r in 0..rb {
+                    let mi = i0 + r;
+                    let corr = zx * self.row_sums[mi];
+                    let b = bias.map(|bs| bs[mi]).unwrap_or(0.0);
+                    let arow = &accs[r * n..(r + 1) * n];
+                    for seg in 0..batch {
+                        let dst_off = (seg * m + mi) * inner;
+                        // SAFETY: (row, segment) destinations are disjoint.
+                        let dst = unsafe {
+                            std::slice::from_raw_parts_mut(base.ptr().add(dst_off), inner)
+                        };
+                        for (d, &a) in dst.iter_mut().zip(&arow[seg * inner..(seg + 1) * inner]) {
+                            let corrected = a as i64 - corr;
+                            *d = s * corrected as f32 + b;
+                        }
+                    }
+                }
+            }
+        });
+    }
+}
 
 /// Integer matmul with INT32 accumulation:
 /// `acc[m,n] = Σ_k w_int[m,k] · x_int[k,n]` followed by the requantization
@@ -17,9 +242,21 @@ use crate::tensor::{Conv2dSpec, Tensor};
 /// `y = s_w·s_x·(acc − z_x·Σ_k w_int[m,k]) + bias` (eq 2.9 with symmetric
 /// weights, i.e. `z_w = 0`).
 ///
-/// Weights must use a symmetric encoding — asymmetric weights would add the
-/// data-dependent cross term the paper recommends avoiding (§2.3).
+/// Quantizes W on every call; hot paths that reuse weights should build a
+/// [`QTensor`] once and call [`QTensor::matmul`] directly.
 pub fn quantized_matmul_i32(
+    w: &Tensor,
+    w_enc: &Encoding,
+    x: &Tensor,
+    x_enc: &Encoding,
+    bias: Option<&[f32]>,
+) -> Tensor {
+    QTensor::from_matrix(w, w_enc).matmul(x, x_enc, bias)
+}
+
+/// The original naive triple-loop integer matmul, retained as the bit-exact
+/// reference for the blocked kernel (property tests, hotpath bench).
+pub fn quantized_matmul_i32_ref(
     w: &Tensor,
     w_enc: &Encoding,
     x: &Tensor,
@@ -60,7 +297,8 @@ pub fn quantized_matmul_i32(
 }
 
 /// Quantized linear layer `y = W·x + b` for x of shape [N, F] (batch-major);
-/// returns [N, O]. Weight is [O, F].
+/// returns [N, O]. Weight is [O, F]. Routed through the transpose-free
+/// [`QTensor::matmul_xt`] kernel.
 pub fn quantized_linear(
     weight: &Tensor,
     w_enc: &Encoding,
@@ -68,12 +306,12 @@ pub fn quantized_linear(
     x_enc: &Encoding,
     bias: Option<&[f32]>,
 ) -> Tensor {
-    let xt = x.transpose2(); // [F, N]
-    let y = quantized_matmul_i32(weight, w_enc, &xt, x_enc, bias); // [O, N]
-    y.transpose2()
+    QTensor::from_matrix(weight, w_enc).matmul_xt(x, x_enc, bias)
 }
 
-/// Quantized conv via im2col + the integer matmul. Weight [O,I,kh,kw].
+/// Quantized conv via im2col + the blocked integer matmul, which writes
+/// the NCHW output layout directly (no [O, L] intermediate or permute
+/// copy). Weight [O,I,kh,kw].
 pub fn quantized_conv2d(
     x: &Tensor,
     x_enc: &Encoding,
@@ -87,18 +325,15 @@ pub fn quantized_conv2d(
     let (oh, ow) = spec.out_hw(h, w, kh, kw);
     let cols = crate::tensor::im2col(x, kh, kw, spec); // [I*kh*kw, N*OH*OW]
     let wmat = weight.reshape(&[o, i * kh * kw]);
-    let ymat = quantized_matmul_i32(&wmat, w_enc, &cols, x_enc, bias); // [O, L]
-    // [O, N, OH, OW] -> [N, O, OH, OW]
+    let qw = QTensor::from_matrix(&wmat, w_enc);
     let inner = oh * ow;
+    let l = n * inner;
+    let x_int = quantize_ints(cols.data(), x_enc);
     let mut out = vec![0.0f32; n * o * inner];
-    let yd = ymat.data();
-    for oi in 0..o {
-        for ni in 0..n {
-            let src = (oi * n + ni) * inner;
-            let dst = (ni * o + oi) * inner;
-            out[dst..dst + inner].copy_from_slice(&yd[src..src + inner]);
-        }
-    }
+    // Columns are ordered [ni*inner + pos], so scattering row `oi` as `n`
+    // segments of length `inner` lands each at [(ni*O + oi)*inner ..] —
+    // exactly NCHW.
+    qw.gemm_scatter(&x_int, l, x_enc, bias, n, inner, &mut out);
     Tensor::new(&[n, o, oh, ow], out)
 }
 
@@ -147,6 +382,44 @@ mod tests {
         assert!(sim.max_abs_diff(&int) < 1e-3);
     }
 
+    /// The blocked parallel kernel is bit-exact against the retained naive
+    /// reference — integer accumulation is order-independent and the
+    /// requantization expression is kept identical.
+    #[test]
+    fn blocked_matches_naive_reference_bit_exactly() {
+        let mut rng = Rng::new(7);
+        for &(m, k, n) in &[(1, 3, 5), (3, 17, 4), (4, 4, 4), (5, 64, 17), (17, 5, 64)] {
+            let w = Tensor::randn(&mut rng, &[m, k], 0.6);
+            let x = Tensor::rand_uniform(&mut rng, &[k, n], -3.0, 1.0);
+            let w_enc = Encoding::from_min_max(w.min(), w.max(), 8, true);
+            let x_enc = Encoding::from_min_max(-3.0, 1.0, 8, false);
+            assert_ne!(x_enc.offset, 0, "want a nonzero activation zero-point");
+            let b: Vec<f32> = rng.normal_vec(m, 0.2);
+            let fast = quantized_matmul_i32(&w, &w_enc, &x, &x_enc, Some(&b));
+            let slow = quantized_matmul_i32_ref(&w, &w_enc, &x, &x_enc, Some(&b));
+            assert_eq!(fast, slow, "({m},{k},{n}) not bit-exact");
+        }
+    }
+
+    /// Building the QTensor once and multiplying repeatedly gives the same
+    /// answer as re-quantizing each call — the reuse contract.
+    #[test]
+    fn qtensor_reuse_is_stable() {
+        let mut rng = Rng::new(8);
+        let w = Tensor::randn(&mut rng, &[6, 12], 0.5);
+        let w_enc = Encoding::from_min_max(w.min(), w.max(), 8, true);
+        let qw = QTensor::from_matrix(&w, &w_enc);
+        assert_eq!(qw.rows(), 6);
+        assert_eq!(qw.cols(), 12);
+        for trial in 0..3 {
+            let x = Tensor::rand_uniform(&mut rng, &[12, 9], -1.0, 2.0);
+            let x_enc = Encoding::from_min_max(-1.0, 2.0, 8, false);
+            let once = qw.matmul(&x, &x_enc, None);
+            let fresh = quantized_matmul_i32(&w, &w_enc, &x, &x_enc, None);
+            assert_eq!(once, fresh, "trial {trial}");
+        }
+    }
+
     #[test]
     fn zero_point_correction_term_matters() {
         // With a nonzero activation zero-point, omitting the correction term
@@ -192,5 +465,19 @@ mod tests {
                 assert!((y.data()[ni * 4 + oi] - want).abs() < 1e-3);
             }
         }
+    }
+
+    /// The transpose-free linear kernel equals the transpose formulation.
+    #[test]
+    fn linear_xt_matches_transpose_route() {
+        let mut rng = Rng::new(9);
+        let w = Tensor::randn(&mut rng, &[5, 7], 0.5);
+        let x = Tensor::rand_uniform(&mut rng, &[3, 7], -2.0, 2.0);
+        let b: Vec<f32> = rng.normal_vec(5, 0.1);
+        let w_enc = Encoding::from_min_max(w.min(), w.max(), 8, true);
+        let x_enc = Encoding::from_min_max(-2.0, 2.0, 8, false);
+        let direct = quantized_linear(&w, &w_enc, &x, &x_enc, Some(&b));
+        let via_t = quantized_matmul_i32(&w, &w_enc, &x.transpose2(), &x_enc, Some(&b)).transpose2();
+        assert_eq!(direct, via_t);
     }
 }

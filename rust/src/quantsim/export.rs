@@ -131,6 +131,7 @@ pub fn set_and_freeze_param_encodings(
             }
         }
     }
+    sim.invalidate_weight_cache();
 }
 
 #[cfg(test)]

@@ -22,7 +22,69 @@ use crate::quant::{
 };
 use crate::tensor::Tensor;
 use anyhow::Result;
+use std::fmt;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+/// Cache of qdq'd weights, keyed by an encoding-version counter.
+///
+/// The forward hook used to call `q.qdq(w)` on every node of every
+/// forward, re-quantizing static weights on each of the thousands of
+/// passes a calibration sweep or QAT run issues. Weights only change
+/// observably when (a) a param encoding changes or (b) the underlying
+/// FP32 weight is mutated; both invalidate by bumping [`version`]:
+/// every sim method that touches param quantizers bumps it, and code
+/// that mutates `sim.graph` weights directly (the QAT optimizer step)
+/// must call [`QuantizationSimModel::invalidate_weight_cache`].
+///
+/// Cloning a sim resets the cache (it is transient derived state), so a
+/// clone can never serve entries that are stale for its own toggles.
+pub struct WeightCache {
+    version: AtomicU64,
+    entries: RwLock<Vec<Option<(u64, Tensor)>>>,
+}
+
+impl WeightCache {
+    fn new() -> WeightCache {
+        WeightCache {
+            version: AtomicU64::new(0),
+            entries: RwLock::new(Vec::new()),
+        }
+    }
+
+    fn bump(&self) {
+        self.version.fetch_add(1, Ordering::Release);
+    }
+
+    /// Current encoding-version counter (diagnostics / tests).
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+}
+
+impl Default for WeightCache {
+    fn default() -> WeightCache {
+        WeightCache::new()
+    }
+}
+
+impl Clone for WeightCache {
+    fn clone(&self) -> WeightCache {
+        WeightCache::new()
+    }
+}
+
+impl fmt::Debug for WeightCache {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let cached = self
+            .entries
+            .read()
+            .map(|e| e.iter().filter(|x| x.is_some()).count())
+            .unwrap_or(0);
+        write!(f, "WeightCache {{ version: {}, cached: {} }}", self.version(), cached)
+    }
+}
 
 /// One activation quantizer slot (a node output, or the model input).
 #[derive(Debug, Clone)]
@@ -66,6 +128,8 @@ pub struct QuantizationSimModel {
     pub params: Vec<Option<ParamSlot>>,
     /// Model-input quantizer (`model_input` config section).
     pub input_slot: ActSlot,
+    /// Per-node cached qdq'd weights (see [`WeightCache`]).
+    pub weight_cache: WeightCache,
 }
 
 impl QuantizationSimModel {
@@ -121,6 +185,7 @@ impl QuantizationSimModel {
             acts,
             params,
             input_slot,
+            weight_cache: WeightCache::new(),
         }
     }
 
@@ -185,6 +250,7 @@ impl QuantizationSimModel {
         if let Some(an) = input_an {
             self.input_slot.quantizer = Some(Quantizer::per_tensor(an.compute()));
         }
+        self.invalidate_weight_cache();
     }
 
     /// Quantized forward — the drop-in eval path.
@@ -221,12 +287,45 @@ impl QuantizationSimModel {
     /// The qdq'd weight of node `idx` under its current param encoding.
     pub fn quantized_weight(&self, idx: usize) -> Option<Tensor> {
         let w = self.graph.nodes[idx].op.weight()?;
-        match &self.params[idx] {
-            Some(slot) if slot.enabled => {
-                Some(slot.quantizer.as_ref().map(|q| q.qdq(w)).unwrap_or_else(|| w.clone()))
+        Some(self.hooked_weight(idx, w))
+    }
+
+    /// The weight tensor node `idx` contributes to a quantized forward:
+    /// qdq'd under the current param encoding and served from the
+    /// [`WeightCache`] (qdq of a static weight is pure, so repeated
+    /// forwards reuse the tensor until the version counter moves).
+    fn hooked_weight(&self, idx: usize, w: &Tensor) -> Tensor {
+        let q = match &self.params[idx] {
+            Some(slot) if slot.enabled => match &slot.quantizer {
+                Some(q) => q,
+                None => return w.clone(),
+            },
+            _ => return w.clone(),
+        };
+        let ver = self.weight_cache.version.load(Ordering::Acquire);
+        {
+            let entries = self.weight_cache.entries.read().unwrap();
+            if let Some(Some((v, cached))) = entries.get(idx) {
+                if *v == ver {
+                    return cached.clone();
+                }
             }
-            _ => Some(w.clone()),
         }
+        let out = q.qdq(w);
+        let mut entries = self.weight_cache.entries.write().unwrap();
+        if entries.len() < self.graph.nodes.len() {
+            entries.resize(self.graph.nodes.len(), None);
+        }
+        entries[idx] = Some((ver, out.clone()));
+        out
+    }
+
+    /// Drop every cached qdq'd weight. Called automatically by the sim's
+    /// own quantizer-mutating methods; call it manually after mutating
+    /// `sim.graph` weights or param quantizers directly (the QAT step
+    /// does this every iteration).
+    pub fn invalidate_weight_cache(&self) {
+        self.weight_cache.bump();
     }
 
     // ---- debug-flow toggles (§4.8) ---------------------------------------
@@ -244,6 +343,7 @@ impl QuantizationSimModel {
         for s in self.params.iter_mut().flatten() {
             s.enabled = enabled;
         }
+        self.invalidate_weight_cache();
     }
 
     /// Set one activation quantizer's enablement by node name.
@@ -261,6 +361,7 @@ impl QuantizationSimModel {
         if let Some(i) = self.graph.find(name) {
             if let Some(s) = &mut self.params[i] {
                 s.enabled = enabled;
+                self.invalidate_weight_cache();
                 return true;
             }
         }
@@ -286,6 +387,7 @@ impl QuantizationSimModel {
                 s.bw = bw;
                 s.quantizer = None;
                 s.frozen = false;
+                self.invalidate_weight_cache();
                 return true;
             }
         }
@@ -337,13 +439,7 @@ impl ForwardHook for SimHook<'_> {
     }
 
     fn on_weight(&mut self, idx: usize, _node: &Node, w: &Tensor) -> Tensor {
-        let out = match &self.sim.params[idx] {
-            Some(slot) if slot.enabled => match &slot.quantizer {
-                Some(q) => q.qdq(w),
-                None => w.clone(),
-            },
-            _ => w.clone(),
-        };
+        let out = self.sim.hooked_weight(idx, w);
         if let Some(cap) = self.captured.as_deref_mut() {
             cap[idx] = Some(out.clone());
         }
@@ -502,6 +598,45 @@ mod tests {
         sim.compute_encodings(&calib(2, 2));
         let after = sim.params[idx].as_ref().unwrap().quantizer.clone().unwrap();
         assert_eq!(before.encodings[0], after.encodings[0]);
+    }
+
+    #[test]
+    fn weight_cache_is_bit_identical_and_invalidates() {
+        let g = zoo::build("mobimini", 20).unwrap();
+        let mut sim = QuantizationSimModel::with_defaults(g, QuantParams::default());
+        sim.compute_encodings(&calib(21, 3));
+        let (x, _) = crate::data::SynthImageNet::new(22).batch(0, 4);
+        // First forward populates the cache, second is served from it —
+        // results must be bit-identical, and must match a fresh sim
+        // (clone resets the cache, so `fresh` computes qdq from scratch).
+        let y1 = sim.forward(&x);
+        let y2 = sim.forward(&x);
+        assert_eq!(y1, y2);
+        let fresh = sim.clone();
+        assert_eq!(fresh.forward(&x), y1);
+        // Mutating encodings must invalidate: drop a layer to 4 bits and
+        // recalibrate, then re-check against an uncached clone.
+        assert!(sim.set_param_bw("stem.conv", 4));
+        sim.compute_encodings(&calib(21, 3));
+        let y3 = sim.forward(&x);
+        assert_ne!(y3, y1, "bw change must alter the forward");
+        assert_eq!(sim.clone().forward(&x), y3);
+        // QAT-style shadow-weight mutation + manual invalidation.
+        let idx = sim.graph.find("stem.conv").unwrap();
+        sim.graph.nodes[idx]
+            .op
+            .weight_mut()
+            .unwrap()
+            .map_inplace(|v| v * 1.5);
+        sim.invalidate_weight_cache();
+        let y4 = sim.forward(&x);
+        assert_eq!(sim.clone().forward(&x), y4);
+        assert_ne!(y4, y3, "weight mutation must alter the forward");
+        // Debug-flow toggles invalidate too.
+        sim.set_all_param_enabled(false);
+        let y5 = sim.forward(&x);
+        assert_eq!(sim.clone().forward(&x), y5);
+        assert_ne!(y5, y4);
     }
 
     #[test]

@@ -16,53 +16,60 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     let (k2, n) = (b.dim(0), b.dim(1));
     assert_eq!(k, k2, "matmul inner dims: {k} vs {k2}");
     let mut out = vec![0.0f32; m * n];
+    let base = crate::pool::SyncSlice::new(out.as_mut_ptr());
     let ad = a.data();
     let bd = b.data();
     // Each output row C[i,:] = sum_k A[i,k] * B[k,:] — an AXPY per k over a
     // contiguous slice of B, which vectorizes well and has unit-stride loads.
     // 4-row register blocking: each B row load is reused across four
     // output rows, quadrupling arithmetic intensity vs the naive AXPY
-    // (EXPERIMENTS.md §Perf). Remainder rows fall back to single-row AXPY.
-    let blocks = m / 4;
+    // (EXPERIMENTS.md §Perf). The final short block (m % 4 rows) is handled
+    // inside the same parallel region with unconditional AXPYs, so blocked
+    // and remainder paths are numerically identical and tall-skinny
+    // matrices don't serialize a tail after the join.
+    let blocks = m.div_ceil(4);
     crate::pool::parallel_chunks(blocks, 1, |b0, b1| {
         // Safety: blocks write disjoint out rows.
-        let out_ptr = out.as_ptr() as *mut f32;
+        let out_ptr = base.ptr();
         for blk in b0..b1 {
             let i = blk * 4;
-            let a0 = &ad[i * k..(i + 1) * k];
-            let a1 = &ad[(i + 1) * k..(i + 2) * k];
-            let a2 = &ad[(i + 2) * k..(i + 3) * k];
-            let a3 = &ad[(i + 3) * k..(i + 4) * k];
-            let rows = unsafe { std::slice::from_raw_parts_mut(out_ptr.add(i * n), 4 * n) };
-            let (r0, rest) = rows.split_at_mut(n);
-            let (r1, rest) = rest.split_at_mut(n);
-            let (r2, r3) = rest.split_at_mut(n);
-            for kk in 0..k {
-                let (v0, v1, v2, v3) = (a0[kk], a1[kk], a2[kk], a3[kk]);
-                let brow = &bd[kk * n..(kk + 1) * n];
-                for j in 0..n {
-                    let bv = brow[j];
-                    r0[j] += v0 * bv;
-                    r1[j] += v1 * bv;
-                    r2[j] += v2 * bv;
-                    r3[j] += v3 * bv;
+            let rb = (m - i).min(4);
+            if rb == 4 {
+                let a0 = &ad[i * k..(i + 1) * k];
+                let a1 = &ad[(i + 1) * k..(i + 2) * k];
+                let a2 = &ad[(i + 2) * k..(i + 3) * k];
+                let a3 = &ad[(i + 3) * k..(i + 4) * k];
+                let rows = unsafe { std::slice::from_raw_parts_mut(out_ptr.add(i * n), 4 * n) };
+                let (r0, rest) = rows.split_at_mut(n);
+                let (r1, rest) = rest.split_at_mut(n);
+                let (r2, r3) = rest.split_at_mut(n);
+                for kk in 0..k {
+                    let (v0, v1, v2, v3) = (a0[kk], a1[kk], a2[kk], a3[kk]);
+                    let brow = &bd[kk * n..(kk + 1) * n];
+                    for j in 0..n {
+                        let bv = brow[j];
+                        r0[j] += v0 * bv;
+                        r1[j] += v1 * bv;
+                        r2[j] += v2 * bv;
+                        r3[j] += v3 * bv;
+                    }
+                }
+            } else {
+                for r in 0..rb {
+                    let arow = &ad[(i + r) * k..(i + r + 1) * k];
+                    let crow = unsafe {
+                        std::slice::from_raw_parts_mut(out_ptr.add((i + r) * n), n)
+                    };
+                    for (kk, &aik) in arow.iter().enumerate() {
+                        let brow = &bd[kk * n..(kk + 1) * n];
+                        for (c, &bv) in crow.iter_mut().zip(brow) {
+                            *c += aik * bv;
+                        }
+                    }
                 }
             }
         }
     });
-    for i in blocks * 4..m {
-        let arow = &ad[i * k..(i + 1) * k];
-        let crow = &mut out[i * n..(i + 1) * n];
-        for (kk, &aik) in arow.iter().enumerate() {
-            if aik == 0.0 {
-                continue;
-            }
-            let brow = &bd[kk * n..(kk + 1) * n];
-            for (c, &bv) in crow.iter_mut().zip(brow) {
-                *c += aik * bv;
-            }
-        }
-    }
     Tensor::new(&[m, n], out)
 }
 

@@ -88,6 +88,8 @@ fn quantsim_forward_matches_pallas_fake_quant_path() {
         sim.params[idx].as_mut().unwrap().quantizer =
             Some(aimet::quant::Quantizer::per_tensor(e));
     }
+    // Quantizers were swapped behind the sim's back: drop cached weights.
+    sim.invalidate_weight_cache();
     let n_act = act_rows.len() / 2;
     let n_par = par_rows.len() / 2;
     let spec = rt.spec("mobimini_qsim_fwd").unwrap().clone();

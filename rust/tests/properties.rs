@@ -342,3 +342,65 @@ fn prop_lstm_backward_numeric() {
         );
     }
 }
+
+/// The blocked, pool-parallel integer GEMM is bit-exact against the
+/// retained naive reference across odd shapes and with nonzero activation
+/// zero-points (eq 2.9's correction term live in every case).
+#[test]
+fn prop_blocked_int_gemm_bit_exact_vs_reference() {
+    use aimet::quant::{quantized_matmul_i32, quantized_matmul_i32_ref};
+    let mut rng = Rng::new(0x6E44);
+    let dims = [1usize, 3, 4, 5, 17, 64];
+    for &m in &dims {
+        for &k in &dims {
+            for &n in &dims {
+                let w = Tensor::randn(&mut rng, &[m, k], 0.7);
+                let x = Tensor::rand_uniform(&mut rng, &[k, n], -3.0, 1.5);
+                let w_enc = Encoding::from_min_max(w.min(), w.max(), 8, true);
+                let x_enc = Encoding::from_min_max(-3.0, 1.5, 8, false);
+                assert_ne!(x_enc.offset, 0, "want a live zero-point");
+                let bias: Vec<f32> = (0..m).map(|i| i as f32 * 0.1 - 0.2).collect();
+                let fast = quantized_matmul_i32(&w, &w_enc, &x, &x_enc, Some(&bias));
+                let slow = quantized_matmul_i32_ref(&w, &w_enc, &x, &x_enc, Some(&bias));
+                assert_eq!(fast, slow, "({m},{k},{n}) diverged from reference");
+            }
+        }
+    }
+}
+
+/// A pre-quantized weight ([`aimet::quant::QTensor`]) reused across many
+/// activations always matches the quantize-every-call entry point.
+#[test]
+fn prop_qtensor_reuse_matches_fresh_quantization() {
+    use aimet::quant::{quantized_matmul_i32, QTensor};
+    let mut rng = Rng::new(0x517E);
+    let w = Tensor::randn(&mut rng, &[17, 29], 0.4);
+    let w_enc = Encoding::from_min_max(w.min(), w.max(), 8, true);
+    let qw = QTensor::from_matrix(&w, &w_enc);
+    for case in 0..CASES {
+        let x = Tensor::rand_uniform(&mut rng, &[29, 11], -1.0, 3.0);
+        let x_enc = Encoding::from_min_max(-1.0, 3.0, 8, false);
+        let reused = qw.matmul(&x, &x_enc, None);
+        let fresh = quantized_matmul_i32(&w, &w_enc, &x, &x_enc, None);
+        assert_eq!(reused, fresh, "case {case}");
+    }
+}
+
+/// The persistent worker pool survives nested parallelism (a parallel
+/// matmul inside a parallel map) and heavy sequential reuse from an
+/// integration-test entry point, with deterministic results.
+#[test]
+fn prop_pool_nested_and_sequential_use_is_deterministic() {
+    let serial = |seed: u64| -> f32 {
+        let mut rng = Rng::new(seed);
+        let a = Tensor::randn(&mut rng, &[9, 33], 1.0);
+        let b = Tensor::randn(&mut rng, &[33, 7], 1.0);
+        aimet::tensor::matmul(&a, &b).data().iter().sum()
+    };
+    for round in 0..20 {
+        let out = aimet::pool::parallel_map(8, 1, |i| serial(100 + i as u64));
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, serial(100 + i as u64), "round {round}, lane {i}");
+        }
+    }
+}

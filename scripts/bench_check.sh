@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# Perf gate: build release, run the hotpath bench, and fail if the
+# machine-readable baseline is missing or the quantsim/fp32 forward
+# ratio exceeds the paper-motivated 3.0x budget (rust/README.md §Perf).
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+(cd rust && cargo build --release)
+(cd rust && cargo bench --bench hotpath)
+
+if [[ ! -f BENCH_hotpath.json ]]; then
+    echo "bench_check: BENCH_hotpath.json was not emitted" >&2
+    exit 1
+fi
+
+python3 - <<'EOF'
+import json
+import sys
+
+with open("BENCH_hotpath.json") as f:
+    d = json.load(f)
+
+ratio = d["quantsim_over_fp32"]
+if ratio > 3.0:
+    sys.exit(f"bench_check: quantsim/fp32 forward ratio {ratio:.2f} > 3.0")
+
+speedup = d.get("int_gemm_speedup_vs_naive")
+print(
+    f"bench_check OK: quantsim/fp32 = {ratio:.2f}x (<= 3.0), "
+    f"int-GEMM speedup vs naive = {speedup:.1f}x"
+)
+EOF
