@@ -1,0 +1,165 @@
+//! Compression acceptance bench: greedy search to a 0.5 MAC budget on the
+//! reference zoo model, composed with PTQ, plus wall-clock of the blocked
+//! int-GEMM forward on the original vs compressed graph.
+//!
+//! Writes `BENCH_compress.json` at the repo root; `scripts/bench_check.sh`
+//! gates on MAC reduction ≥ 40% at eval-score delta ≤ 2 points.
+//!
+//! Run: `cargo bench --bench compress`
+
+mod common;
+
+use aimet::compress::{compress_then_ptq, greedy_plan, SearchOptions};
+use aimet::coordinator::experiments::{trained_model, Effort};
+use aimet::graph::{Graph, Input, Op};
+use aimet::json::Json;
+use aimet::ptq::PtqOptions;
+use aimet::quant::{quantized_conv2d, quantized_linear, Encoding};
+use aimet::task::evaluate_graph;
+use aimet::tensor::Tensor;
+use aimet::zoo;
+use std::path::Path;
+
+/// One pass over the graph's int-GEMM workload: every Conv2d / Linear runs
+/// through the blocked integer kernels on its real activations (depthwise
+/// has no integer kernel and is skipped on both sides of the comparison).
+fn int_forward(g: &Graph, acts: &[Tensor], x0: &Tensor) {
+    for node in &g.nodes {
+        let x_in = match node.inputs.first() {
+            Some(Input::Graph) => x0,
+            Some(Input::Node(j)) => &acts[*j],
+            None => continue,
+        };
+        let x_enc = Encoding::from_min_max(x_in.min(), x_in.max(), 8, false);
+        match &node.op {
+            Op::Conv2d { weight, bias, spec } => {
+                let w_enc = Encoding::from_min_max(weight.min(), weight.max(), 8, true);
+                std::hint::black_box(quantized_conv2d(
+                    x_in,
+                    &x_enc,
+                    weight,
+                    &w_enc,
+                    Some(bias),
+                    *spec,
+                ));
+            }
+            Op::Linear { weight, bias } => {
+                let f = *x_in.shape().last().unwrap();
+                let lead = x_in.len() / f;
+                let x2 = x_in.reshape(&[lead, f]);
+                let w_enc = Encoding::from_min_max(weight.min(), weight.max(), 8, true);
+                std::hint::black_box(quantized_linear(weight, &w_enc, &x2, &x_enc, Some(bias)));
+            }
+            _ => {}
+        }
+    }
+}
+
+fn main() {
+    let model = "mobimini";
+    let target = 0.5f32;
+    let (g, data, _) = trained_model(model, Effort::Fast, 4100);
+    let mut input_shape = vec![1usize];
+    input_shape.extend(zoo::input_shape(model).unwrap());
+    let calib = data.calibration(4, 16);
+    let (x, _) = data.batch(0, 16);
+
+    let threads = aimet::pool::num_threads();
+    println!("== compression ({model}, target {target}, {threads} threads) ==");
+
+    let fp32 = evaluate_graph(&g, model, &data, 6, 16);
+
+    // Greedy per-layer (kind, ratio) selection on the worker pool.
+    let eval = |g2: &Graph| evaluate_graph(g2, model, &data, 3, 16);
+    let opts = SearchOptions {
+        target_ratio: target,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let outcome = greedy_plan(&g, &calib, &input_shape, &eval, &opts);
+    let search_secs = t0.elapsed().as_secs_f64();
+    println!(
+        "greedy search: {:.2}s over {} layers, floor {:.2}",
+        search_secs,
+        outcome.sensitivity.len(),
+        outcome.score_floor
+    );
+
+    let (res, ptq) = compress_then_ptq(
+        &g,
+        &outcome.plan,
+        &calib,
+        &input_shape,
+        &PtqOptions::default(),
+    );
+    for line in &res.log {
+        println!("compress: {line}");
+    }
+    let compressed = evaluate_graph(&res.graph, model, &data, 6, 16);
+    let quantized = aimet::task::evaluate_sim(&ptq.sim, model, &data, 6, 16);
+    let mac_reduction_pct = 100.0 * (1.0 - res.mac_ratio());
+    let eval_delta = fp32 - compressed;
+    println!(
+        "MACs {} -> {} ({:.1}% reduction) | eval FP32 {fp32:.2} -> compressed {compressed:.2} \
+         (delta {eval_delta:.2}) -> +PTQ {quantized:.2}",
+        res.macs_before, res.macs_after, mac_reduction_pct
+    );
+
+    // Forward wall-clock: fp32 graph path and blocked int-GEMM path.
+    let t_fp_orig = common::median_secs(11, || {
+        std::hint::black_box(g.forward(&x));
+    });
+    let t_fp_comp = common::median_secs(11, || {
+        std::hint::black_box(res.graph.forward(&x));
+    });
+    let acts_orig = g.forward_all(&x);
+    let acts_comp = res.graph.forward_all(&x);
+    let t_int_orig = common::median_secs(11, || int_forward(&g, &acts_orig, &x));
+    let t_int_comp = common::median_secs(11, || int_forward(&res.graph, &acts_comp, &x));
+    println!(
+        "fp32 forward: {:.2} ms -> {:.2} ms ({:.2}x) | int-GEMM forward: {:.2} ms -> {:.2} ms ({:.2}x)",
+        t_fp_orig * 1e3,
+        t_fp_comp * 1e3,
+        t_fp_orig / t_fp_comp,
+        t_int_orig * 1e3,
+        t_int_comp * 1e3,
+        t_int_orig / t_int_comp
+    );
+
+    let mut report = Json::obj();
+    report.set("model", Json::from(model));
+    report.set("threads", Json::from(threads as u32));
+    report.set("target_ratio", Json::from(target as f64));
+    report.set("mac_original", Json::from(res.macs_before as f64));
+    report.set("mac_compressed", Json::from(res.macs_after as f64));
+    report.set("mac_reduction_pct", Json::from(mac_reduction_pct));
+    report.set("eval_fp32", Json::from(fp32 as f64));
+    report.set("eval_compressed", Json::from(compressed as f64));
+    report.set("eval_delta", Json::from(eval_delta as f64));
+    report.set("eval_compressed_ptq", Json::from(quantized as f64));
+    report.set("search_s", Json::from(search_secs));
+    report.set("fp32_forward_orig_ms", Json::from(t_fp_orig * 1e3));
+    report.set("fp32_forward_comp_ms", Json::from(t_fp_comp * 1e3));
+    report.set("fp32_forward_speedup", Json::from(t_fp_orig / t_fp_comp));
+    report.set("int_forward_orig_ms", Json::from(t_int_orig * 1e3));
+    report.set("int_forward_comp_ms", Json::from(t_int_comp * 1e3));
+    report.set("int_forward_speedup", Json::from(t_int_orig / t_int_comp));
+    report.set(
+        "plan",
+        Json::Arr(
+            outcome
+                .plan
+                .choices
+                .iter()
+                .map(|c| Json::from(format!("{} {}@{:.3}", c.kind.label(), c.layer, c.ratio)))
+                .collect(),
+        ),
+    );
+
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent")
+        .join("BENCH_compress.json");
+    std::fs::write(&path, report.pretty()).expect("write BENCH_compress.json");
+    println!("wrote {}", path.display());
+}

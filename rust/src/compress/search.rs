@@ -1,0 +1,296 @@
+//! AIMET-style greedy compression-ratio selection.
+//!
+//! For every compressible layer and every candidate ratio, a single-layer
+//! compressed copy of the model is built and scored — all candidates run
+//! in parallel on the worker pool, the shape AIMET calls *sensitivity
+//! analysis*. Selection then sweeps an eval-score floor downward over the
+//! observed scores: at each floor every layer independently picks its
+//! largest-saving candidate that still scores above the floor, and the
+//! first floor whose estimated total MACs meets the target budget wins.
+//! Per-layer savings are additive to first order, which is what makes the
+//! greedy estimate sound; [`crate::compress::apply_plan`] recomputes the
+//! exact MAC count after the joint application.
+
+use super::prune::{find_prune_candidates, prune_channels};
+use super::svd::{svd_apply, svd_candidates};
+use crate::graph::Graph;
+use crate::pool::parallel_map;
+use crate::tensor::Tensor;
+
+/// Which compression algorithm a choice uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompressionKind {
+    /// Spatial SVD (convs) / low-rank factorization (linears).
+    SpatialSvd,
+    /// Channel pruning with least-squares reconstruction.
+    ChannelPrune,
+}
+
+impl CompressionKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            CompressionKind::SpatialSvd => "svd",
+            CompressionKind::ChannelPrune => "prune",
+        }
+    }
+}
+
+/// One selected per-layer compression.
+#[derive(Debug, Clone)]
+pub struct LayerChoice {
+    pub layer: String,
+    pub kind: CompressionKind,
+    pub ratio: f32,
+}
+
+/// The output of the greedy search: what to compress and how much.
+#[derive(Debug, Clone)]
+pub struct CompressionPlan {
+    /// Requested compressed/original MAC budget (e.g. 0.5).
+    pub target_ratio: f32,
+    pub choices: Vec<LayerChoice>,
+}
+
+/// One evaluated (kind, ratio) candidate of a layer's sensitivity curve.
+#[derive(Debug, Clone)]
+pub struct CandidatePoint {
+    pub kind: CompressionKind,
+    pub ratio: f32,
+    /// Eval score of the model with only this layer compressed.
+    pub score: f32,
+    /// Whole-graph MACs of that single-layer-compressed model.
+    pub macs: u64,
+}
+
+/// Per-layer sensitivity curve.
+#[derive(Debug, Clone)]
+pub struct LayerSensitivity {
+    pub layer: String,
+    pub points: Vec<CandidatePoint>,
+}
+
+/// Search configuration.
+#[derive(Debug, Clone)]
+pub struct SearchOptions {
+    /// Compressed/original MAC budget to hit (0 < r < 1).
+    pub target_ratio: f32,
+    /// Per-layer candidate compression ratios to probe (all < 1.0; 1.0 is
+    /// implicitly "leave the layer alone").
+    pub candidate_ratios: Vec<f32>,
+}
+
+impl Default for SearchOptions {
+    fn default() -> Self {
+        SearchOptions {
+            target_ratio: 0.5,
+            candidate_ratios: vec![0.375, 0.5, 0.75],
+        }
+    }
+}
+
+/// The search result: the plan plus everything needed for reports.
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    pub plan: CompressionPlan,
+    pub sensitivity: Vec<LayerSensitivity>,
+    pub base_score: f32,
+    pub base_macs: u64,
+    /// First-order greedy estimate of the compressed model's MACs (adds
+    /// per-layer savings; optimistic when savings overlap).
+    pub estimated_macs: u64,
+    /// Exact MACs of the jointly-applied plan, verified during selection.
+    pub achieved_macs: u64,
+    /// The eval-score floor the selection settled on.
+    pub score_floor: f32,
+}
+
+/// Run sensitivity analysis + greedy per-layer ratio selection.
+///
+/// `eval` scores a candidate graph (higher is better — the task metric);
+/// it is called from pool workers, so it must be pure w.r.t. its input.
+pub fn greedy_plan(
+    g: &Graph,
+    calib: &[Tensor],
+    input_shape: &[usize],
+    eval: &(dyn Fn(&Graph) -> f32 + Sync),
+    opts: &SearchOptions,
+) -> SearchOutcome {
+    let base_macs = g.macs(input_shape);
+    let base_score = eval(g);
+
+    // Enumerate (layer, kind, ratio) candidates.
+    let mut cands: Vec<(String, CompressionKind, f32)> = Vec::new();
+    for name in svd_candidates(g) {
+        for &r in &opts.candidate_ratios {
+            cands.push((name.clone(), CompressionKind::SpatialSvd, r));
+        }
+    }
+    for c in find_prune_candidates(g) {
+        let name = g.nodes[c.producer].name.clone();
+        for &r in &opts.candidate_ratios {
+            cands.push((name.clone(), CompressionKind::ChannelPrune, r));
+        }
+    }
+
+    // Evaluate every candidate in parallel: each builds a one-layer
+    // compressed clone and scores it.
+    let points: Vec<Option<(String, CandidatePoint)>> =
+        parallel_map(cands.len(), 1, |i| {
+            let (name, kind, ratio) = &cands[i];
+            let mut g2 = g.clone();
+            let applied = match kind {
+                CompressionKind::SpatialSvd => {
+                    svd_apply(&mut g2, name, *ratio, input_shape).is_some()
+                }
+                CompressionKind::ChannelPrune => {
+                    prune_channels(&mut g2, name, *ratio, calib).is_some()
+                }
+            };
+            if !applied {
+                return None;
+            }
+            let macs = g2.macs(input_shape);
+            if macs >= base_macs {
+                // Not actually cheaper (tiny layer, rank floor) — useless
+                // as a compression move.
+                return None;
+            }
+            let score = eval(&g2);
+            if !score.is_finite() {
+                // A blown-up candidate (e.g. a degenerate refit) must not
+                // poison the floor sweep.
+                return None;
+            }
+            Some((
+                name.clone(),
+                CandidatePoint {
+                    kind: *kind,
+                    ratio: *ratio,
+                    score,
+                    macs,
+                },
+            ))
+        });
+
+    // Group into per-layer curves (insertion order = topological).
+    let mut sensitivity: Vec<LayerSensitivity> = Vec::new();
+    for (name, p) in points.into_iter().flatten() {
+        match sensitivity.iter_mut().find(|s| s.layer == name) {
+            Some(s) => s.points.push(p),
+            None => sensitivity.push(LayerSensitivity {
+                layer: name,
+                points: vec![p],
+            }),
+        }
+    }
+
+    // Selection: sweep the score floor downward over observed scores.
+    let target = (opts.target_ratio as f64 * base_macs as f64) as u64;
+    let mut floors: Vec<f32> = sensitivity
+        .iter()
+        .flat_map(|s| s.points.iter().map(|p| p.score))
+        .collect();
+    floors.push(base_score);
+    floors.sort_by(|a, b| b.total_cmp(a));
+    floors.dedup();
+
+    let select = |floor: f32| -> (Vec<LayerChoice>, u64) {
+        let mut choices = Vec::new();
+        let mut saved = 0u64;
+        for s in &sensitivity {
+            if let Some(best) = s
+                .points
+                .iter()
+                .filter(|p| p.score >= floor)
+                .max_by_key(|p| base_macs - p.macs)
+            {
+                choices.push(LayerChoice {
+                    layer: s.layer.clone(),
+                    kind: best.kind,
+                    ratio: best.ratio,
+                });
+                saved += base_macs - best.macs;
+            }
+        }
+        (choices, base_macs.saturating_sub(saved))
+    };
+
+    // Per-layer savings overlap when a prune also shrinks a later chosen
+    // layer, so the additive estimate is a lower bound on the joint MAC
+    // count. Floors whose *estimate* misses the budget are skipped
+    // outright; the first floor whose estimate fits is verified against
+    // the exact MACs of the jointly-applied plan (structure-only: same
+    // shapes, no reconstruction cost), descending further if the overlap
+    // pushed it over budget.
+    let actual_macs = |choices: &[LayerChoice]| -> u64 {
+        super::apply_choices(g, choices, calib, input_shape, false)
+            .0
+            .macs(input_shape)
+    };
+    let mut chosen = None;
+    for &floor in &floors {
+        let (choices, est) = select(floor);
+        if est > target {
+            continue;
+        }
+        let actual = actual_macs(&choices);
+        if actual <= target {
+            chosen = Some((floor, choices, est, actual));
+            break;
+        }
+    }
+    let (score_floor, choices, estimated_macs, achieved_macs) = chosen.unwrap_or_else(|| {
+        // Even maximum compression misses the budget: take it anyway.
+        let (choices, est) = select(f32::NEG_INFINITY);
+        let actual = actual_macs(&choices);
+        (f32::NEG_INFINITY, choices, est, actual)
+    });
+
+    SearchOutcome {
+        plan: CompressionPlan {
+            target_ratio: opts.target_ratio,
+            choices,
+        },
+        sensitivity,
+        base_score,
+        base_macs,
+        estimated_macs,
+        achieved_macs,
+        score_floor,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zoo;
+
+    #[test]
+    fn greedy_meets_budget_on_mobimini() {
+        let g = zoo::build("mobimini", 11).unwrap();
+        let ds = crate::data::SynthImageNet::new(12);
+        let calib: Vec<Tensor> = (0..2).map(|i| ds.batch(i, 4).0).collect();
+        let (xe, _) = ds.batch(100, 8);
+        // A cheap smooth proxy score: negative output distortion vs FP32.
+        let y0 = g.forward(&xe);
+        let eval = move |g2: &Graph| -> f32 { -g2.forward(&xe).sq_err(&y0) };
+        let opts = SearchOptions {
+            target_ratio: 0.5,
+            candidate_ratios: vec![0.5, 0.75],
+        };
+        let out = greedy_plan(&g, &calib, &[1, 3, 32, 32], &eval, &opts);
+        assert!(!out.plan.choices.is_empty());
+        assert!(
+            out.achieved_macs as f64 <= 0.5 * out.base_macs as f64,
+            "achieved {} vs base {}",
+            out.achieved_macs,
+            out.base_macs
+        );
+        assert!(out.estimated_macs <= out.achieved_macs);
+        // Sensitivity curves are grouped per layer with ≤ 2 kinds × 2
+        // ratios each.
+        for s in &out.sensitivity {
+            assert!(!s.points.is_empty() && s.points.len() <= 4, "{}", s.layer);
+        }
+    }
+}

@@ -1,0 +1,419 @@
+//! SVD-based structured compression.
+//!
+//! * **Spatial SVD** for `Conv2d`: the k_h×k_w kernel tensor is matricized
+//!   as [I·k_h, O·k_w] and factored through its SVD; truncating to rank R
+//!   replaces the conv with a k_h×1 conv (I→R, vertical stride/pad) feeding
+//!   a 1×k_w conv (R→O, horizontal stride/pad). Function-preserving at full
+//!   rank, MAC-reducing below it. For 1×1 convs this degenerates to the
+//!   classic weight SVD (I→R→O pointwise pair).
+//! * **Low-rank factorization** for `Linear`: W[O,F] ≈ U[O,R]·V[R,F], i.e.
+//!   two stacked Linears.
+//!
+//! The SVD itself is a one-sided Jacobi (cyclic column orthogonalization):
+//! deterministic, dependency-free, and accurate to float precision on the
+//! small matrices that arise here (≤ a few hundred on a side), which is
+//! what lets the rank-preserving factorization round-trip within 1e-4.
+
+use crate::graph::{Graph, Input, Op};
+use crate::tensor::{Conv2dSpec, Tensor};
+
+/// Thin SVD of `m` ([rows, cols]): returns `(u, s, v)` with
+/// `u` [rows, r], `s` [r] descending, `v` [cols, r], r = min(rows, cols),
+/// such that `m ≈ u · diag(s) · vᵀ`.
+pub fn svd_thin(m: &Tensor) -> (Tensor, Vec<f32>, Tensor) {
+    assert_eq!(m.rank(), 2);
+    let (rows, cols) = (m.dim(0), m.dim(1));
+    if rows < cols {
+        // SVD(Mᵀ) = (V, S, U).
+        let (v, s, u) = svd_thin(&m.transpose2());
+        return (u, s, v);
+    }
+    // Store the columns of M as contiguous rows (a = Mᵀ) so the Jacobi
+    // rotations mix cache-friendly slices.
+    let mut a: Vec<Vec<f64>> = (0..cols)
+        .map(|j| (0..rows).map(|i| m.data()[i * cols + j] as f64).collect())
+        .collect();
+    // Accumulated right-rotation J (columns stored as rows): M·J = A_final.
+    let mut v: Vec<Vec<f64>> = (0..cols)
+        .map(|j| {
+            let mut e = vec![0.0f64; cols];
+            e[j] = 1.0;
+            e
+        })
+        .collect();
+    let tol = 1e-12f64;
+    for _sweep in 0..40 {
+        let mut rotated = false;
+        for p in 0..cols {
+            for q in p + 1..cols {
+                let (mut alpha, mut beta, mut gamma) = (0.0f64, 0.0f64, 0.0f64);
+                for i in 0..rows {
+                    alpha += a[p][i] * a[p][i];
+                    beta += a[q][i] * a[q][i];
+                    gamma += a[p][i] * a[q][i];
+                }
+                if gamma.abs() <= tol * (alpha * beta).sqrt() || alpha == 0.0 || beta == 0.0 {
+                    continue;
+                }
+                rotated = true;
+                let zeta = (beta - alpha) / (2.0 * gamma);
+                let t = zeta.signum() / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..rows {
+                    let (ap, aq) = (a[p][i], a[q][i]);
+                    a[p][i] = c * ap - s * aq;
+                    a[q][i] = s * ap + c * aq;
+                }
+                for i in 0..cols {
+                    let (vp, vq) = (v[p][i], v[q][i]);
+                    v[p][i] = c * vp - s * vq;
+                    v[q][i] = s * vp + c * vq;
+                }
+            }
+        }
+        if !rotated {
+            break;
+        }
+    }
+    // Singular values are the column norms; sort descending.
+    let mut order: Vec<usize> = (0..cols).collect();
+    let norms: Vec<f64> = a
+        .iter()
+        .map(|col| col.iter().map(|x| x * x).sum::<f64>().sqrt())
+        .collect();
+    order.sort_by(|&i, &j| norms[j].total_cmp(&norms[i]));
+    let r = cols; // rows >= cols here
+    let mut u = vec![0.0f32; rows * r];
+    let mut s = vec![0.0f32; r];
+    let mut vt = vec![0.0f32; cols * r];
+    for (jj, &j) in order.iter().enumerate() {
+        let sigma = norms[j];
+        s[jj] = sigma as f32;
+        if sigma > 1e-30 {
+            for i in 0..rows {
+                u[i * r + jj] = (a[j][i] / sigma) as f32;
+            }
+        }
+        for i in 0..cols {
+            vt[i * r + jj] = v[j][i] as f32;
+        }
+    }
+    (Tensor::new(&[rows, r], u), s, Tensor::new(&[cols, r], vt))
+}
+
+/// Rank that keeps the factored spatial-SVD MAC count within `ratio` of the
+/// original conv's. Per output row the original costs `O·I·k_h·k_w·out_w`
+/// MACs while the factor pair costs `R·(I·k_h·mid_w + O·k_w·out_w)` — the
+/// vertical factor runs at the *input* width `mid_w` because horizontal
+/// stride belongs to the second factor. `ratio ≥ 1` requests the lossless
+/// full rank.
+pub fn spatial_svd_rank(
+    o: usize,
+    i: usize,
+    kh: usize,
+    kw: usize,
+    mid_w: usize,
+    out_w: usize,
+    ratio: f32,
+) -> usize {
+    let full = (i * kh).min(o * kw);
+    if ratio >= 1.0 {
+        return full;
+    }
+    let orig = (o * i * kh * kw * out_w) as f64;
+    let per_rank = (i * kh * mid_w + o * kw * out_w) as f64;
+    let r = (ratio as f64 * orig / per_rank).floor() as usize;
+    r.clamp(1, full)
+}
+
+/// Rank that keeps `R·(O + F) ≤ ratio·O·F` for a Linear low-rank pair.
+pub fn low_rank_linear_rank(o: usize, f: usize, ratio: f32) -> usize {
+    let full = o.min(f);
+    if ratio >= 1.0 {
+        return full;
+    }
+    let r = (ratio as f64 * (o * f) as f64 / (o + f) as f64).floor() as usize;
+    r.clamp(1, full)
+}
+
+/// Factor a conv weight [O,I,kh,kw] at `rank` into the vertical factor
+/// [R,I,kh,1] and the horizontal factor [O,R,1,kw].
+pub fn spatial_svd_factors(weight: &Tensor, rank: usize) -> (Tensor, Tensor) {
+    let (o, i, kh, kw) = (weight.dim(0), weight.dim(1), weight.dim(2), weight.dim(3));
+    let rows = i * kh;
+    let cols = o * kw;
+    // M[(i·kh + y), (o·kw + x)] = W[o, i, y, x].
+    let mut m = vec![0.0f32; rows * cols];
+    let wd = weight.data();
+    for oi in 0..o {
+        for ii in 0..i {
+            for y in 0..kh {
+                for x in 0..kw {
+                    m[(ii * kh + y) * cols + (oi * kw + x)] = wd[((oi * i + ii) * kh + y) * kw + x];
+                }
+            }
+        }
+    }
+    let (u, s, v) = svd_thin(&Tensor::new(&[rows, cols], m));
+    let r = rank.min(s.len()).max(1);
+    let full = s.len();
+    // Split Σ evenly so both factors stay well-scaled for quantization.
+    let mut wv = vec![0.0f32; r * i * kh];
+    for rr in 0..r {
+        let sq = s[rr].max(0.0).sqrt();
+        for ii in 0..i {
+            for y in 0..kh {
+                wv[(rr * i + ii) * kh + y] = u.data()[(ii * kh + y) * full + rr] * sq;
+            }
+        }
+    }
+    let mut wh = vec![0.0f32; o * r * kw];
+    for oi in 0..o {
+        for rr in 0..r {
+            let sq = s[rr].max(0.0).sqrt();
+            for x in 0..kw {
+                wh[(oi * r + rr) * kw + x] = v.data()[(oi * kw + x) * full + rr] * sq;
+            }
+        }
+    }
+    (
+        Tensor::new(&[r, i, kh, 1], wv),
+        Tensor::new(&[o, r, 1, kw], wh),
+    )
+}
+
+/// Factor a Linear weight [O,F] at `rank` into ([R,F], [O,R]).
+pub fn low_rank_linear_factors(weight: &Tensor, rank: usize) -> (Tensor, Tensor) {
+    let (o, f) = (weight.dim(0), weight.dim(1));
+    let (u, s, v) = svd_thin(weight);
+    let r = rank.min(s.len()).max(1);
+    let full = s.len();
+    let mut w1 = vec![0.0f32; r * f];
+    let mut w2 = vec![0.0f32; o * r];
+    for rr in 0..r {
+        let sq = s[rr].max(0.0).sqrt();
+        for fi in 0..f {
+            w1[rr * f + fi] = v.data()[fi * full + rr] * sq;
+        }
+        for oi in 0..o {
+            w2[oi * r + rr] = u.data()[oi * full + rr] * sq;
+        }
+    }
+    (Tensor::new(&[r, f], w1), Tensor::new(&[o, r], w2))
+}
+
+/// What an SVD application did to one layer.
+#[derive(Debug, Clone)]
+pub struct SvdReport {
+    pub rank: usize,
+    pub full_rank: usize,
+}
+
+/// Factor node `name` in place at compression `ratio`. Conv2d becomes a
+/// spatial-SVD pair `{name}.svd_v` + `{name}.svd_h`; Linear becomes a
+/// low-rank pair `{name}.svd_in` + `{name}.svd_out`. Returns `None` for
+/// ineligible nodes (depthwise, activations, missing).
+pub fn svd_apply(
+    g: &mut Graph,
+    name: &str,
+    ratio: f32,
+    input_shape: &[usize],
+) -> Option<SvdReport> {
+    svd_apply_impl(g, name, ratio, input_shape, true)
+}
+
+/// Shape-only variant for MAC accounting: the factor tensors are zeros of
+/// the correct dimensions, skipping the Jacobi SVD entirely. The resulting
+/// graph has exactly the MAC count of the real factorization.
+pub(crate) fn svd_apply_structural(
+    g: &mut Graph,
+    name: &str,
+    ratio: f32,
+    input_shape: &[usize],
+) -> Option<SvdReport> {
+    svd_apply_impl(g, name, ratio, input_shape, false)
+}
+
+fn svd_apply_impl(
+    g: &mut Graph,
+    name: &str,
+    ratio: f32,
+    input_shape: &[usize],
+    with_values: bool,
+) -> Option<SvdReport> {
+    let idx = g.find(name)?;
+    // Copy the layer out first — the surgery below needs `&mut g`.
+    enum Layer {
+        Conv(Tensor, Vec<f32>, Conv2dSpec),
+        Lin(Tensor, Vec<f32>),
+    }
+    let layer = match &g.nodes[idx].op {
+        Op::Conv2d { weight, bias, spec } => Layer::Conv(weight.clone(), bias.clone(), *spec),
+        Op::Linear { weight, bias } => Layer::Lin(weight.clone(), bias.clone()),
+        _ => return None,
+    };
+    match layer {
+        Layer::Conv(weight, bias, spec) => {
+            let (o, i, kh, kw) = (weight.dim(0), weight.dim(1), weight.dim(2), weight.dim(3));
+            let shapes = g.infer_shapes(input_shape);
+            let mid_w = match g.nodes[idx].inputs[0] {
+                Input::Graph => input_shape[3],
+                Input::Node(j) => shapes[j][3],
+            };
+            let out_w = shapes[idx][3];
+            let rank = spatial_svd_rank(o, i, kh, kw, mid_w, out_w, ratio);
+            let full = (i * kh).min(o * kw);
+            let (wv, wh) = if with_values {
+                spatial_svd_factors(&weight, rank)
+            } else {
+                (
+                    Tensor::zeros(&[rank, i, kh, 1]),
+                    Tensor::zeros(&[o, rank, 1, kw]),
+                )
+            };
+            let rank = wv.dim(0);
+            let spec_v = Conv2dSpec::asym(spec.stride_h, 1, spec.pad_h, 0);
+            let spec_h = Conv2dSpec::asym(1, spec.stride_w, 0, spec.pad_w);
+            g.replace_with_sequence(
+                idx,
+                vec![
+                    (
+                        format!("{name}.svd_v"),
+                        Op::Conv2d {
+                            weight: wv,
+                            bias: vec![0.0; rank],
+                            spec: spec_v,
+                        },
+                    ),
+                    (
+                        format!("{name}.svd_h"),
+                        Op::Conv2d {
+                            weight: wh,
+                            bias,
+                            spec: spec_h,
+                        },
+                    ),
+                ],
+            );
+            Some(SvdReport {
+                rank,
+                full_rank: full,
+            })
+        }
+        Layer::Lin(weight, bias) => {
+            let (o, f) = (weight.dim(0), weight.dim(1));
+            let rank = low_rank_linear_rank(o, f, ratio);
+            let (w1, w2) = if with_values {
+                low_rank_linear_factors(&weight, rank)
+            } else {
+                (Tensor::zeros(&[rank, f]), Tensor::zeros(&[o, rank]))
+            };
+            let rank = w1.dim(0);
+            g.replace_with_sequence(
+                idx,
+                vec![
+                    (
+                        format!("{name}.svd_in"),
+                        Op::Linear {
+                            weight: w1,
+                            bias: vec![0.0; rank],
+                        },
+                    ),
+                    (
+                        format!("{name}.svd_out"),
+                        Op::Linear { weight: w2, bias },
+                    ),
+                ],
+            );
+            Some(SvdReport {
+                rank,
+                full_rank: o.min(f),
+            })
+        }
+    }
+}
+
+/// Nodes eligible for [`svd_apply`], in topological order.
+pub fn svd_candidates(g: &Graph) -> Vec<String> {
+    g.nodes
+        .iter()
+        .filter(|n| matches!(n.op, Op::Conv2d { .. } | Op::Linear { .. }))
+        .map(|n| n.name.clone())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn jacobi_svd_reconstructs() {
+        let mut rng = Rng::new(1);
+        for &(m, n) in &[(6usize, 4usize), (4, 6), (9, 9), (1, 5), (12, 3)] {
+            let a = Tensor::randn(&mut rng, &[m, n], 1.0);
+            let (u, s, v) = svd_thin(&a);
+            let r = m.min(n);
+            assert_eq!(u.shape(), &[m, r]);
+            assert_eq!(v.shape(), &[n, r]);
+            // Reconstruct and compare.
+            let mut rec = vec![0.0f32; m * n];
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = 0.0f32;
+                    for k in 0..r {
+                        acc += u.data()[i * r + k] * s[k] * v.data()[j * r + k];
+                    }
+                    rec[i * n + j] = acc;
+                }
+            }
+            let rec = Tensor::new(&[m, n], rec);
+            assert!(a.max_abs_diff(&rec) < 1e-5, "({m},{n}): {}", a.max_abs_diff(&rec));
+            // Descending singular values.
+            for k in 1..r {
+                assert!(s[k] <= s[k - 1] + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn full_rank_factors_reproduce_conv_weight() {
+        let mut rng = Rng::new(2);
+        let w = Tensor::randn(&mut rng, &[4, 3, 3, 3], 0.5);
+        let full = (3 * 3usize).min(4 * 3);
+        let (wv, wh) = spatial_svd_factors(&w, full);
+        // Compose: W'[o,i,y,x] = Σ_r wv[r,i,y,0]·wh[o,r,0,x].
+        let r = wv.dim(0);
+        let mut rec = Tensor::zeros(w.shape());
+        let (o, i, kh, kw) = (4, 3, 3, 3);
+        for oi in 0..o {
+            for ii in 0..i {
+                for y in 0..kh {
+                    for x in 0..kw {
+                        let mut acc = 0.0f32;
+                        for rr in 0..r {
+                            acc += wv.data()[(rr * i + ii) * kh + y]
+                                * wh.data()[(oi * r + rr) * kw + x];
+                        }
+                        rec.data_mut()[((oi * i + ii) * kh + y) * kw + x] = acc;
+                    }
+                }
+            }
+        }
+        assert!(w.max_abs_diff(&rec) < 1e-5, "{}", w.max_abs_diff(&rec));
+    }
+
+    #[test]
+    fn rank_selection_monotone_in_ratio() {
+        let mut last = 0usize;
+        for ratio in [0.25f32, 0.5, 0.75, 1.0] {
+            let r = spatial_svd_rank(16, 16, 3, 3, 8, 8, ratio);
+            assert!(r >= last, "rank not monotone at {ratio}");
+            last = r;
+        }
+        assert_eq!(spatial_svd_rank(16, 16, 3, 3, 8, 8, 1.0), 48);
+        assert_eq!(low_rank_linear_rank(10, 64, 1.0), 10);
+        assert!(low_rank_linear_rank(10, 64, 0.5) * (10 + 64) <= 320);
+    }
+}

@@ -9,13 +9,19 @@
 //! aimet train      --model M [...]     FP32 training (loss curve)
 //! aimet ptq        --model M [...]     fig 4.1 pipeline + eval report
 //! aimet qat        --model M [...]     fig 5.2 pipeline + eval report
-//! aimet debug      --model M           fig 4.5 debugging flow
+//! aimet compress   --model M [...]     greedy SVD/prune search + PTQ compose
+//! aimet debug      [--effort E]         fig 4.5 debugging flow
 //! aimet export     --model M --out D   train + ptq + export encodings (§3.3)
 //! aimet experiment <id>                table4.1|table4.2|table5.1|table5.2|fig4.2|all
 //! aimet runtime    [--run NAME]        list / smoke-run PJRT artifacts
 //! ```
+//!
+//! Parsing is strict: each subcommand declares its accepted flags
+//! ([`command_spec`]) and anything else — unknown flags, missing values,
+//! stray positionals — exits 2 with the valid-flag list.
 
 use super::experiments::{self, Effort};
+use crate::compress::{compress_then_ptq, greedy_plan, SearchOptions};
 use crate::ptq::{standard_ptq_pipeline, PtqOptions};
 use crate::qat::{fit_qat, TrainConfig};
 use crate::quantsim::default_config_json;
@@ -23,47 +29,119 @@ use crate::runtime::{graph_param_tensors, Runtime};
 use crate::task::{evaluate_graph, evaluate_sim, TaskData};
 use crate::{metrics, zoo};
 
-/// Minimal flag parser: `--key value` pairs after the subcommand.
+/// Strict flag parser: `--key value` pairs after the subcommand, checked
+/// against the subcommand's accepted flag list. Unknown flags, flags
+/// missing their value, and unexpected positionals are hard errors that
+/// name the valid flags — silently ignoring a typo like `--tagret-ratio`
+/// would run the wrong experiment.
 struct Args {
     flags: std::collections::BTreeMap<String, String>,
+    positionals: Vec<String>,
 }
 
 impl Args {
-    fn parse(rest: &[String]) -> Args {
+    fn parse(rest: &[String], allowed: &[&str], max_positionals: usize) -> Result<Args, String> {
+        let valid = || {
+            if allowed.is_empty() {
+                "this command takes no flags".to_string()
+            } else {
+                format!(
+                    "valid flags: {}",
+                    allowed
+                        .iter()
+                        .map(|f| format!("--{f}"))
+                        .collect::<Vec<_>>()
+                        .join(" ")
+                )
+            }
+        };
         let mut flags = std::collections::BTreeMap::new();
+        let mut positionals = Vec::new();
         let mut i = 0;
         while i < rest.len() {
             if let Some(key) = rest[i].strip_prefix("--") {
-                let val = rest.get(i + 1).cloned().unwrap_or_default();
-                flags.insert(key.to_string(), val);
-                i += 2;
+                if !allowed.contains(&key) {
+                    return Err(format!("unknown flag --{key}; {}", valid()));
+                }
+                match rest.get(i + 1) {
+                    Some(v) if !v.starts_with("--") => {
+                        flags.insert(key.to_string(), v.clone());
+                        i += 2;
+                    }
+                    _ => return Err(format!("flag --{key} requires a value; {}", valid())),
+                }
             } else {
+                positionals.push(rest[i].clone());
+                if positionals.len() > max_positionals {
+                    return Err(format!(
+                        "unexpected argument `{}`; {}",
+                        rest[i],
+                        valid()
+                    ));
+                }
                 i += 1;
             }
         }
-        Args { flags }
+        Ok(Args { flags, positionals })
     }
 
     fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
 
-    fn model(&self) -> String {
-        self.get("model").unwrap_or("mobimini").to_string()
+    /// The target zoo model — validated, so a typo'd `--model mobimimi`
+    /// errors instead of panicking deep inside `zoo::build(..).unwrap()`.
+    fn model(&self) -> Result<String, String> {
+        let m = self.get("model").unwrap_or("mobimini");
+        if zoo::MODEL_NAMES.contains(&m) {
+            Ok(m.to_string())
+        } else {
+            Err(format!(
+                "unknown model `{m}`; valid models: {}",
+                zoo::MODEL_NAMES.join(" ")
+            ))
+        }
     }
 
-    fn usize_or(&self, key: &str, default: usize) -> usize {
-        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    /// Typed flag lookup. A present-but-unparseable value is an error —
+    /// falling back to the default would silently run the wrong
+    /// configuration, the exact failure the strict parser exists to stop.
+    fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("flag --{key}: cannot parse value `{v}`")),
+        }
     }
 
-    fn f32_or(&self, key: &str, default: f32) -> f32 {
-        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    fn usize_or(&self, key: &str, default: usize) -> Result<usize, String> {
+        self.parse_or(key, default)
     }
 
-    fn effort(&self) -> Effort {
+    fn f32_or(&self, key: &str, default: f32) -> Result<f32, String> {
+        self.parse_or(key, default)
+    }
+
+    fn bool_or(&self, key: &str, default: bool) -> Result<bool, String> {
+        self.parse_or(key, default)
+    }
+
+    /// Optional typed flag: `None` when absent, error when unparseable.
+    fn opt<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, String> {
+        self.get(key)
+            .map(|v| {
+                v.parse()
+                    .map_err(|_| format!("flag --{key}: cannot parse value `{v}`"))
+            })
+            .transpose()
+    }
+
+    fn effort(&self) -> Result<Effort, String> {
         match self.get("effort") {
-            Some("full") => Effort::Full,
-            _ => Effort::Fast,
+            None | Some("fast") => Ok(Effort::Fast),
+            Some("full") => Ok(Effort::Full),
+            Some(v) => Err(format!("flag --effort: expected fast|full, got `{v}`")),
         }
     }
 }
@@ -75,14 +153,44 @@ USAGE: aimet <command> [--flags]
 COMMANDS
   models                         list available zoo models
   config                         print the default runtime-config JSON (fig 3.4)
-  train   --model M [--steps N --lr F --effort fast|full]
-  ptq     --model M [--adaround true --effort fast|full]
-  qat     --model M [--steps N --effort fast|full]
-  debug   --model M [--effort fast|full]
-  export  --model M --out DIR
+  train    --model M [--steps N --lr F --effort fast|full]
+  ptq      --model M [--adaround true --effort fast|full]
+  qat      --model M [--steps N --effort fast|full]
+  compress --model M [--target-ratio F --effort fast|full]
+                                 greedy spatial-SVD/channel-prune search to a
+                                 MAC budget, then compress -> BN fold -> CLE ->
+                                 quantize
+  debug    [--effort fast|full]
+  export   --model M --out DIR
   experiment <table4.1|table4.2|table5.1|table5.2|fig4.2|debug|all>
-  runtime [--dir D --run NAME]   list / smoke-run the PJRT artifacts
+  runtime  [--dir D --run NAME]  list / smoke-run the PJRT artifacts
 ";
+
+/// Accepted `--flags` (and positional budget) per subcommand — the strict
+/// parser rejects anything outside this table.
+fn command_spec(cmd: &str) -> Option<(&'static [&'static str], usize)> {
+    Some(match cmd {
+        "models" | "config" | "help" | "--help" | "-h" => (&[], 0),
+        "train" => (&["model", "steps", "lr", "effort"], 0),
+        "ptq" => (&["model", "adaround", "adaround-iters", "effort"], 0),
+        "qat" => (&["model", "steps", "lr", "effort"], 0),
+        "compress" => (
+            &[
+                "model",
+                "target-ratio",
+                "effort",
+                "calib-batches",
+                "eval-batches",
+            ],
+            0,
+        ),
+        "debug" => (&["effort"], 0),
+        "export" => (&["model", "out", "effort"], 0),
+        "experiment" => (&["effort"], 1),
+        "runtime" => (&["dir", "run"], 0),
+        _ => return None,
+    })
+}
 
 /// Entry point for `aimet` (called from `rust/src/main.rs`).
 pub fn cli_main() {
@@ -97,8 +205,18 @@ pub fn run(argv: &[String]) -> i32 {
         print!("{USAGE}");
         return 2;
     };
-    let args = Args::parse(&argv[1..]);
-    match cmd.as_str() {
+    let Some((allowed, max_pos)) = command_spec(cmd) else {
+        eprintln!("unknown command: {cmd}\n{USAGE}");
+        return 2;
+    };
+    let args = match Args::parse(&argv[1..], allowed, max_pos) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{cmd}: {e}");
+            return 2;
+        }
+    };
+    let result: Result<i32, String> = match cmd.as_str() {
         "models" => {
             for m in zoo::MODEL_NAMES {
                 let g = zoo::build(m, 1).unwrap();
@@ -109,34 +227,47 @@ pub fn run(argv: &[String]) -> i32 {
                     metrics::metric_name(m)
                 );
             }
-            0
+            Ok(0)
         }
         "config" => {
             println!("{}", default_config_json());
-            0
+            Ok(0)
         }
         "train" => cmd_train(&args),
         "ptq" => cmd_ptq(&args),
         "qat" => cmd_qat(&args),
+        "compress" => cmd_compress(&args),
         "debug" => cmd_debug(&args),
         "export" => cmd_export(&args),
-        "experiment" => cmd_experiment(argv.get(1).map(|s| s.as_str()).unwrap_or("all"), &args),
+        "experiment" => cmd_experiment(
+            args.positionals.first().map(|s| s.as_str()).unwrap_or("all"),
+            &args,
+        ),
         "runtime" => cmd_runtime(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
-            0
+            Ok(0)
         }
-        other => {
-            eprintln!("unknown command: {other}\n{USAGE}");
+        _ => unreachable!("command_spec gated"),
+    };
+    match result {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("{cmd}: {e}");
             2
         }
     }
 }
 
-fn cmd_train(args: &Args) -> i32 {
-    let model = args.model();
-    let effort = args.effort();
-    let (g, data, log) = experiments::trained_model(&model, effort, 1234);
+fn cmd_train(args: &Args) -> Result<i32, String> {
+    let model = args.model()?;
+    let effort = args.effort()?;
+    let steps = args.opt("steps")?;
+    if steps == Some(0) {
+        return Err("flag --steps: must be >= 1".to_string());
+    }
+    let (g, data, log) =
+        experiments::trained_model_with(&model, effort, 1234, steps, args.opt("lr")?);
     println!("{}", log.render());
     let metric = evaluate_graph(&g, &model, &data, 6, 16);
     println!(
@@ -145,20 +276,20 @@ fn cmd_train(args: &Args) -> i32 {
         metrics::metric_name(&model),
         metric
     );
-    0
+    Ok(0)
 }
 
-fn cmd_ptq(args: &Args) -> i32 {
-    let model = args.model();
-    let effort = args.effort();
+fn cmd_ptq(args: &Args) -> Result<i32, String> {
+    let model = args.model()?;
+    let effort = args.effort()?;
+    let mut opts = PtqOptions::default();
+    if args.bool_or("adaround", false)? {
+        opts.use_adaround = true;
+        opts.adaround.iterations = args.usize_or("adaround-iters", 300)?;
+    }
     let (g, data, _) = experiments::trained_model(&model, effort, 1234);
     let fp32 = evaluate_graph(&g, &model, &data, 6, 16);
     let calib = data.calibration(4, 16);
-    let mut opts = PtqOptions::default();
-    if args.get("adaround") == Some("true") {
-        opts.use_adaround = true;
-        opts.adaround.iterations = args.usize_or("adaround-iters", 300);
-    }
     let out = standard_ptq_pipeline(&g, &calib, &opts);
     for line in &out.log {
         println!("ptq: {line}");
@@ -168,12 +299,14 @@ fn cmd_ptq(args: &Args) -> i32 {
         "{model}: FP32 {fp32:.2} -> W8/A8 PTQ {q:.2} ({})",
         metrics::metric_name(&model)
     );
-    0
+    Ok(0)
 }
 
-fn cmd_qat(args: &Args) -> i32 {
-    let model = args.model();
-    let effort = args.effort();
+fn cmd_qat(args: &Args) -> Result<i32, String> {
+    let model = args.model()?;
+    let effort = args.effort()?;
+    let steps = args.usize_or("steps", 120)?;
+    let lr = args.f32_or("lr", 0.01)?;
     let (g, data, _) = experiments::trained_model(&model, effort, 1234);
     let fp32 = evaluate_graph(&g, &model, &data, 6, 16);
     let calib = data.calibration(4, 16);
@@ -181,8 +314,8 @@ fn cmd_qat(args: &Args) -> i32 {
     let ptq = evaluate_sim(&out.sim, &model, &data, 6, 16);
     let mut sim = out.sim;
     let cfg = TrainConfig {
-        steps: args.usize_or("steps", 120),
-        lr: args.f32_or("lr", 0.01),
+        steps,
+        lr,
         ..Default::default()
     };
     let log = fit_qat(&mut sim, &model, &data, &cfg);
@@ -192,20 +325,85 @@ fn cmd_qat(args: &Args) -> i32 {
         "{model}: FP32 {fp32:.2} | PTQ {ptq:.2} | QAT {qat:.2} ({})",
         metrics::metric_name(&model)
     );
-    0
+    Ok(0)
 }
 
-fn cmd_debug(args: &Args) -> i32 {
-    let _ = args;
-    let report = experiments::debug_flow_demo(args.effort());
+fn cmd_compress(args: &Args) -> Result<i32, String> {
+    let model = args.model()?;
+    let target = args.f32_or("target-ratio", 0.5)?;
+    if !(target > 0.0 && target < 1.0) {
+        return Err(format!("--target-ratio must be in (0, 1), got {target}"));
+    }
+    let effort = args.effort()?;
+    let calib_batches = args.usize_or("calib-batches", 4)?;
+    let eval_batches = args.usize_or("eval-batches", 3)?;
+    let (g, data, _) = experiments::trained_model(&model, effort, 1234);
+    let mut input_shape = vec![1usize];
+    input_shape.extend(zoo::input_shape(&model).unwrap());
+    let calib = data.calibration(calib_batches, 16);
+    let fp32 = evaluate_graph(&g, &model, &data, 6, 16);
+
+    // Greedy per-layer ratio search (candidates scored on the pool).
+    let eval = |g2: &crate::graph::Graph| evaluate_graph(g2, &model, &data, eval_batches, 16);
+    let opts = SearchOptions {
+        target_ratio: target,
+        ..Default::default()
+    };
+    let outcome = greedy_plan(&g, &calib, &input_shape, &eval, &opts);
+    println!(
+        "sensitivity: {} layers x {:?} ratios (baseline {} = {:.2}, {} MACs)",
+        outcome.sensitivity.len(),
+        opts.candidate_ratios,
+        metrics::metric_name(&model),
+        outcome.base_score,
+        outcome.base_macs
+    );
+    for s in &outcome.sensitivity {
+        let pts: Vec<String> = s
+            .points
+            .iter()
+            .map(|p| format!("{}@{:.3}:{:.2}", p.kind.label(), p.ratio, p.score))
+            .collect();
+        println!("  {:<14} {}", s.layer, pts.join("  "));
+    }
+    for c in &outcome.plan.choices {
+        println!("plan: {} {} @ ratio {:.3}", c.kind.label(), c.layer, c.ratio);
+    }
+
+    // Apply + quantize (compress -> BN fold -> CLE -> quantize).
+    let (res, ptq) = compress_then_ptq(
+        &g,
+        &outcome.plan,
+        &calib,
+        &input_shape,
+        &PtqOptions::default(),
+    );
+    for line in &res.log {
+        println!("compress: {line}");
+    }
+    for line in &ptq.log {
+        println!("ptq: {line}");
+    }
+    let compressed = evaluate_graph(&res.graph, &model, &data, 6, 16);
+    let quantized = evaluate_sim(&ptq.sim, &model, &data, 6, 16);
+    println!(
+        "{model}: FP32 {fp32:.2} | compressed {compressed:.2} ({:.1}% MACs) | compressed+PTQ {quantized:.2} ({})",
+        100.0 * res.mac_ratio(),
+        metrics::metric_name(&model)
+    );
+    Ok(0)
+}
+
+fn cmd_debug(args: &Args) -> Result<i32, String> {
+    let report = experiments::debug_flow_demo(args.effort()?);
     print!("{}", report.render());
-    0
+    Ok(0)
 }
 
-fn cmd_export(args: &Args) -> i32 {
-    let model = args.model();
+fn cmd_export(args: &Args) -> Result<i32, String> {
+    let model = args.model()?;
     let out_dir = std::path::PathBuf::from(args.get("out").unwrap_or("./exported"));
-    let (g, data, _) = experiments::trained_model(&model, args.effort(), 1234);
+    let (g, data, _) = experiments::trained_model(&model, args.effort()?, 1234);
     let calib = data.calibration(4, 16);
     let out = standard_ptq_pipeline(&g, &calib, &PtqOptions::default());
     match out.sim.export(&out_dir, &model) {
@@ -216,17 +414,26 @@ fn cmd_export(args: &Args) -> i32 {
                 model,
                 model
             );
-            0
+            Ok(0)
         }
         Err(e) => {
             eprintln!("export failed: {e:#}");
-            1
+            Ok(1)
         }
     }
 }
 
-fn cmd_experiment(id: &str, args: &Args) -> i32 {
-    let effort = args.effort();
+fn cmd_experiment(id: &str, args: &Args) -> Result<i32, String> {
+    let effort = args.effort()?;
+    const IDS: [&str; 8] = [
+        "table4.1", "table4.2", "table5.1", "table5.2", "fig4.2", "fig4.3", "debug", "fig4.5",
+    ];
+    if id != "all" && !IDS.contains(&id) {
+        return Err(format!(
+            "unknown experiment `{id}`; valid: {} all",
+            IDS.join(" ")
+        ));
+    }
     let run_one = |id: &str| match id {
         "table4.1" => print!("{}", experiments::render_table_4_1(&experiments::table_4_1(effort))),
         "table4.2" => print!("{}", experiments::render_table_4_2(&experiments::table_4_2(effort))),
@@ -236,7 +443,7 @@ fn cmd_experiment(id: &str, args: &Args) -> i32 {
             print!("{}", experiments::render_fig_4_2_4_3(&experiments::fig_4_2_4_3(effort)))
         }
         "debug" | "fig4.5" => print!("{}", experiments::debug_flow_demo(effort).render()),
-        other => eprintln!("unknown experiment {other}"),
+        other => unreachable!("validated above: {other}"),
     };
     if id == "all" {
         for id in ["table4.1", "table4.2", "table5.1", "table5.2", "fig4.2", "debug"] {
@@ -247,10 +454,10 @@ fn cmd_experiment(id: &str, args: &Args) -> i32 {
     } else {
         run_one(id);
     }
-    0
+    Ok(0)
 }
 
-fn cmd_runtime(args: &Args) -> i32 {
+fn cmd_runtime(args: &Args) -> Result<i32, String> {
     let dir = args
         .get("dir")
         .map(std::path::PathBuf::from)
@@ -260,24 +467,31 @@ fn cmd_runtime(args: &Args) -> i32 {
             "no artifacts at {} — run `make artifacts` first",
             dir.display()
         );
-        return 1;
+        return Ok(1);
     }
     let mut rt = match Runtime::open(&dir) {
         Ok(rt) => rt,
         Err(e) => {
             eprintln!("runtime open failed: {e:#}");
-            return 1;
+            return Ok(1);
         }
     };
     if let Some(name) = args.get("run").map(str::to_string) {
         // Smoke-run a forward program with zoo weights + a synthetic batch.
         let Some(model) = name.strip_suffix("_fwd").map(str::to_string) else {
             eprintln!("--run expects a *_fwd program");
-            return 2;
+            return Ok(2);
         };
-        let g = zoo::build(&model, 1234).unwrap();
+        let Some(g) = zoo::build(&model, 1234) else {
+            return Err(format!(
+                "unknown model `{model}` in --run {name}; valid models: {}",
+                zoo::MODEL_NAMES.join(" ")
+            ));
+        };
         let data = TaskData::new(&model, 7);
-        let spec = rt.spec(&name).expect("program in manifest").clone();
+        let Some(spec) = rt.spec(&name).cloned() else {
+            return Err(format!("program `{name}` not in the artifacts manifest"));
+        };
         let batch = spec.inputs.last().unwrap()[0];
         let (x, _) = data.batch(0, batch);
         let mut inputs = graph_param_tensors(&g);
@@ -288,11 +502,11 @@ fn cmd_runtime(args: &Args) -> i32 {
                     "{name}: ok, output shapes {:?}",
                     outs.iter().map(|t| t.shape().to_vec()).collect::<Vec<_>>()
                 );
-                0
+                Ok(0)
             }
             Err(e) => {
                 eprintln!("{name} failed: {e:#}");
-                1
+                Ok(1)
             }
         }
     } else {
@@ -306,7 +520,7 @@ fn cmd_runtime(args: &Args) -> i32 {
                 p.desc
             );
         }
-        0
+        Ok(0)
     }
 }
 
@@ -337,10 +551,75 @@ mod tests {
 
     #[test]
     fn flag_parser_handles_pairs() {
-        let a = Args::parse(&sv(&["--model", "resmini", "--steps", "42"]));
-        assert_eq!(a.model(), "resmini");
-        assert_eq!(a.usize_or("steps", 0), 42);
-        assert_eq!(a.usize_or("missing", 7), 7);
-        assert_eq!(a.f32_or("lr", 0.5), 0.5);
+        let a = Args::parse(
+            &sv(&["--model", "resmini", "--steps", "42"]),
+            &["model", "steps", "lr"],
+            0,
+        )
+        .unwrap();
+        assert_eq!(a.model().unwrap(), "resmini");
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 42);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+        assert_eq!(a.f32_or("lr", 0.5).unwrap(), 0.5);
+        assert_eq!(a.opt::<usize>("steps").unwrap(), Some(42));
+        assert_eq!(a.opt::<f32>("lr").unwrap(), None);
+    }
+
+    #[test]
+    fn malformed_flag_values_are_errors_not_defaults() {
+        let a = Args::parse(
+            &sv(&["--steps", "4x2", "--lr", "0,5", "--effort", "ful"]),
+            &["steps", "lr", "effort"],
+            0,
+        )
+        .unwrap();
+        assert!(a.usize_or("steps", 0).is_err());
+        assert!(a.f32_or("lr", 0.5).is_err());
+        assert!(a.effort().is_err());
+        // Through the dispatcher: exit 2, never a silent default-config run.
+        assert_eq!(run(&sv(&["compress", "--target-ratio", "0,5"])), 2);
+        assert_eq!(run(&sv(&["qat", "--steps", "many"])), 2);
+        assert_eq!(run(&sv(&["debug", "--effort", "ful"])), 2);
+        // Model-name typos error cleanly instead of panicking in zoo::build.
+        assert_eq!(run(&sv(&["ptq", "--model", "mobimimi"])), 2);
+        assert_eq!(run(&sv(&["train", "--model", "resmini", "--steps", "0"])), 2);
+        // Experiment-id typos exit 2 instead of printing-and-succeeding.
+        assert_eq!(run(&sv(&["experiment", "tabel4.1"])), 2);
+    }
+
+    #[test]
+    fn unknown_flag_is_an_error_listing_valid_flags() {
+        let err = Args::parse(&sv(&["--tagret-ratio", "0.5"]), &["target-ratio"], 0)
+            .unwrap_err();
+        assert!(err.contains("unknown flag --tagret-ratio"), "{err}");
+        assert!(err.contains("--target-ratio"), "{err}");
+        // And through the dispatcher: exit code 2, not a silent default run.
+        assert_eq!(run(&sv(&["compress", "--tagret-ratio", "0.5"])), 2);
+        assert_eq!(run(&sv(&["train", "--model", "resmini", "--bogus", "1"])), 2);
+    }
+
+    #[test]
+    fn stray_positionals_are_rejected() {
+        let err = Args::parse(&sv(&["resmini"]), &["model"], 0).unwrap_err();
+        assert!(err.contains("unexpected argument `resmini`"), "{err}");
+        assert_eq!(run(&sv(&["ptq", "resmini"])), 2);
+        // `experiment` accepts exactly one positional.
+        assert!(Args::parse(&sv(&["table4.1"]), &["effort"], 1).is_ok());
+        let err = Args::parse(&sv(&["table4.1", "extra"]), &["effort"], 1).unwrap_err();
+        assert!(err.contains("unexpected argument `extra`"), "{err}");
+    }
+
+    #[test]
+    fn flag_missing_value_is_an_error() {
+        let err = Args::parse(&sv(&["--model"]), &["model"], 0).unwrap_err();
+        assert!(err.contains("requires a value"), "{err}");
+        let err =
+            Args::parse(&sv(&["--model", "--steps", "3"]), &["model", "steps"], 0).unwrap_err();
+        assert!(err.contains("--model requires a value"), "{err}");
+    }
+
+    #[test]
+    fn compress_rejects_out_of_range_target() {
+        assert_eq!(run(&sv(&["compress", "--target-ratio", "1.5"])), 2);
     }
 }

@@ -76,6 +76,18 @@ const EVAL_BATCH: usize = 16;
 /// quantization cannot survive but CLE can undo. DESIGN.md §3 documents
 /// the substitution.
 pub fn trained_model(model: &str, effort: Effort, seed: u64) -> (Graph, TaskData, TrainLog) {
+    trained_model_with(model, effort, seed, None, None)
+}
+
+/// [`trained_model`] with explicit step/LR overrides (the CLI's `train
+/// --steps/--lr` flags; `None` keeps the per-model defaults below).
+pub fn trained_model_with(
+    model: &str,
+    effort: Effort,
+    seed: u64,
+    steps_override: Option<usize>,
+    lr_override: Option<f32>,
+) -> (Graph, TaskData, TrainLog) {
     let mut g = zoo::build(model, seed).unwrap();
     let data = TaskData::new(model, seed + 1);
     // Per-model budgets: the detector's objectness head needs far more
@@ -87,6 +99,8 @@ pub fn trained_model(model: &str, effort: Effort, seed: u64) -> (Graph, TaskData
         ("speechmini", _) => (effort.train_steps(), 0.15),
         _ => (effort.train_steps(), 0.05),
     };
+    let steps = steps_override.unwrap_or(steps);
+    let lr = lr_override.unwrap_or(lr);
     let cfg = TrainConfig {
         steps,
         lr,

@@ -263,6 +263,157 @@ impl Graph {
         }
     }
 
+    /// Replace node `idx` with a linear sequence of new nodes: the first
+    /// takes over the old node's inputs, each subsequent node consumes its
+    /// predecessor, and every consumer of `idx` (plus `output`, if it was
+    /// `idx`) is rewired to the last node of the sequence. Later node
+    /// indices shift up by `seq.len() - 1`. Returns the index range of the
+    /// inserted sequence.
+    ///
+    /// This is the structural primitive of the compression subsystem: a
+    /// spatial-SVD factorization swaps one conv for a k×1 + 1×k pair, a
+    /// low-rank Linear becomes two Linears.
+    pub fn replace_with_sequence(&mut self, idx: usize, seq: Vec<(String, Op)>) -> (usize, usize) {
+        assert!(idx < self.nodes.len());
+        assert!(!seq.is_empty(), "replacement sequence must be non-empty");
+        for (k, (name, _)) in seq.iter().enumerate() {
+            debug_assert!(
+                self.nodes
+                    .iter()
+                    .enumerate()
+                    .all(|(i, n)| i == idx || n.name != *name),
+                "duplicate node name {name}"
+            );
+            debug_assert!(
+                seq[k + 1..].iter().all(|(n2, _)| n2 != name),
+                "duplicate name {name} within replacement sequence"
+            );
+        }
+        let shift = seq.len() - 1;
+        let last = idx + shift;
+        // Remap existing references: consumers of `idx` now consume the
+        // last new node; anything after `idx` shifts up.
+        for node in &mut self.nodes {
+            for input in &mut node.inputs {
+                if let Input::Node(j) = input {
+                    if *j == idx {
+                        *input = Input::Node(last);
+                    } else if *j > idx {
+                        *input = Input::Node(*j + shift);
+                    }
+                }
+            }
+        }
+        if self.output == idx {
+            self.output = last;
+        } else if self.output > idx {
+            self.output += shift;
+        }
+        let old_inputs = std::mem::take(&mut self.nodes[idx].inputs);
+        let new_nodes: Vec<Node> = seq
+            .into_iter()
+            .enumerate()
+            .map(|(k, (name, op))| Node {
+                name,
+                op,
+                inputs: if k == 0 {
+                    old_inputs.clone()
+                } else {
+                    vec![Input::Node(idx + k - 1)]
+                },
+            })
+            .collect();
+        self.nodes.splice(idx..idx + 1, new_nodes);
+        (idx, last)
+    }
+
+    /// Symbolic per-node output shapes at `input_shape` — the same answer
+    /// as [`Graph::output_shapes`] without executing any arithmetic
+    /// (O(nodes) walk over op kinds). The compression search calls this in
+    /// its inner loop, where a real zero-forward per candidate would be
+    /// pure waste.
+    pub fn infer_shapes(&self, input_shape: &[usize]) -> Vec<Vec<usize>> {
+        let mut shapes: Vec<Vec<usize>> = Vec::with_capacity(self.nodes.len());
+        for node in &self.nodes {
+            let ins: Vec<&[usize]> = node
+                .inputs
+                .iter()
+                .map(|i| match i {
+                    Input::Graph => input_shape,
+                    Input::Node(j) => shapes[*j].as_slice(),
+                })
+                .collect();
+            let x = ins[0];
+            let shape = match &node.op {
+                Op::Conv2d { weight, spec, .. } | Op::DepthwiseConv2d { weight, spec, .. } => {
+                    let (kh, kw) = (weight.dim(2), weight.dim(3));
+                    let (oh, ow) = spec.out_hw(x[2], x[3], kh, kw);
+                    vec![x[0], weight.dim(0), oh, ow]
+                }
+                Op::Linear { weight, .. } => {
+                    let mut s = x[..x.len() - 1].to_vec();
+                    s.push(weight.dim(0));
+                    s
+                }
+                Op::MaxPool2 | Op::AvgPool2 => vec![x[0], x[1], x[2] / 2, x[3] / 2],
+                Op::GlobalAvgPool => vec![x[0], x[1]],
+                Op::Upsample2 => vec![x[0], x[1], x[2] * 2, x[3] * 2],
+                Op::Flatten => vec![x[0], x[1..].iter().product()],
+                Op::Concat { axis } => {
+                    let mut s = x.to_vec();
+                    s[*axis] = ins.iter().map(|i| i[*axis]).sum();
+                    s
+                }
+                Op::Lstm { hidden, .. } => vec![x[0], x[1], *hidden],
+                // BatchNorm, Relu, Relu6, Add: shape-preserving.
+                _ => x.to_vec(),
+            };
+            shapes.push(shape);
+        }
+        shapes
+    }
+
+    /// Multiply-accumulate count of one forward pass at `input_shape`
+    /// (include the batch dim; pass batch 1 for per-sample MACs). Counts
+    /// the weighted-layer dot products plus elementwise multiply-adds
+    /// (BatchNorm, Add); pure data movement (pools, upsample, flatten,
+    /// concat) is free. This is the cost model the compression search
+    /// optimizes against.
+    pub fn macs(&self, input_shape: &[usize]) -> u64 {
+        let shapes = self.infer_shapes(input_shape);
+        let mut total = 0u64;
+        for (idx, node) in self.nodes.iter().enumerate() {
+            let out_len: u64 = shapes[idx].iter().product::<usize>() as u64;
+            total += match &node.op {
+                Op::Conv2d { weight, .. } => {
+                    // out = [N, O, OH, OW]; each output element costs
+                    // I·kh·kw MACs.
+                    let per_out = (weight.dim(1) * weight.dim(2) * weight.dim(3)) as u64;
+                    out_len * per_out
+                }
+                Op::DepthwiseConv2d { weight, .. } => {
+                    out_len * (weight.dim(2) * weight.dim(3)) as u64
+                }
+                Op::Linear { weight, .. } => {
+                    // out = [..., O]; each output element costs F MACs.
+                    out_len * weight.dim(1) as u64
+                }
+                Op::BatchNorm { .. } => out_len,
+                Op::Add => out_len * (node.inputs.len() as u64 - 1),
+                Op::Lstm { w_ih, w_hh, .. } => {
+                    // out = [N, T, H]; per timestep each of the 4H gate rows
+                    // dots F inputs and H hidden states.
+                    let f = w_ih.dim(1) as u64;
+                    let h = w_hh.dim(1) as u64;
+                    let steps = out_len / h; // N*T
+                    steps * 4 * h * (f + h)
+                }
+                _ => 0,
+            };
+        }
+        total
+    }
+
     /// Consumers of node `idx`.
     pub fn consumers(&self, idx: usize) -> Vec<usize> {
         self.nodes
@@ -297,6 +448,29 @@ impl Graph {
     /// bias correction and AdaRound need intermediate activations).
     pub fn forward_all(&self, x: &Tensor) -> Vec<Tensor> {
         self.forward_hooked(x, &mut NoHook)
+    }
+
+    /// Forward pass over the topological prefix `0..=upto` only, retaining
+    /// those nodes' outputs. Collectors that need one intermediate
+    /// activation (the channel-prune reconstruction runs this per
+    /// calibration batch inside the greedy search) shouldn't pay for the
+    /// rest of the model.
+    pub fn forward_prefix(&self, x: &Tensor, upto: usize) -> Vec<Tensor> {
+        assert!(upto < self.nodes.len());
+        let mut acts: Vec<Tensor> = Vec::with_capacity(upto + 1);
+        for (idx, node) in self.nodes[..=upto].iter().enumerate() {
+            let ins: Vec<&Tensor> = node
+                .inputs
+                .iter()
+                .map(|i| match i {
+                    Input::Graph => x,
+                    Input::Node(j) => &acts[*j],
+                })
+                .collect();
+            let y = eval_node(idx, node, &ins, &mut NoHook);
+            acts.push(y);
+        }
+        acts
     }
 
     /// Forward pass with a [`ForwardHook`] — the mechanism quantization
@@ -725,6 +899,154 @@ mod tests {
     fn forward_reference_rejected() {
         let mut g = Graph::new();
         g.push_with("bad", Op::Add, vec![Input::Node(3)]);
+    }
+
+    /// A diamond: conv1 feeds both a relu and an add; the relu also feeds
+    /// the add. Removing the relu must rewire *both* of its consumers'
+    /// references and shift later indices.
+    #[test]
+    fn remove_node_with_multiple_consumers() {
+        let mut rng = Rng::new(6);
+        let mut g = Graph::new();
+        let c1 = g.push(
+            "conv1",
+            Op::Conv2d {
+                weight: Tensor::randn(&mut rng, &[4, 4, 3, 3], 0.2),
+                bias: vec![0.0; 4],
+                spec: Conv2dSpec::same(3),
+            },
+        );
+        let relu = g.push("relu", Op::Relu);
+        g.push_with("add1", Op::Add, vec![Input::Node(relu), Input::Node(c1)]);
+        g.push_with("add2", Op::Add, vec![Input::Node(relu), Input::Graph]);
+        g.push_with("merge", Op::Add, vec![Input::Node(2), Input::Node(3)]);
+        assert_eq!(g.consumers(relu), vec![2, 3]);
+        g.remove_node(relu);
+        // Both ex-consumers of relu now consume conv1 directly.
+        assert_eq!(g.nodes[1].inputs, vec![Input::Node(c1), Input::Node(c1)]);
+        assert_eq!(g.nodes[2].inputs, vec![Input::Node(c1), Input::Graph]);
+        // merge's references shifted down by one.
+        assert_eq!(g.nodes[3].inputs, vec![Input::Node(1), Input::Node(2)]);
+        assert_eq!(g.output, 3);
+        // The graph still evaluates (shapes consistent).
+        let x = Tensor::randn(&mut rng, &[1, 4, 6, 6], 1.0);
+        assert_eq!(g.forward(&x).shape(), &[1, 4, 6, 6]);
+    }
+
+    /// Removing the output node must leave `output` pointing at the node
+    /// that replaced it.
+    #[test]
+    fn remove_output_node() {
+        let mut rng = Rng::new(7);
+        let mut g = tiny_cnn(&mut rng);
+        let last = g.nodes.len() - 1;
+        assert_eq!(g.output, last);
+        // Drop the final fc's predecessor chain tail: remove the output
+        // (single-input node) — output must fall back to its input.
+        g.remove_node(last);
+        assert_eq!(g.output, last - 1);
+        assert_eq!(g.nodes.len(), last);
+        let y = g.forward(&Tensor::zeros(&[1, 3, 8, 8]));
+        assert_eq!(y.shape(), &[1, 4]); // gap output
+    }
+
+    #[test]
+    fn replace_with_sequence_rewires_consumers_and_output() {
+        let mut rng = Rng::new(8);
+        let mut g = Graph::new();
+        let c1 = g.push(
+            "conv1",
+            Op::Conv2d {
+                weight: Tensor::randn(&mut rng, &[4, 3, 3, 3], 0.2),
+                bias: vec![0.0; 4],
+                spec: Conv2dSpec::same(3),
+            },
+        );
+        let c2 = g.push(
+            "conv2",
+            Op::Conv2d {
+                weight: Tensor::randn(&mut rng, &[4, 4, 3, 3], 0.2),
+                bias: vec![0.0; 4],
+                spec: Conv2dSpec::same(3),
+            },
+        );
+        g.push_with("add", Op::Add, vec![Input::Node(c2), Input::Node(c1)]);
+        // Split conv2 into two stacked convs.
+        let w_a = Tensor::randn(&mut rng, &[2, 4, 3, 1], 0.2);
+        let w_b = Tensor::randn(&mut rng, &[4, 2, 1, 3], 0.2);
+        let (first, last) = g.replace_with_sequence(
+            c2,
+            vec![
+                (
+                    "conv2.a".to_string(),
+                    Op::Conv2d {
+                        weight: w_a,
+                        bias: vec![0.0; 2],
+                        spec: Conv2dSpec::asym(1, 1, 1, 0),
+                    },
+                ),
+                (
+                    "conv2.b".to_string(),
+                    Op::Conv2d {
+                        weight: w_b,
+                        bias: vec![0.0; 4],
+                        spec: Conv2dSpec::asym(1, 1, 0, 1),
+                    },
+                ),
+            ],
+        );
+        assert_eq!((first, last), (1, 2));
+        assert_eq!(g.nodes.len(), 4);
+        // First of the pair inherits conv2's input; the pair chains.
+        assert_eq!(g.nodes[1].inputs, vec![Input::Node(c1)]);
+        assert_eq!(g.nodes[2].inputs, vec![Input::Node(1)]);
+        // add consumed conv2 → now consumes conv2.b; its other input shifts.
+        assert_eq!(g.nodes[3].inputs, vec![Input::Node(2), Input::Node(c1)]);
+        assert_eq!(g.output, 3);
+        let shapes = g.output_shapes(&[1, 3, 8, 8]);
+        assert_eq!(shapes.last().unwrap(), &vec![1, 4, 8, 8]);
+
+        // Replacing the output node moves `output` to the sequence tail.
+        let out = g.output;
+        g.replace_with_sequence(out, vec![("relu_out".to_string(), Op::Relu)]);
+        assert_eq!(g.output, out);
+        assert_eq!(g.nodes[out].name, "relu_out");
+    }
+
+    #[test]
+    fn forward_prefix_matches_full_forward() {
+        let mut rng = Rng::new(10);
+        let g = tiny_cnn(&mut rng);
+        let x = Tensor::randn(&mut rng, &[1, 3, 8, 8], 1.0);
+        let full = g.forward_all(&x);
+        for upto in [0usize, 2, g.nodes.len() - 1] {
+            let prefix = g.forward_prefix(&x, upto);
+            assert_eq!(prefix.len(), upto + 1);
+            for (a, b) in prefix.iter().zip(&full) {
+                assert_eq!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn infer_shapes_matches_real_forward_across_zoo() {
+        for model in crate::zoo::MODEL_NAMES {
+            let g = crate::zoo::build(model, 17).unwrap();
+            let mut shape = vec![2usize];
+            shape.extend(crate::zoo::input_shape(model).unwrap());
+            assert_eq!(g.infer_shapes(&shape), g.output_shapes(&shape), "{model}");
+        }
+    }
+
+    #[test]
+    fn macs_counts_weighted_layers() {
+        let mut rng = Rng::new(9);
+        let g = tiny_cnn(&mut rng);
+        // conv1: [1,4,8,8] out × 3·3·3 per element = 256·27 = 6912
+        // bn: 256; fc: 10×4 = 40; pools/relu free.
+        assert_eq!(g.macs(&[1, 3, 8, 8]), 6912 + 256 + 40);
+        // Batch scales linearly.
+        assert_eq!(g.macs(&[2, 3, 8, 8]), 2 * (6912 + 256 + 40));
     }
 
     #[test]

@@ -39,8 +39,15 @@ pub fn save_graph(g: &Graph, prefix: &Path) -> Result<()> {
                     "weight_shape",
                     Json::Arr(weight.shape().iter().map(|&d| Json::from(d)).collect()),
                 );
-                attrs.set("stride", Json::from(spec.stride));
-                attrs.set("pad", Json::from(spec.pad));
+                if spec.is_uniform() {
+                    attrs.set("stride", Json::from(spec.stride_h));
+                    attrs.set("pad", Json::from(spec.pad_h));
+                } else {
+                    attrs.set("stride_h", Json::from(spec.stride_h));
+                    attrs.set("stride_w", Json::from(spec.stride_w));
+                    attrs.set("pad_h", Json::from(spec.pad_h));
+                    attrs.set("pad_w", Json::from(spec.pad_w));
+                }
                 blob.extend_from_slice(weight.data());
                 blob.extend_from_slice(bias);
             }
@@ -176,9 +183,17 @@ pub fn load_graph(prefix: &Path) -> Result<Graph> {
         let op = match kind {
             "Conv2d" | "DepthwiseConv2d" => {
                 let ws = shape("weight_shape")?;
-                let spec = Conv2dSpec {
-                    stride: num("stride")?,
-                    pad: num("pad")?,
+                // Uniform specs use the compact legacy keys; spatial-SVD
+                // factors carry per-axis geometry.
+                let spec = if attrs.get("stride").is_some() {
+                    Conv2dSpec::uniform(num("stride")?, num("pad")?)
+                } else {
+                    Conv2dSpec::asym(
+                        num("stride_h")?,
+                        num("stride_w")?,
+                        num("pad_h")?,
+                        num("pad_w")?,
+                    )
                 };
                 let wlen: usize = ws.iter().product();
                 let weight = Tensor::new(&ws, take(wlen)?);
@@ -266,7 +281,7 @@ mod tests {
             Op::Conv2d {
                 weight: Tensor::randn(&mut rng, &[4, 3, 3, 3], 0.3),
                 bias: rng.normal_vec(4, 0.1),
-                spec: Conv2dSpec { stride: 2, pad: 1 },
+                spec: Conv2dSpec::uniform(2, 1),
             },
         );
         g.push(
@@ -334,6 +349,44 @@ mod tests {
         save_graph(&g, &prefix).unwrap();
         let g2 = load_graph(&prefix).unwrap();
         let x = Tensor::randn(&mut rng, &[1, 4, 3], 1.0);
+        assert!(g.forward(&x).max_abs_diff(&g2.forward(&x)) < 1e-7);
+    }
+
+    #[test]
+    fn asymmetric_spec_roundtrip() {
+        // Spatial-SVD factor geometry must survive save/load.
+        let mut rng = Rng::new(4);
+        let mut g = Graph::new();
+        g.push(
+            "conv.svd_v",
+            Op::Conv2d {
+                weight: Tensor::randn(&mut rng, &[2, 3, 3, 1], 0.3),
+                bias: vec![0.0; 2],
+                spec: Conv2dSpec::asym(2, 1, 1, 0),
+            },
+        );
+        g.push(
+            "conv.svd_h",
+            Op::Conv2d {
+                weight: Tensor::randn(&mut rng, &[4, 2, 1, 3], 0.3),
+                bias: rng.normal_vec(4, 0.1),
+                spec: Conv2dSpec::asym(1, 2, 0, 1),
+            },
+        );
+        let dir = std::env::temp_dir().join("aimet_serde_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let prefix = dir.join("asym");
+        save_graph(&g, &prefix).unwrap();
+        let g2 = load_graph(&prefix).unwrap();
+        for (a, b) in g.nodes.iter().zip(&g2.nodes) {
+            match (&a.op, &b.op) {
+                (Op::Conv2d { spec: sa, .. }, Op::Conv2d { spec: sb, .. }) => {
+                    assert_eq!(sa, sb)
+                }
+                _ => panic!("kind mismatch"),
+            }
+        }
+        let x = Tensor::randn(&mut rng, &[1, 3, 9, 7], 1.0);
         assert!(g.forward(&x).max_abs_diff(&g2.forward(&x)) < 1e-7);
     }
 

@@ -9,7 +9,9 @@
 //! ([`quantsim::QuantizationSimModel`]), the full post-training-quantization
 //! suite ([`ptq`]: batch-norm folding, cross-layer equalization, bias
 //! correction, AdaRound, range setting, the standard pipeline and the
-//! debugging flow), quantization-aware training ([`qat`]), synthetic
+//! debugging flow), the model compression suite ([`compress`]: spatial
+//! SVD, channel pruning, greedy ratio search, and the composed
+//! compress-then-quantize path), quantization-aware training ([`qat`]), synthetic
 //! datasets ([`data`]), metrics, and a PJRT runtime ([`runtime`]) that
 //! executes JAX/Pallas programs AOT-lowered to HLO text at build time.
 //!
@@ -17,6 +19,7 @@
 //! JAX models (which call the L1 Pallas kernels) once, and everything else
 //! is this crate.
 
+pub mod compress;
 pub mod coordinator;
 pub mod data;
 pub mod graph;

@@ -8,31 +8,60 @@
 
 use super::{matmul, matmul_a_bt, matmul_at_b, Tensor};
 
-/// Geometry of a conv: symmetric zero padding + stride (dilation 1 — the
+/// Geometry of a conv: per-axis zero padding + stride (dilation 1 — the
 /// zoo does not use dilated convs; SegMini's receptive field comes from
-/// pooling instead, see DESIGN.md §3).
+/// pooling instead, see DESIGN.md §3). Most layers are uniform across the
+/// two axes ([`Conv2dSpec::uniform`]); the asymmetric form exists for the
+/// compression subsystem's spatial-SVD factors, where a k×k conv becomes a
+/// k×1 conv (vertical stride/pad only) followed by a 1×k conv (horizontal
+/// stride/pad only).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Conv2dSpec {
-    pub stride: usize,
-    pub pad: usize,
+    pub stride_h: usize,
+    pub stride_w: usize,
+    pub pad_h: usize,
+    pub pad_w: usize,
 }
 
 impl Conv2dSpec {
     pub fn unit() -> Conv2dSpec {
-        Conv2dSpec { stride: 1, pad: 0 }
+        Conv2dSpec::uniform(1, 0)
     }
 
     pub fn same(k: usize) -> Conv2dSpec {
+        Conv2dSpec::uniform(1, k / 2)
+    }
+
+    /// The common case: the same stride and padding on both axes.
+    pub fn uniform(stride: usize, pad: usize) -> Conv2dSpec {
         Conv2dSpec {
-            stride: 1,
-            pad: k / 2,
+            stride_h: stride,
+            stride_w: stride,
+            pad_h: pad,
+            pad_w: pad,
         }
+    }
+
+    /// Fully general geometry (spatial-SVD factors).
+    pub fn asym(stride_h: usize, stride_w: usize, pad_h: usize, pad_w: usize) -> Conv2dSpec {
+        Conv2dSpec {
+            stride_h,
+            stride_w,
+            pad_h,
+            pad_w,
+        }
+    }
+
+    /// True when both axes share stride and padding (serialization keeps
+    /// the compact legacy form for these).
+    pub fn is_uniform(&self) -> bool {
+        self.stride_h == self.stride_w && self.pad_h == self.pad_w
     }
 
     pub fn out_hw(&self, h: usize, w: usize, kh: usize, kw: usize) -> (usize, usize) {
         (
-            (h + 2 * self.pad - kh) / self.stride + 1,
-            (w + 2 * self.pad - kw) / self.stride + 1,
+            (h + 2 * self.pad_h - kh) / self.stride_h + 1,
+            (w + 2 * self.pad_w - kw) / self.stride_w + 1,
         )
     }
 }
@@ -56,14 +85,14 @@ pub fn im2col(x: &Tensor, kh: usize, kw: usize, spec: Conv2dSpec) -> Tensor {
             for ni in 0..n {
                 let plane = (ni * c + ci) * h * w;
                 for oy in 0..oh {
-                    let iy = (oy * spec.stride + ky) as isize - spec.pad as isize;
+                    let iy = (oy * spec.stride_h + ky) as isize - spec.pad_h as isize;
                     if iy < 0 || iy >= h as isize {
                         j += ow;
                         continue;
                     }
                     let row_base = plane + iy as usize * w;
                     for ox in 0..ow {
-                        let ix = (ox * spec.stride + kx) as isize - spec.pad as isize;
+                        let ix = (ox * spec.stride_w + kx) as isize - spec.pad_w as isize;
                         row[j] = if ix < 0 || ix >= w as isize {
                             0.0
                         } else {
@@ -104,14 +133,14 @@ pub fn col2im(
         for ni in 0..n {
             let plane = (ni * c + ci) * h * w;
             for oy in 0..oh {
-                let iy = (oy * spec.stride + ky) as isize - spec.pad as isize;
+                let iy = (oy * spec.stride_h + ky) as isize - spec.pad_h as isize;
                 if iy < 0 || iy >= h as isize {
                     j += ow;
                     continue;
                 }
                 let row_base = plane + iy as usize * w;
                 for ox in 0..ow {
-                    let ix = (ox * spec.stride + kx) as isize - spec.pad as isize;
+                    let ix = (ox * spec.stride_w + kx) as isize - spec.pad_w as isize;
                     if ix >= 0 && ix < w as isize {
                         out[row_base + ix as usize] += row[j];
                     }
@@ -214,12 +243,12 @@ pub fn depthwise_conv2d(
                 for ox in 0..ow {
                     let mut acc = b;
                     for ky in 0..kh {
-                        let iy = (oy * spec.stride + ky) as isize - spec.pad as isize;
+                        let iy = (oy * spec.stride_h + ky) as isize - spec.pad_h as isize;
                         if iy < 0 || iy >= h as isize {
                             continue;
                         }
                         for kx in 0..kw {
-                            let ix = (ox * spec.stride + kx) as isize - spec.pad as isize;
+                            let ix = (ox * spec.stride_w + kx) as isize - spec.pad_w as isize;
                             if ix < 0 || ix >= w as isize {
                                 continue;
                             }
@@ -264,12 +293,12 @@ pub fn depthwise_conv2d_backward(
                     }
                     db[ci] += g;
                     for ky in 0..kh {
-                        let iy = (oy * spec.stride + ky) as isize - spec.pad as isize;
+                        let iy = (oy * spec.stride_h + ky) as isize - spec.pad_h as isize;
                         if iy < 0 || iy >= h as isize {
                             continue;
                         }
                         for kx in 0..kw {
-                            let ix = (ox * spec.stride + kx) as isize - spec.pad as isize;
+                            let ix = (ox * spec.stride_w + kx) as isize - spec.pad_w as isize;
                             if ix < 0 || ix >= w as isize {
                                 continue;
                             }
@@ -311,9 +340,9 @@ mod tests {
                             for ky in 0..kh {
                                 for kx in 0..kw {
                                     let iy =
-                                        (oy * spec.stride + ky) as isize - spec.pad as isize;
+                                        (oy * spec.stride_h + ky) as isize - spec.pad_h as isize;
                                     let ix =
-                                        (ox * spec.stride + kx) as isize - spec.pad as isize;
+                                        (ox * spec.stride_w + kx) as isize - spec.pad_w as isize;
                                     if iy < 0 || ix < 0 || iy >= h as isize || ix >= ww as isize
                                     {
                                         continue;
@@ -338,8 +367,8 @@ mod tests {
         for &(spec, n, c, h, w, o, k) in &[
             (Conv2dSpec::unit(), 2usize, 3usize, 5usize, 5usize, 4usize, 3usize),
             (Conv2dSpec::same(3), 1, 2, 6, 7, 3, 3),
-            (Conv2dSpec { stride: 2, pad: 1 }, 2, 3, 8, 8, 5, 3),
-            (Conv2dSpec { stride: 1, pad: 0 }, 1, 4, 4, 4, 2, 1),
+            (Conv2dSpec::uniform(2, 1), 2, 3, 8, 8, 5, 3),
+            (Conv2dSpec::uniform(1, 0), 1, 4, 4, 4, 2, 1),
         ] {
             let x = Tensor::randn(&mut rng, &[n, c, h, w], 1.0);
             let wt = Tensor::randn(&mut rng, &[o, c, k, k], 0.5);
@@ -380,7 +409,7 @@ mod tests {
         // <im2col(x), y> == <x, col2im(y)> for random x, y — the defining
         // property of an adjoint pair, which conv backward relies on.
         let mut rng = Rng::new(3);
-        let spec = Conv2dSpec { stride: 2, pad: 1 };
+        let spec = Conv2dSpec::uniform(2, 1);
         let (n, c, h, w, kh, kw) = (2, 3, 5, 6, 3, 3);
         let x = Tensor::randn(&mut rng, &[n, c, h, w], 1.0);
         let cols = im2col(&x, kh, kw, spec);
@@ -463,8 +492,41 @@ mod tests {
 
     #[test]
     fn stride_two_shapes() {
-        let spec = Conv2dSpec { stride: 2, pad: 1 };
+        let spec = Conv2dSpec::uniform(2, 1);
         assert_eq!(spec.out_hw(8, 8, 3, 3), (4, 4));
         assert_eq!(Conv2dSpec::same(3).out_hw(7, 9, 3, 3), (7, 9));
+    }
+
+    #[test]
+    fn asymmetric_geometry_matches_naive() {
+        // The spatial-SVD factor shapes: k×1 with vertical-only geometry,
+        // 1×k with horizontal-only geometry.
+        let mut rng = Rng::new(6);
+        for &(spec, kh, kw) in &[
+            (Conv2dSpec::asym(2, 1, 1, 0), 3usize, 1usize),
+            (Conv2dSpec::asym(1, 2, 0, 1), 1, 3),
+            (Conv2dSpec::asym(1, 1, 1, 0), 3, 1),
+            (Conv2dSpec::asym(1, 1, 0, 1), 1, 3),
+        ] {
+            let x = Tensor::randn(&mut rng, &[2, 3, 8, 6], 1.0);
+            let wt = Tensor::randn(&mut rng, &[4, 3, kh, kw], 0.5);
+            let b: Vec<f32> = rng.normal_vec(4, 0.1);
+            let fast = conv2d(&x, &wt, Some(&b), spec);
+            let slow = conv_naive(&x, &wt, Some(&b), spec);
+            assert!(fast.max_abs_diff(&slow) < 1e-4, "spec {spec:?}");
+        }
+    }
+
+    #[test]
+    fn factored_geometry_composes_to_original_shape() {
+        // A stride-2 pad-1 3×3 conv and its spatial-SVD factor pair must
+        // agree on the final output grid: 3×1 stride (2,1) pad (1,0) then
+        // 1×3 stride (1,2) pad (0,1).
+        let orig = Conv2dSpec::uniform(2, 1);
+        let (oh, ow) = orig.out_hw(9, 7, 3, 3);
+        let v = Conv2dSpec::asym(2, 1, 1, 0);
+        let (mh, mw) = v.out_hw(9, 7, 3, 1);
+        let h = Conv2dSpec::asym(1, 2, 0, 1);
+        assert_eq!(h.out_hw(mh, mw, 1, 3), (oh, ow));
     }
 }

@@ -89,18 +89,18 @@ fn linear(rng: &mut Rng, o: usize, i: usize) -> Op {
 pub fn mobimini(rng: &mut Rng) -> Graph {
     let mut g = Graph::new();
     // Stem: 3 -> 16, stride 2 (32 -> 16).
-    g.push("stem.conv", conv(rng, 16, 3, 3, Conv2dSpec { stride: 2, pad: 1 }));
+    g.push("stem.conv", conv(rng, 16, 3, 3, Conv2dSpec::uniform(2, 1)));
     g.push("stem.bn", bn(16));
     g.push("stem.relu6", Op::Relu6);
     // Block 1: dw16 + pw 16->32, stride 2 (16 -> 8).
-    g.push("b1.dw", dwconv_disparate(rng, 16, 3, Conv2dSpec { stride: 2, pad: 1 }));
+    g.push("b1.dw", dwconv_disparate(rng, 16, 3, Conv2dSpec::uniform(2, 1)));
     g.push("b1.dw_bn", bn(16));
     g.push("b1.dw_relu6", Op::Relu6);
     g.push("b1.pw", conv(rng, 32, 16, 1, Conv2dSpec::unit()));
     g.push("b1.pw_bn", bn(32));
     g.push("b1.pw_relu6", Op::Relu6);
     // Block 2: dw32 + pw 32->64, stride 2 (8 -> 4).
-    g.push("b2.dw", dwconv_disparate(rng, 32, 3, Conv2dSpec { stride: 2, pad: 1 }));
+    g.push("b2.dw", dwconv_disparate(rng, 32, 3, Conv2dSpec::uniform(2, 1)));
     g.push("b2.dw_bn", bn(32));
     g.push("b2.dw_relu6", Op::Relu6);
     g.push("b2.pw", conv(rng, 64, 32, 1, Conv2dSpec::unit()));
@@ -122,7 +122,7 @@ pub fn mobimini(rng: &mut Rng) -> Graph {
 /// ResNet-50 analog: stem + two residual stages.
 pub fn resmini(rng: &mut Rng) -> Graph {
     let mut g = Graph::new();
-    g.push("stem.conv", conv(rng, 16, 3, 3, Conv2dSpec { stride: 2, pad: 1 }));
+    g.push("stem.conv", conv(rng, 16, 3, 3, Conv2dSpec::uniform(2, 1)));
     g.push("stem.bn", bn(16));
     let mut prev = g.push("stem.relu", Op::Relu);
 
@@ -134,7 +134,7 @@ pub fn resmini(rng: &mut Rng) -> Graph {
         // Main branch: conv-bn-relu-conv-bn.
         g.push_with(
             &format!("{s}.conv1"),
-            conv(rng, cout, cin, 3, Conv2dSpec { stride, pad: 1 }),
+            conv(rng, cout, cin, 3, Conv2dSpec::uniform(stride, 1)),
             vec![Input::Node(prev)],
         );
         g.push(&format!("{s}.bn1"), bn(cout));
@@ -144,7 +144,7 @@ pub fn resmini(rng: &mut Rng) -> Graph {
         // Shortcut: 1x1 stride-s conv + bn.
         g.push_with(
             &format!("{s}.sc_conv"),
-            conv(rng, cout, cin, 1, Conv2dSpec { stride, pad: 0 }),
+            conv(rng, cout, cin, 1, Conv2dSpec::uniform(stride, 0)),
             vec![Input::Node(prev)],
         );
         let sc_bn = g.push(&format!("{s}.sc_bn"), bn(cout));
@@ -164,10 +164,10 @@ pub fn resmini(rng: &mut Rng) -> Graph {
 /// decoder (×4), 1×1 classifier head → per-pixel logits [N, 6, 32, 32].
 pub fn segmini(rng: &mut Rng) -> Graph {
     let mut g = Graph::new();
-    g.push("enc1.conv", conv(rng, 16, 3, 3, Conv2dSpec { stride: 2, pad: 1 }));
+    g.push("enc1.conv", conv(rng, 16, 3, 3, Conv2dSpec::uniform(2, 1)));
     g.push("enc1.bn", bn(16));
     g.push("enc1.relu", Op::Relu);
-    g.push("enc2.conv", conv(rng, 32, 16, 3, Conv2dSpec { stride: 2, pad: 1 }));
+    g.push("enc2.conv", conv(rng, 32, 16, 3, Conv2dSpec::uniform(2, 1)));
     g.push("enc2.bn", bn(32));
     g.push("enc2.relu", Op::Relu);
     g.push("mid.conv", conv(rng, 32, 32, 3, Conv2dSpec::same(3)));
@@ -189,13 +189,13 @@ pub fn segmini(rng: &mut Rng) -> Graph {
 /// 8×8 cell: [objectness, 4 box offsets, 4 class logits].
 pub fn detmini(rng: &mut Rng) -> Graph {
     let mut g = Graph::new();
-    g.push("bb1.conv", conv(rng, 16, 3, 3, Conv2dSpec { stride: 2, pad: 1 }));
+    g.push("bb1.conv", conv(rng, 16, 3, 3, Conv2dSpec::uniform(2, 1)));
     g.push("bb1.bn", bn(16));
     g.push("bb1.relu", Op::Relu);
-    g.push("bb2.conv", conv(rng, 32, 16, 3, Conv2dSpec { stride: 2, pad: 1 }));
+    g.push("bb2.conv", conv(rng, 32, 16, 3, Conv2dSpec::uniform(2, 1)));
     g.push("bb2.bn", bn(32));
     g.push("bb2.relu", Op::Relu);
-    g.push("bb3.conv", conv(rng, 64, 32, 3, Conv2dSpec { stride: 2, pad: 1 }));
+    g.push("bb3.conv", conv(rng, 64, 32, 3, Conv2dSpec::uniform(2, 1)));
     g.push("bb3.bn", bn(64));
     g.push("bb3.relu", Op::Relu);
     g.push("neck.conv", conv(rng, 64, 64, 3, Conv2dSpec::same(3)));

@@ -1,0 +1,286 @@
+//! Integration tests for the compression subsystem: the lossless-limit
+//! properties, zoo-wide coverage, the greedy search end-to-end, and the
+//! quantsim export/import round-trip of compressed graphs.
+
+use aimet::compress::{
+    apply_plan, compress_then_ptq, find_prune_candidates, greedy_plan, prune_channels,
+    svd_apply, svd_candidates, CompressionKind, CompressionPlan, LayerChoice, SearchOptions,
+};
+use aimet::graph::Graph;
+use aimet::quantsim::{export_encodings_json, load_param_encodings, set_and_freeze_param_encodings};
+use aimet::task::TaskData;
+use aimet::tensor::Tensor;
+use aimet::zoo;
+
+fn input_shape(model: &str) -> Vec<usize> {
+    let mut s = vec![1usize];
+    s.extend(zoo::input_shape(model).unwrap());
+    s
+}
+
+fn calib(model: &str, n: usize, batch: usize) -> Vec<Tensor> {
+    TaskData::new(model, 77).calibration(n, batch)
+}
+
+fn eval_batch(model: &str) -> Tensor {
+    TaskData::new(model, 78).batch(5, 4).0
+}
+
+fn plan(choices: Vec<(&str, CompressionKind, f32)>) -> CompressionPlan {
+    CompressionPlan {
+        target_ratio: 0.5,
+        choices: choices
+            .into_iter()
+            .map(|(l, k, r)| LayerChoice {
+                layer: l.to_string(),
+                kind: k,
+                ratio: r,
+            })
+            .collect(),
+    }
+}
+
+/// Property: spatial-SVD factorization at ratio 1.0 (full rank) is
+/// function-preserving within 1e-4 — for every conv and linear of every
+/// zoo model.
+#[test]
+fn full_rank_svd_reconstructs_every_zoo_layer() {
+    for model in zoo::MODEL_NAMES {
+        let g = zoo::build(model, 31).unwrap();
+        let shape = input_shape(model);
+        let x = eval_batch(model);
+        let y0 = g.forward(&x);
+        for name in svd_candidates(&g) {
+            let mut g2 = g.clone();
+            let rep = svd_apply(&mut g2, &name, 1.0, &shape).unwrap();
+            assert_eq!(rep.rank, rep.full_rank, "{model}/{name}");
+            let y = g2.forward(&x);
+            let scale = y0.abs_max().max(1.0);
+            assert!(
+                y.max_abs_diff(&y0) / scale < 1e-4,
+                "{model}/{name}: rel err {}",
+                y.max_abs_diff(&y0) / scale
+            );
+        }
+    }
+}
+
+/// Property: channel pruning at keep-ratio 1.0 is bit-identical — for
+/// every prunable producer of every zoo model.
+#[test]
+fn keep_all_pruning_is_bit_identical_across_zoo() {
+    for model in zoo::MODEL_NAMES {
+        let g = zoo::build(model, 32).unwrap();
+        let data = calib(model, 1, 4);
+        let x = eval_batch(model);
+        let y0 = g.forward(&x);
+        for cand in find_prune_candidates(&g) {
+            let name = g.nodes[cand.producer].name.clone();
+            let mut g2 = g.clone();
+            let rep = prune_channels(&mut g2, &name, 1.0, &data).unwrap();
+            assert_eq!(rep.kept, rep.total, "{model}/{name}");
+            assert_eq!(g2.forward(&x), y0, "{model}/{name} not bit-identical");
+        }
+    }
+}
+
+/// Property: factored graphs produce the same per-surviving-node shapes —
+/// in particular the final output — via `output_shapes`.
+#[test]
+fn factored_graphs_keep_output_shapes() {
+    // mobimini + segmini cover every conv geometry in the zoo (stride-2
+    // stem, 1×1 pointwise, same-pad 3×3, decoder convs behind upsample);
+    // the full-rank test above already touches every model.
+    for model in ["mobimini", "segmini"] {
+        let g = zoo::build(model, 33).unwrap();
+        let shape = input_shape(model);
+        let orig_shapes = g.output_shapes(&shape);
+        for (ratio_i, name) in svd_candidates(&g).into_iter().enumerate() {
+            let ratio = [0.5f32, 0.75, 1.0][ratio_i % 3];
+            let mut g2 = g.clone();
+            svd_apply(&mut g2, &name, ratio, &shape).unwrap();
+            let new_shapes = g2.output_shapes(&shape);
+            assert_eq!(
+                new_shapes[g2.output], orig_shapes[g.output],
+                "{model}/{name}@{ratio}"
+            );
+            // Every surviving original node keeps its shape (the factor
+            // pair slots into the same activation geometry).
+            for (i, node) in g2.nodes.iter().enumerate() {
+                if let Some(j) = g.find(&node.name) {
+                    assert_eq!(new_shapes[i], orig_shapes[j], "{model}/{} shape", node.name);
+                }
+            }
+        }
+    }
+}
+
+/// Zoo coverage: a mixed SVD+prune plan compresses every model, reduces
+/// MACs, and the compressed model still evaluates with the right shapes.
+#[test]
+fn mixed_plans_cover_the_zoo() {
+    for model in zoo::MODEL_NAMES {
+        let g = zoo::build(model, 34).unwrap();
+        let shape = input_shape(model);
+        let data = calib(model, 2, 4);
+        // First prunable producer (if any) + every conv/linear at 0.5 SVD
+        // for layers not already pruned.
+        let mut choices: Vec<LayerChoice> = Vec::new();
+        let pruned: Option<String> = find_prune_candidates(&g)
+            .first()
+            .map(|c| g.nodes[c.producer].name.clone());
+        if let Some(name) = &pruned {
+            choices.push(LayerChoice {
+                layer: name.clone(),
+                kind: CompressionKind::ChannelPrune,
+                ratio: 0.5,
+            });
+        }
+        if let Some(name) = svd_candidates(&g)
+            .into_iter()
+            .rev()
+            .find(|n| Some(n) != pruned.as_ref())
+        {
+            choices.push(LayerChoice {
+                layer: name,
+                kind: CompressionKind::SpatialSvd,
+                ratio: 0.5,
+            });
+        }
+        assert!(!choices.is_empty(), "{model}: nothing compressible");
+        let res = apply_plan(
+            &g,
+            &CompressionPlan {
+                target_ratio: 0.5,
+                choices,
+            },
+            &data,
+            &shape,
+        );
+        assert!(
+            res.macs_after < res.macs_before,
+            "{model}: {} !< {}",
+            res.macs_after,
+            res.macs_before
+        );
+        let x = eval_batch(model);
+        assert_eq!(
+            res.graph.forward(&x).shape(),
+            g.forward(&x).shape(),
+            "{model}"
+        );
+    }
+}
+
+/// End-to-end acceptance shape: greedy search at target 0.5 on the
+/// reference model halves the MAC count, and `compress_then_ptq` quantizes
+/// the factored graph into a runnable sim.
+#[test]
+fn greedy_search_then_ptq_meets_budget_on_mobimini() {
+    let model = "mobimini";
+    let g = zoo::build(model, 35).unwrap();
+    let shape = input_shape(model);
+    let data = calib(model, 2, 8);
+    let x = eval_batch(model);
+    let y0 = g.forward(&x);
+    let eval = |g2: &Graph| -> f32 { -g2.forward(&x).sq_err(&y0) };
+    let opts = SearchOptions {
+        target_ratio: 0.5,
+        candidate_ratios: vec![0.5, 0.75],
+    };
+    let outcome = greedy_plan(&g, &data, &shape, &eval, &opts);
+    let (res, ptq) = compress_then_ptq(&g, &outcome.plan, &data, &shape, &Default::default());
+    assert!(
+        res.mac_ratio() <= 0.5,
+        "achieved MAC ratio {:.3} > target 0.5",
+        res.mac_ratio()
+    );
+    let yq = ptq.sim.forward(&x);
+    assert_eq!(yq.shape(), y0.shape());
+    assert!(yq.data().iter().all(|v| v.is_finite()));
+}
+
+/// Satellite: `compress_then_ptq` output round-trips through the quantsim
+/// encodings export/import — compressed (factored/pruned) nodes carry
+/// valid per-channel encodings, the import reproduces them, and a second
+/// export is stable.
+#[test]
+fn compressed_sim_encodings_roundtrip() {
+    let model = "mobimini";
+    let g = zoo::build(model, 36).unwrap();
+    let shape = input_shape(model);
+    let data = calib(model, 2, 8);
+    let the_plan = plan(vec![
+        ("b1.pw", CompressionKind::ChannelPrune, 0.5),
+        ("b2.pw", CompressionKind::SpatialSvd, 0.5),
+        ("fc", CompressionKind::SpatialSvd, 0.75),
+    ]);
+    let mut opts = aimet::ptq::PtqOptions::default();
+    opts.cfg.per_channel = true;
+    let (res, out) = compress_then_ptq(&g, &the_plan, &data, &shape, &opts);
+    let sim = out.sim;
+
+    // Every enabled weighted node exports per-channel encodings whose
+    // count matches its (possibly compressed) output-channel count.
+    let text = export_encodings_json(&sim);
+    let loaded = load_param_encodings(&text).unwrap();
+    for (idx, slot) in sim.params.iter().enumerate() {
+        let Some(slot) = slot else { continue };
+        if !slot.enabled {
+            continue;
+        }
+        let node = &sim.graph.nodes[idx];
+        let q = loaded
+            .get(&node.name)
+            .unwrap_or_else(|| panic!("{} missing from export", node.name));
+        let expect = if slot.per_channel {
+            node.op.out_channels().unwrap()
+        } else {
+            1
+        };
+        assert_eq!(q.encodings.len(), expect, "{}", node.name);
+        for e in &q.encodings {
+            assert!(e.scale > 0.0 && e.min <= 0.0 && e.max >= 0.0, "{}", node.name);
+        }
+    }
+    // The compressed nodes specifically are present, with genuinely
+    // per-channel granularity.
+    for name in ["b2.pw.svd_v", "b2.pw.svd_h", "fc.svd_in", "fc.svd_out"] {
+        let idx = sim.graph.find(name).unwrap_or_else(|| panic!("{name} gone"));
+        assert_eq!(
+            loaded[name].encodings.len(),
+            sim.graph.nodes[idx].op.out_channels().unwrap(),
+            "{name} per-channel count"
+        );
+    }
+    assert!(res.graph.find("b1.pw").is_some());
+
+    // Import into a clone and re-export: encodings survive unchanged (to
+    // float-roundtrip precision) and the quantized forward is preserved.
+    let mut sim2 = sim.clone();
+    set_and_freeze_param_encodings(&mut sim2, &loaded);
+    let text2 = export_encodings_json(&sim2);
+    let loaded2 = load_param_encodings(&text2).unwrap();
+    assert_eq!(loaded.len(), loaded2.len());
+    for (name, q) in &loaded {
+        let q2 = &loaded2[name];
+        assert_eq!(q.encodings.len(), q2.encodings.len(), "{name}");
+        for (a, b) in q.encodings.iter().zip(&q2.encodings) {
+            let tol = 1e-5 * a.scale.abs().max(1e-20);
+            assert!((a.scale - b.scale).abs() <= tol, "{name} scale");
+            assert!((a.min - b.min).abs() <= 1e-5 * a.min.abs().max(1e-12), "{name} min");
+            assert!((a.max - b.max).abs() <= 1e-5 * a.max.abs().max(1e-12), "{name} max");
+            assert_eq!(a.bw, b.bw, "{name}");
+            assert_eq!(a.symmetric, b.symmetric, "{name}");
+            assert_eq!(a.offset, b.offset, "{name}");
+        }
+    }
+    let x = eval_batch(model);
+    let (ya, yb) = (sim.forward(&x), sim2.forward(&x));
+    let scale = ya.abs_max().max(1e-6);
+    assert!(
+        ya.max_abs_diff(&yb) / scale < 1e-4,
+        "re-imported sim diverged: {}",
+        ya.max_abs_diff(&yb) / scale
+    );
+}

@@ -1,16 +1,25 @@
 #!/usr/bin/env bash
-# Perf gate: build release, run the hotpath bench, and fail if the
-# machine-readable baseline is missing or the quantsim/fp32 forward
-# ratio exceeds the paper-motivated 3.0x budget (rust/README.md §Perf).
+# Perf + compression gate: build release, run the hotpath and compression
+# benches, and fail if
+#   * BENCH_hotpath.json is missing or the quantsim/fp32 forward ratio
+#     exceeds the paper-motivated 3.0x budget (rust/README.md §Perf), or
+#   * BENCH_compress.json is missing, MAC reduction on the reference zoo
+#     model falls below 40%, or the compression eval-score delta exceeds
+#     2 points (rust/README.md §Compression).
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
 
 (cd rust && cargo build --release)
 (cd rust && cargo bench --bench hotpath)
+(cd rust && cargo bench --bench compress)
 
 if [[ ! -f BENCH_hotpath.json ]]; then
     echo "bench_check: BENCH_hotpath.json was not emitted" >&2
+    exit 1
+fi
+if [[ ! -f BENCH_compress.json ]]; then
+    echo "bench_check: BENCH_compress.json was not emitted" >&2
     exit 1
 fi
 
@@ -29,5 +38,20 @@ speedup = d.get("int_gemm_speedup_vs_naive")
 print(
     f"bench_check OK: quantsim/fp32 = {ratio:.2f}x (<= 3.0), "
     f"int-GEMM speedup vs naive = {speedup:.1f}x"
+)
+
+with open("BENCH_compress.json") as f:
+    c = json.load(f)
+
+reduction = c["mac_reduction_pct"]
+delta = c["eval_delta"]
+if reduction < 40.0:
+    sys.exit(f"bench_check: MAC reduction {reduction:.1f}% < 40%")
+if abs(delta) > 2.0:
+    sys.exit(f"bench_check: compression eval delta {delta:.2f} > 2 points")
+print(
+    f"bench_check OK: compression {reduction:.1f}% MAC reduction "
+    f"(eval delta {delta:.2f} pts, int-GEMM forward speedup "
+    f"{c['int_forward_speedup']:.2f}x)"
 )
 EOF
