@@ -13,7 +13,7 @@ fn main() {
     let model = "mobimini";
     println!("== fig 4.5 debugging flow ==");
     let (g, data, _) = trained_model(model, Effort::Fast, 999);
-    let fp32 = evaluate_graph(&g, model, &data, 4, 16);
+    let fp32 = evaluate_graph(&g, model, &data, 4, 16).unwrap();
     let calib = data.calibration(3, 16);
 
     // A broken configuration: W4 per-tensor, no CLE, min-max everywhere.
@@ -31,7 +31,7 @@ fn main() {
         },
     );
     let report = run_debug_flow(&broken.sim, fp32, &|sim| {
-        evaluate_sim(sim, model, &data, 2, 16)
+        evaluate_sim(sim, model, &data, 2, 16).unwrap()
     });
     print!("{}", report.render());
 
@@ -48,7 +48,7 @@ fn main() {
     fixed_opts.adaround.iterations = 200;
     let fixed = standard_ptq_pipeline(&g, &calib, &fixed_opts);
     let before = report.full_quant_metric;
-    let after = evaluate_sim(&fixed.sim, model, &data, 4, 16);
+    let after = evaluate_sim(&fixed.sim, model, &data, 4, 16).unwrap();
     println!("broken W4 sim : {before:.2}");
     println!("fixed  W4 sim : {after:.2}  (fp32 {fp32:.2})");
 }

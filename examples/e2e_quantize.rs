@@ -35,7 +35,7 @@ fn main() {
 
     // ---- 1. FP32 training through the AOT train-step artifact ---------
     let mut g = zoo::build(model, 1234).unwrap();
-    let data = TaskData::new(model, 1235);
+    let data = TaskData::new(model, 1235).unwrap();
     let spec = rt.spec("mobimini_fp32_step").expect("step program").clone();
     let batch = spec.inputs[spec.inputs.len() - 3][0];
     let t0 = Instant::now();
@@ -65,7 +65,7 @@ fn main() {
             );
         }
     }
-    let fp32 = evaluate_graph(&g, model, &data, 6, 16);
+    let fp32 = evaluate_graph(&g, model, &data, 6, 16).unwrap();
     println!(
         "FP32 after {steps} PJRT steps: top-1 {fp32:.2}% ({:.1}s)",
         t0.elapsed().as_secs_f64()
@@ -82,12 +82,12 @@ fn main() {
             ..Default::default()
         },
     );
-    let rtn_acc = evaluate_sim(&rtn.sim, model, &data, 6, 16);
+    let rtn_acc = evaluate_sim(&rtn.sim, model, &data, 6, 16).unwrap();
     let ptq_out = standard_ptq_pipeline(&g, &calib, &PtqOptions::default());
     for line in &ptq_out.log {
         println!("ptq: {line}");
     }
-    let ptq = evaluate_sim(&ptq_out.sim, model, &data, 6, 16);
+    let ptq = evaluate_sim(&ptq_out.sim, model, &data, 6, 16).unwrap();
 
     // ---- 3. QAT (fig 5.2) ---------------------------------------------
     let mut sim = ptq_out.sim.clone();
@@ -99,7 +99,7 @@ fn main() {
     };
     let qlog = fit_qat(&mut sim, model, &data, &cfg);
     println!("qat: {} points, final loss {:.4}", qlog.points.len(), qlog.final_loss());
-    let qat = evaluate_sim(&sim, model, &data, 6, 16);
+    let qat = evaluate_sim(&sim, model, &data, 6, 16).unwrap();
 
     // ---- 4. Report ------------------------------------------------------
     println!("\n== report (top-1 %) ==");

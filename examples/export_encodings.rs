@@ -11,7 +11,7 @@ use aimet::zoo;
 fn main() {
     let model = std::env::args().nth(1).unwrap_or_else(|| "mobimini".into());
     let g = zoo::build(&model, 4242).expect("zoo model");
-    let data = TaskData::new(&model, 4243);
+    let data = TaskData::new(&model, 4243).unwrap();
     let mut sim = QuantizationSimModel::with_defaults(g, QuantParams::default());
     sim.compute_encodings(&data.calibration(4, 16));
 

@@ -12,7 +12,7 @@ fn main() {
     let model = std::env::args().nth(1).unwrap_or_else(|| "mobimini".into());
     println!("== fig 4.1 standard PTQ pipeline on {model} ==");
     let (g, data, _) = trained_model(&model, Effort::Fast, 777);
-    let fp32 = evaluate_graph(&g, &model, &data, 6, 16);
+    let fp32 = evaluate_graph(&g, &model, &data, 6, 16).unwrap();
     println!("FP32 baseline: {fp32:.2}");
     let calib = data.calibration(4, 16);
 
@@ -59,7 +59,7 @@ fn main() {
     println!("{:<34} {:>8} {:>8}", "pipeline stage", "top-1 %", "Δ fp32");
     for (label, opts) in variants {
         let out = standard_ptq_pipeline(&g, &calib, &opts);
-        let acc = evaluate_sim(&out.sim, &model, &data, 6, 16);
+        let acc = evaluate_sim(&out.sim, &model, &data, 6, 16).unwrap();
         println!("{label:<34} {acc:>8.2} {:>+8.2}", acc - fp32);
     }
 }

@@ -13,7 +13,7 @@ fn main() {
     let model = std::env::args().nth(1).unwrap_or_else(|| "resmini".into());
     println!("== fig 5.2 QAT pipeline on {model} ==");
     let (g, data, _) = trained_model(&model, Effort::Fast, 888);
-    let fp32 = evaluate_graph(&g, &model, &data, 6, 16);
+    let fp32 = evaluate_graph(&g, &model, &data, 6, 16).unwrap();
     println!("FP32 baseline: {fp32:.2}\n");
     let calib = data.calibration(4, 16);
 
@@ -33,7 +33,7 @@ fn main() {
         // Fig 5.2 steps: CLE → add quantizers → range setting (all inside
         // the PTQ pipeline) → train → export.
         let ptq_out = standard_ptq_pipeline(&g, &calib, &opts);
-        let ptq = evaluate_sim(&ptq_out.sim, &model, &data, 6, 16);
+        let ptq = evaluate_sim(&ptq_out.sim, &model, &data, 6, 16).unwrap();
         let mut sim = ptq_out.sim.clone();
         let cfg = TrainConfig {
             steps: 150,
@@ -42,7 +42,7 @@ fn main() {
             ..Default::default()
         };
         fit_qat(&mut sim, &model, &data, &cfg);
-        let qat = evaluate_sim(&sim, &model, &data, 6, 16);
+        let qat = evaluate_sim(&sim, &model, &data, 6, 16).unwrap();
         println!(
             "W{w_bw}/A{a_bw}   {ptq:>10.2} {qat:>10.2} {:>+10.2}",
             qat - ptq

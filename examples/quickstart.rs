@@ -35,9 +35,9 @@ fn main() {
     println!("\n== quantization simulation (code block 3.1) ==");
     let model = "resmini";
     let g = zoo::build(model, 7).expect("zoo model");
-    let data = TaskData::new(model, 8);
+    let data = TaskData::new(model, 8).unwrap();
 
-    let fp32 = evaluate_graph(&g, model, &data, 4, 16);
+    let fp32 = evaluate_graph(&g, model, &data, 4, 16).unwrap();
     println!("FP32 {model}: top-1 {fp32:.2}% (untrained weights — quickstart only)");
 
     // sim = QuantizationSimModel(model, default_output_bw=8, default_param_bw=8)
@@ -49,7 +49,7 @@ fn main() {
     sim.compute_encodings(&data.calibration(4, 16));
 
     // quantized_accuracy = eval_function(model=sim.model)
-    let quantized = evaluate_sim(&sim, model, &data, 4, 16);
+    let quantized = evaluate_sim(&sim, model, &data, 4, 16).unwrap();
     println!("W8/A8 sim: top-1 {quantized:.2}%  (drop {:+.2})", quantized - fp32);
 
     // Export (§3.3): model + JSON encodings for an on-target runtime.

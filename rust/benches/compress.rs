@@ -67,10 +67,10 @@ fn main() {
     let threads = aimet::pool::num_threads();
     println!("== compression ({model}, target {target}, {threads} threads) ==");
 
-    let fp32 = evaluate_graph(&g, model, &data, 6, 16);
+    let fp32 = evaluate_graph(&g, model, &data, 6, 16).unwrap();
 
     // Greedy per-layer (kind, ratio) selection on the worker pool.
-    let eval = |g2: &Graph| evaluate_graph(g2, model, &data, 3, 16);
+    let eval = |g2: &Graph| evaluate_graph(g2, model, &data, 3, 16).unwrap();
     let opts = SearchOptions {
         target_ratio: target,
         ..Default::default()
@@ -95,8 +95,8 @@ fn main() {
     for line in &res.log {
         println!("compress: {line}");
     }
-    let compressed = evaluate_graph(&res.graph, model, &data, 6, 16);
-    let quantized = aimet::task::evaluate_sim(&ptq.sim, model, &data, 6, 16);
+    let compressed = evaluate_graph(&res.graph, model, &data, 6, 16).unwrap();
+    let quantized = aimet::task::evaluate_sim(&ptq.sim, model, &data, 6, 16).unwrap();
     let mac_reduction_pct = 100.0 * (1.0 - res.mac_ratio());
     let eval_delta = fp32 - compressed;
     println!(

@@ -1,0 +1,154 @@
+//! Integer-engine + serving benchmark (PR 3 acceptance record).
+//!
+//! Measures, on the reference model (mobimini, trained fast, PTQ'd):
+//!   * fp32 / quantsim / integer-engine forward wall time at batch 1 & 8
+//!   * batch-1 → batch-8 engine throughput scaling (samples/sec)
+//!   * batched engine throughput vs the per-request fp32 forward — the
+//!     deployment comparison: a request served through the coalescing
+//!     int8 engine vs running the fp32 model once per request
+//!   * closed-loop serving latency percentiles (batch-1 vs coalesced)
+//!   * engine/sim agreement (max quantization-step deviation)
+//!
+//! Writes `BENCH_engine.json` at the repo root; `scripts/bench_check.sh`
+//! gates `engine_batched_speedup_vs_fp32 ≥ 1.5` and
+//! `engine_batch_scaling ≥ 2.0`.
+//!
+//! Run: `cargo bench --bench engine`
+
+mod common;
+
+use aimet::coordinator::experiments::{trained_model, Effort};
+use aimet::engine::{lower, run_serve_bench, BatchConfig};
+use aimet::json::Json;
+use aimet::ptq::{standard_ptq_pipeline, PtqOptions};
+use aimet::tensor::Tensor;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let model = "mobimini";
+    let (g, data, _) = trained_model(model, Effort::Fast, 3300);
+    let calib = data.calibration(4, 16);
+    let out = standard_ptq_pipeline(&g, &calib, &PtqOptions::default());
+    let qm = lower(&out.sim).expect("lowering");
+    let threads = aimet::pool::num_threads();
+    println!("== integer engine ({model}, {threads} threads) ==");
+    println!("{}", qm.describe());
+
+    let mut report = Json::obj();
+    report.set("model", Json::from(model));
+    report.set("threads", Json::from(threads as u32));
+    report.set("integer_only", Json::Bool(qm.is_integer_only()));
+
+    let (x1, _) = data.batch(0, 1);
+    let (x8, _) = data.batch(0, 8);
+
+    // Forward wall times.
+    let t_fp1 = common::median_secs(31, || {
+        std::hint::black_box(g.forward(&x1));
+    });
+    let t_fp8 = common::median_secs(15, || {
+        std::hint::black_box(g.forward(&x8));
+    });
+    let t_sim8 = common::median_secs(15, || {
+        std::hint::black_box(out.sim.forward(&x8));
+    });
+    let t_eng1 = common::median_secs(31, || {
+        std::hint::black_box(qm.forward_int(&x1));
+    });
+    let t_eng8 = common::median_secs(15, || {
+        std::hint::black_box(qm.forward_int(&x8));
+    });
+    println!(
+        "fp32 forward    : b1 {:7.3} ms   b8 {:7.3} ms\n\
+         quantsim forward:                b8 {:7.3} ms\n\
+         engine forward  : b1 {:7.3} ms   b8 {:7.3} ms",
+        t_fp1 * 1e3,
+        t_fp8 * 1e3,
+        t_sim8 * 1e3,
+        t_eng1 * 1e3,
+        t_eng8 * 1e3
+    );
+    report.set("fp32_forward_b1_ms", Json::from(t_fp1 * 1e3));
+    report.set("fp32_forward_b8_ms", Json::from(t_fp8 * 1e3));
+    report.set("quantsim_forward_b8_ms", Json::from(t_sim8 * 1e3));
+    report.set("engine_forward_b1_ms", Json::from(t_eng1 * 1e3));
+    report.set("engine_forward_b8_ms", Json::from(t_eng8 * 1e3));
+
+    // Throughputs (samples/sec) and the acceptance ratios.
+    let fp32_b1_sps = 1.0 / t_fp1;
+    let eng_b1_sps = 1.0 / t_eng1;
+    let eng_b8_sps = 8.0 / t_eng8;
+    let batch_scaling = eng_b8_sps / eng_b1_sps;
+    let batched_vs_fp32 = eng_b8_sps / fp32_b1_sps;
+    println!(
+        "throughput: fp32 b1 {fp32_b1_sps:7.1} sps | engine b1 {eng_b1_sps:7.1} sps, \
+         b8 {eng_b8_sps:7.1} sps (scaling {batch_scaling:.2}x)\n\
+         batched engine vs per-request fp32: {batched_vs_fp32:.2}x (target >= 1.5x)\n\
+         engine vs quantsim (b8): {:.2}x",
+        t_sim8 / t_eng8
+    );
+    report.set("fp32_b1_sps", Json::from(fp32_b1_sps));
+    report.set("engine_b1_sps", Json::from(eng_b1_sps));
+    report.set("engine_b8_sps", Json::from(eng_b8_sps));
+    report.set("engine_batch_scaling", Json::from(batch_scaling));
+    report.set("engine_batched_speedup_vs_fp32", Json::from(batched_vs_fp32));
+    report.set("engine_speedup_vs_quantsim_b8", Json::from(t_sim8 / t_eng8));
+
+    // Engine/sim agreement on eval batches (max step deviation).
+    let out_enc = *qm.output_encoding();
+    let mut worst = 0i32;
+    for i in 0..4u64 {
+        let (x, _) = data.batch(50_000 + i, 8);
+        let ys = out.sim.forward(&x);
+        let yi = qm.forward_int(&x);
+        for (&q, &v) in yi.data().iter().zip(ys.data()) {
+            worst = worst.max((q - out_enc.quantize(v)).abs());
+        }
+    }
+    println!("engine vs sim: max deviation {worst} quantization step(s)");
+    report.set("max_step_deviation", Json::from(worst as f64));
+
+    // Closed-loop serving: batch-1 vs coalesced micro-batches.
+    let qm = Arc::new(qm);
+    let samples: Vec<Tensor> = (0..32).map(|i| data.batch(90_000 + i, 1).0).collect();
+    let clients = 8;
+    let requests = 48;
+    let wait = Duration::from_millis(2);
+    let b1 = run_serve_bench(
+        Arc::clone(&qm),
+        &samples,
+        clients,
+        requests,
+        BatchConfig {
+            max_batch: 1,
+            max_wait: wait,
+        },
+    );
+    let b8 = run_serve_bench(
+        Arc::clone(&qm),
+        &samples,
+        clients,
+        requests,
+        BatchConfig {
+            max_batch: 8,
+            max_wait: wait,
+        },
+    );
+    println!("serve batch-1 : {}", b1.render());
+    println!("serve batch-8 : {}", b8.render());
+    report.set("serve_b1_sps", Json::from(b1.throughput_sps));
+    report.set("serve_b8_sps", Json::from(b8.throughput_sps));
+    report.set("serve_b8_p50_ms", Json::from(b8.p50_ms));
+    report.set("serve_b8_p95_ms", Json::from(b8.p95_ms));
+    report.set("serve_b8_p99_ms", Json::from(b8.p99_ms));
+    report.set("serve_b8_mean_batch", Json::from(b8.stats.mean_batch()));
+
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent")
+        .join("BENCH_engine.json");
+    std::fs::write(&path, report.pretty()).expect("write BENCH_engine.json");
+    println!("wrote {}", path.display());
+}

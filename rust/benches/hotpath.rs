@@ -166,7 +166,7 @@ fn main() {
 
     // Calibration data generation (should be negligible).
     let t_data = common::median_secs(9, || {
-        std::hint::black_box(TaskData::new(model, 9).batch(3, 16));
+        std::hint::black_box(TaskData::new(model, 9).unwrap().batch(3, 16));
     });
     println!("synthetic batch gen: {:7.3} ms", t_data * 1e3);
     report.set("synth_batch_gen_ms", Json::from(t_data * 1e3));

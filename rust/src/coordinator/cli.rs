@@ -10,6 +10,8 @@
 //! aimet ptq        --model M [...]     fig 4.1 pipeline + eval report
 //! aimet qat        --model M [...]     fig 5.2 pipeline + eval report
 //! aimet compress   --model M [...]     greedy SVD/prune search + PTQ compose
+//! aimet infer      --model M [...]     lower to the integer engine + validate vs sim
+//! aimet serve-bench --model M [...]    batched int8 serving latency/throughput
 //! aimet debug      [--effort E]         fig 4.5 debugging flow
 //! aimet export     --model M --out D   train + ptq + export encodings (§3.3)
 //! aimet experiment <id>                table4.1|table4.2|table5.1|table5.2|fig4.2|all
@@ -22,6 +24,7 @@
 
 use super::experiments::{self, Effort};
 use crate::compress::{compress_then_ptq, greedy_plan, SearchOptions};
+use crate::engine::{lower, run_serve_bench, BatchConfig};
 use crate::ptq::{standard_ptq_pipeline, PtqOptions};
 use crate::qat::{fit_qat, TrainConfig};
 use crate::quantsim::default_config_json;
@@ -160,6 +163,14 @@ COMMANDS
                                  greedy spatial-SVD/channel-prune search to a
                                  MAC budget, then compress -> BN fold -> CLE ->
                                  quantize
+  infer    --model M [--batch N --batches K --effort fast|full]
+                                 train + PTQ-calibrate, lower to the integer-only
+                                 engine, report eval/agreement/latency vs the
+                                 quantsim and FP32 paths
+  serve-bench --model M [--clients N --requests R --max-batch B
+               --max-wait-ms MS --effort fast|full]
+                                 batched int8 serving: latency percentiles +
+                                 throughput, coalesced vs batch-1
   debug    [--effort fast|full]
   export   --model M --out DIR
   experiment <table4.1|table4.2|table5.1|table5.2|fig4.2|debug|all>
@@ -181,6 +192,18 @@ fn command_spec(cmd: &str) -> Option<(&'static [&'static str], usize)> {
                 "effort",
                 "calib-batches",
                 "eval-batches",
+            ],
+            0,
+        ),
+        "infer" => (&["model", "batch", "batches", "effort"], 0),
+        "serve-bench" => (
+            &[
+                "model",
+                "clients",
+                "requests",
+                "max-batch",
+                "max-wait-ms",
+                "effort",
             ],
             0,
         ),
@@ -237,6 +260,8 @@ pub fn run(argv: &[String]) -> i32 {
         "ptq" => cmd_ptq(&args),
         "qat" => cmd_qat(&args),
         "compress" => cmd_compress(&args),
+        "infer" => cmd_infer(&args),
+        "serve-bench" => cmd_serve_bench(&args),
         "debug" => cmd_debug(&args),
         "export" => cmd_export(&args),
         "experiment" => cmd_experiment(
@@ -269,7 +294,7 @@ fn cmd_train(args: &Args) -> Result<i32, String> {
     let (g, data, log) =
         experiments::trained_model_with(&model, effort, 1234, steps, args.opt("lr")?);
     println!("{}", log.render());
-    let metric = evaluate_graph(&g, &model, &data, 6, 16);
+    let metric = evaluate_graph(&g, &model, &data, 6, 16)?;
     println!(
         "trained {model}: final loss {:.4}, {} = {:.2}",
         log.final_loss(),
@@ -288,13 +313,13 @@ fn cmd_ptq(args: &Args) -> Result<i32, String> {
         opts.adaround.iterations = args.usize_or("adaround-iters", 300)?;
     }
     let (g, data, _) = experiments::trained_model(&model, effort, 1234);
-    let fp32 = evaluate_graph(&g, &model, &data, 6, 16);
+    let fp32 = evaluate_graph(&g, &model, &data, 6, 16)?;
     let calib = data.calibration(4, 16);
     let out = standard_ptq_pipeline(&g, &calib, &opts);
     for line in &out.log {
         println!("ptq: {line}");
     }
-    let q = evaluate_sim(&out.sim, &model, &data, 6, 16);
+    let q = evaluate_sim(&out.sim, &model, &data, 6, 16)?;
     println!(
         "{model}: FP32 {fp32:.2} -> W8/A8 PTQ {q:.2} ({})",
         metrics::metric_name(&model)
@@ -308,10 +333,10 @@ fn cmd_qat(args: &Args) -> Result<i32, String> {
     let steps = args.usize_or("steps", 120)?;
     let lr = args.f32_or("lr", 0.01)?;
     let (g, data, _) = experiments::trained_model(&model, effort, 1234);
-    let fp32 = evaluate_graph(&g, &model, &data, 6, 16);
+    let fp32 = evaluate_graph(&g, &model, &data, 6, 16)?;
     let calib = data.calibration(4, 16);
     let out = standard_ptq_pipeline(&g, &calib, &PtqOptions::default());
-    let ptq = evaluate_sim(&out.sim, &model, &data, 6, 16);
+    let ptq = evaluate_sim(&out.sim, &model, &data, 6, 16)?;
     let mut sim = out.sim;
     let cfg = TrainConfig {
         steps,
@@ -320,7 +345,7 @@ fn cmd_qat(args: &Args) -> Result<i32, String> {
     };
     let log = fit_qat(&mut sim, &model, &data, &cfg);
     println!("{}", log.render());
-    let qat = evaluate_sim(&sim, &model, &data, 6, 16);
+    let qat = evaluate_sim(&sim, &model, &data, 6, 16)?;
     println!(
         "{model}: FP32 {fp32:.2} | PTQ {ptq:.2} | QAT {qat:.2} ({})",
         metrics::metric_name(&model)
@@ -341,10 +366,13 @@ fn cmd_compress(args: &Args) -> Result<i32, String> {
     let mut input_shape = vec![1usize];
     input_shape.extend(zoo::input_shape(&model).unwrap());
     let calib = data.calibration(calib_batches, 16);
-    let fp32 = evaluate_graph(&g, &model, &data, 6, 16);
+    let fp32 = evaluate_graph(&g, &model, &data, 6, 16)?;
 
     // Greedy per-layer ratio search (candidates scored on the pool).
-    let eval = |g2: &crate::graph::Graph| evaluate_graph(g2, &model, &data, eval_batches, 16);
+    let eval = |g2: &crate::graph::Graph| {
+        // `model` was validated above, so this cannot fail on model name.
+        evaluate_graph(g2, &model, &data, eval_batches, 16).expect("validated model")
+    };
     let opts = SearchOptions {
         target_ratio: target,
         ..Default::default()
@@ -384,12 +412,130 @@ fn cmd_compress(args: &Args) -> Result<i32, String> {
     for line in &ptq.log {
         println!("ptq: {line}");
     }
-    let compressed = evaluate_graph(&res.graph, &model, &data, 6, 16);
-    let quantized = evaluate_sim(&ptq.sim, &model, &data, 6, 16);
+    let compressed = evaluate_graph(&res.graph, &model, &data, 6, 16)?;
+    let quantized = evaluate_sim(&ptq.sim, &model, &data, 6, 16)?;
     println!(
         "{model}: FP32 {fp32:.2} | compressed {compressed:.2} ({:.1}% MACs) | compressed+PTQ {quantized:.2} ({})",
         100.0 * res.mac_ratio(),
         metrics::metric_name(&model)
+    );
+    Ok(0)
+}
+
+/// Train (fast) + PTQ-calibrate + lower one zoo model onto the integer
+/// engine, prepare serving samples. Shared by `infer` and `serve-bench`.
+fn lowered_model(
+    args: &Args,
+) -> Result<(String, crate::engine::QuantizedModel, crate::quantsim::QuantizationSimModel, crate::graph::Graph, crate::task::TaskData), String> {
+    let model = args.model()?;
+    let effort = args.effort()?;
+    let (g, data, _) = experiments::trained_model(&model, effort, 1234);
+    let calib = data.calibration(4, 16);
+    let out = standard_ptq_pipeline(&g, &calib, &PtqOptions::default());
+    let qm = lower(&out.sim).map_err(|e| format!("lowering failed: {e}"))?;
+    Ok((model, qm, out.sim, g, data))
+}
+
+fn cmd_infer(args: &Args) -> Result<i32, String> {
+    let batch = args.usize_or("batch", 8)?;
+    let batches = args.usize_or("batches", 4)?;
+    if batch == 0 || batches == 0 {
+        return Err("flags --batch/--batches must be >= 1".to_string());
+    }
+    let (model, qm, sim, g, data) = lowered_model(args)?;
+    println!("{}", qm.describe());
+
+    let out_enc = *qm.output_encoding();
+    let (mut m_fp32, mut m_sim, mut m_eng) = (0.0f32, 0.0f32, 0.0f32);
+    let (mut t_fp32, mut t_sim, mut t_eng) = (0.0f64, 0.0f64, 0.0f64);
+    let (mut worst_step, mut gt1, mut elems) = (0i32, 0usize, 0usize);
+    for i in 0..batches {
+        let (x, t) = data.batch(50_000 + i as u64, batch);
+        let t0 = std::time::Instant::now();
+        let y_fp = g.forward(&x);
+        t_fp32 += t0.elapsed().as_secs_f64();
+        let t0 = std::time::Instant::now();
+        let y_sim = sim.forward(&x);
+        t_sim += t0.elapsed().as_secs_f64();
+        let t0 = std::time::Instant::now();
+        let y_int = qm.forward_int(&x);
+        t_eng += t0.elapsed().as_secs_f64();
+        // Agreement: both outputs as integers on the output grid.
+        for (&q, &v) in y_int.data().iter().zip(y_sim.data()) {
+            let d = (q - out_enc.quantize(v)).abs();
+            worst_step = worst_step.max(d);
+            gt1 += usize::from(d > 1);
+            elems += 1;
+        }
+        m_fp32 += crate::task::quality(&model, &y_fp, &t)?;
+        m_sim += crate::task::quality(&model, &y_sim, &t)?;
+        m_eng += crate::task::quality(&model, &y_int.dequantize(), &t)?;
+    }
+    let n = batches as f32;
+    let ms = |s: f64| s / batches as f64 * 1e3;
+    println!(
+        "{model} (batch {batch}, {batches} batches, {}):",
+        metrics::metric_name(&model)
+    );
+    println!("  fp32     : {:7.2}  {:8.2} ms/batch", m_fp32 / n, ms(t_fp32));
+    println!("  quantsim : {:7.2}  {:8.2} ms/batch", m_sim / n, ms(t_sim));
+    println!("  engine   : {:7.2}  {:8.2} ms/batch (integer-only: {})",
+        m_eng / n,
+        ms(t_eng),
+        qm.is_integer_only()
+    );
+    println!(
+        "  engine vs sim: max deviation {worst_step} step(s), {gt1}/{elems} elements beyond 1 step"
+    );
+    Ok(0)
+}
+
+fn cmd_serve_bench(args: &Args) -> Result<i32, String> {
+    let clients = args.usize_or("clients", 4)?;
+    let requests = args.usize_or("requests", 32)?;
+    let max_batch = args.usize_or("max-batch", 8)?;
+    let max_wait_ms = args.f32_or("max-wait-ms", 2.0)?;
+    if clients == 0 || requests == 0 || max_batch == 0 || max_wait_ms < 0.0 {
+        return Err(
+            "flags --clients/--requests/--max-batch must be >= 1 and --max-wait-ms >= 0"
+                .to_string(),
+        );
+    }
+    let (model, qm, _, _, data) = lowered_model(args)?;
+    println!("{}", qm.describe());
+    let qm = std::sync::Arc::new(qm);
+    let samples: Vec<crate::tensor::Tensor> =
+        (0..32).map(|i| data.batch(90_000 + i, 1).0).collect();
+    let wait = std::time::Duration::from_secs_f32(max_wait_ms / 1e3);
+
+    // Batch-1 baseline: same traffic, no coalescing.
+    let b1 = run_serve_bench(
+        std::sync::Arc::clone(&qm),
+        &samples,
+        clients,
+        requests,
+        BatchConfig {
+            max_batch: 1,
+            max_wait: wait,
+        },
+    );
+    let bn = run_serve_bench(
+        qm,
+        &samples,
+        clients,
+        requests,
+        BatchConfig {
+            max_batch,
+            max_wait: wait,
+        },
+    );
+    println!("{model} serving ({clients} clients x {requests} reqs, max wait {max_wait_ms} ms):");
+    println!("  batch-1    : {}", b1.render());
+    println!("  max-batch {max_batch}: {}", bn.render());
+    println!(
+        "  batched speedup: {:.2}x throughput, mean batch {:.2}",
+        bn.throughput_sps / b1.throughput_sps.max(1e-9),
+        bn.stats.mean_batch()
     );
     Ok(0)
 }
@@ -488,7 +634,7 @@ fn cmd_runtime(args: &Args) -> Result<i32, String> {
                 zoo::MODEL_NAMES.join(" ")
             ));
         };
-        let data = TaskData::new(&model, 7);
+        let data = TaskData::new(&model, 7)?;
         let Some(spec) = rt.spec(&name).cloned() else {
             return Err(format!("program `{name}` not in the artifacts manifest"));
         };
@@ -621,5 +767,19 @@ mod tests {
     #[test]
     fn compress_rejects_out_of_range_target() {
         assert_eq!(run(&sv(&["compress", "--target-ratio", "1.5"])), 2);
+    }
+
+    /// The engine commands validate flags and model names before any
+    /// training/lowering work starts (all exit 2, no panic).
+    #[test]
+    fn infer_and_serve_bench_validate_cheaply() {
+        assert_eq!(run(&sv(&["infer", "--batch", "0"])), 2);
+        assert_eq!(run(&sv(&["infer", "--batches", "0"])), 2);
+        assert_eq!(run(&sv(&["infer", "--model", "mobimimi"])), 2);
+        assert_eq!(run(&sv(&["infer", "--bogus", "1"])), 2);
+        assert_eq!(run(&sv(&["serve-bench", "--clients", "zero"])), 2);
+        assert_eq!(run(&sv(&["serve-bench", "--max-batch", "0"])), 2);
+        assert_eq!(run(&sv(&["serve-bench", "--max-wait-ms", "-1"])), 2);
+        assert_eq!(run(&sv(&["serve-bench", "--model", "resmimi"])), 2);
     }
 }

@@ -89,7 +89,7 @@ pub fn trained_model_with(
     lr_override: Option<f32>,
 ) -> (Graph, TaskData, TrainLog) {
     let mut g = zoo::build(model, seed).unwrap();
-    let data = TaskData::new(model, seed + 1);
+    let data = TaskData::new(model, seed + 1).expect("zoo model name");
     // Per-model budgets: the detector's objectness head needs far more
     // steps than the classifiers (1–3 positives per 64 cells), and the
     // recurrent model prefers a hotter LR.
@@ -140,7 +140,8 @@ pub fn table_4_1(effort: Effort) -> Vec<Table41Row> {
         .iter()
         .map(|&model| {
             let (g, data, _) = trained_model(model, effort, 100);
-            let fp32 = evaluate_graph(&g, model, &data, effort.eval_batches(), EVAL_BATCH);
+            let fp32 = evaluate_graph(&g, model, &data, effort.eval_batches(), EVAL_BATCH)
+                .expect("zoo eval");
             let calib = data.calibration(effort.calib_batches(), EVAL_BATCH);
 
             // "W8/A8 without CLE/BC": BN fold + min-max ranges only.
@@ -152,12 +153,13 @@ pub fn table_4_1(effort: Effort) -> Vec<Table41Row> {
                 ..Default::default()
             };
             let rtn = standard_ptq_pipeline(&g, &calib, &rtn_opts);
-            let rtn_acc = evaluate_sim(&rtn.sim, model, &data, effort.eval_batches(), EVAL_BATCH);
+            let rtn_acc = evaluate_sim(&rtn.sim, model, &data, effort.eval_batches(), EVAL_BATCH)
+                .expect("zoo eval");
 
             // "AIMET W8/A8 with CLE/BC" (fig 4.1 defaults).
             let full = standard_ptq_pipeline(&g, &calib, &PtqOptions::default());
-            let full_acc =
-                evaluate_sim(&full.sim, model, &data, effort.eval_batches(), EVAL_BATCH);
+            let full_acc = evaluate_sim(&full.sim, model, &data, effort.eval_batches(), EVAL_BATCH)
+                .expect("zoo eval");
 
             Table41Row {
                 model: model.to_string(),
@@ -199,7 +201,8 @@ pub struct Table42Row {
 pub fn table_4_2(effort: Effort) -> Vec<Table42Row> {
     let model = "detmini";
     let (g, data, _) = trained_model(model, effort, 200);
-    let fp32 = evaluate_graph(&g, model, &data, effort.eval_batches(), EVAL_BATCH);
+    let fp32 = evaluate_graph(&g, model, &data, effort.eval_batches(), EVAL_BATCH)
+        .expect("zoo eval");
     let calib = data.calibration(effort.calib_batches(), EVAL_BATCH);
     // The paper's ADAS row is W8/A8 on a production model that RTN
     // collapses; our laptop-scale detector is more robust at W8, so the
@@ -220,7 +223,8 @@ pub fn table_4_2(effort: Effort) -> Vec<Table42Row> {
                 ..Default::default()
             };
             let rtn = standard_ptq_pipeline(&g, &calib, &rtn_opts);
-            let rtn_map = evaluate_sim(&rtn.sim, model, &data, effort.eval_batches(), EVAL_BATCH);
+            let rtn_map = evaluate_sim(&rtn.sim, model, &data, effort.eval_batches(), EVAL_BATCH)
+                .expect("zoo eval");
 
             let mut ada_opts = PtqOptions {
                 qp,
@@ -230,7 +234,8 @@ pub fn table_4_2(effort: Effort) -> Vec<Table42Row> {
             ada_opts.adaround.iterations = effort.adaround_iters();
             ada_opts.adaround.max_rows = 2048;
             let ada = standard_ptq_pipeline(&g, &calib, &ada_opts);
-            let ada_map = evaluate_sim(&ada.sim, model, &data, effort.eval_batches(), EVAL_BATCH);
+            let ada_map = evaluate_sim(&ada.sim, model, &data, effort.eval_batches(), EVAL_BATCH)
+                .expect("zoo eval");
 
             Table42Row {
                 config: format!("W{w_bw}/A{a_bw}"),
@@ -274,10 +279,12 @@ pub fn table_5_1(effort: Effort) -> Vec<Table51Row> {
         .iter()
         .map(|&model| {
             let (g, data, _) = trained_model(model, effort, 300);
-            let fp32 = evaluate_graph(&g, model, &data, effort.eval_batches(), EVAL_BATCH);
+            let fp32 = evaluate_graph(&g, model, &data, effort.eval_batches(), EVAL_BATCH)
+                .expect("zoo eval");
             let calib = data.calibration(effort.calib_batches(), EVAL_BATCH);
             let ptq_out = standard_ptq_pipeline(&g, &calib, &PtqOptions::default());
-            let ptq = evaluate_sim(&ptq_out.sim, model, &data, effort.eval_batches(), EVAL_BATCH);
+            let ptq = evaluate_sim(&ptq_out.sim, model, &data, effort.eval_batches(), EVAL_BATCH)
+                .expect("zoo eval");
 
             // Fig 5.2: QAT starts from the PTQ-initialized sim.
             let mut sim = ptq_out.sim.clone();
@@ -288,7 +295,8 @@ pub fn table_5_1(effort: Effort) -> Vec<Table51Row> {
                 ..Default::default()
             };
             fit_qat(&mut sim, model, &data, &qat_cfg);
-            let qat = evaluate_sim(&sim, model, &data, effort.eval_batches(), EVAL_BATCH);
+            let qat = evaluate_sim(&sim, model, &data, effort.eval_batches(), EVAL_BATCH)
+                .expect("zoo eval");
 
             Table51Row {
                 model: model.to_string(),
@@ -329,8 +337,9 @@ pub fn table_5_2(effort: Effort) -> Table52Row {
     let model = "speechmini";
     let (g, data, _) = trained_model(model, effort, 400);
     // evaluate_* return 100−TER (higher-better); flip back to TER.
-    let fp32_ter =
-        100.0 - evaluate_graph(&g, model, &data, effort.eval_batches(), EVAL_BATCH);
+    let fp32_ter = 100.0
+        - evaluate_graph(&g, model, &data, effort.eval_batches(), EVAL_BATCH)
+            .expect("zoo eval");
     let calib = data.calibration(effort.calib_batches(), EVAL_BATCH);
     let mut sim = QuantizationSimModel::with_defaults(g, QuantParams::default());
     sim.compute_encodings(&calib);
@@ -341,7 +350,9 @@ pub fn table_5_2(effort: Effort) -> Table52Row {
         ..Default::default()
     };
     fit_qat(&mut sim, model, &data, &qat_cfg);
-    let qat_ter = 100.0 - evaluate_sim(&sim, model, &data, effort.eval_batches(), EVAL_BATCH);
+    let qat_ter = 100.0
+        - evaluate_sim(&sim, model, &data, effort.eval_batches(), EVAL_BATCH)
+            .expect("zoo eval");
     Table52Row { fp32_ter, qat_ter }
 }
 
@@ -409,7 +420,8 @@ pub fn render_fig_4_2_4_3(res: &CleRangesResult) -> String {
 pub fn debug_flow_demo(effort: Effort) -> DebugReport {
     let model = "mobimini";
     let (g, data, _) = trained_model(model, effort, 600);
-    let fp32 = evaluate_graph(&g, model, &data, effort.eval_batches(), EVAL_BATCH);
+    let fp32 = evaluate_graph(&g, model, &data, effort.eval_batches(), EVAL_BATCH)
+        .expect("zoo eval");
     let calib = data.calibration(effort.calib_batches(), EVAL_BATCH);
     // A W4/A8 no-CLE sim: broken enough for the flow to say something.
     let opts = PtqOptions {
@@ -424,7 +436,7 @@ pub fn debug_flow_demo(effort: Effort) -> DebugReport {
     let out = standard_ptq_pipeline(&g, &calib, &opts);
     let eval_batches = effort.eval_batches().min(2);
     run_debug_flow(&out.sim, fp32, &|sim| {
-        evaluate_sim(sim, model, &data, eval_batches, EVAL_BATCH)
+        evaluate_sim(sim, model, &data, eval_batches, EVAL_BATCH).expect("zoo eval")
     })
 }
 

@@ -1,0 +1,1075 @@
+//! Integer-only inference engine — the deployment path the PTQ/QAT
+//! workflow exists for (paper ch. 1–2; Nagel et al. 2021 eq 2.9;
+//! Krishnamoorthi 2018).
+//!
+//! [`lower`] converts a calibrated [`QuantizationSimModel`] into a
+//! standalone [`QuantizedModel`]: every weight is pre-packed once into a
+//! [`QTensor`] (per-tensor or per-channel), every layer boundary gets a
+//! *folded requantization multiplier* (`s_w·s_x / s_out`, eq 2.9), and
+//! conv/linear layers whose activation the runtime config fuses
+//! (Conv+ReLU/ReLU6 supergroups) absorb the activation as integer clamps
+//! in the requantization epilogue. Activations then stay INT8 end-to-end:
+//! the engine's forward never materializes a dequantized activation
+//! tensor — the only float arithmetic on the hot path is the one scalar
+//! multiply per INT32 accumulator of fig 2.2's rescale step.
+//!
+//! The lowered model agrees with [`QuantizationSimModel::forward`] to
+//! within one quantization step per output element (the sim accumulates
+//! the same grid values in f32, so the two pipelines can round a rare
+//! near-tie apart — see `rust/tests/engine_integration.rs`).
+//!
+//! Ops with no integer formulation on this stack (the zoo's LSTM: its
+//! gate nonlinearities are f32) lower to an explicitly-marked f32 island
+//! that dequantizes at its boundary and reproduces the sim bit-for-bit;
+//! [`QuantizedModel::is_integer_only`] reports whether a model has any.
+//!
+//! [`serve`] adds the batched front-end: single-sample requests coalesced
+//! into micro-batches and executed on the shared worker pool.
+
+pub mod serve;
+
+pub use serve::{run_serve_bench, BatchClient, BatchConfig, BatchServer, ServeReport, ServeStats};
+
+use crate::graph::{lstm_forward, Input, Op};
+use crate::pool::{parallel_chunks, SyncSlice};
+use crate::quant::{quantize_ints, requantize_value, Encoding, QTensor, Requant};
+use crate::quantsim::QuantizationSimModel;
+use crate::tensor::{Conv2dSpec, Tensor};
+
+/// A dense integer tensor: values on one [`Encoding`]'s grid. Storage is
+/// `i32` (the values themselves fit the encoding's 8-bit grid; i32 keeps
+/// the kernels branch-free and matches the accumulator width).
+#[derive(Debug, Clone)]
+pub struct ITensor {
+    shape: Vec<usize>,
+    data: Vec<i32>,
+    /// The grid this tensor's values live on.
+    pub enc: Encoding,
+}
+
+impl ITensor {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>, enc: Encoding) -> ITensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        ITensor { shape, data, enc }
+    }
+
+    /// Quantize an f32 tensor onto `enc`'s grid (the model-input boundary).
+    pub fn quantize(x: &Tensor, enc: &Encoding) -> ITensor {
+        ITensor::new(x.shape().to_vec(), quantize_ints(x.data(), enc), *enc)
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn dim(&self, i: usize) -> usize {
+        self.shape[i]
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[i32] {
+        &self.data
+    }
+
+    /// De-quantize to real values (eq 2.6) — the model-output boundary.
+    pub fn dequantize(&self) -> Tensor {
+        let z = self.enc.offset;
+        let s = self.enc.scale;
+        Tensor::new(
+            &self.shape,
+            self.data.iter().map(|&q| s * (q - z) as f32).collect(),
+        )
+    }
+}
+
+/// Fused activation absorbed into a weighted layer's requantization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FusedAct {
+    Relu,
+    Relu6,
+}
+
+/// A pointwise grid-to-grid remap: `q_out = clamp(rte(mult·(q_in − z_in))
+/// + z_out, lo, hi)`. Standalone ReLU/ReLU6 (the clamps carry the
+/// activation), pools, upsampling and concat inputs all reduce to this.
+#[derive(Debug, Clone, Copy)]
+struct Remap {
+    mult: f32,
+    z_in: i32,
+    z_out: i32,
+    lo: i32,
+    hi: i32,
+}
+
+impl Remap {
+    fn new(in_enc: &Encoding, out_enc: &Encoding, act: Option<FusedAct>) -> Remap {
+        let (lo, hi) = act_clamp(out_enc, act);
+        Remap {
+            mult: in_enc.scale / out_enc.scale,
+            z_in: in_enc.offset,
+            z_out: out_enc.offset,
+            lo,
+            hi,
+        }
+    }
+
+    /// Requantize a value already centered on the input grid (i.e.
+    /// `q − z_in`, possibly pre-aggregated by a pooling sum).
+    #[inline]
+    fn apply(&self, centered: f32) -> i32 {
+        requantize_value(self.mult * centered, self.z_out, self.lo, self.hi)
+    }
+
+    #[inline]
+    fn map(&self, q: i32) -> i32 {
+        self.apply((q - self.z_in) as f32)
+    }
+}
+
+/// Integer clamp bounds implementing a fused activation on `e`'s grid:
+/// real 0 sits exactly at the zero-point (§2.2), so ReLU is a lower clamp
+/// at `z` and ReLU6 additionally caps at the grid image of 6.
+fn act_clamp(e: &Encoding, act: Option<FusedAct>) -> (i32, i32) {
+    match act {
+        None => (e.int_min, e.int_max),
+        Some(FusedAct::Relu) => (e.offset.max(e.int_min), e.int_max),
+        Some(FusedAct::Relu6) => {
+            let six = (6.0 / e.scale).round_ties_even() as i64 + e.offset as i64;
+            (
+                e.offset.max(e.int_min),
+                six.min(e.int_max as i64).max(e.int_min as i64) as i32,
+            )
+        }
+    }
+}
+
+/// One lowered node's executable form.
+#[derive(Debug, Clone)]
+enum QOp {
+    /// Dense conv: im2col (zero-point padded) + integer GEMM with folded
+    /// requantization; a fused ReLU/ReLU6 lives in `rq`'s clamps.
+    Conv {
+        qw: QTensor,
+        kh: usize,
+        kw: usize,
+        spec: Conv2dSpec,
+        rq: Requant,
+    },
+    /// Depthwise conv: per-channel direct integer kernel.
+    Depthwise {
+        qw: QTensor,
+        kh: usize,
+        kw: usize,
+        spec: Conv2dSpec,
+        rq: Requant,
+    },
+    /// Linear over [..., F] (leading dims flattened to a batch).
+    Linear { qw: QTensor, rq: Requant },
+    /// An activation fused into its producer that is also the model
+    /// output: passes the producer's tensor through (one clone at the
+    /// model boundary).
+    Identity,
+    /// An activation fused into its producer whose consumers were rewired
+    /// to read the producer directly: its slot holds an empty placeholder,
+    /// so fusion costs nothing at run time (node indices still mirror the
+    /// sim graph).
+    FusedAway,
+    /// Pointwise requantization; standalone ReLU/ReLU6 ride in the clamps.
+    Requantize(Remap),
+    /// Inference-form BatchNorm as a per-channel requantization (the
+    /// affine per-channel scale/shift folds into mult/bias exactly).
+    ChannelAffine {
+        mult: Vec<f32>,
+        bias: Vec<f32>,
+        z_in: i32,
+        z_out: i32,
+        lo: i32,
+        hi: i32,
+    },
+    /// 2×2 max pool: max on the integer grid (order-preserving), then the
+    /// (usually identity) remap to the output grid.
+    MaxPool2(Remap),
+    /// 2×2 average pool: integer 4-sum, requantized with the /4 folded in.
+    AvgPool2(Remap),
+    /// Global average pool: integer sum over H·W, /HW folded at exec time.
+    GlobalAvgPool(Remap),
+    /// Nearest-neighbour 2× upsample with boundary requant.
+    Upsample2(Remap),
+    Flatten(Remap),
+    /// Elementwise sum: each input carries its own multiplier onto the
+    /// output grid, `(mult_i, z_i)` per input.
+    Add {
+        terms: Vec<(f32, i32)>,
+        z_out: i32,
+        lo: i32,
+        hi: i32,
+    },
+    /// Concatenation: each part requantized onto the output grid.
+    Concat { axis: usize, parts: Vec<Remap> },
+    /// f32 island: ops with no integer formulation here (LSTM gate
+    /// nonlinearities). Dequantizes its input, reproduces the sim's f32
+    /// computation bit-for-bit (same qdq'd weights), requantizes out.
+    LstmF32 {
+        w_ih: Tensor,
+        w_hh: Tensor,
+        bias: Vec<f32>,
+        hidden: usize,
+        reverse: bool,
+    },
+}
+
+/// One node of the lowered model (topology mirrors the sim graph 1:1).
+#[derive(Debug, Clone)]
+struct QNode {
+    name: String,
+    inputs: Vec<Input>,
+    op: QOp,
+}
+
+/// A standalone integer inference model: the output of [`lower`].
+/// Holds pre-packed integer weights and folded requantization parameters
+/// only — no dependence on the sim, its quantizers, or f32 weights.
+#[derive(Debug, Clone)]
+pub struct QuantizedModel {
+    nodes: Vec<QNode>,
+    output: usize,
+    input_enc: Encoding,
+    out_encs: Vec<Encoding>,
+}
+
+fn reject_passthrough(e: &Encoding, what: &str) -> Result<(), String> {
+    if e.is_passthrough() {
+        Err(format!(
+            "{what}: bit-width {} is a passthrough encoding — integer lowering \
+             needs a real grid (bw ≤ 16)",
+            e.bw
+        ))
+    } else {
+        Ok(())
+    }
+}
+
+/// Lower a calibrated quantization sim into a [`QuantizedModel`].
+///
+/// Requirements (all surfaced as diagnostics, never panics):
+/// * `compute_encodings` has run — every reachable edge needs a grid;
+/// * the model input is quantized (`quantize_model_input`);
+/// * batch norms are folded (the PTQ pipeline always folds) — an unfused
+///   BatchNorm with its own quantizer lowers fine (per-channel affine),
+///   but a supergroup-suppressed one has no grid to lower onto;
+/// * weighted layers whose output quantizer the config suppressed must
+///   end in a fusable ReLU/ReLU6 (the supergroup shapes of fig 3.4).
+pub fn lower(sim: &QuantizationSimModel) -> Result<QuantizedModel, String> {
+    let g = &sim.graph;
+    let n = g.nodes.len();
+    let input_enc = sim.input_encoding().ok_or_else(|| {
+        "model input is not quantized — lowering needs a calibrated sim with \
+         quantize_model_input enabled (run compute_encodings / the PTQ pipeline first)"
+            .to_string()
+    })?;
+    reject_passthrough(&input_enc, "model input")?;
+
+    // Pass 1: resolve the integer grid of every edge, deciding
+    // conv/linear + ReLU fusion where the config suppressed the
+    // intermediate output quantizer.
+    let mut out_enc: Vec<Option<Encoding>> = vec![None; n];
+    let mut fused_with: Vec<Option<FusedAct>> = vec![None; n];
+    let mut fused_away = vec![false; n];
+    // For a fused-away activation, the weighted producer its consumers
+    // are rewired to.
+    let mut fuse_src = vec![usize::MAX; n];
+    for idx in 0..n {
+        let node = &g.nodes[idx];
+        if let Some(e) = sim.act_encoding(idx) {
+            reject_passthrough(&e, &node.name)?;
+            out_enc[idx] = Some(e);
+            continue;
+        }
+        match &node.op {
+            // Grid-preserving ops inherit their input's encoding (§7.3.1).
+            Op::Flatten | Op::MaxPool2 => {
+                // Topological order: the producer is already resolved.
+                let e = match node.inputs[0] {
+                    Input::Graph => input_enc,
+                    Input::Node(j) => out_enc[j].expect("topological order"),
+                };
+                out_enc[idx] = Some(e);
+            }
+            Op::Conv2d { .. } | Op::DepthwiseConv2d { .. } | Op::Linear { .. } => {
+                let fusable = g.single_consumer(idx).and_then(|ci| {
+                    let act = match g.nodes[ci].op {
+                        Op::Relu => FusedAct::Relu,
+                        Op::Relu6 => FusedAct::Relu6,
+                        _ => return None,
+                    };
+                    sim.act_encoding(ci).map(|e| (ci, act, e))
+                });
+                match fusable {
+                    Some((ci, act, e)) => {
+                        reject_passthrough(&e, &node.name)?;
+                        out_enc[idx] = Some(e);
+                        fused_with[idx] = Some(act);
+                        fused_away[ci] = true;
+                        fuse_src[ci] = idx;
+                    }
+                    None => {
+                        return Err(format!(
+                            "cannot lower `{}`: its output has no activation quantizer \
+                             and no fusable ReLU/ReLU6 consumer — fold batch norms (the \
+                             PTQ pipeline does) or enable the quantizer",
+                            node.name
+                        ))
+                    }
+                }
+            }
+            _ => {
+                return Err(format!(
+                    "cannot lower `{}` ({}): its output is not quantized",
+                    node.name,
+                    node.op.kind()
+                ))
+            }
+        }
+    }
+
+    // Pass 2: build the executable ops with folded requantization.
+    let resolve_in = |idx: usize, k: usize| -> Encoding {
+        match g.nodes[idx].inputs[k] {
+            Input::Graph => input_enc,
+            Input::Node(j) => out_enc[j].expect("pass 1 resolved"),
+        }
+    };
+    let mut nodes = Vec::with_capacity(n);
+    for idx in 0..n {
+        let node = &g.nodes[idx];
+        let oenc = out_enc[idx].expect("pass 1 resolved");
+        let op = match &node.op {
+            Op::Conv2d { weight, bias, spec } => {
+                let (o, i, kh, kw) = (weight.dim(0), weight.dim(1), weight.dim(2), weight.dim(3));
+                let qw = weight_qtensor(sim, idx, weight, o, i * kh * kw)?;
+                let ienc = resolve_in(idx, 0);
+                check_acc(&qw, &ienc, &node.name)?;
+                let rq = fold_requant(&qw, bias, &ienc, &oenc, fused_with[idx]);
+                QOp::Conv { qw, kh, kw, spec: *spec, rq }
+            }
+            Op::DepthwiseConv2d { weight, bias, spec } => {
+                let (c, kh, kw) = (weight.dim(0), weight.dim(2), weight.dim(3));
+                let qw = weight_qtensor(sim, idx, weight, c, kh * kw)?;
+                let ienc = resolve_in(idx, 0);
+                check_acc(&qw, &ienc, &node.name)?;
+                let rq = fold_requant(&qw, bias, &ienc, &oenc, fused_with[idx]);
+                QOp::Depthwise { qw, kh, kw, spec: *spec, rq }
+            }
+            Op::Linear { weight, bias } => {
+                let (o, f) = (weight.dim(0), weight.dim(1));
+                let qw = weight_qtensor(sim, idx, weight, o, f)?;
+                let ienc = resolve_in(idx, 0);
+                check_acc(&qw, &ienc, &node.name)?;
+                let rq = fold_requant(&qw, bias, &ienc, &oenc, fused_with[idx]);
+                QOp::Linear { qw, rq }
+            }
+            Op::Relu | Op::Relu6 => {
+                if fused_away[idx] {
+                    // The producer already carries this node's encoding
+                    // and clamps; consumers are rewired below. Only the
+                    // model-output position still needs the pass-through.
+                    if g.output == idx {
+                        QOp::Identity
+                    } else {
+                        QOp::FusedAway
+                    }
+                } else {
+                    let act = if matches!(node.op, Op::Relu6) {
+                        FusedAct::Relu6
+                    } else {
+                        FusedAct::Relu
+                    };
+                    QOp::Requantize(Remap::new(&resolve_in(idx, 0), &oenc, Some(act)))
+                }
+            }
+            Op::BatchNorm {
+                gamma,
+                beta,
+                mean,
+                var,
+                eps,
+            } => {
+                // y = x·s_c + t_c with s_c = γ/√(σ²+ε), t_c = β − μ·s_c:
+                // folds into a per-channel requant multiplier exactly.
+                let ienc = resolve_in(idx, 0);
+                let (lo, hi) = act_clamp(&oenc, None);
+                let mut mult = Vec::with_capacity(gamma.len());
+                let mut bias_q = Vec::with_capacity(gamma.len());
+                for c in 0..gamma.len() {
+                    let s = gamma[c] / (var[c] + eps).sqrt();
+                    let t = beta[c] - mean[c] * s;
+                    mult.push(s * ienc.scale / oenc.scale);
+                    bias_q.push(t / oenc.scale);
+                }
+                QOp::ChannelAffine {
+                    mult,
+                    bias: bias_q,
+                    z_in: ienc.offset,
+                    z_out: oenc.offset,
+                    lo,
+                    hi,
+                }
+            }
+            Op::MaxPool2 => QOp::MaxPool2(Remap::new(&resolve_in(idx, 0), &oenc, None)),
+            Op::AvgPool2 => {
+                let ienc = resolve_in(idx, 0);
+                let mut r = Remap::new(&ienc, &oenc, None);
+                r.mult *= 0.25; // the /4 of the 2×2 mean, folded
+                QOp::AvgPool2(r)
+            }
+            Op::GlobalAvgPool => {
+                QOp::GlobalAvgPool(Remap::new(&resolve_in(idx, 0), &oenc, None))
+            }
+            Op::Upsample2 => QOp::Upsample2(Remap::new(&resolve_in(idx, 0), &oenc, None)),
+            Op::Flatten => QOp::Flatten(Remap::new(&resolve_in(idx, 0), &oenc, None)),
+            Op::Add => {
+                let (lo, hi) = act_clamp(&oenc, None);
+                let terms = (0..node.inputs.len())
+                    .map(|k| {
+                        let e = resolve_in(idx, k);
+                        (e.scale / oenc.scale, e.offset)
+                    })
+                    .collect();
+                QOp::Add {
+                    terms,
+                    z_out: oenc.offset,
+                    lo,
+                    hi,
+                }
+            }
+            Op::Concat { axis } => {
+                let parts = (0..node.inputs.len())
+                    .map(|k| Remap::new(&resolve_in(idx, k), &oenc, None))
+                    .collect();
+                QOp::Concat { axis: *axis, parts }
+            }
+            Op::Lstm {
+                w_hh,
+                bias,
+                hidden,
+                reverse,
+                ..
+            } => QOp::LstmF32 {
+                // The sim's (cached) qdq'd recurrent input weight — the
+                // island reproduces the sim's f32 LSTM bit-for-bit.
+                w_ih: sim.quantized_weight(idx).expect("lstm carries w_ih"),
+                w_hh: w_hh.clone(),
+                bias: bias.clone(),
+                hidden: *hidden,
+                reverse: *reverse,
+            },
+        };
+        // Consumers of a fused-away activation read its producer directly
+        // (same tensor, same grid) — the fused node then costs nothing.
+        let inputs = node
+            .inputs
+            .iter()
+            .map(|&i| match i {
+                Input::Node(j) if fused_away[j] => Input::Node(fuse_src[j]),
+                other => other,
+            })
+            .collect();
+        nodes.push(QNode {
+            name: node.name.clone(),
+            inputs,
+            op,
+        });
+    }
+    Ok(QuantizedModel {
+        nodes,
+        output: g.output,
+        input_enc,
+        out_encs: out_enc.into_iter().map(|e| e.unwrap()).collect(),
+    })
+}
+
+/// Pre-pack one weighted layer's integer weights from its calibrated
+/// parameter quantizer.
+fn weight_qtensor(
+    sim: &QuantizationSimModel,
+    idx: usize,
+    w: &Tensor,
+    rows: usize,
+    cols: usize,
+) -> Result<QTensor, String> {
+    let name = &sim.graph.nodes[idx].name;
+    let q = sim.param_quantizer(idx).ok_or_else(|| {
+        format!("`{name}` has no calibrated weight quantizer — run compute_encodings first")
+    })?;
+    for e in &q.encodings {
+        reject_passthrough(e, name)?;
+        if e.offset != 0 {
+            return Err(format!(
+                "`{name}`: asymmetric weight encoding (z_w ≠ 0) — integer lowering \
+                 requires symmetric weights (§2.3)"
+            ));
+        }
+    }
+    Ok(QTensor::from_quantizer(&w.reshape(&[rows, cols]), q))
+}
+
+fn check_acc(qw: &QTensor, in_enc: &Encoding, name: &str) -> Result<(), String> {
+    if qw.acc_bounds_ok(in_enc) {
+        Ok(())
+    } else {
+        Err(format!(
+            "`{name}`: worst-case INT32 accumulator overflow (K too large for the \
+             bit-widths) — paper §2.1 keeps accumulators 32-bit"
+        ))
+    }
+}
+
+/// Fold a layer's requantization: per-row multiplier `s_w[m]·s_x / s_out`,
+/// bias on the output grid, activation clamps.
+fn fold_requant(
+    qw: &QTensor,
+    bias: &[f32],
+    in_enc: &Encoding,
+    out_enc: &Encoding,
+    act: Option<FusedAct>,
+) -> Requant {
+    let (lo, hi) = act_clamp(out_enc, act);
+    Requant {
+        mult: (0..qw.rows())
+            .map(|r| qw.row_scale(r) * in_enc.scale / out_enc.scale)
+            .collect(),
+        bias: bias.iter().map(|b| b / out_enc.scale).collect(),
+        z_out: out_enc.offset,
+        lo,
+        hi,
+    }
+}
+
+impl QuantizedModel {
+    /// Integer forward pass: quantize the input once, run every node on
+    /// the integer grid, return the output node's integer tensor.
+    pub fn forward_int(&self, x: &Tensor) -> ITensor {
+        let xi = ITensor::quantize(x, &self.input_enc);
+        let mut acts: Vec<ITensor> = Vec::with_capacity(self.nodes.len());
+        for (idx, node) in self.nodes.iter().enumerate() {
+            let ins: Vec<&ITensor> = node
+                .inputs
+                .iter()
+                .map(|i| match i {
+                    Input::Graph => &xi,
+                    Input::Node(j) => &acts[*j],
+                })
+                .collect();
+            let y = exec_node(node, &ins, self.out_encs[idx]);
+            acts.push(y);
+        }
+        acts.remove(self.output)
+    }
+
+    /// f32 logits: [`QuantizedModel::forward_int`] + one output dequantize.
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        self.forward_int(x).dequantize()
+    }
+
+    /// The model input's integer encoding.
+    pub fn input_encoding(&self) -> &Encoding {
+        &self.input_enc
+    }
+
+    /// The output node's integer encoding (tests compare sim outputs on
+    /// this grid).
+    pub fn output_encoding(&self) -> &Encoding {
+        &self.out_encs[self.output]
+    }
+
+    /// True when every op executes on the integer grid — no f32 islands.
+    pub fn is_integer_only(&self) -> bool {
+        self.nodes
+            .iter()
+            .all(|n| !matches!(n.op, QOp::LstmF32 { .. }))
+    }
+
+    /// Number of activations fused into their producer's requantization.
+    pub fn fused_activations(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n.op, QOp::Identity | QOp::FusedAway))
+            .count()
+    }
+
+    /// One-line lowering summary for CLI reports.
+    pub fn describe(&self) -> String {
+        let islands = self
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, QOp::LstmF32 { .. }))
+            .count();
+        format!(
+            "lowered {} nodes: {} fused activations, {} f32 islands, input {}b, output {}b{}",
+            self.nodes.len(),
+            self.fused_activations(),
+            islands,
+            self.input_enc.bw,
+            self.output_encoding().bw,
+            if islands == 0 { " — integer-only" } else { "" }
+        )
+    }
+}
+
+/// Execute one lowered node.
+fn exec_node(node: &QNode, ins: &[&ITensor], oenc: Encoding) -> ITensor {
+    let x = ins[0];
+    match &node.op {
+        QOp::Conv { qw, kh, kw, spec, rq } => conv_int(x, qw, *kh, *kw, *spec, rq, oenc),
+        QOp::Depthwise { qw, kh, kw, spec, rq } => {
+            depthwise_int(x, qw, *kh, *kw, *spec, rq, oenc)
+        }
+        QOp::Linear { qw, rq } => linear_int(x, qw, rq, oenc),
+        QOp::Identity => x.clone(),
+        // Never read (consumers rewired to the producer); keep the slot
+        // shape-aligned with an empty placeholder.
+        QOp::FusedAway => ITensor::new(vec![0], Vec::new(), oenc),
+        QOp::Requantize(r) => ITensor::new(
+            x.shape.clone(),
+            x.data.iter().map(|&q| r.map(q)).collect(),
+            oenc,
+        ),
+        QOp::ChannelAffine {
+            mult,
+            bias,
+            z_in,
+            z_out,
+            lo,
+            hi,
+        } => {
+            let (n, c) = (x.dim(0), x.dim(1));
+            let inner: usize = x.shape[2..].iter().product();
+            let mut out = vec![0i32; x.len()];
+            for ni in 0..n {
+                for ci in 0..c {
+                    let base = (ni * c + ci) * inner;
+                    let (m, b) = (mult[ci], bias[ci]);
+                    for (d, &q) in out[base..base + inner].iter_mut().zip(&x.data[base..]) {
+                        *d = requantize_value(m * (q - z_in) as f32 + b, *z_out, *lo, *hi);
+                    }
+                }
+            }
+            ITensor::new(x.shape.clone(), out, oenc)
+        }
+        QOp::MaxPool2(r) => {
+            let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+            let (oh, ow) = (h / 2, w / 2);
+            let mut out = vec![0i32; n * c * oh * ow];
+            for pc in 0..n * c {
+                let ib = pc * h * w;
+                let ob = pc * oh * ow;
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let i00 = ib + (2 * oy) * w + 2 * ox;
+                        let m = x.data[i00]
+                            .max(x.data[i00 + 1])
+                            .max(x.data[i00 + w])
+                            .max(x.data[i00 + w + 1]);
+                        out[ob + oy * ow + ox] = r.map(m);
+                    }
+                }
+            }
+            ITensor::new(vec![n, c, oh, ow], out, oenc)
+        }
+        QOp::AvgPool2(r) => {
+            let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+            let (oh, ow) = (h / 2, w / 2);
+            let mut out = vec![0i32; n * c * oh * ow];
+            for pc in 0..n * c {
+                let ib = pc * h * w;
+                let ob = pc * oh * ow;
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let i00 = ib + (2 * oy) * w + 2 * ox;
+                        let sum =
+                            x.data[i00] + x.data[i00 + 1] + x.data[i00 + w] + x.data[i00 + w + 1];
+                        // r.mult already carries the /4; centered sum.
+                        out[ob + oy * ow + ox] = r.apply((sum - 4 * r.z_in) as f32);
+                    }
+                }
+            }
+            ITensor::new(vec![n, c, oh, ow], out, oenc)
+        }
+        QOp::GlobalAvgPool(r) => {
+            let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+            let hw = (h * w) as i64;
+            let mut out = vec![0i32; n * c];
+            for (pc, o) in out.iter_mut().enumerate() {
+                let base = pc * (h * w);
+                let sum: i64 = x.data[base..base + h * w].iter().map(|&q| q as i64).sum();
+                *o = r.apply((sum - hw * r.z_in as i64) as f32 / hw as f32);
+            }
+            ITensor::new(vec![n, c], out, oenc)
+        }
+        QOp::Upsample2(r) => {
+            let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+            let (oh, ow) = (h * 2, w * 2);
+            let mut out = vec![0i32; n * c * oh * ow];
+            for pc in 0..n * c {
+                let ib = pc * h * w;
+                let ob = pc * oh * ow;
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        out[ob + oy * ow + ox] = r.map(x.data[ib + (oy / 2) * w + ox / 2]);
+                    }
+                }
+            }
+            ITensor::new(vec![n, c, oh, ow], out, oenc)
+        }
+        QOp::Flatten(r) => {
+            let n = x.dim(0);
+            ITensor::new(
+                vec![n, x.len() / n],
+                x.data.iter().map(|&q| r.map(q)).collect(),
+                oenc,
+            )
+        }
+        QOp::Add { terms, z_out, lo, hi } => {
+            for other in &ins[1..] {
+                assert_eq!(other.shape, x.shape, "Add input shapes");
+            }
+            let mut out = vec![0i32; x.len()];
+            for (e, d) in out.iter_mut().enumerate() {
+                let mut v = 0.0f32;
+                for (k, &(m, z)) in terms.iter().enumerate() {
+                    v += m * (ins[k].data[e] - z) as f32;
+                }
+                *d = requantize_value(v, *z_out, *lo, *hi);
+            }
+            ITensor::new(x.shape.clone(), out, oenc)
+        }
+        QOp::Concat { axis, parts } => {
+            let rank = x.shape.len();
+            for p in ins {
+                assert_eq!(p.shape.len(), rank, "concat rank");
+            }
+            let outer: usize = x.shape[..*axis].iter().product();
+            let inner: usize = x.shape[*axis + 1..].iter().product();
+            let total_axis: usize = ins.iter().map(|p| p.dim(*axis)).sum();
+            let mut shape = x.shape.clone();
+            shape[*axis] = total_axis;
+            let mut data = Vec::with_capacity(outer * total_axis * inner);
+            for o in 0..outer {
+                for (p, r) in ins.iter().zip(parts) {
+                    let a = p.dim(*axis);
+                    let base = o * a * inner;
+                    data.extend(p.data[base..base + a * inner].iter().map(|&q| r.map(q)));
+                }
+            }
+            ITensor::new(shape, data, oenc)
+        }
+        QOp::LstmF32 {
+            w_ih,
+            w_hh,
+            bias,
+            hidden,
+            reverse,
+        } => {
+            let xf = x.dequantize();
+            let y = lstm_forward(&xf, w_ih, w_hh, bias, *hidden, *reverse);
+            ITensor::quantize(&y, &oenc)
+        }
+    }
+}
+
+/// Integer im2col: unfold NCHW ints into a [C·kh·kw, N·OH·OW] patch
+/// matrix. Out-of-image taps are filled with the *zero-point* — real 0 on
+/// the activation grid — so zero padding stays exact (eq 2.9's correction
+/// term then accounts for padding like any other input).
+fn im2col_i32(x: &ITensor, kh: usize, kw: usize, spec: Conv2dSpec) -> Vec<i32> {
+    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let (oh, ow) = spec.out_hw(h, w, kh, kw);
+    let l = n * oh * ow;
+    let rows = c * kh * kw;
+    let zx = x.enc.offset;
+    let mut out = vec![0i32; rows * l];
+    let xd = &x.data;
+    let base = SyncSlice::new(out.as_mut_ptr());
+    parallel_chunks(rows, 4, |r0, r1| {
+        for r in r0..r1 {
+            // SAFETY: rows are disjoint per index and chunks are disjoint.
+            let row = unsafe { std::slice::from_raw_parts_mut(base.ptr().add(r * l), l) };
+            let ci = r / (kh * kw);
+            let ky = (r / kw) % kh;
+            let kx = r % kw;
+            let mut j = 0usize;
+            for ni in 0..n {
+                let plane = (ni * c + ci) * h * w;
+                for oy in 0..oh {
+                    let iy = (oy * spec.stride_h + ky) as isize - spec.pad_h as isize;
+                    if iy < 0 || iy >= h as isize {
+                        row[j..j + ow].fill(zx);
+                        j += ow;
+                        continue;
+                    }
+                    let row_base = plane + iy as usize * w;
+                    for ox in 0..ow {
+                        let ix = (ox * spec.stride_w + kx) as isize - spec.pad_w as isize;
+                        row[j] = if ix < 0 || ix >= w as isize {
+                            zx
+                        } else {
+                            xd[row_base + ix as usize]
+                        };
+                        j += 1;
+                    }
+                }
+            }
+        }
+    });
+    out
+}
+
+/// Dense conv: integer im2col + the blocked requantizing GEMM, scattering
+/// NCHW directly (same layout trick as the f32 path).
+fn conv_int(
+    x: &ITensor,
+    qw: &QTensor,
+    kh: usize,
+    kw: usize,
+    spec: Conv2dSpec,
+    rq: &Requant,
+    oenc: Encoding,
+) -> ITensor {
+    let (n, h, w) = (x.dim(0), x.dim(2), x.dim(3));
+    let o = qw.rows();
+    let (oh, ow) = spec.out_hw(h, w, kh, kw);
+    let cols = im2col_i32(x, kh, kw, spec);
+    let inner = oh * ow;
+    let l = n * inner;
+    let mut out = vec![0i32; n * o * inner];
+    qw.gemm_requant(&cols, l, &x.enc, rq, n, inner, &mut out);
+    ITensor::new(vec![n, o, oh, ow], out, oenc)
+}
+
+/// Depthwise conv: direct per-channel integer kernel (im2col is wasteful
+/// for single-input-channel filters), pool-parallel over (n, c) planes.
+fn depthwise_int(
+    x: &ITensor,
+    qw: &QTensor,
+    kh: usize,
+    kw: usize,
+    spec: Conv2dSpec,
+    rq: &Requant,
+    oenc: Encoding,
+) -> ITensor {
+    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    assert_eq!(qw.rows(), c, "depthwise channel count");
+    let (oh, ow) = spec.out_hw(h, w, kh, kw);
+    let zx = x.enc.offset as i64;
+    let mut out = vec![0i32; n * c * oh * ow];
+    let xd = &x.data;
+    let base = SyncSlice::new(out.as_mut_ptr());
+    parallel_chunks(n * c, 1, |p0, p1| {
+        for pc in p0..p1 {
+            let ci = pc % c;
+            let wrow = qw.row_ints(ci);
+            let corr = zx * qw.row_sum(ci);
+            let mult = rq.mult[ci];
+            let bq = rq.bias[ci];
+            let in_base = pc * h * w;
+            // SAFETY: planes are disjoint per index and chunks disjoint.
+            let plane =
+                unsafe { std::slice::from_raw_parts_mut(base.ptr().add(pc * oh * ow), oh * ow) };
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc: i32 = 0;
+                    for ky in 0..kh {
+                        let iy = (oy * spec.stride_h + ky) as isize - spec.pad_h as isize;
+                        if iy < 0 || iy >= h as isize {
+                            // Padding holds the zero-point.
+                            for kx in 0..kw {
+                                acc += wrow[ky * kw + kx] * x.enc.offset;
+                            }
+                            continue;
+                        }
+                        let row_base = in_base + iy as usize * w;
+                        for kx in 0..kw {
+                            let ix = (ox * spec.stride_w + kx) as isize - spec.pad_w as isize;
+                            let q = if ix < 0 || ix >= w as isize {
+                                x.enc.offset
+                            } else {
+                                xd[row_base + ix as usize]
+                            };
+                            acc += wrow[ky * kw + kx] * q;
+                        }
+                    }
+                    let corrected = (acc as i64 - corr) as f32;
+                    plane[oy * ow + ox] = rq.requant(mult * corrected + bq);
+                }
+            }
+        }
+    });
+    ITensor::new(vec![n, c, oh, ow], out, oenc)
+}
+
+/// Linear over [..., F]: leading dims flatten to a batch; transpose-free
+/// integer kernel.
+fn linear_int(x: &ITensor, qw: &QTensor, rq: &Requant, oenc: Encoding) -> ITensor {
+    let f = *x.shape.last().expect("linear input rank ≥ 1");
+    assert_eq!(f, qw.cols(), "linear feature mismatch");
+    let lead = x.len() / f;
+    let o = qw.rows();
+    let mut out = vec![0i32; lead * o];
+    qw.matmul_xt_requant(&x.data, lead, &x.enc, rq, &mut out);
+    let mut shape = x.shape[..x.shape.len() - 1].to_vec();
+    shape.push(o);
+    ITensor::new(shape, out, oenc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthImageNet;
+    use crate::ptq::{standard_ptq_pipeline, PtqOptions};
+    use crate::quantsim::{QuantParams, QuantizationSimModel};
+    use crate::zoo;
+
+    fn calib(seed: u64, n: usize) -> Vec<Tensor> {
+        let ds = SynthImageNet::new(seed);
+        (0..n).map(|i| ds.batch(i as u64, 8).0).collect()
+    }
+
+    fn lowered(model: &str, seed: u64) -> (crate::ptq::PtqOutcome, QuantizedModel) {
+        let g = zoo::build(model, seed).unwrap();
+        let out = standard_ptq_pipeline(&g, &calib(seed + 1, 3), &PtqOptions::default());
+        let qm = lower(&out.sim).expect("lowering");
+        (out, qm)
+    }
+
+    #[test]
+    fn mobimini_lowers_integer_only_with_fused_relus() {
+        let (_, qm) = lowered("mobimini", 301);
+        assert!(qm.is_integer_only());
+        // Every Conv/Depthwise+ReLU6 chain fused: 7 activations vanish.
+        assert_eq!(qm.fused_activations(), 7);
+        assert!(qm.describe().contains("integer-only"));
+    }
+
+    #[test]
+    fn lowered_forward_tracks_sim_within_one_step() {
+        let (out, qm) = lowered("mobimini", 303);
+        let (x, _) = SynthImageNet::new(305).batch(0, 4);
+        let ys = out.sim.forward(&x);
+        let yi = qm.forward_int(&x);
+        let oe = qm.output_encoding();
+        let mut worst = 0i32;
+        for (&q, &v) in yi.data().iter().zip(ys.data()) {
+            worst = worst.max((q - oe.quantize(v)).abs());
+        }
+        assert!(worst <= 1, "max int-step deviation {worst}");
+        // And the f32 view dequantizes onto the same grid.
+        let yf = qm.forward(&x);
+        assert!(yf.max_abs_diff(&ys) <= 1.5 * oe.scale);
+    }
+
+    #[test]
+    fn uncalibrated_sim_fails_to_lower_with_diagnostic() {
+        let g = zoo::build("mobimini", 310).unwrap();
+        let sim = QuantizationSimModel::with_defaults(g, QuantParams::default());
+        let err = lower(&sim).unwrap_err();
+        assert!(err.contains("compute_encodings"), "{err}");
+    }
+
+    #[test]
+    fn suppressed_bn_chain_fails_with_fold_hint() {
+        // Unfolded mobimini: conv→bn→relu6 supergroups leave conv and bn
+        // without grids, and conv's consumer is the BN, not a ReLU.
+        let g = zoo::build("mobimini", 311).unwrap();
+        let mut sim = QuantizationSimModel::with_defaults(g, QuantParams::default());
+        sim.compute_encodings(&calib(312, 2));
+        let err = lower(&sim).unwrap_err();
+        assert!(err.contains("fold batch norms"), "{err}");
+    }
+
+    #[test]
+    fn standalone_batchnorm_lowers_as_channel_affine() {
+        // BN with its own quantizer (no supergroup: BN feeds Add) lowers
+        // to an exact per-channel requant.
+        use crate::graph::{Graph, Op};
+        let mut g = Graph::new();
+        g.push(
+            "bn",
+            Op::BatchNorm {
+                gamma: vec![2.0, 0.5],
+                beta: vec![0.1, -0.2],
+                mean: vec![0.5, 0.0],
+                var: vec![1.0, 4.0],
+                eps: 0.0,
+            },
+        );
+        let b = crate::graph::Input::Node(0);
+        g.push_with("add", Op::Add, vec![b, b]);
+        let mut sim = QuantizationSimModel::with_defaults(g.clone(), QuantParams::default());
+        let data: Vec<Tensor> = (0..2)
+            .map(|i| {
+                Tensor::rand_uniform(&mut crate::rng::Rng::new(313 + i), &[4, 2, 3, 3], -2.0, 2.0)
+            })
+            .collect();
+        sim.compute_encodings(&data);
+        let qm = lower(&sim).expect("lowering");
+        assert!(qm.is_integer_only());
+        let x = Tensor::rand_uniform(&mut crate::rng::Rng::new(320), &[2, 2, 3, 3], -2.0, 2.0);
+        let ys = sim.forward(&x);
+        let oe = *qm.output_encoding();
+        let worst = qm
+            .forward_int(&x)
+            .data()
+            .iter()
+            .zip(ys.data())
+            .map(|(&q, &v)| (q - oe.quantize(v)).abs())
+            .max()
+            .unwrap();
+        assert!(worst <= 1, "bn+add deviation {worst}");
+    }
+
+    #[test]
+    fn itensor_quantize_dequantize_roundtrip() {
+        let enc = Encoding::from_min_max(-1.0, 3.0, 8, false);
+        let x = Tensor::new(&[4], vec![-0.7, 0.0, 1.5, 2.9]);
+        let xi = ITensor::quantize(&x, &enc);
+        let back = xi.dequantize();
+        assert!(back.max_abs_diff(&x) <= 0.5 * enc.scale + 1e-6);
+        // On-grid values round-trip exactly.
+        let again = ITensor::quantize(&back, &enc);
+        assert_eq!(again.data(), xi.data());
+    }
+
+    #[test]
+    fn relu6_clamp_maps_real_six() {
+        let e = Encoding::from_min_max(0.0, 8.0, 8, false);
+        let (lo, hi) = act_clamp(&e, Some(FusedAct::Relu6));
+        assert_eq!(lo, e.offset);
+        let top = e.scale * (hi - e.offset) as f32;
+        assert!((top - 6.0).abs() <= 0.5 * e.scale, "{top}");
+        // Narrow encodings cap at the grid maximum.
+        let narrow = Encoding::from_min_max(0.0, 4.0, 8, false);
+        let (_, hi2) = act_clamp(&narrow, Some(FusedAct::Relu6));
+        assert_eq!(hi2, narrow.int_max);
+    }
+
+    #[test]
+    fn im2col_i32_pads_with_zero_point() {
+        let enc = Encoding::from_min_max(-1.0, 1.0, 8, false);
+        assert_ne!(enc.offset, 0);
+        let x = ITensor::new(vec![1, 1, 2, 2], vec![10, 20, 30, 40], enc);
+        let cols = im2col_i32(&x, 3, 3, Conv2dSpec::same(3));
+        // Row 0 = tap (ky=0,kx=0): every output position reads up-left —
+        // position (0,0) is fully padded.
+        assert_eq!(cols[0], enc.offset);
+        // Centre tap (ky=1,kx=1) reads the pixel itself.
+        let centre = 4 * 4; // row (ci=0, ky=1, kx=1), l = 4
+        assert_eq!(&cols[centre..centre + 4], &[10, 20, 30, 40]);
+    }
+}

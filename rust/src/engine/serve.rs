@@ -1,0 +1,395 @@
+//! Batched serving front-end over a [`QuantizedModel`] — the ROADMAP's
+//! heavy-traffic deployment shape at unit scale.
+//!
+//! Single-sample requests are submitted through cloneable
+//! [`BatchClient`]s; a dedicated batcher thread coalesces them into
+//! micro-batches (up to `max_batch` requests, waiting at most `max_wait`
+//! for stragglers after the first arrival), runs ONE integer forward for
+//! the whole batch — whose GEMMs parallelize on the shared persistent
+//! worker pool — and routes each slice of the output back to its caller.
+//!
+//! Batching is where the integer engine's throughput comes from: a
+//! batch-N im2col GEMM has N× the columns of a batch-1 call, so the
+//! blocked kernels amortize dispatch and keep every pool lane busy,
+//! while per-request latency is bounded by `max_wait` + one forward.
+//!
+//! Per-sample results are bit-identical to batch-1 execution: every
+//! integer kernel computes each sample's outputs independently of its
+//! batch neighbours (verified by `replies_match_direct_forward`).
+
+use super::QuantizedModel;
+use crate::tensor::Tensor;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Micro-batching knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchConfig {
+    /// Maximum requests coalesced into one forward.
+    pub max_batch: usize,
+    /// How long the batcher waits for stragglers after the first request
+    /// of a batch arrives. Zero = dispatch whatever is already queued.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchConfig {
+    fn default() -> BatchConfig {
+        BatchConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+struct Request {
+    x: Tensor,
+    reply: Sender<Tensor>,
+}
+
+/// What the batcher observed over its lifetime.
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    /// Forwards executed.
+    pub batches: usize,
+    /// Sample rows served (equals requests for the single-sample serving
+    /// contract; multi-row submissions count every row).
+    pub samples: usize,
+    /// Largest coalesced batch, in rows.
+    pub max_batch_seen: usize,
+}
+
+impl ServeStats {
+    /// Mean sample rows per forward — the batching win.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.samples as f64 / self.batches as f64
+        }
+    }
+}
+
+/// The serving front-end: owns the batcher thread.
+pub struct BatchServer {
+    tx: Option<Sender<Request>>,
+    handle: Option<JoinHandle<ServeStats>>,
+}
+
+impl BatchServer {
+    /// Spawn the batcher over a lowered model.
+    pub fn start(model: Arc<QuantizedModel>, cfg: BatchConfig) -> BatchServer {
+        assert!(cfg.max_batch >= 1, "max_batch must be ≥ 1");
+        let (tx, rx) = channel::<Request>();
+        let handle = std::thread::Builder::new()
+            .name("aimet-serve".to_string())
+            .spawn(move || batcher_loop(model, cfg, rx))
+            .expect("spawn batcher");
+        BatchServer {
+            tx: Some(tx),
+            handle: Some(handle),
+        }
+    }
+
+    /// A handle for submitting requests; clone freely across threads.
+    pub fn client(&self) -> BatchClient {
+        BatchClient {
+            tx: self.tx.as_ref().expect("server running").clone(),
+        }
+    }
+
+    /// Stop accepting requests, drain the queue, join the batcher, and
+    /// return its stats.
+    pub fn shutdown(mut self) -> ServeStats {
+        drop(self.tx.take());
+        self.handle
+            .take()
+            .expect("server running")
+            .join()
+            .expect("batcher thread")
+    }
+}
+
+impl Drop for BatchServer {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Cloneable request handle.
+#[derive(Clone)]
+pub struct BatchClient {
+    tx: Sender<Request>,
+}
+
+impl BatchClient {
+    /// Blocking inference: submit one input (any leading batch size, but
+    /// single-sample [1, ...] tensors are the serving contract) and wait
+    /// for its logits.
+    pub fn infer(&self, x: Tensor) -> Tensor {
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Request { x, reply: rtx })
+            .expect("batch server is running");
+        rrx.recv().expect("batch server replies before shutdown")
+    }
+}
+
+fn batcher_loop(model: Arc<QuantizedModel>, cfg: BatchConfig, rx: Receiver<Request>) -> ServeStats {
+    let mut stats = ServeStats::default();
+    // Blocks until the next request or every client + server handle is
+    // gone (shutdown).
+    while let Ok(first) = rx.recv() {
+        let mut reqs = vec![first];
+        let mut rows = reqs[0].x.dim(0);
+        if cfg.max_batch > 1 {
+            let deadline = Instant::now() + cfg.max_wait;
+            while rows < cfg.max_batch {
+                let now = Instant::now();
+                let next = if now >= deadline {
+                    // Budget spent: take only what is already queued.
+                    rx.try_recv().map_err(|_| RecvTimeoutError::Timeout)
+                } else {
+                    rx.recv_timeout(deadline - now)
+                };
+                match next {
+                    Ok(r) => {
+                        rows += r.x.dim(0);
+                        reqs.push(r);
+                    }
+                    Err(_) => break,
+                }
+            }
+        }
+        let parts: Vec<&Tensor> = reqs.iter().map(|r| &r.x).collect();
+        let batch = stack0(&parts);
+        let y = model.forward(&batch);
+        let mut row = 0;
+        for r in &reqs {
+            let nr = r.x.dim(0);
+            // A dropped caller is fine — ignore the send error.
+            let _ = r.reply.send(y.batch_slice(row, row + nr));
+            row += nr;
+        }
+        stats.batches += 1;
+        stats.samples += rows;
+        stats.max_batch_seen = stats.max_batch_seen.max(rows);
+    }
+    stats
+}
+
+/// Concatenate tensors along axis 0 (identical trailing shapes).
+fn stack0(parts: &[&Tensor]) -> Tensor {
+    assert!(!parts.is_empty());
+    let tail = &parts[0].shape()[1..];
+    let mut total = 0;
+    let mut data = Vec::new();
+    for p in parts {
+        assert_eq!(&p.shape()[1..], tail, "stack0 trailing shapes");
+        total += p.dim(0);
+        data.extend_from_slice(p.data());
+    }
+    let mut shape = vec![total];
+    shape.extend_from_slice(tail);
+    Tensor::new(&shape, data)
+}
+
+/// Latency/throughput report of one serving run.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub clients: usize,
+    pub requests_per_client: usize,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// End-to-end samples/second over the whole run.
+    pub throughput_sps: f64,
+    pub wall_s: f64,
+    pub stats: ServeStats,
+}
+
+impl ServeReport {
+    pub fn render(&self) -> String {
+        format!(
+            "{} clients x {} reqs: {:.1} samples/s | latency p50 {:.2} ms, p95 {:.2} ms, \
+             p99 {:.2} ms | {} forwards, mean batch {:.2} (max {})",
+            self.clients,
+            self.requests_per_client,
+            self.throughput_sps,
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+            self.stats.batches,
+            self.stats.mean_batch(),
+            self.stats.max_batch_seen
+        )
+    }
+}
+
+/// Percentile of a latency sample (nearest-rank on the sorted data).
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Drive a closed-loop serving benchmark: `clients` threads each issue
+/// `requests_per_client` single-sample requests back-to-back (round-robin
+/// over `samples`), all through one batch server. Returns latency
+/// percentiles and end-to-end throughput.
+pub fn run_serve_bench(
+    model: Arc<QuantizedModel>,
+    samples: &[Tensor],
+    clients: usize,
+    requests_per_client: usize,
+    cfg: BatchConfig,
+) -> ServeReport {
+    assert!(clients >= 1 && !samples.is_empty());
+    let server = BatchServer::start(model, cfg);
+    let t0 = Instant::now();
+    let mut lats: Vec<f64> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let client = server.client();
+                scope.spawn(move || {
+                    let mut lat = Vec::with_capacity(requests_per_client);
+                    for r in 0..requests_per_client {
+                        let x = samples[(c + r * clients) % samples.len()].clone();
+                        let t = Instant::now();
+                        let y = client.infer(x);
+                        std::hint::black_box(&y);
+                        lat.push(t.elapsed().as_secs_f64() * 1e3);
+                    }
+                    lat
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("client thread"))
+            .collect()
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let stats = server.shutdown();
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ServeReport {
+        clients,
+        requests_per_client,
+        p50_ms: percentile(&lats, 50.0),
+        p95_ms: percentile(&lats, 95.0),
+        p99_ms: percentile(&lats, 99.0),
+        throughput_sps: lats.len() as f64 / wall_s.max(1e-9),
+        wall_s,
+        stats,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthImageNet;
+    use crate::engine::lower;
+    use crate::ptq::{standard_ptq_pipeline, PtqOptions};
+    use crate::zoo;
+
+    fn model() -> Arc<QuantizedModel> {
+        let g = zoo::build("mobimini", 401).unwrap();
+        let ds = SynthImageNet::new(402);
+        let calib: Vec<Tensor> = (0..2).map(|i| ds.batch(i, 8).0).collect();
+        let out = standard_ptq_pipeline(&g, &calib, &PtqOptions::default());
+        Arc::new(lower(&out.sim).expect("lowering"))
+    }
+
+    #[test]
+    fn replies_match_direct_forward() {
+        // Whatever micro-batches the server forms, each caller must get
+        // exactly the result of a batch-1 forward of its own sample —
+        // the integer kernels are batch-invariant per sample.
+        let qm = model();
+        let server = BatchServer::start(Arc::clone(&qm), BatchConfig::default());
+        let ds = SynthImageNet::new(403);
+        std::thread::scope(|scope| {
+            for c in 0..6 {
+                let client = server.client();
+                let qm = Arc::clone(&qm);
+                let ds = &ds;
+                scope.spawn(move || {
+                    for r in 0..4 {
+                        let (x, _) = ds.batch((c * 31 + r) as u64, 1);
+                        let got = client.infer(x.clone());
+                        assert_eq!(got, qm.forward(&x), "client {c} req {r}");
+                    }
+                });
+            }
+        });
+        let stats = server.shutdown();
+        assert_eq!(stats.samples, 24);
+        assert!(stats.batches <= 24);
+        assert!(stats.max_batch_seen >= 1);
+    }
+
+    #[test]
+    fn max_batch_one_never_coalesces() {
+        let qm = model();
+        let cfg = BatchConfig {
+            max_batch: 1,
+            max_wait: Duration::from_millis(50),
+        };
+        let server = BatchServer::start(qm, cfg);
+        let ds = SynthImageNet::new(404);
+        let client = server.client();
+        for r in 0..5 {
+            let (x, _) = ds.batch(r, 1);
+            let y = client.infer(x);
+            assert_eq!(y.dim(0), 1);
+        }
+        drop(client);
+        let stats = server.shutdown();
+        assert_eq!(stats.batches, 5);
+        assert_eq!(stats.max_batch_seen, 1);
+    }
+
+    #[test]
+    fn shutdown_with_no_requests_is_clean() {
+        let server = BatchServer::start(model(), BatchConfig::default());
+        let stats = server.shutdown();
+        assert_eq!(stats.batches, 0);
+        assert_eq!(stats.samples, 0);
+    }
+
+    #[test]
+    fn serve_bench_reports_sane_numbers() {
+        let qm = model();
+        let ds = SynthImageNet::new(405);
+        let samples: Vec<Tensor> = (0..8).map(|i| ds.batch(i, 1).0).collect();
+        let report = run_serve_bench(qm, &samples, 3, 4, BatchConfig::default());
+        assert_eq!(report.stats.samples, 12);
+        assert!(report.throughput_sps > 0.0);
+        assert!(report.p50_ms <= report.p95_ms && report.p95_ms <= report.p99_ms);
+        assert!(!report.render().is_empty());
+    }
+
+    #[test]
+    fn stack0_concatenates_rows() {
+        let a = Tensor::new(&[1, 2], vec![1.0, 2.0]);
+        let b = Tensor::new(&[2, 2], vec![3.0, 4.0, 5.0, 6.0]);
+        let s = stack0(&[&a, &b]);
+        assert_eq!(s.shape(), &[3, 2]);
+        assert_eq!(s.data(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+}

@@ -414,6 +414,18 @@ impl Graph {
         total
     }
 
+    /// The sole consumer of node `idx`, if it has exactly one — the edge
+    /// shape supergroup fusion (quantsim) and the engine's conv+activation
+    /// folding both require.
+    pub fn single_consumer(&self, idx: usize) -> Option<usize> {
+        let c = self.consumers(idx);
+        if c.len() == 1 {
+            Some(c[0])
+        } else {
+            None
+        }
+    }
+
     /// Consumers of node `idx`.
     pub fn consumers(&self, idx: usize) -> Vec<usize> {
         self.nodes

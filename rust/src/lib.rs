@@ -11,7 +11,10 @@
 //! correction, AdaRound, range setting, the standard pipeline and the
 //! debugging flow), the model compression suite ([`compress`]: spatial
 //! SVD, channel pruning, greedy ratio search, and the composed
-//! compress-then-quantize path), quantization-aware training ([`qat`]), synthetic
+//! compress-then-quantize path), quantization-aware training ([`qat`]), the
+//! integer-only inference engine and batched serving front-end
+//! ([`engine`]: quantsim → lowered `QuantizedModel` with folded
+//! requantization, plus micro-batching over the worker pool), synthetic
 //! datasets ([`data`]), metrics, and a PJRT runtime ([`runtime`]) that
 //! executes JAX/Pallas programs AOT-lowered to HLO text at build time.
 //!
@@ -22,6 +25,7 @@
 pub mod compress;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod graph;
 pub mod json;
 pub mod metrics;

@@ -205,7 +205,10 @@ pub fn fit_fp32(g: &mut Graph, model: &str, data: &TaskData, cfg: &TrainConfig) 
         let (x, targets) = data.batch(step as u64, cfg.batch_size);
         // Training-mode BN: batch statistics + running-stat updates.
         let (acts, bn_stats) = g.forward_train(&x, 0.9);
-        let (loss, d_out) = loss_and_grad(model, &acts[g.output], &targets);
+        // Targets come from this model's own TaskData, so a mismatch is a
+        // caller bug, not a user input — fail loudly with the diagnostic.
+        let (loss, d_out) =
+            loss_and_grad(model, &acts[g.output], &targets).expect("fit_fp32 model/data pair");
         let grads = backward_train(g, &x, &acts, &d_out, &no_overrides, &bn_stats);
         apply_grads(g, &grads, &mut momenta, lr_at(cfg, step), cfg.momentum, cfg.clip_norm);
         if step % cfg.log_every.max(1) == 0 || step + 1 == cfg.steps {
@@ -243,7 +246,8 @@ pub fn fit_qat(
         }
         let (x, targets) = data.batch(step as u64, cfg.batch_size);
         let (acts, captured) = sim.forward_capturing(&x);
-        let (loss, d_out) = loss_and_grad(model, &acts[sim.graph.output], &targets);
+        let (loss, d_out) = loss_and_grad(model, &acts[sim.graph.output], &targets)
+            .expect("fit_qat model/data pair");
         let grads = backward(&sim.graph, &x, &acts, &d_out, &captured);
         apply_grads(
             &mut sim.graph,
@@ -292,7 +296,7 @@ mod tests {
     #[test]
     fn fp32_training_reduces_loss() {
         let mut g = zoo::build("mobimini", 80).unwrap();
-        let data = TaskData::new("mobimini", 81);
+        let data = TaskData::new("mobimini", 81).unwrap();
         let log = fit_fp32(&mut g, "mobimini", &data, &quick_cfg(120));
         let (head, tail) = log.head_tail_mean(3);
         assert!(tail < 0.9 * head, "loss did not fall: {head} -> {tail}");
@@ -301,7 +305,7 @@ mod tests {
     #[test]
     fn qat_training_reduces_loss_through_quantizers() {
         let mut g = zoo::build("mobimini", 82).unwrap();
-        let data = TaskData::new("mobimini", 83);
+        let data = TaskData::new("mobimini", 83).unwrap();
         // Short FP32 warmup so quantization has signal to preserve.
         fit_fp32(&mut g, "mobimini", &data, &quick_cfg(40));
         let mut sim = QuantizationSimModel::with_defaults(g, QuantParams::default());
@@ -315,7 +319,7 @@ mod tests {
     fn qat_trains_recurrent_models() {
         // Table 5.2's substrate: bi-LSTM QAT must be trainable.
         let mut g = zoo::build("speechmini", 84).unwrap();
-        let data = TaskData::new("speechmini", 85);
+        let data = TaskData::new("speechmini", 85).unwrap();
         fit_fp32(&mut g, "speechmini", &data, &quick_cfg(30));
         let mut sim = QuantizationSimModel::with_defaults(g, QuantParams::default());
         sim.compute_encodings(&data.calibration(1, 8));
@@ -344,7 +348,7 @@ mod tests {
     #[test]
     fn qat_updates_shadow_weights_not_quantized_copies() {
         let mut g = zoo::build("resmini", 86).unwrap();
-        let data = TaskData::new("resmini", 87);
+        let data = TaskData::new("resmini", 87).unwrap();
         fit_fp32(&mut g, "resmini", &data, &quick_cfg(10));
         let mut sim = QuantizationSimModel::with_defaults(g, QuantParams::default());
         sim.compute_encodings(&data.calibration(1, 8));

@@ -12,8 +12,10 @@ pub use analyzer::{
 };
 pub use encoding::{Encoding, QuantScheme};
 pub use qops::{
-    quantized_conv2d, quantized_linear, quantized_matmul_i32, quantized_matmul_i32_ref, QTensor,
+    quantized_conv2d, quantized_linear, quantized_matmul_i32, quantized_matmul_i32_ref,
+    requantize_value, QTensor, Requant,
 };
+pub(crate) use qops::quantize_ints;
 
 use crate::tensor::Tensor;
 

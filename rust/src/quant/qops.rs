@@ -16,12 +16,13 @@
 //! reference the property tests and the hotpath bench compare against.
 
 use super::encoding::Encoding;
+use super::Quantizer;
 use crate::pool::{parallel_chunks, SyncSlice};
 use crate::tensor::{Conv2dSpec, Tensor};
 
 /// Quantize a float slice to its integer grid, in parallel for large
 /// inputs. Element-for-element identical to [`Encoding::quantize`].
-fn quantize_ints(xs: &[f32], enc: &Encoding) -> Vec<i32> {
+pub(crate) fn quantize_ints(xs: &[f32], enc: &Encoding) -> Vec<i32> {
     let mut out = vec![0i32; xs.len()];
     let base = SyncSlice::new(out.as_mut_ptr());
     parallel_chunks(xs.len(), 16 * 1024, |s, e| {
@@ -40,12 +41,24 @@ fn quantize_ints(xs: &[f32], enc: &Encoding) -> Vec<i32> {
 /// eq 2.9, folded into the requantization step). Build once, multiply many
 /// times — calibration sweeps, AdaRound iterations and batched serving all
 /// reuse the same weights.
+///
+/// Per-channel weights (§2.2 granularity) are supported by giving every
+/// output row its own scale ([`QTensor::from_matrix_per_channel`]); the
+/// per-tensor constructors simply repeat one scale. All rows share the
+/// same integer grid (bit-width / symmetry), only the scale varies.
 #[derive(Debug, Clone)]
 pub struct QTensor {
     rows: usize,
     cols: usize,
     data: Vec<i32>,
+    /// Grid template. For per-tensor weights this is *the* weight
+    /// encoding; for per-channel weights it is the widest row's encoding
+    /// (kept only for the conservative INT32 accumulator bound — its
+    /// `scale` is that row's and is not representative; use
+    /// [`QTensor::row_scale`]).
     enc: Encoding,
+    /// Per-row weight scale (`rows` entries; per-tensor repeats one value).
+    scales: Vec<f32>,
     row_sums: Vec<i64>,
 }
 
@@ -66,7 +79,61 @@ impl QTensor {
             cols,
             data,
             enc: *enc,
+            scales: vec![enc.scale; rows],
             row_sums,
+        }
+    }
+
+    /// Quantize a 2-D weight matrix with one symmetric encoding per output
+    /// row (per-channel weight quantization, §2.3). Each row is quantized
+    /// on its own grid — rows may even mix the signed and the unsigned
+    /// symmetric grid (a one-tailed row gets eq 2.8b's unsigned grid from
+    /// the analyzer); the requantization math only needs `z_w = 0` and the
+    /// per-row scale. The stored grid template is the widest row's, so the
+    /// INT32 accumulator bound stays conservative.
+    pub fn from_matrix_per_channel(w: &Tensor, encs: &[Encoding]) -> QTensor {
+        assert_eq!(w.rank(), 2, "QTensor wants a [rows, cols] matrix");
+        let (rows, cols) = (w.dim(0), w.dim(1));
+        assert_eq!(encs.len(), rows, "one encoding per output row");
+        let mut widest = encs[0];
+        for e in encs {
+            assert_eq!(e.offset, 0, "weights must be symmetric (z_w = 0)");
+            let abs = |e: &Encoding| e.int_min.unsigned_abs().max(e.int_max.unsigned_abs());
+            if abs(e) > abs(&widest) {
+                widest = *e;
+            }
+        }
+        let mut data = vec![0i32; rows * cols];
+        for (r, e) in encs.iter().enumerate() {
+            for (d, &v) in data[r * cols..(r + 1) * cols]
+                .iter_mut()
+                .zip(&w.data()[r * cols..(r + 1) * cols])
+            {
+                *d = e.quantize(v);
+            }
+        }
+        let row_sums = (0..rows)
+            .map(|r| data[r * cols..(r + 1) * cols].iter().map(|&v| v as i64).sum())
+            .collect();
+        QTensor {
+            rows,
+            cols,
+            data,
+            enc: widest,
+            scales: encs.iter().map(|e| e.scale).collect(),
+            row_sums,
+        }
+    }
+
+    /// Build from a calibrated weight [`Quantizer`] (per-tensor or
+    /// per-channel over axis 0 — the row axis of the matricized weight).
+    pub fn from_quantizer(w: &Tensor, q: &Quantizer) -> QTensor {
+        match q.granularity {
+            super::Granularity::PerTensor => QTensor::from_matrix(w, &q.encodings[0]),
+            super::Granularity::PerChannel => {
+                assert_eq!(q.axis, 0, "per-channel weights quantize along axis 0");
+                QTensor::from_matrix_per_channel(w, &q.encodings)
+            }
         }
     }
 
@@ -82,15 +149,39 @@ impl QTensor {
         &self.enc
     }
 
+    /// Integer values of output row `r` (the engine's depthwise kernel
+    /// walks rows directly).
+    pub fn row_ints(&self, r: usize) -> &[i32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Precomputed integer sum of row `r` (eq 2.9's third term).
+    pub fn row_sum(&self, r: usize) -> i64 {
+        self.row_sums[r]
+    }
+
+    /// Weight scale of output row `r` (per-tensor: the single scale).
+    pub fn row_scale(&self, r: usize) -> f32 {
+        self.scales[r]
+    }
+
+    /// True when the worst-case |accumulator| for inputs on `x_enc`'s grid
+    /// fits INT32 (paper §2.1: accumulators stay 32-bit). The engine's
+    /// lowering pass pre-validates with this so out-of-contract models are
+    /// a diagnostic, not a runtime panic.
+    pub fn acc_bounds_ok(&self, x_enc: &Encoding) -> bool {
+        let wmax = self.enc.int_min.unsigned_abs().max(self.enc.int_max.unsigned_abs()) as i64;
+        let xmax = x_enc.int_min.unsigned_abs().max(x_enc.int_max.unsigned_abs()) as i64;
+        self.cols as i64 * wmax * xmax <= i32::MAX as i64
+    }
+
     /// Reject shapes whose worst-case |accumulator| could exceed INT32
     /// (paper §2.1: accumulators stay 32-bit). A hard assert — O(1) per
     /// call — so out-of-contract shapes fail loudly in release builds
     /// instead of silently wrapping the i32 accumulators.
     fn check_acc_bounds(&self, x_enc: &Encoding) {
-        let wmax = self.enc.int_min.unsigned_abs().max(self.enc.int_max.unsigned_abs()) as i64;
-        let xmax = x_enc.int_min.unsigned_abs().max(x_enc.int_max.unsigned_abs()) as i64;
         assert!(
-            self.cols as i64 * wmax * xmax <= i32::MAX as i64,
+            self.acc_bounds_ok(x_enc),
             "INT32 accumulator may overflow: K={} bw_w={} bw_x={}",
             self.cols,
             self.enc.bw,
@@ -122,7 +213,6 @@ impl QTensor {
         let x_int = quantize_ints(x.data(), x_enc);
         let m = self.rows;
         let zx = x_enc.offset as i64;
-        let s = self.enc.scale * x_enc.scale;
         let mut out = vec![0.0f32; nb * m];
         let base = SyncSlice::new(out.as_mut_ptr());
         parallel_chunks(nb, 1, |r0, r1| {
@@ -138,7 +228,7 @@ impl QTensor {
                     }
                     let corrected = acc as i64 - zx * self.row_sums[oi];
                     let b = bias.map(|bs| bs[oi]).unwrap_or(0.0);
-                    *o = s * corrected as f32 + b;
+                    *o = self.scales[oi] * x_enc.scale * corrected as f32 + b;
                 }
             }
         });
@@ -166,9 +256,8 @@ impl QTensor {
         assert_eq!(out.len(), self.rows * n);
         assert_eq!(x_int.len(), self.cols * n);
         self.check_acc_bounds(x_enc);
-        let (m, k) = (self.rows, self.cols);
+        let m = self.rows;
         let zx = x_enc.offset as i64;
-        let s = self.enc.scale * x_enc.scale;
         let blocks = m.div_ceil(4);
         let base = SyncSlice::new(out.as_mut_ptr());
         parallel_chunks(blocks, 1, |b0, b1| {
@@ -178,45 +267,14 @@ impl QTensor {
                 let i0 = blk * 4;
                 let rb = (m - i0).min(4);
                 let accs = &mut acc[..rb * n];
-                accs.fill(0);
-                if rb == 4 {
-                    let (a0, rest) = accs.split_at_mut(n);
-                    let (a1, rest) = rest.split_at_mut(n);
-                    let (a2, a3) = rest.split_at_mut(n);
-                    let w0 = &self.data[i0 * k..(i0 + 1) * k];
-                    let w1 = &self.data[(i0 + 1) * k..(i0 + 2) * k];
-                    let w2 = &self.data[(i0 + 2) * k..(i0 + 3) * k];
-                    let w3 = &self.data[(i0 + 3) * k..(i0 + 4) * k];
-                    for kk in 0..k {
-                        let (v0, v1, v2, v3) = (w0[kk], w1[kk], w2[kk], w3[kk]);
-                        let xrow = &x_int[kk * n..(kk + 1) * n];
-                        for j in 0..n {
-                            let xv = xrow[j];
-                            a0[j] += v0 * xv;
-                            a1[j] += v1 * xv;
-                            a2[j] += v2 * xv;
-                            a3[j] += v3 * xv;
-                        }
-                    }
-                } else {
-                    for r in 0..rb {
-                        let wr = &self.data[(i0 + r) * k..(i0 + r + 1) * k];
-                        let ar = &mut accs[r * n..(r + 1) * n];
-                        for kk in 0..k {
-                            let v = wr[kk];
-                            let xrow = &x_int[kk * n..(kk + 1) * n];
-                            for (a, &xv) in ar.iter_mut().zip(xrow) {
-                                *a += v * xv;
-                            }
-                        }
-                    }
-                }
+                self.acc_block(x_int, n, i0, rb, accs);
                 // Requantize + scatter (eq 2.9: subtract z_x·Σw, rescale,
                 // add bias). Same FP expression as the naive reference, so
                 // results are bit-exact.
                 for r in 0..rb {
                     let mi = i0 + r;
                     let corr = zx * self.row_sums[mi];
+                    let s = self.scales[mi] * x_enc.scale;
                     let b = bias.map(|bs| bs[mi]).unwrap_or(0.0);
                     let arow = &accs[r * n..(r + 1) * n];
                     for seg in 0..batch {
@@ -234,6 +292,189 @@ impl QTensor {
             }
         });
     }
+
+    /// The shared 4-row-blocked INT32 accumulation core: `accs[r, l] =
+    /// Σ_k w_int[i0 + r, k] · x_int[k, l]` for `r < rb ≤ 4`. Both the f32
+    /// epilogue ([`QTensor::gemm_scatter`]) and the integer requantizing
+    /// epilogue ([`QTensor::gemm_requant`]) run exactly this loop, so the
+    /// two pipelines agree on every accumulator bit.
+    fn acc_block(&self, x_int: &[i32], n: usize, i0: usize, rb: usize, accs: &mut [i32]) {
+        let k = self.cols;
+        accs.fill(0);
+        if rb == 4 {
+            let (a0, rest) = accs.split_at_mut(n);
+            let (a1, rest) = rest.split_at_mut(n);
+            let (a2, a3) = rest.split_at_mut(n);
+            let w0 = &self.data[i0 * k..(i0 + 1) * k];
+            let w1 = &self.data[(i0 + 1) * k..(i0 + 2) * k];
+            let w2 = &self.data[(i0 + 2) * k..(i0 + 3) * k];
+            let w3 = &self.data[(i0 + 3) * k..(i0 + 4) * k];
+            for kk in 0..k {
+                let (v0, v1, v2, v3) = (w0[kk], w1[kk], w2[kk], w3[kk]);
+                let xrow = &x_int[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    let xv = xrow[j];
+                    a0[j] += v0 * xv;
+                    a1[j] += v1 * xv;
+                    a2[j] += v2 * xv;
+                    a3[j] += v3 * xv;
+                }
+            }
+        } else {
+            for r in 0..rb {
+                let wr = &self.data[(i0 + r) * k..(i0 + r + 1) * k];
+                let ar = &mut accs[r * n..(r + 1) * n];
+                for kk in 0..k {
+                    let v = wr[kk];
+                    let xrow = &x_int[kk * n..(kk + 1) * n];
+                    for (a, &xv) in ar.iter_mut().zip(xrow) {
+                        *a += v * xv;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Integer-in → integer-out GEMM: the inference engine's hot path.
+    ///
+    /// Computes the eq 2.9 pipeline end-to-end on the integer grid:
+    /// `acc = Σ_k w_int[m,k]·x_int[k,l]`, then for each output element
+    /// `q = clamp(rte(mult[m]·(acc − z_x·Σ_k w_int[m,k]) + bias[m]) + z_out)`
+    /// where `mult[m] = s_w[m]·s_x / s_out` and `bias[m] = b[m] / s_out` are
+    /// the *folded requantization multipliers* the lowering pass
+    /// precomputes. No dequantized activation tensor is ever materialized —
+    /// the only float arithmetic is the one scalar multiply per
+    /// accumulator, exactly the rescale step of fig 2.2.
+    ///
+    /// The scatter layout contract matches [`QTensor::gemm_scatter`]:
+    /// each output row is written as `batch` segments of length `inner`.
+    /// `rq.lo`/`rq.hi` carry fused activation clamps (conv+ReLU/ReLU6).
+    pub fn gemm_requant(
+        &self,
+        x_int: &[i32],
+        n: usize,
+        x_enc: &Encoding,
+        rq: &Requant,
+        batch: usize,
+        inner: usize,
+        out: &mut [i32],
+    ) {
+        assert_eq!(batch * inner, n, "scatter segments must tile the row");
+        assert_eq!(out.len(), self.rows * n);
+        assert_eq!(x_int.len(), self.cols * n);
+        assert_eq!(rq.mult.len(), self.rows);
+        assert_eq!(rq.bias.len(), self.rows);
+        self.check_acc_bounds(x_enc);
+        let m = self.rows;
+        let zx = x_enc.offset as i64;
+        let blocks = m.div_ceil(4);
+        let base = SyncSlice::new(out.as_mut_ptr());
+        parallel_chunks(blocks, 1, |b0, b1| {
+            let mut acc = vec![0i32; 4 * n];
+            for blk in b0..b1 {
+                let i0 = blk * 4;
+                let rb = (m - i0).min(4);
+                let accs = &mut acc[..rb * n];
+                self.acc_block(x_int, n, i0, rb, accs);
+                for r in 0..rb {
+                    let mi = i0 + r;
+                    let corr = zx * self.row_sums[mi];
+                    let mult = rq.mult[mi];
+                    let bq = rq.bias[mi];
+                    let arow = &accs[r * n..(r + 1) * n];
+                    for seg in 0..batch {
+                        let dst_off = (seg * m + mi) * inner;
+                        // SAFETY: (row, segment) destinations are disjoint.
+                        let dst = unsafe {
+                            std::slice::from_raw_parts_mut(base.ptr().add(dst_off), inner)
+                        };
+                        for (d, &a) in dst.iter_mut().zip(&arow[seg * inner..(seg + 1) * inner]) {
+                            let corrected = (a as i64 - corr) as f32;
+                            *d = rq.requant(mult * corrected + bq);
+                        }
+                    }
+                }
+            }
+        });
+    }
+
+    /// Integer-in → integer-out linear kernel for batch-major X of shape
+    /// [N, K] (rows are samples): the engine's Linear path. Writes [N, M]
+    /// ints into `out` under the same folded-requant contract as
+    /// [`QTensor::gemm_requant`].
+    pub fn matmul_xt_requant(
+        &self,
+        x_int: &[i32],
+        nb: usize,
+        x_enc: &Encoding,
+        rq: &Requant,
+        out: &mut [i32],
+    ) {
+        let (m, k) = (self.rows, self.cols);
+        assert_eq!(x_int.len(), nb * k);
+        assert_eq!(out.len(), nb * m);
+        assert_eq!(rq.mult.len(), m);
+        assert_eq!(rq.bias.len(), m);
+        self.check_acc_bounds(x_enc);
+        let zx = x_enc.offset as i64;
+        let base = SyncSlice::new(out.as_mut_ptr());
+        parallel_chunks(nb, 1, |r0, r1| {
+            for ni in r0..r1 {
+                let xrow = &x_int[ni * k..(ni + 1) * k];
+                // SAFETY: output rows are disjoint per `ni`.
+                let orow = unsafe { std::slice::from_raw_parts_mut(base.ptr().add(ni * m), m) };
+                for (oi, o) in orow.iter_mut().enumerate() {
+                    let wrow = &self.data[oi * k..(oi + 1) * k];
+                    let mut acc: i32 = 0;
+                    for (&wv, &xv) in wrow.iter().zip(xrow) {
+                        acc += wv * xv;
+                    }
+                    let corrected = (acc as i64 - zx * self.row_sums[oi]) as f32;
+                    *o = rq.requant(rq.mult[oi] * corrected + rq.bias[oi]);
+                }
+            }
+        });
+    }
+}
+
+/// Folded requantization parameters for one layer: everything the integer
+/// pipeline needs to map INT32 accumulators straight to the next layer's
+/// integer grid (eq 2.9 without the dequant→requant detour through f32
+/// tensors). Built once by the engine's lowering pass.
+#[derive(Debug, Clone)]
+pub struct Requant {
+    /// Per-output-row multiplier `s_w[m]·s_x / s_out`.
+    pub mult: Vec<f32>,
+    /// Per-output-row bias on the output grid, `b[m] / s_out`.
+    pub bias: Vec<f32>,
+    /// Output zero-point.
+    pub z_out: i32,
+    /// Lower clamp on the output grid. `z_out` for a fused ReLU/ReLU6
+    /// (real 0), else the grid minimum.
+    pub lo: i32,
+    /// Upper clamp on the output grid. `rte(6/s_out) + z_out` for a fused
+    /// ReLU6 (capped at the grid maximum), else the grid maximum.
+    pub hi: i32,
+}
+
+impl Requant {
+    /// Requantize one accumulator value already scaled to output-grid
+    /// units. `#[inline]` — this is the innermost loop of integer
+    /// inference.
+    #[inline]
+    pub fn requant(&self, v: f32) -> i32 {
+        requantize_value(v, self.z_out, self.lo, self.hi)
+    }
+}
+
+/// The one requantization epilogue every integer pipeline shares:
+/// round-ties-even (matching [`Encoding::quantize`]), shift by the
+/// zero-point, clamp. The engine's sim-agreement contract rides on this
+/// exact expression — change it here or nowhere.
+#[inline]
+pub fn requantize_value(v: f32, z_out: i32, lo: i32, hi: i32) -> i32 {
+    let q = v.round_ties_even() as i64 + z_out as i64;
+    q.clamp(lo as i64, hi as i64) as i32
 }
 
 /// Integer matmul with INT32 accumulation:
@@ -463,6 +704,161 @@ mod tests {
             for oi in 0..4 {
                 let want = r.data()[ni * 4 + oi] + b[oi];
                 assert!((y.data()[ni * 4 + oi] - want).abs() < 1e-3);
+            }
+        }
+    }
+
+    /// Per-channel quantization: each row quantized on its own grid, and
+    /// the per-row scales flow through the requantization of eq 2.9.
+    #[test]
+    fn per_channel_rows_use_their_own_scales() {
+        // Row 0 spans ±1, row 1 spans ±100; per-channel must keep row 0's
+        // outputs accurate where a shared per-tensor grid cannot.
+        let w = Tensor::new(&[2, 2], vec![0.5, -0.5, 60.0, -60.0]);
+        let encs = vec![
+            Encoding::from_min_max(-1.0, 1.0, 8, true),
+            Encoding::from_min_max(-100.0, 100.0, 8, true),
+        ];
+        let qw = QTensor::from_matrix_per_channel(&w, &encs);
+        assert_eq!(qw.row_scale(0), encs[0].scale);
+        assert_eq!(qw.row_scale(1), encs[1].scale);
+        let x = Tensor::new(&[2, 1], vec![1.0, 1.0]);
+        let x_enc = Encoding::from_min_max(0.0, 1.0, 8, false);
+        let y = qw.matmul(&x, &x_enc, None);
+        assert!((y.data()[0] - 0.0).abs() < 0.01, "{}", y.data()[0]);
+        assert!((y.data()[1] - 0.0).abs() < 1.0, "{}", y.data()[1]);
+        // A per-tensor QTensor on the wide grid flattens row 0 to zero
+        // resolution; per-channel keeps sub-scale accuracy there.
+        let x2 = Tensor::new(&[2, 1], vec![1.0, 0.0]);
+        let y2 = qw.matmul(&x2, &x_enc, None);
+        assert!((y2.data()[0] - 0.5).abs() < 0.01, "{}", y2.data()[0]);
+    }
+
+    /// Per-channel rows may mix grids: a one-tailed row gets the unsigned
+    /// symmetric grid (eq 2.8b), a two-tailed row the signed one (2.8c) —
+    /// both must flow through the per-row requantization correctly.
+    #[test]
+    fn per_channel_mixed_grids_are_supported() {
+        let w = Tensor::new(&[2, 2], vec![0.5, 1.0, -2.0, 2.0]);
+        let encs = vec![
+            Encoding::from_min_max(0.0, 1.0, 8, true), // one-tailed → unsigned
+            Encoding::from_min_max(-2.0, 2.0, 8, true), // two-tailed → signed
+        ];
+        assert_eq!(encs[0].int_min, 0);
+        assert_eq!(encs[1].int_min, -127);
+        let qw = QTensor::from_matrix_per_channel(&w, &encs);
+        // Grid template is the widest row (unsigned 0..255).
+        assert_eq!(qw.encoding().int_max, 255);
+        let x = Tensor::new(&[2, 1], vec![1.0, 1.0]);
+        let x_enc = Encoding::from_min_max(0.0, 1.0, 8, false);
+        let y = qw.matmul(&x, &x_enc, None);
+        // Row values must match the qdq'd weights times x ≈ [1.5, 0.0].
+        assert!((y.data()[0] - 1.5).abs() < 0.02, "{}", y.data()[0]);
+        assert!((y.data()[1] - 0.0).abs() < 0.05, "{}", y.data()[1]);
+    }
+
+    /// from_quantizer routes granularities to the right constructor.
+    #[test]
+    fn from_quantizer_matches_direct_constructors() {
+        let mut rng = Rng::new(11);
+        let w = Tensor::randn(&mut rng, &[4, 6], 0.5);
+        let enc = Encoding::from_min_max(w.min(), w.max(), 8, true);
+        let x = Tensor::rand_uniform(&mut rng, &[6, 3], -1.0, 1.0);
+        let x_enc = Encoding::from_min_max(-1.0, 1.0, 8, false);
+        let a = QTensor::from_quantizer(&w, &Quantizer::per_tensor(enc));
+        let b = QTensor::from_matrix(&w, &enc);
+        assert_eq!(a.matmul(&x, &x_enc, None), b.matmul(&x, &x_enc, None));
+        let encs: Vec<Encoding> = (0..4)
+            .map(|r| {
+                let row = Tensor::new(&[1, 6], w.data()[r * 6..(r + 1) * 6].to_vec());
+                Encoding::from_min_max(row.min(), row.max(), 8, true)
+            })
+            .collect();
+        let c = QTensor::from_quantizer(&w, &Quantizer::per_channel(encs.clone(), 0));
+        let d = QTensor::from_matrix_per_channel(&w, &encs);
+        assert_eq!(c.matmul(&x, &x_enc, None), d.matmul(&x, &x_enc, None));
+    }
+
+    /// The integer-out GEMM equals quantizing the f32-out GEMM: the folded
+    /// requantization multiplier path is the same eq 2.9 computation with
+    /// the final qdq collapsed into the epilogue.
+    #[test]
+    fn gemm_requant_matches_quantized_f32_epilogue() {
+        let mut rng = Rng::new(12);
+        for &(m, k, n) in &[(1, 3, 4), (5, 17, 6), (8, 8, 8)] {
+            let w = Tensor::randn(&mut rng, &[m, k], 0.5);
+            let x = Tensor::rand_uniform(&mut rng, &[k, n], -2.0, 2.0);
+            let b: Vec<f32> = rng.normal_vec(m, 0.2);
+            let w_enc = Encoding::from_min_max(w.min(), w.max(), 8, true);
+            let x_enc = Encoding::from_min_max(-2.0, 2.0, 8, false);
+            let out_enc = Encoding::from_min_max(-4.0, 4.0, 8, false);
+            let qw = QTensor::from_matrix(&w, &w_enc);
+            // f32 route: GEMM then quantize each output to out_enc.
+            let yf = qw.matmul(&x, &x_enc, Some(&b));
+            // Integer route: folded multipliers, int8 out.
+            let rq = Requant {
+                mult: (0..m)
+                    .map(|r| qw.row_scale(r) * x_enc.scale / out_enc.scale)
+                    .collect(),
+                bias: b.iter().map(|v| v / out_enc.scale).collect(),
+                z_out: out_enc.offset,
+                lo: out_enc.int_min,
+                hi: out_enc.int_max,
+            };
+            let x_int = quantize_ints(x.data(), &x_enc);
+            let mut out = vec![0i32; m * n];
+            qw.gemm_requant(&x_int, n, &x_enc, &rq, 1, n, &mut out);
+            for (i, (&qi, &vf)) in out.iter().zip(yf.data()).enumerate() {
+                // One f32 rounding difference (the folded multiplier is
+                // rounded once, the f32 route divides afterwards) can move
+                // a near-tie by one grid step, never more.
+                let d = (qi - out_enc.quantize(vf)).abs();
+                assert!(d <= 1, "({m},{k},{n}) elem {i}: {qi} vs qdq route");
+            }
+            // Fused-ReLU clamp: lo = z_out must floor everything at real 0.
+            let rq_relu = Requant {
+                lo: rq.z_out,
+                ..rq.clone()
+            };
+            let mut out_r = vec![0i32; m * n];
+            qw.gemm_requant(&x_int, n, &x_enc, &rq_relu, 1, n, &mut out_r);
+            for (&qr, &q) in out_r.iter().zip(&out) {
+                assert_eq!(qr, q.max(rq.z_out));
+            }
+        }
+    }
+
+    /// matmul_xt_requant (the engine Linear path) agrees with gemm_requant
+    /// through a transpose.
+    #[test]
+    fn matmul_xt_requant_matches_gemm_requant() {
+        let mut rng = Rng::new(13);
+        let w = Tensor::randn(&mut rng, &[5, 7], 0.5);
+        let x = Tensor::rand_uniform(&mut rng, &[3, 7], -2.0, 2.0);
+        let b: Vec<f32> = rng.normal_vec(5, 0.1);
+        let w_enc = Encoding::from_min_max(w.min(), w.max(), 8, true);
+        let x_enc = Encoding::from_min_max(-2.0, 2.0, 8, false);
+        let out_enc = Encoding::from_min_max(-6.0, 6.0, 8, false);
+        let qw = QTensor::from_matrix(&w, &w_enc);
+        let rq = Requant {
+            mult: (0..5)
+                .map(|r| qw.row_scale(r) * x_enc.scale / out_enc.scale)
+                .collect(),
+            bias: b.iter().map(|v| v / out_enc.scale).collect(),
+            z_out: out_enc.offset,
+            lo: out_enc.int_min,
+            hi: out_enc.int_max,
+        };
+        let x_int = quantize_ints(x.data(), &x_enc);
+        let mut direct = vec![0i32; 3 * 5];
+        qw.matmul_xt_requant(&x_int, 3, &x_enc, &rq, &mut direct);
+        let xt = x.transpose2();
+        let xt_int = quantize_ints(xt.data(), &x_enc);
+        let mut via_t = vec![0i32; 5 * 3];
+        qw.gemm_requant(&xt_int, 3, &x_enc, &rq, 1, 3, &mut via_t);
+        for ni in 0..3 {
+            for oi in 0..5 {
+                assert_eq!(direct[ni * 5 + oi], via_t[oi * 3 + ni]);
             }
         }
     }

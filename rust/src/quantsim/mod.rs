@@ -17,7 +17,7 @@ pub use export::{export_encodings_json, load_param_encodings, set_and_freeze_par
 
 use crate::graph::{ForwardHook, Graph, Node};
 use crate::quant::{
-    per_channel_weight_encodings, weight_encoding, EncodingAnalyzer, QuantScheme,
+    per_channel_weight_encodings, weight_encoding, Encoding, EncodingAnalyzer, QuantScheme,
     Quantizer,
 };
 use crate::tensor::Tensor;
@@ -412,6 +412,39 @@ impl QuantizationSimModel {
         let enc = export_encodings_json(self);
         std::fs::write(dir.join(format!("{prefix}_encodings.json")), enc)?;
         Ok(())
+    }
+
+    // ---- encoding extraction (the engine lowering pass reads these) -----
+
+    /// The calibrated encoding of node `idx`'s activation quantizer, if one
+    /// is placed, enabled, and calibrated. Activation quantizers are always
+    /// per-tensor (§2.3), so this is a single encoding.
+    pub fn act_encoding(&self, idx: usize) -> Option<Encoding> {
+        let s = &self.acts[idx];
+        if s.enabled {
+            s.quantizer.as_ref().map(|q| q.encodings[0])
+        } else {
+            None
+        }
+    }
+
+    /// The calibrated model-input encoding, if the config quantizes the
+    /// model input and `compute_encodings` has run.
+    pub fn input_encoding(&self) -> Option<Encoding> {
+        if self.input_slot.enabled {
+            self.input_slot.quantizer.as_ref().map(|q| q.encodings[0])
+        } else {
+            None
+        }
+    }
+
+    /// The calibrated parameter quantizer of node `idx` (per-tensor or
+    /// per-channel), if enabled and calibrated.
+    pub fn param_quantizer(&self, idx: usize) -> Option<&Quantizer> {
+        match &self.params[idx] {
+            Some(s) if s.enabled => s.quantizer.as_ref(),
+            _ => None,
+        }
     }
 
     /// Number of placed (enabled) quantizers — used in reports.

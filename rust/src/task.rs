@@ -37,8 +37,22 @@ pub struct TaskData {
     speech: Option<SynthSpeech>,
 }
 
+/// The diagnostic for a model name outside the zoo — shared by every
+/// fallible task entry point so CLI errors are uniform (exit code 2, the
+/// valid-name list included, same shape as the strict flag parser's).
+fn unknown_model(model: &str) -> String {
+    format!(
+        "unknown model `{model}`; valid models: {}",
+        crate::zoo::MODEL_NAMES.join(" ")
+    )
+}
+
+fn mismatched_targets(model: &str) -> String {
+    format!("targets do not match model `{model}` (wrong TaskData for this model?)")
+}
+
 impl TaskData {
-    pub fn new(model: &str, seed: u64) -> TaskData {
+    pub fn new(model: &str, seed: u64) -> Result<TaskData, String> {
         let mut d = TaskData {
             model: model.to_string(),
             imagenet: None,
@@ -51,9 +65,14 @@ impl TaskData {
             "segmini" => d.seg = Some(SynthSeg::new(seed)),
             "detmini" => d.det = Some(SynthDet::new(seed)),
             "speechmini" => d.speech = Some(SynthSpeech::new(seed)),
-            _ => panic!("unknown model {model}"),
+            _ => return Err(unknown_model(model)),
         }
-        d
+        Ok(d)
+    }
+
+    /// The validated model name this data source serves.
+    pub fn model(&self) -> &str {
+        &self.model
     }
 
     /// Deterministic batch `index` of size `n`.
@@ -88,27 +107,35 @@ impl TaskData {
     }
 }
 
-/// Loss + gradient w.r.t. logits for one model's task.
-pub fn loss_and_grad(model: &str, logits: &Tensor, targets: &Targets) -> (f32, Tensor) {
+/// Loss + gradient w.r.t. logits for one model's task. `Err` for names
+/// outside the zoo or targets from a different task (both were panics;
+/// the CLI surfaces them as exit-code-2 diagnostics).
+pub fn loss_and_grad(
+    model: &str,
+    logits: &Tensor,
+    targets: &Targets,
+) -> Result<(f32, Tensor), String> {
     match (model, targets) {
-        ("mobimini" | "resmini", Targets::Labels(y)) => softmax_ce(logits, y),
-        ("segmini", Targets::Labels(y)) => pixel_ce(logits, y),
-        ("detmini", Targets::Objects(y)) => det_loss(logits, y),
-        ("speechmini", Targets::Labels(y)) => frame_ce(logits, y),
-        _ => panic!("targets do not match model {model}"),
+        ("mobimini" | "resmini", Targets::Labels(y)) => Ok(softmax_ce(logits, y)),
+        ("segmini", Targets::Labels(y)) => Ok(pixel_ce(logits, y)),
+        ("detmini", Targets::Objects(y)) => Ok(det_loss(logits, y)),
+        ("speechmini", Targets::Labels(y)) => Ok(frame_ce(logits, y)),
+        (m, _) if !crate::zoo::MODEL_NAMES.contains(&m) => Err(unknown_model(m)),
+        _ => Err(mismatched_targets(model)),
     }
 }
 
 /// Task quality metric, higher-is-better (TER is reported as 100−TER so
 /// that every model shares the same comparison direction; the CLI flips it
 /// back when printing Table 5.2).
-pub fn quality(model: &str, logits: &Tensor, targets: &Targets) -> f32 {
+pub fn quality(model: &str, logits: &Tensor, targets: &Targets) -> Result<f32, String> {
     match (model, targets) {
-        ("mobimini" | "resmini", Targets::Labels(y)) => top1_accuracy(logits, y),
-        ("segmini", Targets::Labels(y)) => mean_iou(logits, y),
-        ("detmini", Targets::Objects(y)) => det_map(logits, y),
-        ("speechmini", Targets::Labels(y)) => 100.0 - token_error_rate(logits, y),
-        _ => panic!("targets do not match model {model}"),
+        ("mobimini" | "resmini", Targets::Labels(y)) => Ok(top1_accuracy(logits, y)),
+        ("segmini", Targets::Labels(y)) => Ok(mean_iou(logits, y)),
+        ("detmini", Targets::Objects(y)) => Ok(det_map(logits, y)),
+        ("speechmini", Targets::Labels(y)) => Ok(100.0 - token_error_rate(logits, y)),
+        (m, _) if !crate::zoo::MODEL_NAMES.contains(&m) => Err(unknown_model(m)),
+        _ => Err(mismatched_targets(model)),
     }
 }
 
@@ -119,13 +146,13 @@ pub fn evaluate_graph(
     data: &TaskData,
     n_batches: usize,
     batch_size: usize,
-) -> f32 {
+) -> Result<f32, String> {
     let mut total = 0.0;
     for i in 0..n_batches {
         let (x, t) = data.batch(50_000 + i as u64, batch_size);
-        total += quality(model, &g.forward(&x), &t);
+        total += quality(model, &g.forward(&x), &t)?;
     }
-    total / n_batches as f32
+    Ok(total / n_batches as f32)
 }
 
 /// Evaluate a quantization sim over the same eval batches (the "drop-in
@@ -136,13 +163,13 @@ pub fn evaluate_sim(
     data: &TaskData,
     n_batches: usize,
     batch_size: usize,
-) -> f32 {
+) -> Result<f32, String> {
     let mut total = 0.0;
     for i in 0..n_batches {
         let (x, t) = data.batch(50_000 + i as u64, batch_size);
-        total += quality(model, &sim.forward(&x), &t);
+        total += quality(model, &sim.forward(&x), &t)?;
     }
-    total / n_batches as f32
+    Ok(total / n_batches as f32)
 }
 
 #[cfg(test)]
@@ -155,41 +182,63 @@ mod tests {
     fn every_model_dispatches() {
         for model in zoo::MODEL_NAMES {
             let g = zoo::build(model, 1).unwrap();
-            let data = TaskData::new(model, 2);
+            let data = TaskData::new(model, 2).unwrap();
+            assert_eq!(data.model(), model);
             let (x, t) = data.batch(0, 4);
             let logits = g.forward(&x);
-            let (loss, grad) = loss_and_grad(model, &logits, &t);
+            let (loss, grad) = loss_and_grad(model, &logits, &t).unwrap();
             assert!(loss.is_finite(), "{model} loss");
             assert_eq!(grad.shape(), logits.shape(), "{model} grad shape");
-            let q = quality(model, &logits, &t);
+            let q = quality(model, &logits, &t).unwrap();
             assert!((0.0..=100.0).contains(&q), "{model} quality {q}");
         }
     }
 
     #[test]
+    fn unknown_model_is_an_error_not_a_panic() {
+        let err = TaskData::new("mobimimi", 1).unwrap_err();
+        assert!(err.contains("unknown model `mobimimi`"), "{err}");
+        assert!(err.contains("mobimini"), "error lists valid names: {err}");
+        let logits = Tensor::zeros(&[2, 10]);
+        let t = Targets::Labels(vec![0, 1]);
+        assert!(loss_and_grad("nope", &logits, &t).is_err());
+        assert!(quality("nope", &logits, &t).is_err());
+    }
+
+    #[test]
+    fn mismatched_targets_are_an_error_not_a_panic() {
+        // Detection targets against a classification model.
+        let logits = Tensor::zeros(&[2, 10]);
+        let t = Targets::Objects(vec![Vec::new(), Vec::new()]);
+        let err = loss_and_grad("mobimini", &logits, &t).unwrap_err();
+        assert!(err.contains("targets do not match"), "{err}");
+        assert!(quality("mobimini", &logits, &t).is_err());
+    }
+
+    #[test]
     fn eval_batches_are_deterministic() {
         let g = zoo::build("mobimini", 3).unwrap();
-        let data = TaskData::new("mobimini", 4);
-        let a = evaluate_graph(&g, "mobimini", &data, 2, 8);
-        let b = evaluate_graph(&g, "mobimini", &data, 2, 8);
+        let data = TaskData::new("mobimini", 4).unwrap();
+        let a = evaluate_graph(&g, "mobimini", &data, 2, 8).unwrap();
+        let b = evaluate_graph(&g, "mobimini", &data, 2, 8).unwrap();
         assert_eq!(a, b);
     }
 
     #[test]
     fn sim_eval_matches_graph_eval_when_bypassed() {
         let g = zoo::build("resmini", 5).unwrap();
-        let data = TaskData::new("resmini", 6);
-        let fp32 = evaluate_graph(&g, "resmini", &data, 2, 8);
+        let data = TaskData::new("resmini", 6).unwrap();
+        let fp32 = evaluate_graph(&g, "resmini", &data, 2, 8).unwrap();
         let mut sim = QuantizationSimModel::with_defaults(g, QuantParams::default());
         sim.compute_encodings(&data.calibration(2, 8));
         sim.set_all_act_enabled(false);
         sim.set_all_param_enabled(false);
-        assert_eq!(evaluate_sim(&sim, "resmini", &data, 2, 8), fp32);
+        assert_eq!(evaluate_sim(&sim, "resmini", &data, 2, 8).unwrap(), fp32);
     }
 
     #[test]
     fn calibration_batches_differ_from_eval_batches() {
-        let data = TaskData::new("mobimini", 7);
+        let data = TaskData::new("mobimini", 7).unwrap();
         let c = data.calibration(1, 4);
         let (e, _) = data.batch(50_000, 4);
         assert!(c[0].max_abs_diff(&e) > 0.0);

@@ -19,11 +19,11 @@ fn input_shape(model: &str) -> Vec<usize> {
 }
 
 fn calib(model: &str, n: usize, batch: usize) -> Vec<Tensor> {
-    TaskData::new(model, 77).calibration(n, batch)
+    TaskData::new(model, 77).unwrap().calibration(n, batch)
 }
 
 fn eval_batch(model: &str) -> Tensor {
-    TaskData::new(model, 78).batch(5, 4).0
+    TaskData::new(model, 78).unwrap().batch(5, 4).0
 }
 
 fn plan(choices: Vec<(&str, CompressionKind, f32)>) -> CompressionPlan {

@@ -31,7 +31,7 @@ fn fp32_forward_matches_for_every_model() {
     let Some(mut rt) = runtime_or_skip() else { return };
     for model in zoo::MODEL_NAMES {
         let g = zoo::build(model, 42).unwrap();
-        let data = TaskData::new(model, 43);
+        let data = TaskData::new(model, 43).unwrap();
         let n = fwd_batch(&rt, model);
         let (x, _) = data.batch(0, n);
         let rust_y = g.forward(&x);
@@ -55,7 +55,7 @@ fn quantsim_forward_matches_pallas_fake_quant_path() {
     let Some(mut rt) = runtime_or_skip() else { return };
     let model = "mobimini";
     let g = zoo::build(model, 44).unwrap();
-    let data = TaskData::new(model, 45);
+    let data = TaskData::new(model, 45).unwrap();
     let mut sim = QuantizationSimModel::with_defaults(g, QuantParams::default());
     sim.compute_encodings(&data.calibration(3, 8));
 
@@ -118,7 +118,7 @@ fn fp32_step_trains_identically_shaped_params() {
     let Some(mut rt) = runtime_or_skip() else { return };
     let model = "mobimini";
     let g = zoo::build(model, 46).unwrap();
-    let data = TaskData::new(model, 47);
+    let data = TaskData::new(model, 47).unwrap();
     let spec = rt.spec("mobimini_fp32_step").unwrap().clone();
     let n = spec.inputs[spec.inputs.len() - 3][0];
     let (x, targets) = data.batch(0, n);
@@ -215,7 +215,7 @@ fn qmatmul_demo_matches_rust_quantized_matmul() {
 #[test]
 fn range_stats_demo_matches_rust_min_max() {
     let Some(mut rt) = runtime_or_skip() else { return };
-    let data = TaskData::new("mobimini", 48);
+    let data = TaskData::new("mobimini", 48).unwrap();
     let spec = rt.spec("range_stats_demo").unwrap().clone();
     let n = spec.inputs[0][0];
     let (x, _) = data.batch(0, n);

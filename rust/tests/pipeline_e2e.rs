@@ -15,13 +15,13 @@ fn train_ptq_qat_export_lifecycle() {
     // Training must actually have learned something.
     let (head, tail) = train_log.head_tail_mean(3);
     assert!(tail < head, "training failed: {head} -> {tail}");
-    let fp32 = evaluate_graph(&g, model, &data, 3, 16);
+    let fp32 = evaluate_graph(&g, model, &data, 3, 16).unwrap();
     assert!(fp32 > 40.0, "fp32 baseline too weak: {fp32}");
 
     // PTQ (fig 4.1).
     let calib = data.calibration(3, 16);
     let ptq_out = standard_ptq_pipeline(&g, &calib, &PtqOptions::default());
-    let ptq = evaluate_sim(&ptq_out.sim, model, &data, 3, 16);
+    let ptq = evaluate_sim(&ptq_out.sim, model, &data, 3, 16).unwrap();
     assert!(
         ptq > fp32 - 15.0,
         "W8/A8 PTQ should be near FP32: {fp32} vs {ptq}"
@@ -36,7 +36,7 @@ fn train_ptq_qat_export_lifecycle() {
         ..Default::default()
     };
     fit_qat(&mut sim, model, &data, &cfg);
-    let qat = evaluate_sim(&sim, model, &data, 3, 16);
+    let qat = evaluate_sim(&sim, model, &data, 3, 16).unwrap();
     assert!(
         qat >= ptq - 3.0,
         "QAT should not regress from PTQ init: {ptq} vs {qat}"
@@ -62,7 +62,7 @@ fn train_ptq_qat_export_lifecycle() {
 fn detection_lifecycle_with_adaround() {
     let model = "detmini";
     let (g, data, _) = trained_model(model, Effort::Fast, 2100);
-    let fp32 = evaluate_graph(&g, model, &data, 3, 16);
+    let fp32 = evaluate_graph(&g, model, &data, 3, 16).unwrap();
     let calib = data.calibration(3, 16);
     let mut opts = PtqOptions {
         use_adaround: true,
@@ -71,7 +71,7 @@ fn detection_lifecycle_with_adaround() {
     opts.adaround.iterations = 120;
     opts.adaround.max_rows = 512;
     let out = standard_ptq_pipeline(&g, &calib, &opts);
-    let q = evaluate_sim(&out.sim, model, &data, 3, 16);
+    let q = evaluate_sim(&out.sim, model, &data, 3, 16).unwrap();
     assert!(
         q > fp32 - 20.0,
         "W8/A8 AdaRound PTQ should hold mAP: {fp32} vs {q}"
@@ -86,12 +86,12 @@ fn detection_lifecycle_with_adaround() {
 fn speech_lifecycle_recurrent() {
     let model = "speechmini";
     let (g, data, _) = trained_model(model, Effort::Fast, 2200);
-    let fp32 = evaluate_graph(&g, model, &data, 3, 16);
+    let fp32 = evaluate_graph(&g, model, &data, 3, 16).unwrap();
     let calib = data.calibration(2, 16);
     // LSTMs: no BN to fold, no CLE pairs — pipeline must degrade to plain
     // range setting without erroring.
     let out = standard_ptq_pipeline(&g, &calib, &PtqOptions::default());
-    let q = evaluate_sim(&out.sim, model, &data, 3, 16);
+    let q = evaluate_sim(&out.sim, model, &data, 3, 16).unwrap();
     assert!(
         q > fp32 - 15.0,
         "W8/A8 LSTM sim should be near FP32: {fp32} vs {q}"

@@ -109,7 +109,7 @@ fn prop_bn_fold_function_preserving() {
         let g = zoo::build(model, 0x50 + i as u64).unwrap();
         let mut folded = g.clone();
         fold_all_batch_norms(&mut folded);
-        let data = aimet::task::TaskData::new(model, 7);
+        let data = aimet::task::TaskData::new(model, 7).unwrap();
         let (x, _) = data.batch(0, 4);
         let y0 = g.forward(&x);
         let y1 = folded.forward(&x);
@@ -225,7 +225,7 @@ fn prop_graph_serde_roundtrip() {
         let g = zoo::build(model, 99).unwrap();
         aimet::graph::save_graph(&g, &dir.join(model)).unwrap();
         let g2 = aimet::graph::load_graph(&dir.join(model)).unwrap();
-        let data = aimet::task::TaskData::new(model, 3);
+        let data = aimet::task::TaskData::new(model, 3).unwrap();
         let (x, _) = data.batch(0, 2);
         assert_eq!(g.forward(&x), g2.forward(&x), "{model} serde mismatch");
     }

@@ -53,7 +53,7 @@ fn cle_flattens_weight_ranges_on_pathological_model() {
 fn pipeline_recovers_pathological_mobimini() {
     // Table 4.1's row 1 end-to-end on a trained model.
     let (g, data, _) = trained_model("mobimini", Effort::Fast, 902);
-    let fp32 = evaluate_graph(&g, "mobimini", &data, 3, 16);
+    let fp32 = evaluate_graph(&g, "mobimini", &data, 3, 16).unwrap();
     let calib = data.calibration(3, 16);
 
     let rtn = standard_ptq_pipeline(
@@ -65,10 +65,10 @@ fn pipeline_recovers_pathological_mobimini() {
             ..Default::default()
         },
     );
-    let rtn_acc = evaluate_sim(&rtn.sim, "mobimini", &data, 3, 16);
+    let rtn_acc = evaluate_sim(&rtn.sim, "mobimini", &data, 3, 16).unwrap();
 
     let full = standard_ptq_pipeline(&g, &calib, &PtqOptions::default());
-    let full_acc = evaluate_sim(&full.sim, "mobimini", &data, 3, 16);
+    let full_acc = evaluate_sim(&full.sim, "mobimini", &data, 3, 16).unwrap();
 
     assert!(rtn_acc < fp32 - 8.0, "RTN should hurt: fp32 {fp32} rtn {rtn_acc}");
     assert!(
@@ -93,7 +93,7 @@ fn adaround_beats_rtn_at_low_bitwidth_end_to_end() {
     // Both arms include CLE + BC, like table_4_2 (the paper applies the
     // full pipeline to the ADAS model; only the rounding differs).
     let rtn = standard_ptq_pipeline(&g, &calib, &PtqOptions { qp, ..Default::default() });
-    let rtn_map = evaluate_sim(&rtn.sim, "detmini", &data, 6, 16);
+    let rtn_map = evaluate_sim(&rtn.sim, "detmini", &data, 6, 16).unwrap();
     let mut opts = PtqOptions {
         qp,
         use_adaround: true,
@@ -105,7 +105,7 @@ fn adaround_beats_rtn_at_low_bitwidth_end_to_end() {
         ..Default::default()
     };
     let ada = standard_ptq_pipeline(&g, &calib, &opts);
-    let ada_map = evaluate_sim(&ada.sim, "detmini", &data, 6, 16);
+    let ada_map = evaluate_sim(&ada.sim, "detmini", &data, 6, 16).unwrap();
     assert!(
         ada_map >= rtn_map - 1.0,
         "AdaRound must not lose to RTN at W4: {ada_map} vs {rtn_map}"
@@ -197,7 +197,7 @@ fn debug_flow_on_trained_model_produces_ranked_report() {
     let (g, data, _) = trained_model("mobimini", Effort::Fast, 907);
     // Use the same eval configuration as the sweep closure below — the
     // sanity check compares against exactly this number.
-    let fp32 = evaluate_graph(&g, "mobimini", &data, 1, 16);
+    let fp32 = evaluate_graph(&g, "mobimini", &data, 1, 16).unwrap();
     let calib = data.calibration(2, 16);
     let out = standard_ptq_pipeline(
         &g,
@@ -213,7 +213,7 @@ fn debug_flow_on_trained_model_produces_ranked_report() {
         },
     );
     let report = run_debug_flow(&out.sim, fp32, &|sim| {
-        evaluate_sim(sim, "mobimini", &data, 1, 16)
+        evaluate_sim(sim, "mobimini", &data, 1, 16).unwrap()
     });
     assert_eq!(report.sanity_metric, fp32);
     assert!(!report.sensitivity.is_empty());

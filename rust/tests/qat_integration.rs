@@ -34,11 +34,11 @@ fn qat_improves_over_ptq_at_low_bitwidth() {
         ..Default::default()
     };
     let ptq_out = standard_ptq_pipeline(&g, &calib, &opts);
-    let ptq_acc = evaluate_sim(&ptq_out.sim, "resmini", &data, 3, 16);
+    let ptq_acc = evaluate_sim(&ptq_out.sim, "resmini", &data, 3, 16).unwrap();
 
     let mut sim = ptq_out.sim.clone();
     fit_qat(&mut sim, "resmini", &data, &qat_cfg(80));
-    let qat_acc = evaluate_sim(&sim, "resmini", &data, 3, 16);
+    let qat_acc = evaluate_sim(&sim, "resmini", &data, 3, 16).unwrap();
     assert!(
         qat_acc >= ptq_acc - 1.0,
         "QAT must not lose to its PTQ init: ptq {ptq_acc} qat {qat_acc}"
@@ -62,13 +62,13 @@ fn qat_pipeline_static_bn_fold_first() {
 fn qat_recovers_speechmini_to_near_fp32() {
     // Table 5.2's shape: bi-LSTM QAT degrades only slightly vs FP32.
     let (g, data, _) = trained_model("speechmini", Effort::Fast, 912);
-    let fp32 = evaluate_graph(&g, "speechmini", &data, 3, 16);
+    let fp32 = evaluate_graph(&g, "speechmini", &data, 3, 16).unwrap();
     let mut sim = QuantizationSimModel::with_defaults(g, QuantParams::default());
     sim.compute_encodings(&data.calibration(2, 16));
     let mut cfg = qat_cfg(60);
     cfg.lr = 0.05;
     fit_qat(&mut sim, "speechmini", &data, &cfg);
-    let qat = evaluate_sim(&sim, "speechmini", &data, 3, 16);
+    let qat = evaluate_sim(&sim, "speechmini", &data, 3, 16).unwrap();
     assert!(
         qat > fp32 - 10.0,
         "LSTM QAT degraded too far: fp32 {fp32} qat {qat}"

@@ -12,11 +12,11 @@ use aimet::zoo;
 fn every_zoo_model_simulates_and_stays_in_band() {
     for model in zoo::MODEL_NAMES {
         let g = zoo::build(model, 11).unwrap();
-        let data = TaskData::new(model, 12);
-        let fp32 = evaluate_graph(&g, model, &data, 2, 8);
+        let data = TaskData::new(model, 12).unwrap();
+        let fp32 = evaluate_graph(&g, model, &data, 2, 8).unwrap();
         let mut sim = QuantizationSimModel::with_defaults(g, QuantParams::default());
         sim.compute_encodings(&data.calibration(2, 8));
-        let q = evaluate_sim(&sim, model, &data, 2, 8);
+        let q = evaluate_sim(&sim, model, &data, 2, 8).unwrap();
         // Untrained models: W8/A8 noise must not move the metric wildly.
         assert!(
             (q - fp32).abs() <= 60.0,
@@ -30,7 +30,7 @@ fn bypassed_sim_is_bit_exact_with_fp32_on_all_models() {
     // §4.8 step 1 as an invariant across the zoo.
     for model in zoo::MODEL_NAMES {
         let g = zoo::build(model, 13).unwrap();
-        let data = TaskData::new(model, 14);
+        let data = TaskData::new(model, 14).unwrap();
         let (x, _) = data.batch(0, 4);
         let fp32_y = g.forward(&x);
         let mut sim = QuantizationSimModel::with_defaults(g, QuantParams::default());
@@ -82,7 +82,7 @@ fn export_and_reimport_encodings_roundtrip() {
     let dir = std::env::temp_dir().join("aimet_qsim_export_test");
     std::fs::create_dir_all(&dir).unwrap();
     let g = zoo::build("mobimini", 17).unwrap();
-    let data = TaskData::new("mobimini", 18);
+    let data = TaskData::new("mobimini", 18).unwrap();
     let mut sim = QuantizationSimModel::with_defaults(g, QuantParams::default());
     sim.compute_encodings(&data.calibration(2, 8));
     sim.export(&dir, "mobi").unwrap();
@@ -106,7 +106,7 @@ fn export_and_reimport_encodings_roundtrip() {
 fn per_quantizer_bitwidth_overrides_recalibrate() {
     // The §4.8 "higher bit-width for problematic quantizer" move.
     let g = zoo::build("mobimini", 19).unwrap();
-    let data = TaskData::new("mobimini", 20);
+    let data = TaskData::new("mobimini", 20).unwrap();
     let calib = data.calibration(2, 8);
     let mut sim = QuantizationSimModel::with_defaults(
         g,

@@ -1,31 +1,40 @@
 #!/usr/bin/env bash
-# Perf + compression gate: build release, run the hotpath and compression
-# benches, and fail if
+# Perf + compression + engine gate: build release, run the hotpath,
+# compression and engine benches, and fail if
 #   * BENCH_hotpath.json is missing or the quantsim/fp32 forward ratio
 #     exceeds the paper-motivated 3.0x budget (rust/README.md §Perf), or
 #   * BENCH_compress.json is missing, MAC reduction on the reference zoo
 #     model falls below 40%, or the compression eval-score delta exceeds
-#     2 points (rust/README.md §Compression).
+#     2 points (rust/README.md §Compression), or
+#   * BENCH_engine.json is missing, batched int8 engine throughput falls
+#     below 1.5x the per-request fp32 forward, or engine batch-8 falls
+#     below 2x batch-1 samples/sec (rust/README.md §Engine).
 set -euo pipefail
 
-cd "$(dirname "$0")/.."
+# Resolve the repo root from the script's own location so the gate runs
+# from any cwd (including via a symlink).
+SCRIPT_DIR="$(cd "$(dirname "${BASH_SOURCE[0]}")" && pwd)"
+cd "$SCRIPT_DIR/.."
 
 (cd rust && cargo build --release)
 (cd rust && cargo bench --bench hotpath)
 (cd rust && cargo bench --bench compress)
+(cd rust && cargo bench --bench engine)
 
-if [[ ! -f BENCH_hotpath.json ]]; then
-    echo "bench_check: BENCH_hotpath.json was not emitted" >&2
-    exit 1
-fi
-if [[ ! -f BENCH_compress.json ]]; then
-    echo "bench_check: BENCH_compress.json was not emitted" >&2
-    exit 1
-fi
+for f in BENCH_hotpath.json BENCH_compress.json BENCH_engine.json; do
+    if [[ ! -f "$f" ]]; then
+        echo "bench_check: $f was not emitted" >&2
+        exit 1
+    fi
+done
 
 python3 - <<'EOF'
 import json
 import sys
+
+def fmt(v, suffix="x"):
+    """A missing metric renders as n/a instead of crashing the gate."""
+    return f"{v:.1f}{suffix}" if isinstance(v, (int, float)) else "n/a"
 
 with open("BENCH_hotpath.json") as f:
     d = json.load(f)
@@ -34,10 +43,9 @@ ratio = d["quantsim_over_fp32"]
 if ratio > 3.0:
     sys.exit(f"bench_check: quantsim/fp32 forward ratio {ratio:.2f} > 3.0")
 
-speedup = d.get("int_gemm_speedup_vs_naive")
 print(
     f"bench_check OK: quantsim/fp32 = {ratio:.2f}x (<= 3.0), "
-    f"int-GEMM speedup vs naive = {speedup:.1f}x"
+    f"int-GEMM speedup vs naive = {fmt(d.get('int_gemm_speedup_vs_naive'))}"
 )
 
 with open("BENCH_compress.json") as f:
@@ -52,6 +60,24 @@ if abs(delta) > 2.0:
 print(
     f"bench_check OK: compression {reduction:.1f}% MAC reduction "
     f"(eval delta {delta:.2f} pts, int-GEMM forward speedup "
-    f"{c['int_forward_speedup']:.2f}x)"
+    f"{fmt(c.get('int_forward_speedup'))})"
+)
+
+with open("BENCH_engine.json") as f:
+    e = json.load(f)
+
+speedup = e["engine_batched_speedup_vs_fp32"]
+scaling = e["engine_batch_scaling"]
+if speedup < 1.5:
+    sys.exit(
+        f"bench_check: batched engine throughput {speedup:.2f}x fp32 forward < 1.5x"
+    )
+if scaling < 2.0:
+    sys.exit(f"bench_check: engine batch-8/batch-1 scaling {scaling:.2f}x < 2.0x")
+print(
+    f"bench_check OK: engine batched {speedup:.2f}x fp32 (>= 1.5), "
+    f"batch scaling {scaling:.2f}x (>= 2.0), "
+    f"vs quantsim {fmt(e.get('engine_speedup_vs_quantsim_b8'))}, "
+    f"max step deviation {fmt(e.get('max_step_deviation'), '')}"
 )
 EOF

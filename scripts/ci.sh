@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# One-stop CI gate: tier-1 correctness (build + tests) followed by the
+# perf/compression/engine bench gates. Runnable from any cwd:
+#
+#   scripts/ci.sh
+#
+# Exit code is nonzero on the first failing stage.
+set -euo pipefail
+
+SCRIPT_DIR="$(cd "$(dirname "${BASH_SOURCE[0]}")" && pwd)"
+cd "$SCRIPT_DIR/.."
+
+echo "== ci: tier-1 (cargo build --release && cargo test -q) =="
+(cd rust && cargo build --release)
+(cd rust && cargo test -q)
+
+echo "== ci: bench gates (scripts/bench_check.sh) =="
+"$SCRIPT_DIR/bench_check.sh"
+
+echo "== ci: all gates passed =="
