@@ -1,30 +1,66 @@
-//! Integer-engine + serving benchmark (PR 3 acceptance record).
+//! Integer-engine + serving benchmark (PR 3/4 acceptance record).
 //!
 //! Measures, on the reference model (mobimini, trained fast, PTQ'd):
 //!   * fp32 / quantsim / integer-engine forward wall time at batch 1 & 8
+//!     (engine timings run the packed zero-allocation path: a warm
+//!     `Scratch` + `forward_with`)
 //!   * batch-1 → batch-8 engine throughput scaling (samples/sec)
 //!   * batched engine throughput vs the per-request fp32 forward — the
 //!     deployment comparison: a request served through the coalescing
 //!     int8 engine vs running the fp32 model once per request
+//!   * steady-state allocations per forward, counted through a wrapping
+//!     `GlobalAlloc` (the packed data path's contract is ZERO), plus the
+//!     static memory plan's peak/unshared arena bytes
 //!   * closed-loop serving latency percentiles (batch-1 vs coalesced)
 //!   * engine/sim agreement (max quantization-step deviation)
 //!
 //! Writes `BENCH_engine.json` at the repo root; `scripts/bench_check.sh`
-//! gates `engine_batched_speedup_vs_fp32 ≥ 1.5` and
-//! `engine_batch_scaling ≥ 2.0`.
+//! gates `engine_batched_speedup_vs_fp32 ≥ 1.5`,
+//! `engine_batch_scaling ≥ 2.0`, `allocs_per_forward_b8 == 0`, and the
+//! `BENCH_history.jsonl` throughput ratchet (≥ 0.9× the previous run).
 //!
 //! Run: `cargo bench --bench engine`
 
 mod common;
 
 use aimet::coordinator::experiments::{trained_model, Effort};
-use aimet::engine::{lower, run_serve_bench, BatchConfig};
+use aimet::engine::{lower, run_serve_bench, BatchConfig, Scratch};
 use aimet::json::Json;
 use aimet::ptq::{standard_ptq_pipeline, PtqOptions};
 use aimet::tensor::Tensor;
+use std::alloc::{GlobalAlloc, Layout, System};
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
+
+/// Process-wide allocation counter: every `alloc`/`realloc` anywhere in the
+/// process (any thread, any module) bumps it. During the steady-state
+/// window only the measured forwards run, so the delta is theirs.
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+// SAFETY: delegates verbatim to the system allocator; the counter has no
+// effect on the returned memory.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
 
 fn main() {
     let model = "mobimini";
@@ -40,11 +76,24 @@ fn main() {
     report.set("model", Json::from(model));
     report.set("threads", Json::from(threads as u32));
     report.set("integer_only", Json::Bool(qm.is_integer_only()));
+    report.set("fully_packed", Json::Bool(qm.is_fully_packed()));
 
     let (x1, _) = data.batch(0, 1);
     let (x8, _) = data.batch(0, 8);
 
-    // Forward wall times.
+    // The static memory plan (what `Scratch` executes against).
+    let plan8 = qm.memory_plan(x8.shape());
+    println!("{}", plan8.describe());
+    report.set("arena_peak_bytes_b8", Json::from(plan8.peak_bytes as f64));
+    report.set(
+        "arena_unshared_bytes_b8",
+        Json::from(plan8.total_bytes as f64),
+    );
+    report.set("arena_reuse_factor_b8", Json::from(plan8.reuse_factor()));
+
+    // Forward wall times. Engine runs the deployment path: one warm
+    // scratch, zero steady-state allocations.
+    let mut scratch = Scratch::new();
     let t_fp1 = common::median_secs(31, || {
         std::hint::black_box(g.forward(&x1));
     });
@@ -55,10 +104,10 @@ fn main() {
         std::hint::black_box(out.sim.forward(&x8));
     });
     let t_eng1 = common::median_secs(31, || {
-        std::hint::black_box(qm.forward_int(&x1));
+        std::hint::black_box(qm.forward_with(&x1, &mut scratch).data());
     });
     let t_eng8 = common::median_secs(15, || {
-        std::hint::black_box(qm.forward_int(&x8));
+        std::hint::black_box(qm.forward_with(&x8, &mut scratch).data());
     });
     println!(
         "fp32 forward    : b1 {:7.3} ms   b8 {:7.3} ms\n\
@@ -75,6 +124,25 @@ fn main() {
     report.set("quantsim_forward_b8_ms", Json::from(t_sim8 * 1e3));
     report.set("engine_forward_b1_ms", Json::from(t_eng1 * 1e3));
     report.set("engine_forward_b8_ms", Json::from(t_eng8 * 1e3));
+
+    // Steady-state allocations per forward: the scratch is warm (the
+    // timing loops above planned both batch shapes), the pool workers'
+    // thread-local panels are warm — the packed data path's contract is
+    // that the delta over REPS forwards is exactly zero.
+    const REPS: u64 = 20;
+    std::hint::black_box(qm.forward_with(&x8, &mut scratch).data());
+    let a0 = ALLOCATIONS.load(Ordering::Relaxed);
+    for _ in 0..REPS {
+        std::hint::black_box(qm.forward_with(&x8, &mut scratch).data());
+    }
+    let allocs_per_forward = (ALLOCATIONS.load(Ordering::Relaxed) - a0) as f64 / REPS as f64;
+    println!(
+        "steady-state allocations per forward (b8): {allocs_per_forward:.2} (target 0), \
+         warm arena {:.1} KiB over {} plans",
+        scratch.planned_peak_bytes() as f64 / 1024.0,
+        scratch.cached_plans()
+    );
+    report.set("allocs_per_forward_b8", Json::from(allocs_per_forward));
 
     // Throughputs (samples/sec) and the acceptance ratios.
     let fp32_b1_sps = 1.0 / t_fp1;
@@ -102,9 +170,9 @@ fn main() {
     for i in 0..4u64 {
         let (x, _) = data.batch(50_000 + i, 8);
         let ys = out.sim.forward(&x);
-        let yi = qm.forward_int(&x);
+        let yi = qm.forward_with(&x, &mut scratch);
         for (&q, &v) in yi.data().iter().zip(ys.data()) {
-            worst = worst.max((q - out_enc.quantize(v)).abs());
+            worst = worst.max((q as i32 - out_enc.quantize(v)).abs());
         }
     }
     println!("engine vs sim: max deviation {worst} quantization step(s)");
@@ -144,6 +212,10 @@ fn main() {
     report.set("serve_b8_p95_ms", Json::from(b8.p95_ms));
     report.set("serve_b8_p99_ms", Json::from(b8.p99_ms));
     report.set("serve_b8_mean_batch", Json::from(b8.stats.mean_batch()));
+    report.set(
+        "serve_b8_arena_peak_bytes",
+        Json::from(b8.stats.arena_peak_bytes as f64),
+    );
 
     let path = Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()

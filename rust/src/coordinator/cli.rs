@@ -444,8 +444,15 @@ fn cmd_infer(args: &Args) -> Result<i32, String> {
     }
     let (model, qm, sim, g, data) = lowered_model(args)?;
     println!("{}", qm.describe());
+    // The static arena plan the packed engine executes against.
+    let (x0, _) = data.batch(50_000, batch);
+    println!("{}", qm.memory_plan(x0.shape()).describe());
 
     let out_enc = *qm.output_encoding();
+    let mut scratch = crate::engine::Scratch::new();
+    // Warm the scratch (plan + arena) so the timed loop below measures the
+    // steady-state zero-allocation path, not one-time planning.
+    std::hint::black_box(qm.forward_with(&x0, &mut scratch).data());
     let (mut m_fp32, mut m_sim, mut m_eng) = (0.0f32, 0.0f32, 0.0f32);
     let (mut t_fp32, mut t_sim, mut t_eng) = (0.0f64, 0.0f64, 0.0f64);
     let (mut worst_step, mut gt1, mut elems) = (0i32, 0usize, 0usize);
@@ -458,18 +465,19 @@ fn cmd_infer(args: &Args) -> Result<i32, String> {
         let y_sim = sim.forward(&x);
         t_sim += t0.elapsed().as_secs_f64();
         let t0 = std::time::Instant::now();
-        let y_int = qm.forward_int(&x);
+        let y_int = qm.forward_with(&x, &mut scratch);
         t_eng += t0.elapsed().as_secs_f64();
         // Agreement: both outputs as integers on the output grid.
         for (&q, &v) in y_int.data().iter().zip(y_sim.data()) {
-            let d = (q - out_enc.quantize(v)).abs();
+            let d = (q as i32 - out_enc.quantize(v)).abs();
             worst_step = worst_step.max(d);
             gt1 += usize::from(d > 1);
             elems += 1;
         }
+        let y_eng = y_int.dequantize();
         m_fp32 += crate::task::quality(&model, &y_fp, &t)?;
         m_sim += crate::task::quality(&model, &y_sim, &t)?;
-        m_eng += crate::task::quality(&model, &y_int.dequantize(), &t)?;
+        m_eng += crate::task::quality(&model, &y_eng, &t)?;
     }
     let n = batches as f32;
     let ms = |s: f64| s / batches as f64 * 1e3;

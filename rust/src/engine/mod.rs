@@ -4,14 +4,31 @@
 //!
 //! [`lower`] converts a calibrated [`QuantizationSimModel`] into a
 //! standalone [`QuantizedModel`]: every weight is pre-packed once into a
-//! [`QTensor`] (per-tensor or per-channel), every layer boundary gets a
-//! *folded requantization multiplier* (`s_w·s_x / s_out`, eq 2.9), and
-//! conv/linear layers whose activation the runtime config fuses
-//! (Conv+ReLU/ReLU6 supergroups) absorb the activation as integer clamps
-//! in the requantization epilogue. Activations then stay INT8 end-to-end:
-//! the engine's forward never materializes a dequantized activation
-//! tensor — the only float arithmetic on the hot path is the one scalar
-//! multiply per INT32 accumulator of fig 2.2's rescale step.
+//! [`QTensor`] (per-tensor or per-channel, with an i8 K-panel layout for
+//! the GEMM), every layer boundary gets a *folded requantization
+//! multiplier* (`s_w·s_x / s_out`, eq 2.9), and conv/linear layers whose
+//! activation the runtime config fuses (Conv+ReLU/ReLU6 supergroups)
+//! absorb the activation as integer clamps in the requantization epilogue.
+//!
+//! The realized bandwidth win of int8 comes from *storing* activations in
+//! 8 bits, not just computing in integers (Krishnamoorthi 2018 §4), so the
+//! engine's data path is built around three invariants:
+//!
+//! * **Packed activations.** [`ITensor`] holds one `i8` per element.
+//!   Unsigned 8-bit grids (asymmetric activations, one-tailed symmetric
+//!   grids) are re-centred onto the signed window at lowering — a pure
+//!   re-labelling of the integer representatives that leaves every real
+//!   value, scale and clamp identical (the eq 2.9 zero-point correction
+//!   absorbs the shift). Activation bit-widths above 8 do not lower.
+//! * **Static memory plan.** [`plan`] assigns every node output a byte
+//!   offset in one arena, reusing bytes across non-overlapping lifetimes;
+//!   [`QuantizedModel::forward_with`] executes against a caller-provided
+//!   [`Scratch`] arena and allocates nothing in steady state.
+//! * **Im2col-free conv.** The dense conv kernel gathers zero-point-padded
+//!   patch columns tile-by-tile into an L1-sized panel inside the GEMM
+//!   loop instead of materializing the full `[C·kh·kw, N·OH·OW]` matrix.
+//!   The materializing path is retained as the bit-exactness oracle
+//!   ([`QuantizedModel::forward_int_ref`]).
 //!
 //! The lowered model agrees with [`QuantizationSimModel::forward`] to
 //! within one quantization step per output element (the sim accumulates
@@ -24,38 +41,50 @@
 //! [`QuantizedModel::is_integer_only`] reports whether a model has any.
 //!
 //! [`serve`] adds the batched front-end: single-sample requests coalesced
-//! into micro-batches and executed on the shared worker pool.
+//! into micro-batches and executed on the shared worker pool against one
+//! warm per-batcher [`Scratch`].
 
+pub mod plan;
 pub mod serve;
 
+pub use plan::{MemoryPlan, Scratch};
 pub use serve::{run_serve_bench, BatchClient, BatchConfig, BatchServer, ServeReport, ServeStats};
 
 use crate::graph::{lstm_forward, Input, Op};
-use crate::pool::{parallel_chunks, SyncSlice};
-use crate::quant::{quantize_ints, requantize_value, Encoding, QTensor, Requant};
+use crate::pool::{parallel_chunks, with_worker_scratch, SyncSlice};
+use crate::quant::{quantize_i8, quantize_i8_into, requantize_value, Encoding, QTensor, Requant, GEMM_MR};
 use crate::quantsim::QuantizationSimModel;
 use crate::tensor::{Conv2dSpec, Tensor};
 
-/// A dense integer tensor: values on one [`Encoding`]'s grid. Storage is
-/// `i32` (the values themselves fit the encoding's 8-bit grid; i32 keeps
-/// the kernels branch-free and matches the accumulator width).
+/// Most inputs a lowered node may have (concat fan-in bound; enforced at
+/// lowering so the executor can use a fixed-size on-stack view array).
+const MAX_INPUTS: usize = 16;
+
+/// A dense integer tensor: values on one [`Encoding`]'s grid, stored
+/// packed as one `i8` per element (the engine's lowering guarantees every
+/// activation grid fits the signed 8-bit window).
 #[derive(Debug, Clone)]
 pub struct ITensor {
     shape: Vec<usize>,
-    data: Vec<i32>,
+    data: Vec<i8>,
     /// The grid this tensor's values live on.
     pub enc: Encoding,
 }
 
 impl ITensor {
-    pub fn new(shape: Vec<usize>, data: Vec<i32>, enc: Encoding) -> ITensor {
+    pub fn new(shape: Vec<usize>, data: Vec<i8>, enc: Encoding) -> ITensor {
         assert_eq!(shape.iter().product::<usize>(), data.len());
+        debug_assert!(
+            enc.int_min >= i8::MIN as i32 && enc.int_max <= i8::MAX as i32,
+            "ITensor encoding must be packed to the i8 window"
+        );
         ITensor { shape, data, enc }
     }
 
     /// Quantize an f32 tensor onto `enc`'s grid (the model-input boundary).
+    /// `enc` must be an i8-window grid (see `packed_encoding`).
     pub fn quantize(x: &Tensor, enc: &Encoding) -> ITensor {
-        ITensor::new(x.shape().to_vec(), quantize_ints(x.data(), enc), *enc)
+        ITensor::new(x.shape().to_vec(), quantize_i8(x.data(), enc), *enc)
     }
 
     pub fn shape(&self) -> &[usize] {
@@ -74,17 +103,86 @@ impl ITensor {
         self.data.is_empty()
     }
 
-    pub fn data(&self) -> &[i32] {
+    pub fn data(&self) -> &[i8] {
         &self.data
+    }
+
+    /// Borrowed view (what the arena executor works in).
+    pub fn view(&self) -> IView<'_> {
+        IView {
+            shape: &self.shape,
+            data: &self.data,
+            enc: self.enc,
+        }
     }
 
     /// De-quantize to real values (eq 2.6) — the model-output boundary.
     pub fn dequantize(&self) -> Tensor {
+        self.view().dequantize()
+    }
+}
+
+/// A borrowed packed-int8 tensor: what [`QuantizedModel::forward_with`]
+/// returns (a window into the caller's [`Scratch`] arena — reading it
+/// allocates nothing).
+#[derive(Debug, Clone, Copy)]
+pub struct IView<'a> {
+    shape: &'a [usize],
+    data: &'a [i8],
+    pub enc: Encoding,
+}
+
+impl<'a> IView<'a> {
+    pub fn shape(&self) -> &[usize] {
+        self.shape
+    }
+
+    pub fn dim(&self, i: usize) -> usize {
+        self.shape[i]
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &'a [i8] {
+        self.data
+    }
+
+    /// Copy out into an owned [`ITensor`].
+    pub fn to_owned_tensor(&self) -> ITensor {
+        ITensor::new(self.shape.to_vec(), self.data.to_vec(), self.enc)
+    }
+
+    /// De-quantize to real values (eq 2.6).
+    pub fn dequantize(&self) -> Tensor {
         let z = self.enc.offset;
         let s = self.enc.scale;
         Tensor::new(
-            &self.shape,
-            self.data.iter().map(|&q| s * (q - z) as f32).collect(),
+            self.shape,
+            self.data.iter().map(|&q| s * (q as i32 - z) as f32).collect(),
+        )
+    }
+
+    /// De-quantize rows `r0..r1` along axis 0 (the serving reply path).
+    pub fn dequantize_rows(&self, r0: usize, r1: usize) -> Tensor {
+        let rows = self.shape[0];
+        assert!(r0 <= r1 && r1 <= rows, "rows {r0}..{r1} of {rows}");
+        let stride = if rows == 0 { 0 } else { self.data.len() / rows };
+        let z = self.enc.offset;
+        let s = self.enc.scale;
+        let mut shape = self.shape.to_vec();
+        shape[0] = r1 - r0;
+        Tensor::new(
+            &shape,
+            self.data[r0 * stride..r1 * stride]
+                .iter()
+                .map(|&q| s * (q as i32 - z) as f32)
+                .collect(),
         )
     }
 }
@@ -100,7 +198,7 @@ enum FusedAct {
 /// + z_out, lo, hi)`. Standalone ReLU/ReLU6 (the clamps carry the
 /// activation), pools, upsampling and concat inputs all reduce to this.
 #[derive(Debug, Clone, Copy)]
-struct Remap {
+pub(crate) struct Remap {
     mult: f32,
     z_in: i32,
     z_out: i32,
@@ -152,8 +250,8 @@ fn act_clamp(e: &Encoding, act: Option<FusedAct>) -> (i32, i32) {
 
 /// One lowered node's executable form.
 #[derive(Debug, Clone)]
-enum QOp {
-    /// Dense conv: im2col (zero-point padded) + integer GEMM with folded
+pub(crate) enum QOp {
+    /// Dense conv: tiled im2col-free integer GEMM with folded
     /// requantization; a fused ReLU/ReLU6 lives in `rq`'s clamps.
     Conv {
         qw: QTensor,
@@ -173,8 +271,7 @@ enum QOp {
     /// Linear over [..., F] (leading dims flattened to a batch).
     Linear { qw: QTensor, rq: Requant },
     /// An activation fused into its producer that is also the model
-    /// output: passes the producer's tensor through (one clone at the
-    /// model boundary).
+    /// output: aliases the producer's arena buffer (zero copies).
     Identity,
     /// An activation fused into its producer whose consumers were rewired
     /// to read the producer directly: its slot holds an empty placeholder,
@@ -227,10 +324,10 @@ enum QOp {
 
 /// One node of the lowered model (topology mirrors the sim graph 1:1).
 #[derive(Debug, Clone)]
-struct QNode {
+pub(crate) struct QNode {
     name: String,
-    inputs: Vec<Input>,
-    op: QOp,
+    pub(crate) inputs: Vec<Input>,
+    pub(crate) op: QOp,
 }
 
 /// A standalone integer inference model: the output of [`lower`].
@@ -238,17 +335,23 @@ struct QNode {
 /// only — no dependence on the sim, its quantizers, or f32 weights.
 #[derive(Debug, Clone)]
 pub struct QuantizedModel {
-    nodes: Vec<QNode>,
-    output: usize,
+    pub(crate) nodes: Vec<QNode>,
+    pub(crate) output: usize,
     input_enc: Encoding,
     out_encs: Vec<Encoding>,
+    /// Unique per-[`lower`] stamp (clones share it — identical layout).
+    /// [`Scratch`] keys its plan cache on this, so one scratch accidentally
+    /// reused across models re-plans instead of serving a stale layout.
+    pub(crate) model_id: u64,
 }
 
 fn reject_passthrough(e: &Encoding, what: &str) -> Result<(), String> {
     if e.is_passthrough() {
+        // Path-neutral wording: weights up to 16 bits still lower (they
+        // just skip the i8 K-panel form); only activations are capped at 8.
         Err(format!(
             "{what}: bit-width {} is a passthrough encoding — integer lowering \
-             needs a real grid (bw ≤ 16)",
+             needs a real grid (bw < 32)",
             e.bw
         ))
     } else {
@@ -256,11 +359,41 @@ fn reject_passthrough(e: &Encoding, what: &str) -> Result<(), String> {
     }
 }
 
+/// Map an activation encoding onto the packed signed-i8 window.
+///
+/// Unsigned 8-bit grids (asymmetric activations with `int_max = 255`, and
+/// one-tailed symmetric grids) are re-centred by −128: `offset`,
+/// `int_min` and `int_max` all shift together, so every *real* quantity —
+/// scale, `grid_min`/`grid_max`, dequantized values, the ReLU clamp at the
+/// zero-point — is unchanged; only the integer representative moves. The
+/// eq 2.9 correction term `z_x·Σw` absorbs the shift exactly, so integer
+/// results are identical to the unshifted pipeline.
+fn packed_encoding(e: &Encoding, what: &str) -> Result<Encoding, String> {
+    reject_passthrough(e, what)?;
+    if e.bw > 8 {
+        return Err(format!(
+            "`{what}`: activation bit-width {} exceeds 8 — the packed int8 engine stores \
+             activations as one byte per element (§2.1 deployment contract)",
+            e.bw
+        ));
+    }
+    if e.int_min >= i8::MIN as i32 && e.int_max <= i8::MAX as i32 {
+        return Ok(*e);
+    }
+    Ok(Encoding {
+        offset: e.offset - 128,
+        int_min: e.int_min - 128,
+        int_max: e.int_max - 128,
+        ..*e
+    })
+}
+
 /// Lower a calibrated quantization sim into a [`QuantizedModel`].
 ///
 /// Requirements (all surfaced as diagnostics, never panics):
 /// * `compute_encodings` has run — every reachable edge needs a grid;
 /// * the model input is quantized (`quantize_model_input`);
+/// * activation bit-widths are ≤ 8 (packed storage);
 /// * batch norms are folded (the PTQ pipeline always folds) — an unfused
 ///   BatchNorm with its own quantizer lowers fine (per-channel affine),
 ///   but a supergroup-suppressed one has no grid to lower onto;
@@ -274,7 +407,7 @@ pub fn lower(sim: &QuantizationSimModel) -> Result<QuantizedModel, String> {
          quantize_model_input enabled (run compute_encodings / the PTQ pipeline first)"
             .to_string()
     })?;
-    reject_passthrough(&input_enc, "model input")?;
+    let input_enc = packed_encoding(&input_enc, "model input")?;
 
     // Pass 1: resolve the integer grid of every edge, deciding
     // conv/linear + ReLU fusion where the config suppressed the
@@ -287,9 +420,15 @@ pub fn lower(sim: &QuantizationSimModel) -> Result<QuantizedModel, String> {
     let mut fuse_src = vec![usize::MAX; n];
     for idx in 0..n {
         let node = &g.nodes[idx];
+        if node.inputs.len() > MAX_INPUTS {
+            return Err(format!(
+                "cannot lower `{}`: {} inputs exceeds the engine's fan-in bound {MAX_INPUTS}",
+                node.name,
+                node.inputs.len()
+            ));
+        }
         if let Some(e) = sim.act_encoding(idx) {
-            reject_passthrough(&e, &node.name)?;
-            out_enc[idx] = Some(e);
+            out_enc[idx] = Some(packed_encoding(&e, &node.name)?);
             continue;
         }
         match &node.op {
@@ -313,8 +452,7 @@ pub fn lower(sim: &QuantizationSimModel) -> Result<QuantizedModel, String> {
                 });
                 match fusable {
                     Some((ci, act, e)) => {
-                        reject_passthrough(&e, &node.name)?;
-                        out_enc[idx] = Some(e);
+                        out_enc[idx] = Some(packed_encoding(&e, &node.name)?);
                         fused_with[idx] = Some(act);
                         fused_away[ci] = true;
                         fuse_src[ci] = idx;
@@ -379,7 +517,8 @@ pub fn lower(sim: &QuantizationSimModel) -> Result<QuantizedModel, String> {
                 if fused_away[idx] {
                     // The producer already carries this node's encoding
                     // and clamps; consumers are rewired below. Only the
-                    // model-output position still needs the pass-through.
+                    // model-output position still needs the (aliasing)
+                    // pass-through.
                     if g.output == idx {
                         QOp::Identity
                     } else {
@@ -429,9 +568,7 @@ pub fn lower(sim: &QuantizationSimModel) -> Result<QuantizedModel, String> {
                 r.mult *= 0.25; // the /4 of the 2×2 mean, folded
                 QOp::AvgPool2(r)
             }
-            Op::GlobalAvgPool => {
-                QOp::GlobalAvgPool(Remap::new(&resolve_in(idx, 0), &oenc, None))
-            }
+            Op::GlobalAvgPool => QOp::GlobalAvgPool(Remap::new(&resolve_in(idx, 0), &oenc, None)),
             Op::Upsample2 => QOp::Upsample2(Remap::new(&resolve_in(idx, 0), &oenc, None)),
             Op::Flatten => QOp::Flatten(Remap::new(&resolve_in(idx, 0), &oenc, None)),
             Op::Add => {
@@ -487,11 +624,13 @@ pub fn lower(sim: &QuantizationSimModel) -> Result<QuantizedModel, String> {
             op,
         });
     }
+    static NEXT_MODEL_ID: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
     Ok(QuantizedModel {
         nodes,
         output: g.output,
         input_enc,
         out_encs: out_enc.into_iter().map(|e| e.unwrap()).collect(),
+        model_id: NEXT_MODEL_ID.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
     })
 }
 
@@ -552,33 +691,133 @@ fn fold_requant(
     }
 }
 
+/// Which conv/linear kernels to run: the packed hot path or the retained
+/// materializing reference path (the bit-exactness oracle).
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum KernelPath {
+    Packed,
+    Reference,
+}
+
 impl QuantizedModel {
-    /// Integer forward pass: quantize the input once, run every node on
-    /// the integer grid, return the output node's integer tensor.
+    /// Zero-allocation integer forward: quantize the input into the
+    /// caller's [`Scratch`] arena, run every node in place against the
+    /// static memory plan, and return a borrowed view of the output
+    /// buffer. After the first call at a given input shape (which plans
+    /// the arena) this performs no heap allocation.
+    pub fn forward_with<'s>(&self, x: &Tensor, s: &'s mut Scratch) -> IView<'s> {
+        let pi = s.ensure_plan(self, x.shape());
+        let (plans, arena) = s.parts();
+        let p = &plans[pi];
+        let in_len = p.input_len();
+        quantize_i8_into(
+            x.data(),
+            &self.input_enc,
+            &mut arena[p.input_offset..p.input_offset + in_len],
+        );
+        let base = SyncSlice::new(arena.as_mut_ptr());
+        for (idx, node) in self.nodes.iter().enumerate() {
+            if matches!(node.op, QOp::Identity | QOp::FusedAway) {
+                continue; // aliased / empty slots — nothing to execute
+            }
+            let empty: &[usize] = &[];
+            let mut ins = [IView {
+                shape: empty,
+                data: &[],
+                enc: self.input_enc,
+            }; MAX_INPUTS];
+            for (k, inp) in node.inputs.iter().enumerate() {
+                // SAFETY: the planner keeps every input buffer allocated
+                // (and disjoint from the output block) until after its
+                // last consumer — see `plan_lifetimes_are_disjoint`.
+                ins[k] = match inp {
+                    Input::Graph => IView {
+                        shape: &p.input_shape,
+                        data: unsafe {
+                            std::slice::from_raw_parts(base.ptr().add(p.input_offset), in_len)
+                        },
+                        enc: self.input_enc,
+                    },
+                    Input::Node(j) => IView {
+                        shape: &p.shapes[*j],
+                        data: unsafe {
+                            std::slice::from_raw_parts(
+                                base.ptr().add(p.offsets[*j]),
+                                p.node_len(*j),
+                            )
+                        },
+                        enc: self.out_encs[*j],
+                    },
+                };
+            }
+            let out_len = p.node_len(idx);
+            // SAFETY: output blocks are disjoint from all live inputs.
+            let out = unsafe {
+                std::slice::from_raw_parts_mut(base.ptr().add(p.offsets[idx]), out_len)
+            };
+            run_node(
+                node,
+                &ins[..node.inputs.len()],
+                out,
+                self.out_encs[idx],
+                KernelPath::Packed,
+            );
+        }
+        let off = p.offsets[self.output];
+        let len = p.node_len(self.output);
+        IView {
+            shape: &p.shapes[self.output],
+            data: &arena[off..off + len],
+            enc: self.out_encs[self.output],
+        }
+    }
+
+    /// Integer forward pass into an owned tensor (convenience: builds a
+    /// throwaway [`Scratch`]; hot paths should hold one and call
+    /// [`QuantizedModel::forward_with`]).
     pub fn forward_int(&self, x: &Tensor) -> ITensor {
+        let mut s = Scratch::new();
+        self.forward_with(x, &mut s).to_owned_tensor()
+    }
+
+    /// The retained pre-refactor i32 data path: per-node heap buffers,
+    /// materialized integer im2col, the 4-row-blocked i32 GEMM. Bit-exact
+    /// against the packed path (`tests/engine_integration.rs` checks the
+    /// whole zoo) — kept as the oracle, not for serving.
+    pub fn forward_int_ref(&self, x: &Tensor) -> ITensor {
+        let shapes = plan::infer_shapes(self, x.shape());
         let xi = ITensor::quantize(x, &self.input_enc);
         let mut acts: Vec<ITensor> = Vec::with_capacity(self.nodes.len());
         for (idx, node) in self.nodes.iter().enumerate() {
-            let ins: Vec<&ITensor> = node
+            let ins: Vec<IView> = node
                 .inputs
                 .iter()
                 .map(|i| match i {
-                    Input::Graph => &xi,
-                    Input::Node(j) => &acts[*j],
+                    Input::Graph => xi.view(),
+                    Input::Node(j) => acts[*j].view(),
                 })
                 .collect();
-            let y = exec_node(node, &ins, self.out_encs[idx]);
-            acts.push(y);
+            let mut out = vec![0i8; shapes[idx].iter().product()];
+            run_node(node, &ins, &mut out, self.out_encs[idx], KernelPath::Reference);
+            acts.push(ITensor::new(shapes[idx].clone(), out, self.out_encs[idx]));
         }
-        acts.remove(self.output)
+        acts.swap_remove(self.output)
     }
 
     /// f32 logits: [`QuantizedModel::forward_int`] + one output dequantize.
     pub fn forward(&self, x: &Tensor) -> Tensor {
-        self.forward_int(x).dequantize()
+        let mut s = Scratch::new();
+        self.forward_with(x, &mut s).dequantize()
     }
 
-    /// The model input's integer encoding.
+    /// The static arena layout for one input shape (liveness-shared buffer
+    /// offsets + peak bytes). [`Scratch`] builds and caches these lazily;
+    /// this entry point exists for reports and tests.
+    pub fn memory_plan(&self, input_shape: &[usize]) -> MemoryPlan {
+        plan::plan(self, input_shape)
+    }
+
+    /// The model input's integer encoding (packed to the i8 window).
     pub fn input_encoding(&self) -> &Encoding {
         &self.input_enc
     }
@@ -594,6 +833,18 @@ impl QuantizedModel {
         self.nodes
             .iter()
             .all(|n| !matches!(n.op, QOp::LstmF32 { .. }))
+    }
+
+    /// True when every weighted layer's ints also exist in the packed i8
+    /// K-panel form (false only for one-tailed unsigned weight rows, which
+    /// fall back to the widening kernels).
+    pub fn is_fully_packed(&self) -> bool {
+        self.nodes.iter().all(|n| match &n.op {
+            QOp::Conv { qw, .. } | QOp::Depthwise { qw, .. } | QOp::Linear { qw, .. } => {
+                qw.is_packed()
+            }
+            _ => true,
+        })
     }
 
     /// Number of activations fused into their producer's requantization.
@@ -623,24 +874,32 @@ impl QuantizedModel {
     }
 }
 
-/// Execute one lowered node.
-fn exec_node(node: &QNode, ins: &[&ITensor], oenc: Encoding) -> ITensor {
-    let x = ins[0];
+/// Execute one lowered node into its pre-planned output slice.
+fn run_node(node: &QNode, ins: &[IView], out: &mut [i8], oenc: Encoding, path: KernelPath) {
+    let x = &ins[0];
     match &node.op {
-        QOp::Conv { qw, kh, kw, spec, rq } => conv_int(x, qw, *kh, *kw, *spec, rq, oenc),
-        QOp::Depthwise { qw, kh, kw, spec, rq } => {
-            depthwise_int(x, qw, *kh, *kw, *spec, rq, oenc)
+        QOp::Conv { qw, kh, kw, spec, rq } => match path {
+            KernelPath::Packed => conv_tiled(x, qw, *kh, *kw, *spec, rq, out),
+            KernelPath::Reference => conv_ref(x, qw, *kh, *kw, *spec, rq, out),
+        },
+        QOp::Depthwise { qw, kh, kw, spec, rq } => depthwise_int(x, qw, *kh, *kw, *spec, rq, out),
+        QOp::Linear { qw, rq } => match path {
+            KernelPath::Packed => {
+                let f = *x.shape().last().expect("linear input rank ≥ 1");
+                assert_eq!(f, qw.cols(), "linear feature mismatch");
+                qw.matmul_xt_requant_i8(x.data(), x.len() / f, &x.enc, rq, out);
+            }
+            KernelPath::Reference => linear_ref(x, qw, rq, out),
+        },
+        // Arena execution aliases Identity to its producer and never calls
+        // here; the reference path materializes the copy.
+        QOp::Identity => out.copy_from_slice(x.data()),
+        QOp::FusedAway => {}
+        QOp::Requantize(r) => {
+            for (d, &q) in out.iter_mut().zip(x.data()) {
+                *d = r.map(q as i32) as i8;
+            }
         }
-        QOp::Linear { qw, rq } => linear_int(x, qw, rq, oenc),
-        QOp::Identity => x.clone(),
-        // Never read (consumers rewired to the producer); keep the slot
-        // shape-aligned with an empty placeholder.
-        QOp::FusedAway => ITensor::new(vec![0], Vec::new(), oenc),
-        QOp::Requantize(r) => ITensor::new(
-            x.shape.clone(),
-            x.data.iter().map(|&q| r.map(q)).collect(),
-            oenc,
-        ),
         QOp::ChannelAffine {
             mult,
             bias,
@@ -650,125 +909,113 @@ fn exec_node(node: &QNode, ins: &[&ITensor], oenc: Encoding) -> ITensor {
             hi,
         } => {
             let (n, c) = (x.dim(0), x.dim(1));
-            let inner: usize = x.shape[2..].iter().product();
-            let mut out = vec![0i32; x.len()];
+            let inner: usize = x.shape()[2..].iter().product();
             for ni in 0..n {
                 for ci in 0..c {
                     let base = (ni * c + ci) * inner;
                     let (m, b) = (mult[ci], bias[ci]);
-                    for (d, &q) in out[base..base + inner].iter_mut().zip(&x.data[base..]) {
-                        *d = requantize_value(m * (q - z_in) as f32 + b, *z_out, *lo, *hi);
+                    for (d, &q) in out[base..base + inner].iter_mut().zip(&x.data()[base..]) {
+                        *d = requantize_value(m * (q as i32 - z_in) as f32 + b, *z_out, *lo, *hi)
+                            as i8;
                     }
                 }
             }
-            ITensor::new(x.shape.clone(), out, oenc)
         }
         QOp::MaxPool2(r) => {
             let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
             let (oh, ow) = (h / 2, w / 2);
-            let mut out = vec![0i32; n * c * oh * ow];
+            let xd = x.data();
             for pc in 0..n * c {
                 let ib = pc * h * w;
                 let ob = pc * oh * ow;
                 for oy in 0..oh {
                     for ox in 0..ow {
                         let i00 = ib + (2 * oy) * w + 2 * ox;
-                        let m = x.data[i00]
-                            .max(x.data[i00 + 1])
-                            .max(x.data[i00 + w])
-                            .max(x.data[i00 + w + 1]);
-                        out[ob + oy * ow + ox] = r.map(m);
+                        let m = xd[i00].max(xd[i00 + 1]).max(xd[i00 + w]).max(xd[i00 + w + 1]);
+                        out[ob + oy * ow + ox] = r.map(m as i32) as i8;
                     }
                 }
             }
-            ITensor::new(vec![n, c, oh, ow], out, oenc)
         }
         QOp::AvgPool2(r) => {
             let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
             let (oh, ow) = (h / 2, w / 2);
-            let mut out = vec![0i32; n * c * oh * ow];
+            let xd = x.data();
             for pc in 0..n * c {
                 let ib = pc * h * w;
                 let ob = pc * oh * ow;
                 for oy in 0..oh {
                     for ox in 0..ow {
                         let i00 = ib + (2 * oy) * w + 2 * ox;
-                        let sum =
-                            x.data[i00] + x.data[i00 + 1] + x.data[i00 + w] + x.data[i00 + w + 1];
+                        let sum = xd[i00] as i32
+                            + xd[i00 + 1] as i32
+                            + xd[i00 + w] as i32
+                            + xd[i00 + w + 1] as i32;
                         // r.mult already carries the /4; centered sum.
-                        out[ob + oy * ow + ox] = r.apply((sum - 4 * r.z_in) as f32);
+                        out[ob + oy * ow + ox] = r.apply((sum - 4 * r.z_in) as f32) as i8;
                     }
                 }
             }
-            ITensor::new(vec![n, c, oh, ow], out, oenc)
         }
         QOp::GlobalAvgPool(r) => {
             let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
             let hw = (h * w) as i64;
-            let mut out = vec![0i32; n * c];
-            for (pc, o) in out.iter_mut().enumerate() {
+            let xd = x.data();
+            for (pc, o) in out.iter_mut().enumerate().take(n * c) {
                 let base = pc * (h * w);
-                let sum: i64 = x.data[base..base + h * w].iter().map(|&q| q as i64).sum();
-                *o = r.apply((sum - hw * r.z_in as i64) as f32 / hw as f32);
+                let sum: i64 = xd[base..base + h * w].iter().map(|&q| q as i64).sum();
+                *o = r.apply((sum - hw * r.z_in as i64) as f32 / hw as f32) as i8;
             }
-            ITensor::new(vec![n, c], out, oenc)
         }
         QOp::Upsample2(r) => {
             let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
             let (oh, ow) = (h * 2, w * 2);
-            let mut out = vec![0i32; n * c * oh * ow];
+            let xd = x.data();
             for pc in 0..n * c {
                 let ib = pc * h * w;
                 let ob = pc * oh * ow;
                 for oy in 0..oh {
                     for ox in 0..ow {
-                        out[ob + oy * ow + ox] = r.map(x.data[ib + (oy / 2) * w + ox / 2]);
+                        out[ob + oy * ow + ox] = r.map(xd[ib + (oy / 2) * w + ox / 2] as i32) as i8;
                     }
                 }
             }
-            ITensor::new(vec![n, c, oh, ow], out, oenc)
         }
         QOp::Flatten(r) => {
-            let n = x.dim(0);
-            ITensor::new(
-                vec![n, x.len() / n],
-                x.data.iter().map(|&q| r.map(q)).collect(),
-                oenc,
-            )
+            for (d, &q) in out.iter_mut().zip(x.data()) {
+                *d = r.map(q as i32) as i8;
+            }
         }
         QOp::Add { terms, z_out, lo, hi } => {
             for other in &ins[1..] {
-                assert_eq!(other.shape, x.shape, "Add input shapes");
+                assert_eq!(other.shape(), x.shape(), "Add input shapes");
             }
-            let mut out = vec![0i32; x.len()];
             for (e, d) in out.iter_mut().enumerate() {
                 let mut v = 0.0f32;
                 for (k, &(m, z)) in terms.iter().enumerate() {
-                    v += m * (ins[k].data[e] - z) as f32;
+                    v += m * (ins[k].data()[e] as i32 - z) as f32;
                 }
-                *d = requantize_value(v, *z_out, *lo, *hi);
+                *d = requantize_value(v, *z_out, *lo, *hi) as i8;
             }
-            ITensor::new(x.shape.clone(), out, oenc)
         }
         QOp::Concat { axis, parts } => {
-            let rank = x.shape.len();
+            let rank = x.shape().len();
             for p in ins {
-                assert_eq!(p.shape.len(), rank, "concat rank");
+                assert_eq!(p.shape().len(), rank, "concat rank");
             }
-            let outer: usize = x.shape[..*axis].iter().product();
-            let inner: usize = x.shape[*axis + 1..].iter().product();
-            let total_axis: usize = ins.iter().map(|p| p.dim(*axis)).sum();
-            let mut shape = x.shape.clone();
-            shape[*axis] = total_axis;
-            let mut data = Vec::with_capacity(outer * total_axis * inner);
+            let outer: usize = x.shape()[..*axis].iter().product();
+            let inner: usize = x.shape()[*axis + 1..].iter().product();
+            let mut dst = 0usize;
             for o in 0..outer {
                 for (p, r) in ins.iter().zip(parts) {
                     let a = p.dim(*axis);
                     let base = o * a * inner;
-                    data.extend(p.data[base..base + a * inner].iter().map(|&q| r.map(q)));
+                    for &q in &p.data()[base..base + a * inner] {
+                        out[dst] = r.map(q as i32) as i8;
+                        dst += 1;
+                    }
                 }
             }
-            ITensor::new(shape, data, oenc)
         }
         QOp::LstmF32 {
             w_ih,
@@ -779,23 +1026,164 @@ fn exec_node(node: &QNode, ins: &[&ITensor], oenc: Encoding) -> ITensor {
         } => {
             let xf = x.dequantize();
             let y = lstm_forward(&xf, w_ih, w_hh, bias, *hidden, *reverse);
-            ITensor::quantize(&y, &oenc)
+            quantize_i8_into(y.data(), &oenc, out);
         }
     }
 }
 
-/// Integer im2col: unfold NCHW ints into a [C·kh·kw, N·OH·OW] patch
-/// matrix. Out-of-image taps are filled with the *zero-point* — real 0 on
-/// the activation grid — so zero padding stays exact (eq 2.9's correction
-/// term then accounts for padding like any other input).
-fn im2col_i32(x: &ITensor, kh: usize, kw: usize, spec: Conv2dSpec) -> Vec<i32> {
+/// Column-tile width of the im2col-free conv kernel: the patch panel is
+/// `[K, CONV_NR]` i8 (K = C·kh·kw), sized so panel + accumulator tile stay
+/// cache-resident while the packed weight stripes stream through.
+const CONV_NR: usize = 64;
+
+/// Dense conv, im2col-free: for each (sample, column-tile) work unit a
+/// pool lane gathers the zero-point-padded patch columns into its
+/// [`with_worker_scratch`] panel, runs every 4-row packed weight block
+/// against it, and requantizes straight into the NCHW output slice. No
+/// full `[K, N·OH·OW]` matrix ever exists; steady state allocates nothing.
+fn conv_tiled(
+    x: &IView,
+    qw: &QTensor,
+    kh: usize,
+    kw: usize,
+    spec: Conv2dSpec,
+    rq: &Requant,
+    out: &mut [i8],
+) {
+    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let m = qw.rows();
+    let k_total = qw.cols();
+    assert_eq!(k_total, c * kh * kw, "conv weight K");
+    let (oh, ow) = spec.out_hw(h, w, kh, kw);
+    let inner = oh * ow;
+    assert_eq!(out.len(), n * m * inner);
+    let zx = x.enc.offset;
+    let zq = zx as i8; // packed grid: the zero-point fits i8
+    let zx64 = zx as i64;
+    let tiles_per = inner.div_ceil(CONV_NR).max(1);
+    let blocks = m.div_ceil(GEMM_MR);
+    let xd = x.data();
+    let base = SyncSlice::new(out.as_mut_ptr());
+    parallel_chunks(n * tiles_per, 1, |u0, u1| {
+        with_worker_scratch(|ws| {
+            let (panel, acc) = ws.i8_i32(k_total * CONV_NR, GEMM_MR * CONV_NR);
+            for u in u0..u1 {
+                let ni = u / tiles_per;
+                let p0 = (u % tiles_per) * CONV_NR;
+                let nrt = (inner - p0).min(CONV_NR);
+                let panel = &mut panel[..k_total * nrt];
+                gather_panel(xd, c, h, w, ni, p0, nrt, kh, kw, spec, zq, ow, panel);
+                for blk in 0..blocks {
+                    let acc = &mut acc[..GEMM_MR * nrt];
+                    qw.acc_tile(blk, panel, nrt, acc);
+                    let i0 = blk * GEMM_MR;
+                    let rb = (m - i0).min(GEMM_MR);
+                    for r in 0..rb {
+                        let mi = i0 + r;
+                        let corr = zx64 * qw.row_sum(mi);
+                        let mult = rq.mult[mi];
+                        let bq = rq.bias[mi];
+                        let arow = &acc[r * nrt..(r + 1) * nrt];
+                        // SAFETY: (sample, row, tile) destinations are
+                        // disjoint across work units and rows.
+                        let dst = unsafe {
+                            std::slice::from_raw_parts_mut(
+                                base.ptr().add((ni * m + mi) * inner + p0),
+                                nrt,
+                            )
+                        };
+                        for (d, &a) in dst.iter_mut().zip(arow) {
+                            *d = rq.requant(mult * (a as i64 - corr) as f32 + bq) as i8;
+                        }
+                    }
+                }
+            }
+        });
+    });
+}
+
+/// Gather the `[K, nrt]` patch panel for output positions `p0..p0+nrt` of
+/// sample `ni`: row `r = ci·kh·kw + ky·kw + kx` holds that tap's input
+/// value per output position, with out-of-image taps filled with the
+/// *zero-point* (real 0 on the packed activation grid), so zero padding
+/// stays exact under eq 2.9. Stride-1 rows use span copies.
+#[allow(clippy::too_many_arguments)]
+fn gather_panel(
+    xd: &[i8],
+    c: usize,
+    h: usize,
+    w: usize,
+    ni: usize,
+    p0: usize,
+    nrt: usize,
+    kh: usize,
+    kw: usize,
+    spec: Conv2dSpec,
+    zq: i8,
+    ow: usize,
+    panel: &mut [i8],
+) {
+    let khw = kh * kw;
+    for r in 0..c * khw {
+        let ci = r / khw;
+        let ky = (r % khw) / kw;
+        let kx = r % kw;
+        let row = &mut panel[r * nrt..(r + 1) * nrt];
+        let plane = (ni * c + ci) * (h * w);
+        let mut j = 0usize;
+        let mut oy = p0 / ow;
+        let mut ox = p0 % ow;
+        while j < nrt {
+            let span = (ow - ox).min(nrt - j);
+            let seg = &mut row[j..j + span];
+            let iy = (oy * spec.stride_h + ky) as isize - spec.pad_h as isize;
+            if iy < 0 || iy >= h as isize {
+                seg.fill(zq);
+            } else {
+                let src_row = plane + iy as usize * w;
+                if spec.stride_w == 1 {
+                    // ix = ox + t + kx − pad_w: one contiguous valid range.
+                    let ix0 = ox as isize + kx as isize - spec.pad_w as isize;
+                    let t_lo = (-ix0).clamp(0, span as isize) as usize;
+                    let t_hi = (w as isize - ix0).clamp(t_lo as isize, span as isize) as usize;
+                    seg[..t_lo].fill(zq);
+                    if t_hi > t_lo {
+                        // Sum in isize: src_row + ix0 alone can be negative
+                        // (left padding); only the full sum is a valid index.
+                        let s0 = (src_row as isize + ix0 + t_lo as isize) as usize;
+                        seg[t_lo..t_hi].copy_from_slice(&xd[s0..s0 + (t_hi - t_lo)]);
+                    }
+                    seg[t_hi..].fill(zq);
+                } else {
+                    for (t, d) in seg.iter_mut().enumerate() {
+                        let ix = ((ox + t) * spec.stride_w + kx) as isize - spec.pad_w as isize;
+                        *d = if ix < 0 || ix >= w as isize {
+                            zq
+                        } else {
+                            xd[src_row + ix as usize]
+                        };
+                    }
+                }
+            }
+            j += span;
+            ox = 0;
+            oy += 1;
+        }
+    }
+}
+
+/// Reference integer im2col: unfold packed NCHW ints into a widened
+/// `[C·kh·kw, N·OH·OW]` i32 patch matrix (the pre-refactor materializing
+/// path, retained as the conv oracle). Out-of-image taps are filled with
+/// the zero-point.
+fn im2col_i32(x: &IView, kh: usize, kw: usize, spec: Conv2dSpec) -> Vec<i32> {
     let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
     let (oh, ow) = spec.out_hw(h, w, kh, kw);
     let l = n * oh * ow;
     let rows = c * kh * kw;
     let zx = x.enc.offset;
     let mut out = vec![0i32; rows * l];
-    let xd = &x.data;
+    let xd = x.data();
     let base = SyncSlice::new(out.as_mut_ptr());
     parallel_chunks(rows, 4, |r0, r1| {
         for r in r0..r1 {
@@ -820,7 +1208,7 @@ fn im2col_i32(x: &ITensor, kh: usize, kw: usize, spec: Conv2dSpec) -> Vec<i32> {
                         row[j] = if ix < 0 || ix >= w as isize {
                             zx
                         } else {
-                            xd[row_base + ix as usize]
+                            xd[row_base + ix as usize] as i32
                         };
                         j += 1;
                     }
@@ -831,51 +1219,70 @@ fn im2col_i32(x: &ITensor, kh: usize, kw: usize, spec: Conv2dSpec) -> Vec<i32> {
     out
 }
 
-/// Dense conv: integer im2col + the blocked requantizing GEMM, scattering
-/// NCHW directly (same layout trick as the f32 path).
-fn conv_int(
-    x: &ITensor,
+/// Reference dense conv: materialized i32 im2col + the blocked i32
+/// requantizing GEMM, narrowed into the packed output (the requant clamps
+/// guarantee the values fit).
+fn conv_ref(
+    x: &IView,
     qw: &QTensor,
     kh: usize,
     kw: usize,
     spec: Conv2dSpec,
     rq: &Requant,
-    oenc: Encoding,
-) -> ITensor {
+    out: &mut [i8],
+) {
     let (n, h, w) = (x.dim(0), x.dim(2), x.dim(3));
     let o = qw.rows();
     let (oh, ow) = spec.out_hw(h, w, kh, kw);
     let cols = im2col_i32(x, kh, kw, spec);
     let inner = oh * ow;
     let l = n * inner;
-    let mut out = vec![0i32; n * o * inner];
-    qw.gemm_requant(&cols, l, &x.enc, rq, n, inner, &mut out);
-    ITensor::new(vec![n, o, oh, ow], out, oenc)
+    let mut out32 = vec![0i32; n * o * inner];
+    qw.gemm_requant(&cols, l, &x.enc, rq, n, inner, &mut out32);
+    for (d, &v) in out.iter_mut().zip(&out32) {
+        *d = v as i8;
+    }
 }
 
-/// Depthwise conv: direct per-channel integer kernel (im2col is wasteful
-/// for single-input-channel filters), pool-parallel over (n, c) planes.
+/// Reference linear: widened i32 input through the i32 kernel, narrowed.
+fn linear_ref(x: &IView, qw: &QTensor, rq: &Requant, out: &mut [i8]) {
+    let f = *x.shape().last().expect("linear input rank ≥ 1");
+    assert_eq!(f, qw.cols(), "linear feature mismatch");
+    let lead = x.len() / f;
+    let x32: Vec<i32> = x.data().iter().map(|&v| v as i32).collect();
+    let mut out32 = vec![0i32; lead * qw.rows()];
+    qw.matmul_xt_requant(&x32, lead, &x.enc, rq, &mut out32);
+    for (d, &v) in out.iter_mut().zip(&out32) {
+        *d = v as i8;
+    }
+}
+
+/// Depthwise conv: direct per-channel integer kernel (patch panels are
+/// wasteful for single-input-channel filters), pool-parallel over (n, c)
+/// planes, i8 in/out. Weight rows are read through the i32 form — a
+/// kh·kw-sized filter stays register-resident either way.
 fn depthwise_int(
-    x: &ITensor,
+    x: &IView,
     qw: &QTensor,
     kh: usize,
     kw: usize,
     spec: Conv2dSpec,
     rq: &Requant,
-    oenc: Encoding,
-) -> ITensor {
+    out: &mut [i8],
+) {
     let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
     assert_eq!(qw.rows(), c, "depthwise channel count");
     let (oh, ow) = spec.out_hw(h, w, kh, kw);
-    let zx = x.enc.offset as i64;
-    let mut out = vec![0i32; n * c * oh * ow];
-    let xd = &x.data;
+    assert_eq!(out.len(), n * c * oh * ow);
+    let zx = x.enc.offset;
+    let zx64 = zx as i64;
+    let xd = x.data();
     let base = SyncSlice::new(out.as_mut_ptr());
     parallel_chunks(n * c, 1, |p0, p1| {
         for pc in p0..p1 {
             let ci = pc % c;
             let wrow = qw.row_ints(ci);
-            let corr = zx * qw.row_sum(ci);
+            let corr = zx64 * qw.row_sum(ci);
             let mult = rq.mult[ci];
             let bq = rq.bias[ci];
             let in_base = pc * h * w;
@@ -890,7 +1297,7 @@ fn depthwise_int(
                         if iy < 0 || iy >= h as isize {
                             // Padding holds the zero-point.
                             for kx in 0..kw {
-                                acc += wrow[ky * kw + kx] * x.enc.offset;
+                                acc += wrow[ky * kw + kx] * zx;
                             }
                             continue;
                         }
@@ -898,34 +1305,19 @@ fn depthwise_int(
                         for kx in 0..kw {
                             let ix = (ox * spec.stride_w + kx) as isize - spec.pad_w as isize;
                             let q = if ix < 0 || ix >= w as isize {
-                                x.enc.offset
+                                zx
                             } else {
-                                xd[row_base + ix as usize]
+                                xd[row_base + ix as usize] as i32
                             };
                             acc += wrow[ky * kw + kx] * q;
                         }
                     }
                     let corrected = (acc as i64 - corr) as f32;
-                    plane[oy * ow + ox] = rq.requant(mult * corrected + bq);
+                    plane[oy * ow + ox] = rq.requant(mult * corrected + bq) as i8;
                 }
             }
         }
     });
-    ITensor::new(vec![n, c, oh, ow], out, oenc)
-}
-
-/// Linear over [..., F]: leading dims flatten to a batch; transpose-free
-/// integer kernel.
-fn linear_int(x: &ITensor, qw: &QTensor, rq: &Requant, oenc: Encoding) -> ITensor {
-    let f = *x.shape.last().expect("linear input rank ≥ 1");
-    assert_eq!(f, qw.cols(), "linear feature mismatch");
-    let lead = x.len() / f;
-    let o = qw.rows();
-    let mut out = vec![0i32; lead * o];
-    qw.matmul_xt_requant(&x.data, lead, &x.enc, rq, &mut out);
-    let mut shape = x.shape[..x.shape.len() - 1].to_vec();
-    shape.push(o);
-    ITensor::new(shape, out, oenc)
 }
 
 #[cfg(test)]
@@ -966,12 +1358,43 @@ mod tests {
         let oe = qm.output_encoding();
         let mut worst = 0i32;
         for (&q, &v) in yi.data().iter().zip(ys.data()) {
-            worst = worst.max((q - oe.quantize(v)).abs());
+            worst = worst.max((q as i32 - oe.quantize(v)).abs());
         }
         assert!(worst <= 1, "max int-step deviation {worst}");
         // And the f32 view dequantizes onto the same grid.
         let yf = qm.forward(&x);
         assert!(yf.max_abs_diff(&ys) <= 1.5 * oe.scale);
+    }
+
+    #[test]
+    fn packed_forward_is_bit_identical_to_reference_path() {
+        // The tentpole's oracle at module scope: tiled conv + packed
+        // linear vs materialized-im2col i32 engine, same ints out.
+        for seed in [311u64, 313] {
+            let (_, qm) = lowered("mobimini", seed);
+            let (x, _) = SynthImageNet::new(seed + 5).batch(1, 3);
+            let fast = qm.forward_int(&x);
+            let slow = qm.forward_int_ref(&x);
+            assert_eq!(fast.shape(), slow.shape());
+            assert_eq!(fast.data(), slow.data(), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn forward_with_reuses_scratch_and_matches_forward_int() {
+        let (_, qm) = lowered("mobimini", 317);
+        let mut s = Scratch::new();
+        let (xa, _) = SynthImageNet::new(318).batch(0, 2);
+        let (xb, _) = SynthImageNet::new(318).batch(7, 2);
+        let a1 = qm.forward_with(&xa, &mut s).to_owned_tensor();
+        let b1 = qm.forward_with(&xb, &mut s).to_owned_tensor();
+        // Second pass over the same (now warm) scratch: identical results
+        // even though the arena bytes were overwritten in between.
+        let a2 = qm.forward_with(&xa, &mut s).to_owned_tensor();
+        assert_eq!(a1.data(), a2.data());
+        assert_eq!(a1.data(), qm.forward_int(&xa).data());
+        assert_eq!(b1.data(), qm.forward_int(&xb).data());
+        assert_eq!(s.cached_plans(), 1, "same shape = one cached plan");
     }
 
     #[test]
@@ -991,6 +1414,21 @@ mod tests {
         sim.compute_encodings(&calib(312, 2));
         let err = lower(&sim).unwrap_err();
         assert!(err.contains("fold batch norms"), "{err}");
+    }
+
+    #[test]
+    fn wide_activation_bitwidths_fail_to_lower() {
+        let g = zoo::build("mobimini", 314).unwrap();
+        let opts = PtqOptions {
+            qp: crate::quantsim::QuantParams {
+                act_bw: 16,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let out = standard_ptq_pipeline(&g, &calib(315, 2), &opts);
+        let err = lower(&out.sim).unwrap_err();
+        assert!(err.contains("exceeds 8"), "{err}");
     }
 
     #[test]
@@ -1028,15 +1466,36 @@ mod tests {
             .data()
             .iter()
             .zip(ys.data())
-            .map(|(&q, &v)| (q - oe.quantize(v)).abs())
+            .map(|(&q, &v)| (q as i32 - oe.quantize(v)).abs())
             .max()
             .unwrap();
         assert!(worst <= 1, "bn+add deviation {worst}");
     }
 
     #[test]
+    fn packed_encoding_preserves_real_values() {
+        // Unsigned 8-bit grids re-centre; every real quantity is invariant.
+        for (lo, hi, sym) in [(-1.0f32, 3.0f32, false), (0.0, 6.0, true), (-2.0, 2.0, true)] {
+            let e = Encoding::from_min_max(lo, hi, 8, sym);
+            let p = packed_encoding(&e, "t").unwrap();
+            assert!(p.int_min >= -128 && p.int_max <= 127, "{p:?}");
+            assert_eq!(p.scale, e.scale);
+            assert_eq!(p.grid_min(), e.grid_min());
+            assert_eq!(p.grid_max(), e.grid_max());
+            for x in [-1.5f32, -0.3, 0.0, 0.7, 2.9, 5.5] {
+                assert_eq!(p.dequantize(p.quantize(x)), e.dequantize(e.quantize(x)), "{x}");
+                assert_eq!(p.quantize(x), e.quantize(x) - (e.offset - p.offset), "{x}");
+            }
+        }
+        // 16-bit activations are out of the packed contract.
+        let wide = Encoding::from_min_max(-1.0, 1.0, 16, false);
+        assert!(packed_encoding(&wide, "t").is_err());
+    }
+
+    #[test]
     fn itensor_quantize_dequantize_roundtrip() {
-        let enc = Encoding::from_min_max(-1.0, 3.0, 8, false);
+        let enc = packed_encoding(&Encoding::from_min_max(-1.0, 3.0, 8, false), "t").unwrap();
+        assert_ne!(enc.offset, 0);
         let x = Tensor::new(&[4], vec![-0.7, 0.0, 1.5, 2.9]);
         let xi = ITensor::quantize(&x, &enc);
         let back = xi.dequantize();
@@ -1048,28 +1507,104 @@ mod tests {
 
     #[test]
     fn relu6_clamp_maps_real_six() {
-        let e = Encoding::from_min_max(0.0, 8.0, 8, false);
+        let e = packed_encoding(&Encoding::from_min_max(0.0, 8.0, 8, false), "t").unwrap();
         let (lo, hi) = act_clamp(&e, Some(FusedAct::Relu6));
         assert_eq!(lo, e.offset);
         let top = e.scale * (hi - e.offset) as f32;
         assert!((top - 6.0).abs() <= 0.5 * e.scale, "{top}");
         // Narrow encodings cap at the grid maximum.
-        let narrow = Encoding::from_min_max(0.0, 4.0, 8, false);
+        let narrow = packed_encoding(&Encoding::from_min_max(0.0, 4.0, 8, false), "t").unwrap();
         let (_, hi2) = act_clamp(&narrow, Some(FusedAct::Relu6));
         assert_eq!(hi2, narrow.int_max);
     }
 
     #[test]
-    fn im2col_i32_pads_with_zero_point() {
-        let enc = Encoding::from_min_max(-1.0, 1.0, 8, false);
+    fn im2col_ref_pads_with_zero_point() {
+        let enc = packed_encoding(&Encoding::from_min_max(-1.0, 3.0, 8, false), "t").unwrap();
         assert_ne!(enc.offset, 0);
         let x = ITensor::new(vec![1, 1, 2, 2], vec![10, 20, 30, 40], enc);
-        let cols = im2col_i32(&x, 3, 3, Conv2dSpec::same(3));
+        let cols = im2col_i32(&x.view(), 3, 3, Conv2dSpec::same(3));
         // Row 0 = tap (ky=0,kx=0): every output position reads up-left —
         // position (0,0) is fully padded.
         assert_eq!(cols[0], enc.offset);
         // Centre tap (ky=1,kx=1) reads the pixel itself.
         let centre = 4 * 4; // row (ci=0, ky=1, kx=1), l = 4
         assert_eq!(&cols[centre..centre + 4], &[10, 20, 30, 40]);
+    }
+
+    #[test]
+    fn tiled_conv_is_bit_exact_against_reference_kernel() {
+        // Direct kernel-level oracle: strides, asymmetric pads, per-channel
+        // scales, fused-ReLU clamps, batches, tiles smaller and larger
+        // than CONV_NR, and a nonzero (packed) zero-point.
+        use crate::quant::Quantizer;
+        use crate::rng::Rng;
+        let mut rng = Rng::new(41);
+        let cases = [
+            (1usize, 3usize, 8usize, 8usize, 3usize, 3usize, 1usize, 1usize, 4usize),
+            (2, 4, 9, 7, 3, 3, 2, 1, 5),
+            (3, 2, 12, 12, 5, 5, 1, 2, 3),
+            (1, 1, 20, 20, 1, 1, 1, 0, 7),
+        ];
+        for &(n, c, h, w, kh, kw, stride, pad, o) in &cases {
+            let spec = Conv2dSpec::uniform(stride, pad);
+            let x = Tensor::rand_uniform(&mut rng, &[n, c, h, w], -1.0, 3.0);
+            let wt = Tensor::randn(&mut rng, &[o, c * kh * kw], 0.5);
+            let x_enc =
+                packed_encoding(&Encoding::from_min_max(-1.0, 3.0, 8, false), "t").unwrap();
+            assert_ne!(x_enc.offset, 0);
+            let out_enc =
+                packed_encoding(&Encoding::from_min_max(-4.0, 4.0, 8, false), "t").unwrap();
+            let encs: Vec<Encoding> = (0..o)
+                .map(|r| {
+                    let row = &wt.data()[r * c * kh * kw..(r + 1) * c * kh * kw];
+                    let m = row.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+                    Encoding::from_min_max(-m, m, 8, true)
+                })
+                .collect();
+            let qw = QTensor::from_quantizer(&wt, &Quantizer::per_channel(encs, 0));
+            assert!(qw.is_packed());
+            let bias = vec![0.1f32; o];
+            let rq = fold_requant(&qw, &bias, &x_enc, &out_enc, Some(FusedAct::Relu));
+            let xi = ITensor::quantize(&x, &x_enc);
+            let (oh, ow) = spec.out_hw(h, w, kh, kw);
+            let mut fast = vec![0i8; n * o * oh * ow];
+            let mut slow = vec![0i8; n * o * oh * ow];
+            conv_tiled(&xi.view(), &qw, kh, kw, spec, &rq, &mut fast);
+            conv_ref(&xi.view(), &qw, kh, kw, spec, &rq, &mut slow);
+            assert_eq!(fast, slow, "case n{n} c{c} {h}x{w} k{kh}x{kw} s{stride} p{pad}");
+        }
+    }
+
+    #[test]
+    fn identity_output_aliases_producer_buffer() {
+        // A fused activation in model-output position aliases; the arena
+        // path must still return the right bytes.
+        use crate::graph::Graph;
+        let mut g = Graph::new();
+        let mut rng = crate::rng::Rng::new(55);
+        g.push(
+            "conv",
+            Op::Conv2d {
+                weight: Tensor::randn(&mut rng, &[2, 1, 3, 3], 0.4),
+                bias: vec![0.0, 0.1],
+                spec: Conv2dSpec::same(3),
+            },
+        );
+        g.push("relu", Op::Relu);
+        let mut sim = QuantizationSimModel::with_defaults(g, QuantParams::default());
+        let data: Vec<Tensor> = (0..2)
+            .map(|i| Tensor::rand_uniform(&mut crate::rng::Rng::new(56 + i), &[2, 1, 6, 6], -1.0, 1.0))
+            .collect();
+        sim.compute_encodings(&data);
+        let qm = lower(&sim).expect("lowering");
+        assert_eq!(qm.fused_activations(), 1);
+        let x = Tensor::rand_uniform(&mut rng, &[1, 1, 6, 6], -1.0, 1.0);
+        assert_eq!(qm.forward_int(&x).data(), qm.forward_int_ref(&x).data());
+        let ys = sim.forward(&x);
+        let oe = *qm.output_encoding();
+        for (&q, &v) in qm.forward_int(&x).data().iter().zip(ys.data()) {
+            assert!((q as i32 - oe.quantize(v)).abs() <= 1);
+        }
     }
 }

@@ -1,0 +1,480 @@
+//! Static memory planner for the integer engine — the "zero allocations
+//! per forward" half of the packed-int8 data path.
+//!
+//! [`plan`] runs shape inference and liveness analysis over a lowered
+//! [`QuantizedModel`] for one concrete input shape and emits a
+//! [`MemoryPlan`]: a byte offset per node output inside a single flat
+//! arena, with buffers whose lifetimes do not overlap sharing the same
+//! bytes (first-fit over a coalescing free list). Fused-away nodes get no
+//! buffer at all and pass-through `Identity` nodes *alias* their producer,
+//! so fusion stays free at run time.
+//!
+//! [`Scratch`] owns the arena plus a small plan cache keyed by input
+//! shape: the first forward at a given batch shape plans and grows the
+//! arena, every later forward at that shape reuses both — which is what
+//! makes steady-state serving allocation-free (`benches/engine.rs` counts
+//! allocations through a wrapping `GlobalAlloc` and gates on zero).
+//!
+//! Safety contract the executor relies on: a node's output block is
+//! allocated *before* any of its inputs' blocks are released (release
+//! happens after the last consumer is planned), so an executing node's
+//! output bytes are always disjoint from all of its live input bytes.
+//! `plan_lifetimes_are_disjoint` property-tests exactly this.
+
+use super::{QOp, QuantizedModel};
+use crate::graph::Input;
+
+/// Arena alignment: blocks start on cache-line boundaries so neighbouring
+/// buffers never false-share when kernels write them in parallel.
+const ALIGN: usize = 64;
+
+/// Sentinel offset for zero-sized buffers (fused-away nodes).
+pub(crate) const NO_BUFFER: usize = usize::MAX;
+
+/// One model × input-shape arena layout. Built by
+/// [`QuantizedModel::memory_plan`] (or lazily by [`Scratch`]).
+#[derive(Debug, Clone)]
+pub struct MemoryPlan {
+    /// The input shape this plan was built for.
+    pub(crate) input_shape: Vec<usize>,
+    /// Inferred output shape of every node.
+    pub(crate) shapes: Vec<Vec<usize>>,
+    /// Arena byte offset of every node's output (alias-resolved:
+    /// `Identity` nodes point at their producer's block; [`NO_BUFFER`]
+    /// for zero-sized slots).
+    pub(crate) offsets: Vec<usize>,
+    /// Arena byte offset of the quantized model input.
+    pub(crate) input_offset: usize,
+    /// Arena bytes required (high-water mark of the planned heap).
+    pub peak_bytes: usize,
+    /// Sum of all buffer sizes with no reuse — the baseline the plan's
+    /// lifetime-sharing is measured against.
+    pub total_bytes: usize,
+    /// Number of distinct (non-aliased, non-empty) buffers planned.
+    pub buffers: usize,
+    /// Identity stamp of the model this plan was built for — the
+    /// [`Scratch`] cache key, so a scratch reused across models re-plans
+    /// instead of executing against a stale layout.
+    pub(crate) model_id: u64,
+}
+
+impl MemoryPlan {
+    /// Bytes-without-reuse over bytes-with-reuse: how much the liveness
+    /// sharing saved.
+    pub fn reuse_factor(&self) -> f64 {
+        if self.peak_bytes == 0 {
+            1.0
+        } else {
+            self.total_bytes as f64 / self.peak_bytes as f64
+        }
+    }
+
+    /// One-line summary for CLI reports.
+    pub fn describe(&self) -> String {
+        format!(
+            "arena plan: peak {:.1} KiB across {} buffers ({:.1} KiB unshared, {:.2}x reuse)",
+            self.peak_bytes as f64 / 1024.0,
+            self.buffers,
+            self.total_bytes as f64 / 1024.0,
+            self.reuse_factor()
+        )
+    }
+
+    pub(crate) fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    pub(crate) fn node_len(&self, idx: usize) -> usize {
+        self.shapes[idx].iter().product()
+    }
+}
+
+/// Infer every node's output shape for `input_shape` (shapes are the byte
+/// sizes the planner allocates; the executor reads them back as tensor
+/// metadata, so views into the arena carry no per-call allocations).
+pub(crate) fn infer_shapes(model: &QuantizedModel, input_shape: &[usize]) -> Vec<Vec<usize>> {
+    let n = model.nodes.len();
+    let mut shapes: Vec<Vec<usize>> = Vec::with_capacity(n);
+    for node in &model.nodes {
+        let ins: Vec<&[usize]> = node
+            .inputs
+            .iter()
+            .map(|i| match i {
+                Input::Graph => input_shape,
+                Input::Node(j) => shapes[*j].as_slice(),
+            })
+            .collect();
+        let shape = match &node.op {
+            QOp::Conv { qw, kh, kw, spec, .. } => {
+                let x = ins[0];
+                let (oh, ow) = spec.out_hw(x[2], x[3], *kh, *kw);
+                vec![x[0], qw.rows(), oh, ow]
+            }
+            QOp::Depthwise { kh, kw, spec, .. } => {
+                let x = ins[0];
+                let (oh, ow) = spec.out_hw(x[2], x[3], *kh, *kw);
+                vec![x[0], x[1], oh, ow]
+            }
+            QOp::Linear { qw, .. } => {
+                let x = ins[0];
+                let mut s = x[..x.len() - 1].to_vec();
+                s.push(qw.rows());
+                s
+            }
+            QOp::Identity => ins[0].to_vec(),
+            // Zero elements: the slot exists only to keep indices aligned.
+            QOp::FusedAway => vec![0],
+            QOp::Requantize(_) | QOp::ChannelAffine { .. } => ins[0].to_vec(),
+            QOp::MaxPool2(_) | QOp::AvgPool2(_) => {
+                let x = ins[0];
+                vec![x[0], x[1], x[2] / 2, x[3] / 2]
+            }
+            QOp::GlobalAvgPool(_) => vec![ins[0][0], ins[0][1]],
+            QOp::Upsample2(_) => {
+                let x = ins[0];
+                vec![x[0], x[1], x[2] * 2, x[3] * 2]
+            }
+            QOp::Flatten(_) => {
+                let x = ins[0];
+                vec![x[0], x[1..].iter().product()]
+            }
+            QOp::Add { .. } => ins[0].to_vec(),
+            QOp::Concat { axis, .. } => {
+                let mut s = ins[0].to_vec();
+                s[*axis] = ins.iter().map(|p| p[*axis]).sum();
+                s
+            }
+            QOp::LstmF32 { hidden, .. } => vec![ins[0][0], ins[0][1], *hidden],
+        };
+        shapes.push(shape);
+    }
+    shapes
+}
+
+/// Buffer liveness over the lowered graph. Buffer ids are `0..n` for node
+/// outputs and `n` for the quantized-input slot. Returns
+/// `(alias_root, last_use)` where `alias_root[i]` resolves `Identity`
+/// chains to the buffer that actually holds the bytes, and `last_use[b]`
+/// is the index of the last node that reads buffer `b` (the model output
+/// and the pseudo-step `n` keep the output buffer alive to the end).
+pub(crate) fn liveness(model: &QuantizedModel) -> (Vec<usize>, Vec<usize>) {
+    let n = model.nodes.len();
+    let input_id = n;
+    // Alias resolution: Identity nodes share their producer's buffer.
+    let mut root = vec![0usize; n + 1];
+    for (i, r) in root.iter_mut().enumerate() {
+        *r = i;
+    }
+    for (i, node) in model.nodes.iter().enumerate() {
+        if matches!(node.op, QOp::Identity) {
+            root[i] = match node.inputs[0] {
+                Input::Graph => input_id,
+                Input::Node(j) => root[j],
+            };
+        }
+    }
+    // Last read of every root buffer. A buffer nobody reads dies at its
+    // own definition step (freed right after it is produced); the input
+    // slot's default is before node 0.
+    let mut last_use: Vec<usize> = (0..=n).collect();
+    last_use[input_id] = 0;
+    for (i, node) in model.nodes.iter().enumerate() {
+        // Fused-away nodes never execute; their (pre-rewire) inputs are
+        // not real reads.
+        if matches!(node.op, QOp::FusedAway) {
+            continue;
+        }
+        for inp in &node.inputs {
+            let b = match inp {
+                Input::Graph => input_id,
+                Input::Node(j) => root[*j],
+            };
+            last_use[b] = last_use[b].max(i);
+        }
+    }
+    // The model output must survive the whole walk (it is read back after
+    // the last node).
+    last_use[root[model.output]] = n;
+    (root, last_use)
+}
+
+/// First-fit free-list allocator over a virtual heap. Offsets are
+/// `ALIGN`-aligned; freed blocks coalesce with both neighbours.
+struct Arena {
+    free: Vec<(usize, usize)>, // (offset, size), sorted by offset
+    heap_end: usize,
+}
+
+impl Arena {
+    fn new() -> Arena {
+        Arena {
+            free: Vec::new(),
+            heap_end: 0,
+        }
+    }
+
+    fn alloc(&mut self, bytes: usize) -> usize {
+        let need = bytes.div_ceil(ALIGN) * ALIGN;
+        for i in 0..self.free.len() {
+            let (off, size) = self.free[i];
+            if size >= need {
+                if size == need {
+                    self.free.remove(i);
+                } else {
+                    self.free[i] = (off + need, size - need);
+                }
+                return off;
+            }
+        }
+        let off = self.heap_end;
+        self.heap_end += need;
+        off
+    }
+
+    fn release(&mut self, off: usize, bytes: usize) {
+        let size = bytes.div_ceil(ALIGN) * ALIGN;
+        let pos = self.free.partition_point(|&(o, _)| o < off);
+        self.free.insert(pos, (off, size));
+        // Coalesce with the next block, then the previous one.
+        if pos + 1 < self.free.len() && self.free[pos].0 + self.free[pos].1 == self.free[pos + 1].0
+        {
+            let next = self.free[pos + 1].1;
+            self.free[pos].1 += next;
+            self.free.remove(pos + 1);
+        }
+        if pos > 0 && self.free[pos - 1].0 + self.free[pos - 1].1 == self.free[pos].0 {
+            let cur = self.free[pos].1;
+            self.free[pos - 1].1 += cur;
+            self.free.remove(pos);
+        }
+    }
+}
+
+/// Build the arena layout for `model` at `input_shape`.
+pub(crate) fn plan(model: &QuantizedModel, input_shape: &[usize]) -> MemoryPlan {
+    let n = model.nodes.len();
+    let input_id = n;
+    let shapes = infer_shapes(model, input_shape);
+    let (root, last_use) = liveness(model);
+    let size_of = |b: usize| -> usize {
+        if b == input_id {
+            input_shape.iter().product()
+        } else if root[b] != b {
+            0 // alias — bytes live with the root
+        } else {
+            shapes[b].iter().product()
+        }
+    };
+    // Buffers to release after each step: those whose last read is here.
+    let mut frees_at: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for b in 0..=input_id {
+        if size_of(b) > 0 && last_use[b] < n {
+            frees_at[last_use[b]].push(b);
+        }
+    }
+    let mut arena = Arena::new();
+    let mut offsets = vec![NO_BUFFER; n + 1];
+    let mut total = 0usize;
+    let mut buffers = 0usize;
+    // The input slot is written before node 0 runs.
+    offsets[input_id] = arena.alloc(size_of(input_id));
+    total += size_of(input_id);
+    buffers += 1;
+    for i in 0..n {
+        let sz = size_of(i);
+        if root[i] == i && sz > 0 {
+            // Allocate the output *before* releasing inputs: an executing
+            // node's destination never overlaps its live sources.
+            offsets[i] = arena.alloc(sz);
+            total += sz;
+            buffers += 1;
+        }
+        for &b in &frees_at[i] {
+            arena.release(offsets[b], size_of(b));
+        }
+    }
+    // Resolve aliases to their root's block.
+    for i in 0..n {
+        if root[i] != i {
+            offsets[i] = offsets[root[i]];
+        }
+    }
+    MemoryPlan {
+        input_shape: input_shape.to_vec(),
+        input_offset: offsets[input_id],
+        offsets: offsets[..n].to_vec(),
+        shapes,
+        peak_bytes: arena.heap_end,
+        total_bytes: total,
+        buffers,
+        model_id: model.model_id,
+    }
+}
+
+/// Reusable forward-pass state: the arena plus a plan cache keyed by
+/// (model identity, input shape) — a scratch accidentally shared between
+/// models re-plans rather than serving a stale layout, though steady-state
+/// zero-allocation behaviour assumes one scratch per model. Serving keeps
+/// one warm `Scratch` per batcher so request handling allocates nothing
+/// inside the engine.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    arena: Vec<i8>,
+    plans: Vec<MemoryPlan>,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// Largest planned arena so far (bytes) — what the warm buffer holds.
+    pub fn planned_peak_bytes(&self) -> usize {
+        self.plans.iter().map(|p| p.peak_bytes).max().unwrap_or(0)
+    }
+
+    /// Number of cached (model, input-shape) plans.
+    pub fn cached_plans(&self) -> usize {
+        self.plans.len()
+    }
+
+    /// Find or build the plan for `shape`, growing the arena if needed.
+    /// Returns the plan index (not a reference, so the caller can split
+    /// borrows between the plan list and the arena).
+    pub(crate) fn ensure_plan(&mut self, model: &QuantizedModel, shape: &[usize]) -> usize {
+        if let Some(i) = self
+            .plans
+            .iter()
+            .position(|p| p.model_id == model.model_id && p.input_shape == shape)
+        {
+            return i;
+        }
+        let p = plan(model, shape);
+        if self.arena.len() < p.peak_bytes {
+            self.arena.resize(p.peak_bytes, 0);
+        }
+        self.plans.push(p);
+        self.plans.len() - 1
+    }
+
+    pub(crate) fn parts(&mut self) -> (&[MemoryPlan], &mut [i8]) {
+        (&self.plans, &mut self.arena)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthImageNet;
+    use crate::engine::lower;
+    use crate::ptq::{standard_ptq_pipeline, PtqOptions};
+    use crate::tensor::Tensor;
+    use crate::zoo;
+
+    fn lowered(model: &str, seed: u64) -> QuantizedModel {
+        let g = zoo::build(model, seed).unwrap();
+        let ds = SynthImageNet::new(seed + 1);
+        let calib: Vec<Tensor> = (0..2).map(|i| ds.batch(i, 8).0).collect();
+        let out = standard_ptq_pipeline(&g, &calib, &PtqOptions::default());
+        lower(&out.sim).expect("lowering")
+    }
+
+    #[test]
+    fn plan_reuses_memory_on_deep_models() {
+        let qm = lowered("mobimini", 601);
+        let p = qm.memory_plan(&[4, 3, 32, 32]);
+        assert!(p.peak_bytes > 0);
+        assert!(
+            p.peak_bytes < p.total_bytes,
+            "liveness sharing should beat the no-reuse baseline: peak {} vs total {}",
+            p.peak_bytes,
+            p.total_bytes
+        );
+        assert!(p.reuse_factor() > 1.2, "reuse {:.2}", p.reuse_factor());
+        assert!(p.describe().contains("reuse"));
+    }
+
+    #[test]
+    fn plan_lifetimes_are_disjoint() {
+        // The executor's safety contract: while node i runs, its output
+        // block must not overlap any input block, and any two buffers with
+        // overlapping lifetimes must occupy disjoint byte ranges.
+        for model in ["mobimini", "resmini"] {
+            let qm = lowered(model, 603);
+            let p = qm.memory_plan(&[3, 3, 32, 32]);
+            let (root, last_use) = liveness(&qm);
+            let n = qm.nodes.len();
+            let aligned = |b: usize| b.div_ceil(ALIGN) * ALIGN;
+            // (buffer id, offset, bytes, def step, last step)
+            let mut bufs: Vec<(usize, usize, usize, usize, usize)> = Vec::new();
+            bufs.push((n, p.input_offset, aligned(p.input_len()), 0, last_use[n]));
+            for i in 0..n {
+                let sz = p.node_len(i);
+                if root[i] == i && sz > 0 {
+                    bufs.push((i, p.offsets[i], aligned(sz), i, last_use[i]));
+                }
+            }
+            for (ai, &(a, ao, asz, ad, al)) in bufs.iter().enumerate() {
+                for &(b, bo, bsz, bd, bl) in &bufs[ai + 1..] {
+                    // Input slot is live from before node 0.
+                    let (ad, bd) = (if a == n { 0 } else { ad }, if b == n { 0 } else { bd });
+                    let lifetimes_overlap = ad <= bl && bd <= al;
+                    let ranges_overlap = ao < bo + bsz && bo < ao + asz;
+                    assert!(
+                        !(lifetimes_overlap && ranges_overlap),
+                        "{model}: buffers {a} [{ao},{};{ad}..{al}] and {b} [{bo},{};{bd}..{bl}] overlap",
+                        ao + asz,
+                        bo + bsz,
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_caches_plans_per_shape() {
+        let qm = lowered("mobimini", 605);
+        let mut s = Scratch::new();
+        let a = s.ensure_plan(&qm, &[1, 3, 32, 32]);
+        let b = s.ensure_plan(&qm, &[8, 3, 32, 32]);
+        let a2 = s.ensure_plan(&qm, &[1, 3, 32, 32]);
+        assert_eq!(a, a2, "same shape must hit the cache");
+        assert_ne!(a, b);
+        assert_eq!(s.cached_plans(), 2);
+        assert!(s.planned_peak_bytes() > 0);
+    }
+
+    #[test]
+    fn scratch_replans_for_a_different_model() {
+        // Same architecture (same node count) but a distinct lowered model:
+        // the cache must miss and re-plan, never serve the stale layout.
+        let a = lowered("mobimini", 607);
+        let b = lowered("mobimini", 608);
+        assert_ne!(a.model_id, b.model_id);
+        let mut s = Scratch::new();
+        let pa = s.ensure_plan(&a, &[2, 3, 32, 32]);
+        let pb = s.ensure_plan(&b, &[2, 3, 32, 32]);
+        assert_ne!(pa, pb, "distinct models must not share cached plans");
+        assert_eq!(pa, s.ensure_plan(&a, &[2, 3, 32, 32]));
+    }
+
+    #[test]
+    fn arena_first_fit_coalesces() {
+        let mut a = Arena::new();
+        let x = a.alloc(100);
+        let y = a.alloc(100);
+        let z = a.alloc(100);
+        assert_eq!((x, y, z), (0, 128, 256));
+        a.release(x, 100);
+        a.release(z, 100);
+        // y still live: the two free fragments are not adjacent.
+        assert_eq!(a.free.len(), 2);
+        a.release(y, 100);
+        // Everything coalesces into one block.
+        assert_eq!(a.free.len(), 1);
+        assert_eq!(a.free[0], (0, 384));
+        // And is reused rather than growing the heap.
+        assert_eq!(a.alloc(300), 0);
+        assert_eq!(a.heap_end, 384);
+    }
+}

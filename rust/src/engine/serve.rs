@@ -8,16 +8,28 @@
 //! the whole batch — whose GEMMs parallelize on the shared persistent
 //! worker pool — and routes each slice of the output back to its caller.
 //!
+//! The batcher owns one warm [`Scratch`]: after the first few batches
+//! (one memory plan per distinct coalesced batch size) every forward runs
+//! against the cached arena plan and the engine allocates nothing. The
+//! batch input is likewise assembled in a reused buffer, so steady-state
+//! per-request cost outside the kernels is the reply tensor itself.
+//!
 //! Batching is where the integer engine's throughput comes from: a
-//! batch-N im2col GEMM has N× the columns of a batch-1 call, so the
-//! blocked kernels amortize dispatch and keep every pool lane busy,
-//! while per-request latency is bounded by `max_wait` + one forward.
+//! batch-N conv GEMM has N× the patch columns of a batch-1 call, so the
+//! tiled kernels amortize dispatch and keep every pool lane busy, while
+//! per-request latency is bounded by `max_wait` + one forward.
+//!
+//! `max_wait = 0` is the latency-greedy mode: the batcher never sleeps
+//! waiting for stragglers, but it still drains whatever is *already
+//! queued* at dispatch time into one forward (`try_recv` until empty or
+//! `max_batch` — no timer arithmetic, no busy-wait;
+//! `zero_wait_coalesces_already_queued_requests` is the regression test).
 //!
 //! Per-sample results are bit-identical to batch-1 execution: every
 //! integer kernel computes each sample's outputs independently of its
 //! batch neighbours (verified by `replies_match_direct_forward`).
 
-use super::QuantizedModel;
+use super::{QuantizedModel, Scratch};
 use crate::tensor::Tensor;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
@@ -58,6 +70,10 @@ pub struct ServeStats {
     pub samples: usize,
     /// Largest coalesced batch, in rows.
     pub max_batch_seen: usize,
+    /// Warm arena bytes held by the batcher's scratch at shutdown.
+    pub arena_peak_bytes: usize,
+    /// Distinct (batch-shape) memory plans the scratch cached.
+    pub plans_cached: usize,
 }
 
 impl ServeStats {
@@ -139,63 +155,91 @@ impl BatchClient {
     }
 }
 
+/// Coalesce follow-up requests into `reqs` until `max_batch` rows are
+/// queued or the wait budget runs out. Returns the total row count.
+fn coalesce(reqs: &mut Vec<Request>, rx: &Receiver<Request>, cfg: &BatchConfig) -> usize {
+    let mut rows = reqs[0].x.dim(0);
+    if cfg.max_batch <= 1 {
+        return rows;
+    }
+    if cfg.max_wait.is_zero() {
+        // Zero-wait: never sleep, never poll the clock — but still take
+        // every request that is already sitting in the queue right now,
+        // so a zero-wait server under load keeps its batching win.
+        while rows < cfg.max_batch {
+            match rx.try_recv() {
+                Ok(r) => {
+                    rows += r.x.dim(0);
+                    reqs.push(r);
+                }
+                Err(_) => break,
+            }
+        }
+        return rows;
+    }
+    let deadline = Instant::now() + cfg.max_wait;
+    while rows < cfg.max_batch {
+        let now = Instant::now();
+        let next = if now >= deadline {
+            // Budget spent: take only what is already queued.
+            rx.try_recv().map_err(|_| RecvTimeoutError::Timeout)
+        } else {
+            rx.recv_timeout(deadline - now)
+        };
+        match next {
+            Ok(r) => {
+                rows += r.x.dim(0);
+                reqs.push(r);
+            }
+            Err(_) => break,
+        }
+    }
+    rows
+}
+
 fn batcher_loop(model: Arc<QuantizedModel>, cfg: BatchConfig, rx: Receiver<Request>) -> ServeStats {
     let mut stats = ServeStats::default();
+    // One warm scratch for the batcher's whole lifetime: after the first
+    // batch at each coalesced size, forwards are allocation-free.
+    let mut scratch = Scratch::new();
+    let mut reqs: Vec<Request> = Vec::new();
+    let mut batch_data: Vec<f32> = Vec::new();
+    let mut shape: Vec<usize> = Vec::new();
     // Blocks until the next request or every client + server handle is
     // gone (shutdown).
     while let Ok(first) = rx.recv() {
-        let mut reqs = vec![first];
-        let mut rows = reqs[0].x.dim(0);
-        if cfg.max_batch > 1 {
-            let deadline = Instant::now() + cfg.max_wait;
-            while rows < cfg.max_batch {
-                let now = Instant::now();
-                let next = if now >= deadline {
-                    // Budget spent: take only what is already queued.
-                    rx.try_recv().map_err(|_| RecvTimeoutError::Timeout)
-                } else {
-                    rx.recv_timeout(deadline - now)
-                };
-                match next {
-                    Ok(r) => {
-                        rows += r.x.dim(0);
-                        reqs.push(r);
-                    }
-                    Err(_) => break,
-                }
-            }
+        reqs.push(first);
+        let rows = coalesce(&mut reqs, &rx, &cfg);
+        // Assemble the batch in the reused buffer (capacity is warm after
+        // the first max-size batch).
+        let tail = &reqs[0].x.shape()[1..];
+        shape.clear();
+        shape.push(rows);
+        shape.extend_from_slice(tail);
+        batch_data.clear();
+        for r in &reqs {
+            assert_eq!(&r.x.shape()[1..], tail, "coalesced trailing shapes");
+            batch_data.extend_from_slice(r.x.data());
         }
-        let parts: Vec<&Tensor> = reqs.iter().map(|r| &r.x).collect();
-        let batch = stack0(&parts);
-        let y = model.forward(&batch);
+        let batch = Tensor::new(&shape, std::mem::take(&mut batch_data));
+        let y = model.forward_with(&batch, &mut scratch);
         let mut row = 0;
         for r in &reqs {
             let nr = r.x.dim(0);
             // A dropped caller is fine — ignore the send error.
-            let _ = r.reply.send(y.batch_slice(row, row + nr));
+            let _ = r.reply.send(y.dequantize_rows(row, row + nr));
             row += nr;
         }
         stats.batches += 1;
         stats.samples += rows;
         stats.max_batch_seen = stats.max_batch_seen.max(rows);
+        // Reclaim the buffers for the next round.
+        batch_data = batch.into_data();
+        reqs.clear();
     }
+    stats.arena_peak_bytes = scratch.planned_peak_bytes();
+    stats.plans_cached = scratch.cached_plans();
     stats
-}
-
-/// Concatenate tensors along axis 0 (identical trailing shapes).
-fn stack0(parts: &[&Tensor]) -> Tensor {
-    assert!(!parts.is_empty());
-    let tail = &parts[0].shape()[1..];
-    let mut total = 0;
-    let mut data = Vec::new();
-    for p in parts {
-        assert_eq!(&p.shape()[1..], tail, "stack0 trailing shapes");
-        total += p.dim(0);
-        data.extend_from_slice(p.data());
-    }
-    let mut shape = vec![total];
-    shape.extend_from_slice(tail);
-    Tensor::new(&shape, data)
 }
 
 /// Latency/throughput report of one serving run.
@@ -216,7 +260,7 @@ impl ServeReport {
     pub fn render(&self) -> String {
         format!(
             "{} clients x {} reqs: {:.1} samples/s | latency p50 {:.2} ms, p95 {:.2} ms, \
-             p99 {:.2} ms | {} forwards, mean batch {:.2} (max {})",
+             p99 {:.2} ms | {} forwards, mean batch {:.2} (max {}), arena {:.1} KiB",
             self.clients,
             self.requests_per_client,
             self.throughput_sps,
@@ -225,7 +269,8 @@ impl ServeReport {
             self.p99_ms,
             self.stats.batches,
             self.stats.mean_batch(),
-            self.stats.max_batch_seen
+            self.stats.max_batch_seen,
+            self.stats.arena_peak_bytes as f64 / 1024.0
         )
     }
 }
@@ -332,6 +377,66 @@ mod tests {
         assert_eq!(stats.samples, 24);
         assert!(stats.batches <= 24);
         assert!(stats.max_batch_seen >= 1);
+        assert!(stats.arena_peak_bytes > 0, "batcher scratch must be warm");
+        assert!(stats.plans_cached >= 1);
+    }
+
+    #[test]
+    fn zero_wait_coalesces_already_queued_requests() {
+        // The max_wait = 0 regression: requests sitting in the queue when
+        // the batcher dispatches must be coalesced into ONE forward (not
+        // served one-by-one, and without any busy-wait). Driving
+        // batcher_loop directly with a pre-filled channel makes the
+        // "already queued" state deterministic.
+        let qm = model();
+        let (tx, rx) = channel::<Request>();
+        let ds = SynthImageNet::new(406);
+        let mut expected = Vec::new();
+        let mut replies = Vec::new();
+        for i in 0..5u64 {
+            let (x, _) = ds.batch(i, 1);
+            let (rtx, rrx) = channel();
+            expected.push(qm.forward(&x));
+            replies.push(rrx);
+            tx.send(Request { x, reply: rtx }).unwrap();
+        }
+        drop(tx);
+        let cfg = BatchConfig {
+            max_batch: 8,
+            max_wait: Duration::ZERO,
+        };
+        let stats = batcher_loop(Arc::clone(&qm), cfg, rx);
+        assert_eq!(stats.batches, 1, "queued requests must coalesce");
+        assert_eq!(stats.samples, 5);
+        assert_eq!(stats.max_batch_seen, 5);
+        for (rrx, want) in replies.iter().zip(&expected) {
+            assert_eq!(&rrx.recv().unwrap(), want);
+        }
+    }
+
+    #[test]
+    fn zero_wait_respects_max_batch() {
+        let qm = model();
+        let (tx, rx) = channel::<Request>();
+        let ds = SynthImageNet::new(407);
+        let mut replies = Vec::new();
+        for i in 0..5u64 {
+            let (x, _) = ds.batch(i, 1);
+            let (rtx, rrx) = channel();
+            replies.push(rrx);
+            tx.send(Request { x, reply: rtx }).unwrap();
+        }
+        drop(tx);
+        let cfg = BatchConfig {
+            max_batch: 2,
+            max_wait: Duration::ZERO,
+        };
+        let stats = batcher_loop(qm, cfg, rx);
+        assert_eq!(stats.batches, 3, "5 queued requests at max_batch 2");
+        assert_eq!(stats.max_batch_seen, 2);
+        for r in &replies {
+            assert_eq!(r.recv().unwrap().dim(0), 1);
+        }
     }
 
     #[test]
@@ -353,6 +458,7 @@ mod tests {
         let stats = server.shutdown();
         assert_eq!(stats.batches, 5);
         assert_eq!(stats.max_batch_seen, 1);
+        assert_eq!(stats.plans_cached, 1, "one batch shape = one plan");
     }
 
     #[test]
@@ -373,15 +479,6 @@ mod tests {
         assert!(report.throughput_sps > 0.0);
         assert!(report.p50_ms <= report.p95_ms && report.p95_ms <= report.p99_ms);
         assert!(!report.render().is_empty());
-    }
-
-    #[test]
-    fn stack0_concatenates_rows() {
-        let a = Tensor::new(&[1, 2], vec![1.0, 2.0]);
-        let b = Tensor::new(&[2, 2], vec![3.0, 4.0, 5.0, 6.0]);
-        let s = stack0(&[&a, &b]);
-        assert_eq!(s.shape(), &[3, 2]);
-        assert_eq!(s.data(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
     }
 
     #[test]

@@ -22,6 +22,31 @@
 //! JAX models (which call the L1 Pallas kernels) once, and everything else
 //! is this crate.
 
+// Lints allowed crate-wide so `scripts/ci.sh` can run
+// `cargo clippy -- -D warnings`. The first group are genuine kernel/IR
+// idioms: dense kernels index with explicit loop bounds (the
+// disjoint-write SAFETY arguments read off the indices), lowering passes
+// thread many scalar geometry parameters, and the graph/op enums
+// intentionally keep large and small variants side by side. The second
+// group are style lints the pre-gate codebase was never linted against;
+// they are kept allowed to bootstrap the gate and should be tightened
+// opportunistically (remove an entry, fix what fires, repeat).
+#![allow(
+    clippy::too_many_arguments,
+    clippy::needless_range_loop,
+    clippy::large_enum_variant,
+    clippy::type_complexity,
+    clippy::manual_memcpy,
+    clippy::manual_range_contains,
+    clippy::new_without_default,
+    clippy::len_without_is_empty
+)]
+#![allow(
+    clippy::collapsible_if,
+    clippy::collapsible_else_if,
+    clippy::comparison_chain
+)]
+
 pub mod compress;
 pub mod coordinator;
 pub mod data;

@@ -12,6 +12,16 @@
 //! at batch 16 issues hundreds of parallel regions, and paying OS
 //! spawn+join for each dominated small-kernel wall time.
 //!
+//! **Zero-allocation dispatch:** a [`parallel_chunks`] call performs no heap
+//! allocation. The job descriptor lives on the submitting thread's stack
+//! (the submitter cannot return until every worker has released it, so the
+//! borrow is sound), the run queue only recycles its capacity, and kernels
+//! that need per-thread temporaries take them from [`with_worker_scratch`]
+//! — a thread-local buffer that grows to a high-water mark and is then
+//! reused forever. The integer inference engine's steady-state
+//! "zero allocations per forward" contract (`benches/engine.rs`) rides on
+//! this.
+//!
 //! Scheduling rules:
 //! * The submitting thread always participates in its own job, so progress
 //!   is guaranteed even when every worker is busy with other jobs.
@@ -20,9 +30,9 @@
 //! * `AIMET_THREADS=1` is a true deterministic single-thread mode: every
 //!   call runs inline on the caller and the pool is never even spawned.
 
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::{Condvar, Mutex, OnceLock};
 
 /// Number of worker threads to use: `AIMET_THREADS` env override, else the
 /// available parallelism, clamped to [1, 32]. Read once and cached; set the
@@ -62,6 +72,9 @@ unsafe impl Send for FnPtr {}
 unsafe impl Sync for FnPtr {}
 
 /// One parallel-for job: a closure plus an atomic cursor over `0..n`.
+/// Lives on the *submitting thread's stack* — dispatching a job allocates
+/// nothing. The submitter guarantees the job outlives every access by
+/// waiting for `remaining == 0 && visitors == 0` before returning.
 struct Job {
     f: FnPtr,
     /// Total iteration count.
@@ -70,10 +83,12 @@ struct Job {
     chunk: usize,
     /// Next unclaimed iteration index (may overshoot `n`).
     next: AtomicUsize,
-    /// Unfinished chunk count; guarded by a mutex so the submitter can
-    /// condvar-wait for completion.
-    remaining: Mutex<usize>,
-    done_cv: Condvar,
+    /// Unfinished chunk count.
+    remaining: AtomicUsize,
+    /// Workers currently holding a reference to this job (incremented under
+    /// the pool lock when a worker picks the job, decremented under the
+    /// pool lock when it is done touching it).
+    visitors: AtomicUsize,
     /// Set when any chunk panicked; the submitter re-raises.
     panicked: AtomicBool,
 }
@@ -81,7 +96,7 @@ struct Job {
 impl Job {
     /// Claim and run chunks until the cursor is exhausted. Runs on both
     /// workers and the submitting thread.
-    fn run_chunks(&self) {
+    fn run_chunks(&self, pool: &PoolInner) {
         let was_in_job = IN_POOL_JOB.with(|c| c.replace(true));
         loop {
             let start = self.next.fetch_add(self.chunk, Ordering::Relaxed);
@@ -93,67 +108,91 @@ impl Job {
             // `remaining` hits zero, which cannot happen before this chunk
             // finishes (we only decrement below).
             let f = unsafe { &*self.f.0 };
-            let result =
-                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(start, end)));
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(start, end)));
             if result.is_err() {
                 self.panicked.store(true, Ordering::Relaxed);
             }
-            let mut rem = self.remaining.lock().unwrap();
-            *rem -= 1;
-            if *rem == 0 {
-                self.done_cv.notify_all();
+            if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                // Last chunk: wake the submitter (which waits on the pool
+                // condvar, so the notification must hold the pool lock).
+                let _guard = pool.state.lock().unwrap();
+                pool.done_cv.notify_all();
             }
         }
         IN_POOL_JOB.with(|c| c.set(was_in_job));
     }
 
-    fn exhausted(&self) -> bool {
-        self.next.load(Ordering::Relaxed) >= self.n
+    fn has_work(&self) -> bool {
+        self.next.load(Ordering::Relaxed) < self.n
     }
 }
 
-/// Shared pool state: a queue of in-flight jobs plus the condvar workers
-/// park on while the queue has no claimable work.
+/// A queue entry: a raw pointer to a submitter-stack [`Job`]. Sound because
+/// a job is only ever in the queue while its `parallel_chunks` call is
+/// still blocked in [`parallel_chunks`] (it removes itself before waiting
+/// out its visitors, and waits before returning).
+struct JobRef(*const Job);
+unsafe impl Send for JobRef {}
+
+/// Shared pool state: the run queue (guarded by one mutex) plus the two
+/// condvars — `work_cv` parks idle workers, `done_cv` parks submitters
+/// waiting for their last chunks/visitors.
 struct PoolInner {
-    queue: Mutex<Vec<Arc<Job>>>,
+    state: Mutex<Vec<JobRef>>,
     work_cv: Condvar,
+    done_cv: Condvar,
 }
 
-static POOL: OnceLock<Arc<PoolInner>> = OnceLock::new();
+static POOL: OnceLock<PoolInner> = OnceLock::new();
+static SPAWN_WORKERS: std::sync::Once = std::sync::Once::new();
 
 /// The global pool, spawning `num_threads() - 1` workers on first use (the
-/// submitting thread is the final lane of parallelism).
-fn pool() -> &'static Arc<PoolInner> {
-    POOL.get_or_init(|| {
-        let inner = Arc::new(PoolInner {
-            queue: Mutex::new(Vec::new()),
-            work_cv: Condvar::new(),
-        });
+/// submitting thread is the final lane of parallelism). The state is
+/// initialized before any worker starts, so workers always observe it.
+fn pool() -> &'static PoolInner {
+    let p = POOL.get_or_init(|| PoolInner {
+        state: Mutex::new(Vec::new()),
+        work_cv: Condvar::new(),
+        done_cv: Condvar::new(),
+    });
+    SPAWN_WORKERS.call_once(|| {
         for w in 0..num_threads().saturating_sub(1) {
-            let inner = Arc::clone(&inner);
             std::thread::Builder::new()
                 .name(format!("aimet-pool-{w}"))
-                .spawn(move || worker_loop(inner))
+                .spawn(move || worker_loop(p))
                 .expect("spawn pool worker");
         }
-        inner
-    })
+    });
+    p
 }
 
-fn worker_loop(pool: Arc<PoolInner>) {
+fn worker_loop(pool: &'static PoolInner) {
     loop {
-        let job = {
-            let mut q = pool.queue.lock().unwrap();
+        let job: *const Job = {
+            let mut q = pool.state.lock().unwrap();
             loop {
                 // Drop fully-claimed jobs, then pick any with work left.
-                q.retain(|j| !j.exhausted());
+                // SAFETY: every queued job's submitter is still blocked in
+                // parallel_chunks, so the pointee is alive.
+                q.retain(|j| unsafe { &*j.0 }.has_work());
                 if let Some(j) = q.first() {
-                    break Arc::clone(j);
+                    // Register as a visitor *under the lock* so the
+                    // submitter (which removes its job under the same lock)
+                    // either sees us or we never start.
+                    unsafe { &*j.0 }.visitors.fetch_add(1, Ordering::AcqRel);
+                    break j.0;
                 }
                 q = pool.work_cv.wait(q).unwrap();
             }
         };
-        job.run_chunks();
+        // SAFETY: the visitor count keeps the submitter from returning
+        // (and thus the stack Job from dying) until we deregister below.
+        unsafe { &*job }.run_chunks(pool);
+        {
+            let _q = pool.state.lock().unwrap();
+            unsafe { &*job }.visitors.fetch_sub(1, Ordering::AcqRel);
+            pool.done_cv.notify_all();
+        }
     }
 }
 
@@ -161,7 +200,7 @@ fn worker_loop(pool: Arc<PoolInner>) {
 /// persistent pool. Falls back to a single inline call when `n` is small
 /// (below `grain`), when `AIMET_THREADS=1`, or when already running inside
 /// a pool job (nested use). Blocks until every chunk has completed; a panic
-/// in any chunk is re-raised here.
+/// in any chunk is re-raised here. Performs no heap allocation.
 pub fn parallel_chunks<F>(n: usize, grain: usize, f: F)
 where
     F: Fn(usize, usize) + Sync,
@@ -184,38 +223,37 @@ where
         return;
     }
     // Erase the closure's lifetime: safe because we do not return until
-    // `remaining == 0`, i.e. every dereference has completed.
+    // `remaining == 0 && visitors == 0`, i.e. every dereference has
+    // completed and no worker still holds the job.
     let f_obj: &(dyn Fn(usize, usize) + Sync) = &f;
-    let f_static: &'static (dyn Fn(usize, usize) + Sync) =
-        unsafe { std::mem::transmute(f_obj) };
-    let job = Arc::new(Job {
+    let f_static: &'static (dyn Fn(usize, usize) + Sync) = unsafe { std::mem::transmute(f_obj) };
+    let job = Job {
         f: FnPtr(f_static as *const _),
         n,
         chunk,
         next: AtomicUsize::new(0),
-        remaining: Mutex::new(chunks),
-        done_cv: Condvar::new(),
+        remaining: AtomicUsize::new(chunks),
+        visitors: AtomicUsize::new(0),
         panicked: AtomicBool::new(false),
-    });
+    };
     let p = pool();
     {
-        let mut q = p.queue.lock().unwrap();
-        q.push(Arc::clone(&job));
+        let mut q = p.state.lock().unwrap();
+        q.push(JobRef(&job as *const Job));
         p.work_cv.notify_all();
     }
     // Participate: guarantees progress even with zero free workers.
-    job.run_chunks();
-    // Wait for chunks claimed by workers to finish.
+    job.run_chunks(p);
+    // Unpublish the job, then wait until every chunk has finished and every
+    // worker that picked the job up has let go of it.
     {
-        let mut rem = job.remaining.lock().unwrap();
-        while *rem > 0 {
-            rem = job.done_cv.wait(rem).unwrap();
+        let mut q = p.state.lock().unwrap();
+        q.retain(|j| !std::ptr::eq(j.0, &job as *const Job));
+        while job.remaining.load(Ordering::Acquire) > 0
+            || job.visitors.load(Ordering::Acquire) > 0
+        {
+            q = p.done_cv.wait(q).unwrap();
         }
-    }
-    // Drop our queue entry if no worker got to it first.
-    {
-        let mut q = p.queue.lock().unwrap();
-        q.retain(|j| !Arc::ptr_eq(j, &job));
     }
     if job.panicked.load(Ordering::Relaxed) {
         panic!("aimet pool: a parallel_chunks closure panicked");
@@ -282,6 +320,54 @@ impl<T> SyncSlice<T> {
     pub(crate) fn ptr(&self) -> *mut T {
         self.0
     }
+}
+
+/// Per-thread kernel temporaries (integer GEMM accumulator panels, conv
+/// patch panels). Buffers grow to their high-water mark on the first few
+/// calls and are then reused forever — the steady state performs no heap
+/// allocation on any pool lane.
+#[derive(Default)]
+pub struct WorkerScratch {
+    i8_buf: Vec<i8>,
+    i32_buf: Vec<i32>,
+}
+
+impl WorkerScratch {
+    /// An i32 scratch slice of length `n` (contents unspecified).
+    pub fn i32_slice(&mut self, n: usize) -> &mut [i32] {
+        if self.i32_buf.len() < n {
+            self.i32_buf.resize(n, 0);
+        }
+        &mut self.i32_buf[..n]
+    }
+
+    /// Simultaneous i8 + i32 scratch slices (the conv tile kernel's patch
+    /// panel and accumulator panel). Disjoint fields, so both borrows are
+    /// handed out at once.
+    pub fn i8_i32(&mut self, n8: usize, n32: usize) -> (&mut [i8], &mut [i32]) {
+        if self.i8_buf.len() < n8 {
+            self.i8_buf.resize(n8, 0);
+        }
+        if self.i32_buf.len() < n32 {
+            self.i32_buf.resize(n32, 0);
+        }
+        (&mut self.i8_buf[..n8], &mut self.i32_buf[..n32])
+    }
+}
+
+thread_local! {
+    static WORKER_SCRATCH: RefCell<WorkerScratch> = RefCell::new(WorkerScratch::default());
+}
+
+/// Run `f` with this thread's reusable [`WorkerScratch`]. Re-entrant use
+/// (a scratch user nested inside another scratch user on the same thread)
+/// falls back to a fresh temporary scratch — correct, merely not
+/// allocation-free; the engine's kernels never nest.
+pub fn with_worker_scratch<R>(f: impl FnOnce(&mut WorkerScratch) -> R) -> R {
+    WORKER_SCRATCH.with(|cell| match cell.try_borrow_mut() {
+        Ok(mut ws) => f(&mut ws),
+        Err(_) => f(&mut WorkerScratch::default()),
+    })
 }
 
 #[cfg(test)]
@@ -379,5 +465,44 @@ mod tests {
         // Panics in whichever lane runs a chunk (worker or submitter) must
         // surface on the submitting thread, not vanish or deadlock.
         parallel_chunks(1000, 1, |_s, _e| panic!("boom"));
+    }
+
+    #[test]
+    fn worker_scratch_reuses_capacity() {
+        with_worker_scratch(|ws| {
+            let s = ws.i32_slice(100);
+            s.fill(7);
+        });
+        with_worker_scratch(|ws| {
+            let (a, b) = ws.i8_i32(64, 50);
+            a.fill(1);
+            b.fill(2);
+            assert_eq!(a.len(), 64);
+            assert_eq!(b.len(), 50);
+        });
+        // Nested use falls back to a fresh scratch, still correct.
+        with_worker_scratch(|_outer| {
+            with_worker_scratch(|inner| {
+                assert_eq!(inner.i32_slice(8).len(), 8);
+            });
+        });
+    }
+
+    #[test]
+    fn scratch_inside_pool_job_is_per_thread() {
+        // Every lane (workers + submitter) gets its own scratch; results
+        // must be correct regardless of which lane ran which chunk.
+        let sum = AtomicU64::new(0);
+        parallel_chunks(512, 1, |s, e| {
+            with_worker_scratch(|ws| {
+                let buf = ws.i32_slice(e - s);
+                for (k, v) in buf.iter_mut().enumerate() {
+                    *v = (s + k) as i32;
+                }
+                let local: u64 = buf.iter().map(|&v| v as u64).sum();
+                sum.fetch_add(local, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 511 * 512 / 2);
     }
 }

@@ -13,9 +13,9 @@ pub use analyzer::{
 pub use encoding::{Encoding, QuantScheme};
 pub use qops::{
     quantized_conv2d, quantized_linear, quantized_matmul_i32, quantized_matmul_i32_ref,
-    requantize_value, QTensor, Requant,
+    requantize_value, QTensor, Requant, GEMM_MR,
 };
-pub(crate) use qops::quantize_ints;
+pub(crate) use qops::{quantize_i8, quantize_i8_into, quantize_ints};
 
 use crate::tensor::Tensor;
 

@@ -35,6 +35,39 @@ pub(crate) fn quantize_ints(xs: &[f32], enc: &Encoding) -> Vec<i32> {
     out
 }
 
+/// Quantize a float slice into a caller-provided packed-`i8` buffer — the
+/// inference engine's input boundary. `enc` must already be an i8-window
+/// grid (the engine's lowering re-centres unsigned grids; see
+/// `engine::packed_encoding`). Allocation-free; parallel for large inputs.
+pub(crate) fn quantize_i8_into(xs: &[f32], enc: &Encoding, out: &mut [i8]) {
+    assert_eq!(xs.len(), out.len());
+    assert!(
+        enc.int_min >= i8::MIN as i32 && enc.int_max <= i8::MAX as i32,
+        "encoding grid [{}, {}] does not fit i8 — pack it first",
+        enc.int_min,
+        enc.int_max
+    );
+    let base = SyncSlice::new(out.as_mut_ptr());
+    parallel_chunks(xs.len(), 16 * 1024, |s, e| {
+        // SAFETY: chunks are disjoint ranges of `out`.
+        let dst = unsafe { std::slice::from_raw_parts_mut(base.ptr().add(s), e - s) };
+        for (d, &v) in dst.iter_mut().zip(&xs[s..e]) {
+            *d = enc.quantize(v) as i8;
+        }
+    });
+}
+
+/// Allocating convenience over [`quantize_i8_into`].
+pub(crate) fn quantize_i8(xs: &[f32], enc: &Encoding) -> Vec<i8> {
+    let mut out = vec![0i8; xs.len()];
+    quantize_i8_into(xs, enc, &mut out);
+    out
+}
+
+/// Rows per register block of the integer GEMM (shared by the i32 kernels,
+/// the packed K-panel layout, and the engine's tiled conv kernel).
+pub const GEMM_MR: usize = 4;
+
 /// A weight matrix pre-quantized to its integer grid: the reusable operand
 /// of the integer GEMM. Holds the INT values, the encoding that produced
 /// them, and the per-row integer sums (the precomputable third term of
@@ -60,6 +93,44 @@ pub struct QTensor {
     /// Per-row weight scale (`rows` entries; per-tensor repeats one value).
     scales: Vec<f32>,
     row_sums: Vec<i64>,
+    /// Row-major `i8` copy of `data`, present when every weight int fits
+    /// the i8 window (the signed symmetric grids of §2.3). Rows on the
+    /// *unsigned* symmetric grid (eq 2.8b, one-tailed data, values up to
+    /// 255) cannot narrow without changing them, so such tensors keep only
+    /// the i32 form and integer consumers widen on the fly.
+    data_i8: Option<Vec<i8>>,
+    /// Packed K-panel weight layout for the engine's tiled GEMM: rows are
+    /// grouped into blocks of [`GEMM_MR`], each block stored k-major
+    /// interleaved (`panels[blk·MR·K + k·MR + r]`), tail rows zero-padded.
+    /// The inner GEMM loop then reads one contiguous `MR`-wide stripe per
+    /// `k` instead of `MR` strided rows. Present iff `data_i8` is.
+    panels: Option<Vec<i8>>,
+}
+
+/// Build the i8 row-major copy + K-panel form of an integer weight matrix,
+/// or `None` when any value falls outside the i8 window.
+fn pack_weight_i8(rows: usize, cols: usize, data: &[i32]) -> (Option<Vec<i8>>, Option<Vec<i8>>) {
+    if data
+        .iter()
+        .any(|&v| v < i8::MIN as i32 || v > i8::MAX as i32)
+    {
+        return (None, None);
+    }
+    let flat: Vec<i8> = data.iter().map(|&v| v as i8).collect();
+    let blocks = rows.div_ceil(GEMM_MR);
+    let mut panels = vec![0i8; blocks * GEMM_MR * cols];
+    for blk in 0..blocks {
+        let i0 = blk * GEMM_MR;
+        let rb = (rows - i0).min(GEMM_MR);
+        let dst = &mut panels[blk * GEMM_MR * cols..(blk + 1) * GEMM_MR * cols];
+        for r in 0..rb {
+            let src = &flat[(i0 + r) * cols..(i0 + r + 1) * cols];
+            for (k, &v) in src.iter().enumerate() {
+                dst[k * GEMM_MR + r] = v;
+            }
+        }
+    }
+    (Some(flat), Some(panels))
 }
 
 impl QTensor {
@@ -74,6 +145,7 @@ impl QTensor {
         let row_sums = (0..rows)
             .map(|r| data[r * cols..(r + 1) * cols].iter().map(|&v| v as i64).sum())
             .collect();
+        let (data_i8, panels) = pack_weight_i8(rows, cols, &data);
         QTensor {
             rows,
             cols,
@@ -81,6 +153,8 @@ impl QTensor {
             enc: *enc,
             scales: vec![enc.scale; rows],
             row_sums,
+            data_i8,
+            panels,
         }
     }
 
@@ -115,6 +189,7 @@ impl QTensor {
         let row_sums = (0..rows)
             .map(|r| data[r * cols..(r + 1) * cols].iter().map(|&v| v as i64).sum())
             .collect();
+        let (data_i8, panels) = pack_weight_i8(rows, cols, &data);
         QTensor {
             rows,
             cols,
@@ -122,6 +197,8 @@ impl QTensor {
             enc: widest,
             scales: encs.iter().map(|e| e.scale).collect(),
             row_sums,
+            data_i8,
+            panels,
         }
     }
 
@@ -153,6 +230,76 @@ impl QTensor {
     /// walks rows directly).
     pub fn row_ints(&self, r: usize) -> &[i32] {
         &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// True when the weights also exist in packed i8 form (row-major copy
+    /// + K-panel layout). False only for tensors with rows on the unsigned
+    /// symmetric grid whose values exceed 127; integer kernels then widen
+    /// from the i32 form — bit-identical, just slower.
+    pub fn is_packed(&self) -> bool {
+        self.panels.is_some()
+    }
+
+    /// The packed K-panel stripe of row block `blk` (layout: `k·MR + r`,
+    /// `MR` = [`GEMM_MR`], tail rows zero). None when not packed.
+    pub fn panel(&self, blk: usize) -> Option<&[i8]> {
+        let k = self.cols;
+        self.panels
+            .as_ref()
+            .map(|p| &p[blk * GEMM_MR * k..(blk + 1) * GEMM_MR * k])
+    }
+
+    /// Row `r` of the i8 copy, when packed.
+    pub fn row_i8(&self, r: usize) -> Option<&[i8]> {
+        self.data_i8
+            .as_ref()
+            .map(|d| &d[r * self.cols..(r + 1) * self.cols])
+    }
+
+    /// Accumulate one [`GEMM_MR`]-row block against an i8 patch panel:
+    /// `acc[r·nrt + j] = Σ_k w_int[blk·MR + r, k] · panel[k·nrt + j]`.
+    ///
+    /// `panel` is `[K, nrt]` row-major (the engine's tiled conv gathers it
+    /// from the input image; a plain GEMM can lay out any `[K, N]` column
+    /// tile this way). Uses the packed K-panel weights when present (the
+    /// contiguous-stripe hot path), else widens the i32 rows on the fly —
+    /// both orders sum identical i32 terms, so results are bit-equal.
+    /// Zeroes `acc` itself; rows past the last real row accumulate zeros.
+    pub fn acc_tile(&self, blk: usize, panel: &[i8], nrt: usize, acc: &mut [i32]) {
+        let k = self.cols;
+        assert_eq!(panel.len(), k * nrt, "panel must be [K, nrt]");
+        assert_eq!(acc.len(), GEMM_MR * nrt, "acc must be [MR, nrt]");
+        acc.fill(0);
+        let (a0, rest) = acc.split_at_mut(nrt);
+        let (a1, rest) = rest.split_at_mut(nrt);
+        let (a2, a3) = rest.split_at_mut(nrt);
+        if let Some(pw) = self.panel(blk) {
+            for kk in 0..k {
+                let w = &pw[kk * GEMM_MR..kk * GEMM_MR + GEMM_MR];
+                let (v0, v1, v2, v3) = (w[0] as i32, w[1] as i32, w[2] as i32, w[3] as i32);
+                let prow = &panel[kk * nrt..(kk + 1) * nrt];
+                for (j, &xv) in prow.iter().enumerate() {
+                    let xv = xv as i32;
+                    a0[j] += v0 * xv;
+                    a1[j] += v1 * xv;
+                    a2[j] += v2 * xv;
+                    a3[j] += v3 * xv;
+                }
+            }
+        } else {
+            let i0 = blk * GEMM_MR;
+            let rb = (self.rows - i0).min(GEMM_MR);
+            for (r, ar) in [a0, a1, a2, a3].into_iter().enumerate().take(rb) {
+                let wr = self.row_ints(i0 + r);
+                for kk in 0..k {
+                    let v = wr[kk];
+                    let prow = &panel[kk * nrt..(kk + 1) * nrt];
+                    for (a, &xv) in ar.iter_mut().zip(prow) {
+                        *a += v * xv as i32;
+                    }
+                }
+            }
+        }
     }
 
     /// Precomputed integer sum of row `r` (eq 2.9's third term).
@@ -431,6 +578,57 @@ impl QTensor {
                     }
                     let corrected = (acc as i64 - zx * self.row_sums[oi]) as f32;
                     *o = rq.requant(rq.mult[oi] * corrected + rq.bias[oi]);
+                }
+            }
+        });
+    }
+
+    /// Packed int8 linear kernel: batch-major `x_int` of shape [N, K] in
+    /// i8, folded requantization, i8 out — the engine's zero-allocation
+    /// Linear path. Same accumulation and epilogue expression as
+    /// [`QTensor::matmul_xt_requant`], so outputs are bit-equal to that
+    /// kernel modulo the i8/i32 container.
+    pub fn matmul_xt_requant_i8(
+        &self,
+        x_int: &[i8],
+        nb: usize,
+        x_enc: &Encoding,
+        rq: &Requant,
+        out: &mut [i8],
+    ) {
+        let (m, k) = (self.rows, self.cols);
+        assert_eq!(x_int.len(), nb * k);
+        assert_eq!(out.len(), nb * m);
+        assert_eq!(rq.mult.len(), m);
+        assert_eq!(rq.bias.len(), m);
+        assert!(
+            rq.lo >= i8::MIN as i32 && rq.hi <= i8::MAX as i32,
+            "requant clamps [{}, {}] must target an i8 grid",
+            rq.lo,
+            rq.hi
+        );
+        self.check_acc_bounds(x_enc);
+        let zx = x_enc.offset as i64;
+        let base = SyncSlice::new(out.as_mut_ptr());
+        parallel_chunks(nb, 1, |r0, r1| {
+            for ni in r0..r1 {
+                let xrow = &x_int[ni * k..(ni + 1) * k];
+                // SAFETY: output rows are disjoint per `ni`.
+                let orow = unsafe { std::slice::from_raw_parts_mut(base.ptr().add(ni * m), m) };
+                for (oi, o) in orow.iter_mut().enumerate() {
+                    let mut acc: i32 = 0;
+                    if let Some(wrow) = self.row_i8(oi) {
+                        for (&wv, &xv) in wrow.iter().zip(xrow) {
+                            acc += wv as i32 * xv as i32;
+                        }
+                    } else {
+                        let wrow = self.row_ints(oi);
+                        for (&wv, &xv) in wrow.iter().zip(xrow) {
+                            acc += wv * xv as i32;
+                        }
+                    }
+                    let corrected = (acc as i64 - zx * self.row_sums[oi]) as f32;
+                    *o = rq.requant(rq.mult[oi] * corrected + rq.bias[oi]) as i8;
                 }
             }
         });
@@ -860,6 +1058,114 @@ mod tests {
             for oi in 0..5 {
                 assert_eq!(direct[ni * 5 + oi], via_t[oi * 3 + ni]);
             }
+        }
+    }
+
+    /// The packed K-panel accumulator equals a naive i32 triple loop, for
+    /// full and tail row blocks — the engine's tiled conv rides on this.
+    #[test]
+    fn acc_tile_matches_naive_accumulation() {
+        let mut rng = Rng::new(21);
+        for &(m, k, nrt) in &[(4usize, 7usize, 5usize), (6, 12, 3), (1, 3, 9), (5, 16, 1)] {
+            let w = Tensor::randn(&mut rng, &[m, k], 0.6);
+            let w_enc = Encoding::from_min_max(w.min(), w.max(), 8, true);
+            let qw = QTensor::from_matrix(&w, &w_enc);
+            assert!(qw.is_packed(), "signed symmetric weights pack");
+            let panel: Vec<i8> = (0..k * nrt).map(|i| ((i * 37 + 11) % 251) as i8).collect();
+            for blk in 0..m.div_ceil(GEMM_MR) {
+                let mut acc = vec![0i32; GEMM_MR * nrt];
+                qw.acc_tile(blk, &panel, nrt, &mut acc);
+                let i0 = blk * GEMM_MR;
+                for r in 0..(m - i0).min(GEMM_MR) {
+                    let wrow = qw.row_ints(i0 + r);
+                    for j in 0..nrt {
+                        let want: i32 = (0..k)
+                            .map(|kk| wrow[kk] * panel[kk * nrt + j] as i32)
+                            .sum();
+                        assert_eq!(acc[r * nrt + j], want, "({m},{k},{nrt}) blk{blk} r{r} j{j}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Unsigned-grid rows (values beyond i8) refuse to pack and the
+    /// fallback accumulator still matches the naive loop bit-for-bit.
+    #[test]
+    fn acc_tile_fallback_for_unpacked_weights() {
+        let w = Tensor::new(&[2, 3], vec![0.1, 0.6, 1.0, 0.9, 0.2, 0.4]);
+        let encs = vec![
+            Encoding::from_min_max(0.0, 1.0, 8, true), // unsigned 0..=255
+            Encoding::from_min_max(0.0, 1.0, 8, true),
+        ];
+        let qw = QTensor::from_matrix_per_channel(&w, &encs);
+        assert!(!qw.is_packed(), "values up to 255 cannot narrow to i8");
+        assert!(qw.panel(0).is_none() && qw.row_i8(0).is_none());
+        let panel: Vec<i8> = vec![3, -2, 7, 0, 5, -9];
+        let nrt = 2;
+        let mut acc = vec![0i32; GEMM_MR * nrt];
+        qw.acc_tile(0, &panel, nrt, &mut acc);
+        for r in 0..2 {
+            let wrow = qw.row_ints(r);
+            for j in 0..nrt {
+                let want: i32 = (0..3).map(|kk| wrow[kk] * panel[kk * nrt + j] as i32).sum();
+                assert_eq!(acc[r * nrt + j], want);
+            }
+        }
+        // Padding rows of the block stay zero.
+        assert!(acc[2 * nrt..].iter().all(|&v| v == 0));
+    }
+
+    /// The i8 linear kernel equals the i32 kernel on a re-centred grid:
+    /// shifting an unsigned activation grid by −128 moves every stored
+    /// int and the zero-point together, so the corrected accumulator
+    /// (acc − z·Σw) — and therefore every output — is identical.
+    #[test]
+    fn matmul_xt_requant_i8_matches_i32_kernel() {
+        let mut rng = Rng::new(22);
+        let (m, k, nb) = (5usize, 11usize, 4usize);
+        let w = Tensor::randn(&mut rng, &[m, k], 0.5);
+        let x = Tensor::rand_uniform(&mut rng, &[nb, k], -1.0, 3.0);
+        let w_enc = Encoding::from_min_max(w.min(), w.max(), 8, true);
+        let x_enc = Encoding::from_min_max(-1.0, 3.0, 8, false); // unsigned 0..=255
+        assert_ne!(x_enc.offset, 0);
+        // Re-centred copy of the activation grid (what engine lowering
+        // produces): same scale, ints shifted by −128.
+        let x_enc_p = Encoding {
+            offset: x_enc.offset - 128,
+            int_min: x_enc.int_min - 128,
+            int_max: x_enc.int_max - 128,
+            ..x_enc
+        };
+        let out_enc = Encoding::from_min_max(-4.0, 4.0, 8, false);
+        let out_enc_p = Encoding {
+            offset: out_enc.offset - 128,
+            int_min: out_enc.int_min - 128,
+            int_max: out_enc.int_max - 128,
+            ..out_enc
+        };
+        let qw = QTensor::from_matrix(&w, &w_enc);
+        let b: Vec<f32> = rng.normal_vec(m, 0.2);
+        let rq = |oe: &Encoding| Requant {
+            mult: (0..m)
+                .map(|r| qw.row_scale(r) * x_enc.scale / oe.scale)
+                .collect(),
+            bias: b.iter().map(|v| v / oe.scale).collect(),
+            z_out: oe.offset,
+            lo: oe.int_min,
+            hi: oe.int_max,
+        };
+        let x_i32 = quantize_ints(x.data(), &x_enc);
+        let x_i8 = quantize_i8(x.data(), &x_enc_p);
+        for (a, &b32) in x_i8.iter().zip(&x_i32) {
+            assert_eq!(*a as i32, b32 - 128, "shifted representative");
+        }
+        let mut out32 = vec![0i32; nb * m];
+        qw.matmul_xt_requant(&x_i32, nb, &x_enc, &rq(&out_enc), &mut out32);
+        let mut out8 = vec![0i8; nb * m];
+        qw.matmul_xt_requant_i8(&x_i8, nb, &x_enc_p, &rq(&out_enc_p), &mut out8);
+        for (i, (&q8, &q32)) in out8.iter().zip(&out32).enumerate() {
+            assert_eq!(q8 as i32, q32 - 128, "elem {i}: packed vs i32 route");
         }
     }
 

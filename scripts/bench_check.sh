@@ -7,8 +7,15 @@
 #     model falls below 40%, or the compression eval-score delta exceeds
 #     2 points (rust/README.md §Compression), or
 #   * BENCH_engine.json is missing, batched int8 engine throughput falls
-#     below 1.5x the per-request fp32 forward, or engine batch-8 falls
-#     below 2x batch-1 samples/sec (rust/README.md §Engine).
+#     below 1.5x the per-request fp32 forward, engine batch-8 falls
+#     below 2x batch-1 samples/sec, or the packed engine performs ANY
+#     steady-state heap allocation per forward (rust/README.md §Engine), or
+#   * batch-8 engine throughput regresses below 0.9x the previous run
+#     recorded in BENCH_history.jsonl (the perf ratchet).
+#
+# On success, appends this run's headline numbers as one JSON line to
+# BENCH_history.jsonl at the repo root (append-only trajectory; failed
+# runs are never recorded).
 set -euo pipefail
 
 # Resolve the repo root from the script's own location so the gate runs
@@ -74,10 +81,88 @@ if speedup < 1.5:
     )
 if scaling < 2.0:
     sys.exit(f"bench_check: engine batch-8/batch-1 scaling {scaling:.2f}x < 2.0x")
+
+# Zero-allocation gate: the packed data path (arena plan + worker scratch)
+# must not touch the heap in steady state. The bench counts through a
+# wrapping GlobalAlloc; any nonzero value is a regression.
+allocs = e.get("allocs_per_forward_b8")
+if not isinstance(allocs, (int, float)):
+    sys.exit("bench_check: BENCH_engine.json lacks allocs_per_forward_b8")
+if allocs != 0:
+    sys.exit(
+        f"bench_check: {allocs:.2f} steady-state allocations per forward (must be 0)"
+    )
+
 print(
     f"bench_check OK: engine batched {speedup:.2f}x fp32 (>= 1.5), "
     f"batch scaling {scaling:.2f}x (>= 2.0), "
     f"vs quantsim {fmt(e.get('engine_speedup_vs_quantsim_b8'))}, "
+    f"allocs/forward {allocs:g} (= 0), "
+    f"arena peak {fmt(e.get('arena_peak_bytes_b8'), ' B')}, "
     f"max step deviation {fmt(e.get('max_step_deviation'), '')}"
 )
+
+# --- Throughput ratchet against BENCH_history.jsonl -----------------------
+# Every successful gate run appends one JSON line; the next run must keep
+# batch-8 engine throughput >= 0.9x the last recorded value. The first run
+# (empty/missing history) just starts the trajectory.
+import os
+import time
+
+hist_path = "BENCH_history.jsonl"
+prev = None
+if os.path.exists(hist_path):
+    with open(hist_path) as f:
+        lines = [ln for ln in f if ln.strip()]
+    if lines:
+        try:
+            prev = json.loads(lines[-1])
+        except json.JSONDecodeError:
+            sys.exit(f"bench_check: {hist_path} last line is not valid JSON")
+
+cur = e.get("engine_b8_sps")
+# Entries are host-dependent: only ratchet against a previous run with the
+# same worker-thread count (a laptop→CI or AIMET_THREADS change is not a
+# code regression). A mismatched entry still gets superseded by this run.
+comparable = (
+    prev is not None
+    and isinstance(prev.get("engine_b8_sps"), (int, float))
+    and prev.get("threads") == e.get("threads")
+)
+if comparable:
+    floor = 0.9 * prev["engine_b8_sps"]
+    if not isinstance(cur, (int, float)) or cur < floor:
+        sys.exit(
+            f"bench_check: engine b8 throughput {cur} sps fell below 0.9x the "
+            f"previous run ({prev['engine_b8_sps']:.1f} sps; floor {floor:.1f})"
+        )
+    print(
+        f"bench_check OK: ratchet {cur:.1f} sps vs previous "
+        f"{prev['engine_b8_sps']:.1f} sps (floor {floor:.1f})"
+    )
+elif prev is not None:
+    print(
+        "bench_check: previous history entry has a different thread count "
+        f"({prev.get('threads')} vs {e.get('threads')}) — ratchet skipped, "
+        "recording this run as the new baseline"
+    )
+else:
+    print("bench_check: no prior BENCH_history.jsonl entry — starting the ratchet")
+
+entry = {
+    "ts": int(time.time()),
+    "engine_b1_sps": e.get("engine_b1_sps"),
+    "engine_b8_sps": e.get("engine_b8_sps"),
+    "engine_batched_speedup_vs_fp32": speedup,
+    "serve_b8_sps": e.get("serve_b8_sps"),
+    "allocs_per_forward_b8": allocs,
+    "arena_peak_bytes_b8": e.get("arena_peak_bytes_b8"),
+    "max_step_deviation": e.get("max_step_deviation"),
+    "quantsim_over_fp32": ratio,
+    "mac_reduction_pct": reduction,
+    "threads": e.get("threads"),
+}
+with open(hist_path, "a") as f:
+    f.write(json.dumps(entry) + "\n")
+print(f"bench_check: appended run to {hist_path}")
 EOF

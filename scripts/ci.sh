@@ -1,14 +1,22 @@
 #!/usr/bin/env bash
-# One-stop CI gate: tier-1 correctness (build + tests) followed by the
-# perf/compression/engine bench gates. Runnable from any cwd:
+# One-stop CI gate: lint hygiene (fmt + clippy), tier-1 correctness
+# (build + tests), then the perf/compression/engine bench gates.
+# Runnable from any cwd:
 #
 #   scripts/ci.sh
 #
-# Exit code is nonzero on the first failing stage.
+# Exit code is nonzero on the first failing stage. Lints run FIRST so a
+# kernel refactor cannot land with silent formatting or clippy drift —
+# the hot-path modules lean on unsafe disjoint-write patterns where
+# sloppy edits are expensive to review by eye.
 set -euo pipefail
 
 SCRIPT_DIR="$(cd "$(dirname "${BASH_SOURCE[0]}")" && pwd)"
 cd "$SCRIPT_DIR/.."
+
+echo "== ci: lint (cargo fmt --check && cargo clippy -- -D warnings) =="
+(cd rust && cargo fmt --check)
+(cd rust && cargo clippy --all-targets -- -D warnings)
 
 echo "== ci: tier-1 (cargo build --release && cargo test -q) =="
 (cd rust && cargo build --release)
