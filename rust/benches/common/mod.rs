@@ -35,3 +35,36 @@ pub fn median_secs(iters: usize, mut f: impl FnMut()) -> f64 {
     times.sort_by(|a, b| a.partial_cmp(b).unwrap());
     times[times.len() / 2]
 }
+
+/// Effective GOPS of the packed-i8 GEMM (`QTensor::gemm_requant_i8`: the
+/// MR×NR SIMD microkernel + vectorized requant epilogue) at one (M, K, N)
+/// — the GEMM-only kernel number shared by the hotpath and engine
+/// benches so the two reports can never diverge in setup.
+pub fn gemm_i8_gops(m: usize, k: usize, n: usize, seed: u64) -> f64 {
+    use aimet::quant::{Encoding, QTensor, Requant};
+    use aimet::rng::Rng;
+    use aimet::tensor::Tensor;
+    let mut rng = Rng::new(seed);
+    let wm = Tensor::randn(&mut rng, &[m, k], 0.5);
+    let w_enc = Encoding::from_min_max(wm.min(), wm.max(), 8, true);
+    let qw = QTensor::from_matrix(&wm, &w_enc);
+    // Engine-style packed (signed-window) activation/output grids.
+    let x_enc = Encoding::from_min_max(-2.0, 2.0, 8, false).signed_window();
+    let out_enc = Encoding::from_min_max(-8.0, 8.0, 8, false).signed_window();
+    let x8: Vec<i8> = (0..k * n).map(|i| ((i * 37 + 11) % 256) as u8 as i8).collect();
+    let rq = Requant {
+        mult: (0..m)
+            .map(|r| qw.row_scale(r) * x_enc.scale / out_enc.scale)
+            .collect(),
+        bias: vec![0.0; m],
+        z_out: out_enc.offset,
+        lo: out_enc.int_min,
+        hi: out_enc.int_max,
+    };
+    let mut out_i8 = vec![0i8; m * n];
+    let t = median_secs(15, || {
+        qw.gemm_requant_i8(&x8, n, &x_enc, &rq, &mut out_i8);
+        std::hint::black_box(&out_i8);
+    });
+    2.0 * (m * k * n) as f64 / t / 1e9
+}

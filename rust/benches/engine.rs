@@ -78,6 +78,17 @@ fn main() {
     report.set("integer_only", Json::Bool(qm.is_integer_only()));
     report.set("fully_packed", Json::Bool(qm.is_fully_packed()));
 
+    // The SIMD dispatch tier plus a tier-attributed GEMM-only number
+    // (256^3 packed i8 GEMM, same harness as benches/hotpath.rs): the
+    // ratchet in scripts/bench_check.sh only compares runs whose tier
+    // matches, and kernel regressions stay visible independently of
+    // graph overhead.
+    let tier = aimet::quant::active_tier();
+    report.set("simd_tier", Json::from(tier.as_str()));
+    let gemm_gops = common::gemm_i8_gops(256, 256, 256, 3400);
+    println!("simd tier {tier}: i8 GEMM 256^3 at {gemm_gops:.2} GOP/s");
+    report.set("gemm_gops", Json::from(gemm_gops));
+
     let (x1, _) = data.batch(0, 1);
     let (x8, _) = data.batch(0, 8);
 

@@ -164,6 +164,23 @@ fn main() {
     report.set("int_gemm_speedup_vs_naive", Json::from(t_naive / t_blocked));
     report.set("int_gemm_gops", Json::from(gops));
 
+    // GEMM-only microbench of the packed i8 tier (acc_tile microkernel +
+    // vectorized requant epilogue via gemm_requant_i8), independent of
+    // graph overhead: a square 256^3 and a skinny 64x1024x64 shape, as
+    // effective GOPS under the active dispatch tier. Kernel regressions
+    // show up here even when engine wall time is dominated elsewhere.
+    let tier = aimet::quant::active_tier();
+    println!("simd dispatch tier: {tier}");
+    report.set("simd_tier", Json::from(tier.as_str()));
+    for (key, m, k, n) in [
+        ("gemm_i8_256_gops", 256usize, 256usize, 256usize),
+        ("gemm_i8_skinny_gops", 64, 1024, 64),
+    ] {
+        let g = common::gemm_i8_gops(m, k, n, 3210);
+        println!("i8 GEMM {m}x{k}x{n} [{tier}]: {g:.2} GOP/s");
+        report.set(key, Json::from(g));
+    }
+
     // Calibration data generation (should be negligible).
     let t_data = common::median_secs(9, || {
         std::hint::black_box(TaskData::new(model, 9).unwrap().batch(3, 16));

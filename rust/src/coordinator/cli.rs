@@ -444,9 +444,14 @@ fn cmd_infer(args: &Args) -> Result<i32, String> {
     }
     let (model, qm, sim, g, data) = lowered_model(args)?;
     println!("{}", qm.describe());
-    // The static arena plan the packed engine executes against.
+    // The static arena plan the packed engine executes against, plus the
+    // SIMD tier its kernels dispatch to.
     let (x0, _) = data.batch(50_000, batch);
-    println!("{}", qm.memory_plan(x0.shape()).describe());
+    println!(
+        "{} | simd tier {}",
+        qm.memory_plan(x0.shape()).describe(),
+        crate::quant::simd::active_tier()
+    );
 
     let out_enc = *qm.output_encoding();
     let mut scratch = crate::engine::Scratch::new();

@@ -52,6 +52,7 @@ pub use serve::{run_serve_bench, BatchClient, BatchConfig, BatchServer, ServeRep
 
 use crate::graph::{lstm_forward, Input, Op};
 use crate::pool::{parallel_chunks, with_worker_scratch, SyncSlice};
+use crate::quant::simd;
 use crate::quant::{quantize_i8, quantize_i8_into, requantize_value, Encoding, QTensor, Requant, GEMM_MR};
 use crate::quantsim::QuantizationSimModel;
 use crate::tensor::{Conv2dSpec, Tensor};
@@ -158,32 +159,37 @@ impl<'a> IView<'a> {
         ITensor::new(self.shape.to_vec(), self.data.to_vec(), self.enc)
     }
 
-    /// De-quantize to real values (eq 2.6).
+    /// De-quantize to real values (eq 2.6), through the vectorized
+    /// dequantize epilogue (bit-identical to the scalar expression).
     pub fn dequantize(&self) -> Tensor {
-        let z = self.enc.offset;
-        let s = self.enc.scale;
-        Tensor::new(
-            self.shape,
-            self.data.iter().map(|&q| s * (q as i32 - z) as f32).collect(),
-        )
+        let mut out = vec![0.0f32; self.data.len()];
+        simd::dequant_i8_to_f32(
+            simd::active_tier(),
+            self.data,
+            self.enc.offset,
+            self.enc.scale,
+            &mut out,
+        );
+        Tensor::new(self.shape, out)
     }
 
-    /// De-quantize rows `r0..r1` along axis 0 (the serving reply path).
+    /// De-quantize rows `r0..r1` along axis 0 (the serving reply path),
+    /// vectorized like [`IView::dequantize`].
     pub fn dequantize_rows(&self, r0: usize, r1: usize) -> Tensor {
         let rows = self.shape[0];
         assert!(r0 <= r1 && r1 <= rows, "rows {r0}..{r1} of {rows}");
         let stride = if rows == 0 { 0 } else { self.data.len() / rows };
-        let z = self.enc.offset;
-        let s = self.enc.scale;
         let mut shape = self.shape.to_vec();
         shape[0] = r1 - r0;
-        Tensor::new(
-            &shape,
-            self.data[r0 * stride..r1 * stride]
-                .iter()
-                .map(|&q| s * (q as i32 - z) as f32)
-                .collect(),
-        )
+        let mut out = vec![0.0f32; (r1 - r0) * stride];
+        simd::dequant_i8_to_f32(
+            simd::active_tier(),
+            &self.data[r0 * stride..r1 * stride],
+            self.enc.offset,
+            self.enc.scale,
+            &mut out,
+        );
+        Tensor::new(&shape, out)
     }
 }
 
@@ -377,15 +383,7 @@ fn packed_encoding(e: &Encoding, what: &str) -> Result<Encoding, String> {
             e.bw
         ));
     }
-    if e.int_min >= i8::MIN as i32 && e.int_max <= i8::MAX as i32 {
-        return Ok(*e);
-    }
-    Ok(Encoding {
-        offset: e.offset - 128,
-        int_min: e.int_min - 128,
-        int_max: e.int_max - 128,
-        ..*e
-    })
+    Ok(e.signed_window())
 }
 
 /// Lower a calibrated quantization sim into a [`QuantizedModel`].
@@ -863,12 +861,14 @@ impl QuantizedModel {
             .filter(|n| matches!(n.op, QOp::LstmF32 { .. }))
             .count();
         format!(
-            "lowered {} nodes: {} fused activations, {} f32 islands, input {}b, output {}b{}",
+            "lowered {} nodes: {} fused activations, {} f32 islands, input {}b, output {}b, \
+             simd {}{}",
             self.nodes.len(),
             self.fused_activations(),
             islands,
             self.input_enc.bw,
             self.output_encoding().bw,
+            simd::active_tier(),
             if islands == 0 { " — integer-only" } else { "" }
         )
     }
@@ -1063,6 +1063,7 @@ fn conv_tiled(
     let tiles_per = inner.div_ceil(CONV_NR).max(1);
     let blocks = m.div_ceil(GEMM_MR);
     let xd = x.data();
+    let tier = simd::active_tier();
     let base = SyncSlice::new(out.as_mut_ptr());
     parallel_chunks(n * tiles_per, 1, |u0, u1| {
         with_worker_scratch(|ws| {
@@ -1075,15 +1076,12 @@ fn conv_tiled(
                 gather_panel(xd, c, h, w, ni, p0, nrt, kh, kw, spec, zq, ow, panel);
                 for blk in 0..blocks {
                     let acc = &mut acc[..GEMM_MR * nrt];
-                    qw.acc_tile(blk, panel, nrt, acc);
+                    qw.acc_tile_tier(tier, blk, panel, nrt, acc);
                     let i0 = blk * GEMM_MR;
                     let rb = (m - i0).min(GEMM_MR);
                     for r in 0..rb {
                         let mi = i0 + r;
                         let corr = zx64 * qw.row_sum(mi);
-                        let mult = rq.mult[mi];
-                        let bq = rq.bias[mi];
-                        let arow = &acc[r * nrt..(r + 1) * nrt];
                         // SAFETY: (sample, row, tile) destinations are
                         // disjoint across work units and rows.
                         let dst = unsafe {
@@ -1092,9 +1090,17 @@ fn conv_tiled(
                                 nrt,
                             )
                         };
-                        for (d, &a) in dst.iter_mut().zip(arow) {
-                            *d = rq.requant(mult * (a as i64 - corr) as f32 + bq) as i8;
-                        }
+                        simd::requant_i32_to_i8(
+                            tier,
+                            &acc[r * nrt..(r + 1) * nrt],
+                            corr,
+                            rq.mult[mi],
+                            rq.bias[mi],
+                            rq.z_out,
+                            rq.lo,
+                            rq.hi,
+                            dst,
+                        );
                     }
                 }
             }

@@ -12,7 +12,9 @@
 //! (one memory plan per distinct coalesced batch size) every forward runs
 //! against the cached arena plan and the engine allocates nothing. The
 //! batch input is likewise assembled in a reused buffer, so steady-state
-//! per-request cost outside the kernels is the reply tensor itself.
+//! per-request cost outside the kernels is the reply tensor itself —
+//! produced by `IView::dequantize_rows`, which runs the SIMD tier's
+//! vectorized dequantize epilogue (`quant::simd`).
 //!
 //! Batching is where the integer engine's throughput comes from: a
 //! batch-N conv GEMM has N× the patch columns of a batch-1 call, so the

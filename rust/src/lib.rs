@@ -18,6 +18,11 @@
 //! datasets ([`data`]), metrics, and a PJRT runtime ([`runtime`]) that
 //! executes JAX/Pallas programs AOT-lowered to HLO text at build time.
 //!
+//! The integer hot path runs on a runtime-dispatched SIMD kernel tier
+//! ([`quant::simd`]: AVX2 / SSE4.1 / NEON / scalar, every variant
+//! bit-identical to the scalar reference; `AIMET_FORCE_SCALAR=1` pins
+//! the reference tier).
+//!
 //! Python never runs on the request path: `make artifacts` lowers the L2
 //! JAX models (which call the L1 Pallas kernels) once, and everything else
 //! is this crate.

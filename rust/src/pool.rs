@@ -167,6 +167,11 @@ fn pool() -> &'static PoolInner {
 }
 
 fn worker_loop(pool: &'static PoolInner) {
+    // Settle the SIMD dispatch tier before this lane ever runs a kernel:
+    // the OnceLock is process-wide, so after this (and the submitter's own
+    // first lookup) no kernel pays feature detection per call — every lane
+    // reads an initialized value.
+    let _ = crate::quant::simd::active_tier();
     loop {
         let job: *const Job = {
             let mut q = pool.state.lock().unwrap();

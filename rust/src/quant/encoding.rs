@@ -128,6 +128,25 @@ impl Encoding {
         self.bw >= 32
     }
 
+    /// Re-centre an unsigned 8-bit grid onto the signed i8 window — the
+    /// packing convention of the int8 engine (and of the packed-kernel
+    /// tests/benches). `offset`, `int_min` and `int_max` shift together
+    /// by −128, so every *real* quantity — scale, grid limits,
+    /// dequantized values — is unchanged; only the integer representative
+    /// moves. Grids already inside the i8 window return unchanged. The
+    /// caller is responsible for ensuring the grid spans ≤ 8 bits.
+    pub fn signed_window(&self) -> Encoding {
+        if self.int_min >= i8::MIN as i32 && self.int_max <= i8::MAX as i32 {
+            return *self;
+        }
+        Encoding {
+            offset: self.offset - 128,
+            int_min: self.int_min - 128,
+            int_max: self.int_max - 128,
+            ..*self
+        }
+    }
+
     /// Quantize one value to the integer grid (eq 2.4 / 2.8).
     #[inline]
     pub fn quantize(&self, x: f32) -> i32 {

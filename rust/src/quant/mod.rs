@@ -6,6 +6,7 @@
 mod analyzer;
 mod encoding;
 mod qops;
+pub mod simd;
 
 pub use analyzer::{
     per_channel_weight_encodings, weight_encoding, EncodingAnalyzer, Histogram, SQNR_GAMMA,
@@ -13,8 +14,9 @@ pub use analyzer::{
 pub use encoding::{Encoding, QuantScheme};
 pub use qops::{
     quantized_conv2d, quantized_linear, quantized_matmul_i32, quantized_matmul_i32_ref,
-    requantize_value, QTensor, Requant, GEMM_MR,
+    requantize_value, QTensor, Requant, GEMM_MR, GEMM_NR,
 };
+pub use simd::{active_tier, available_tiers, SimdTier};
 pub(crate) use qops::{quantize_i8, quantize_i8_into, quantize_ints};
 
 use crate::tensor::Tensor;

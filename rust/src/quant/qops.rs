@@ -16,8 +16,9 @@
 //! reference the property tests and the hotpath bench compare against.
 
 use super::encoding::Encoding;
+use super::simd::{self, SimdTier};
 use super::Quantizer;
-use crate::pool::{parallel_chunks, SyncSlice};
+use crate::pool::{parallel_chunks, with_worker_scratch, SyncSlice};
 use crate::tensor::{Conv2dSpec, Tensor};
 
 /// Quantize a float slice to its integer grid, in parallel for large
@@ -66,7 +67,22 @@ pub(crate) fn quantize_i8(xs: &[f32], enc: &Encoding) -> Vec<i8> {
 
 /// Rows per register block of the integer GEMM (shared by the i32 kernels,
 /// the packed K-panel layout, and the engine's tiled conv kernel).
+///
+/// Retuned for the SIMD microkernel tier and kept at 4: with
+/// [`GEMM_NR`] = 16 columns the accumulator tile is 4×16 i32 = 8×256-bit
+/// registers on AVX2 (half the register file, leaving room for the
+/// activation/weight operands) and 16×128-bit on NEON (half of its 32).
+/// Widening MR would spill accumulators; shrinking it wastes the
+/// activation loads that are shared across rows.
 pub const GEMM_MR: usize = 4;
+
+/// Columns per register block of the SIMD GEMM microkernel: each
+/// [`GEMM_MR`]-row weight block is multiplied against 16-column slabs of
+/// the activation panel with the full MR×NR i32 accumulator tile held in
+/// registers (AVX2/NEON; the SSE4.1 tier runs two 8-column half-slabs).
+/// Sub-slab column tails fall back to the scalar loop — bit-identical,
+/// just unvectorized.
+pub const GEMM_NR: usize = 16;
 
 /// A weight matrix pre-quantized to its integer grid: the reusable operand
 /// of the integer GEMM. Holds the INT values, the encoding that produced
@@ -105,20 +121,43 @@ pub struct QTensor {
     /// The inner GEMM loop then reads one contiguous `MR`-wide stripe per
     /// `k` instead of `MR` strided rows. Present iff `data_i8` is.
     panels: Option<Vec<i8>>,
+    /// K-pair broadcast form of `panels` for the x86 `pmaddwd`
+    /// microkernel: per block, per even `k`, [`GEMM_MR`] i32 entries each
+    /// holding the row's weights for `k` (low i16) and `k+1` (high i16,
+    /// zero past an odd K). One `vpbroadcastd` then feeds the pairwise
+    /// widening multiply directly. Present iff `panels` is — and only on
+    /// x86-64; the NEON and scalar kernels read the stripe panel, so
+    /// other targets skip this copy.
+    panels_pairs: Option<Vec<i32>>,
 }
 
-/// Build the i8 row-major copy + K-panel form of an integer weight matrix,
-/// or `None` when any value falls outside the i8 window.
-fn pack_weight_i8(rows: usize, cols: usize, data: &[i32]) -> (Option<Vec<i8>>, Option<Vec<i8>>) {
+/// Build the i8 row-major copy + the two K-panel forms (i8 stripes and
+/// the x86 k-pair broadcast layout) of an integer weight matrix, or
+/// `None`s when any value falls outside the i8 window.
+#[allow(clippy::type_complexity)]
+fn pack_weight_i8(
+    rows: usize,
+    cols: usize,
+    data: &[i32],
+) -> (Option<Vec<i8>>, Option<Vec<i8>>, Option<Vec<i32>>) {
     if data
         .iter()
         .any(|&v| v < i8::MIN as i32 || v > i8::MAX as i32)
     {
-        return (None, None);
+        return (None, None, None);
     }
     let flat: Vec<i8> = data.iter().map(|&v| v as i8).collect();
     let blocks = rows.div_ceil(GEMM_MR);
+    let kp_n = cols.div_ceil(2);
     let mut panels = vec![0i8; blocks * GEMM_MR * cols];
+    // The k-pair broadcast form only feeds the x86 `pmaddwd` kernels —
+    // NEON and scalar read the stripe panel — so other targets skip the
+    // extra ~2·M·K bytes per weight tensor.
+    let mut pairs = if cfg!(target_arch = "x86_64") {
+        Some(vec![0i32; blocks * GEMM_MR * kp_n])
+    } else {
+        None
+    };
     for blk in 0..blocks {
         let i0 = blk * GEMM_MR;
         let rb = (rows - i0).min(GEMM_MR);
@@ -128,9 +167,21 @@ fn pack_weight_i8(rows: usize, cols: usize, data: &[i32]) -> (Option<Vec<i8>>, O
             for (k, &v) in src.iter().enumerate() {
                 dst[k * GEMM_MR + r] = v;
             }
+            if let Some(pairs) = pairs.as_mut() {
+                let pdst = &mut pairs[blk * GEMM_MR * kp_n..(blk + 1) * GEMM_MR * kp_n];
+                for kp in 0..kp_n {
+                    let w0 = src[2 * kp] as i16 as u16 as u32;
+                    let w1 = if 2 * kp + 1 < cols {
+                        src[2 * kp + 1] as i16 as u16 as u32
+                    } else {
+                        0
+                    };
+                    pdst[kp * GEMM_MR + r] = (w0 | (w1 << 16)) as i32;
+                }
+            }
         }
     }
-    (Some(flat), Some(panels))
+    (Some(flat), Some(panels), pairs)
 }
 
 impl QTensor {
@@ -145,7 +196,7 @@ impl QTensor {
         let row_sums = (0..rows)
             .map(|r| data[r * cols..(r + 1) * cols].iter().map(|&v| v as i64).sum())
             .collect();
-        let (data_i8, panels) = pack_weight_i8(rows, cols, &data);
+        let (data_i8, panels, panels_pairs) = pack_weight_i8(rows, cols, &data);
         QTensor {
             rows,
             cols,
@@ -155,6 +206,7 @@ impl QTensor {
             row_sums,
             data_i8,
             panels,
+            panels_pairs,
         }
     }
 
@@ -189,7 +241,7 @@ impl QTensor {
         let row_sums = (0..rows)
             .map(|r| data[r * cols..(r + 1) * cols].iter().map(|&v| v as i64).sum())
             .collect();
-        let (data_i8, panels) = pack_weight_i8(rows, cols, &data);
+        let (data_i8, panels, panels_pairs) = pack_weight_i8(rows, cols, &data);
         QTensor {
             rows,
             cols,
@@ -199,6 +251,7 @@ impl QTensor {
             row_sums,
             data_i8,
             panels,
+            panels_pairs,
         }
     }
 
@@ -249,6 +302,16 @@ impl QTensor {
             .map(|p| &p[blk * GEMM_MR * k..(blk + 1) * GEMM_MR * k])
     }
 
+    /// The k-pair broadcast panel of row block `blk` (layout: `kp·MR + r`,
+    /// each entry two adjacent k's weights as i16 halves of one i32).
+    /// None when not packed.
+    fn pair_panel(&self, blk: usize) -> Option<&[i32]> {
+        let kp_n = self.cols.div_ceil(2);
+        self.panels_pairs
+            .as_ref()
+            .map(|p| &p[blk * GEMM_MR * kp_n..(blk + 1) * GEMM_MR * kp_n])
+    }
+
     /// Row `r` of the i8 copy, when packed.
     pub fn row_i8(&self, r: usize) -> Option<&[i8]> {
         self.data_i8
@@ -261,34 +324,55 @@ impl QTensor {
     ///
     /// `panel` is `[K, nrt]` row-major (the engine's tiled conv gathers it
     /// from the input image; a plain GEMM can lay out any `[K, N]` column
-    /// tile this way). Uses the packed K-panel weights when present (the
-    /// contiguous-stripe hot path), else widens the i32 rows on the fly —
-    /// both orders sum identical i32 terms, so results are bit-equal.
-    /// Zeroes `acc` itself; rows past the last real row accumulate zeros.
+    /// tile this way). Packed weights run the runtime-dispatched MR×NR
+    /// SIMD microkernel ([`super::simd`]); unpacked (one-tailed unsigned)
+    /// rows widen the i32 form on the fly — every path sums identical i32
+    /// terms, so results are bit-equal. Zeroes `acc` itself; rows past the
+    /// last real row accumulate zeros.
+    ///
+    /// This public entry carries hard shape asserts — the SIMD kernels
+    /// behind it write through raw pointers, so a safe `pub` fn must
+    /// reject bad shapes in release builds too. The engine's
+    /// pre-validated conv loop runs the crate-internal
+    /// [`QTensor::acc_tile_tier`] (debug-asserts only), so the hot path
+    /// carries no per-tile branch cost.
     pub fn acc_tile(&self, blk: usize, panel: &[i8], nrt: usize, acc: &mut [i32]) {
-        let k = self.cols;
-        assert_eq!(panel.len(), k * nrt, "panel must be [K, nrt]");
+        assert!(
+            blk < self.rows.div_ceil(GEMM_MR),
+            "block {blk} out of range for {} rows",
+            self.rows
+        );
+        assert_eq!(panel.len(), self.cols * nrt, "panel must be [K, nrt]");
         assert_eq!(acc.len(), GEMM_MR * nrt, "acc must be [MR, nrt]");
+        self.acc_tile_tier(simd::active_tier(), blk, panel, nrt, acc);
+    }
+
+    /// Tier-explicit unchecked [`QTensor::acc_tile`]: the engine's tiled
+    /// loops hoist the dispatch lookup and have already validated shapes,
+    /// so only `debug_assert!`s remain here. Crate-internal on purpose —
+    /// callers must guarantee `panel.len() == K·nrt`,
+    /// `acc.len() == GEMM_MR·nrt` and `blk` in range, or release builds
+    /// read/write out of bounds.
+    pub(crate) fn acc_tile_tier(
+        &self,
+        tier: SimdTier,
+        blk: usize,
+        panel: &[i8],
+        nrt: usize,
+        acc: &mut [i32],
+    ) {
+        let k = self.cols;
+        debug_assert_eq!(panel.len(), k * nrt, "panel must be [K, nrt]");
+        debug_assert_eq!(acc.len(), GEMM_MR * nrt, "acc must be [MR, nrt]");
         acc.fill(0);
-        let (a0, rest) = acc.split_at_mut(nrt);
-        let (a1, rest) = rest.split_at_mut(nrt);
-        let (a2, a3) = rest.split_at_mut(nrt);
         if let Some(pw) = self.panel(blk) {
-            for kk in 0..k {
-                let w = &pw[kk * GEMM_MR..kk * GEMM_MR + GEMM_MR];
-                let (v0, v1, v2, v3) = (w[0] as i32, w[1] as i32, w[2] as i32, w[3] as i32);
-                let prow = &panel[kk * nrt..(kk + 1) * nrt];
-                for (j, &xv) in prow.iter().enumerate() {
-                    let xv = xv as i32;
-                    a0[j] += v0 * xv;
-                    a1[j] += v1 * xv;
-                    a2[j] += v2 * xv;
-                    a3[j] += v3 * xv;
-                }
-            }
+            simd::acc_tile_dispatch(tier, pw, self.pair_panel(blk), panel, k, nrt, acc);
         } else {
             let i0 = blk * GEMM_MR;
             let rb = (self.rows - i0).min(GEMM_MR);
+            let (a0, rest) = acc.split_at_mut(nrt);
+            let (a1, rest) = rest.split_at_mut(nrt);
+            let (a2, a3) = rest.split_at_mut(nrt);
             for (r, ar) in [a0, a1, a2, a3].into_iter().enumerate().take(rb) {
                 let wr = self.row_ints(i0 + r);
                 for kk in 0..k {
@@ -406,6 +490,7 @@ impl QTensor {
         let m = self.rows;
         let zx = x_enc.offset as i64;
         let blocks = m.div_ceil(4);
+        let tier = simd::active_tier();
         let base = SyncSlice::new(out.as_mut_ptr());
         parallel_chunks(blocks, 1, |b0, b1| {
             // Per-worker accumulator scratch, reused across blocks.
@@ -416,8 +501,9 @@ impl QTensor {
                 let accs = &mut acc[..rb * n];
                 self.acc_block(x_int, n, i0, rb, accs);
                 // Requantize + scatter (eq 2.9: subtract z_x·Σw, rescale,
-                // add bias). Same FP expression as the naive reference, so
-                // results are bit-exact.
+                // add bias). The vectorized epilogue keeps the exact FP
+                // expression of the naive reference, so results are
+                // bit-exact.
                 for r in 0..rb {
                     let mi = i0 + r;
                     let corr = zx * self.row_sums[mi];
@@ -430,10 +516,8 @@ impl QTensor {
                         let dst = unsafe {
                             std::slice::from_raw_parts_mut(base.ptr().add(dst_off), inner)
                         };
-                        for (d, &a) in dst.iter_mut().zip(&arow[seg * inner..(seg + 1) * inner]) {
-                            let corrected = a as i64 - corr;
-                            *d = s * corrected as f32 + b;
-                        }
+                        let seg_acc = &arow[seg * inner..(seg + 1) * inner];
+                        simd::scale_i32_to_f32(tier, seg_acc, corr, s, b, dst);
                     }
                 }
             }
@@ -511,10 +595,24 @@ impl QTensor {
         assert_eq!(x_int.len(), self.cols * n);
         assert_eq!(rq.mult.len(), self.rows);
         assert_eq!(rq.bias.len(), self.rows);
+        // The vectorized epilogue clamps in the float domain, which only
+        // matches the scalar rte-then-clamp when the shifted bounds are
+        // f32-exact; every real grid (≤ 16-bit) is, but a safe pub fn must
+        // reject out-of-contract windows in release builds too (O(1)).
+        let lo_c = rq.lo as i64 - rq.z_out as i64;
+        let hi_c = rq.hi as i64 - rq.z_out as i64;
+        assert!(
+            lo_c.unsigned_abs() <= 1 << 24 && hi_c.unsigned_abs() <= 1 << 24,
+            "requant clamp window [{}, {}] (z_out {}) must be f32-exact (|bound − z_out| ≤ 2^24)",
+            rq.lo,
+            rq.hi,
+            rq.z_out
+        );
         self.check_acc_bounds(x_enc);
         let m = self.rows;
         let zx = x_enc.offset as i64;
         let blocks = m.div_ceil(4);
+        let tier = simd::active_tier();
         let base = SyncSlice::new(out.as_mut_ptr());
         parallel_chunks(blocks, 1, |b0, b1| {
             let mut acc = vec![0i32; 4 * n];
@@ -535,10 +633,10 @@ impl QTensor {
                         let dst = unsafe {
                             std::slice::from_raw_parts_mut(base.ptr().add(dst_off), inner)
                         };
-                        for (d, &a) in dst.iter_mut().zip(&arow[seg * inner..(seg + 1) * inner]) {
-                            let corrected = (a as i64 - corr) as f32;
-                            *d = rq.requant(mult * corrected + bq);
-                        }
+                        let seg_acc = &arow[seg * inner..(seg + 1) * inner];
+                        simd::requant_i32_to_i32(
+                            tier, seg_acc, corr, mult, bq, rq.z_out, rq.lo, rq.hi, dst,
+                        );
                     }
                 }
             }
@@ -609,6 +707,7 @@ impl QTensor {
         );
         self.check_acc_bounds(x_enc);
         let zx = x_enc.offset as i64;
+        let tier = simd::active_tier();
         let base = SyncSlice::new(out.as_mut_ptr());
         parallel_chunks(nb, 1, |r0, r1| {
             for ni in r0..r1 {
@@ -616,21 +715,83 @@ impl QTensor {
                 // SAFETY: output rows are disjoint per `ni`.
                 let orow = unsafe { std::slice::from_raw_parts_mut(base.ptr().add(ni * m), m) };
                 for (oi, o) in orow.iter_mut().enumerate() {
-                    let mut acc: i32 = 0;
-                    if let Some(wrow) = self.row_i8(oi) {
-                        for (&wv, &xv) in wrow.iter().zip(xrow) {
-                            acc += wv as i32 * xv as i32;
-                        }
+                    let acc: i32 = if let Some(wrow) = self.row_i8(oi) {
+                        simd::dot_i8(tier, wrow, xrow)
                     } else {
                         let wrow = self.row_ints(oi);
+                        let mut acc = 0i32;
                         for (&wv, &xv) in wrow.iter().zip(xrow) {
                             acc += wv * xv as i32;
                         }
-                    }
+                        acc
+                    };
                     let corrected = (acc as i64 - zx * self.row_sums[oi]) as f32;
                     *o = rq.requant(rq.mult[oi] * corrected + rq.bias[oi]) as i8;
                 }
             }
+        });
+    }
+
+    /// Packed int8 GEMM: `x_int` is a `[K, N]` row-major i8 panel (the
+    /// activation-major layout of [`QTensor::acc_tile`]), folded
+    /// requantization, i8 out as `[M, N]`. Runs the MR×NR SIMD microkernel
+    /// over every row block with the vectorized requant epilogue — the
+    /// GEMM-only view of the engine's tiled conv hot path (the conv adds
+    /// the patch-panel gather). Bit-equal to [`QTensor::gemm_requant`] on
+    /// a re-centred grid, modulo the i8/i32 container.
+    pub fn gemm_requant_i8(
+        &self,
+        x_int: &[i8],
+        n: usize,
+        x_enc: &Encoding,
+        rq: &Requant,
+        out: &mut [i8],
+    ) {
+        let m = self.rows;
+        assert_eq!(x_int.len(), self.cols * n);
+        assert_eq!(out.len(), m * n);
+        assert_eq!(rq.mult.len(), m);
+        assert_eq!(rq.bias.len(), m);
+        assert!(
+            rq.lo >= i8::MIN as i32 && rq.hi <= i8::MAX as i32,
+            "requant clamps [{}, {}] must target an i8 grid",
+            rq.lo,
+            rq.hi
+        );
+        self.check_acc_bounds(x_enc);
+        let zx = x_enc.offset as i64;
+        let tier = simd::active_tier();
+        let blocks = m.div_ceil(GEMM_MR);
+        let base = SyncSlice::new(out.as_mut_ptr());
+        parallel_chunks(blocks, 1, |b0, b1| {
+            with_worker_scratch(|ws| {
+                let acc = ws.i32_slice(GEMM_MR * n);
+                for blk in b0..b1 {
+                    self.acc_tile_tier(tier, blk, x_int, n, acc);
+                    let i0 = blk * GEMM_MR;
+                    let rb = (m - i0).min(GEMM_MR);
+                    for r in 0..rb {
+                        let mi = i0 + r;
+                        let corr = zx * self.row_sums[mi];
+                        // SAFETY: output rows are disjoint per `mi` and
+                        // blocks are disjoint across chunks.
+                        let dst = unsafe {
+                            std::slice::from_raw_parts_mut(base.ptr().add(mi * n), n)
+                        };
+                        simd::requant_i32_to_i8(
+                            tier,
+                            &acc[r * n..(r + 1) * n],
+                            corr,
+                            rq.mult[mi],
+                            rq.bias[mi],
+                            rq.z_out,
+                            rq.lo,
+                            rq.hi,
+                            dst,
+                        );
+                    }
+                }
+            });
         });
     }
 }
@@ -1167,6 +1328,38 @@ mod tests {
         for (i, (&q8, &q32)) in out8.iter().zip(&out32).enumerate() {
             assert_eq!(q8 as i32, q32 - 128, "elem {i}: packed vs i32 route");
         }
+    }
+
+    // (gemm_requant_i8's i8-vs-i32-route equality lives in
+    // tests/simd_kernels.rs::gemm_requant_i8_matches_i32_route_over_grid,
+    // which sweeps a strict superset of shapes through the public API.)
+
+    /// The public acc_tile boundary rejects bad shapes loudly even in
+    /// release builds (the SIMD kernels behind it write through raw
+    /// pointers), and matches the crate-internal unchecked path on good
+    /// shapes.
+    #[test]
+    fn acc_tile_validates_shapes_and_matches_tier_path() {
+        let mut rng = Rng::new(24);
+        let w = Tensor::randn(&mut rng, &[5, 6], 0.5);
+        let w_enc = Encoding::from_min_max(w.min(), w.max(), 8, true);
+        let qw = QTensor::from_matrix(&w, &w_enc);
+        let panel: Vec<i8> = (0..6 * 3).map(|i| (i as i8) - 7).collect();
+        let mut a = vec![0i32; GEMM_MR * 3];
+        let mut b = vec![0i32; GEMM_MR * 3];
+        qw.acc_tile(0, &panel, 3, &mut a);
+        qw.acc_tile_tier(simd::active_tier(), 0, &panel, 3, &mut b);
+        assert_eq!(a, b);
+        let bad_panel = std::panic::catch_unwind(|| {
+            let mut acc = vec![0i32; GEMM_MR * 3];
+            qw.acc_tile(0, &panel[1..], 3, &mut acc);
+        });
+        assert!(bad_panel.is_err(), "short panel must fail the check");
+        let bad_blk = std::panic::catch_unwind(|| {
+            let mut acc = vec![0i32; GEMM_MR * 3];
+            qw.acc_tile(9, &panel, 3, &mut acc);
+        });
+        assert!(bad_blk.is_err(), "out-of-range block must fail the check");
     }
 
     /// The transpose-free linear kernel equals the transpose formulation.

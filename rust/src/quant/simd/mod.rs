@@ -1,0 +1,586 @@
+//! Runtime-dispatched SIMD kernel tier for the integer hot path — the
+//! "widening multiply instructions" half of the int8 deployment story
+//! (Krishnamoorthi 2018 §4; Nagel et al. 2021 §2.1): packed i8 GEMM
+//! microkernels, i8 dot products, and the vectorized requantize /
+//! dequantize / AXPY epilogues that bracket them.
+//!
+//! **Every variant is bit-identical to the scalar reference.** That is a
+//! hard contract, not an aspiration: the integer kernels sum exactly the
+//! same i32 terms (integer addition is order-independent), and the float
+//! epilogues round exactly once in exactly the places the scalar
+//! expressions do — the `(acc − corr)` difference is formed in f64 (exact
+//! for |values| < 2⁵³, so narrowing to f32 rounds once, same as
+//! `(i64) as f32`), the multiply and add stay separate f32 ops (no FMA),
+//! and the final round-ties-even + clamp commutes with clamping in the
+//! float domain first (monotonicity of rte over exactly-representable
+//! integer bounds). The per-tier unit tests below and
+//! `tests/simd_kernels.rs` enforce the contract against
+//! `quantized_matmul_i32_ref`; `scripts/ci.sh` re-runs the whole tier-1
+//! suite under `AIMET_FORCE_SCALAR=1` so the scalar tier stays green too.
+//!
+//! Dispatch is resolved **once** per process in a [`OnceLock`]
+//! ([`active_tier`]): AVX2 → SSE4.1 → scalar on x86-64 (runtime
+//! `is_x86_feature_detected!`), NEON on aarch64 (baseline), scalar
+//! everywhere else. `AIMET_FORCE_SCALAR=1` pins the scalar tier for CI
+//! A/B runs and debugging. The worker pool touches the lock at spawn so
+//! no kernel ever pays detection inside a parallel region.
+//!
+//! Tier coverage (everything not listed falls back to the scalar loop,
+//! which LLVM auto-vectorizes at baseline width):
+//!
+//! | tier     | GEMM microkernel        | i8 dot | requant/dequant | f32 AXPY |
+//! |----------|-------------------------|--------|-----------------|----------|
+//! | `avx2`   | 4×16 `pmaddwd` pairs    | yes    | yes             | yes      |
+//! | `sse4.1` | 4×8 `pmaddwd` pairs     | yes    | scalar          | scalar   |
+//! | `neon`   | 4×16 `smlal` widening   | yes    | yes             | scalar   |
+//! | `scalar` | reference loops         | —      | —               | —        |
+
+use std::fmt;
+use std::sync::OnceLock;
+
+use super::{requantize_value, GEMM_MR, GEMM_NR};
+
+// The register microkernels are hand-written for the 4×16 tile (AVX2:
+// 8×256-bit accumulators; NEON: 16×128-bit; SSE4.1 runs two GEMM_NR/2
+// half-slabs). Retuning the constants requires rewriting those kernels,
+// so pin the relationship at compile time.
+const _: () = assert!(GEMM_MR == 4 && GEMM_NR == 16, "rewrite the SIMD microkernels");
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+/// The instruction-set tier the integer kernels dispatch to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdTier {
+    /// 256-bit AVX2: k-pair-interleaved `_mm256_madd_epi16` microkernel
+    /// plus vectorized requant/dequant/AXPY epilogues.
+    Avx2,
+    /// 128-bit SSE4.1 fallback: the same `madd` microkernel at half
+    /// width, plus i8 dot products.
+    Sse41,
+    /// aarch64 NEON: `smlal`-style widening multiply-accumulate
+    /// microkernel, `smull` dot products, vectorized epilogues.
+    Neon,
+    /// The always-available reference loops.
+    Scalar,
+}
+
+impl SimdTier {
+    /// Stable string form (benches, CLI reports, `BENCH_history.jsonl`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SimdTier::Avx2 => "avx2",
+            SimdTier::Sse41 => "sse4.1",
+            SimdTier::Neon => "neon",
+            SimdTier::Scalar => "scalar",
+        }
+    }
+}
+
+impl fmt::Display for SimdTier {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// True when `AIMET_FORCE_SCALAR` requests the scalar tier (any value but
+/// `0`/empty counts; the documented spelling is `AIMET_FORCE_SCALAR=1`).
+fn force_scalar() -> bool {
+    std::env::var("AIMET_FORCE_SCALAR")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false)
+}
+
+fn detect() -> SimdTier {
+    // The probe ladder lives in `available_tiers` alone (ordered worst →
+    // best); dispatch takes the best runnable entry, so the active tier
+    // is in the available set by construction — the per-tier property
+    // tests can never silently miss it.
+    *available_tiers().last().expect("scalar is always available")
+}
+
+/// The tier every kernel dispatches to, resolved once per process
+/// (feature probe + `AIMET_FORCE_SCALAR`), then a plain atomic read.
+/// Hot loops hoist the value once per kernel call; the worker pool warms
+/// the lock at spawn.
+pub fn active_tier() -> SimdTier {
+    static TIER: OnceLock<SimdTier> = OnceLock::new();
+    *TIER.get_or_init(|| if force_scalar() { SimdTier::Scalar } else { detect() })
+}
+
+/// Every tier runnable on this host, scalar first. The per-tier property
+/// tests iterate this so one native run covers the whole ladder.
+pub fn available_tiers() -> Vec<SimdTier> {
+    let mut tiers = vec![SimdTier::Scalar];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("sse4.1") {
+            tiers.push(SimdTier::Sse41);
+        }
+        if std::arch::is_x86_feature_detected!("avx2") {
+            tiers.push(SimdTier::Avx2);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        tiers.push(SimdTier::Neon);
+    }
+    tiers
+}
+
+// ---------------------------------------------------------------------------
+// GEMM microkernel: one GEMM_MR-row weight block × an i8 [K, nrt] panel.
+// ---------------------------------------------------------------------------
+
+/// Accumulate `acc[r, j] += Σ_k pw[k, r] · panel[k, j]` for one packed
+/// weight block. `pw` is the k-major [`GEMM_MR`]-interleaved i8 stripe
+/// panel, `pairs` the k-pair broadcast form (two adjacent k's weights as
+/// two i16 halves of one i32 — what `pmaddwd` wants; built on x86-64
+/// only, `None` elsewhere), `panel` a row-major `[K, nrt]` i8 activation
+/// panel, `acc` a zeroed `[GEMM_MR, nrt]` i32 tile. All tiers sum
+/// identical i32 terms, so results are bit-equal.
+pub(crate) fn acc_tile_dispatch(
+    tier: SimdTier,
+    pw: &[i8],
+    pairs: Option<&[i32]>,
+    panel: &[i8],
+    k: usize,
+    nrt: usize,
+    acc: &mut [i32],
+) {
+    debug_assert_eq!(pw.len(), k * GEMM_MR);
+    debug_assert_eq!(panel.len(), k * nrt);
+    debug_assert_eq!(acc.len(), GEMM_MR * nrt);
+    if let Some(p) = pairs {
+        debug_assert_eq!(p.len(), k.div_ceil(2) * GEMM_MR);
+    }
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the tier was runtime-detected (or explicitly listed by
+        // `available_tiers`), so the required features are present; the
+        // pair panel is always built on x86-64.
+        SimdTier::Avx2 => unsafe {
+            x86::acc_tile_avx2(pw, pairs.expect("pair panel on x86-64"), panel, k, nrt, acc)
+        },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above — SSE4.1 verified at detection time.
+        SimdTier::Sse41 => unsafe {
+            x86::acc_tile_sse41(pw, pairs.expect("pair panel on x86-64"), panel, k, nrt, acc)
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        SimdTier::Neon => unsafe { neon::acc_tile_neon(pw, panel, k, nrt, acc) },
+        _ => acc_tile_scalar_cols(pw, panel, k, nrt, 0, nrt, acc),
+    }
+}
+
+/// The scalar reference accumulation over columns `j0..j1` (the SIMD
+/// kernels call it for their sub-register-width column tails).
+pub(crate) fn acc_tile_scalar_cols(
+    pw: &[i8],
+    panel: &[i8],
+    k: usize,
+    nrt: usize,
+    j0: usize,
+    j1: usize,
+    acc: &mut [i32],
+) {
+    let (a0, rest) = acc.split_at_mut(nrt);
+    let (a1, rest) = rest.split_at_mut(nrt);
+    let (a2, a3) = rest.split_at_mut(nrt);
+    for kk in 0..k {
+        let w = &pw[kk * GEMM_MR..kk * GEMM_MR + GEMM_MR];
+        let (v0, v1, v2, v3) = (w[0] as i32, w[1] as i32, w[2] as i32, w[3] as i32);
+        let prow = &panel[kk * nrt + j0..kk * nrt + j1];
+        for (j, &xv) in prow.iter().enumerate() {
+            let xv = xv as i32;
+            a0[j0 + j] += v0 * xv;
+            a1[j0 + j] += v1 * xv;
+            a2[j0 + j] += v2 * xv;
+            a3[j0 + j] += v3 * xv;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// i8 dot product (the batch-major Linear kernel's inner loop).
+// ---------------------------------------------------------------------------
+
+/// `Σ_k a[k]·b[k]` over two i8 rows with i32 accumulation.
+pub(crate) fn dot_i8(tier: SimdTier, a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: tier implies the feature (see `acc_tile_dispatch`).
+        SimdTier::Avx2 => unsafe { x86::dot_i8_avx2(a, b) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above.
+        SimdTier::Sse41 => unsafe { x86::dot_i8_sse41(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        SimdTier::Neon => unsafe { neon::dot_i8_neon(a, b) },
+        _ => dot_i8_scalar(a, b),
+    }
+}
+
+pub(crate) fn dot_i8_scalar(a: &[i8], b: &[i8]) -> i32 {
+    let mut acc = 0i32;
+    for (&x, &y) in a.iter().zip(b) {
+        acc += x as i32 * y as i32;
+    }
+    acc
+}
+
+// ---------------------------------------------------------------------------
+// Epilogues. The scalar bodies below are THE reference expressions — the
+// engine's sim-agreement contract rides on them (see `requantize_value`);
+// the vector variants must match them bit-for-bit.
+// ---------------------------------------------------------------------------
+
+/// Shared epilogue contract checks: the clamp window (shifted by `z`)
+/// must be exactly representable in f32 for the vectorized
+/// clamp-before-round to commute with the scalar round-before-clamp.
+/// Holds for every real grid (≤ 16-bit); checked in debug builds.
+#[inline]
+fn debug_check_clamps(z: i32, lo: i32, hi: i32) {
+    debug_assert!(lo <= hi, "requant clamp window [{lo}, {hi}]");
+    debug_assert!(
+        (lo - z).unsigned_abs() <= 1 << 24 && (hi - z).unsigned_abs() <= 1 << 24,
+        "clamp bounds must be f32-exact"
+    );
+}
+
+/// Requantize a row of i32 accumulators straight to i8:
+/// `out[j] = clamp(rte(mult·((acc[j] − corr) as f32) + bias) + z, lo, hi)`
+/// — the packed conv/linear epilogue. `lo`/`hi` must target an i8 grid.
+pub(crate) fn requant_i32_to_i8(
+    tier: SimdTier,
+    acc: &[i32],
+    corr: i64,
+    mult: f32,
+    bias: f32,
+    z: i32,
+    lo: i32,
+    hi: i32,
+    out: &mut [i8],
+) {
+    debug_assert_eq!(acc.len(), out.len());
+    debug_assert!(lo >= i8::MIN as i32 && hi <= i8::MAX as i32);
+    debug_check_clamps(z, lo, hi);
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: tier implies AVX2.
+        SimdTier::Avx2 => unsafe { x86::requant_i8_avx2(acc, corr, mult, bias, z, lo, hi, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        SimdTier::Neon => unsafe { neon::requant_i8_neon(acc, corr, mult, bias, z, lo, hi, out) },
+        _ => requant_i8_scalar(acc, corr, mult, bias, z, lo, hi, out),
+    }
+}
+
+pub(crate) fn requant_i8_scalar(
+    acc: &[i32],
+    corr: i64,
+    mult: f32,
+    bias: f32,
+    z: i32,
+    lo: i32,
+    hi: i32,
+    out: &mut [i8],
+) {
+    for (d, &a) in out.iter_mut().zip(acc) {
+        let v = mult * (a as i64 - corr) as f32 + bias;
+        *d = requantize_value(v, z, lo, hi) as i8;
+    }
+}
+
+/// Same epilogue with i32 output (the retained reference GEMM path).
+pub(crate) fn requant_i32_to_i32(
+    tier: SimdTier,
+    acc: &[i32],
+    corr: i64,
+    mult: f32,
+    bias: f32,
+    z: i32,
+    lo: i32,
+    hi: i32,
+    out: &mut [i32],
+) {
+    debug_assert_eq!(acc.len(), out.len());
+    debug_check_clamps(z, lo, hi);
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: tier implies AVX2.
+        SimdTier::Avx2 => unsafe { x86::requant_i32_avx2(acc, corr, mult, bias, z, lo, hi, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        SimdTier::Neon => unsafe { neon::requant_i32_neon(acc, corr, mult, bias, z, lo, hi, out) },
+        _ => requant_i32_scalar(acc, corr, mult, bias, z, lo, hi, out),
+    }
+}
+
+pub(crate) fn requant_i32_scalar(
+    acc: &[i32],
+    corr: i64,
+    mult: f32,
+    bias: f32,
+    z: i32,
+    lo: i32,
+    hi: i32,
+    out: &mut [i32],
+) {
+    for (d, &a) in out.iter_mut().zip(acc) {
+        let v = mult * (a as i64 - corr) as f32 + bias;
+        *d = requantize_value(v, z, lo, hi);
+    }
+}
+
+/// The f32 GEMM epilogue: `out[j] = scale·((acc[j] − corr) as f32) + bias`
+/// (eq 2.9's rescale; the quantsim calibration path).
+pub(crate) fn scale_i32_to_f32(
+    tier: SimdTier,
+    acc: &[i32],
+    corr: i64,
+    scale: f32,
+    bias: f32,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(acc.len(), out.len());
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: tier implies AVX2.
+        SimdTier::Avx2 => unsafe { x86::scale_f32_avx2(acc, corr, scale, bias, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        SimdTier::Neon => unsafe { neon::scale_f32_neon(acc, corr, scale, bias, out) },
+        _ => scale_f32_scalar(acc, corr, scale, bias, out),
+    }
+}
+
+pub(crate) fn scale_f32_scalar(acc: &[i32], corr: i64, scale: f32, bias: f32, out: &mut [f32]) {
+    for (d, &a) in out.iter_mut().zip(acc) {
+        *d = scale * (a as i64 - corr) as f32 + bias;
+    }
+}
+
+/// Dequantize packed i8 values: `out[j] = s·((q[j] − z) as f32)` (eq 2.6;
+/// the serving reply path).
+pub(crate) fn dequant_i8_to_f32(tier: SimdTier, src: &[i8], z: i32, s: f32, out: &mut [f32]) {
+    debug_assert_eq!(src.len(), out.len());
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: tier implies AVX2.
+        SimdTier::Avx2 => unsafe { x86::dequant_i8_avx2(src, z, s, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        SimdTier::Neon => unsafe { neon::dequant_i8_neon(src, z, s, out) },
+        _ => dequant_scalar(src, z, s, out),
+    }
+}
+
+pub(crate) fn dequant_scalar(src: &[i8], z: i32, s: f32, out: &mut [f32]) {
+    for (d, &q) in out.iter_mut().zip(src) {
+        *d = s * (q as i32 - z) as f32;
+    }
+}
+
+/// Four simultaneous f32 AXPYs over one contiguous `b` row — the inner
+/// loop of the 4-row-blocked f32 [`crate::tensor::matmul`]. Kept as
+/// separate multiply + add (no FMA), so every tier matches the scalar
+/// loop bit-for-bit.
+pub(crate) fn axpy4_f32(
+    tier: SimdTier,
+    v: [f32; 4],
+    b: &[f32],
+    r0: &mut [f32],
+    r1: &mut [f32],
+    r2: &mut [f32],
+    r3: &mut [f32],
+) {
+    debug_assert!(
+        b.len() == r0.len() && b.len() == r1.len() && b.len() == r2.len() && b.len() == r3.len()
+    );
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: tier implies AVX2.
+        SimdTier::Avx2 => unsafe { x86::axpy4_avx2(v, b, r0, r1, r2, r3) },
+        _ => axpy4_scalar(v, b, r0, r1, r2, r3),
+    }
+}
+
+pub(crate) fn axpy4_scalar(
+    v: [f32; 4],
+    b: &[f32],
+    r0: &mut [f32],
+    r1: &mut [f32],
+    r2: &mut [f32],
+    r3: &mut [f32],
+) {
+    for (j, &bv) in b.iter().enumerate() {
+        r0[j] += v[0] * bv;
+        r1[j] += v[1] * bv;
+        r2[j] += v[2] * bv;
+        r3[j] += v[3] * bv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{Encoding, QTensor};
+    use crate::tensor::Tensor;
+
+    /// Deterministic pseudo-random i8 stream (covers the full window,
+    /// including −128/127 extremes).
+    fn i8_seq(n: usize, salt: usize) -> Vec<i8> {
+        (0..n)
+            .map(|i| ((i * 73 + salt * 37 + 11) % 256) as u8 as i8)
+            .collect()
+    }
+
+    #[test]
+    fn active_tier_is_available_and_stringly_stable() {
+        let tiers = available_tiers();
+        assert_eq!(tiers[0], SimdTier::Scalar);
+        assert!(tiers.contains(&active_tier()));
+        for t in tiers {
+            assert!(!t.as_str().is_empty());
+            assert_eq!(format!("{t}"), t.as_str());
+        }
+    }
+
+    /// Every runnable tier's microkernel is bit-exact against a naive
+    /// triple loop, over full/tail row blocks, odd/even K, and column
+    /// counts straddling every register width.
+    #[test]
+    fn acc_tile_all_tiers_match_naive() {
+        for &(m, k) in &[(4usize, 7usize), (4, 8), (6, 12), (1, 3), (5, 16), (8, 33)] {
+            let w = Tensor::new(
+                &[m, k],
+                i8_seq(m * k, m + k).iter().map(|&v| v as f32 / 127.0).collect(),
+            );
+            let w_enc = Encoding::from_min_max(-1.0, 1.0, 8, true);
+            let qw = QTensor::from_matrix(&w, &w_enc);
+            assert!(qw.is_packed());
+            for &nrt in &[1usize, 5, 8, 15, 16, 17, 31, 32, 33, 64] {
+                let panel = i8_seq(k * nrt, nrt);
+                for blk in 0..m.div_ceil(GEMM_MR) {
+                    let i0 = blk * GEMM_MR;
+                    let mut want = vec![0i32; GEMM_MR * nrt];
+                    for r in 0..(m - i0).min(GEMM_MR) {
+                        let wrow = qw.row_ints(i0 + r);
+                        for j in 0..nrt {
+                            want[r * nrt + j] = (0..k)
+                                .map(|kk| wrow[kk] * panel[kk * nrt + j] as i32)
+                                .sum();
+                        }
+                    }
+                    for &tier in &available_tiers() {
+                        let mut acc = vec![0i32; GEMM_MR * nrt];
+                        qw.acc_tile_tier(tier, blk, &panel, nrt, &mut acc);
+                        assert_eq!(acc, want, "{tier} m{m} k{k} nrt{nrt} blk{blk}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dot_i8_all_tiers_match_scalar() {
+        for &n in &[0usize, 1, 7, 15, 16, 17, 31, 32, 33, 100, 257] {
+            let a = i8_seq(n, 1);
+            let b = i8_seq(n, 2);
+            let want = dot_i8_scalar(&a, &b);
+            for &tier in &available_tiers() {
+                assert_eq!(dot_i8(tier, &a, &b), want, "{tier} n{n}");
+            }
+        }
+        // Extremes: ±128·±128 products.
+        let a = vec![i8::MIN; 40];
+        let b = vec![i8::MIN; 40];
+        for &tier in &available_tiers() {
+            assert_eq!(dot_i8(tier, &a, &b), 40 * 128 * 128, "{tier}");
+        }
+    }
+
+    /// Requant epilogues: random accumulators (full i32 span), a huge
+    /// correction term (beyond i32), and deliberate rounding ties must
+    /// come out bit-equal on every tier.
+    #[test]
+    fn requant_epilogues_all_tiers_match_scalar() {
+        let accs: Vec<i32> = (0..100)
+            .map(|i| (i * 2654435761u64 % (1u64 << 32)) as u32 as i32)
+            .chain([i32::MAX, i32::MIN, 0, 1, -1])
+            .collect();
+        let cases = [
+            (0i64, 0.25f32, 0.1f32, -28i32, -128i32, 127i32),
+            (9_876_543_210, 1.5e-9, -0.3, 0, -127, 127),
+            (-9_876_543_210, 2.5e-9, 0.0, -128, -128, -28),
+        ];
+        for &(corr, mult, bias, z, lo, hi) in &cases {
+            let mut want8 = vec![0i8; accs.len()];
+            requant_i8_scalar(&accs, corr, mult, bias, z, lo, hi, &mut want8);
+            let mut want32 = vec![0i32; accs.len()];
+            requant_i32_scalar(&accs, corr, mult, bias, z, lo, hi, &mut want32);
+            let mut wantf = vec![0f32; accs.len()];
+            scale_f32_scalar(&accs, corr, mult, bias, &mut wantf);
+            for &tier in &available_tiers() {
+                let mut got8 = vec![0i8; accs.len()];
+                requant_i32_to_i8(tier, &accs, corr, mult, bias, z, lo, hi, &mut got8);
+                assert_eq!(got8, want8, "{tier} i8 corr={corr}");
+                let mut got32 = vec![0i32; accs.len()];
+                requant_i32_to_i32(tier, &accs, corr, mult, bias, z, lo, hi, &mut got32);
+                assert_eq!(got32, want32, "{tier} i32 corr={corr}");
+                let mut gotf = vec![0f32; accs.len()];
+                scale_i32_to_f32(tier, &accs, corr, mult, bias, &mut gotf);
+                assert_eq!(gotf, wantf, "{tier} f32 corr={corr}");
+            }
+        }
+        // Exact .5 ties: mult = 0.5 over odd accumulators exercises
+        // round-ties-even on every lane.
+        let odd: Vec<i32> = (-25..25).map(|i| 2 * i + 1).collect();
+        let mut want = vec![0i8; odd.len()];
+        requant_i8_scalar(&odd, 0, 0.5, 0.0, 0, -128, 127, &mut want);
+        for &tier in &available_tiers() {
+            let mut got = vec![0i8; odd.len()];
+            requant_i32_to_i8(tier, &odd, 0, 0.5, 0.0, 0, -128, 127, &mut got);
+            assert_eq!(got, want, "{tier} ties");
+        }
+    }
+
+    #[test]
+    fn dequant_all_tiers_match_scalar() {
+        for &n in &[1usize, 7, 8, 9, 31, 64, 100] {
+            let src = i8_seq(n, n);
+            let mut want = vec![0f32; n];
+            dequant_scalar(&src, -28, 0.037, &mut want);
+            for &tier in &available_tiers() {
+                let mut got = vec![0f32; n];
+                dequant_i8_to_f32(tier, &src, -28, 0.037, &mut got);
+                assert_eq!(got, want, "{tier} n{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn axpy4_all_tiers_match_scalar() {
+        for &n in &[1usize, 7, 8, 9, 24, 33] {
+            let b: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin()).collect();
+            let init: Vec<f32> = (0..n).map(|i| (i as f32 * 0.11).cos()).collect();
+            let v = [0.5f32, -1.25, 3.0e-3, 7.5];
+            let mut want = [init.clone(), init.clone(), init.clone(), init.clone()];
+            {
+                let [w0, w1, w2, w3] = &mut want;
+                axpy4_scalar(v, &b, w0, w1, w2, w3);
+            }
+            for &tier in &available_tiers() {
+                let mut got = [init.clone(), init.clone(), init.clone(), init.clone()];
+                let [g0, g1, g2, g3] = &mut got;
+                axpy4_f32(tier, v, &b, g0, g1, g2, g3);
+                assert_eq!(got, want, "{tier} n{n}");
+            }
+        }
+    }
+}

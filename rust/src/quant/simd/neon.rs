@@ -1,0 +1,221 @@
+//! aarch64 NEON kernels (baseline feature — no runtime probe needed).
+//!
+//! GEMM microkernel shape: `GEMM_MR = 4` weight rows × 16 columns, 16
+//! `int32x4` accumulators in registers. Per `k`, sixteen activations are
+//! sign-extended to i16 (`sxtl`) and each row's weight rides as an i16
+//! broadcast through `smlal`-style widening multiply-accumulates
+//! (`vmlal_s16`: i16×i16 → i32, exact). Same i32 terms as the scalar
+//! loop, summed in a different order — bit-identical.
+//!
+//! Epilogues follow the x86 recipe: the `(acc − corr)` difference is
+//! formed in f64 (`vcvtq_f64_s64` on widened lanes, exact), narrowed once
+//! to f32, multiply and add stay separate (`vmulq`/`vaddq`, never the
+//! fused `vmlaq`), the clamp happens in the float domain against
+//! exactly-representable bounds, and `vcvtnq_s32_f32` rounds ties-to-even
+//! exactly like `f32::round_ties_even`.
+
+use super::acc_tile_scalar_cols;
+use crate::quant::{GEMM_MR, GEMM_NR};
+use std::arch::aarch64::*;
+
+/// NEON 4×16 microkernel over the i8 stripe panel. `acc` must be zeroed
+/// (full slabs are overwritten; the scalar tail accumulates).
+pub(crate) unsafe fn acc_tile_neon(
+    pw: &[i8],
+    panel: &[i8],
+    k: usize,
+    nrt: usize,
+    acc: &mut [i32],
+) {
+    let pp = panel.as_ptr();
+    let ap = acc.as_mut_ptr();
+    let mut jb = 0usize;
+    while jb + GEMM_NR <= nrt {
+        let mut lanes = [[vdupq_n_s32(0); 4]; GEMM_MR];
+        for kk in 0..k {
+            let v = vld1q_s8(pp.add(kk * nrt + jb));
+            let lo = vmovl_s8(vget_low_s8(v));
+            let hi = vmovl_s8(vget_high_s8(v));
+            let x = [
+                vget_low_s16(lo),
+                vget_high_s16(lo),
+                vget_low_s16(hi),
+                vget_high_s16(hi),
+            ];
+            for (r, lane) in lanes.iter_mut().enumerate() {
+                let w = vdup_n_s16(pw[kk * GEMM_MR + r] as i16);
+                for (q, l) in lane.iter_mut().enumerate() {
+                    *l = vmlal_s16(*l, x[q], w);
+                }
+            }
+        }
+        for (r, lane) in lanes.iter().enumerate() {
+            for (q, l) in lane.iter().enumerate() {
+                vst1q_s32(ap.add(r * nrt + jb + 4 * q), *l);
+            }
+        }
+        jb += GEMM_NR;
+    }
+    if jb < nrt {
+        acc_tile_scalar_cols(pw, panel, k, nrt, jb, nrt, acc);
+    }
+}
+
+/// NEON i8·i8 dot product: `smull` low/high halves into i16 products
+/// (exact: |w|,|x| ≤ 128), pairwise-accumulated into i32 lanes
+/// (`vpadalq_s16`), horizontal sum once at the end.
+pub(crate) unsafe fn dot_i8_neon(a: &[i8], b: &[i8]) -> i32 {
+    let n = a.len();
+    let mut acc = vdupq_n_s32(0);
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let va = vld1q_s8(a.as_ptr().add(i));
+        let vb = vld1q_s8(b.as_ptr().add(i));
+        acc = vpadalq_s16(acc, vmull_s8(vget_low_s8(va), vget_low_s8(vb)));
+        acc = vpadalq_s16(acc, vmull_s8(vget_high_s8(va), vget_high_s8(vb)));
+        i += 16;
+    }
+    let mut sum = vaddvq_s32(acc);
+    while i < n {
+        sum += *a.get_unchecked(i) as i32 * *b.get_unchecked(i) as i32;
+        i += 1;
+    }
+    sum
+}
+
+/// Four accumulators → four f32s of `(acc − corr) as f32` via the exact
+/// f64 route.
+unsafe fn sub_corr_to_f32(a: int32x4_t, corrv: float64x2_t) -> float32x4_t {
+    let dlo = vcvtq_f64_s64(vmovl_s32(vget_low_s32(a)));
+    let dhi = vcvtq_f64_s64(vmovl_s32(vget_high_s32(a)));
+    let flo = vcvt_f32_f64(vsubq_f64(dlo, corrv));
+    let fhi = vcvt_f32_f64(vsubq_f64(dhi, corrv));
+    vcombine_f32(flo, fhi)
+}
+
+/// Four lanes of the requant epilogue up to the integer grid shift.
+#[allow(clippy::too_many_arguments)]
+unsafe fn requant4_neon(
+    a: int32x4_t,
+    corrv: float64x2_t,
+    multv: float32x4_t,
+    biasv: float32x4_t,
+    lov: float32x4_t,
+    hiv: float32x4_t,
+    zv: int32x4_t,
+) -> int32x4_t {
+    let f = sub_corr_to_f32(a, corrv);
+    let v = vaddq_f32(vmulq_f32(multv, f), biasv);
+    let t = vminq_f32(vmaxq_f32(v, lov), hiv);
+    vaddq_s32(vcvtnq_s32_f32(t), zv)
+}
+
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn requant_i8_neon(
+    acc: &[i32],
+    corr: i64,
+    mult: f32,
+    bias: f32,
+    z: i32,
+    lo: i32,
+    hi: i32,
+    out: &mut [i8],
+) {
+    let n = acc.len();
+    let corrv = vdupq_n_f64(corr as f64);
+    let multv = vdupq_n_f32(mult);
+    let biasv = vdupq_n_f32(bias);
+    let lov = vdupq_n_f32((lo - z) as f32);
+    let hiv = vdupq_n_f32((hi - z) as f32);
+    let zv = vdupq_n_s32(z);
+    let ip = acc.as_ptr();
+    let op = out.as_mut_ptr();
+    let mut j = 0usize;
+    while j + 8 <= n {
+        let q0 = requant4_neon(vld1q_s32(ip.add(j)), corrv, multv, biasv, lov, hiv, zv);
+        let q1 = requant4_neon(vld1q_s32(ip.add(j + 4)), corrv, multv, biasv, lov, hiv, zv);
+        // Values already sit inside [lo, hi] ⊆ i8, so the saturating
+        // narrows are exact.
+        let p16 = vcombine_s16(vqmovn_s32(q0), vqmovn_s32(q1));
+        vst1_s8(op.add(j), vqmovn_s16(p16));
+        j += 8;
+    }
+    if j < n {
+        super::requant_i8_scalar(&acc[j..], corr, mult, bias, z, lo, hi, &mut out[j..]);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn requant_i32_neon(
+    acc: &[i32],
+    corr: i64,
+    mult: f32,
+    bias: f32,
+    z: i32,
+    lo: i32,
+    hi: i32,
+    out: &mut [i32],
+) {
+    let n = acc.len();
+    let corrv = vdupq_n_f64(corr as f64);
+    let multv = vdupq_n_f32(mult);
+    let biasv = vdupq_n_f32(bias);
+    let lov = vdupq_n_f32((lo - z) as f32);
+    let hiv = vdupq_n_f32((hi - z) as f32);
+    let zv = vdupq_n_s32(z);
+    let ip = acc.as_ptr();
+    let op = out.as_mut_ptr();
+    let mut j = 0usize;
+    while j + 4 <= n {
+        let q = requant4_neon(vld1q_s32(ip.add(j)), corrv, multv, biasv, lov, hiv, zv);
+        vst1q_s32(op.add(j), q);
+        j += 4;
+    }
+    if j < n {
+        super::requant_i32_scalar(&acc[j..], corr, mult, bias, z, lo, hi, &mut out[j..]);
+    }
+}
+
+pub(crate) unsafe fn scale_f32_neon(
+    acc: &[i32],
+    corr: i64,
+    scale: f32,
+    bias: f32,
+    out: &mut [f32],
+) {
+    let n = acc.len();
+    let corrv = vdupq_n_f64(corr as f64);
+    let sv = vdupq_n_f32(scale);
+    let bv = vdupq_n_f32(bias);
+    let ip = acc.as_ptr();
+    let op = out.as_mut_ptr();
+    let mut j = 0usize;
+    while j + 4 <= n {
+        let f = sub_corr_to_f32(vld1q_s32(ip.add(j)), corrv);
+        vst1q_f32(op.add(j), vaddq_f32(vmulq_f32(sv, f), bv));
+        j += 4;
+    }
+    if j < n {
+        super::scale_f32_scalar(&acc[j..], corr, scale, bias, &mut out[j..]);
+    }
+}
+
+pub(crate) unsafe fn dequant_i8_neon(src: &[i8], z: i32, s: f32, out: &mut [f32]) {
+    let n = src.len();
+    let zv = vdupq_n_s32(z);
+    let sv = vdupq_n_f32(s);
+    let ip = src.as_ptr();
+    let op = out.as_mut_ptr();
+    let mut j = 0usize;
+    while j + 8 <= n {
+        let q16 = vmovl_s8(vld1_s8(ip.add(j)));
+        let q0 = vsubq_s32(vmovl_s16(vget_low_s16(q16)), zv);
+        let q1 = vsubq_s32(vmovl_s16(vget_high_s16(q16)), zv);
+        vst1q_f32(op.add(j), vmulq_f32(sv, vcvtq_f32_s32(q0)));
+        vst1q_f32(op.add(j + 4), vmulq_f32(sv, vcvtq_f32_s32(q1)));
+        j += 8;
+    }
+    if j < n {
+        super::dequant_scalar(&src[j..], z, s, &mut out[j..]);
+    }
+}

@@ -1,0 +1,418 @@
+//! x86-64 kernels: the AVX2 (256-bit) and SSE4.1 (128-bit) tiers.
+//!
+//! GEMM microkernel shape: `GEMM_MR = 4` weight rows × one register row
+//! of columns (16 on AVX2, 8 on SSE4.1), i32 accumulators held in
+//! registers across the whole K loop. Two adjacent `k` values are
+//! processed per step: activations of rows `k` and `k+1` are sign-extended
+//! to i16 and interleaved (`punpck[lh]wd`), the two weights ride as the
+//! two i16 halves of one broadcast i32 (`pairs`, prebuilt at pack time),
+//! and `pmaddwd` produces the per-column i32 pair sums exactly — i8×i8
+//! products fit i16 comfortably (|w|,|x| ≤ 128 ⇒ |product| ≤ 16384), and
+//! `pmaddwd` widens to i32 before its adjacent add, so no saturation path
+//! is ever reachable. Summation order over `k` differs from the scalar
+//! loop only in grouping; integer addition is associative, so the
+//! accumulators are bit-identical.
+//!
+//! Epilogue float pipeline (AVX2 tier): `(acc − corr)` is formed in f64
+//! (both operands exact, |difference| < 2⁵³) and narrowed once to f32 —
+//! the same single rounding as the scalar `(i64) as f32` — then one mul,
+//! one add (no FMA), a float-domain clamp to the (exactly representable)
+//! shifted bounds, and `cvtps2dq` under the default round-to-nearest-even
+//! MXCSR mode, matching `f32::round_ties_even`. Clamping before the
+//! round commutes with the scalar round-then-clamp because rte is
+//! monotone and fixes integer bounds.
+
+use super::acc_tile_scalar_cols;
+use crate::quant::{GEMM_MR, GEMM_NR};
+use std::arch::x86_64::*;
+
+// ---------------------------------------------------------------------------
+// GEMM microkernels
+// ---------------------------------------------------------------------------
+
+/// AVX2 4×16 microkernel over the k-pair panel. `acc` must be zeroed
+/// (full 16-column slabs are overwritten; the scalar tail accumulates).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn acc_tile_avx2(
+    pw: &[i8],
+    pairs: &[i32],
+    panel: &[i8],
+    k: usize,
+    nrt: usize,
+    acc: &mut [i32],
+) {
+    let kp_n = k.div_ceil(2);
+    let pp = panel.as_ptr();
+    let ap = acc.as_mut_ptr();
+    let mut jb = 0usize;
+    while jb + GEMM_NR <= nrt {
+        let mut lanes = [[_mm256_setzero_si256(); 2]; GEMM_MR];
+        for kp in 0..kp_n {
+            let k0 = 2 * kp;
+            let va =
+                _mm256_cvtepi8_epi16(_mm_loadu_si128(pp.add(k0 * nrt + jb) as *const __m128i));
+            let vb = if k0 + 1 < k {
+                _mm256_cvtepi8_epi16(_mm_loadu_si128(
+                    pp.add((k0 + 1) * nrt + jb) as *const __m128i,
+                ))
+            } else {
+                // Odd K: the pair's high weight is zero, so any activation
+                // value would do — zeros keep the load in bounds.
+                _mm256_setzero_si256()
+            };
+            let lo = _mm256_unpacklo_epi16(va, vb);
+            let hi = _mm256_unpackhi_epi16(va, vb);
+            for (r, lane) in lanes.iter_mut().enumerate() {
+                let w = _mm256_set1_epi32(pairs[kp * GEMM_MR + r]);
+                lane[0] = _mm256_add_epi32(lane[0], _mm256_madd_epi16(lo, w));
+                lane[1] = _mm256_add_epi32(lane[1], _mm256_madd_epi16(hi, w));
+            }
+        }
+        // unpack split the columns as lo = [0..3 | 8..11], hi = [4..7 |
+        // 12..15]; one cross-lane permute per half restores column order.
+        for (r, lane) in lanes.iter().enumerate() {
+            let out0 = _mm256_permute2x128_si256::<0x20>(lane[0], lane[1]);
+            let out1 = _mm256_permute2x128_si256::<0x31>(lane[0], lane[1]);
+            _mm256_storeu_si256(ap.add(r * nrt + jb) as *mut __m256i, out0);
+            _mm256_storeu_si256(ap.add(r * nrt + jb + 8) as *mut __m256i, out1);
+        }
+        jb += GEMM_NR;
+    }
+    if jb < nrt {
+        acc_tile_scalar_cols(pw, panel, k, nrt, jb, nrt, acc);
+    }
+}
+
+/// SSE4.1 4×8 microkernel — same pair scheme at half width. Within one
+/// 128-bit register `punpck[lh]wd` keeps columns in order (lo = 0..3,
+/// hi = 4..7), so stores need no permute.
+#[target_feature(enable = "sse4.1")]
+pub(crate) unsafe fn acc_tile_sse41(
+    pw: &[i8],
+    pairs: &[i32],
+    panel: &[i8],
+    k: usize,
+    nrt: usize,
+    acc: &mut [i32],
+) {
+    let kp_n = k.div_ceil(2);
+    let pp = panel.as_ptr();
+    let ap = acc.as_mut_ptr();
+    let mut jb = 0usize;
+    while jb + GEMM_NR / 2 <= nrt {
+        let mut lanes = [[_mm_setzero_si128(); 2]; GEMM_MR];
+        for kp in 0..kp_n {
+            let k0 = 2 * kp;
+            let va = _mm_cvtepi8_epi16(_mm_loadl_epi64(pp.add(k0 * nrt + jb) as *const __m128i));
+            let vb = if k0 + 1 < k {
+                _mm_cvtepi8_epi16(_mm_loadl_epi64(pp.add((k0 + 1) * nrt + jb) as *const __m128i))
+            } else {
+                _mm_setzero_si128()
+            };
+            let lo = _mm_unpacklo_epi16(va, vb);
+            let hi = _mm_unpackhi_epi16(va, vb);
+            for (r, lane) in lanes.iter_mut().enumerate() {
+                let w = _mm_set1_epi32(pairs[kp * GEMM_MR + r]);
+                lane[0] = _mm_add_epi32(lane[0], _mm_madd_epi16(lo, w));
+                lane[1] = _mm_add_epi32(lane[1], _mm_madd_epi16(hi, w));
+            }
+        }
+        for (r, lane) in lanes.iter().enumerate() {
+            _mm_storeu_si128(ap.add(r * nrt + jb) as *mut __m128i, lane[0]);
+            _mm_storeu_si128(ap.add(r * nrt + jb + 4) as *mut __m128i, lane[1]);
+        }
+        jb += GEMM_NR / 2;
+    }
+    if jb < nrt {
+        acc_tile_scalar_cols(pw, panel, k, nrt, jb, nrt, acc);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// i8 dot products
+// ---------------------------------------------------------------------------
+
+#[target_feature(enable = "avx2")]
+unsafe fn hsum_epi32_256(v: __m256i) -> i32 {
+    let s = _mm_add_epi32(_mm256_castsi256_si128(v), _mm256_extracti128_si256::<1>(v));
+    hsum_epi32_128(s)
+}
+
+#[target_feature(enable = "sse2")]
+unsafe fn hsum_epi32_128(s: __m128i) -> i32 {
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b01_00_11_10>(s));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b00_00_00_01>(s));
+    _mm_cvtsi128_si32(s)
+}
+
+/// AVX2 i8·i8 dot product: sign-extend 16 lanes to i16, `pmaddwd`
+/// pairwise into 8 i32 lanes, horizontal sum once at the end. Per-lane
+/// partial sums stay ≤ K·|w|max·|x|max / 4, inside the caller's INT32
+/// accumulator bound.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn dot_i8_avx2(a: &[i8], b: &[i8]) -> i32 {
+    let n = a.len();
+    let mut acc = _mm256_setzero_si256();
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let va = _mm256_cvtepi8_epi16(_mm_loadu_si128(a.as_ptr().add(i) as *const __m128i));
+        let vb = _mm256_cvtepi8_epi16(_mm_loadu_si128(b.as_ptr().add(i) as *const __m128i));
+        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(va, vb));
+        i += 16;
+    }
+    let mut sum = hsum_epi32_256(acc);
+    while i < n {
+        sum += *a.get_unchecked(i) as i32 * *b.get_unchecked(i) as i32;
+        i += 1;
+    }
+    sum
+}
+
+/// SSE4.1 i8·i8 dot product (8 lanes per step).
+#[target_feature(enable = "sse4.1")]
+pub(crate) unsafe fn dot_i8_sse41(a: &[i8], b: &[i8]) -> i32 {
+    let n = a.len();
+    let mut acc = _mm_setzero_si128();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let va = _mm_cvtepi8_epi16(_mm_loadl_epi64(a.as_ptr().add(i) as *const __m128i));
+        let vb = _mm_cvtepi8_epi16(_mm_loadl_epi64(b.as_ptr().add(i) as *const __m128i));
+        acc = _mm_add_epi32(acc, _mm_madd_epi16(va, vb));
+        i += 8;
+    }
+    let mut sum = hsum_epi32_128(acc);
+    while i < n {
+        sum += *a.get_unchecked(i) as i32 * *b.get_unchecked(i) as i32;
+        i += 1;
+    }
+    sum
+}
+
+// ---------------------------------------------------------------------------
+// Epilogues (AVX2 tier)
+// ---------------------------------------------------------------------------
+
+/// Eight accumulators → eight f32s of `(acc − corr) as f32`, exactly as
+/// the scalar i64 route rounds them (see the module header).
+#[target_feature(enable = "avx2")]
+unsafe fn sub_corr_to_f32(a: __m256i, corrv: __m256d) -> __m256 {
+    let dlo = _mm256_cvtepi32_pd(_mm256_castsi256_si128(a));
+    let dhi = _mm256_cvtepi32_pd(_mm256_extracti128_si256::<1>(a));
+    let flo = _mm256_cvtpd_ps(_mm256_sub_pd(dlo, corrv));
+    let fhi = _mm256_cvtpd_ps(_mm256_sub_pd(dhi, corrv));
+    _mm256_insertf128_ps::<1>(_mm256_castps128_ps256(flo), fhi)
+}
+
+/// Eight lanes of the requant epilogue up to the integer grid shift:
+/// `clamp_f32(mult·f + bias) → rte → + z`.
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn requant8_avx2(
+    a: __m256i,
+    corrv: __m256d,
+    multv: __m256,
+    biasv: __m256,
+    lov: __m256,
+    hiv: __m256,
+    zv: __m256i,
+) -> __m256i {
+    let f = sub_corr_to_f32(a, corrv);
+    let v = _mm256_add_ps(_mm256_mul_ps(multv, f), biasv);
+    let t = _mm256_min_ps(_mm256_max_ps(v, lov), hiv);
+    _mm256_add_epi32(_mm256_cvtps_epi32(t), zv)
+}
+
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn requant_i8_avx2(
+    acc: &[i32],
+    corr: i64,
+    mult: f32,
+    bias: f32,
+    z: i32,
+    lo: i32,
+    hi: i32,
+    out: &mut [i8],
+) {
+    let n = acc.len();
+    let corrv = _mm256_set1_pd(corr as f64);
+    let multv = _mm256_set1_ps(mult);
+    let biasv = _mm256_set1_ps(bias);
+    let lov = _mm256_set1_ps((lo - z) as f32);
+    let hiv = _mm256_set1_ps((hi - z) as f32);
+    let zv = _mm256_set1_epi32(z);
+    let ip = acc.as_ptr();
+    let op = out.as_mut_ptr();
+    let mut j = 0usize;
+    while j + 16 <= n {
+        let q0 = requant8_avx2(
+            _mm256_loadu_si256(ip.add(j) as *const __m256i),
+            corrv,
+            multv,
+            biasv,
+            lov,
+            hiv,
+            zv,
+        );
+        let q1 = requant8_avx2(
+            _mm256_loadu_si256(ip.add(j + 8) as *const __m256i),
+            corrv,
+            multv,
+            biasv,
+            lov,
+            hiv,
+            zv,
+        );
+        // Narrow 16 i32 → 16 i8. packs* saturate, but every value is
+        // already inside [lo, hi] ⊆ i8, so the narrowing is exact. The
+        // 64-bit-quad permute undoes packs's per-lane interleave.
+        let p16 = _mm256_permute4x64_epi64::<0b11_01_10_00>(_mm256_packs_epi32(q0, q1));
+        let p8 = _mm_packs_epi16(
+            _mm256_castsi256_si128(p16),
+            _mm256_extracti128_si256::<1>(p16),
+        );
+        _mm_storeu_si128(op.add(j) as *mut __m128i, p8);
+        j += 16;
+    }
+    if j < n {
+        super::requant_i8_scalar(&acc[j..], corr, mult, bias, z, lo, hi, &mut out[j..]);
+    }
+}
+
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn requant_i32_avx2(
+    acc: &[i32],
+    corr: i64,
+    mult: f32,
+    bias: f32,
+    z: i32,
+    lo: i32,
+    hi: i32,
+    out: &mut [i32],
+) {
+    let n = acc.len();
+    let corrv = _mm256_set1_pd(corr as f64);
+    let multv = _mm256_set1_ps(mult);
+    let biasv = _mm256_set1_ps(bias);
+    let lov = _mm256_set1_ps((lo - z) as f32);
+    let hiv = _mm256_set1_ps((hi - z) as f32);
+    let zv = _mm256_set1_epi32(z);
+    let ip = acc.as_ptr();
+    let op = out.as_mut_ptr();
+    let mut j = 0usize;
+    while j + 8 <= n {
+        let q = requant8_avx2(
+            _mm256_loadu_si256(ip.add(j) as *const __m256i),
+            corrv,
+            multv,
+            biasv,
+            lov,
+            hiv,
+            zv,
+        );
+        _mm256_storeu_si256(op.add(j) as *mut __m256i, q);
+        j += 8;
+    }
+    if j < n {
+        super::requant_i32_scalar(&acc[j..], corr, mult, bias, z, lo, hi, &mut out[j..]);
+    }
+}
+
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn scale_f32_avx2(
+    acc: &[i32],
+    corr: i64,
+    scale: f32,
+    bias: f32,
+    out: &mut [f32],
+) {
+    let n = acc.len();
+    let corrv = _mm256_set1_pd(corr as f64);
+    let sv = _mm256_set1_ps(scale);
+    let bv = _mm256_set1_ps(bias);
+    let ip = acc.as_ptr();
+    let op = out.as_mut_ptr();
+    let mut j = 0usize;
+    while j + 8 <= n {
+        let f = sub_corr_to_f32(_mm256_loadu_si256(ip.add(j) as *const __m256i), corrv);
+        _mm256_storeu_ps(op.add(j), _mm256_add_ps(_mm256_mul_ps(sv, f), bv));
+        j += 8;
+    }
+    if j < n {
+        super::scale_f32_scalar(&acc[j..], corr, scale, bias, &mut out[j..]);
+    }
+}
+
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn dequant_i8_avx2(src: &[i8], z: i32, s: f32, out: &mut [f32]) {
+    let n = src.len();
+    let zv = _mm256_set1_epi32(z);
+    let sv = _mm256_set1_ps(s);
+    let ip = src.as_ptr();
+    let op = out.as_mut_ptr();
+    let mut j = 0usize;
+    while j + 8 <= n {
+        let q = _mm256_cvtepi8_epi32(_mm_loadl_epi64(ip.add(j) as *const __m128i));
+        let f = _mm256_cvtepi32_ps(_mm256_sub_epi32(q, zv));
+        _mm256_storeu_ps(op.add(j), _mm256_mul_ps(sv, f));
+        j += 8;
+    }
+    if j < n {
+        super::dequant_scalar(&src[j..], z, s, &mut out[j..]);
+    }
+}
+
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn axpy4_avx2(
+    v: [f32; 4],
+    b: &[f32],
+    r0: &mut [f32],
+    r1: &mut [f32],
+    r2: &mut [f32],
+    r3: &mut [f32],
+) {
+    let n = b.len();
+    let v0 = _mm256_set1_ps(v[0]);
+    let v1 = _mm256_set1_ps(v[1]);
+    let v2 = _mm256_set1_ps(v[2]);
+    let v3 = _mm256_set1_ps(v[3]);
+    let bp = b.as_ptr();
+    let (p0, p1, p2, p3) = (
+        r0.as_mut_ptr(),
+        r1.as_mut_ptr(),
+        r2.as_mut_ptr(),
+        r3.as_mut_ptr(),
+    );
+    let mut j = 0usize;
+    while j + 8 <= n {
+        let bv = _mm256_loadu_ps(bp.add(j));
+        _mm256_storeu_ps(
+            p0.add(j),
+            _mm256_add_ps(_mm256_loadu_ps(p0.add(j)), _mm256_mul_ps(v0, bv)),
+        );
+        _mm256_storeu_ps(
+            p1.add(j),
+            _mm256_add_ps(_mm256_loadu_ps(p1.add(j)), _mm256_mul_ps(v1, bv)),
+        );
+        _mm256_storeu_ps(
+            p2.add(j),
+            _mm256_add_ps(_mm256_loadu_ps(p2.add(j)), _mm256_mul_ps(v2, bv)),
+        );
+        _mm256_storeu_ps(
+            p3.add(j),
+            _mm256_add_ps(_mm256_loadu_ps(p3.add(j)), _mm256_mul_ps(v3, bv)),
+        );
+        j += 8;
+    }
+    if j < n {
+        super::axpy4_scalar(
+            v,
+            &b[j..],
+            &mut r0[j..],
+            &mut r1[j..],
+            &mut r2[j..],
+            &mut r3[j..],
+        );
+    }
+}

@@ -2,11 +2,16 @@
 //!
 //! Everything convolutional in the Rust engine lowers to one of these three
 //! products via im2col, so this file is where the §Perf effort for L3 dense
-//! compute concentrates: row-parallel outer loop, k-blocked inner loop
-//! written so LLVM auto-vectorizes the AXPY over contiguous `b` rows.
+//! compute concentrates: row-parallel outer loop, k-blocked inner loop. The
+//! 4-row AXPY of [`matmul`] runs through the runtime-dispatched SIMD tier
+//! ([`crate::quant::simd::axpy4_f32`]: 256-bit on AVX2, with the scalar
+//! loop — which LLVM auto-vectorizes at baseline width — everywhere else);
+//! mul and add stay separate ops on every tier, so results are
+//! bit-identical across tiers.
 
 use super::Tensor;
 use crate::pool::parallel_rows;
+use crate::quant::simd;
 
 /// `C[M,N] = A[M,K] · B[K,N]`.
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
@@ -28,6 +33,7 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     // and remainder paths are numerically identical and tall-skinny
     // matrices don't serialize a tail after the join.
     let blocks = m.div_ceil(4);
+    let tier = simd::active_tier();
     crate::pool::parallel_chunks(blocks, 1, |b0, b1| {
         // Safety: blocks write disjoint out rows.
         let out_ptr = base.ptr();
@@ -44,15 +50,8 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
                 let (r1, rest) = rest.split_at_mut(n);
                 let (r2, r3) = rest.split_at_mut(n);
                 for kk in 0..k {
-                    let (v0, v1, v2, v3) = (a0[kk], a1[kk], a2[kk], a3[kk]);
                     let brow = &bd[kk * n..(kk + 1) * n];
-                    for j in 0..n {
-                        let bv = brow[j];
-                        r0[j] += v0 * bv;
-                        r1[j] += v1 * bv;
-                        r2[j] += v2 * bv;
-                        r3[j] += v3 * bv;
-                    }
+                    simd::axpy4_f32(tier, [a0[kk], a1[kk], a2[kk], a3[kk]], brow, r0, r1, r2, r3);
                 }
             } else {
                 for r in 0..rb {

@@ -11,6 +11,11 @@
 //!   * systematic bugs (wrong zero-point, dropped correction term, bad
 //!     clamp) shift *every* element and fail the bulk assertions;
 //!   * the typical element agrees exactly, and the worst never exceeds 2.
+//!
+//! The whole suite runs under whatever SIMD tier `quant::simd` dispatches
+//! to on this host — every tier is bit-identical to the scalar kernels,
+//! so these properties must hold unchanged; `scripts/ci.sh` re-runs the
+//! suite with `AIMET_FORCE_SCALAR=1` to gate the scalar end too.
 
 use aimet::compress::{compress_then_ptq, CompressionKind, CompressionPlan, LayerChoice};
 use aimet::engine::lower;

@@ -1,0 +1,214 @@
+//! SIMD-tier bit-exactness properties at the public-API level: whatever
+//! tier dispatch selects on this host, every packed kernel must agree
+//! bit-for-bit with the retained scalar reference
+//! (`quantized_matmul_i32_ref` and the i32 kernels), across shapes that
+//! straddle every register width and blocking boundary, with nonzero
+//! activation zero-points, per-channel rows, and one-tailed-unsigned
+//! (unpacked-fallback) rows.
+//!
+//! The per-tier matrix (every *available* tier, not just the active one)
+//! lives in the `quant::simd` unit tests; `scripts/ci.sh` additionally
+//! re-runs this whole suite under `AIMET_FORCE_SCALAR=1`, so both ends of
+//! the dispatch ladder stay green in CI.
+
+use aimet::quant::{
+    active_tier, available_tiers, quantized_matmul_i32, quantized_matmul_i32_ref, Encoding,
+    QTensor, Requant,
+};
+use aimet::rng::Rng;
+use aimet::tensor::Tensor;
+
+const GRID: [usize; 8] = [1, 3, 4, 5, 17, 63, 64, 65];
+
+#[test]
+fn dispatch_tier_is_available() {
+    assert!(available_tiers().contains(&active_tier()));
+}
+
+/// Per-tensor blocked GEMM (acc_block + vectorized f32 epilogue) is
+/// bit-exact against the naive reference over the full shape grid, with a
+/// nonzero activation zero-point on every case.
+#[test]
+fn blocked_matmul_matches_ref_over_grid() {
+    let mut rng = Rng::new(9001);
+    for &m in &GRID {
+        for &k in &GRID {
+            for &n in &GRID {
+                let w = Tensor::randn(&mut rng, &[m, k], 0.6);
+                let x = Tensor::rand_uniform(&mut rng, &[k, n], -3.0, 1.0);
+                let w_enc = Encoding::from_min_max(w.min(), w.max(), 8, true);
+                let x_enc = Encoding::from_min_max(-3.0, 1.0, 8, false);
+                assert_ne!(x_enc.offset, 0, "want a nonzero zero-point");
+                let b: Vec<f32> = rng.normal_vec(m, 0.2);
+                let fast = quantized_matmul_i32(&w, &w_enc, &x, &x_enc, Some(&b));
+                let slow = quantized_matmul_i32_ref(&w, &w_enc, &x, &x_enc, Some(&b));
+                assert_eq!(fast, slow, "({m},{k},{n}) not bit-exact");
+            }
+        }
+    }
+}
+
+/// Per-channel rows: each output row on its own grid must equal the
+/// reference run row-by-row (stitching single-row per-tensor refs).
+#[test]
+fn per_channel_matmul_matches_rowwise_ref_over_grid() {
+    let mut rng = Rng::new(9002);
+    for &m in &GRID {
+        for &k in &GRID {
+            for &n in &[1usize, 5, 17, 64] {
+                let w = Tensor::randn(&mut rng, &[m, k], 0.6);
+                let encs: Vec<Encoding> = (0..m)
+                    .map(|r| {
+                        let row = &w.data()[r * k..(r + 1) * k];
+                        let mx = row.iter().fold(1e-3f32, |a, &v| a.max(v.abs()));
+                        Encoding::from_min_max(-mx, mx, 8, true)
+                    })
+                    .collect();
+                let qw = QTensor::from_matrix_per_channel(&w, &encs);
+                assert!(qw.is_packed(), "signed per-channel rows pack");
+                let x = Tensor::rand_uniform(&mut rng, &[k, n], -2.0, 2.0);
+                let x_enc = Encoding::from_min_max(-2.0, 2.0, 8, false);
+                assert_ne!(x_enc.offset, 0);
+                let b: Vec<f32> = rng.normal_vec(m, 0.2);
+                let got = qw.matmul(&x, &x_enc, Some(&b));
+                for r in 0..m {
+                    let wrow = Tensor::new(&[1, k], w.data()[r * k..(r + 1) * k].to_vec());
+                    let want =
+                        quantized_matmul_i32_ref(&wrow, &encs[r], &x, &x_enc, Some(&b[r..r + 1]));
+                    assert_eq!(
+                        &got.data()[r * n..(r + 1) * n],
+                        want.data(),
+                        "({m},{k},{n}) row {r}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// One-tailed-unsigned rows (ints up to 255) refuse to pack; the widening
+/// i32 fallback must flow through the very same public API bit-exactly.
+#[test]
+fn unsigned_fallback_rows_match_rowwise_ref_over_grid() {
+    let mut rng = Rng::new(9003);
+    for &m in &GRID {
+        for &k in &GRID {
+            for &n in &[1usize, 4, 17, 65] {
+                let mut wd: Vec<f32> = (0..m * k)
+                    .map(|i| {
+                        let u = ((i * 29 + 7) % 100) as f32 / 100.0;
+                        u * (1.0 + (i % 3) as f32)
+                    })
+                    .collect();
+                // Pin the maximum so row 0 quantizes to 255 — guaranteed
+                // beyond the i8 window, so the tensor cannot pack.
+                wd[0] = 3.0;
+                let w = Tensor::new(&[m, k], wd);
+                let encs: Vec<Encoding> = (0..m)
+                    .map(|r| {
+                        let row = &w.data()[r * k..(r + 1) * k];
+                        let mx = row.iter().fold(1e-3f32, |a, &v| a.max(v));
+                        Encoding::from_min_max(0.0, mx, 8, true)
+                    })
+                    .collect();
+                assert_eq!(encs[0].int_min, 0, "one-tailed rows get the unsigned grid");
+                let qw = QTensor::from_matrix_per_channel(&w, &encs);
+                assert!(!qw.is_packed(), "ints up to 255 cannot narrow to i8");
+                let x = Tensor::rand_uniform(&mut rng, &[k, n], -1.0, 1.0);
+                let x_enc = Encoding::from_min_max(-1.0, 1.0, 8, false);
+                let got = qw.matmul(&x, &x_enc, None);
+                for r in 0..m {
+                    let wrow = Tensor::new(&[1, k], w.data()[r * k..(r + 1) * k].to_vec());
+                    let want = quantized_matmul_i32_ref(&wrow, &encs[r], &x, &x_enc, None);
+                    assert_eq!(
+                        &got.data()[r * n..(r + 1) * n],
+                        want.data(),
+                        "({m},{k},{n}) row {r}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The packed i8 GEMM (SIMD microkernel + vector requant epilogue)
+/// equals the i32 requantizing GEMM on a re-centred grid over the grid.
+#[test]
+fn gemm_requant_i8_matches_i32_route_over_grid() {
+    let mut rng = Rng::new(9004);
+    for &m in &GRID {
+        for &k in &GRID {
+            for &n in &[1usize, 15, 16, 17, 64, 65] {
+                let w = Tensor::randn(&mut rng, &[m, k], 0.5);
+                let x = Tensor::rand_uniform(&mut rng, &[k, n], -1.0, 3.0);
+                let w_enc = Encoding::from_min_max(w.min(), w.max(), 8, true);
+                let x_enc = Encoding::from_min_max(-1.0, 3.0, 8, false);
+                assert_ne!(x_enc.offset, 0);
+                let x_enc_p = x_enc.signed_window();
+                let out_enc = Encoding::from_min_max(-4.0, 4.0, 8, false);
+                let out_enc_p = out_enc.signed_window();
+                let qw = QTensor::from_matrix(&w, &w_enc);
+                let b: Vec<f32> = rng.normal_vec(m, 0.1);
+                let rq = |oe: &Encoding| Requant {
+                    mult: (0..m)
+                        .map(|r| qw.row_scale(r) * x_enc.scale / oe.scale)
+                        .collect(),
+                    bias: b.iter().map(|v| v / oe.scale).collect(),
+                    z_out: oe.offset,
+                    lo: oe.int_min,
+                    hi: oe.int_max,
+                };
+                let x_i32: Vec<i32> = x.data().iter().map(|&v| x_enc.quantize(v)).collect();
+                let x_i8: Vec<i8> = x.data().iter().map(|&v| x_enc_p.quantize(v) as i8).collect();
+                let mut out32 = vec![0i32; m * n];
+                qw.gemm_requant(&x_i32, n, &x_enc, &rq(&out_enc), 1, n, &mut out32);
+                let mut out8 = vec![0i8; m * n];
+                qw.gemm_requant_i8(&x_i8, n, &x_enc_p, &rq(&out_enc_p), &mut out8);
+                for (i, (&q8, &q32)) in out8.iter().zip(&out32).enumerate() {
+                    assert_eq!(q8 as i32, q32 - 128, "({m},{k},{n}) elem {i}");
+                }
+            }
+        }
+    }
+}
+
+/// The packed batch-major Linear kernel (SIMD dot products) equals the
+/// i32 kernel on a re-centred grid across batch/feature sizes straddling
+/// the vector widths.
+#[test]
+fn linear_i8_matches_i32_route_over_grid() {
+    let mut rng = Rng::new(9005);
+    for &nb in &[1usize, 3, 17, 64] {
+        for &k in &GRID {
+            for &m in &[1usize, 5, 17, 63] {
+                let w = Tensor::randn(&mut rng, &[m, k], 0.5);
+                let x = Tensor::rand_uniform(&mut rng, &[nb, k], -1.0, 3.0);
+                let w_enc = Encoding::from_min_max(w.min(), w.max(), 8, true);
+                let x_enc = Encoding::from_min_max(-1.0, 3.0, 8, false);
+                let x_enc_p = x_enc.signed_window();
+                let out_enc = Encoding::from_min_max(-4.0, 4.0, 8, false);
+                let out_enc_p = out_enc.signed_window();
+                let qw = QTensor::from_matrix(&w, &w_enc);
+                let b: Vec<f32> = rng.normal_vec(m, 0.1);
+                let rq = |oe: &Encoding| Requant {
+                    mult: (0..m)
+                        .map(|r| qw.row_scale(r) * x_enc.scale / oe.scale)
+                        .collect(),
+                    bias: b.iter().map(|v| v / oe.scale).collect(),
+                    z_out: oe.offset,
+                    lo: oe.int_min,
+                    hi: oe.int_max,
+                };
+                let x_i32: Vec<i32> = x.data().iter().map(|&v| x_enc.quantize(v)).collect();
+                let x_i8: Vec<i8> = x.data().iter().map(|&v| x_enc_p.quantize(v) as i8).collect();
+                let mut out32 = vec![0i32; nb * m];
+                qw.matmul_xt_requant(&x_i32, nb, &x_enc, &rq(&out_enc), &mut out32);
+                let mut out8 = vec![0i8; nb * m];
+                qw.matmul_xt_requant_i8(&x_i8, nb, &x_enc_p, &rq(&out_enc_p), &mut out8);
+                for (i, (&q8, &q32)) in out8.iter().zip(&out32).enumerate() {
+                    assert_eq!(q8 as i32, q32 - 128, "({nb},{k},{m}) elem {i}");
+                }
+            }
+        }
+    }
+}

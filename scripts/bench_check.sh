@@ -11,7 +11,9 @@
 #     below 2x batch-1 samples/sec, or the packed engine performs ANY
 #     steady-state heap allocation per forward (rust/README.md §Engine), or
 #   * batch-8 engine throughput regresses below 0.9x the previous run
-#     recorded in BENCH_history.jsonl (the perf ratchet).
+#     recorded in BENCH_history.jsonl (the perf ratchet; only applied when
+#     the previous run used the same thread count AND the same SIMD
+#     dispatch tier — see rust/README.md §Perf).
 #
 # On success, appends this run's headline numbers as one JSON line to
 # BENCH_history.jsonl at the repo root (append-only trajectory; failed
@@ -123,11 +125,16 @@ if os.path.exists(hist_path):
 cur = e.get("engine_b8_sps")
 # Entries are host-dependent: only ratchet against a previous run with the
 # same worker-thread count (a laptop→CI or AIMET_THREADS change is not a
-# code regression). A mismatched entry still gets superseded by this run.
+# code regression) AND the same SIMD dispatch tier (an AVX2 laptop run is
+# no baseline for a forced-scalar or SSE-only run, and vice versa). A
+# mismatched entry still gets superseded by this run. Legacy lines predate
+# tier recording; treat their tier as unknown-but-equal only if this run
+# also lacks one.
 comparable = (
     prev is not None
     and isinstance(prev.get("engine_b8_sps"), (int, float))
     and prev.get("threads") == e.get("threads")
+    and prev.get("simd_tier") == e.get("simd_tier")
 )
 if comparable:
     floor = 0.9 * prev["engine_b8_sps"]
@@ -142,8 +149,9 @@ if comparable:
     )
 elif prev is not None:
     print(
-        "bench_check: previous history entry has a different thread count "
-        f"({prev.get('threads')} vs {e.get('threads')}) — ratchet skipped, "
+        "bench_check: previous history entry ran with different threads/tier "
+        f"({prev.get('threads')}/{prev.get('simd_tier')} vs "
+        f"{e.get('threads')}/{e.get('simd_tier')}) — ratchet skipped, "
         "recording this run as the new baseline"
     )
 else:
@@ -161,6 +169,8 @@ entry = {
     "quantsim_over_fp32": ratio,
     "mac_reduction_pct": reduction,
     "threads": e.get("threads"),
+    "simd_tier": e.get("simd_tier"),
+    "gemm_gops": e.get("gemm_gops"),
 }
 with open(hist_path, "a") as f:
     f.write(json.dumps(entry) + "\n")

@@ -18,9 +18,15 @@ echo "== ci: lint (cargo fmt --check && cargo clippy -- -D warnings) =="
 (cd rust && cargo fmt --check)
 (cd rust && cargo clippy --all-targets -- -D warnings)
 
-echo "== ci: tier-1 (cargo build --release && cargo test -q) =="
+echo "== ci: tier-1, native simd dispatch (cargo build --release && cargo test -q) =="
 (cd rust && cargo build --release)
 (cd rust && cargo test -q)
+
+# The SIMD kernel tier must be a pure optimization: the whole suite —
+# including the engine-vs-reference and sim-agreement properties — has to
+# pass identically with dispatch pinned to the scalar reference kernels.
+echo "== ci: tier-1, forced-scalar dispatch (AIMET_FORCE_SCALAR=1 cargo test -q) =="
+(cd rust && AIMET_FORCE_SCALAR=1 cargo test -q)
 
 echo "== ci: bench gates (scripts/bench_check.sh) =="
 "$SCRIPT_DIR/bench_check.sh"
