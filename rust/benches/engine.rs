@@ -189,6 +189,36 @@ fn main() {
     println!("engine vs sim: max deviation {worst} quantization step(s)");
     report.set("max_step_deviation", Json::from(worst as f64));
 
+    // Wavefront schedule of the reference model plus the multi-branch zoo
+    // models at batch 8 — the wavefront executor's acceptance numbers
+    // (`engine_b8_sps_*`; the history ratchet compares runs at the same
+    // SIMD tier and thread count).
+    let (fronts, width) = qm.wavefront_summary();
+    report.set("wavefronts", Json::from(fronts));
+    report.set("max_front_width", Json::from(width));
+    report.set("fused_epilogues", Json::from(qm.fused_epilogues()));
+    for m in ["detmini", "segmini"] {
+        let (g2, data2, _) = trained_model(m, Effort::Fast, 3300);
+        let out2 = standard_ptq_pipeline(&g2, &data2.calibration(4, 16), &PtqOptions::default());
+        let qm2 = lower(&out2.sim).expect("lowering");
+        let (fronts, width) = qm2.wavefront_summary();
+        let (xb, _) = data2.batch(0, 8);
+        let mut s2 = Scratch::new();
+        std::hint::black_box(qm2.forward_with(&xb, &mut s2).data());
+        let t = common::median_secs(15, || {
+            std::hint::black_box(qm2.forward_with(&xb, &mut s2).data());
+        });
+        let sps = 8.0 / t;
+        println!(
+            "{m:<8} b8: {:7.3} ms/batch, {sps:8.1} sps | {fronts} wavefronts (max width {width}), \
+             {} fused epilogues",
+            t * 1e3,
+            qm2.fused_epilogues()
+        );
+        report.set(&format!("engine_b8_sps_{m}"), Json::from(sps));
+        report.set(&format!("wavefronts_{m}"), Json::from(fronts));
+    }
+
     // Closed-loop serving: batch-1 vs coalesced micro-batches.
     let qm = Arc::new(qm);
     let samples: Vec<Tensor> = (0..32).map(|i| data.batch(90_000 + i, 1).0).collect();

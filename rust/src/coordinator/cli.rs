@@ -140,6 +140,21 @@ impl Args {
             .transpose()
     }
 
+    /// Optional `--threads` pin for the worker pool. Validated like every
+    /// other flag (0 or garbage is a hard error), then installed via
+    /// [`crate::pool::set_num_threads`] — which wins over the
+    /// `AIMET_THREADS` env var because it runs before the pool's first
+    /// lazy read.
+    fn apply_threads(&self) -> Result<(), String> {
+        if let Some(t) = self.opt::<usize>("threads")? {
+            if t == 0 {
+                return Err("flag --threads: must be >= 1".to_string());
+            }
+            crate::pool::set_num_threads(t);
+        }
+        Ok(())
+    }
+
     fn effort(&self) -> Result<Effort, String> {
         match self.get("effort") {
             None | Some("fast") => Ok(Effort::Fast),
@@ -163,12 +178,13 @@ COMMANDS
                                  greedy spatial-SVD/channel-prune search to a
                                  MAC budget, then compress -> BN fold -> CLE ->
                                  quantize
-  infer    --model M [--batch N --batches K --effort fast|full]
+  infer    --model M [--batch N --batches K --threads T --effort fast|full]
                                  train + PTQ-calibrate, lower to the integer-only
                                  engine, report eval/agreement/latency vs the
-                                 quantsim and FP32 paths
+                                 quantsim and FP32 paths; --threads pins the
+                                 worker pool (overrides AIMET_THREADS)
   serve-bench --model M [--clients N --requests R --max-batch B
-               --max-wait-ms MS --effort fast|full]
+               --max-wait-ms MS --threads T --effort fast|full]
                                  batched int8 serving: latency percentiles +
                                  throughput, coalesced vs batch-1
   debug    [--effort fast|full]
@@ -195,7 +211,7 @@ fn command_spec(cmd: &str) -> Option<(&'static [&'static str], usize)> {
             ],
             0,
         ),
-        "infer" => (&["model", "batch", "batches", "effort"], 0),
+        "infer" => (&["model", "batch", "batches", "threads", "effort"], 0),
         "serve-bench" => (
             &[
                 "model",
@@ -203,6 +219,7 @@ fn command_spec(cmd: &str) -> Option<(&'static [&'static str], usize)> {
                 "requests",
                 "max-batch",
                 "max-wait-ms",
+                "threads",
                 "effort",
             ],
             0,
@@ -442,15 +459,19 @@ fn cmd_infer(args: &Args) -> Result<i32, String> {
     if batch == 0 || batches == 0 {
         return Err("flags --batch/--batches must be >= 1".to_string());
     }
+    args.apply_threads()?;
     let (model, qm, sim, g, data) = lowered_model(args)?;
     println!("{}", qm.describe());
-    // The static arena plan the packed engine executes against, plus the
-    // SIMD tier its kernels dispatch to.
+    // The static arena plan the packed engine executes against, the
+    // wavefront schedule it dispatches, and the SIMD tier of its kernels.
     let (x0, _) = data.batch(50_000, batch);
+    let (fronts, width) = qm.wavefront_summary();
     println!(
-        "{} | simd tier {}",
+        "{} | {fronts} wavefronts (max width {width}), {} fused epilogues | simd tier {} | threads {}",
         qm.memory_plan(x0.shape()).describe(),
-        crate::quant::simd::active_tier()
+        qm.fused_epilogues(),
+        crate::quant::simd::active_tier(),
+        crate::pool::num_threads()
     );
 
     let out_enc = *qm.output_encoding();
@@ -514,6 +535,7 @@ fn cmd_serve_bench(args: &Args) -> Result<i32, String> {
                 .to_string(),
         );
     }
+    args.apply_threads()?;
     let (model, qm, _, _, data) = lowered_model(args)?;
     println!("{}", qm.describe());
     let qm = std::sync::Arc::new(qm);
@@ -790,9 +812,12 @@ mod tests {
         assert_eq!(run(&sv(&["infer", "--batches", "0"])), 2);
         assert_eq!(run(&sv(&["infer", "--model", "mobimimi"])), 2);
         assert_eq!(run(&sv(&["infer", "--bogus", "1"])), 2);
+        assert_eq!(run(&sv(&["infer", "--threads", "0"])), 2);
+        assert_eq!(run(&sv(&["infer", "--threads", "two"])), 2);
         assert_eq!(run(&sv(&["serve-bench", "--clients", "zero"])), 2);
         assert_eq!(run(&sv(&["serve-bench", "--max-batch", "0"])), 2);
         assert_eq!(run(&sv(&["serve-bench", "--max-wait-ms", "-1"])), 2);
         assert_eq!(run(&sv(&["serve-bench", "--model", "resmimi"])), 2);
+        assert_eq!(run(&sv(&["serve-bench", "--threads", "0"])), 2);
     }
 }

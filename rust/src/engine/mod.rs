@@ -51,7 +51,7 @@ pub use plan::{MemoryPlan, Scratch};
 pub use serve::{run_serve_bench, BatchClient, BatchConfig, BatchServer, ServeReport, ServeStats};
 
 use crate::graph::{lstm_forward, Input, Op};
-use crate::pool::{parallel_chunks, with_worker_scratch, SyncSlice};
+use crate::pool::{effective_threads, parallel_chunks, with_worker_scratch, SyncSlice};
 use crate::quant::simd;
 use crate::quant::{quantize_i8, quantize_i8_into, requantize_value, Encoding, QTensor, Requant, GEMM_MR};
 use crate::quantsim::QuantizationSimModel;
@@ -254,17 +254,55 @@ fn act_clamp(e: &Encoding, act: Option<FusedAct>) -> (i32, i32) {
     }
 }
 
+/// A residual `Add` folded into its producing GEMM's requantization tail.
+///
+/// The conv first requantizes each accumulator tile onto its *own* output
+/// grid exactly as the standalone conv would (same mult/bias/clamps, kept
+/// in i32), then combines with the other operand on the Add's grid:
+/// `q = clamp(rte(m_self·(a − z_self) + m_other·(b − z_other)) + z_out,
+/// lo, hi)`. That is term-for-term the expression the standalone `Add`
+/// node evaluates over stored i8 activations (f32 two-term addition is
+/// exact under commutation), so folding is bit-identical while skipping
+/// one full activation-tensor write + read.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct AddTail {
+    m_self: f32,
+    z_self: i32,
+    m_other: f32,
+    z_other: i32,
+    z_out: i32,
+    lo: i32,
+    hi: i32,
+}
+
+/// A producer whose output is written *directly* into a downstream
+/// concat's buffer (its own arena slot disappears): the producer
+/// quantizes onto its own grid, then applies the concat's per-part
+/// `remap` while scattering rows at `col_off` inside the target's wider
+/// rows — the exact element expression the standalone concat evaluates.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct SinkInfo {
+    /// Node index of the concat whose buffer this node writes.
+    pub(crate) target: usize,
+    /// Element offset of this part along the concat axis row.
+    col_off: usize,
+    /// The concat's grid remap for this part.
+    remap: Remap,
+}
+
 /// One lowered node's executable form.
 #[derive(Debug, Clone)]
 pub(crate) enum QOp {
     /// Dense conv: tiled im2col-free integer GEMM with folded
-    /// requantization; a fused ReLU/ReLU6 lives in `rq`'s clamps.
+    /// requantization; a fused ReLU/ReLU6 lives in `rq`'s clamps and a
+    /// folded residual `Add` in `fuse`.
     Conv {
         qw: QTensor,
         kh: usize,
         kw: usize,
         spec: Conv2dSpec,
         rq: Requant,
+        fuse: Option<AddTail>,
     },
     /// Depthwise conv: per-channel direct integer kernel.
     Depthwise {
@@ -314,8 +352,13 @@ pub(crate) enum QOp {
         lo: i32,
         hi: i32,
     },
-    /// Concatenation: each part requantized onto the output grid.
-    Concat { axis: usize, parts: Vec<Remap> },
+    /// Concatenation: each part requantized onto the output grid. A
+    /// `None` part was sunk — its producer already wrote (and remapped)
+    /// that column range of this node's buffer directly.
+    Concat {
+        axis: usize,
+        parts: Vec<Option<Remap>>,
+    },
     /// f32 island: ops with no integer formulation here (LSTM gate
     /// nonlinearities). Dequantizes its input, reproduces the sim's f32
     /// computation bit-for-bit (same qdq'd weights), requantizes out.
@@ -334,6 +377,9 @@ pub(crate) struct QNode {
     name: String,
     pub(crate) inputs: Vec<Input>,
     pub(crate) op: QOp,
+    /// Set when this node writes straight into a downstream concat's
+    /// buffer instead of owning an arena slot.
+    pub(crate) sink: Option<SinkInfo>,
 }
 
 /// A standalone integer inference model: the output of [`lower`].
@@ -493,7 +539,7 @@ pub fn lower(sim: &QuantizationSimModel) -> Result<QuantizedModel, String> {
                 let ienc = resolve_in(idx, 0);
                 check_acc(&qw, &ienc, &node.name)?;
                 let rq = fold_requant(&qw, bias, &ienc, &oenc, fused_with[idx]);
-                QOp::Conv { qw, kh, kw, spec: *spec, rq }
+                QOp::Conv { qw, kh, kw, spec: *spec, rq, fuse: None }
             }
             Op::DepthwiseConv2d { weight, bias, spec } => {
                 let (c, kh, kw) = (weight.dim(0), weight.dim(2), weight.dim(3));
@@ -586,7 +632,7 @@ pub fn lower(sim: &QuantizationSimModel) -> Result<QuantizedModel, String> {
             }
             Op::Concat { axis } => {
                 let parts = (0..node.inputs.len())
-                    .map(|k| Remap::new(&resolve_in(idx, k), &oenc, None))
+                    .map(|k| Some(Remap::new(&resolve_in(idx, k), &oenc, None)))
                     .collect();
                 QOp::Concat { axis: *axis, parts }
             }
@@ -620,16 +666,160 @@ pub fn lower(sim: &QuantizationSimModel) -> Result<QuantizedModel, String> {
             name: node.name.clone(),
             inputs,
             op,
+            sink: None,
         });
     }
+
+    // Pass 3: deeper epilogue fusion over the lowered graph — residual
+    // Adds fold into their producing conv's requant tail and last-axis
+    // concats of f32 islands are written in place by their producers.
+    // Both transforms are bit-identical to the standalone node sequence
+    // (see [`AddTail`] / [`SinkInfo`]), so the sim-agreement and
+    // reference-path contracts are untouched.
+    let mut out_enc: Vec<Encoding> = out_enc.into_iter().map(|e| e.unwrap()).collect();
+    fuse_epilogues(&mut nodes, &mut out_enc, g.output);
+
     static NEXT_MODEL_ID: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
     Ok(QuantizedModel {
         nodes,
         output: g.output,
         input_enc,
-        out_encs: out_enc.into_iter().map(|e| e.unwrap()).collect(),
+        out_encs: out_enc,
         model_id: NEXT_MODEL_ID.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
     })
+}
+
+/// Lowering pass 3: fold residual `Add`s into producing convs and sink
+/// `LstmF32` parts into their single-consumer last-axis concat.
+fn fuse_epilogues(nodes: &mut [QNode], out_enc: &mut [Encoding], output: usize) {
+    let n = nodes.len();
+    // Read multiplicity per node (FusedAway slots keep stale pre-rewire
+    // inputs that are not real reads — same rule as the liveness pass).
+    let mut consumers = vec![0usize; n];
+    for node in nodes.iter() {
+        if matches!(node.op, QOp::FusedAway) {
+            continue;
+        }
+        for inp in &node.inputs {
+            if let Input::Node(j) = inp {
+                consumers[*j] += 1;
+            }
+        }
+    }
+
+    // (a) Residual-Add folding. A two-input Add where one operand is a
+    // dense conv read by nothing else folds into that conv's tail. The
+    // conv gains the other operand as a second input, which both keeps
+    // liveness exact and orders the conv after the operand in the
+    // wavefront partition; requiring `other < conv` keeps index order a
+    // valid topological order for the sequential reference path. When
+    // both operands qualify, the later conv wins (it satisfies the
+    // ordering constraint by construction).
+    for idx in 0..n {
+        let QOp::Add { ref terms, z_out, lo, hi } = nodes[idx].op else {
+            continue;
+        };
+        if nodes[idx].inputs.len() != 2 || nodes[idx].inputs[0] == nodes[idx].inputs[1] {
+            continue;
+        }
+        let terms = terms.clone();
+        let candidate = |k: usize| -> Option<usize> {
+            let Input::Node(j) = nodes[idx].inputs[k] else {
+                return None;
+            };
+            let ok = matches!(nodes[j].op, QOp::Conv { fuse: None, .. })
+                && consumers[j] == 1
+                && j != output;
+            let order_ok = match nodes[idx].inputs[1 - k] {
+                Input::Graph => true,
+                Input::Node(o) => o < j,
+            };
+            (ok && order_ok).then_some(j)
+        };
+        let Some((k_self, j)) = [0usize, 1]
+            .into_iter()
+            .filter_map(|k| candidate(k).map(|j| (k, j)))
+            .max_by_key(|&(_, j)| j)
+        else {
+            continue;
+        };
+        let other = nodes[idx].inputs[1 - k_self];
+        let (m_self, z_self) = terms[k_self];
+        let (m_other, z_other) = terms[1 - k_self];
+        if let QOp::Conv { fuse, .. } = &mut nodes[j].op {
+            *fuse = Some(AddTail {
+                m_self,
+                z_self,
+                m_other,
+                z_other,
+                z_out,
+                lo,
+                hi,
+            });
+        }
+        nodes[j].inputs.push(other);
+        // The conv's stored output now lives on the Add's grid.
+        out_enc[j] = out_enc[idx];
+        consumers[j] = consumers[idx];
+        consumers[idx] = 0;
+        if idx == output {
+            nodes[idx].op = QOp::Identity;
+            nodes[idx].inputs = vec![Input::Node(j)];
+        } else {
+            nodes[idx].op = QOp::FusedAway;
+            for node in nodes.iter_mut() {
+                for inp in &mut node.inputs {
+                    if *inp == Input::Node(idx) {
+                        *inp = Input::Node(j);
+                    }
+                }
+            }
+        }
+    }
+
+    // (b) Concat sinking. A last-axis concat whose parts are all f32
+    // islands (rank-3 [N, T, H] outputs with statically-known H) lets
+    // each single-consumer part write its column range of the concat
+    // buffer directly. Parts read elsewhere keep their own buffer and are
+    // copied by the concat as before.
+    for idx in 0..n {
+        let QOp::Concat { axis, .. } = nodes[idx].op else {
+            continue;
+        };
+        if axis != 2 {
+            continue;
+        }
+        let widths: Option<Vec<usize>> = nodes[idx]
+            .inputs
+            .iter()
+            .map(|inp| match inp {
+                Input::Node(j) => match nodes[*j].op {
+                    QOp::LstmF32 { hidden, .. } => Some(hidden),
+                    _ => None,
+                },
+                Input::Graph => None,
+            })
+            .collect();
+        let Some(widths) = widths else { continue };
+        let inputs = nodes[idx].inputs.clone();
+        let mut col_off = 0usize;
+        for (k, (&inp, &h)) in inputs.iter().zip(&widths).enumerate() {
+            let Input::Node(j) = inp else { unreachable!() };
+            let distinct = inputs.iter().filter(|&&i| i == inp).count() == 1;
+            if distinct && consumers[j] == 1 && j != output && nodes[j].sink.is_none() {
+                let QOp::Concat { ref mut parts, .. } = nodes[idx].op else {
+                    unreachable!()
+                };
+                let remap = parts[k].take().expect("part not yet sunk");
+                nodes[j].sink = Some(SinkInfo {
+                    target: idx,
+                    col_off,
+                    remap,
+                });
+            }
+            col_off += h;
+        }
+    }
 }
 
 /// Pre-pack one weighted layer's integer weights from its calibrated
@@ -699,10 +889,14 @@ enum KernelPath {
 
 impl QuantizedModel {
     /// Zero-allocation integer forward: quantize the input into the
-    /// caller's [`Scratch`] arena, run every node in place against the
-    /// static memory plan, and return a borrowed view of the output
-    /// buffer. After the first call at a given input shape (which plans
-    /// the arena) this performs no heap allocation.
+    /// caller's [`Scratch`] arena, then execute the plan's topological
+    /// wavefronts in order — nodes inside one front are independent with
+    /// non-aliasing buffers, so a front either fans its nodes out across
+    /// the worker pool (many comparable siblings) or runs them inline and
+    /// lets each kernel parallelize internally (one dominant node — see
+    /// [`QuantizedModel::spread_across`]). Returns a borrowed view of the
+    /// output buffer. After the first call at a given input shape (which
+    /// plans the arena) this performs no heap allocation.
     pub fn forward_with<'s>(&self, x: &Tensor, s: &'s mut Scratch) -> IView<'s> {
         let pi = s.ensure_plan(self, x.shape());
         let (plans, arena) = s.parts();
@@ -714,10 +908,8 @@ impl QuantizedModel {
             &mut arena[p.input_offset..p.input_offset + in_len],
         );
         let base = SyncSlice::new(arena.as_mut_ptr());
-        for (idx, node) in self.nodes.iter().enumerate() {
-            if matches!(node.op, QOp::Identity | QOp::FusedAway) {
-                continue; // aliased / empty slots — nothing to execute
-            }
+        let run_one = |idx: usize| {
+            let node = &self.nodes[idx];
             let empty: &[usize] = &[];
             let mut ins = [IView {
                 shape: empty,
@@ -726,8 +918,9 @@ impl QuantizedModel {
             }; MAX_INPUTS];
             for (k, inp) in node.inputs.iter().enumerate() {
                 // SAFETY: the planner keeps every input buffer allocated
-                // (and disjoint from the output block) until after its
-                // last consumer — see `plan_lifetimes_are_disjoint`.
+                // (and disjoint from every block written in this front)
+                // until after its last consumer's front — see
+                // `plan_lifetimes_are_disjoint`.
                 ins[k] = match inp {
                     Input::Graph => IView {
                         shape: &p.input_shape,
@@ -735,6 +928,13 @@ impl QuantizedModel {
                             std::slice::from_raw_parts(base.ptr().add(p.input_offset), in_len)
                         },
                         enc: self.input_enc,
+                    },
+                    Input::Node(j) if p.offsets[*j] == plan::NO_BUFFER => IView {
+                        // Sinking producer: consumers only use its shape
+                        // (the bytes live inside the sink target).
+                        shape: &p.shapes[*j],
+                        data: &[],
+                        enc: self.out_encs[*j],
                     },
                     Input::Node(j) => IView {
                         shape: &p.shapes[*j],
@@ -748,18 +948,50 @@ impl QuantizedModel {
                     },
                 };
             }
-            let out_len = p.node_len(idx);
-            // SAFETY: output blocks are disjoint from all live inputs.
-            let out = unsafe {
-                std::slice::from_raw_parts_mut(base.ptr().add(p.offsets[idx]), out_len)
-            };
-            run_node(
-                node,
-                &ins[..node.inputs.len()],
-                out,
-                self.out_encs[idx],
-                KernelPath::Packed,
-            );
+            match &node.sink {
+                Some(si) => {
+                    // SAFETY: sinking siblings write disjoint column
+                    // ranges of the target block (see `run_sinked`).
+                    let dst = SyncSlice::new(unsafe { base.ptr().add(p.offsets[si.target]) });
+                    run_sinked(
+                        node,
+                        &ins[..node.inputs.len()],
+                        dst,
+                        p.node_len(si.target),
+                        self.out_encs[idx],
+                    );
+                }
+                None => {
+                    let out_len = p.node_len(idx);
+                    // SAFETY: output blocks are disjoint from all live
+                    // inputs and from every sibling output in the front.
+                    let out = unsafe {
+                        std::slice::from_raw_parts_mut(base.ptr().add(p.offsets[idx]), out_len)
+                    };
+                    run_node(
+                        node,
+                        &ins[..node.inputs.len()],
+                        out,
+                        self.out_encs[idx],
+                        KernelPath::Packed,
+                    );
+                }
+            }
+        };
+        for front in &p.wavefronts {
+            if self.spread_across(front, &p.shapes) {
+                // Across-node: one pool lane per node; kernels inside a
+                // lane see IN_POOL_JOB and run their loops inline.
+                parallel_chunks(front.len(), 1, |a, b| {
+                    for t in a..b {
+                        run_one(front[t]);
+                    }
+                });
+            } else {
+                for &idx in front {
+                    run_one(idx);
+                }
+            }
         }
         let off = p.offsets[self.output];
         let len = p.node_len(self.output);
@@ -768,6 +1000,39 @@ impl QuantizedModel {
             data: &arena[off..off + len],
             enc: self.out_encs[self.output],
         }
+    }
+
+    /// Wavefront width heuristic: fan a front's nodes out across the pool
+    /// only when no single node dominates its cost (`2·max ≤ Σ`) — one
+    /// fat node is better served by its kernel's internal row/tile
+    /// parallelism, which across-node dispatch would force inline.
+    fn spread_across(&self, front: &[usize], shapes: &[Vec<usize>]) -> bool {
+        if front.len() < 2 || effective_threads() < 2 {
+            return false;
+        }
+        let mut total = 0u64;
+        let mut max = 0u64;
+        for &i in front {
+            let c = self.node_cost(i, shapes);
+            total += c;
+            max = max.max(c);
+        }
+        max * 2 <= total
+    }
+
+    /// Coarse per-node cost: output elements × work per output element.
+    fn node_cost(&self, idx: usize, shapes: &[Vec<usize>]) -> u64 {
+        let out = shapes[idx].iter().product::<usize>().max(1) as u64;
+        let per = match &self.nodes[idx].op {
+            QOp::Conv { qw, .. } | QOp::Depthwise { qw, .. } | QOp::Linear { qw, .. } => {
+                qw.cols() as u64
+            }
+            // f32 island: four gates over (input + recurrent) features,
+            // in f32 — weigh it like its MAC count.
+            QOp::LstmF32 { w_ih, hidden, .. } => 4 * (w_ih.dim(1) + *hidden) as u64,
+            _ => 2,
+        };
+        out * per
     }
 
     /// Integer forward pass into an owned tensor (convenience: builds a
@@ -779,27 +1044,57 @@ impl QuantizedModel {
     }
 
     /// The retained pre-refactor i32 data path: per-node heap buffers,
-    /// materialized integer im2col, the 4-row-blocked i32 GEMM. Bit-exact
-    /// against the packed path (`tests/engine_integration.rs` checks the
-    /// whole zoo) — kept as the oracle, not for serving.
+    /// materialized integer im2col, the 4-row-blocked i32 GEMM, strictly
+    /// sequential in node-index order. Bit-exact against the packed
+    /// wavefront path (`tests/engine_integration.rs` checks the whole
+    /// zoo) — kept as the oracle, not for serving. Buffers are allocated
+    /// up front so a sinking producer can write its concat target before
+    /// the concat node's own step.
     pub fn forward_int_ref(&self, x: &Tensor) -> ITensor {
         let shapes = plan::infer_shapes(self, x.shape());
         let xi = ITensor::quantize(x, &self.input_enc);
-        let mut acts: Vec<ITensor> = Vec::with_capacity(self.nodes.len());
+        let mut bufs: Vec<Vec<i8>> = shapes
+            .iter()
+            .map(|s| vec![0i8; s.iter().product()])
+            .collect();
         for (idx, node) in self.nodes.iter().enumerate() {
+            if matches!(node.op, QOp::FusedAway) {
+                continue;
+            }
+            // Detach the destination so the input views can borrow the
+            // rest of the buffer table (a node never reads its target).
+            let tgt = node.sink.as_ref().map_or(idx, |s| s.target);
+            let mut out = std::mem::take(&mut bufs[tgt]);
             let ins: Vec<IView> = node
                 .inputs
                 .iter()
                 .map(|i| match i {
                     Input::Graph => xi.view(),
-                    Input::Node(j) => acts[*j].view(),
+                    Input::Node(j) => IView {
+                        shape: &shapes[*j],
+                        data: &bufs[*j],
+                        enc: self.out_encs[*j],
+                    },
                 })
                 .collect();
-            let mut out = vec![0i8; shapes[idx].iter().product()];
-            run_node(node, &ins, &mut out, self.out_encs[idx], KernelPath::Reference);
-            acts.push(ITensor::new(shapes[idx].clone(), out, self.out_encs[idx]));
+            match &node.sink {
+                Some(_) => run_sinked(
+                    node,
+                    &ins,
+                    SyncSlice::new(out.as_mut_ptr()),
+                    out.len(),
+                    self.out_encs[idx],
+                ),
+                None => run_node(node, &ins, &mut out, self.out_encs[idx], KernelPath::Reference),
+            }
+            drop(ins);
+            bufs[tgt] = out;
         }
-        acts.swap_remove(self.output)
+        ITensor::new(
+            shapes[self.output].clone(),
+            std::mem::take(&mut bufs[self.output]),
+            self.out_encs[self.output],
+        )
     }
 
     /// f32 logits: [`QuantizedModel::forward_int`] + one output dequantize.
@@ -845,12 +1140,31 @@ impl QuantizedModel {
         })
     }
 
-    /// Number of activations fused into their producer's requantization.
+    /// Number of activations fused into their producer's requantization
+    /// (counts every `Identity`/`FusedAway` slot, including `Add`s folded
+    /// by the epilogue-fusion pass).
     pub fn fused_activations(&self) -> usize {
         self.nodes
             .iter()
             .filter(|n| matches!(n.op, QOp::Identity | QOp::FusedAway))
             .count()
+    }
+
+    /// Number of fused epilogues: residual `Add`s folded into a conv's
+    /// requant tail plus concat parts written in place by their producer.
+    pub fn fused_epilogues(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n.op, QOp::Conv { fuse: Some(_), .. }) || n.sink.is_some())
+            .count()
+    }
+
+    /// Wavefront structure of the lowered graph: `(front count, widest
+    /// front)` — shape-independent, what the parallel executor schedules.
+    pub fn wavefront_summary(&self) -> (usize, usize) {
+        let (fronts, _) = plan::wavefronts(self);
+        let max = fronts.iter().map(|f| f.len()).max().unwrap_or(0);
+        (fronts.len(), max)
     }
 
     /// One-line lowering summary for CLI reports.
@@ -860,12 +1174,16 @@ impl QuantizedModel {
             .iter()
             .filter(|n| matches!(n.op, QOp::LstmF32 { .. }))
             .count();
+        let (fronts, width) = self.wavefront_summary();
         format!(
-            "lowered {} nodes: {} fused activations, {} f32 islands, input {}b, output {}b, \
-             simd {}{}",
+            "lowered {} nodes: {} fused activations, {} fused epilogues, {} f32 islands, \
+             {} wavefronts (max width {}), input {}b, output {}b, simd {}{}",
             self.nodes.len(),
             self.fused_activations(),
+            self.fused_epilogues(),
             islands,
+            fronts,
+            width,
             self.input_enc.bw,
             self.output_encoding().bw,
             simd::active_tier(),
@@ -878,10 +1196,18 @@ impl QuantizedModel {
 fn run_node(node: &QNode, ins: &[IView], out: &mut [i8], oenc: Encoding, path: KernelPath) {
     let x = &ins[0];
     match &node.op {
-        QOp::Conv { qw, kh, kw, spec, rq } => match path {
-            KernelPath::Packed => conv_tiled(x, qw, *kh, *kw, *spec, rq, out),
-            KernelPath::Reference => conv_ref(x, qw, *kh, *kw, *spec, rq, out),
-        },
+        QOp::Conv { qw, kh, kw, spec, rq, fuse } => {
+            // A folded residual Add reads its other operand as the conv's
+            // second input (same [N, M, OH, OW] geometry as the output).
+            let ft = fuse.as_ref().map(|t| {
+                debug_assert_eq!(ins[1].len(), out.len(), "fused Add operand shape");
+                (t, &ins[1])
+            });
+            match path {
+                KernelPath::Packed => conv_tiled(x, qw, *kh, *kw, *spec, rq, ft, out),
+                KernelPath::Reference => conv_ref(x, qw, *kh, *kw, *spec, rq, ft, out),
+            }
+        }
         QOp::Depthwise { qw, kh, kw, spec, rq } => depthwise_int(x, qw, *kh, *kw, *spec, rq, out),
         QOp::Linear { qw, rq } => match path {
             KernelPath::Packed => {
@@ -1005,16 +1331,22 @@ fn run_node(node: &QNode, ins: &[IView], out: &mut [i8], oenc: Encoding, path: K
             }
             let outer: usize = x.shape()[..*axis].iter().product();
             let inner: usize = x.shape()[*axis + 1..].iter().product();
-            let mut dst = 0usize;
-            for o in 0..outer {
-                for (p, r) in ins.iter().zip(parts) {
-                    let a = p.dim(*axis);
-                    let base = o * a * inner;
-                    for &q in &p.data()[base..base + a * inner] {
-                        out[dst] = r.map(q as i32) as i8;
-                        dst += 1;
+            // Explicit per-part column offsets: sunk parts (`None`) were
+            // already written — and remapped — by their producers.
+            let total: usize = ins.iter().map(|p| p.dim(*axis) * inner).sum();
+            let mut col = 0usize;
+            for (p, r) in ins.iter().zip(parts) {
+                let a = p.dim(*axis) * inner;
+                if let Some(r) = r {
+                    for o in 0..outer {
+                        let src = &p.data()[o * a..(o + 1) * a];
+                        let dst = &mut out[o * total + col..o * total + col + a];
+                        for (d, &q) in dst.iter_mut().zip(src) {
+                            *d = r.map(q as i32) as i8;
+                        }
                     }
                 }
+                col += a;
             }
         }
         QOp::LstmF32 {
@@ -1031,6 +1363,48 @@ fn run_node(node: &QNode, ins: &[IView], out: &mut [i8], oenc: Encoding, path: K
     }
 }
 
+/// Execute a sinking producer: same computation as [`run_node`] on its
+/// own grid, then the concat's per-part remap applied while scattering
+/// each `[.., H]` row into its column range of the target buffer
+/// (`dst`/`dst_len` describe the *concat's* block). Writes go through row
+/// slices derived from the raw base so concurrent sinking siblings —
+/// whose column ranges are disjoint by construction — never materialize
+/// overlapping `&mut` borrows.
+fn run_sinked(node: &QNode, ins: &[IView], dst: SyncSlice<i8>, dst_len: usize, oenc: Encoding) {
+    let s = node.sink.as_ref().expect("sinking node");
+    let x = &ins[0];
+    match &node.op {
+        QOp::LstmF32 {
+            w_ih,
+            w_hh,
+            bias,
+            hidden,
+            reverse,
+        } => {
+            let xf = x.dequantize();
+            let y = lstm_forward(&xf, w_ih, w_hh, bias, *hidden, *reverse);
+            // Quantize onto the producer's own grid first — the exact
+            // value the standalone node would store — then remap.
+            let mut own = vec![0i8; y.data().len()];
+            quantize_i8_into(y.data(), &oenc, &mut own);
+            let rows = own.len() / *hidden;
+            let total = dst_len / rows;
+            debug_assert!(s.col_off + *hidden <= total, "sink column range");
+            for r in 0..rows {
+                // SAFETY: each (row, part-column-range) destination is
+                // disjoint across sinking siblings and rows.
+                let drow = unsafe {
+                    std::slice::from_raw_parts_mut(dst.ptr().add(r * total + s.col_off), *hidden)
+                };
+                for (d, &q) in drow.iter_mut().zip(&own[r * *hidden..]) {
+                    *d = s.remap.map(q as i32) as i8;
+                }
+            }
+        }
+        _ => unreachable!("only f32-island producers sink into a concat"),
+    }
+}
+
 /// Column-tile width of the im2col-free conv kernel: the patch panel is
 /// `[K, CONV_NR]` i8 (K = C·kh·kw), sized so panel + accumulator tile stay
 /// cache-resident while the packed weight stripes stream through.
@@ -1040,7 +1414,11 @@ const CONV_NR: usize = 64;
 /// pool lane gathers the zero-point-padded patch columns into its
 /// [`with_worker_scratch`] panel, runs every 4-row packed weight block
 /// against it, and requantizes straight into the NCHW output slice. No
-/// full `[K, N·OH·OW]` matrix ever exists; steady state allocates nothing.
+/// full `[K, N·OH·OW]` matrix ever exists; steady state allocates
+/// nothing. With a fused residual `fuse`, the tile requantizes onto the
+/// conv's own grid in i32 registers and combines with the other operand's
+/// matching tile on the Add's grid — one pass, no intermediate tensor.
+#[allow(clippy::too_many_arguments)]
 fn conv_tiled(
     x: &IView,
     qw: &QTensor,
@@ -1048,6 +1426,7 @@ fn conv_tiled(
     kw: usize,
     spec: Conv2dSpec,
     rq: &Requant,
+    fuse: Option<(&AddTail, &IView)>,
     out: &mut [i8],
 ) {
     let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
@@ -1090,17 +1469,50 @@ fn conv_tiled(
                                 nrt,
                             )
                         };
-                        simd::requant_i32_to_i8(
-                            tier,
-                            &acc[r * nrt..(r + 1) * nrt],
-                            corr,
-                            rq.mult[mi],
-                            rq.bias[mi],
-                            rq.z_out,
-                            rq.lo,
-                            rq.hi,
-                            dst,
-                        );
+                        match fuse {
+                            None => simd::requant_i32_to_i8(
+                                tier,
+                                &acc[r * nrt..(r + 1) * nrt],
+                                corr,
+                                rq.mult[mi],
+                                rq.bias[mi],
+                                rq.z_out,
+                                rq.lo,
+                                rq.hi,
+                                dst,
+                            ),
+                            Some((ft, xo)) => {
+                                // Own-grid requant stays in registers/L1;
+                                // the other operand's tile sits at the
+                                // same NCHW offset as this destination.
+                                let mut own = [0i32; CONV_NR];
+                                simd::requant_i32_to_i32(
+                                    tier,
+                                    &acc[r * nrt..(r + 1) * nrt],
+                                    corr,
+                                    rq.mult[mi],
+                                    rq.bias[mi],
+                                    rq.z_out,
+                                    rq.lo,
+                                    rq.hi,
+                                    &mut own[..nrt],
+                                );
+                                let off = (ni * m + mi) * inner + p0;
+                                simd::fused_add_requant_i8(
+                                    tier,
+                                    &own[..nrt],
+                                    &xo.data()[off..off + nrt],
+                                    ft.m_self,
+                                    ft.z_self,
+                                    ft.m_other,
+                                    ft.z_other,
+                                    ft.z_out,
+                                    ft.lo,
+                                    ft.hi,
+                                    dst,
+                                );
+                            }
+                        }
                     }
                 }
             }
@@ -1227,7 +1639,9 @@ fn im2col_i32(x: &IView, kh: usize, kw: usize, spec: Conv2dSpec) -> Vec<i32> {
 
 /// Reference dense conv: materialized i32 im2col + the blocked i32
 /// requantizing GEMM, narrowed into the packed output (the requant clamps
-/// guarantee the values fit).
+/// guarantee the values fit). A fused residual applies the same two-term
+/// epilogue as the packed path over the materialized own-grid values.
+#[allow(clippy::too_many_arguments)]
 fn conv_ref(
     x: &IView,
     qw: &QTensor,
@@ -1235,6 +1649,7 @@ fn conv_ref(
     kw: usize,
     spec: Conv2dSpec,
     rq: &Requant,
+    fuse: Option<(&AddTail, &IView)>,
     out: &mut [i8],
 ) {
     let (n, h, w) = (x.dim(0), x.dim(2), x.dim(3));
@@ -1245,8 +1660,25 @@ fn conv_ref(
     let l = n * inner;
     let mut out32 = vec![0i32; n * o * inner];
     qw.gemm_requant(&cols, l, &x.enc, rq, n, inner, &mut out32);
-    for (d, &v) in out.iter_mut().zip(&out32) {
-        *d = v as i8;
+    match fuse {
+        None => {
+            for (d, &v) in out.iter_mut().zip(&out32) {
+                *d = v as i8;
+            }
+        }
+        Some((ft, xo)) => simd::fused_add_requant_i8(
+            simd::active_tier(),
+            &out32,
+            xo.data(),
+            ft.m_self,
+            ft.z_self,
+            ft.m_other,
+            ft.z_other,
+            ft.z_out,
+            ft.lo,
+            ft.hi,
+            out,
+        ),
     }
 }
 
@@ -1401,6 +1833,47 @@ mod tests {
         assert_eq!(a1.data(), qm.forward_int(&xa).data());
         assert_eq!(b1.data(), qm.forward_int(&xb).data());
         assert_eq!(s.cached_plans(), 1, "same shape = one cached plan");
+    }
+
+    fn lowered_task(model: &str, seed: u64) -> QuantizedModel {
+        let g = zoo::build(model, seed).unwrap();
+        let data = crate::task::TaskData::new(model, seed + 1).unwrap();
+        let out = standard_ptq_pipeline(&g, &data.calibration(3, 8), &PtqOptions::default());
+        lower(&out.sim).expect("lowering")
+    }
+
+    #[test]
+    fn resmini_folds_residual_adds_and_pins_describe() {
+        let qm = lowered_task("resmini", 331);
+        assert!(qm.is_integer_only());
+        // One Add per residual stage folds into its shortcut conv; the two
+        // folded Adds join the three fused ReLUs in the FusedAway count.
+        assert_eq!(qm.fused_epilogues(), 2);
+        assert_eq!(qm.wavefront_summary(), (11, 1));
+        let want = format!(
+            "lowered 16 nodes: 5 fused activations, 2 fused epilogues, 0 f32 islands, \
+             11 wavefronts (max width 1), input 8b, output 8b, simd {} — integer-only",
+            simd::active_tier()
+        );
+        assert_eq!(qm.describe(), want);
+        // Folding must not change a single output int.
+        let data = crate::task::TaskData::new("resmini", 333).unwrap();
+        let (x, _) = data.batch(0, 4);
+        assert_eq!(qm.forward_int(&x).data(), qm.forward_int_ref(&x).data());
+    }
+
+    #[test]
+    fn speechmini_sinks_lstm_outputs_into_concat() {
+        let qm = lowered_task("speechmini", 337);
+        // Both LSTM directions quantize straight into the concat target,
+        // and they form the one width-2 wavefront in the zoo.
+        assert_eq!(qm.fused_epilogues(), 2);
+        assert_eq!(qm.wavefront_summary(), (3, 2));
+        let data = crate::task::TaskData::new("speechmini", 338).unwrap();
+        let (x, _) = data.batch(0, 4);
+        let mut s = Scratch::new();
+        let fast = qm.forward_with(&x, &mut s).to_owned_tensor();
+        assert_eq!(fast.data(), qm.forward_int_ref(&x).data());
     }
 
     #[test]
@@ -1576,8 +2049,8 @@ mod tests {
             let (oh, ow) = spec.out_hw(h, w, kh, kw);
             let mut fast = vec![0i8; n * o * oh * ow];
             let mut slow = vec![0i8; n * o * oh * ow];
-            conv_tiled(&xi.view(), &qw, kh, kw, spec, &rq, &mut fast);
-            conv_ref(&xi.view(), &qw, kh, kw, spec, &rq, &mut slow);
+            conv_tiled(&xi.view(), &qw, kh, kw, spec, &rq, None, &mut fast);
+            conv_ref(&xi.view(), &qw, kh, kw, spec, &rq, None, &mut slow);
             assert_eq!(fast, slow, "case n{n} c{c} {h}x{w} k{kh}x{kw} s{stride} p{pad}");
         }
     }

@@ -1,5 +1,11 @@
 //! Static memory planner for the integer engine — the "zero allocations
-//! per forward" half of the packed-int8 data path.
+//! per forward" half of the packed-int8 data path — plus the wavefront
+//! partition the parallel executor schedules against.
+//!
+//! [`wavefronts`] splits the lowered graph into topological levels:
+//! wavefront *w* holds every executing node whose inputs were all
+//! produced in wavefronts `< w`, so the nodes inside one front are
+//! mutually independent and may run concurrently.
 //!
 //! [`plan`] runs shape inference and liveness analysis over a lowered
 //! [`QuantizedModel`] for one concrete input shape and emits a
@@ -15,10 +21,12 @@
 //! makes steady-state serving allocation-free (`benches/engine.rs` counts
 //! allocations through a wrapping `GlobalAlloc` and gates on zero).
 //!
-//! Safety contract the executor relies on: a node's output block is
-//! allocated *before* any of its inputs' blocks are released (release
-//! happens after the last consumer is planned), so an executing node's
-//! output bytes are always disjoint from all of its live input bytes.
+//! Safety contract the executor relies on, at *wavefront* granularity so
+//! siblings may run in parallel: every buffer defined in wavefront `w`
+//! (including concat buffers that sinking producers write early) is
+//! allocated before any buffer whose last reader sits in wavefront `w` is
+//! released. Two buffers live in the same front therefore never alias —
+//! neither output-vs-input nor output-vs-sibling-output.
 //! `plan_lifetimes_are_disjoint` property-tests exactly this.
 
 use super::{QOp, QuantizedModel};
@@ -56,6 +64,10 @@ pub struct MemoryPlan {
     /// [`Scratch`] cache key, so a scratch reused across models re-plans
     /// instead of executing against a stale layout.
     pub(crate) model_id: u64,
+    /// Topological wavefronts of executing node indices: the units the
+    /// parallel executor schedules (nodes within one front are
+    /// independent and their buffers never alias).
+    pub(crate) wavefronts: Vec<Vec<usize>>,
 }
 
 impl MemoryPlan {
@@ -149,6 +161,45 @@ pub(crate) fn infer_shapes(model: &QuantizedModel, input_shape: &[usize]) -> Vec
         shapes.push(shape);
     }
     shapes
+}
+
+/// Partition the lowered graph into topological wavefronts. Returns
+/// `(fronts, wave_of)`: `fronts[w]` lists the executing nodes of level
+/// `w` (every input produced strictly earlier — the nodes are mutually
+/// independent), and `wave_of[i]` maps node `i` to its front.
+/// Non-executing slots (`Identity` aliases, `FusedAway` placeholders) are
+/// scheduled nowhere; they carry their producer's front so liveness steps
+/// that land on them still resolve to a release point.
+pub(crate) fn wavefronts(model: &QuantizedModel) -> (Vec<Vec<usize>>, Vec<usize>) {
+    let n = model.nodes.len();
+    // lvl 0 = "available before any node runs" (the graph input).
+    // Executing nodes sit at 1 + max(input levels).
+    let mut lvl = vec![0usize; n];
+    let mut wave_of = vec![0usize; n];
+    let mut fronts: Vec<Vec<usize>> = Vec::new();
+    for (i, node) in model.nodes.iter().enumerate() {
+        let dep = node
+            .inputs
+            .iter()
+            .map(|inp| match inp {
+                Input::Graph => 0,
+                Input::Node(j) => lvl[*j],
+            })
+            .max()
+            .unwrap_or(0);
+        if matches!(node.op, QOp::Identity | QOp::FusedAway) {
+            lvl[i] = dep;
+            wave_of[i] = dep.saturating_sub(1);
+        } else {
+            lvl[i] = dep + 1;
+            if fronts.len() < lvl[i] {
+                fronts.resize(lvl[i], Vec::new());
+            }
+            fronts[dep].push(i);
+            wave_of[i] = dep;
+        }
+    }
+    (fronts, wave_of)
 }
 
 /// Buffer liveness over the lowered graph. Buffer ids are `0..n` for node
@@ -250,52 +301,78 @@ impl Arena {
     }
 }
 
-/// Build the arena layout for `model` at `input_shape`.
+/// Build the arena layout for `model` at `input_shape`, at wavefront
+/// granularity: all buffers *defined* in a front are allocated before any
+/// buffer whose last reader sits in that front is released, so the
+/// outputs of concurrently-running siblings never alias each other or any
+/// input still live in the front.
 pub(crate) fn plan(model: &QuantizedModel, input_shape: &[usize]) -> MemoryPlan {
     let n = model.nodes.len();
     let input_id = n;
     let shapes = infer_shapes(model, input_shape);
     let (root, last_use) = liveness(model);
+    let (fronts, wave_of) = wavefronts(model);
+    let nw = fronts.len();
     let size_of = |b: usize| -> usize {
         if b == input_id {
             input_shape.iter().product()
-        } else if root[b] != b {
-            0 // alias — bytes live with the root
+        } else if root[b] != b || model.nodes[b].sink.is_some() {
+            0 // alias / sinking producer — bytes live with the target
         } else {
             shapes[b].iter().product()
         }
     };
-    // Buffers to release after each step: those whose last read is here.
-    let mut frees_at: Vec<Vec<usize>> = vec![Vec::new(); n];
+    // Definition front of every buffer: its node's front, except a concat
+    // buffer written by sinking producers, which must exist from the
+    // earliest sinking producer's front onward.
+    let mut def_wave: Vec<usize> = (0..n).map(|i| wave_of[i]).collect();
+    for (i, node) in model.nodes.iter().enumerate() {
+        if let Some(s) = &node.sink {
+            def_wave[s.target] = def_wave[s.target].min(wave_of[i]);
+        }
+    }
+    let mut defs_at: Vec<Vec<usize>> = vec![Vec::new(); nw];
+    for b in 0..n {
+        if root[b] == b && size_of(b) > 0 {
+            defs_at[def_wave[b]].push(b);
+        }
+    }
+    // Buffers to release after each front: those whose last reader is in
+    // it (a liveness step landing on a non-executing slot resolves to the
+    // producer's front — see `wavefronts`).
+    let mut frees_at: Vec<Vec<usize>> = vec![Vec::new(); nw];
     for b in 0..=input_id {
         if size_of(b) > 0 && last_use[b] < n {
-            frees_at[last_use[b]].push(b);
+            frees_at[wave_of[last_use[b]]].push(b);
         }
     }
     let mut arena = Arena::new();
     let mut offsets = vec![NO_BUFFER; n + 1];
     let mut total = 0usize;
     let mut buffers = 0usize;
-    // The input slot is written before node 0 runs.
+    // The input slot is written before the first front runs.
     offsets[input_id] = arena.alloc(size_of(input_id));
     total += size_of(input_id);
     buffers += 1;
-    for i in 0..n {
-        let sz = size_of(i);
-        if root[i] == i && sz > 0 {
-            // Allocate the output *before* releasing inputs: an executing
-            // node's destination never overlaps its live sources.
-            offsets[i] = arena.alloc(sz);
+    for w in 0..nw {
+        // Allocate every buffer the front defines *before* releasing
+        // anything last-read in it: sibling outputs stay disjoint from
+        // each other and from every live input.
+        for &b in &defs_at[w] {
+            let sz = size_of(b);
+            offsets[b] = arena.alloc(sz);
             total += sz;
             buffers += 1;
         }
-        for &b in &frees_at[i] {
+        for &b in &frees_at[w] {
             arena.release(offsets[b], size_of(b));
         }
     }
-    // Resolve aliases to their root's block.
+    // Resolve aliases to their root's block. Sinking producers keep
+    // NO_BUFFER: the executor routes their writes to the target's block
+    // and consumers never read their slot's bytes.
     for i in 0..n {
-        if root[i] != i {
+        if root[i] != i && offsets[root[i]] != NO_BUFFER {
             offsets[i] = offsets[root[i]];
         }
     }
@@ -308,6 +385,7 @@ pub(crate) fn plan(model: &QuantizedModel, input_shape: &[usize]) -> MemoryPlan 
         total_bytes: total,
         buffers,
         model_id: model.model_id,
+        wavefronts: fronts,
     }
 }
 
@@ -396,38 +474,84 @@ mod tests {
 
     #[test]
     fn plan_lifetimes_are_disjoint() {
-        // The executor's safety contract: while node i runs, its output
-        // block must not overlap any input block, and any two buffers with
-        // overlapping lifetimes must occupy disjoint byte ranges.
+        // The parallel executor's safety contract, at wavefront
+        // granularity: any two buffers whose *wavefront* lifetimes overlap
+        // (def front ≤ the other's last-reader front, both ways) must
+        // occupy disjoint byte ranges — this covers output-vs-live-input
+        // and the new sibling-output-vs-sibling-output case in one sweep.
         for model in ["mobimini", "resmini"] {
             let qm = lowered(model, 603);
             let p = qm.memory_plan(&[3, 3, 32, 32]);
             let (root, last_use) = liveness(&qm);
+            let (_, wave_of) = wavefronts(&qm);
             let n = qm.nodes.len();
             let aligned = |b: usize| b.div_ceil(ALIGN) * ALIGN;
-            // (buffer id, offset, bytes, def step, last step)
+            // Last-reader front; the model output stays live past the end.
+            let rel_wave =
+                |b: usize| -> usize { if last_use[b] >= n { usize::MAX } else { wave_of[last_use[b]] } };
+            let mut def_wave: Vec<usize> = (0..n).map(|i| wave_of[i]).collect();
+            for (i, node) in qm.nodes.iter().enumerate() {
+                if let Some(s) = &node.sink {
+                    def_wave[s.target] = def_wave[s.target].min(wave_of[i]);
+                }
+            }
+            // (buffer id, offset, bytes, def front, last front)
             let mut bufs: Vec<(usize, usize, usize, usize, usize)> = Vec::new();
-            bufs.push((n, p.input_offset, aligned(p.input_len()), 0, last_use[n]));
+            bufs.push((n, p.input_offset, aligned(p.input_len()), 0, rel_wave(n)));
             for i in 0..n {
                 let sz = p.node_len(i);
-                if root[i] == i && sz > 0 {
-                    bufs.push((i, p.offsets[i], aligned(sz), i, last_use[i]));
+                if root[i] == i && sz > 0 && qm.nodes[i].sink.is_none() {
+                    bufs.push((i, p.offsets[i], aligned(sz), def_wave[i], rel_wave(i)));
                 }
             }
             for (ai, &(a, ao, asz, ad, al)) in bufs.iter().enumerate() {
                 for &(b, bo, bsz, bd, bl) in &bufs[ai + 1..] {
-                    // Input slot is live from before node 0.
-                    let (ad, bd) = (if a == n { 0 } else { ad }, if b == n { 0 } else { bd });
                     let lifetimes_overlap = ad <= bl && bd <= al;
                     let ranges_overlap = ao < bo + bsz && bo < ao + asz;
                     assert!(
                         !(lifetimes_overlap && ranges_overlap),
-                        "{model}: buffers {a} [{ao},{};{ad}..{al}] and {b} [{bo},{};{bd}..{bl}] overlap",
+                        "{model}: buffers {a} [{ao},{};w{ad}..w{al}] and {b} [{bo},{};w{bd}..w{bl}] overlap",
                         ao + asz,
                         bo + bsz,
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn wavefronts_partition_executing_nodes_topologically() {
+        for model in ["mobimini", "resmini"] {
+            let qm = lowered(model, 609);
+            let (fronts, wave_of) = wavefronts(&qm);
+            // Every executing node appears exactly once, in its front.
+            let mut seen = vec![0usize; qm.nodes.len()];
+            for (w, front) in fronts.iter().enumerate() {
+                assert!(!front.is_empty(), "{model}: empty front {w}");
+                for &i in front {
+                    seen[i] += 1;
+                    assert_eq!(wave_of[i], w);
+                    // Topological: every input was produced strictly
+                    // earlier (non-executing slots carry their producer's
+                    // front, which is also strictly earlier).
+                    for inp in &qm.nodes[i].inputs {
+                        if let Input::Node(j) = inp {
+                            assert!(
+                                wave_of[*j] < w,
+                                "{model}: node {i} (front {w}) reads {j} (front {})",
+                                wave_of[*j]
+                            );
+                        }
+                    }
+                }
+            }
+            for (i, node) in qm.nodes.iter().enumerate() {
+                let executes = !matches!(node.op, QOp::Identity | QOp::FusedAway);
+                assert_eq!(seen[i], usize::from(executes), "{model}: node {i}");
+            }
+            // The plan carries the same partition.
+            let p = qm.memory_plan(&[2, 3, 32, 32]);
+            assert_eq!(p.wavefronts, fronts);
         }
     }
 

@@ -34,12 +34,13 @@ use std::cell::{Cell, RefCell};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex, OnceLock};
 
-/// Number of worker threads to use: `AIMET_THREADS` env override, else the
-/// available parallelism, clamped to [1, 32]. Read once and cached; set the
-/// env var before first use.
+static CACHED_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Number of worker threads to use: [`set_num_threads`] override, else the
+/// `AIMET_THREADS` env var, else the available parallelism, clamped to
+/// [1, 32]. Read once and cached; configure before first use.
 pub fn num_threads() -> usize {
-    static CACHED: AtomicUsize = AtomicUsize::new(0);
-    let v = CACHED.load(Ordering::Relaxed);
+    let v = CACHED_THREADS.load(Ordering::Relaxed);
     if v != 0 {
         return v;
     }
@@ -52,8 +53,43 @@ pub fn num_threads() -> usize {
                 .unwrap_or(4)
         })
         .clamp(1, 32);
-    CACHED.store(n, Ordering::Relaxed);
+    CACHED_THREADS.store(n, Ordering::Relaxed);
     n
+}
+
+/// Programmatic equivalent of `AIMET_THREADS` (the CLI's `--threads` flag):
+/// pins the thread count before the pool spawns. Must run before the first
+/// parallel region — once workers exist the count is fixed for the process
+/// (later calls are ignored, matching the env var's read-once semantics).
+pub fn set_num_threads(n: usize) {
+    let n = n.clamp(1, 32);
+    let _ = CACHED_THREADS.compare_exchange(0, n, Ordering::Relaxed, Ordering::Relaxed);
+}
+
+thread_local! {
+    /// Scoped cap installed by [`with_thread_cap`] on the submitting thread.
+    static THREAD_CAP: Cell<usize> = const { Cell::new(usize::MAX) };
+}
+
+/// The parallelism the *current* thread may use when submitting work:
+/// `num_threads()` bounded by any [`with_thread_cap`] scope. The engine's
+/// wavefront width heuristic and `parallel_chunks` both read this, so a
+/// capped scope behaves like a smaller pool end to end.
+pub fn effective_threads() -> usize {
+    num_threads().min(THREAD_CAP.with(|c| c.get()))
+}
+
+/// Run `f` with this thread's parallel submissions capped at `cap` lanes
+/// (`cap = 1` forces fully inline, deterministic execution). The cap
+/// bounds chunking and scheduling decisions only — results are
+/// bit-identical at every cap by the kernels' exactness contract, which is
+/// precisely what the engine's thread-matrix property tests exercise
+/// without respawning the process-wide pool.
+pub fn with_thread_cap<R>(cap: usize, f: impl FnOnce() -> R) -> R {
+    let prev = THREAD_CAP.with(|c| c.replace(cap.max(1)));
+    let out = f();
+    THREAD_CAP.with(|c| c.set(prev));
+    out
 }
 
 thread_local! {
@@ -203,9 +239,10 @@ fn worker_loop(pool: &'static PoolInner) {
 
 /// Run `f(start, end)` over disjoint chunks of `0..n`, in parallel on the
 /// persistent pool. Falls back to a single inline call when `n` is small
-/// (below `grain`), when `AIMET_THREADS=1`, or when already running inside
-/// a pool job (nested use). Blocks until every chunk has completed; a panic
-/// in any chunk is re-raised here. Performs no heap allocation.
+/// (below `grain`), when the effective thread count is 1 (`AIMET_THREADS=1`
+/// or a [`with_thread_cap`] scope), or when already running inside a pool
+/// job (nested use). Blocks until every chunk has completed; a panic in any
+/// chunk is re-raised here. Performs no heap allocation.
 pub fn parallel_chunks<F>(n: usize, grain: usize, f: F)
 where
     F: Fn(usize, usize) + Sync,
@@ -213,7 +250,7 @@ where
     if n == 0 {
         return;
     }
-    let threads = num_threads();
+    let threads = effective_threads();
     let grain = grain.max(1);
     if threads <= 1 || n <= grain || IN_POOL_JOB.with(|c| c.get()) {
         f(0, n);
@@ -491,6 +528,27 @@ mod tests {
                 assert_eq!(inner.i32_slice(8).len(), 8);
             });
         });
+    }
+
+    #[test]
+    fn thread_cap_scopes_and_restores() {
+        assert!(effective_threads() >= 1);
+        let full = effective_threads();
+        let out = with_thread_cap(1, || {
+            assert_eq!(effective_threads(), 1);
+            // Capped at 1 lane the region must still cover the range
+            // exactly (it runs inline on this thread).
+            let sum = AtomicU64::new(0);
+            parallel_chunks(1000, 1, |s, e| {
+                sum.fetch_add((e - s) as u64, Ordering::Relaxed);
+            });
+            sum.load(Ordering::Relaxed)
+        });
+        assert_eq!(out, 1000);
+        assert_eq!(effective_threads(), full);
+        // A cap above num_threads() is a no-op, and cap 0 clamps to 1.
+        with_thread_cap(usize::MAX, || assert_eq!(effective_threads(), full));
+        with_thread_cap(0, || assert_eq!(effective_threads(), 1));
     }
 
     #[test]

@@ -129,32 +129,53 @@ pub struct QTensor {
     /// x86-64; the NEON and scalar kernels read the stripe panel, so
     /// other targets skip this copy.
     panels_pairs: Option<Vec<i32>>,
+    /// K-quad broadcast form for the dot-product microkernels
+    /// (`vpdpbusd` / `sdot`): per block, per `k ≡ 0 (mod 4)`, [`GEMM_MR`]
+    /// i32 entries each holding the row's weights for `k..k+4` as the
+    /// four little-endian bytes (zero past K). One 32-bit broadcast feeds
+    /// four k-steps of the widening MAC at once. Present iff `panels` is
+    /// — built on x86-64 and aarch64, skipped elsewhere.
+    panels_quads: Option<Vec<i32>>,
 }
 
-/// Build the i8 row-major copy + the two K-panel forms (i8 stripes and
-/// the x86 k-pair broadcast layout) of an integer weight matrix, or
-/// `None`s when any value falls outside the i8 window.
+/// Build the i8 row-major copy + the three K-panel forms (i8 stripes,
+/// the x86 k-pair broadcast layout, and the k-quad broadcast layout for
+/// the dot-product tiers) of an integer weight matrix, or `None`s when
+/// any value falls outside the i8 window.
 #[allow(clippy::type_complexity)]
 fn pack_weight_i8(
     rows: usize,
     cols: usize,
     data: &[i32],
-) -> (Option<Vec<i8>>, Option<Vec<i8>>, Option<Vec<i32>>) {
+) -> (
+    Option<Vec<i8>>,
+    Option<Vec<i8>>,
+    Option<Vec<i32>>,
+    Option<Vec<i32>>,
+) {
     if data
         .iter()
         .any(|&v| v < i8::MIN as i32 || v > i8::MAX as i32)
     {
-        return (None, None, None);
+        return (None, None, None, None);
     }
     let flat: Vec<i8> = data.iter().map(|&v| v as i8).collect();
     let blocks = rows.div_ceil(GEMM_MR);
     let kp_n = cols.div_ceil(2);
+    let kq_n = cols.div_ceil(4);
     let mut panels = vec![0i8; blocks * GEMM_MR * cols];
     // The k-pair broadcast form only feeds the x86 `pmaddwd` kernels —
     // NEON and scalar read the stripe panel — so other targets skip the
     // extra ~2·M·K bytes per weight tensor.
     let mut pairs = if cfg!(target_arch = "x86_64") {
         Some(vec![0i32; blocks * GEMM_MR * kp_n])
+    } else {
+        None
+    };
+    // The k-quad broadcast form feeds the `vpdpbusd`/`sdot` dot-product
+    // tiers, which exist on both SIMD targets.
+    let mut quads = if cfg!(any(target_arch = "x86_64", target_arch = "aarch64")) {
+        Some(vec![0i32; blocks * GEMM_MR * kq_n])
     } else {
         None
     };
@@ -179,9 +200,22 @@ fn pack_weight_i8(
                     pdst[kp * GEMM_MR + r] = (w0 | (w1 << 16)) as i32;
                 }
             }
+            if let Some(quads) = quads.as_mut() {
+                let qdst = &mut quads[blk * GEMM_MR * kq_n..(blk + 1) * GEMM_MR * kq_n];
+                for kq in 0..kq_n {
+                    let mut v = 0u32;
+                    for t in 0..4 {
+                        let kk = 4 * kq + t;
+                        if kk < cols {
+                            v |= (src[kk] as u8 as u32) << (8 * t);
+                        }
+                    }
+                    qdst[kq * GEMM_MR + r] = v as i32;
+                }
+            }
         }
     }
-    (Some(flat), Some(panels), pairs)
+    (Some(flat), Some(panels), pairs, quads)
 }
 
 impl QTensor {
@@ -196,7 +230,7 @@ impl QTensor {
         let row_sums = (0..rows)
             .map(|r| data[r * cols..(r + 1) * cols].iter().map(|&v| v as i64).sum())
             .collect();
-        let (data_i8, panels, panels_pairs) = pack_weight_i8(rows, cols, &data);
+        let (data_i8, panels, panels_pairs, panels_quads) = pack_weight_i8(rows, cols, &data);
         QTensor {
             rows,
             cols,
@@ -207,6 +241,7 @@ impl QTensor {
             data_i8,
             panels,
             panels_pairs,
+            panels_quads,
         }
     }
 
@@ -241,7 +276,7 @@ impl QTensor {
         let row_sums = (0..rows)
             .map(|r| data[r * cols..(r + 1) * cols].iter().map(|&v| v as i64).sum())
             .collect();
-        let (data_i8, panels, panels_pairs) = pack_weight_i8(rows, cols, &data);
+        let (data_i8, panels, panels_pairs, panels_quads) = pack_weight_i8(rows, cols, &data);
         QTensor {
             rows,
             cols,
@@ -252,6 +287,7 @@ impl QTensor {
             data_i8,
             panels,
             panels_pairs,
+            panels_quads,
         }
     }
 
@@ -312,6 +348,26 @@ impl QTensor {
             .map(|p| &p[blk * GEMM_MR * kp_n..(blk + 1) * GEMM_MR * kp_n])
     }
 
+    /// The k-quad broadcast panel of row block `blk` (layout: `kq·MR + r`,
+    /// each entry four adjacent k's weights as little-endian bytes of one
+    /// i32). None when not packed.
+    fn quad_panel(&self, blk: usize) -> Option<&[i32]> {
+        let kq_n = self.cols.div_ceil(4);
+        self.panels_quads
+            .as_ref()
+            .map(|p| &p[blk * GEMM_MR * kq_n..(blk + 1) * GEMM_MR * kq_n])
+    }
+
+    /// True when the x86 VNNI kernel's biased (u8) activation path cannot
+    /// overflow i32: `vpdpbusd` sees `x + 128 ≤ 255`, a worse worst case
+    /// than the signed bound [`QTensor::acc_bounds_ok`] guarantees, so
+    /// the tier downgrades to AVX2 for the rare K·|w|max big enough to
+    /// breach it.
+    fn u8_bias_headroom_ok(&self) -> bool {
+        let wmax = self.enc.int_min.unsigned_abs().max(self.enc.int_max.unsigned_abs()) as i64;
+        self.cols as i64 * wmax * 255 <= i32::MAX as i64
+    }
+
     /// Row `r` of the i8 copy, when packed.
     pub fn row_i8(&self, r: usize) -> Option<&[i8]> {
         self.data_i8
@@ -366,7 +422,23 @@ impl QTensor {
         debug_assert_eq!(acc.len(), GEMM_MR * nrt, "acc must be [MR, nrt]");
         acc.fill(0);
         if let Some(pw) = self.panel(blk) {
-            simd::acc_tile_dispatch(tier, pw, self.pair_panel(blk), panel, k, nrt, acc);
+            // The VNNI kernel accumulates biased u8 activations; without
+            // headroom for that, run the (still vectorized) AVX2 tier.
+            let tier = if tier == SimdTier::Vnni && !self.u8_bias_headroom_ok() {
+                SimdTier::Avx2
+            } else {
+                tier
+            };
+            simd::acc_tile_dispatch(
+                tier,
+                pw,
+                self.pair_panel(blk),
+                self.quad_panel(blk),
+                panel,
+                k,
+                nrt,
+                acc,
+            );
         } else {
             let i0 = blk * GEMM_MR;
             let rb = (self.rows - i0).min(GEMM_MR);

@@ -28,12 +28,22 @@
 //! Tier coverage (everything not listed falls back to the scalar loop,
 //! which LLVM auto-vectorizes at baseline width):
 //!
-//! | tier     | GEMM microkernel        | i8 dot | requant/dequant | f32 AXPY |
-//! |----------|-------------------------|--------|-----------------|----------|
-//! | `avx2`   | 4×16 `pmaddwd` pairs    | yes    | yes             | yes      |
-//! | `sse4.1` | 4×8 `pmaddwd` pairs     | yes    | scalar          | scalar   |
-//! | `neon`   | 4×16 `smlal` widening   | yes    | yes             | scalar   |
-//! | `scalar` | reference loops         | —      | —               | —        |
+//! | tier           | GEMM microkernel        | i8 dot | requant/dequant | f32 AXPY |
+//! |----------------|-------------------------|--------|-----------------|----------|
+//! | `avx512vnni`   | 4×16 `vpdpbusd` quads   | avx2   | avx2            | avx2     |
+//! | `avx2`         | 4×16 `pmaddwd` pairs    | yes    | yes             | yes      |
+//! | `sse4.1`       | 4×8 `pmaddwd` pairs     | yes    | scalar          | scalar   |
+//! | `neon+dotprod` | 4×16 `sdot` quads       | neon   | neon            | scalar   |
+//! | `neon`         | 4×16 `smlal` widening   | yes    | yes             | scalar   |
+//! | `scalar`       | reference loops         | —      | —               | —        |
+//!
+//! The dot-product tiers consume a third weight layout (the k-quad panel:
+//! four adjacent k's weights as the four bytes of one i32) and fold four
+//! widening multiplies per lane into a single instruction. `vpdpbusd` is
+//! unsigned×signed, so the x86 kernel biases activations by +128 (XOR
+//! 0x80) and subtracts `128·Σw` per row afterwards — still exactly the
+//! same i32 sum, so the bit-exactness contract is untouched; `sdot` is
+//! signed×signed and needs no correction.
 
 use std::fmt;
 use std::sync::OnceLock;
@@ -54,12 +64,19 @@ mod x86;
 /// The instruction-set tier the integer kernels dispatch to.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SimdTier {
+    /// AVX-512 VNNI (256-bit VL encoding): `vpdpbusd` k-quad microkernel
+    /// — four int8 MACs per lane per instruction; epilogues and dot
+    /// products reuse the AVX2 implementations (VNNI implies AVX2 here).
+    Vnni,
     /// 256-bit AVX2: k-pair-interleaved `_mm256_madd_epi16` microkernel
     /// plus vectorized requant/dequant/AXPY epilogues.
     Avx2,
     /// 128-bit SSE4.1 fallback: the same `madd` microkernel at half
     /// width, plus i8 dot products.
     Sse41,
+    /// aarch64 NEON + the dotprod extension: `sdot` k-quad microkernel;
+    /// epilogues and dot products reuse the baseline NEON ones.
+    NeonDot,
     /// aarch64 NEON: `smlal`-style widening multiply-accumulate
     /// microkernel, `smull` dot products, vectorized epilogues.
     Neon,
@@ -71,8 +88,10 @@ impl SimdTier {
     /// Stable string form (benches, CLI reports, `BENCH_history.jsonl`).
     pub fn as_str(self) -> &'static str {
         match self {
+            SimdTier::Vnni => "avx512vnni",
             SimdTier::Avx2 => "avx2",
             SimdTier::Sse41 => "sse4.1",
+            SimdTier::NeonDot => "neon+dotprod",
             SimdTier::Neon => "neon",
             SimdTier::Scalar => "scalar",
         }
@@ -121,11 +140,20 @@ pub fn available_tiers() -> Vec<SimdTier> {
         }
         if std::arch::is_x86_feature_detected!("avx2") {
             tiers.push(SimdTier::Avx2);
+            // The VL (256-bit) encoding of vpdpbusd needs both VNNI and VL.
+            if std::arch::is_x86_feature_detected!("avx512vnni")
+                && std::arch::is_x86_feature_detected!("avx512vl")
+            {
+                tiers.push(SimdTier::Vnni);
+            }
         }
     }
     #[cfg(target_arch = "aarch64")]
     {
         tiers.push(SimdTier::Neon);
+        if std::arch::is_aarch64_feature_detected!("dotprod") {
+            tiers.push(SimdTier::NeonDot);
+        }
     }
     tiers
 }
@@ -138,13 +166,18 @@ pub fn available_tiers() -> Vec<SimdTier> {
 /// weight block. `pw` is the k-major [`GEMM_MR`]-interleaved i8 stripe
 /// panel, `pairs` the k-pair broadcast form (two adjacent k's weights as
 /// two i16 halves of one i32 — what `pmaddwd` wants; built on x86-64
-/// only, `None` elsewhere), `panel` a row-major `[K, nrt]` i8 activation
-/// panel, `acc` a zeroed `[GEMM_MR, nrt]` i32 tile. All tiers sum
-/// identical i32 terms, so results are bit-equal.
+/// only, `None` elsewhere), `quads` the k-quad broadcast form (four
+/// adjacent k's weights as the four bytes of one i32 — what
+/// `vpdpbusd`/`sdot` want; built on x86-64 and aarch64), `panel` a
+/// row-major `[K, nrt]` i8 activation panel, `acc` a zeroed
+/// `[GEMM_MR, nrt]` i32 tile. All tiers sum identical i32 terms, so
+/// results are bit-equal.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn acc_tile_dispatch(
     tier: SimdTier,
     pw: &[i8],
     pairs: Option<&[i32]>,
+    quads: Option<&[i32]>,
     panel: &[i8],
     k: usize,
     nrt: usize,
@@ -156,11 +189,20 @@ pub(crate) fn acc_tile_dispatch(
     if let Some(p) = pairs {
         debug_assert_eq!(p.len(), k.div_ceil(2) * GEMM_MR);
     }
+    if let Some(q) = quads {
+        debug_assert_eq!(q.len(), k.div_ceil(4) * GEMM_MR);
+    }
     match tier {
         #[cfg(target_arch = "x86_64")]
         // SAFETY: the tier was runtime-detected (or explicitly listed by
         // `available_tiers`), so the required features are present; the
-        // pair panel is always built on x86-64.
+        // quad panel is always built on x86-64.
+        SimdTier::Vnni => unsafe {
+            x86::acc_tile_vnni(pw, quads.expect("quad panel on x86-64"), panel, k, nrt, acc)
+        },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above — AVX2 verified at detection time; the pair
+        // panel is always built on x86-64.
         SimdTier::Avx2 => unsafe {
             x86::acc_tile_avx2(pw, pairs.expect("pair panel on x86-64"), panel, k, nrt, acc)
         },
@@ -168,6 +210,12 @@ pub(crate) fn acc_tile_dispatch(
         // SAFETY: as above — SSE4.1 verified at detection time.
         SimdTier::Sse41 => unsafe {
             x86::acc_tile_sse41(pw, pairs.expect("pair panel on x86-64"), panel, k, nrt, acc)
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: dotprod verified at detection time; the quad panel is
+        // always built on aarch64.
+        SimdTier::NeonDot => unsafe {
+            neon::acc_tile_neondot(pw, quads.expect("quad panel on aarch64"), panel, k, nrt, acc)
         },
         #[cfg(target_arch = "aarch64")]
         // SAFETY: NEON is baseline on aarch64.
@@ -213,14 +261,15 @@ pub(crate) fn dot_i8(tier: SimdTier, a: &[i8], b: &[i8]) -> i32 {
     debug_assert_eq!(a.len(), b.len());
     match tier {
         #[cfg(target_arch = "x86_64")]
-        // SAFETY: tier implies the feature (see `acc_tile_dispatch`).
-        SimdTier::Avx2 => unsafe { x86::dot_i8_avx2(a, b) },
+        // SAFETY: tier implies the feature (see `acc_tile_dispatch`);
+        // VNNI implies AVX2 in the probe ladder.
+        SimdTier::Vnni | SimdTier::Avx2 => unsafe { x86::dot_i8_avx2(a, b) },
         #[cfg(target_arch = "x86_64")]
         // SAFETY: as above.
         SimdTier::Sse41 => unsafe { x86::dot_i8_sse41(a, b) },
         #[cfg(target_arch = "aarch64")]
         // SAFETY: NEON is baseline on aarch64.
-        SimdTier::Neon => unsafe { neon::dot_i8_neon(a, b) },
+        SimdTier::NeonDot | SimdTier::Neon => unsafe { neon::dot_i8_neon(a, b) },
         _ => dot_i8_scalar(a, b),
     }
 }
@@ -272,10 +321,10 @@ pub(crate) fn requant_i32_to_i8(
     match tier {
         #[cfg(target_arch = "x86_64")]
         // SAFETY: tier implies AVX2.
-        SimdTier::Avx2 => unsafe { x86::requant_i8_avx2(acc, corr, mult, bias, z, lo, hi, out) },
+        SimdTier::Vnni | SimdTier::Avx2 => unsafe { x86::requant_i8_avx2(acc, corr, mult, bias, z, lo, hi, out) },
         #[cfg(target_arch = "aarch64")]
         // SAFETY: NEON is baseline on aarch64.
-        SimdTier::Neon => unsafe { neon::requant_i8_neon(acc, corr, mult, bias, z, lo, hi, out) },
+        SimdTier::NeonDot | SimdTier::Neon => unsafe { neon::requant_i8_neon(acc, corr, mult, bias, z, lo, hi, out) },
         _ => requant_i8_scalar(acc, corr, mult, bias, z, lo, hi, out),
     }
 }
@@ -313,10 +362,10 @@ pub(crate) fn requant_i32_to_i32(
     match tier {
         #[cfg(target_arch = "x86_64")]
         // SAFETY: tier implies AVX2.
-        SimdTier::Avx2 => unsafe { x86::requant_i32_avx2(acc, corr, mult, bias, z, lo, hi, out) },
+        SimdTier::Vnni | SimdTier::Avx2 => unsafe { x86::requant_i32_avx2(acc, corr, mult, bias, z, lo, hi, out) },
         #[cfg(target_arch = "aarch64")]
         // SAFETY: NEON is baseline on aarch64.
-        SimdTier::Neon => unsafe { neon::requant_i32_neon(acc, corr, mult, bias, z, lo, hi, out) },
+        SimdTier::NeonDot | SimdTier::Neon => unsafe { neon::requant_i32_neon(acc, corr, mult, bias, z, lo, hi, out) },
         _ => requant_i32_scalar(acc, corr, mult, bias, z, lo, hi, out),
     }
 }
@@ -337,6 +386,67 @@ pub(crate) fn requant_i32_scalar(
     }
 }
 
+/// Fused residual-Add tail: combine the producing GEMM's just-requantized
+/// row `qa` (on the producer's own grid, i32-domain) with the already
+/// materialized other operand `qb` and requantize onto the Add's output
+/// grid:
+/// `out[j] = clamp(rte(ma·(qa[j]−za) + mb·(qb[j]−zb)) + z, lo, hi)`.
+/// The two-term f32 sum is formed exactly like the standalone Add node's
+/// loop (`v = 0 + t0 + t1`; f32 addition of two terms is commutative), so
+/// fusing is bit-identical to running the Add as its own pass — it merely
+/// skips one full activation write + read. `lo`/`hi` target an i8 grid.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn fused_add_requant_i8(
+    tier: SimdTier,
+    qa: &[i32],
+    qb: &[i8],
+    ma: f32,
+    za: i32,
+    mb: f32,
+    zb: i32,
+    z: i32,
+    lo: i32,
+    hi: i32,
+    out: &mut [i8],
+) {
+    debug_assert_eq!(qa.len(), qb.len());
+    debug_assert_eq!(qa.len(), out.len());
+    debug_assert!(lo >= i8::MIN as i32 && hi <= i8::MAX as i32);
+    debug_check_clamps(z, lo, hi);
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: tier implies AVX2 (VNNI sits above it in the ladder).
+        SimdTier::Vnni | SimdTier::Avx2 => unsafe {
+            x86::fused_add_i8_avx2(qa, qb, ma, za, mb, zb, z, lo, hi, out)
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        SimdTier::NeonDot | SimdTier::Neon => unsafe {
+            neon::fused_add_i8_neon(qa, qb, ma, za, mb, zb, z, lo, hi, out)
+        },
+        _ => fused_add_i8_scalar(qa, qb, ma, za, mb, zb, z, lo, hi, out),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn fused_add_i8_scalar(
+    qa: &[i32],
+    qb: &[i8],
+    ma: f32,
+    za: i32,
+    mb: f32,
+    zb: i32,
+    z: i32,
+    lo: i32,
+    hi: i32,
+    out: &mut [i8],
+) {
+    for ((d, &a), &b) in out.iter_mut().zip(qa).zip(qb) {
+        let v = ma * (a - za) as f32 + mb * (b as i32 - zb) as f32;
+        *d = requantize_value(v, z, lo, hi) as i8;
+    }
+}
+
 /// The f32 GEMM epilogue: `out[j] = scale·((acc[j] − corr) as f32) + bias`
 /// (eq 2.9's rescale; the quantsim calibration path).
 pub(crate) fn scale_i32_to_f32(
@@ -351,10 +461,10 @@ pub(crate) fn scale_i32_to_f32(
     match tier {
         #[cfg(target_arch = "x86_64")]
         // SAFETY: tier implies AVX2.
-        SimdTier::Avx2 => unsafe { x86::scale_f32_avx2(acc, corr, scale, bias, out) },
+        SimdTier::Vnni | SimdTier::Avx2 => unsafe { x86::scale_f32_avx2(acc, corr, scale, bias, out) },
         #[cfg(target_arch = "aarch64")]
         // SAFETY: NEON is baseline on aarch64.
-        SimdTier::Neon => unsafe { neon::scale_f32_neon(acc, corr, scale, bias, out) },
+        SimdTier::NeonDot | SimdTier::Neon => unsafe { neon::scale_f32_neon(acc, corr, scale, bias, out) },
         _ => scale_f32_scalar(acc, corr, scale, bias, out),
     }
 }
@@ -372,10 +482,10 @@ pub(crate) fn dequant_i8_to_f32(tier: SimdTier, src: &[i8], z: i32, s: f32, out:
     match tier {
         #[cfg(target_arch = "x86_64")]
         // SAFETY: tier implies AVX2.
-        SimdTier::Avx2 => unsafe { x86::dequant_i8_avx2(src, z, s, out) },
+        SimdTier::Vnni | SimdTier::Avx2 => unsafe { x86::dequant_i8_avx2(src, z, s, out) },
         #[cfg(target_arch = "aarch64")]
         // SAFETY: NEON is baseline on aarch64.
-        SimdTier::Neon => unsafe { neon::dequant_i8_neon(src, z, s, out) },
+        SimdTier::NeonDot | SimdTier::Neon => unsafe { neon::dequant_i8_neon(src, z, s, out) },
         _ => dequant_scalar(src, z, s, out),
     }
 }
@@ -405,7 +515,7 @@ pub(crate) fn axpy4_f32(
     match tier {
         #[cfg(target_arch = "x86_64")]
         // SAFETY: tier implies AVX2.
-        SimdTier::Avx2 => unsafe { x86::axpy4_avx2(v, b, r0, r1, r2, r3) },
+        SimdTier::Vnni | SimdTier::Avx2 => unsafe { x86::axpy4_avx2(v, b, r0, r1, r2, r3) },
         _ => axpy4_scalar(v, b, r0, r1, r2, r3),
     }
 }
@@ -547,6 +657,31 @@ mod tests {
             let mut got = vec![0i8; odd.len()];
             requant_i32_to_i8(tier, &odd, 0, 0.5, 0.0, 0, -128, 127, &mut got);
             assert_eq!(got, want, "{tier} ties");
+        }
+    }
+
+    #[test]
+    fn fused_add_epilogue_all_tiers_match_scalar() {
+        // qa spans the full post-requant i8 window (it is a requantized
+        // value, not a raw accumulator), qb the full i8 window; exercise
+        // asymmetric zero points, tie-inducing multipliers, and saturating
+        // clamp windows across every runnable tier and tail length.
+        for &n in &[1usize, 7, 8, 9, 16, 31, 64, 100] {
+            let qa: Vec<i32> = i8_seq(n, 5).iter().map(|&v| v as i32).collect();
+            let qb = i8_seq(n, 9);
+            for &(ma, za, mb, zb, z, lo, hi) in &[
+                (0.37f32, -28i32, 0.91f32, 4i32, -11i32, -128i32, 127i32),
+                (0.5, 1, 0.5, -1, 0, -128, 127),
+                (1.25e-2, -128, 3.5, 127, -100, -128, -28),
+            ] {
+                let mut want = vec![0i8; n];
+                fused_add_i8_scalar(&qa, &qb, ma, za, mb, zb, z, lo, hi, &mut want);
+                for &tier in &available_tiers() {
+                    let mut got = vec![0i8; n];
+                    fused_add_requant_i8(tier, &qa, &qb, ma, za, mb, zb, z, lo, hi, &mut got);
+                    assert_eq!(got, want, "{tier} n{n} ma{ma} mb{mb}");
+                }
+            }
         }
     }
 

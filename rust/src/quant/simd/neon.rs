@@ -61,6 +61,103 @@ pub(crate) unsafe fn acc_tile_neon(
     }
 }
 
+/// One `sdot` step: `acc[lane] += Σ_t s8(x[byte t]) · s8(w[byte t])`.
+/// Emitted via inline asm so the kernel builds without the (toolchain
+/// dependent) dotprod intrinsics; the runtime probe
+/// (`is_aarch64_feature_detected!("dotprod")`) gates execution.
+unsafe fn sdot_128(acc: int32x4_t, x: int8x16_t, w: int8x16_t) -> int32x4_t {
+    let mut out = acc;
+    std::arch::asm!(
+        "sdot {acc:v}.4s, {x:v}.16b, {w:v}.16b",
+        acc = inout(vreg) out,
+        x = in(vreg) x,
+        w = in(vreg) w,
+        options(pure, nomem, nostack),
+    );
+    out
+}
+
+/// NEON+dotprod 4×16 microkernel over the k-quad panel: each `sdot` folds
+/// four k-steps of one accumulator lane into a single instruction, both
+/// operands signed — no bias correction needed, and the per-lane sum is
+/// exactly the scalar loop's i32 terms regrouped, so bit-exactness holds
+/// by integer associativity alone. `acc` must be zeroed; K%4 tail rows
+/// and sub-16 column tails run the scalar reference.
+pub(crate) unsafe fn acc_tile_neondot(
+    pw: &[i8],
+    quads: &[i32],
+    panel: &[i8],
+    k: usize,
+    nrt: usize,
+    acc: &mut [i32],
+) {
+    let kq_full = k / 4;
+    let pp = panel.as_ptr();
+    let ap = acc.as_mut_ptr();
+    let mut jb = 0usize;
+    while jb + GEMM_NR <= nrt {
+        let mut lanes = [[vdupq_n_s32(0); 4]; GEMM_MR];
+        for kq in 0..kq_full {
+            let k0 = 4 * kq;
+            // Four consecutive activation rows, byte-transposed so each
+            // 32-bit lane holds one column's [x(k0)..x(k0+3)] quad — the
+            // dual of the quad weight layout.
+            let a = vld1q_s8(pp.add(k0 * nrt + jb));
+            let b = vld1q_s8(pp.add((k0 + 1) * nrt + jb));
+            let c = vld1q_s8(pp.add((k0 + 2) * nrt + jb));
+            let d = vld1q_s8(pp.add((k0 + 3) * nrt + jb));
+            let t0 = vzip1q_s8(a, b);
+            let t1 = vzip2q_s8(a, b);
+            let t2 = vzip1q_s8(c, d);
+            let t3 = vzip2q_s8(c, d);
+            let x = [
+                // cols 0..3, 4..7, 8..11, 12..15
+                vreinterpretq_s8_s16(vzip1q_s16(
+                    vreinterpretq_s16_s8(t0),
+                    vreinterpretq_s16_s8(t2),
+                )),
+                vreinterpretq_s8_s16(vzip2q_s16(
+                    vreinterpretq_s16_s8(t0),
+                    vreinterpretq_s16_s8(t2),
+                )),
+                vreinterpretq_s8_s16(vzip1q_s16(
+                    vreinterpretq_s16_s8(t1),
+                    vreinterpretq_s16_s8(t3),
+                )),
+                vreinterpretq_s8_s16(vzip2q_s16(
+                    vreinterpretq_s16_s8(t1),
+                    vreinterpretq_s16_s8(t3),
+                )),
+            ];
+            for (r, lane) in lanes.iter_mut().enumerate() {
+                let w = vreinterpretq_s8_s32(vdupq_n_s32(quads[kq * GEMM_MR + r]));
+                for (q, l) in lane.iter_mut().enumerate() {
+                    *l = sdot_128(*l, x[q], w);
+                }
+            }
+        }
+        for (r, lane) in lanes.iter().enumerate() {
+            for (q, l) in lane.iter().enumerate() {
+                vst1q_s32(ap.add(r * nrt + jb + 4 * q), *l);
+            }
+        }
+        jb += GEMM_NR;
+    }
+    if jb < nrt {
+        acc_tile_scalar_cols(pw, panel, k, nrt, jb, nrt, acc);
+    }
+    // K%4 tail rows: plain signed accumulation over the vectorized
+    // columns (scalar-cols above already covered jb..nrt for all k).
+    for kk in 4 * kq_full..k {
+        for r in 0..GEMM_MR {
+            let w = pw[kk * GEMM_MR + r] as i32;
+            for j in 0..jb {
+                acc[r * nrt + j] += w * panel[kk * nrt + j] as i32;
+            }
+        }
+    }
+}
+
 /// NEON i8·i8 dot product: `smull` low/high halves into i16 products
 /// (exact: |w|,|x| ≤ 128), pairwise-accumulated into i32 lanes
 /// (`vpadalq_s16`), horizontal sum once at the end.
@@ -197,6 +294,102 @@ pub(crate) unsafe fn scale_f32_neon(
     }
     if j < n {
         super::scale_f32_scalar(&acc[j..], corr, scale, bias, &mut out[j..]);
+    }
+}
+
+/// Four lanes of the fused residual-Add tail (scalar contract in
+/// `simd::fused_add_requant_i8`): exact i32→f32 conversions of both
+/// centred terms, separate multiplies, one add (never `vmlaq`), then
+/// clamp → rte → +z.
+#[allow(clippy::too_many_arguments)]
+unsafe fn fused_add4_neon(
+    a: int32x4_t,
+    b: int32x4_t,
+    mav: float32x4_t,
+    zav: int32x4_t,
+    mbv: float32x4_t,
+    zbv: int32x4_t,
+    lov: float32x4_t,
+    hiv: float32x4_t,
+    zv: int32x4_t,
+) -> int32x4_t {
+    let fa = vcvtq_f32_s32(vsubq_s32(a, zav));
+    let fb = vcvtq_f32_s32(vsubq_s32(b, zbv));
+    let v = vaddq_f32(vmulq_f32(mav, fa), vmulq_f32(mbv, fb));
+    let t = vminq_f32(vmaxq_f32(v, lov), hiv);
+    vaddq_s32(vcvtnq_s32_f32(t), zv)
+}
+
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn fused_add_i8_neon(
+    qa: &[i32],
+    qb: &[i8],
+    ma: f32,
+    za: i32,
+    mb: f32,
+    zb: i32,
+    z: i32,
+    lo: i32,
+    hi: i32,
+    out: &mut [i8],
+) {
+    let n = qa.len();
+    let mav = vdupq_n_f32(ma);
+    let mbv = vdupq_n_f32(mb);
+    let zav = vdupq_n_s32(za);
+    let zbv = vdupq_n_s32(zb);
+    let lov = vdupq_n_f32((lo - z) as f32);
+    let hiv = vdupq_n_f32((hi - z) as f32);
+    let zv = vdupq_n_s32(z);
+    let ap = qa.as_ptr();
+    let bp = qb.as_ptr();
+    let op = out.as_mut_ptr();
+    let mut j = 0usize;
+    while j + 8 <= n {
+        let b16 = vmovl_s8(vld1_s8(bp.add(j)));
+        let b0 = vmovl_s16(vget_low_s16(b16));
+        let b1 = vmovl_s16(vget_high_s16(b16));
+        let q0 = fused_add4_neon(
+            vld1q_s32(ap.add(j)),
+            b0,
+            mav,
+            zav,
+            mbv,
+            zbv,
+            lov,
+            hiv,
+            zv,
+        );
+        let q1 = fused_add4_neon(
+            vld1q_s32(ap.add(j + 4)),
+            b1,
+            mav,
+            zav,
+            mbv,
+            zbv,
+            lov,
+            hiv,
+            zv,
+        );
+        // Clamped to an i8 window already, so the saturating narrows are
+        // exact.
+        let p16 = vcombine_s16(vqmovn_s32(q0), vqmovn_s32(q1));
+        vst1_s8(op.add(j), vqmovn_s16(p16));
+        j += 8;
+    }
+    if j < n {
+        super::fused_add_i8_scalar(
+            &qa[j..],
+            &qb[j..],
+            ma,
+            za,
+            mb,
+            zb,
+            z,
+            lo,
+            hi,
+            &mut out[j..],
+        );
     }
 }
 

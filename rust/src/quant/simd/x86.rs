@@ -83,6 +83,110 @@ pub(crate) unsafe fn acc_tile_avx2(
     }
 }
 
+/// One `vpdpbusd` step: `acc[lane] += Σ_t u8(x[byte t]) · s8(w[byte t])`.
+/// Emitted via inline asm (the EVEX.256 encoding, which is what the
+/// `avx512vnni` + `avx512vl` runtime probe guarantees) so the kernel
+/// builds on any stable toolchain without the AVX-512 intrinsics.
+#[target_feature(enable = "avx2")]
+unsafe fn dpbusd_256(acc: __m256i, x: __m256i, w: __m256i) -> __m256i {
+    let mut out = acc;
+    std::arch::asm!(
+        "vpdpbusd {acc:y}, {x:y}, {w:y}",
+        acc = inout(ymm_reg) out,
+        x = in(ymm_reg) x,
+        w = in(ymm_reg) w,
+        options(pure, nomem, nostack),
+    );
+    out
+}
+
+/// VNNI 4×16 microkernel over the k-quad panel. `vpdpbusd` is
+/// unsigned×signed, so activations are biased to u8 (`x XOR 0x80` =
+/// `x + 128`) and the kernel subtracts `128·Σw` per row after the K loop
+/// — algebraically the identical i32 sum, so bit-exactness is preserved
+/// without trusting float behaviour at all. The caller has verified the
+/// biased accumulation cannot overflow i32 (`QTensor::acc_tile_tier`
+/// falls back to AVX2 when `cols·|w|max·255` exceeds the headroom).
+/// `acc` must be zeroed; K%4 tail rows and sub-16 column tails run the
+/// scalar reference.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn acc_tile_vnni(
+    pw: &[i8],
+    quads: &[i32],
+    panel: &[i8],
+    k: usize,
+    nrt: usize,
+    acc: &mut [i32],
+) {
+    let kq_full = k / 4;
+    // Per-row weight sums over the vectorized K range, for the u8-bias
+    // correction (tail rows below never enter the biased path).
+    let mut wsum = [0i32; GEMM_MR];
+    for kk in 0..4 * kq_full {
+        for (r, s) in wsum.iter_mut().enumerate() {
+            *s += pw[kk * GEMM_MR + r] as i32;
+        }
+    }
+    let biasv = _mm256_set1_epi8(-128i8); // 0x80 in every byte
+    let pp = panel.as_ptr();
+    let ap = acc.as_mut_ptr();
+    let mut jb = 0usize;
+    while jb + GEMM_NR <= nrt {
+        let mut lanes = [[_mm256_setzero_si256(); 2]; GEMM_MR];
+        for kq in 0..kq_full {
+            let k0 = 4 * kq;
+            // Four consecutive activation rows, 16 columns each …
+            let a = _mm_loadu_si128(pp.add(k0 * nrt + jb) as *const __m128i);
+            let b = _mm_loadu_si128(pp.add((k0 + 1) * nrt + jb) as *const __m128i);
+            let c = _mm_loadu_si128(pp.add((k0 + 2) * nrt + jb) as *const __m128i);
+            let d = _mm_loadu_si128(pp.add((k0 + 3) * nrt + jb) as *const __m128i);
+            // … byte-transposed so each 32-bit lane holds one column's
+            // [x(k0), x(k0+1), x(k0+2), x(k0+3)] — the dual of the quad
+            // weight layout.
+            let t0 = _mm_unpacklo_epi8(a, b);
+            let t1 = _mm_unpackhi_epi8(a, b);
+            let t2 = _mm_unpacklo_epi8(c, d);
+            let t3 = _mm_unpackhi_epi8(c, d);
+            let u0 = _mm_unpacklo_epi16(t0, t2); // cols 0..3
+            let u1 = _mm_unpackhi_epi16(t0, t2); // cols 4..7
+            let u2 = _mm_unpacklo_epi16(t1, t3); // cols 8..11
+            let u3 = _mm_unpackhi_epi16(t1, t3); // cols 12..15
+            let x_lo = _mm256_xor_si256(_mm256_set_m128i(u1, u0), biasv);
+            let x_hi = _mm256_xor_si256(_mm256_set_m128i(u3, u2), biasv);
+            for (r, lane) in lanes.iter_mut().enumerate() {
+                let w = _mm256_set1_epi32(quads[kq * GEMM_MR + r]);
+                lane[0] = dpbusd_256(lane[0], x_lo, w);
+                lane[1] = dpbusd_256(lane[1], x_hi, w);
+            }
+        }
+        for (r, lane) in lanes.iter().enumerate() {
+            let corr = _mm256_set1_epi32(128 * wsum[r]);
+            _mm256_storeu_si256(
+                ap.add(r * nrt + jb) as *mut __m256i,
+                _mm256_sub_epi32(lane[0], corr),
+            );
+            _mm256_storeu_si256(
+                ap.add(r * nrt + jb + 8) as *mut __m256i,
+                _mm256_sub_epi32(lane[1], corr),
+            );
+        }
+        jb += GEMM_NR;
+    }
+    if jb < nrt {
+        acc_tile_scalar_cols(pw, panel, k, nrt, jb, nrt, acc);
+    }
+    // K%4 tail rows: plain signed accumulation over the vectorized
+    // columns (the scalar-cols call above already covered jb..nrt).
+    for kk in 4 * kq_full..k {
+        for r in 0..GEMM_MR {
+            let w = pw[kk * GEMM_MR + r] as i32;
+            for j in 0..jb {
+                acc[r * nrt + j] += w * panel[kk * nrt + j] as i32;
+            }
+        }
+    }
+}
+
 /// SSE4.1 4×8 microkernel — same pair scheme at half width. Within one
 /// 128-bit register `punpck[lh]wd` keeps columns in order (lo = 0..3,
 /// hi = 4..7), so stores need no permute.
@@ -360,6 +464,107 @@ pub(crate) unsafe fn dequant_i8_avx2(src: &[i8], z: i32, s: f32, out: &mut [f32]
     }
     if j < n {
         super::dequant_scalar(&src[j..], z, s, &mut out[j..]);
+    }
+}
+
+/// Eight lanes of the fused residual-Add tail (see
+/// `simd::fused_add_requant_i8` for the scalar contract): both centred
+/// terms are exact i32→f32 conversions, one multiply each, one add (no
+/// FMA), then the standard clamp → rte → +z pipeline.
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn fused_add8_avx2(
+    a: __m256i,
+    b: __m256i,
+    mav: __m256,
+    zav: __m256i,
+    mbv: __m256,
+    zbv: __m256i,
+    lov: __m256,
+    hiv: __m256,
+    zv: __m256i,
+) -> __m256i {
+    let fa = _mm256_cvtepi32_ps(_mm256_sub_epi32(a, zav));
+    let fb = _mm256_cvtepi32_ps(_mm256_sub_epi32(b, zbv));
+    let v = _mm256_add_ps(_mm256_mul_ps(mav, fa), _mm256_mul_ps(mbv, fb));
+    let t = _mm256_min_ps(_mm256_max_ps(v, lov), hiv);
+    _mm256_add_epi32(_mm256_cvtps_epi32(t), zv)
+}
+
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn fused_add_i8_avx2(
+    qa: &[i32],
+    qb: &[i8],
+    ma: f32,
+    za: i32,
+    mb: f32,
+    zb: i32,
+    z: i32,
+    lo: i32,
+    hi: i32,
+    out: &mut [i8],
+) {
+    let n = qa.len();
+    let mav = _mm256_set1_ps(ma);
+    let mbv = _mm256_set1_ps(mb);
+    let zav = _mm256_set1_epi32(za);
+    let zbv = _mm256_set1_epi32(zb);
+    let lov = _mm256_set1_ps((lo - z) as f32);
+    let hiv = _mm256_set1_ps((hi - z) as f32);
+    let zv = _mm256_set1_epi32(z);
+    let ap = qa.as_ptr();
+    let bp = qb.as_ptr();
+    let op = out.as_mut_ptr();
+    let mut j = 0usize;
+    while j + 16 <= n {
+        let b0 = _mm256_cvtepi8_epi32(_mm_loadl_epi64(bp.add(j) as *const __m128i));
+        let b1 = _mm256_cvtepi8_epi32(_mm_loadl_epi64(bp.add(j + 8) as *const __m128i));
+        let q0 = fused_add8_avx2(
+            _mm256_loadu_si256(ap.add(j) as *const __m256i),
+            b0,
+            mav,
+            zav,
+            mbv,
+            zbv,
+            lov,
+            hiv,
+            zv,
+        );
+        let q1 = fused_add8_avx2(
+            _mm256_loadu_si256(ap.add(j + 8) as *const __m256i),
+            b1,
+            mav,
+            zav,
+            mbv,
+            zbv,
+            lov,
+            hiv,
+            zv,
+        );
+        // Same exact narrowing as `requant_i8_avx2`: values are already
+        // clamped to an i8 window, so packs cannot saturate.
+        let p16 = _mm256_permute4x64_epi64::<0b11_01_10_00>(_mm256_packs_epi32(q0, q1));
+        let p8 = _mm_packs_epi16(
+            _mm256_castsi256_si128(p16),
+            _mm256_extracti128_si256::<1>(p16),
+        );
+        _mm_storeu_si128(op.add(j) as *mut __m128i, p8);
+        j += 16;
+    }
+    if j < n {
+        super::fused_add_i8_scalar(
+            &qa[j..],
+            &qb[j..],
+            ma,
+            za,
+            mb,
+            zb,
+            z,
+            lo,
+            hi,
+            &mut out[j..],
+        );
     }
 }
 

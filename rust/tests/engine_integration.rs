@@ -181,6 +181,44 @@ fn packed_path_is_bit_identical_to_i32_reference_across_zoo() {
 }
 
 #[test]
+fn wavefront_executor_is_bit_identical_across_thread_counts() {
+    // The PR-6 tentpole property: the wavefront-parallel arena executor —
+    // including fused Add epilogues (resmini) and LSTM→concat sinking
+    // (speechmini) — reproduces `forward_int_ref` BIT-FOR-BIT at every
+    // thread count. Thread count may change which nodes run concurrently
+    // and which GEMMs split internally, but never a single output int.
+    for model in zoo::MODEL_NAMES {
+        for per_channel in [false, true] {
+            let (_, qm, data) = lowered(model, per_channel);
+            for &bs in &[1usize, 8] {
+                let (x, _) = data.batch(75_000 + bs as u64, bs);
+                let want = qm.forward_int_ref(&x);
+                let mut runs = Vec::new();
+                for &threads in &[1usize, 2, 8] {
+                    let got = aimet::pool::with_thread_cap(threads, || {
+                        let mut s = aimet::engine::Scratch::new();
+                        qm.forward_with(&x, &mut s).to_owned_tensor()
+                    });
+                    assert_eq!(
+                        got.data(),
+                        want.data(),
+                        "{model}/pc{per_channel}/bs{bs}/t{threads} not bit-identical to ref"
+                    );
+                    runs.push(got);
+                }
+                for r in &runs[1..] {
+                    assert_eq!(r.data(), runs[0].data(), "{model} varies with threads");
+                }
+            }
+        }
+    }
+    // And the property above actually exercised the fused lowering paths:
+    // resmini folds both residual Adds, speechmini sinks both LSTM halves.
+    assert_eq!(lowered("resmini", false).1.fused_epilogues(), 2);
+    assert_eq!(lowered("speechmini", false).1.fused_epilogues(), 2);
+}
+
+#[test]
 fn engine_is_batch_invariant_per_sample() {
     // Serving contract: each sample's integer outputs are independent of
     // its batch neighbours — bit-identical, not just within a step.

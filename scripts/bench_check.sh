@@ -111,6 +111,9 @@ print(
 import os
 import time
 
+# A missing or empty history file is the normal first run, and a corrupt
+# last line (truncated append, merge artifact) must not brick the gate:
+# both cases just start a fresh baseline instead of exiting.
 hist_path = "BENCH_history.jsonl"
 prev = None
 if os.path.exists(hist_path):
@@ -120,7 +123,11 @@ if os.path.exists(hist_path):
         try:
             prev = json.loads(lines[-1])
         except json.JSONDecodeError:
-            sys.exit(f"bench_check: {hist_path} last line is not valid JSON")
+            print(
+                f"bench_check: {hist_path} last line is not valid JSON — "
+                "ignoring history, recording this run as the new baseline",
+                file=sys.stderr,
+            )
 
 cur = e.get("engine_b8_sps")
 # Entries are host-dependent: only ratchet against a previous run with the
@@ -147,6 +154,22 @@ if comparable:
         f"bench_check OK: ratchet {cur:.1f} sps vs previous "
         f"{prev['engine_b8_sps']:.1f} sps (floor {floor:.1f})"
     )
+    # Per-model ratchets (multi-branch wavefront models) — only once a
+    # comparable previous run has recorded them.
+    for key in ("engine_b8_sps_detmini", "engine_b8_sps_segmini"):
+        base = prev.get(key)
+        val = e.get(key)
+        if isinstance(base, (int, float)):
+            mfloor = 0.9 * base
+            if not isinstance(val, (int, float)) or val < mfloor:
+                sys.exit(
+                    f"bench_check: {key} {val} sps fell below 0.9x the "
+                    f"previous run ({base:.1f} sps; floor {mfloor:.1f})"
+                )
+            print(
+                f"bench_check OK: ratchet {key} {val:.1f} sps vs previous "
+                f"{base:.1f} sps (floor {mfloor:.1f})"
+            )
 elif prev is not None:
     print(
         "bench_check: previous history entry ran with different threads/tier "
@@ -171,6 +194,9 @@ entry = {
     "threads": e.get("threads"),
     "simd_tier": e.get("simd_tier"),
     "gemm_gops": e.get("gemm_gops"),
+    "engine_b8_sps_detmini": e.get("engine_b8_sps_detmini"),
+    "engine_b8_sps_segmini": e.get("engine_b8_sps_segmini"),
+    "wavefronts": e.get("wavefronts"),
 }
 with open(hist_path, "a") as f:
     f.write(json.dumps(entry) + "\n")

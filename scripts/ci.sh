@@ -28,6 +28,18 @@ echo "== ci: tier-1, native simd dispatch (cargo build --release && cargo test -
 echo "== ci: tier-1, forced-scalar dispatch (AIMET_FORCE_SCALAR=1 cargo test -q) =="
 (cd rust && AIMET_FORCE_SCALAR=1 cargo test -q)
 
+# Thread count must be a pure scheduling choice: the wavefront executor and
+# every parallel kernel are bit-identical at any pool width. Pin the engine
+# suite to a deterministic single thread, then to a high thread count so
+# cross-node fan-out (width > available fronts, nested GEMM splits) is
+# actually exercised rather than left to the host's core count.
+echo "== ci: engine suite, single-thread pool (AIMET_THREADS=1) =="
+(cd rust && AIMET_THREADS=1 cargo test -q --test engine_integration)
+(cd rust && AIMET_THREADS=1 cargo test -q --lib engine::)
+echo "== ci: engine suite, wide pool (AIMET_THREADS=16) =="
+(cd rust && AIMET_THREADS=16 cargo test -q --test engine_integration)
+(cd rust && AIMET_THREADS=16 cargo test -q --lib engine::)
+
 echo "== ci: bench gates (scripts/bench_check.sh) =="
 "$SCRIPT_DIR/bench_check.sh"
 
