@@ -42,6 +42,10 @@ struct Args {
     positionals: Vec<String>,
 }
 
+/// Flags that are on/off switches: present means `true`, no value is
+/// consumed (`aimet infer --profile --trace t.json` parses as expected).
+const SWITCH_FLAGS: &[&str] = &["profile"];
+
 impl Args {
     fn parse(rest: &[String], allowed: &[&str], max_positionals: usize) -> Result<Args, String> {
         let valid = || {
@@ -65,6 +69,11 @@ impl Args {
             if let Some(key) = rest[i].strip_prefix("--") {
                 if !allowed.contains(&key) {
                     return Err(format!("unknown flag --{key}; {}", valid()));
+                }
+                if SWITCH_FLAGS.contains(&key) {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                    continue;
                 }
                 match rest.get(i + 1) {
                     Some(v) if !v.starts_with("--") => {
@@ -179,15 +188,21 @@ COMMANDS
                                  MAC budget, then compress -> BN fold -> CLE ->
                                  quantize
   infer    --model M [--batch N --batches K --threads T --effort fast|full]
+                     [--profile --trace OUT.json --ranges OUT.csv]
                                  train + PTQ-calibrate, lower to the integer-only
                                  engine, report eval/agreement/latency vs the
                                  quantsim and FP32 paths; --threads pins the
-                                 worker pool (overrides AIMET_THREADS)
+                                 worker pool (overrides AIMET_THREADS);
+                                 --profile prints the per-node time/GOPS/clip
+                                 table, --trace writes Chrome trace-event JSON
+                                 (open at ui.perfetto.dev), --ranges dumps
+                                 per-channel weight ranges as CSV
   serve-bench --model M [--clients N --requests R --max-batch B
                --max-wait-ms MS --threads T --effort fast|full]
                                  batched int8 serving: latency percentiles +
                                  throughput, coalesced vs batch-1
-  debug    [--effort fast|full]
+  debug    [--model M --effort fast|full]
+                                 fig 4.5 debugging flow end-to-end on one model
   export   --model M --out DIR
   experiment <table4.1|table4.2|table5.1|table5.2|fig4.2|debug|all>
   runtime  [--dir D --run NAME]  list / smoke-run the PJRT artifacts
@@ -211,7 +226,12 @@ fn command_spec(cmd: &str) -> Option<(&'static [&'static str], usize)> {
             ],
             0,
         ),
-        "infer" => (&["model", "batch", "batches", "threads", "effort"], 0),
+        "infer" => (
+            &[
+                "model", "batch", "batches", "threads", "effort", "profile", "trace", "ranges",
+            ],
+            0,
+        ),
         "serve-bench" => (
             &[
                 "model",
@@ -224,7 +244,7 @@ fn command_spec(cmd: &str) -> Option<(&'static [&'static str], usize)> {
             ],
             0,
         ),
-        "debug" => (&["effort"], 0),
+        "debug" => (&["model", "effort"], 0),
         "export" => (&["model", "out", "effort"], 0),
         "experiment" => (&["effort"], 1),
         "runtime" => (&["dir", "run"], 0),
@@ -459,6 +479,12 @@ fn cmd_infer(args: &Args) -> Result<i32, String> {
     if batch == 0 || batches == 0 {
         return Err("flags --batch/--batches must be >= 1".to_string());
     }
+    let profile = args.bool_or("profile", false)?;
+    let trace_path = args.get("trace").map(str::to_string);
+    let ranges_path = args.get("ranges").map(str::to_string);
+    if trace_path.as_deref() == Some("") || ranges_path.as_deref() == Some("") {
+        return Err("flags --trace/--ranges need a non-empty output path".to_string());
+    }
     args.apply_threads()?;
     let (model, qm, sim, g, data) = lowered_model(args)?;
     println!("{}", qm.describe());
@@ -521,6 +547,42 @@ fn cmd_infer(args: &Args) -> Result<i32, String> {
     println!(
         "  engine vs sim: max deviation {worst_step} step(s), {gt1}/{elems} elements beyond 1 step"
     );
+
+    if let Some(path) = &ranges_path {
+        // Per-channel weight ranges of every weighted layer (the fig 4.2
+        // diagnosis input), one CSV row per channel.
+        let all = crate::visualize::weight_ranges(&g);
+        let mut csv = String::from("layer,channel,min,max\n");
+        for cr in &all {
+            for (ch, (lo, hi)) in cr.ranges.iter().enumerate() {
+                csv.push_str(&format!("{},{ch},{lo},{hi}\n", cr.layer));
+            }
+        }
+        std::fs::write(path, csv).map_err(|e| format!("--ranges {path}: {e}"))?;
+        println!(
+            "  wrote per-channel weight ranges ({} layers) to {path}",
+            all.len()
+        );
+    }
+
+    if profile || trace_path.is_some() {
+        // Re-run the same batches inside a profiling window: spans cost
+        // ≤ 3% (bench-gated), so the timed loop above stays clean.
+        let session = qm.profile_session();
+        for i in 0..batches {
+            let (x, _) = data.batch(50_000 + i as u64, batch);
+            std::hint::black_box(qm.forward_with(&x, &mut scratch).data());
+        }
+        let prof = session.finish();
+        let meta = qm.profile_meta(x0.shape());
+        let report = crate::obs::ProfileReport::build(&meta, &prof);
+        print!("{}", report.render());
+        if let Some(path) = &trace_path {
+            let trace = crate::obs::chrome_trace(&meta, &prof);
+            std::fs::write(path, trace.pretty()).map_err(|e| format!("--trace {path}: {e}"))?;
+            println!("  wrote Chrome trace to {path} — open at ui.perfetto.dev");
+        }
+    }
     Ok(0)
 }
 
@@ -576,7 +638,8 @@ fn cmd_serve_bench(args: &Args) -> Result<i32, String> {
 }
 
 fn cmd_debug(args: &Args) -> Result<i32, String> {
-    let report = experiments::debug_flow_demo(args.effort()?);
+    let model = args.model()?;
+    let report = experiments::debug_flow_for(&model, args.effort()?);
     print!("{}", report.render());
     Ok(0)
 }
@@ -819,5 +882,36 @@ mod tests {
         assert_eq!(run(&sv(&["serve-bench", "--max-wait-ms", "-1"])), 2);
         assert_eq!(run(&sv(&["serve-bench", "--model", "resmimi"])), 2);
         assert_eq!(run(&sv(&["serve-bench", "--threads", "0"])), 2);
+    }
+
+    #[test]
+    fn switch_flags_take_no_value() {
+        // `--profile` is a switch: it consumes nothing, so a value-flag
+        // may follow immediately.
+        let a = Args::parse(
+            &sv(&["--profile", "--batch", "2"]),
+            &["profile", "batch"],
+            0,
+        )
+        .unwrap();
+        assert!(a.bool_or("profile", false).unwrap());
+        assert_eq!(a.usize_or("batch", 0).unwrap(), 2);
+        // Absent switch = default false.
+        let a = Args::parse(&sv(&["--batch", "2"]), &["profile", "batch"], 0).unwrap();
+        assert!(!a.bool_or("profile", false).unwrap());
+    }
+
+    /// The observability/diagnostics flags validate before any work starts.
+    #[test]
+    fn profile_trace_ranges_and_debug_model_validate_cheaply() {
+        // Value flags still need their value...
+        assert_eq!(run(&sv(&["infer", "--trace"])), 2);
+        assert_eq!(run(&sv(&["infer", "--ranges"])), 2);
+        // ...and --profile is only an infer flag.
+        assert_eq!(run(&sv(&["serve-bench", "--profile"])), 2);
+        assert_eq!(run(&sv(&["ptq", "--profile"])), 2);
+        // `debug` validates its model name and rejects strangers.
+        assert_eq!(run(&sv(&["debug", "--model", "mobimimi"])), 2);
+        assert_eq!(run(&sv(&["debug", "--bogus", "1"])), 2);
     }
 }

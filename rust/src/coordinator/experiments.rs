@@ -418,7 +418,13 @@ pub fn render_fig_4_2_4_3(res: &CleRangesResult) -> String {
 // ---------------------------------------------------------------------
 
 pub fn debug_flow_demo(effort: Effort) -> DebugReport {
-    let model = "mobimini";
+    debug_flow_for("mobimini", effort)
+}
+
+/// The fig-4.5 debugging flow end-to-end on any zoo model (what
+/// `aimet debug --model <name>` runs): train, quantize W4/A8 without CLE
+/// so the flow has something to diagnose, then walk the decision tree.
+pub fn debug_flow_for(model: &str, effort: Effort) -> DebugReport {
     let (g, data, _) = trained_model(model, effort, 600);
     let fp32 = evaluate_graph(&g, model, &data, effort.eval_batches(), EVAL_BATCH)
         .expect("zoo eval");

@@ -51,6 +51,7 @@ pub use plan::{MemoryPlan, Scratch};
 pub use serve::{run_serve_bench, BatchClient, BatchConfig, BatchServer, ServeReport, ServeStats};
 
 use crate::graph::{lstm_forward, Input, Op};
+use crate::obs;
 use crate::pool::{effective_threads, parallel_chunks, with_worker_scratch, SyncSlice};
 use crate::quant::simd;
 use crate::quant::{quantize_i8, quantize_i8_into, requantize_value, Encoding, QTensor, Requant, GEMM_MR};
@@ -887,6 +888,34 @@ enum KernelPath {
     Reference,
 }
 
+/// The int8 clamp window a node's requant epilogue pins outputs to, if it
+/// writes one — what the profiler's clip counters sweep against. `None`
+/// for slots that write no fresh bytes (aliases, fused-away placeholders).
+/// On the asymmetric grids ReLU layers pack to, the lower clamp sits at
+/// the zero-point, so lo-hits include legitimate zeros; hi-hits are true
+/// saturation.
+fn clip_window(op: &QOp, oenc: &Encoding) -> Option<(i8, i8)> {
+    let (lo, hi) = match op {
+        QOp::Conv { rq, fuse, .. } => match fuse {
+            Some(t) => (t.lo, t.hi),
+            None => (rq.lo, rq.hi),
+        },
+        QOp::Depthwise { rq, .. } | QOp::Linear { rq, .. } => (rq.lo, rq.hi),
+        QOp::Requantize(r)
+        | QOp::MaxPool2(r)
+        | QOp::AvgPool2(r)
+        | QOp::GlobalAvgPool(r)
+        | QOp::Upsample2(r)
+        | QOp::Flatten(r) => (r.lo, r.hi),
+        QOp::ChannelAffine { lo, hi, .. } | QOp::Add { lo, hi, .. } => (*lo, *hi),
+        // Concat parts and the LSTM island requantize onto the full
+        // output grid.
+        QOp::Concat { .. } | QOp::LstmF32 { .. } => (oenc.int_min, oenc.int_max),
+        QOp::Identity | QOp::FusedAway => return None,
+    };
+    Some((lo as i8, hi as i8))
+}
+
 impl QuantizedModel {
     /// Zero-allocation integer forward: quantize the input into the
     /// caller's [`Scratch`] arena, then execute the plan's topological
@@ -902,13 +931,30 @@ impl QuantizedModel {
         let (plans, arena) = s.parts();
         let p = &plans[pi];
         let in_len = p.input_len();
+        // The whole per-forward observability cost when profiling is off
+        // is this one relaxed load plus a branch per node below.
+        let prof = obs::enabled();
+        let model_lo = self.model_id as u32;
+        let tq0 = if prof { obs::now_ns() } else { 0 };
         quantize_i8_into(
             x.data(),
             &self.input_enc,
             &mut arena[p.input_offset..p.input_offset + in_len],
         );
+        if prof {
+            obs::record(obs::Span {
+                t0_ns: tq0,
+                t1_ns: obs::now_ns(),
+                a: in_len as u64,
+                b: 0,
+                kind: obs::SpanKind::Quantize,
+                id: u32::MAX,
+                model_lo,
+            });
+        }
         let base = SyncSlice::new(arena.as_mut_ptr());
         let run_one = |idx: usize| {
+            let t0 = if prof { obs::now_ns() } else { 0 };
             let node = &self.nodes[idx];
             let empty: &[usize] = &[];
             let mut ins = [IView {
@@ -977,9 +1023,50 @@ impl QuantizedModel {
                     );
                 }
             }
+            if prof {
+                let tn = obs::now_ns();
+                obs::record(obs::Span {
+                    t0_ns: t0,
+                    t1_ns: tn,
+                    a: 0,
+                    b: 0,
+                    kind: obs::SpanKind::Node,
+                    id: idx as u32,
+                    model_lo,
+                });
+                // Quantization health: sweep the output this node just
+                // wrote and count values pinned to its clamp window. A
+                // post-pass over finished bytes, so the forward's results
+                // are untouched (bit-identity is tested zoo-wide).
+                if node.sink.is_none() && p.offsets[idx] != plan::NO_BUFFER {
+                    if let Some((lo, hi)) = clip_window(&node.op, &self.out_encs[idx]) {
+                        let out_len = p.node_len(idx);
+                        if out_len > 0 {
+                            // SAFETY: same block `run_node` just wrote;
+                            // no sibling aliases it within the front.
+                            let out = unsafe {
+                                std::slice::from_raw_parts(base.ptr().add(p.offsets[idx]), out_len)
+                            };
+                            let (c_lo, c_hi) =
+                                simd::count_clipped(simd::active_tier(), out, lo, hi);
+                            obs::record(obs::Span {
+                                t0_ns: tn,
+                                t1_ns: tn,
+                                a: (c_lo << 32) | c_hi,
+                                b: out_len as u64,
+                                kind: obs::SpanKind::Clip,
+                                id: idx as u32,
+                                model_lo,
+                            });
+                        }
+                    }
+                }
+            }
         };
-        for front in &p.wavefronts {
-            if self.spread_across(front, &p.shapes) {
+        for (fi, front) in p.wavefronts.iter().enumerate() {
+            let spread = self.spread_across(front, &p.shapes);
+            let tf0 = if prof { obs::now_ns() } else { 0 };
+            if spread {
                 // Across-node: one pool lane per node; kernels inside a
                 // lane see IN_POOL_JOB and run their loops inline.
                 parallel_chunks(front.len(), 1, |a, b| {
@@ -991,6 +1078,17 @@ impl QuantizedModel {
                 for &idx in front {
                     run_one(idx);
                 }
+            }
+            if prof {
+                obs::record(obs::Span {
+                    t0_ns: tf0,
+                    t1_ns: obs::now_ns(),
+                    a: front.len() as u64,
+                    b: spread as u64,
+                    kind: obs::SpanKind::Wavefront,
+                    id: fi as u32,
+                    model_lo,
+                });
             }
         }
         let off = p.offsets[self.output];
@@ -1108,6 +1206,31 @@ impl QuantizedModel {
     /// this entry point exists for reports and tests.
     pub fn memory_plan(&self, input_shape: &[usize]) -> MemoryPlan {
         plan::plan(self, input_shape)
+    }
+
+    /// Open a scoped profiling window over this model: every
+    /// `forward_with` until `finish` records spans (other models'
+    /// concurrent forwards are tagged separately and filtered out).
+    pub fn profile_session(&self) -> obs::ProfileSession {
+        obs::ProfileSession::begin(self.model_id)
+    }
+
+    /// Static per-node facts for [`obs::ProfileReport`] /
+    /// [`obs::chrome_trace`] at one input shape: node names, MAC counts,
+    /// output sizes, and the plan's per-front live arena bytes.
+    pub fn profile_meta(&self, input_shape: &[usize]) -> obs::ModelMeta {
+        let p = self.memory_plan(input_shape);
+        let nodes = (0..self.nodes.len())
+            .map(|i| obs::NodeMeta {
+                name: self.nodes[i].name.clone(),
+                macs: self.node_cost(i, &p.shapes),
+                out_elems: p.shapes[i].iter().product(),
+            })
+            .collect();
+        obs::ModelMeta {
+            nodes,
+            front_live_bytes: p.front_live_bytes().to_vec(),
+        }
     }
 
     /// The model input's integer encoding (packed to the i8 window).

@@ -68,9 +68,17 @@ pub struct MemoryPlan {
     /// parallel executor schedules (nodes within one front are
     /// independent and their buffers never alias).
     pub(crate) wavefronts: Vec<Vec<usize>>,
+    /// Live arena bytes while each front executes (after its defs, before
+    /// its frees) — the buffer-lifetime signal the profiler exports.
+    pub(crate) front_live_bytes: Vec<usize>,
 }
 
 impl MemoryPlan {
+    /// Live arena bytes per wavefront (defs in, frees pending).
+    pub fn front_live_bytes(&self) -> &[usize] {
+        &self.front_live_bytes
+    }
+
     /// Bytes-without-reuse over bytes-with-reuse: how much the liveness
     /// sharing saved.
     pub fn reuse_factor(&self) -> f64 {
@@ -354,6 +362,8 @@ pub(crate) fn plan(model: &QuantizedModel, input_shape: &[usize]) -> MemoryPlan 
     offsets[input_id] = arena.alloc(size_of(input_id));
     total += size_of(input_id);
     buffers += 1;
+    let mut live = size_of(input_id);
+    let mut front_live_bytes = vec![0usize; nw];
     for w in 0..nw {
         // Allocate every buffer the front defines *before* releasing
         // anything last-read in it: sibling outputs stay disjoint from
@@ -363,9 +373,13 @@ pub(crate) fn plan(model: &QuantizedModel, input_shape: &[usize]) -> MemoryPlan 
             offsets[b] = arena.alloc(sz);
             total += sz;
             buffers += 1;
+            live += sz;
         }
+        // Live while the front runs: its defs are in, its frees not yet out.
+        front_live_bytes[w] = live;
         for &b in &frees_at[w] {
             arena.release(offsets[b], size_of(b));
+            live -= size_of(b);
         }
     }
     // Resolve aliases to their root's block. Sinking producers keep
@@ -386,6 +400,7 @@ pub(crate) fn plan(model: &QuantizedModel, input_shape: &[usize]) -> MemoryPlan 
         buffers,
         model_id: model.model_id,
         wavefronts: fronts,
+        front_live_bytes,
     }
 }
 

@@ -59,6 +59,7 @@ pub mod engine;
 pub mod graph;
 pub mod json;
 pub mod metrics;
+pub mod obs;
 pub mod pool;
 pub mod ptq;
 pub mod qat;

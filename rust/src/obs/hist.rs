@@ -1,0 +1,237 @@
+//! Fixed-size log-bucket latency histogram (HDR-style).
+//!
+//! Values are recorded in milliseconds but bucketed on an integer
+//! nanosecond axis: exact buckets below 16 ns, then 16 linear sub-buckets
+//! per power-of-two octave. Memory is a constant ~7.6 KiB no matter how
+//! many samples land in it — the bounded replacement for the unbounded
+//! `Vec<f64>` the serve bench used to sort — and the worst-case relative
+//! quantization error of a reported percentile is one sub-bucket width:
+//! 2⁻⁴ = 6.25% (halved on average by reporting bucket midpoints).
+//!
+//! `percentile` mirrors the serve tier's nearest-rank definition
+//! (`idx = round(p/100 · (n−1))` over the sorted samples), so on small
+//! samples it agrees with the exact computation to within bucket width —
+//! the property `serve.rs` unit-tests against the real `percentile`.
+
+/// log₂(sub-buckets per octave).
+const SUB_BITS: u32 = 4;
+/// Linear sub-buckets per octave.
+const SUB: usize = 1 << SUB_BITS;
+/// Total buckets: the exact range `0..SUB` plus `SUB` sub-buckets for
+/// every octave a `u64` of nanoseconds can reach.
+const BUCKETS: usize = SUB + (64 - SUB_BITS as usize) * SUB;
+
+/// Bounded-memory latency histogram; see the module docs.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    counts: Box<[u64; BUCKETS]>,
+    n: u64,
+    sum_ms: f64,
+    min_ms: f64,
+    max_ms: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> LogHistogram {
+        LogHistogram::new()
+    }
+}
+
+/// Bucket index of a nanosecond tick.
+fn index(t: u64) -> usize {
+    if t < SUB as u64 {
+        return t as usize;
+    }
+    let top = 63 - t.leading_zeros(); // >= SUB_BITS
+    let group = (top - SUB_BITS) as usize;
+    let sub = ((t >> (top - SUB_BITS)) & (SUB as u64 - 1)) as usize;
+    (SUB + group * SUB + sub).min(BUCKETS - 1)
+}
+
+/// `[lo, hi)` nanosecond range of bucket `idx`.
+fn bounds(idx: usize) -> (u64, u64) {
+    if idx < SUB {
+        return (idx as u64, idx as u64 + 1);
+    }
+    let group = ((idx - SUB) / SUB) as u32;
+    let sub = ((idx - SUB) % SUB) as u64;
+    let top = group + SUB_BITS;
+    let width = 1u64 << (top - SUB_BITS);
+    let lo = (1u64 << top) + sub * width;
+    (lo, lo + width)
+}
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram {
+            counts: Box::new([0u64; BUCKETS]),
+            n: 0,
+            sum_ms: 0.0,
+            min_ms: f64::INFINITY,
+            max_ms: 0.0,
+        }
+    }
+
+    /// Record one latency in milliseconds (negative values clamp to 0).
+    pub fn record_ms(&mut self, ms: f64) {
+        let ms = if ms.is_finite() { ms.max(0.0) } else { 0.0 };
+        let ticks = (ms * 1e6).min(u64::MAX as f64) as u64;
+        self.counts[index(ticks)] += 1;
+        self.n += 1;
+        self.sum_ms += ms;
+        self.min_ms = self.min_ms.min(ms);
+        self.max_ms = self.max_ms.max(ms);
+    }
+
+    /// Fold another histogram in (the per-client merge of the serve bench).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (c, o) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *c += o;
+        }
+        self.n += other.n;
+        self.sum_ms += other.sum_ms;
+        self.min_ms = self.min_ms.min(other.min_ms);
+        self.max_ms = self.max_ms.max(other.max_ms);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum_ms / self.n as f64
+        }
+    }
+
+    pub fn min_ms(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min_ms
+        }
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        self.max_ms
+    }
+
+    /// Nearest-rank percentile in milliseconds: the bucket holding the
+    /// `round(p/100 · (n−1))`-th smallest sample, reported at its midpoint
+    /// and clamped to the exactly-tracked `[min, max]`. The extreme ranks
+    /// short-circuit to the tracked `min`/`max`, so p0/p100 are exact
+    /// (the midpoint of the extremes' buckets generally is not).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let rank = ((p.clamp(0.0, 100.0) / 100.0) * (self.n - 1) as f64).round() as u64;
+        if rank == 0 {
+            return self.min_ms;
+        }
+        if rank == self.n - 1 {
+            return self.max_ms;
+        }
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen > rank {
+                let (lo, hi) = bounds(i);
+                let mid_ms = (lo + hi) as f64 / 2.0 / 1e6;
+                return mid_ms.clamp(self.min_ms, self.max_ms);
+            }
+        }
+        self.max_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The serve tier's exact nearest-rank percentile (the oracle).
+    fn exact(sorted: &[f64], p: f64) -> f64 {
+        let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+        sorted[idx.min(sorted.len() - 1)]
+    }
+
+    #[test]
+    fn buckets_partition_the_axis() {
+        // Every tick lands in exactly the bucket whose range contains it,
+        // and indices are monotone in the value (check in sorted tick
+        // order — the generator itself is not monotone across octaves).
+        let mut ticks: Vec<u64> = Vec::new();
+        for shift in 0..60u32 {
+            for off in [0u64, 1, 7] {
+                ticks.push((1u64 << shift) + off);
+            }
+        }
+        ticks.sort_unstable();
+        let mut prev = 0usize;
+        for &t in &ticks {
+            let i = index(t);
+            let (lo, hi) = bounds(i);
+            assert!(lo <= t && t < hi, "tick {t} not in bucket {i} [{lo},{hi})");
+            assert!(i >= prev, "index not monotone at {t}");
+            prev = i;
+        }
+    }
+
+    #[test]
+    fn percentiles_match_nearest_rank_within_bucket_width() {
+        // Deterministic pseudo-random latencies over three decades.
+        let mut vals: Vec<f64> = (0..500u64)
+            .map(|i| {
+                let r = (i.wrapping_mul(2654435761) % 10_000) as f64 / 10_000.0;
+                0.05 * (1.0 + 999.0 * r * r)
+            })
+            .collect();
+        let mut h = LogHistogram::new();
+        for &v in &vals {
+            h.record_ms(v);
+        }
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for p in [0.0, 10.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+            let want = exact(&vals, p);
+            let got = h.percentile(p);
+            assert!(
+                (got - want).abs() <= 0.0625 * want + 1e-9,
+                "p{p}: hist {got} vs exact {want}"
+            );
+        }
+        assert_eq!(h.count(), 500);
+        assert_eq!(h.percentile(0.0), h.min_ms());
+        assert_eq!(h.percentile(100.0), h.max_ms());
+    }
+
+    #[test]
+    fn merge_equals_recording_into_one() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        let mut all = LogHistogram::new();
+        for i in 0..100 {
+            let v = 0.1 + (i as f64) * 0.37;
+            if i % 2 == 0 { &mut a } else { &mut b }.record_ms(v);
+            all.record_ms(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        for p in [5.0, 50.0, 95.0] {
+            assert_eq!(a.percentile(p), all.percentile(p));
+        }
+        assert!((a.mean_ms() - all.mean_ms()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_and_zero_are_safe() {
+        let mut h = LogHistogram::new();
+        assert_eq!(h.percentile(50.0), 0.0);
+        assert_eq!(h.mean_ms(), 0.0);
+        h.record_ms(0.0);
+        h.record_ms(-1.0); // clamps
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.percentile(50.0), 0.0);
+    }
+}

@@ -1,0 +1,366 @@
+//! Profile aggregation and export: the per-node [`ProfileReport`] table,
+//! machine-readable JSON fields (merged into `BENCH_engine.json`), and
+//! Chrome trace-event JSON loadable in Perfetto (ui.perfetto.dev) — one
+//! track per recording thread, wavefront marker spans, and an arena
+//! live-bytes counter track.
+
+use super::spans::{Span, SpanKind};
+use super::ProfileData;
+use crate::json::Json;
+
+/// Static per-node facts the engine supplies so the report can turn raw
+/// spans into names, GOPS, and clip rates (obs knows nothing about the
+/// engine's types — only this plain-data mirror).
+#[derive(Debug, Clone)]
+pub struct NodeMeta {
+    pub name: String,
+    /// Multiply-accumulates (or equivalent work units) per forward.
+    pub macs: u64,
+    /// Output elements per forward.
+    pub out_elems: usize,
+}
+
+/// Per-model metadata for one input shape.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub nodes: Vec<NodeMeta>,
+    /// Live arena bytes during each wavefront (from the memory plan).
+    pub front_live_bytes: Vec<usize>,
+}
+
+/// Aggregated execution profile of one node across a session.
+#[derive(Debug, Clone)]
+pub struct NodeProfile {
+    pub id: usize,
+    pub name: String,
+    pub calls: u64,
+    pub total_ns: u64,
+    /// MACs per call (from [`NodeMeta`]).
+    pub macs: u64,
+    pub clip_lo: u64,
+    pub clip_hi: u64,
+    /// Elements swept by the clip counter (output elements × calls).
+    pub elems: u64,
+}
+
+impl NodeProfile {
+    /// Integer-op throughput over this node's span time (2 ops per MAC).
+    pub fn gops(&self) -> f64 {
+        if self.total_ns == 0 {
+            0.0
+        } else {
+            2.0 * self.macs as f64 * self.calls as f64 / self.total_ns as f64
+        }
+    }
+
+    pub fn clip_lo_rate(&self) -> f64 {
+        if self.elems == 0 {
+            0.0
+        } else {
+            self.clip_lo as f64 / self.elems as f64
+        }
+    }
+
+    pub fn clip_hi_rate(&self) -> f64 {
+        if self.elems == 0 {
+            0.0
+        } else {
+            self.clip_hi as f64 / self.elems as f64
+        }
+    }
+}
+
+/// One profiled run, aggregated: what `aimet infer --profile` prints and
+/// the engine bench merges into `BENCH_engine.json`.
+#[derive(Debug, Clone)]
+pub struct ProfileReport {
+    /// Per-node rows, sorted by total time descending (zero-call nodes —
+    /// fused-away slots, aliases — are omitted).
+    pub rows: Vec<NodeProfile>,
+    pub wall_ns: u64,
+    /// Forwards observed (quantize spans).
+    pub forwards: u64,
+    pub quantize_ns: u64,
+    /// Σ node span time (can exceed `wall_ns` when fronts fan out).
+    pub node_ns: u64,
+    /// Σ wavefront span time (submitting-thread view; ≤ wall).
+    pub wavefront_ns: u64,
+    /// Wavefront dispatches that spread across the pool.
+    pub spread_fronts: u64,
+    /// Total wavefront dispatches.
+    pub total_fronts: u64,
+    /// Recording threads that contributed spans.
+    pub threads: usize,
+    /// Spans discarded on buffer overflow during the session.
+    pub dropped: u64,
+    pub front_live_bytes: Vec<usize>,
+}
+
+impl ProfileReport {
+    pub fn build(meta: &ModelMeta, data: &ProfileData) -> ProfileReport {
+        let n = meta.nodes.len();
+        let mut rows: Vec<NodeProfile> = meta
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(id, m)| NodeProfile {
+                id,
+                name: m.name.clone(),
+                calls: 0,
+                total_ns: 0,
+                macs: m.macs,
+                clip_lo: 0,
+                clip_hi: 0,
+                elems: 0,
+            })
+            .collect();
+        let mut r = ProfileReport {
+            rows: Vec::new(),
+            wall_ns: data.wall_ns,
+            forwards: 0,
+            quantize_ns: 0,
+            node_ns: 0,
+            wavefront_ns: 0,
+            spread_fronts: 0,
+            total_fronts: 0,
+            threads: data.threads.len(),
+            dropped: data.dropped,
+            front_live_bytes: meta.front_live_bytes.clone(),
+        };
+        for s in data.spans() {
+            match s.kind {
+                SpanKind::Quantize => {
+                    r.forwards += 1;
+                    r.quantize_ns += s.dur_ns();
+                }
+                SpanKind::Node => {
+                    if let Some(row) = rows.get_mut(s.id as usize) {
+                        row.calls += 1;
+                        row.total_ns += s.dur_ns();
+                        r.node_ns += s.dur_ns();
+                    }
+                }
+                SpanKind::Wavefront => {
+                    r.total_fronts += 1;
+                    r.spread_fronts += s.b;
+                    r.wavefront_ns += s.dur_ns();
+                }
+                SpanKind::Clip => {
+                    if (s.id as usize) < n {
+                        let row = &mut rows[s.id as usize];
+                        row.clip_lo += s.a >> 32;
+                        row.clip_hi += s.a & 0xffff_ffff;
+                        row.elems += s.b;
+                    }
+                }
+            }
+        }
+        rows.retain(|row| row.calls > 0 || row.elems > 0);
+        rows.sort_by(|a, b| b.total_ns.cmp(&a.total_ns));
+        r.rows = rows;
+        r
+    }
+
+    /// Overall lower-clamp hit rate (for ReLU grids the lower clamp sits
+    /// at the zero-point, so this includes legitimate zeros).
+    pub fn clip_lo_rate(&self) -> f64 {
+        let (c, e) = self.clip_totals();
+        if e == 0 {
+            0.0
+        } else {
+            c.0 as f64 / e as f64
+        }
+    }
+
+    /// Overall upper-clamp (saturation) hit rate — the quantization-health
+    /// headline: activations crushed into the top of their int8 grid.
+    pub fn clip_hi_rate(&self) -> f64 {
+        let (c, e) = self.clip_totals();
+        if e == 0 {
+            0.0
+        } else {
+            c.1 as f64 / e as f64
+        }
+    }
+
+    /// Combined clamp hit rate (lo + hi over swept elements).
+    pub fn clip_rate(&self) -> f64 {
+        self.clip_lo_rate() + self.clip_hi_rate()
+    }
+
+    fn clip_totals(&self) -> ((u64, u64), u64) {
+        let mut lo = 0;
+        let mut hi = 0;
+        let mut elems = 0;
+        for row in &self.rows {
+            lo += row.clip_lo;
+            hi += row.clip_hi;
+            elems += row.elems;
+        }
+        ((lo, hi), elems)
+    }
+
+    /// Peak live arena bytes and the front where it occurs.
+    pub fn arena_peak(&self) -> (usize, usize) {
+        self.front_live_bytes
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &b)| b)
+            .map(|(i, &b)| (b, i))
+            .unwrap_or((0, 0))
+    }
+
+    /// The `aimet infer --profile` table.
+    pub fn render(&self) -> String {
+        let ms = |ns: u64| ns as f64 / 1e6;
+        let (peak, peak_front) = self.arena_peak();
+        let mut out = format!(
+            "profile: {} forward(s) over {:.3} ms wall | node time {:.3} ms, quantize {:.3} ms \
+             | {}/{} wavefront dispatches fanned out | {} thread(s), {} dropped span(s)\n\
+             arena live bytes: peak {:.1} KiB at front {} of {}\n",
+            self.forwards,
+            ms(self.wall_ns),
+            ms(self.node_ns),
+            ms(self.quantize_ns),
+            self.spread_fronts,
+            self.total_fronts,
+            self.threads,
+            self.dropped,
+            peak as f64 / 1024.0,
+            peak_front,
+            self.front_live_bytes.len()
+        );
+        out.push_str(
+            "  node                   calls   time ms  % node     GOPS  clip lo%  clip hi%\n",
+        );
+        for row in &self.rows {
+            let pct = if self.node_ns == 0 {
+                0.0
+            } else {
+                100.0 * row.total_ns as f64 / self.node_ns as f64
+            };
+            out.push_str(&format!(
+                "  {:<22} {:>5} {:>9.3} {:>7.1} {:>8.2} {:>9.2} {:>9.2}\n",
+                row.name,
+                row.calls,
+                ms(row.total_ns),
+                pct,
+                row.gops(),
+                100.0 * row.clip_lo_rate(),
+                100.0 * row.clip_hi_rate(),
+            ));
+        }
+        out
+    }
+
+    /// Machine-readable summary fields (merged into `BENCH_engine.json`).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("profile_wall_ms", Json::Num(self.wall_ns as f64 / 1e6));
+        j.set("profile_node_ms", Json::Num(self.node_ns as f64 / 1e6));
+        j.set(
+            "profile_quantize_ms",
+            Json::Num(self.quantize_ns as f64 / 1e6),
+        );
+        j.set("profile_forwards", Json::Num(self.forwards as f64));
+        j.set("profile_dropped_spans", Json::Num(self.dropped as f64));
+        j.set("clip_lo_rate", Json::Num(self.clip_lo_rate()));
+        j.set("clip_hi_rate", Json::Num(self.clip_hi_rate()));
+        j.set(
+            "spread_front_ratio",
+            Json::Num(if self.total_fronts == 0 {
+                0.0
+            } else {
+                self.spread_fronts as f64 / self.total_fronts as f64
+            }),
+        );
+        j
+    }
+}
+
+/// Build Chrome trace-event JSON from a drained session: `ph:"X"` complete
+/// events on one `tid` per recording thread (named via `thread_name`
+/// metadata), wavefront marker spans on the submitting thread, and a
+/// `ph:"C"` counter track of live arena bytes sampled at each wavefront
+/// start. Load the written file at ui.perfetto.dev or chrome://tracing.
+pub fn chrome_trace(meta: &ModelMeta, data: &ProfileData) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    let us = |ns: u64| ns as f64 / 1e3;
+    for (tid, thread) in data.threads.iter().enumerate() {
+        let mut m = Json::obj();
+        m.set("name", Json::Str("thread_name".to_string()));
+        m.set("ph", Json::Str("M".to_string()));
+        m.set("pid", Json::Num(1.0));
+        m.set("tid", Json::Num(tid as f64));
+        let mut args = Json::obj();
+        args.set("name", Json::Str(thread.name.clone()));
+        m.set("args", args);
+        events.push(m);
+        for s in &thread.spans {
+            let (name, cat, mut args) = match s.kind {
+                SpanKind::Quantize => ("quantize-input".to_string(), "input", Json::obj()),
+                SpanKind::Node => {
+                    let name = meta
+                        .nodes
+                        .get(s.id as usize)
+                        .map(|n| n.name.clone())
+                        .unwrap_or_else(|| format!("node {}", s.id));
+                    let mut args = Json::obj();
+                    args.set("node", Json::Num(s.id as f64));
+                    (name, "node", args)
+                }
+                SpanKind::Wavefront => {
+                    let mut args = Json::obj();
+                    args.set("width", Json::Num(s.a as f64));
+                    args.set("spread", Json::Bool(s.b != 0));
+                    (format!("wavefront {}", s.id), "wavefront", args)
+                }
+                // Clip samples carry no duration; they ride as counters
+                // on the node that produced them.
+                SpanKind::Clip => {
+                    let mut e = Json::obj();
+                    e.set("name", Json::Str("clipped".to_string()));
+                    e.set("ph", Json::Str("C".to_string()));
+                    e.set("pid", Json::Num(1.0));
+                    e.set("tid", Json::Num(tid as f64));
+                    e.set("ts", Json::Num(us(s.t0_ns)));
+                    let mut args = Json::obj();
+                    args.set("lo", Json::Num((s.a >> 32) as f64));
+                    args.set("hi", Json::Num((s.a & 0xffff_ffff) as f64));
+                    e.set("args", args);
+                    events.push(e);
+                    continue;
+                }
+            };
+            args.set("model", Json::Num(s.model_lo as f64));
+            let mut e = Json::obj();
+            e.set("name", Json::Str(name));
+            e.set("cat", Json::Str(cat.to_string()));
+            e.set("ph", Json::Str("X".to_string()));
+            e.set("pid", Json::Num(1.0));
+            e.set("tid", Json::Num(tid as f64));
+            e.set("ts", Json::Num(us(s.t0_ns)));
+            e.set("dur", Json::Num(us(s.dur_ns()).max(0.001)));
+            e.set("args", args);
+            events.push(e);
+            if s.kind == SpanKind::Wavefront {
+                if let Some(&bytes) = meta.front_live_bytes.get(s.id as usize) {
+                    let mut c = Json::obj();
+                    c.set("name", Json::Str("arena live bytes".to_string()));
+                    c.set("ph", Json::Str("C".to_string()));
+                    c.set("pid", Json::Num(1.0));
+                    c.set("tid", Json::Num(tid as f64));
+                    c.set("ts", Json::Num(us(s.t0_ns)));
+                    let mut args = Json::obj();
+                    args.set("bytes", Json::Num(bytes as f64));
+                    c.set("args", args);
+                    events.push(c);
+                }
+            }
+        }
+    }
+    let mut root = Json::obj();
+    root.set("traceEvents", Json::Arr(events));
+    root.set("displayTimeUnit", Json::Str("ms".to_string()));
+    root
+}

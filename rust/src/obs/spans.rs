@@ -1,0 +1,261 @@
+//! Lock-free per-thread span recorder.
+//!
+//! Every recording thread owns one fixed-capacity [`SpanBuf`]; the hot
+//! path appends with a plain store into pre-allocated storage and
+//! publishes the new length with one `Release` store — no locks, no
+//! allocation, no contention with other recorders. A drain (after the
+//! profiled run) walks the global registry and snapshots each buffer's
+//! published prefix.
+//!
+//! Soundness of the single-writer protocol: only the owning thread ever
+//! writes `spans` or advances `len`, the storage never moves (fixed
+//! capacity, allocated once at registration), and `len` is monotone —
+//! so any reader that `Acquire`-loads `len = n` observes fully-written
+//! spans in `..n`. Overflow never reallocates: spans past capacity are
+//! counted in `dropped` and discarded, keeping the recorder's memory
+//! bounded no matter how long profiling stays enabled.
+
+use std::cell::{OnceCell, UnsafeCell};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Spans one thread can hold before dropping (fixed at registration so
+/// the hot path never grows the buffer). Buffers are append-only for the
+/// process (drains filter by time/model instead of resetting — resetting
+/// would break the single-writer publication protocol), so the capacity
+/// carries every profiled forward a thread ever runs: 32768 × 48 B =
+/// 1.5 MiB per recording thread, hundreds of profiled forwards.
+pub const SPAN_CAPACITY: usize = 32768;
+
+/// What a span measures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Input quantization into the arena (one per forward).
+    Quantize,
+    /// One lowered node's execution; `id` is the node index.
+    Node,
+    /// One wavefront of the executor; `id` is the front index, `a` the
+    /// fan-out width (nodes in the front), `b` 1 if it spread across the
+    /// pool, 0 if it ran inline.
+    Wavefront,
+    /// Quantization health sample for node `id`: `a` packs the clip
+    /// counts (`lo << 32 | hi`), `b` is the element count swept.
+    Clip,
+}
+
+/// One recorded event. `t0_ns`/`t1_ns` are monotonic nanoseconds since
+/// the process epoch ([`now_ns`]); `model_lo` tags the owning model so
+/// concurrent foreign forwards (parallel tests in one process) can be
+/// filtered out at drain time.
+#[derive(Debug, Clone, Copy)]
+pub struct Span {
+    pub t0_ns: u64,
+    pub t1_ns: u64,
+    /// Kind-specific payload (see [`SpanKind`]).
+    pub a: u64,
+    pub b: u64,
+    pub kind: SpanKind,
+    /// Node / wavefront index.
+    pub id: u32,
+    /// Low 32 bits of the owning model's `model_id`.
+    pub model_lo: u32,
+}
+
+impl Span {
+    const EMPTY: Span = Span {
+        t0_ns: 0,
+        t1_ns: 0,
+        a: 0,
+        b: 0,
+        kind: SpanKind::Quantize,
+        id: 0,
+        model_lo: 0,
+    };
+
+    pub fn dur_ns(&self) -> u64 {
+        self.t1_ns.saturating_sub(self.t0_ns)
+    }
+}
+
+/// Monotonic nanoseconds since the first call in this process — one
+/// shared epoch so spans from different threads order on one axis.
+pub fn now_ns() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// One thread's span storage (see the module docs for the single-writer
+/// publication protocol).
+struct SpanBuf {
+    spans: UnsafeCell<Box<[Span]>>,
+    /// Published span count; only the owner advances it.
+    len: AtomicUsize,
+    /// Spans discarded after the buffer filled.
+    dropped: AtomicU64,
+    /// Owning thread's name at registration.
+    name: String,
+    /// Pool worker index, if the owner is a pool lane.
+    worker: Option<usize>,
+}
+
+// SAFETY: `spans` is written only by the owning thread, never moves, and
+// readers only touch the `Acquire`-published prefix (see module docs).
+unsafe impl Sync for SpanBuf {}
+unsafe impl Send for SpanBuf {}
+
+impl SpanBuf {
+    #[inline]
+    fn push(&self, s: Span) {
+        let n = self.len.load(Ordering::Relaxed);
+        if n >= SPAN_CAPACITY {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        // SAFETY: single writer (the owning thread), slot `n` is past the
+        // published prefix so no reader looks at it yet.
+        unsafe { (*self.spans.get())[n] = s };
+        self.len.store(n + 1, Ordering::Release);
+    }
+
+    fn snapshot(&self) -> Vec<Span> {
+        let n = self.len.load(Ordering::Acquire).min(SPAN_CAPACITY);
+        // SAFETY: the `Acquire` on `len` orders these reads after the
+        // writes that produced spans `..n`; the owner never rewrites them.
+        unsafe { (*self.spans.get())[..n].to_vec() }
+    }
+}
+
+/// All registered buffers (alive for the process — a thread's spans stay
+/// readable after it exits; each buffer is bounded, so so is the registry).
+static REGISTRY: Mutex<Vec<Arc<SpanBuf>>> = Mutex::new(Vec::new());
+
+fn registry() -> std::sync::MutexGuard<'static, Vec<Arc<SpanBuf>>> {
+    // A panic while holding the registry lock (test harness) must not
+    // poison profiling for the rest of the process.
+    REGISTRY.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+thread_local! {
+    static TLS_BUF: OnceCell<Arc<SpanBuf>> = const { OnceCell::new() };
+}
+
+fn register_current_thread() -> Arc<SpanBuf> {
+    let t = std::thread::current();
+    let buf = Arc::new(SpanBuf {
+        spans: UnsafeCell::new(vec![Span::EMPTY; SPAN_CAPACITY].into_boxed_slice()),
+        len: AtomicUsize::new(0),
+        dropped: AtomicU64::new(0),
+        name: t.name().unwrap_or("unnamed").to_string(),
+        worker: crate::pool::worker_index(),
+    });
+    registry().push(Arc::clone(&buf));
+    buf
+}
+
+/// Record one span into the current thread's buffer (registering the
+/// thread on first use). Callers gate on [`crate::obs::enabled`] — this
+/// is never reached on the profiling-off path.
+#[inline]
+pub fn record(span: Span) {
+    TLS_BUF.with(|c| c.get_or_init(register_current_thread).push(span));
+}
+
+/// Total spans dropped across all threads since process start (sessions
+/// diff this across their lifetime).
+pub fn total_dropped() -> u64 {
+    registry()
+        .iter()
+        .map(|b| b.dropped.load(Ordering::Relaxed))
+        .sum()
+}
+
+/// One thread's drained spans.
+#[derive(Debug, Clone)]
+pub struct ThreadSpans {
+    /// Thread name at registration (`aimet-pool-N`, `aimet-serve`, …).
+    pub name: String,
+    /// Pool worker index, if the thread is a pool lane.
+    pub worker: Option<usize>,
+    pub spans: Vec<Span>,
+}
+
+/// Snapshot every registered buffer, keeping spans recorded at or after
+/// `since_ns` for model `model_lo` (stale spans from earlier sessions and
+/// concurrent foreign-model forwards are filtered out). Worker lanes sort
+/// first, by index, so trace tracks are stable run to run.
+pub fn drain(since_ns: u64, model_lo: u32) -> Vec<ThreadSpans> {
+    let mut out: Vec<ThreadSpans> = registry()
+        .iter()
+        .filter_map(|buf| {
+            let spans: Vec<Span> = buf
+                .snapshot()
+                .into_iter()
+                .filter(|s| s.model_lo == model_lo && s.t0_ns >= since_ns)
+                .collect();
+            if spans.is_empty() {
+                None
+            } else {
+                Some(ThreadSpans {
+                    name: buf.name.clone(),
+                    worker: buf.worker,
+                    spans,
+                })
+            }
+        })
+        .collect();
+    out.sort_by_key(|t| (t.worker.is_none(), t.worker, t.name.clone()));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_drain_filters_by_model_and_time() {
+        let t0 = now_ns();
+        let mk = |model_lo: u32, t: u64| Span {
+            t0_ns: t,
+            t1_ns: t + 10,
+            a: 0,
+            b: 0,
+            kind: SpanKind::Node,
+            id: 7,
+            model_lo,
+        };
+        record(mk(0xdead_0001, t0));
+        record(mk(0xdead_0001, t0.saturating_sub(1))); // pre-session: filtered
+        record(mk(0xdead_0002, t0 + 5)); // foreign model: filtered
+        let drained = drain(t0, 0xdead_0001);
+        let spans: Vec<&Span> = drained.iter().flat_map(|t| &t.spans).collect();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].id, 7);
+    }
+
+    #[test]
+    fn overflow_drops_instead_of_growing() {
+        let base = total_dropped();
+        let t = now_ns();
+        // A dedicated thread so we own a fresh buffer.
+        std::thread::spawn(move || {
+            for i in 0..(SPAN_CAPACITY + 17) {
+                record(Span {
+                    t0_ns: t,
+                    t1_ns: t,
+                    a: i as u64,
+                    b: 0,
+                    kind: SpanKind::Clip,
+                    id: 0,
+                    model_lo: 0xfade_0000,
+                });
+            }
+        })
+        .join()
+        .unwrap();
+        assert!(total_dropped() >= base + 17, "overflow must count drops");
+        let drained = drain(t, 0xfade_0000);
+        let n: usize = drained.iter().map(|t| t.spans.len()).sum();
+        assert_eq!(n, SPAN_CAPACITY);
+    }
+}

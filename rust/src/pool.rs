@@ -97,6 +97,16 @@ thread_local! {
     /// `parallel_chunks` calls then run inline instead of re-entering the
     /// pool.
     static IN_POOL_JOB: Cell<bool> = const { Cell::new(false) };
+
+    /// This thread's pool lane index, set once at worker spawn. `None` on
+    /// non-pool threads (submitters, serve clients, the test harness).
+    static WORKER_INDEX: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+/// Pool lane index of the current thread, if it is a pool worker — the
+/// span recorder uses this to give each lane a stable trace track.
+pub fn worker_index() -> Option<usize> {
+    WORKER_INDEX.with(|c| c.get())
 }
 
 /// Type-erased pointer to the caller's `Fn(start, end)` closure. The
@@ -195,7 +205,10 @@ fn pool() -> &'static PoolInner {
         for w in 0..num_threads().saturating_sub(1) {
             std::thread::Builder::new()
                 .name(format!("aimet-pool-{w}"))
-                .spawn(move || worker_loop(p))
+                .spawn(move || {
+                    WORKER_INDEX.with(|c| c.set(Some(w)));
+                    worker_loop(p)
+                })
                 .expect("spawn pool worker");
         }
     });

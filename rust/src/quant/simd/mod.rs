@@ -283,6 +283,27 @@ pub(crate) fn dot_i8_scalar(a: &[i8], b: &[i8]) -> i32 {
 }
 
 // ---------------------------------------------------------------------------
+// Quantization health: clamp-hit counting for the observability layer.
+// ---------------------------------------------------------------------------
+
+/// Count how many values of a written i8 output sit exactly on the lower
+/// / upper clamp of its requant window — the profiler's clip/saturation
+/// counters. Runs as a post-pass over the output buffer (never inside the
+/// epilogue), so profiled forwards stay bit-identical to plain ones. The
+/// branch-free compare-and-add body autovectorizes on every tier; the
+/// `tier` parameter keeps the call-site shape of the other dispatched
+/// kernels should a hand-vectorized variant ever be worth it.
+pub fn count_clipped(_tier: SimdTier, q: &[i8], lo: i8, hi: i8) -> (u64, u64) {
+    let mut c_lo = 0u64;
+    let mut c_hi = 0u64;
+    for &v in q {
+        c_lo += (v == lo) as u64;
+        c_hi += (v == hi) as u64;
+    }
+    (c_lo, c_hi)
+}
+
+// ---------------------------------------------------------------------------
 // Epilogues. The scalar bodies below are THE reference expressions — the
 // engine's sim-agreement contract rides on them (see `requantize_value`);
 // the vector variants must match them bit-for-bit.

@@ -1,0 +1,171 @@
+//! PR 7 acceptance properties for the observability layer.
+//!
+//! The contract: turning profiling on must never change what the engine
+//! computes (spans and clip counters are recorded *around* and *after*
+//! the kernels, never inside their arithmetic), drained traces must be
+//! structurally sound (nodes nest in their wavefront, busy time bounded
+//! by wall time), and the exports (table, Chrome trace JSON) must be
+//! well-formed on real models.
+
+use aimet::engine::{lower, QuantizedModel, Scratch};
+use aimet::obs::{self, ProfileReport, SpanKind};
+use aimet::pool::with_thread_cap;
+use aimet::ptq::{standard_ptq_pipeline, PtqOptions};
+use aimet::task::TaskData;
+use aimet::zoo;
+
+/// Calibrate a PTQ sim for `model` and lower it (same recipe as the
+/// engine integration suite).
+fn lowered(model: &str) -> (QuantizedModel, TaskData) {
+    let g = zoo::build(model, 900).unwrap();
+    let data = TaskData::new(model, 901).unwrap();
+    let calib = data.calibration(3, 8);
+    let out = standard_ptq_pipeline(&g, &calib, &PtqOptions::default());
+    let qm = lower(&out.sim).expect("lowering");
+    (qm, data)
+}
+
+#[test]
+fn profiled_forwards_are_bit_identical_across_zoo() {
+    // Profiling on vs off, across the whole zoo, batch {1, 8} × thread
+    // caps {1, 8}: every output byte identical. This is the property that
+    // lets `--profile` run on production traffic.
+    for model in zoo::MODEL_NAMES {
+        let (qm, data) = lowered(model);
+        for &bs in &[1usize, 8] {
+            let (x, _) = data.batch(75_000, bs);
+            for &cap in &[1usize, 8] {
+                with_thread_cap(cap, || {
+                    let plain = qm.forward_int(&x);
+                    let session = qm.profile_session();
+                    let profiled = qm.forward_int(&x);
+                    let prof = session.finish();
+                    assert_eq!(
+                        plain.data(),
+                        profiled.data(),
+                        "{model}/bs{bs}/cap{cap}: profiling changed the forward"
+                    );
+                    assert!(
+                        prof.spans().count() > 0,
+                        "{model}/bs{bs}/cap{cap}: session drained no spans"
+                    );
+                });
+            }
+        }
+    }
+}
+
+#[test]
+fn drained_spans_nest_within_wavefronts_and_bound_wall_time() {
+    let (qm, data) = lowered("mobimini");
+    let (x, _) = data.batch(76_000, 4);
+    // Cap 1: everything executes on the submitting thread, so every span
+    // sits on one timeline and the interval algebra below is exact.
+    with_thread_cap(1, || {
+        let mut s = Scratch::new();
+        std::hint::black_box(qm.forward_with(&x, &mut s).data()); // warm plan
+        let session = qm.profile_session();
+        for _ in 0..2 {
+            std::hint::black_box(qm.forward_with(&x, &mut s).data());
+        }
+        let prof = session.finish();
+        assert_eq!(prof.dropped, 0, "two forwards must fit the span buffer");
+        let spans: Vec<aimet::obs::Span> = prof.spans().copied().collect();
+        let fronts: Vec<&aimet::obs::Span> = spans
+            .iter()
+            .filter(|s| s.kind == SpanKind::Wavefront)
+            .collect();
+        let nodes: Vec<&aimet::obs::Span> =
+            spans.iter().filter(|s| s.kind == SpanKind::Node).collect();
+        assert!(!fronts.is_empty() && !nodes.is_empty());
+        // Every node span nests inside some wavefront span.
+        for n in &nodes {
+            assert!(
+                fronts
+                    .iter()
+                    .any(|f| f.t0_ns <= n.t0_ns && n.t1_ns <= f.t1_ns),
+                "node {} span [{}, {}] outside every wavefront",
+                n.id,
+                n.t0_ns,
+                n.t1_ns
+            );
+        }
+        // Busy time (nodes + input quantization — disjoint intervals on
+        // the single timeline) never exceeds the session wall time.
+        let busy: u64 = spans
+            .iter()
+            .filter(|s| matches!(s.kind, SpanKind::Node | SpanKind::Quantize))
+            .map(|s| s.dur_ns())
+            .sum();
+        assert!(
+            busy <= prof.wall_ns,
+            "busy {busy} ns > wall {} ns",
+            prof.wall_ns
+        );
+        // And each wavefront covers the nodes it dispatched.
+        let front_ns: u64 = fronts.iter().map(|f| f.dur_ns()).sum();
+        let node_ns: u64 = nodes.iter().map(|n| n.dur_ns()).sum();
+        assert!(node_ns <= front_ns, "node time exceeds wavefront time");
+    });
+}
+
+#[test]
+fn profile_report_and_chrome_trace_are_well_formed() {
+    let (qm, data) = lowered("detmini");
+    let (x, _) = data.batch(77_000, 2);
+    let mut s = Scratch::new();
+    std::hint::black_box(qm.forward_with(&x, &mut s).data()); // warm plan
+    let session = qm.profile_session();
+    std::hint::black_box(qm.forward_with(&x, &mut s).data());
+    let prof = session.finish();
+    let meta = qm.profile_meta(x.shape());
+    let report = ProfileReport::build(&meta, &prof);
+
+    assert_eq!(report.forwards, 1);
+    assert!(!report.rows.is_empty(), "per-node rows must be populated");
+    assert!(report.node_ns > 0 && report.wall_ns >= report.quantize_ns);
+    let mut clipped_rows = 0;
+    for row in &report.rows {
+        assert!(row.calls >= 1, "{}: zero-call row survived", row.name);
+        assert!((0.0..=1.0).contains(&row.clip_lo_rate()), "{}", row.name);
+        assert!((0.0..=1.0).contains(&row.clip_hi_rate()), "{}", row.name);
+        clipped_rows += usize::from(row.elems > 0);
+    }
+    assert!(clipped_rows > 0, "clip counters must cover some nodes");
+    assert!((0.0..=1.0).contains(&report.clip_lo_rate()));
+    assert!((0.0..=1.0).contains(&report.clip_hi_rate()));
+    assert!(!report.front_live_bytes.is_empty());
+    assert!(report.arena_peak().0 > 0, "live-bytes track must be non-zero");
+    let table = report.render();
+    assert!(table.contains("GOPS") && table.contains("clip"), "{table}");
+
+    // The Chrome trace round-trips through the repo's own JSON parser and
+    // carries the schema fields Perfetto requires.
+    let trace = obs::chrome_trace(&meta, &prof);
+    let parsed = aimet::json::parse(&trace.pretty()).expect("trace JSON parses");
+    let Some(aimet::json::Json::Arr(events)) = parsed.get("traceEvents") else {
+        panic!("traceEvents must be an array");
+    };
+    assert!(!events.is_empty());
+    let mut x_events = 0;
+    let mut thread_names = 0;
+    for e in events {
+        let ph = match e.get("ph") {
+            Some(aimet::json::Json::Str(s)) => s.as_str(),
+            other => panic!("event missing ph: {other:?}"),
+        };
+        assert!(e.get("pid").is_some() && e.get("tid").is_some());
+        match ph {
+            "X" => {
+                assert!(e.get("ts").is_some() && e.get("dur").is_some());
+                assert!(e.get("name").is_some());
+                x_events += 1;
+            }
+            "M" => thread_names += 1,
+            "C" => assert!(e.get("ts").is_some()),
+            other => panic!("unexpected phase {other}"),
+        }
+    }
+    assert!(x_events > 0, "trace needs duration events");
+    assert!(thread_names > 0, "trace needs thread_name metadata");
+}

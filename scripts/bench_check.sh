@@ -8,8 +8,10 @@
 #     2 points (rust/README.md §Compression), or
 #   * BENCH_engine.json is missing, batched int8 engine throughput falls
 #     below 1.5x the per-request fp32 forward, engine batch-8 falls
-#     below 2x batch-1 samples/sec, or the packed engine performs ANY
-#     steady-state heap allocation per forward (rust/README.md §Engine), or
+#     below 2x batch-1 samples/sec, the packed engine performs ANY
+#     steady-state heap allocation per forward (rust/README.md §Engine),
+#     or the profiled-run overhead (span recorder + clip counters live)
+#     exceeds 3% of the plain run (README.md §Observability), or
 #   * batch-8 engine throughput regresses below 0.9x the previous run
 #     recorded in BENCH_history.jsonl (the perf ratchet; only applied when
 #     the previous run used the same thread count AND the same SIMD
@@ -94,6 +96,24 @@ if allocs != 0:
     sys.exit(
         f"bench_check: {allocs:.2f} steady-state allocations per forward (must be 0)"
     )
+
+# Observability overhead gate: a profiled b8 forward (spans + clip
+# counters live) must stay within 3% of the plain run measured
+# back-to-back in the same bench process. The bench also asserts the
+# profiled forward is bit-identical; here we only gate the cost.
+overhead = e.get("profile_overhead_pct")
+if not isinstance(overhead, (int, float)):
+    sys.exit("bench_check: BENCH_engine.json lacks profile_overhead_pct")
+if overhead > 3.0:
+    sys.exit(
+        f"bench_check: profiled-run overhead {overhead:.2f}% > 3% "
+        "(span recorder / clip counters too hot)"
+    )
+print(
+    f"bench_check OK: profiled-run overhead {overhead:+.2f}% (<= 3%), "
+    f"dropped spans {fmt(e.get('profile_dropped_spans'), '')}, "
+    f"clip rate {fmt(e.get('clip_rate_mobimini'), '')}"
+)
 
 print(
     f"bench_check OK: engine batched {speedup:.2f}x fp32 (>= 1.5), "
@@ -197,6 +217,11 @@ entry = {
     "engine_b8_sps_detmini": e.get("engine_b8_sps_detmini"),
     "engine_b8_sps_segmini": e.get("engine_b8_sps_segmini"),
     "wavefronts": e.get("wavefronts"),
+    "profile_overhead_pct": overhead,
+    "serve_b8_fill_ratio": e.get("serve_b8_fill_ratio"),
+    "clip_rate_mobimini": e.get("clip_rate_mobimini"),
+    "clip_rate_detmini": e.get("clip_rate_detmini"),
+    "clip_rate_segmini": e.get("clip_rate_segmini"),
 }
 with open(hist_path, "a") as f:
     f.write(json.dumps(entry) + "\n")

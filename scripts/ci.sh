@@ -40,6 +40,14 @@ echo "== ci: engine suite, wide pool (AIMET_THREADS=16) =="
 (cd rust && AIMET_THREADS=16 cargo test -q --test engine_integration)
 (cd rust && AIMET_THREADS=16 cargo test -q --lib engine::)
 
+# Observability must be a pure observer: the engine's agreement and
+# serving properties have to pass with the span recorder + clip counters
+# live on every forward (env-gated process-wide), and the observability
+# suite itself must hold under recording pressure.
+echo "== ci: engine suite, profiling enabled (AIMET_PROFILE=1) =="
+(cd rust && AIMET_PROFILE=1 cargo test -q --test engine_integration)
+(cd rust && AIMET_PROFILE=1 cargo test -q --test observability)
+
 echo "== ci: bench gates (scripts/bench_check.sh) =="
 "$SCRIPT_DIR/bench_check.sh"
 
