@@ -24,7 +24,10 @@
 
 use super::experiments::{self, Effort};
 use crate::compress::{compress_then_ptq, greedy_plan, SearchOptions};
-use crate::engine::{lower, run_serve_bench, BatchConfig};
+use crate::engine::{
+    lower, run_serve_bench, run_serve_bench_with, BatchConfig, ServeMonitor, ServeOptions,
+};
+use crate::obs::{DriftConfig, DriftReport};
 use crate::ptq::{standard_ptq_pipeline, PtqOptions};
 use crate::qat::{fit_qat, TrainConfig};
 use crate::quantsim::default_config_json;
@@ -199,8 +202,17 @@ COMMANDS
                                  per-channel weight ranges as CSV
   serve-bench --model M [--clients N --requests R --max-batch B
                --max-wait-ms MS --threads T --effort fast|full]
+              [--metrics OUT.prom --drift-report OUT.csv
+               --drift-sample N --shift-inputs F]
                                  batched int8 serving: latency percentiles +
-                                 throughput, coalesced vs batch-1
+                                 throughput, coalesced vs batch-1;
+                                 --metrics writes registry snapshots
+                                 (Prometheus text, or JSON for .json paths),
+                                 --drift-report writes per-node calibration
+                                 drift verdicts as CSV, --drift-sample sets
+                                 the monitor's 1-in-N batch cadence (default
+                                 16), --shift-inputs re-runs with inputs
+                                 scaled by F to exercise the drift detector
   debug    [--model M --effort fast|full]
                                  fig 4.5 debugging flow end-to-end on one model
   export   --model M --out DIR
@@ -241,6 +253,10 @@ fn command_spec(cmd: &str) -> Option<(&'static [&'static str], usize)> {
                 "max-wait-ms",
                 "threads",
                 "effort",
+                "metrics",
+                "drift-report",
+                "drift-sample",
+                "shift-inputs",
             ],
             0,
         ),
@@ -574,6 +590,13 @@ fn cmd_infer(args: &Args) -> Result<i32, String> {
             std::hint::black_box(qm.forward_with(&x, &mut scratch).data());
         }
         let prof = session.finish();
+        if prof.dropped > 0 {
+            eprintln!(
+                "warning: profiler dropped {} span(s) (per-thread buffer overflow) — \
+                 the table and trace below undercount; profile fewer batches per window",
+                prof.dropped
+            );
+        }
         let meta = qm.profile_meta(x0.shape());
         let report = crate::obs::ProfileReport::build(&meta, &prof);
         print!("{}", report.render());
@@ -597,6 +620,29 @@ fn cmd_serve_bench(args: &Args) -> Result<i32, String> {
                 .to_string(),
         );
     }
+    let metrics_path = args.get("metrics").map(str::to_string);
+    let drift_path = args.get("drift-report").map(str::to_string);
+    if metrics_path.as_deref() == Some("") || drift_path.as_deref() == Some("") {
+        return Err("flags --metrics/--drift-report need a non-empty output path".to_string());
+    }
+    let drift_sample = args.usize_or("drift-sample", 16)?;
+    if drift_sample == 0 {
+        return Err("flag --drift-sample must be >= 1".to_string());
+    }
+    let shift = match args.get("shift-inputs") {
+        None => None,
+        Some(v) => {
+            let f: f32 = v
+                .parse()
+                .map_err(|_| format!("flag --shift-inputs: expected a number, got `{v}`"))?;
+            if !f.is_finite() || f <= 0.0 {
+                return Err(format!(
+                    "flag --shift-inputs: factor must be finite and > 0, got `{v}`"
+                ));
+            }
+            Some(f)
+        }
+    };
     args.apply_threads()?;
     let (model, qm, _, _, data) = lowered_model(args)?;
     println!("{}", qm.describe());
@@ -604,6 +650,15 @@ fn cmd_serve_bench(args: &Args) -> Result<i32, String> {
     let samples: Vec<crate::tensor::Tensor> =
         (0..32).map(|i| data.batch(90_000 + i, 1).0).collect();
     let wait = std::time::Duration::from_secs_f32(max_wait_ms / 1e3);
+    // Snapshot the registry to the metrics sink for the whole run (plus a
+    // final write at stop, so short runs still leave a complete file).
+    let monitor = metrics_path
+        .as_ref()
+        .map(|p| ServeMonitor::start(p.clone(), std::time::Duration::from_millis(500)));
+    let drift_cfg = DriftConfig {
+        sample_every: drift_sample as u64,
+        ..DriftConfig::default()
+    };
 
     // Batch-1 baseline: same traffic, no coalescing.
     let b1 = run_serve_bench(
@@ -616,14 +671,21 @@ fn cmd_serve_bench(args: &Args) -> Result<i32, String> {
             max_wait: wait,
         },
     );
-    let bn = run_serve_bench(
-        qm,
+    // Batched run, drift-monitored on calibration-distribution traffic:
+    // the baseline the shifted phase is judged against.
+    let mon = std::sync::Arc::new(qm.drift_monitor(drift_cfg));
+    let bn = run_serve_bench_with(
+        std::sync::Arc::clone(&qm),
         &samples,
         clients,
         requests,
-        BatchConfig {
-            max_batch,
-            max_wait: wait,
+        ServeOptions {
+            cfg: BatchConfig {
+                max_batch,
+                max_wait: wait,
+            },
+            label: Some(model.clone()),
+            drift: Some(std::sync::Arc::clone(&mon)),
         },
     );
     println!("{model} serving ({clients} clients x {requests} reqs, max wait {max_wait_ms} ms):");
@@ -634,6 +696,60 @@ fn cmd_serve_bench(args: &Args) -> Result<i32, String> {
         bn.throughput_sps / b1.throughput_sps.max(1e-9),
         bn.stats.mean_batch()
     );
+    let base_report = mon.report();
+    print!("  {}", base_report.render());
+
+    // Optional detector exercise: replay the same traffic with inputs
+    // scaled/offset away from the calibration distribution through a
+    // fresh monitor — the grids stop fitting and the report should flag.
+    let shifted_report = match shift {
+        None => None,
+        Some(f) => {
+            let shifted: Vec<crate::tensor::Tensor> = samples
+                .iter()
+                .map(|t| {
+                    let data: Vec<f32> =
+                        t.data().iter().map(|&v| f * v + 0.1 * (f - 1.0)).collect();
+                    crate::tensor::Tensor::new(t.shape(), data)
+                })
+                .collect();
+            let mon2 = std::sync::Arc::new(qm.drift_monitor(drift_cfg));
+            let bs = run_serve_bench_with(
+                std::sync::Arc::clone(&qm),
+                &shifted,
+                clients,
+                requests,
+                ServeOptions {
+                    cfg: BatchConfig {
+                        max_batch,
+                        max_wait: wait,
+                    },
+                    label: Some(format!("{model}_shifted")),
+                    drift: Some(std::sync::Arc::clone(&mon2)),
+                },
+            );
+            println!("  shifted x{f}: {}", bs.render());
+            let r = mon2.report();
+            print!("  {}", r.render());
+            Some(r)
+        }
+    };
+
+    if let Some(path) = &drift_path {
+        let mut csv = String::from(DriftReport::csv_header());
+        csv.push_str(&base_report.to_csv_rows("baseline"));
+        if let Some(r) = &shifted_report {
+            csv.push_str(&r.to_csv_rows("shifted"));
+        }
+        std::fs::write(path, csv).map_err(|e| format!("--drift-report {path}: {e}"))?;
+        println!("  wrote drift report to {path}");
+    }
+    if let Some(m) = monitor {
+        m.stop();
+        if let Some(p) = &metrics_path {
+            println!("  wrote metrics snapshot to {p}");
+        }
+    }
     Ok(0)
 }
 
@@ -882,6 +998,28 @@ mod tests {
         assert_eq!(run(&sv(&["serve-bench", "--max-wait-ms", "-1"])), 2);
         assert_eq!(run(&sv(&["serve-bench", "--model", "resmimi"])), 2);
         assert_eq!(run(&sv(&["serve-bench", "--threads", "0"])), 2);
+    }
+
+    /// The serving observability flags validate before any training or
+    /// lowering work starts (all exit 2, no panic, nothing written).
+    #[test]
+    fn serve_bench_observability_flags_validate_cheaply() {
+        // Output-path flags need their value, and a non-empty one.
+        assert_eq!(run(&sv(&["serve-bench", "--metrics"])), 2);
+        assert_eq!(run(&sv(&["serve-bench", "--drift-report"])), 2);
+        assert_eq!(run(&sv(&["serve-bench", "--metrics", ""])), 2);
+        assert_eq!(run(&sv(&["serve-bench", "--drift-report", ""])), 2);
+        // Sampling cadence is 1-in-N, so N must be >= 1 and numeric.
+        assert_eq!(run(&sv(&["serve-bench", "--drift-sample", "0"])), 2);
+        assert_eq!(run(&sv(&["serve-bench", "--drift-sample", "often"])), 2);
+        // The shift factor must be a finite number > 0.
+        assert_eq!(run(&sv(&["serve-bench", "--shift-inputs", "0"])), 2);
+        assert_eq!(run(&sv(&["serve-bench", "--shift-inputs", "-2"])), 2);
+        assert_eq!(run(&sv(&["serve-bench", "--shift-inputs", "abc"])), 2);
+        assert_eq!(run(&sv(&["serve-bench", "--shift-inputs", "inf"])), 2);
+        // And these are serve-bench flags only.
+        assert_eq!(run(&sv(&["infer", "--shift-inputs", "2"])), 2);
+        assert_eq!(run(&sv(&["infer", "--drift-report", "d.csv"])), 2);
     }
 
     #[test]

@@ -48,7 +48,10 @@ pub mod plan;
 pub mod serve;
 
 pub use plan::{MemoryPlan, Scratch};
-pub use serve::{run_serve_bench, BatchClient, BatchConfig, BatchServer, ServeReport, ServeStats};
+pub use serve::{
+    run_serve_bench, run_serve_bench_with, BatchClient, BatchConfig, BatchServer, ServeMonitor,
+    ServeOptions, ServeReport, ServeStats,
+};
 
 use crate::graph::{lstm_forward, Input, Op};
 use crate::obs;
@@ -927,6 +930,82 @@ impl QuantizedModel {
     /// output buffer. After the first call at a given input shape (which
     /// plans the arena) this performs no heap allocation.
     pub fn forward_with<'s>(&self, x: &Tensor, s: &'s mut Scratch) -> IView<'s> {
+        self.forward_observed(x, s, None)
+    }
+
+    /// [`QuantizedModel::forward_with`] with a drift sink attached: after
+    /// each node's kernel finishes, its written i8 output is swept
+    /// (clip counts + min/max) into `sink`. Same post-pass contract as the
+    /// profiler's clip counters — the forward's bytes are untouched.
+    pub fn forward_with_drift<'s>(
+        &self,
+        x: &Tensor,
+        s: &'s mut Scratch,
+        sink: &obs::DriftSink,
+    ) -> IView<'s> {
+        self.forward_observed(x, s, Some(sink))
+    }
+
+    /// Serving-loop entry point: ask the monitor whether this batch is
+    /// sampled; sampled batches forward with the sink attached and fold
+    /// the sweep into the monitor's EMAs, the rest run the plain path.
+    /// Returns the output view plus whether the batch was sampled.
+    pub fn forward_monitored<'s>(
+        &self,
+        x: &Tensor,
+        s: &'s mut Scratch,
+        mon: &obs::DriftMonitor,
+    ) -> (IView<'s>, bool) {
+        if mon.begin_batch() {
+            let y = self.forward_observed(x, s, Some(mon.sink()));
+            mon.ingest();
+            (y, true)
+        } else {
+            (self.forward_observed(x, s, None), false)
+        }
+    }
+
+    /// Build a drift monitor for this model: one [`obs::NodeSpec`] per
+    /// lowered node that writes fresh bytes (same gating as the profiler's
+    /// clip sweep — sinking producers and aliasing slots get `None`),
+    /// carrying the calibration-time clamp rails, zero-point, and full
+    /// grid of its packed output encoding.
+    pub fn drift_monitor(&self, cfg: obs::DriftConfig) -> obs::DriftMonitor {
+        let specs = self
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(i, node)| {
+                if node.sink.is_some() {
+                    return None;
+                }
+                clip_window(&node.op, &self.out_encs[i]).map(|(lo, hi)| {
+                    // Lowered output encodings are already packed to the
+                    // signed i8 grid (asserted at lowering), so offset and
+                    // int bounds all fit i8.
+                    let enc = &self.out_encs[i];
+                    obs::NodeSpec {
+                        name: node.name.clone(),
+                        lo,
+                        hi,
+                        zero: enc.offset as i8,
+                        grid_lo: enc.int_min as i8,
+                        grid_hi: enc.int_max as i8,
+                    }
+                })
+            })
+            .collect();
+        obs::DriftMonitor::new(specs, cfg)
+    }
+
+    /// The shared forward body behind [`QuantizedModel::forward_with`] and
+    /// the drift-sampling variants.
+    fn forward_observed<'s>(
+        &self,
+        x: &Tensor,
+        s: &'s mut Scratch,
+        drift: Option<&obs::DriftSink>,
+    ) -> IView<'s> {
         let pi = s.ensure_plan(self, x.shape());
         let (plans, arena) = s.parts();
         let p = &plans[pi];
@@ -1058,6 +1137,29 @@ impl QuantizedModel {
                                 id: idx as u32,
                                 model_lo,
                             });
+                        }
+                    }
+                }
+            }
+            // Drift sampling: same post-pass sweep, but into the sink's
+            // relaxed atomics (pool lanes observe different nodes, so
+            // there is no contention), gated exactly like the profiler's
+            // clip counters. Absent on unsampled batches, this costs one
+            // branch per node.
+            if let Some(sink) = drift {
+                if node.sink.is_none() && p.offsets[idx] != plan::NO_BUFFER {
+                    if let Some((lo, hi)) = clip_window(&node.op, &self.out_encs[idx]) {
+                        let out_len = p.node_len(idx);
+                        if out_len > 0 {
+                            // SAFETY: same block `run_node` just wrote; no
+                            // sibling aliases it within the front.
+                            let out = unsafe {
+                                std::slice::from_raw_parts(base.ptr().add(p.offsets[idx]), out_len)
+                            };
+                            let tier = simd::active_tier();
+                            let (c_lo, c_hi) = simd::count_clipped(tier, out, lo, hi);
+                            let (mn, mx) = simd::min_max_i8(tier, out);
+                            sink.observe(idx, mn, mx, c_lo, c_hi, out_len as u64);
                         }
                     }
                 }

@@ -32,8 +32,10 @@
 //! batch neighbours (verified by `replies_match_direct_forward`).
 
 use super::{QuantizedModel, Scratch};
-use crate::obs::LogHistogram;
+use crate::obs::{registry, DriftMonitor, LogHistogram};
 use crate::tensor::Tensor;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -56,6 +58,21 @@ impl Default for BatchConfig {
             max_wait: Duration::from_millis(2),
         }
     }
+}
+
+/// Full serving configuration: batching knobs plus the observability
+/// attachments (all optional — `ServeOptions::default()` serves exactly
+/// like the bare [`BatchConfig`] path).
+#[derive(Clone, Default)]
+pub struct ServeOptions {
+    pub cfg: BatchConfig,
+    /// `model` label on every registry metric the batcher publishes.
+    /// Defaults to `m<model_id hex>` — unique per lowering, so concurrent
+    /// servers never collide in the process-global registry.
+    pub label: Option<String>,
+    /// Attach a calibration-drift monitor: every `sample_every`-th batch
+    /// forwards via `forward_monitored` (bit-identical, post-pass sweep).
+    pub drift: Option<Arc<DriftMonitor>>,
 }
 
 struct Request {
@@ -86,6 +103,8 @@ pub struct ServeStats {
     pub wait_ns: u64,
     /// Batcher time spent serving (batch assembly + forward + replies).
     pub compute_ns: u64,
+    /// Forwards swept by the attached drift monitor (0 when none).
+    pub drift_sampled: usize,
 }
 
 impl ServeStats {
@@ -132,11 +151,23 @@ pub struct BatchServer {
 impl BatchServer {
     /// Spawn the batcher over a lowered model.
     pub fn start(model: Arc<QuantizedModel>, cfg: BatchConfig) -> BatchServer {
-        assert!(cfg.max_batch >= 1, "max_batch must be ≥ 1");
+        BatchServer::start_with(
+            model,
+            ServeOptions {
+                cfg,
+                ..ServeOptions::default()
+            },
+        )
+    }
+
+    /// Spawn the batcher with the full option set (metrics label, drift
+    /// monitor).
+    pub fn start_with(model: Arc<QuantizedModel>, opts: ServeOptions) -> BatchServer {
+        assert!(opts.cfg.max_batch >= 1, "max_batch must be ≥ 1");
         let (tx, rx) = channel::<Request>();
         let handle = std::thread::Builder::new()
             .name("aimet-serve".to_string())
-            .spawn(move || batcher_loop(model, cfg, rx))
+            .spawn(move || batcher_loop(model, opts, rx))
             .expect("spawn batcher");
         BatchServer {
             tx: Some(tx),
@@ -233,17 +264,94 @@ fn coalesce(reqs: &mut Vec<Request>, rx: &Receiver<Request>, cfg: &BatchConfig) 
     rows
 }
 
-fn batcher_loop(model: Arc<QuantizedModel>, cfg: BatchConfig, rx: Receiver<Request>) -> ServeStats {
+/// The registry handles the batcher publishes into, resolved once at
+/// startup (the hot loop never touches the registry lock).
+struct ServeMetrics {
+    batches: registry::Counter,
+    samples: registry::Counter,
+    full_batches: registry::Counter,
+    wait_ns: registry::Counter,
+    compute_ns: registry::Counter,
+    drift_sampled: registry::Counter,
+    queue_depth: registry::Gauge,
+    fill_ratio: registry::Gauge,
+    batch_ms: registry::Histogram,
+}
+
+impl ServeMetrics {
+    fn resolve(label: &str) -> ServeMetrics {
+        let r = registry::global();
+        let l: &[(&str, &str)] = &[("model", label)];
+        ServeMetrics {
+            batches: r.counter(
+                "aimet_serve_batches_total",
+                "Forwards executed by the batch server",
+                l,
+            ),
+            samples: r.counter("aimet_serve_samples_total", "Sample rows served", l),
+            full_batches: r.counter(
+                "aimet_serve_full_batches_total",
+                "Forwards dispatched with a full max_batch of rows",
+                l,
+            ),
+            wait_ns: r.counter(
+                "aimet_serve_wait_ns_total",
+                "Batcher nanoseconds spent waiting for requests",
+                l,
+            ),
+            compute_ns: r.counter(
+                "aimet_serve_compute_ns_total",
+                "Batcher nanoseconds spent assembling, forwarding, and replying",
+                l,
+            ),
+            drift_sampled: r.counter(
+                "aimet_serve_drift_sampled_total",
+                "Forwards swept by the calibration-drift monitor",
+                l,
+            ),
+            queue_depth: r.gauge(
+                "aimet_serve_queue_depth",
+                "Rows coalesced into the most recent forward (observed queue depth at dispatch)",
+                l,
+            ),
+            fill_ratio: r.gauge(
+                "aimet_serve_fill_ratio",
+                "Lifetime rows served over configured batch capacity",
+                l,
+            ),
+            batch_ms: r.histogram(
+                "aimet_serve_batch_ms",
+                "Per-batch serving time (assembly + forward + replies), milliseconds",
+                l,
+            ),
+        }
+    }
+}
+
+fn batcher_loop(
+    model: Arc<QuantizedModel>,
+    opts: ServeOptions,
+    rx: Receiver<Request>,
+) -> ServeStats {
+    let cfg = opts.cfg;
     let mut stats = ServeStats {
         max_batch_cfg: cfg.max_batch,
         ..ServeStats::default()
     };
+    let label = opts
+        .label
+        .clone()
+        .unwrap_or_else(|| format!("m{:x}", model.model_id));
+    let metrics = ServeMetrics::resolve(&label);
     // One warm scratch for the batcher's whole lifetime: after the first
     // batch at each coalesced size, forwards are allocation-free.
     let mut scratch = Scratch::new();
     let mut reqs: Vec<Request> = Vec::new();
     let mut batch_data: Vec<f32> = Vec::new();
     let mut shape: Vec<usize> = Vec::new();
+    // Wait time already forwarded to the registry counter (stats.wait_ns
+    // accumulates per-batch; the counter takes deltas).
+    let mut published_wait_ns = 0u64;
     loop {
         // Wait side: block for the next request (or shutdown — every
         // client + server handle gone), then coalesce stragglers. Two
@@ -270,7 +378,15 @@ fn batcher_loop(model: Arc<QuantizedModel>, cfg: BatchConfig, rx: Receiver<Reque
             batch_data.extend_from_slice(r.x.data());
         }
         let batch = Tensor::new(&shape, std::mem::take(&mut batch_data));
-        let y = model.forward_with(&batch, &mut scratch);
+        let mut sampled = false;
+        let y = match &opts.drift {
+            Some(mon) => {
+                let (y, s) = model.forward_monitored(&batch, &mut scratch, mon);
+                sampled = s;
+                y
+            }
+            None => model.forward_with(&batch, &mut scratch),
+        };
         let mut row = 0;
         for r in &reqs {
             let nr = r.x.dim(0);
@@ -278,13 +394,30 @@ fn batcher_loop(model: Arc<QuantizedModel>, cfg: BatchConfig, rx: Receiver<Reque
             let _ = r.reply.send(y.dequantize_rows(row, row + nr));
             row += nr;
         }
-        stats.compute_ns += tc.elapsed().as_nanos() as u64;
+        let batch_ns = tc.elapsed().as_nanos() as u64;
+        stats.compute_ns += batch_ns;
         stats.batches += 1;
         stats.samples += rows;
         stats.max_batch_seen = stats.max_batch_seen.max(rows);
         if rows >= cfg.max_batch {
             stats.full_batches += 1;
+            metrics.full_batches.inc();
         }
+        if sampled {
+            stats.drift_sampled += 1;
+            metrics.drift_sampled.inc();
+        }
+        // Publish the batch into the registry: a handful of relaxed
+        // atomics plus one uncontended mutex (the histogram) — amortized
+        // over a whole batch, invisible next to the forward.
+        metrics.batches.inc();
+        metrics.samples.add(rows as u64);
+        metrics.wait_ns.add(stats.wait_ns - published_wait_ns);
+        published_wait_ns = stats.wait_ns;
+        metrics.compute_ns.add(batch_ns);
+        metrics.queue_depth.set(rows as f64);
+        metrics.fill_ratio.set(stats.fill_ratio());
+        metrics.batch_ms.record(batch_ns as f64 / 1e6);
         // Reclaim the buffers for the next round.
         batch_data = batch.into_data();
         reqs.clear();
@@ -317,7 +450,7 @@ impl ServeReport {
     pub fn render(&self) -> String {
         format!(
             "{} clients x {} reqs: {:.1} samples/s | latency p50 {:.2} ms, p95 {:.2} ms, \
-             p99 {:.2} ms | {} forwards, mean batch {:.2} (max {}), fill {:.0}%, \
+             p99 {:.2} ms | {} forwards ({} full), mean batch {:.2} (max {}), fill {:.0}%, \
              wait/compute {:.0}/{:.0}%, arena {:.1} KiB",
             self.clients,
             self.requests_per_client,
@@ -326,6 +459,7 @@ impl ServeReport {
             self.p95_ms,
             self.p99_ms,
             self.stats.batches,
+            self.stats.full_batches,
             self.stats.mean_batch(),
             self.stats.max_batch_seen,
             100.0 * self.stats.fill_ratio(),
@@ -333,6 +467,90 @@ impl ServeReport {
             100.0 * (1.0 - self.stats.wait_frac()),
             self.stats.arena_peak_bytes as f64 / 1024.0
         )
+    }
+}
+
+/// Periodic metrics-snapshot writer: a background thread that renders the
+/// process-global registry to a file every `every` (plus once at `stop`),
+/// giving file-scrape deployments a Prometheus/JSON endpoint without a
+/// network listener. The extension picks the format: `.json` writes
+/// [`crate::obs::MetricsSnapshot::to_json`], anything else the Prometheus
+/// text exposition. Writes go through a `.tmp` sibling + atomic rename,
+/// so a concurrent scraper never reads a torn file.
+pub struct ServeMonitor {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// One snapshot write (tmp + rename). I/O errors are reported to stderr
+/// and otherwise swallowed: a failing sink must never take serving down.
+fn write_snapshot(path: &Path) {
+    let snap = registry::global().snapshot();
+    let body = if path.extension().is_some_and(|e| e == "json") {
+        let mut s = snap.to_json().pretty();
+        s.push('\n');
+        s
+    } else {
+        snap.to_prometheus()
+    };
+    // `foo.prom` → `foo.prom.tmp` (appending keeps distinct targets with
+    // a shared stem from colliding on one tmp file).
+    let mut tmp_name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    tmp_name.push(".tmp");
+    let tmp = path.with_file_name(tmp_name);
+    let res = std::fs::write(&tmp, body).and_then(|()| std::fs::rename(&tmp, path));
+    if let Err(e) = res {
+        eprintln!("serve-monitor: failed to write {}: {e}", path.display());
+    }
+}
+
+impl ServeMonitor {
+    /// Start writing snapshots of the global registry to `path` every
+    /// `every` until [`ServeMonitor::stop`] (which also writes a final
+    /// snapshot, so short runs always leave a complete file behind).
+    pub fn start(path: impl Into<PathBuf>, every: Duration) -> ServeMonitor {
+        let path = path.into();
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("aimet-serve-monitor".to_string())
+            .spawn(move || {
+                // Coarse poll (every/10, ≥ 1 ms) so stop() returns fast
+                // without a condvar; the monitor is idle-cheap either way.
+                let tick = (every / 10).max(Duration::from_millis(1));
+                let mut last = Instant::now();
+                write_snapshot(&path);
+                while !flag.load(Ordering::Relaxed) {
+                    std::thread::sleep(tick);
+                    if last.elapsed() >= every {
+                        write_snapshot(&path);
+                        last = Instant::now();
+                    }
+                }
+                write_snapshot(&path);
+            })
+            .expect("spawn serve monitor");
+        ServeMonitor {
+            stop,
+            handle: Some(handle),
+        }
+    }
+
+    /// Write a final snapshot and join the writer thread.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServeMonitor {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
     }
 }
 
@@ -358,8 +576,29 @@ pub fn run_serve_bench(
     requests_per_client: usize,
     cfg: BatchConfig,
 ) -> ServeReport {
+    run_serve_bench_with(
+        model,
+        samples,
+        clients,
+        requests_per_client,
+        ServeOptions {
+            cfg,
+            ..ServeOptions::default()
+        },
+    )
+}
+
+/// [`run_serve_bench`] with the full option set (metrics label, drift
+/// monitor).
+pub fn run_serve_bench_with(
+    model: Arc<QuantizedModel>,
+    samples: &[Tensor],
+    clients: usize,
+    requests_per_client: usize,
+    opts: ServeOptions,
+) -> ServeReport {
     assert!(clients >= 1 && !samples.is_empty());
-    let server = BatchServer::start(model, cfg);
+    let server = BatchServer::start_with(model, opts);
     let t0 = Instant::now();
     // Each client records into its own bounded histogram (~7.6 KiB);
     // merging them is exact, so memory is constant in request count —
@@ -418,6 +657,13 @@ mod tests {
         Arc::new(lower(&out.sim).expect("lowering"))
     }
 
+    fn opts_with(cfg: BatchConfig) -> ServeOptions {
+        ServeOptions {
+            cfg,
+            ..ServeOptions::default()
+        }
+    }
+
     #[test]
     fn replies_match_direct_forward() {
         // Whatever micro-batches the server forms, each caller must get
@@ -472,7 +718,7 @@ mod tests {
             max_batch: 8,
             max_wait: Duration::ZERO,
         };
-        let stats = batcher_loop(Arc::clone(&qm), cfg, rx);
+        let stats = batcher_loop(Arc::clone(&qm), opts_with(cfg), rx);
         assert_eq!(stats.batches, 1, "queued requests must coalesce");
         assert_eq!(stats.samples, 5);
         assert_eq!(stats.max_batch_seen, 5);
@@ -498,7 +744,7 @@ mod tests {
             max_batch: 2,
             max_wait: Duration::ZERO,
         };
-        let stats = batcher_loop(qm, cfg, rx);
+        let stats = batcher_loop(qm, opts_with(cfg), rx);
         assert_eq!(stats.batches, 3, "5 queued requests at max_batch 2");
         assert_eq!(stats.max_batch_seen, 2);
         for r in &replies {
@@ -609,7 +855,7 @@ mod tests {
             max_batch: 2,
             max_wait: Duration::ZERO,
         };
-        let stats = batcher_loop(qm, cfg, rx);
+        let stats = batcher_loop(qm, opts_with(cfg), rx);
         assert_eq!(stats.max_batch_cfg, 2);
         assert_eq!(stats.full_batches, 2);
         assert!((stats.fill_ratio() - 5.0 / 6.0).abs() < 1e-12);
@@ -617,5 +863,137 @@ mod tests {
         for r in &replies {
             assert_eq!(r.recv().unwrap().dim(0), 1);
         }
+    }
+
+    #[test]
+    fn drift_monitor_samples_served_batches_bit_identically() {
+        // Serving with a drift monitor at sample_every=1 sweeps every
+        // forward, fills the report, and — the core contract — replies
+        // stay exactly what a plain forward produces.
+        let qm = model();
+        let mon = Arc::new(qm.drift_monitor(crate::obs::DriftConfig {
+            sample_every: 1,
+            min_batches: 1,
+            ..crate::obs::DriftConfig::default()
+        }));
+        let (tx, rx) = channel::<Request>();
+        let ds = SynthImageNet::new(409);
+        let mut expected = Vec::new();
+        let mut replies = Vec::new();
+        for i in 0..6u64 {
+            let (x, _) = ds.batch(i, 1);
+            let (rtx, rrx) = channel();
+            expected.push(qm.forward(&x));
+            replies.push(rrx);
+            tx.send(Request { x, reply: rtx }).unwrap();
+        }
+        drop(tx);
+        let opts = ServeOptions {
+            cfg: BatchConfig {
+                max_batch: 2,
+                max_wait: Duration::ZERO,
+            },
+            label: Some("test_drift_serve".to_string()),
+            drift: Some(Arc::clone(&mon)),
+        };
+        let stats = batcher_loop(Arc::clone(&qm), opts, rx);
+        assert_eq!(stats.batches, 3);
+        assert_eq!(stats.drift_sampled, 3, "sample_every=1 sweeps every batch");
+        for (rrx, want) in replies.iter().zip(&expected) {
+            assert_eq!(&rrx.recv().unwrap(), want, "monitored replies bit-identical");
+        }
+        let report = mon.report();
+        assert_eq!(report.sampled_batches, 3);
+        assert!(!report.nodes.is_empty(), "monitored nodes must be graded");
+        assert!(report.nodes.iter().all(|n| n.elems > 0));
+        assert_eq!(
+            report.drifting, 0,
+            "calibration-distribution traffic must not drift: {}",
+            report.render()
+        );
+    }
+
+    #[test]
+    fn batcher_publishes_into_the_global_registry() {
+        // A unique model label keeps this test's cells disjoint from every
+        // other test sharing the process-global registry.
+        let qm = model();
+        let (tx, rx) = channel::<Request>();
+        let ds = SynthImageNet::new(410);
+        let mut replies = Vec::new();
+        for i in 0..4u64 {
+            let (x, _) = ds.batch(i, 1);
+            let (rtx, rrx) = channel();
+            replies.push(rrx);
+            tx.send(Request { x, reply: rtx }).unwrap();
+        }
+        drop(tx);
+        let opts = ServeOptions {
+            cfg: BatchConfig {
+                max_batch: 2,
+                max_wait: Duration::ZERO,
+            },
+            label: Some("test_registry_publish".to_string()),
+            drift: None,
+        };
+        let stats = batcher_loop(qm, opts, rx);
+        for r in &replies {
+            let _ = r.recv().unwrap();
+        }
+        let l: &[(&str, &str)] = &[("model", "test_registry_publish")];
+        let reg = registry::global();
+        assert_eq!(
+            reg.counter("aimet_serve_batches_total", "", l).get(),
+            stats.batches as u64
+        );
+        assert_eq!(
+            reg.counter("aimet_serve_samples_total", "", l).get(),
+            stats.samples as u64
+        );
+        assert_eq!(
+            reg.counter("aimet_serve_full_batches_total", "", l).get(),
+            stats.full_batches as u64
+        );
+        assert_eq!(
+            reg.counter("aimet_serve_compute_ns_total", "", l).get(),
+            stats.compute_ns
+        );
+        assert_eq!(
+            reg.histogram("aimet_serve_batch_ms", "", l).read().count(),
+            stats.batches as u64
+        );
+        let fill = reg.gauge("aimet_serve_fill_ratio", "", l).get();
+        assert!((fill - stats.fill_ratio()).abs() < 1e-12, "fill {fill}");
+    }
+
+    #[test]
+    fn serve_monitor_writes_parseable_snapshots() {
+        // Seed the global registry so snapshots are non-trivial.
+        registry::global()
+            .counter("aimet_serve_monitor_test_total", "monitor test seed", &[])
+            .inc();
+        let dir = std::env::temp_dir();
+        let uniq = format!(
+            "aimet-mon-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        );
+        let prom = dir.join(format!("{uniq}.prom"));
+        let json = dir.join(format!("{uniq}.json"));
+        let m1 = ServeMonitor::start(&prom, Duration::from_secs(3600));
+        let m2 = ServeMonitor::start(&json, Duration::from_secs(3600));
+        m1.stop();
+        m2.stop();
+        let text = std::fs::read_to_string(&prom).expect("prom snapshot written");
+        assert!(
+            text.contains("aimet_serve_monitor_test_total"),
+            "snapshot must include the seeded counter: {text}"
+        );
+        assert!(text.contains("# TYPE aimet_serve_monitor_test_total counter"));
+        let body = std::fs::read_to_string(&json).expect("json snapshot written");
+        let parsed = crate::json::parse(&body).expect("json snapshot parses");
+        assert!(parsed.get("aimet_serve_monitor_test_total").is_some());
+        let _ = std::fs::remove_file(&prom);
+        let _ = std::fs::remove_file(&json);
     }
 }

@@ -1,0 +1,629 @@
+//! Calibration-drift monitoring over served traffic.
+//!
+//! PTQ range settings are estimated once, from a small calibration set
+//! (paper §4); when production traffic drifts away from that
+//! distribution the int8 grids silently stop fitting — activations pin
+//! against the clamp rails (saturation: growing outliers the grid can no
+//! longer represent) or shrink into a sliver of the grid (wasted
+//! resolution). This module is the serving-time detector for both
+//! failure modes, built to the same contract as the span profiler: the
+//! forward's bytes are NEVER touched — the engine sweeps each node's
+//! *finished* i8 output (`simd::count_clipped` + `simd::min_max_i8`,
+//! post-pass) into a [`DriftSink`] of relaxed atomics, so monitored
+//! forwards stay bit-identical and pool threads write concurrently
+//! without locks.
+//!
+//! Flow: the engine builds one [`DriftMonitor`] per lowered model
+//! (`QuantizedModel::drift_monitor`) carrying a plain-data mirror of each
+//! node's calibration-time grid ([`NodeSpec`] — obs knows nothing about
+//! engine types, same rule as [`super::report`]). A serving loop asks
+//! [`DriftMonitor::begin_batch`] before every forward; every
+//! `sample_every`-th batch (default 1/16) runs with the sink attached and
+//! then calls [`DriftMonitor::ingest`], which turns the cumulative
+//! counters into per-batch clip rates and folds them into EMAs.
+//! [`DriftMonitor::report`] grades each node:
+//!
+//! - **saturating** — the informative clip rate (hi-clips, plus lo-clips
+//!   only when the lower rail is *not* the zero-point — on ReLU grids the
+//!   lower rail IS the zero-point, so lo-hits are legitimate zeros)
+//!   exceeds the threshold on BOTH the EMA and the cumulative rate. The
+//!   two-signal test keeps one outlier batch on a tiny output (where a
+//!   single clipped logit is percents of the batch) from flagging a
+//!   healthy node, while sustained drift trips both quickly.
+//! - **under-utilized** — the run-cumulative observed span covers less
+//!   than `underutil_span` of the clamp window, with saturation quiet:
+//!   traffic shrank and the grid wastes most of its levels. Cumulative
+//!   min/max latch, so rotate in a fresh monitor per observation window.
+//! - **ok** / **low-data** (fewer than `min_batches` sampled batches —
+//!   verdicts need evidence).
+//!
+//! Any saturating or under-utilized node raises the report's overall
+//! `recalibrate` signal — the operator's cue to re-run range setting on
+//! fresh traffic.
+
+use crate::json::Json;
+use std::sync::atomic::{AtomicI32, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Detector knobs. Defaults are deliberately far above the noise floor of
+/// in-distribution traffic (tested zoo-wide: zero false positives) while
+/// a 4x input shift trips every zoo model within a handful of batches.
+#[derive(Debug, Clone, Copy)]
+pub struct DriftConfig {
+    /// Sweep every Nth served batch (1 = every batch).
+    pub sample_every: u64,
+    /// EMA weight of the newest sampled batch's clip rate.
+    pub ema_alpha: f64,
+    /// Informative-clip rate above which a node is saturating (applied to
+    /// both the EMA and the cumulative rate).
+    pub saturating_clip: f64,
+    /// Observed-span / clamp-window ratio below which a node's grid is
+    /// under-utilized.
+    pub underutil_span: f64,
+    /// Sampled batches a node needs before any verdict besides low-data.
+    pub min_batches: u64,
+}
+
+impl Default for DriftConfig {
+    fn default() -> DriftConfig {
+        DriftConfig {
+            sample_every: 16,
+            ema_alpha: 0.25,
+            saturating_clip: 0.01,
+            underutil_span: 0.25,
+            min_batches: 4,
+        }
+    }
+}
+
+/// Calibration-time facts about one lowered node's output grid — the
+/// engine-agnostic mirror the verdicts compare live traffic against.
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    pub name: String,
+    /// Clamp rails the node's epilogue pins written bytes to.
+    pub lo: i8,
+    pub hi: i8,
+    /// Zero-point on the packed grid: when `lo == zero` (ReLU-fused
+    /// asymmetric grids) lo-hits are legitimate zeros, not saturation.
+    pub zero: i8,
+    /// Full integer grid of the output encoding.
+    pub grid_lo: i8,
+    pub grid_hi: i8,
+}
+
+/// Per-node accumulators the engine's post-pass sweep writes into. All
+/// relaxed atomics: pool threads observing different nodes never contend,
+/// and a torn read only costs one batch of precision, never correctness.
+struct NodeAcc {
+    min: AtomicI32,
+    max: AtomicI32,
+    clip_lo: AtomicU64,
+    clip_hi: AtomicU64,
+    elems: AtomicU64,
+}
+
+impl NodeAcc {
+    fn new() -> NodeAcc {
+        NodeAcc {
+            min: AtomicI32::new(i8::MAX as i32),
+            max: AtomicI32::new(i8::MIN as i32),
+            clip_lo: AtomicU64::new(0),
+            clip_hi: AtomicU64::new(0),
+            elems: AtomicU64::new(0),
+        }
+    }
+}
+
+/// The hot half of the monitor: what a drift-sampled forward writes.
+pub struct DriftSink {
+    nodes: Vec<NodeAcc>,
+}
+
+impl DriftSink {
+    /// Fold one node's swept output into the accumulators (called from
+    /// the engine, possibly from a pool thread).
+    pub fn observe(&self, node: usize, min: i8, max: i8, clip_lo: u64, clip_hi: u64, elems: u64) {
+        let a = &self.nodes[node];
+        a.min.fetch_min(min as i32, Ordering::Relaxed);
+        a.max.fetch_max(max as i32, Ordering::Relaxed);
+        a.clip_lo.fetch_add(clip_lo, Ordering::Relaxed);
+        a.clip_hi.fetch_add(clip_hi, Ordering::Relaxed);
+        a.elems.fetch_add(elems, Ordering::Relaxed);
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+/// Cold per-node state `ingest` maintains under the mutex: cumulative
+/// snapshots (for deltas) and the clip-rate EMAs.
+#[derive(Default, Clone)]
+struct NodeState {
+    last_lo: u64,
+    last_hi: u64,
+    last_elems: u64,
+    ema_sat: f64,
+    ema_lo: f64,
+    ema_hi: f64,
+    batches: u64,
+}
+
+/// Sampled drift detector for one lowered model; see the module docs.
+pub struct DriftMonitor {
+    specs: Vec<Option<NodeSpec>>,
+    cfg: DriftConfig,
+    sink: DriftSink,
+    total_batches: AtomicU64,
+    sampled_batches: AtomicU64,
+    state: Mutex<Vec<NodeState>>,
+}
+
+impl DriftMonitor {
+    /// `specs[i]` mirrors lowered node `i`: `None` for slots that write no
+    /// fresh bytes (fused-away placeholders, sinking producers) — those
+    /// are never observed.
+    pub fn new(specs: Vec<Option<NodeSpec>>, cfg: DriftConfig) -> DriftMonitor {
+        assert!(cfg.sample_every >= 1, "sample_every must be >= 1");
+        assert!(cfg.min_batches >= 1, "min_batches must be >= 1");
+        let n = specs.len();
+        DriftMonitor {
+            specs,
+            cfg,
+            sink: DriftSink {
+                nodes: (0..n).map(|_| NodeAcc::new()).collect(),
+            },
+            total_batches: AtomicU64::new(0),
+            sampled_batches: AtomicU64::new(0),
+            state: Mutex::new(vec![NodeState::default(); n]),
+        }
+    }
+
+    /// Count one served batch; true when this batch should run with the
+    /// sink attached (every `sample_every`-th, starting with the first).
+    pub fn begin_batch(&self) -> bool {
+        let n = self.total_batches.fetch_add(1, Ordering::Relaxed);
+        n % self.cfg.sample_every == 0
+    }
+
+    /// The accumulator table a sampled forward sweeps into.
+    pub fn sink(&self) -> &DriftSink {
+        &self.sink
+    }
+
+    /// After a sampled forward: diff the cumulative counters against the
+    /// last snapshot and fold the per-batch clip rates into the EMAs.
+    pub fn ingest(&self) {
+        let mut state = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        for (i, spec) in self.specs.iter().enumerate() {
+            let Some(spec) = spec else { continue };
+            let acc = &self.sink.nodes[i];
+            let (lo, hi, elems) = (
+                acc.clip_lo.load(Ordering::Relaxed),
+                acc.clip_hi.load(Ordering::Relaxed),
+                acc.elems.load(Ordering::Relaxed),
+            );
+            let st = &mut state[i];
+            let d_elems = elems.saturating_sub(st.last_elems);
+            if d_elems == 0 {
+                continue;
+            }
+            let d_lo = lo.saturating_sub(st.last_lo);
+            let d_hi = hi.saturating_sub(st.last_hi);
+            let informative_lo = if spec.lo != spec.zero { d_lo } else { 0 };
+            let r_sat = (d_hi + informative_lo) as f64 / d_elems as f64;
+            let r_lo = d_lo as f64 / d_elems as f64;
+            let r_hi = d_hi as f64 / d_elems as f64;
+            if st.batches == 0 {
+                st.ema_sat = r_sat;
+                st.ema_lo = r_lo;
+                st.ema_hi = r_hi;
+            } else {
+                let a = self.cfg.ema_alpha;
+                st.ema_sat = a * r_sat + (1.0 - a) * st.ema_sat;
+                st.ema_lo = a * r_lo + (1.0 - a) * st.ema_lo;
+                st.ema_hi = a * r_hi + (1.0 - a) * st.ema_hi;
+            }
+            st.batches += 1;
+            st.last_lo = lo;
+            st.last_hi = hi;
+            st.last_elems = elems;
+        }
+        self.sampled_batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn total_batches(&self) -> u64 {
+        self.total_batches.load(Ordering::Relaxed)
+    }
+
+    pub fn sampled_batches(&self) -> u64 {
+        self.sampled_batches.load(Ordering::Relaxed)
+    }
+
+    /// Grade every monitored node against its calibration grid.
+    pub fn report(&self) -> DriftReport {
+        let state = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        let mut nodes = Vec::new();
+        for (i, spec) in self.specs.iter().enumerate() {
+            let Some(spec) = spec else { continue };
+            let acc = &self.sink.nodes[i];
+            let elems = acc.elems.load(Ordering::Relaxed);
+            let clip_lo = acc.clip_lo.load(Ordering::Relaxed);
+            let clip_hi = acc.clip_hi.load(Ordering::Relaxed);
+            let obs_min =
+                acc.min.load(Ordering::Relaxed).clamp(i8::MIN as i32, i8::MAX as i32) as i8;
+            let obs_max =
+                acc.max.load(Ordering::Relaxed).clamp(i8::MIN as i32, i8::MAX as i32) as i8;
+            let st = &state[i];
+            let informative_lo = if spec.lo != spec.zero { clip_lo } else { 0 };
+            let sat_rate = if elems == 0 {
+                0.0
+            } else {
+                (clip_hi + informative_lo) as f64 / elems as f64
+            };
+            let rails = (spec.hi as i32 - spec.lo as i32).max(0) as f64;
+            let utilization = if elems == 0 {
+                0.0
+            } else if rails <= 0.0 {
+                1.0
+            } else {
+                (obs_max as i32 - obs_min as i32).max(0) as f64 / rails
+            };
+            let verdict = if st.batches < self.cfg.min_batches || elems == 0 {
+                Verdict::LowData
+            } else if st.ema_sat > self.cfg.saturating_clip && sat_rate > self.cfg.saturating_clip {
+                Verdict::Saturating
+            } else if utilization < self.cfg.underutil_span {
+                Verdict::UnderUtilized
+            } else {
+                Verdict::Ok
+            };
+            nodes.push(NodeDrift {
+                id: i,
+                name: spec.name.clone(),
+                verdict,
+                obs_min,
+                obs_max,
+                lo: spec.lo,
+                hi: spec.hi,
+                utilization,
+                sat_rate,
+                sat_ema: st.ema_sat,
+                clip_lo_ema: st.ema_lo,
+                clip_hi_ema: st.ema_hi,
+                batches: st.batches,
+                elems,
+            });
+        }
+        let drifting = nodes.iter().filter(|n| n.verdict.is_drifting()).count();
+        DriftReport {
+            nodes,
+            total_batches: self.total_batches(),
+            sampled_batches: self.sampled_batches(),
+            drifting,
+            recalibrate: drifting > 0,
+        }
+    }
+}
+
+/// One node's health against its calibration-time grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Traffic fits the grid.
+    Ok,
+    /// Informative clips exceed threshold: the grid is too small.
+    Saturating,
+    /// Observed span covers a sliver of the rails: the grid is too big.
+    UnderUtilized,
+    /// Not enough sampled batches to grade.
+    LowData,
+}
+
+impl Verdict {
+    pub fn is_drifting(self) -> bool {
+        matches!(self, Verdict::Saturating | Verdict::UnderUtilized)
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Verdict::Ok => "ok",
+            Verdict::Saturating => "saturating",
+            Verdict::UnderUtilized => "under-utilized",
+            Verdict::LowData => "low-data",
+        }
+    }
+}
+
+/// One monitored node's scrape-out.
+#[derive(Debug, Clone)]
+pub struct NodeDrift {
+    pub id: usize,
+    pub name: String,
+    pub verdict: Verdict,
+    pub obs_min: i8,
+    pub obs_max: i8,
+    pub lo: i8,
+    pub hi: i8,
+    pub utilization: f64,
+    /// Cumulative informative clip rate.
+    pub sat_rate: f64,
+    /// EMA of per-sampled-batch informative clip rates.
+    pub sat_ema: f64,
+    pub clip_lo_ema: f64,
+    pub clip_hi_ema: f64,
+    pub batches: u64,
+    pub elems: u64,
+}
+
+/// Full drift verdict set plus the overall recalibration signal.
+#[derive(Debug, Clone)]
+pub struct DriftReport {
+    pub nodes: Vec<NodeDrift>,
+    pub total_batches: u64,
+    pub sampled_batches: u64,
+    /// Nodes graded saturating or under-utilized.
+    pub drifting: usize,
+    /// True when any node drifts — re-run range setting on fresh traffic.
+    pub recalibrate: bool,
+}
+
+impl DriftReport {
+    fn count(&self, v: Verdict) -> usize {
+        self.nodes.iter().filter(|n| n.verdict == v).count()
+    }
+
+    /// Human summary: one header line, plus one line per non-ok node.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "drift: {} nodes monitored | {} ok, {} saturating, {} under-utilized, {} low-data | \
+             sampled {}/{} batches -> {}\n",
+            self.nodes.len(),
+            self.count(Verdict::Ok),
+            self.count(Verdict::Saturating),
+            self.count(Verdict::UnderUtilized),
+            self.count(Verdict::LowData),
+            self.sampled_batches,
+            self.total_batches,
+            if self.recalibrate { "RECALIBRATE" } else { "ok" }
+        );
+        for n in self.nodes.iter().filter(|n| n.verdict.is_drifting()) {
+            out.push_str(&format!(
+                "  {:<18} {:<14} obs[{},{}] rails[{},{}] util {:>5.1}% sat {:.2}% (ema {:.2}%) \
+                 over {} batches\n",
+                n.name,
+                n.verdict.as_str(),
+                n.obs_min,
+                n.obs_max,
+                n.lo,
+                n.hi,
+                100.0 * n.utilization,
+                100.0 * n.sat_rate,
+                100.0 * n.sat_ema,
+                n.batches
+            ));
+        }
+        out
+    }
+
+    /// CSV header matching [`DriftReport::to_csv_rows`].
+    pub fn csv_header() -> &'static str {
+        "run,node,name,verdict,obs_min,obs_max,lo,hi,utilization,sat_rate,sat_ema,\
+         clip_lo_ema,clip_hi_ema,batches,elems\n"
+    }
+
+    /// One CSV row per monitored node, tagged with a run label so
+    /// baseline and shifted phases can share one file.
+    pub fn to_csv_rows(&self, run: &str) -> String {
+        let mut out = String::new();
+        for n in &self.nodes {
+            out.push_str(&format!(
+                "{run},{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.6},{:.6},{},{}\n",
+                n.id,
+                n.name,
+                n.verdict.as_str(),
+                n.obs_min,
+                n.obs_max,
+                n.lo,
+                n.hi,
+                n.utilization,
+                n.sat_rate,
+                n.sat_ema,
+                n.clip_lo_ema,
+                n.clip_hi_ema,
+                n.batches,
+                n.elems
+            ));
+        }
+        out
+    }
+
+    /// Header + rows in one string.
+    pub fn to_csv(&self, run: &str) -> String {
+        format!("{}{}", Self::csv_header(), self.to_csv_rows(run))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = Json::obj();
+        obj.set("total_batches", Json::from(self.total_batches as f64));
+        obj.set("sampled_batches", Json::from(self.sampled_batches as f64));
+        obj.set("drifting", Json::from(self.drifting));
+        obj.set("recalibrate", Json::Bool(self.recalibrate));
+        let nodes = self
+            .nodes
+            .iter()
+            .map(|n| {
+                let mut o = Json::obj();
+                o.set("id", Json::from(n.id));
+                o.set("name", Json::from(n.name.as_str()));
+                o.set("verdict", Json::from(n.verdict.as_str()));
+                o.set("obs_min", Json::from(n.obs_min as f64));
+                o.set("obs_max", Json::from(n.obs_max as f64));
+                o.set("lo", Json::from(n.lo as f64));
+                o.set("hi", Json::from(n.hi as f64));
+                o.set("utilization", Json::from(n.utilization));
+                o.set("sat_rate", Json::from(n.sat_rate));
+                o.set("sat_ema", Json::from(n.sat_ema));
+                o.set("batches", Json::from(n.batches as f64));
+                o.set("elems", Json::from(n.elems as f64));
+                o
+            })
+            .collect();
+        obj.set("nodes", Json::Arr(nodes));
+        obj
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, lo: i8, hi: i8, zero: i8) -> Option<NodeSpec> {
+        Some(NodeSpec {
+            name: name.to_string(),
+            lo,
+            hi,
+            zero,
+            grid_lo: lo,
+            grid_hi: hi,
+        })
+    }
+
+    fn cfg() -> DriftConfig {
+        DriftConfig {
+            sample_every: 1,
+            ..DriftConfig::default()
+        }
+    }
+
+    /// Simulate one sampled batch: observe + ingest.
+    fn feed(m: &DriftMonitor, node: usize, min: i8, max: i8, c_lo: u64, c_hi: u64, elems: u64) {
+        assert!(m.begin_batch());
+        m.sink().observe(node, min, max, c_lo, c_hi, elems);
+        m.ingest();
+    }
+
+    #[test]
+    fn sampling_cadence_follows_sample_every() {
+        let m = DriftMonitor::new(
+            vec![spec("n", -128, 127, 0)],
+            DriftConfig {
+                sample_every: 4,
+                ..DriftConfig::default()
+            },
+        );
+        let pattern: Vec<bool> = (0..8).map(|_| m.begin_batch()).collect();
+        assert_eq!(
+            pattern,
+            [true, false, false, false, true, false, false, false]
+        );
+        assert_eq!(m.total_batches(), 8);
+    }
+
+    #[test]
+    fn saturating_node_is_flagged() {
+        // Symmetric grid (lo != zero): 5% hi-clips, sustained.
+        let m = DriftMonitor::new(vec![spec("conv", -128, 127, 0)], cfg());
+        for _ in 0..6 {
+            feed(&m, 0, -120, 127, 0, 50, 1000);
+        }
+        let r = m.report();
+        assert_eq!(r.nodes.len(), 1);
+        assert_eq!(r.nodes[0].verdict, Verdict::Saturating);
+        assert!(r.recalibrate && r.drifting == 1);
+        assert!(r.nodes[0].sat_ema > 0.04 && r.nodes[0].sat_rate > 0.04);
+        assert!(r.render().contains("saturating"), "{}", r.render());
+    }
+
+    #[test]
+    fn relu_grid_lo_clips_are_not_saturation() {
+        // ReLU-fused asymmetric grid: lower rail == zero-point, so heavy
+        // lo-hits (legitimate zeros) must not flag; hi stays quiet.
+        let m = DriftMonitor::new(vec![spec("relu", -128, 127, -128)], cfg());
+        for _ in 0..6 {
+            feed(&m, 0, -128, 120, 400, 0, 1000);
+        }
+        let r = m.report();
+        assert_eq!(r.nodes[0].verdict, Verdict::Ok, "{:?}", r.nodes[0]);
+        assert_eq!(r.nodes[0].sat_rate, 0.0);
+        assert!(r.nodes[0].clip_lo_ema > 0.3, "raw lo EMA still reported");
+        assert!(!r.recalibrate);
+    }
+
+    #[test]
+    fn shrunken_traffic_is_under_utilized() {
+        let m = DriftMonitor::new(vec![spec("head", -128, 127, 0)], cfg());
+        for _ in 0..6 {
+            feed(&m, 0, -6, 7, 0, 0, 1000);
+        }
+        let r = m.report();
+        assert_eq!(r.nodes[0].verdict, Verdict::UnderUtilized);
+        assert!(r.nodes[0].utilization < 0.10);
+        assert!(r.recalibrate);
+    }
+
+    #[test]
+    fn one_outlier_batch_does_not_flag_a_tiny_output() {
+        // 40 logits/batch: two clipped elements are 5% of the batch. The
+        // EMA spikes past the threshold (0.25 · 5% = 1.25%) but the
+        // cumulative rate stays under it (2/400 = 0.5%), so the
+        // two-signal verdict holds at Ok.
+        let m = DriftMonitor::new(vec![spec("logits", -128, 127, 0)], cfg());
+        for _ in 0..9 {
+            feed(&m, 0, -90, 90, 0, 0, 40);
+        }
+        feed(&m, 0, -90, 127, 0, 2, 40); // the outlier, most recent
+        let r = m.report();
+        assert!(r.nodes[0].sat_ema > 0.01, "EMA sees the spike");
+        assert!(r.nodes[0].sat_rate < 0.01, "cumulative rate stays calm");
+        assert_eq!(r.nodes[0].verdict, Verdict::Ok);
+    }
+
+    #[test]
+    fn low_data_nodes_do_not_drift() {
+        let m = DriftMonitor::new(
+            vec![spec("a", -128, 127, 0), spec("b", -128, 127, 0), None],
+            cfg(),
+        );
+        // Node 0 gets two batches (< min_batches 4); node 1 none.
+        for _ in 0..2 {
+            feed(&m, 0, -128, 127, 100, 100, 200);
+        }
+        let r = m.report();
+        assert_eq!(r.nodes.len(), 2, "None specs are skipped");
+        assert_eq!(r.nodes[0].verdict, Verdict::LowData);
+        assert_eq!(r.nodes[1].verdict, Verdict::LowData);
+        assert!(!r.recalibrate, "low-data never raises the signal");
+    }
+
+    #[test]
+    fn csv_and_json_are_well_formed() {
+        let m = DriftMonitor::new(vec![spec("conv", -128, 127, 0)], cfg());
+        for _ in 0..4 {
+            feed(&m, 0, -128, 127, 0, 100, 1000);
+        }
+        let r = m.report();
+        let csv = r.to_csv("baseline");
+        let mut lines = csv.lines();
+        assert_eq!(
+            lines.next().unwrap(),
+            "run,node,name,verdict,obs_min,obs_max,lo,hi,utilization,sat_rate,sat_ema,\
+             clip_lo_ema,clip_hi_ema,batches,elems"
+        );
+        let row = lines.next().unwrap();
+        assert!(row.starts_with("baseline,0,conv,saturating,"), "{row}");
+        assert_eq!(row.split(',').count(), 15);
+
+        let js = r.to_json();
+        let parsed = crate::json::parse(&js.pretty()).expect("drift JSON parses");
+        assert_eq!(parsed.get("recalibrate"), Some(&Json::Bool(true)));
+        let Some(Json::Arr(nodes)) = parsed.get("nodes") else {
+            panic!("nodes array");
+        };
+        assert_eq!(nodes.len(), 1);
+        assert_eq!(
+            nodes[0].get("verdict").and_then(|v| v.as_str()),
+            Some("saturating")
+        );
+    }
+}

@@ -48,7 +48,9 @@ fn index(t: u64) -> usize {
     (SUB + group * SUB + sub).min(BUCKETS - 1)
 }
 
-/// `[lo, hi)` nanosecond range of bucket `idx`.
+/// `[lo, hi)` nanosecond range of bucket `idx`. The final (overflow)
+/// bucket's upper edge is nominally 2⁶⁴ — saturate it to `u64::MAX`;
+/// `index` clamps everything past the axis into that bucket anyway.
 fn bounds(idx: usize) -> (u64, u64) {
     if idx < SUB {
         return (idx as u64, idx as u64 + 1);
@@ -58,7 +60,7 @@ fn bounds(idx: usize) -> (u64, u64) {
     let top = group + SUB_BITS;
     let width = 1u64 << (top - SUB_BITS);
     let lo = (1u64 << top) + sub * width;
-    (lo, lo + width)
+    (lo, lo.saturating_add(width))
 }
 
 impl LogHistogram {
@@ -138,8 +140,10 @@ impl LogHistogram {
         for (i, &c) in self.counts.iter().enumerate() {
             seen += c;
             if seen > rank {
+                // Sum in f64: the overflow bucket's `lo + hi` would wrap
+                // u64.
                 let (lo, hi) = bounds(i);
-                let mid_ms = (lo + hi) as f64 / 2.0 / 1e6;
+                let mid_ms = (lo as f64 + hi as f64) / 2.0 / 1e6;
                 return mid_ms.clamp(self.min_ms, self.max_ms);
             }
         }
@@ -222,6 +226,69 @@ mod tests {
             assert_eq!(a.percentile(p), all.percentile(p));
         }
         assert!((a.mean_ms() - all.mean_ms()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sharded_merge_matches_single_histogram_with_empty_and_overflow_shards() {
+        // The serve tier's per-client sharding property: recording a
+        // stream into 5 shard histograms (one left deliberately empty)
+        // and merging must be indistinguishable from recording into one —
+        // exact counts/min/max, identical percentiles at every rank — and
+        // the merged result must still satisfy the documented 6.25%
+        // nearest-rank bound against the exact oracle. Values span four
+        // decades plus "giant" samples whose ticks clamp past the u64
+        // nanosecond axis into the overflow bucket.
+        let vals: Vec<f64> = (0..400u64)
+            .map(|i| {
+                let r = (i.wrapping_mul(2654435761) % 100_000) as f64 / 100_000.0;
+                0.01 * (1.0 + 99_999.0 * r * r * r)
+            })
+            .chain((0..5).map(|_| 1e30))
+            .collect();
+        let mut single = LogHistogram::new();
+        let mut shards: Vec<LogHistogram> = (0..5).map(|_| LogHistogram::new()).collect();
+        for (i, &v) in vals.iter().enumerate() {
+            single.record_ms(v);
+            // Shard 3 stays empty (its stream is folded into shard 0), so
+            // the merge also covers the empty-shard case.
+            let s = if i % 5 == 3 { 0 } else { i % 5 };
+            shards[s].record_ms(v);
+        }
+        assert_eq!(shards[3].count(), 0, "shard 3 must be empty");
+        let mut merged = LogHistogram::new();
+        for s in &shards {
+            merged.merge(s);
+        }
+
+        assert_eq!(merged.count(), single.count());
+        assert_eq!(merged.min_ms(), single.min_ms());
+        assert_eq!(merged.max_ms(), single.max_ms());
+        // p99's rank lands on a giant: the overflow bucket must report
+        // identically through both paths (and without panicking).
+        for p in [0.0, 5.0, 25.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+            assert_eq!(merged.percentile(p), single.percentile(p), "p{p}");
+        }
+        // sum_ms is accumulated in different order, so mean is equal only
+        // up to f64 rounding.
+        let mdiff = (merged.mean_ms() - single.mean_ms()).abs();
+        assert!(mdiff <= 1e-9 * single.mean_ms(), "mean diff {mdiff}");
+
+        // The 6.25% oracle bound, for ranks whose exact value sits on the
+        // representable axis (giants exceed it; the docs scope the
+        // guarantee to u64 nanoseconds).
+        let mut sorted = vals.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for p in [5.0, 25.0, 50.0, 90.0, 95.0] {
+            let want = exact(&sorted, p);
+            let got = merged.percentile(p);
+            assert!(
+                (got - want).abs() <= 0.0625 * want + 1e-9,
+                "p{p}: merged {got} vs exact {want}"
+            );
+        }
+        // The extremes stay exact (tracked min/max survive the merge).
+        assert_eq!(merged.percentile(0.0), exact(&sorted, 0.0));
+        assert_eq!(merged.percentile(100.0), 1e30);
     }
 
     #[test]

@@ -1,12 +1,16 @@
 //! Engine-wide observability: always-compiled, near-zero-cost-when-off.
 //!
-//! Three pieces:
+//! Five pieces:
 //! - [`spans`] — a lock-free per-thread span recorder the executor feeds
 //!   per-node / per-wavefront timings and clip counters into;
 //! - [`hist`] — a fixed-size log-bucket latency histogram for the serve
 //!   tier (bounded memory at millions of requests);
 //! - [`report`] — aggregation into the `aimet infer --profile` table,
-//!   Chrome trace-event JSON (Perfetto), and `BENCH_engine.json` fields.
+//!   Chrome trace-event JSON (Perfetto), and `BENCH_engine.json` fields;
+//! - [`registry`] — the process-global metrics registry the serve tier
+//!   publishes into, with Prometheus-text and JSON exposition;
+//! - [`drift`] — the sampled calibration-drift monitor grading served
+//!   traffic against the calibration-time int8 grids.
 //!
 //! The off path costs one relaxed atomic load per gate check
 //! ([`enabled`]), placed once per forward and once per node — no
@@ -22,11 +26,15 @@
 //! the `AIMET_PROFILE=1` environment variable (what CI's profiled test
 //! run uses).
 
+pub mod drift;
 pub mod hist;
+pub mod registry;
 pub mod report;
 pub mod spans;
 
+pub use drift::{DriftConfig, DriftMonitor, DriftReport, DriftSink, NodeSpec, Verdict};
 pub use hist::LogHistogram;
+pub use registry::{Counter, Gauge, Histogram, MetricsSnapshot, Registry};
 pub use report::{chrome_trace, ModelMeta, NodeMeta, ProfileReport};
 pub use spans::{now_ns, record, Span, SpanKind, ThreadSpans};
 

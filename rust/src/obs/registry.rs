@@ -1,0 +1,569 @@
+//! Process-global serving metrics: named counters, gauges, and
+//! [`LogHistogram`]-backed histograms, with Prometheus-text and JSON
+//! exposition.
+//!
+//! This is the *continuous* half of the observability layer. Spans
+//! ([`super::spans`]) answer "where did this profiled forward spend its
+//! time" for a bounded window; the registry answers "what has this
+//! process served since it started" forever: handles are cheap atomics a
+//! hot loop updates unconditionally, and a scrape ([`Registry::snapshot`])
+//! walks the table once and renders either exposition format offline.
+//!
+//! Design rules:
+//! - **Hot path is handle-resolution-free.** `counter()`/`gauge()`/
+//!   `histogram()` take the registry lock once, at setup; the returned
+//!   handle is an `Arc` around the live cell, so updates are a relaxed
+//!   `fetch_add`/`store` (histograms take an uncontended mutex — one
+//!   writer per serving loop).
+//! - **Snapshot consistency.** [`Registry::snapshot`] reads every metric
+//!   exactly once under the registry lock, so one scrape never shows a
+//!   counter from before an update and a gauge from after it.
+//! - **Exposition is hand-rolled.** `to_prometheus()` writes the
+//!   Prometheus text format (`# HELP`/`# TYPE` + samples; histograms as
+//!   `summary` quantiles — the log-bucket histogram has ~1000 buckets, far
+//!   too many for `le`-bucket exposition); `to_json()` reuses the repo's
+//!   own [`Json`] value, keyed by the same exposition identity.
+
+use super::hist::LogHistogram;
+use crate::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Monotone event counter. Clones share the cell.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins instantaneous value (stored as f64 bits).
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Bounded-memory value histogram (milliseconds by convention — the
+/// underlying [`LogHistogram`] buckets on a nanosecond axis).
+#[derive(Clone)]
+pub struct Histogram(Arc<Mutex<LogHistogram>>);
+
+impl Histogram {
+    pub fn record(&self, ms: f64) {
+        self.0
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .record_ms(ms);
+    }
+
+    /// A point-in-time copy (for tests and ad-hoc inspection; scrapes go
+    /// through [`Registry::snapshot`]).
+    pub fn read(&self) -> LogHistogram {
+        self.0.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+}
+
+#[derive(Clone)]
+enum Handle {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+impl Handle {
+    fn kind(&self) -> &'static str {
+        match self {
+            Handle::Counter(_) => "counter",
+            Handle::Gauge(_) => "gauge",
+            Handle::Histogram(_) => "histogram",
+        }
+    }
+}
+
+struct Entry {
+    help: String,
+    handle: Handle,
+}
+
+/// Exposition identity: metric name + sorted label pairs. `BTreeMap`
+/// keeps scrape output deterministic (sorted by name, then labels).
+type Key = (String, Vec<(String, String)>);
+
+/// A named-metric table; see the module docs. Most callers want the
+/// process-global [`global`] instance — constructible instances exist so
+/// tests can assert exact contents without cross-test interference.
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<BTreeMap<Key, Entry>>,
+}
+
+fn valid_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.chars().enumerate().all(|(i, c)| {
+            c.is_ascii_alphabetic() || c == '_' || c == ':' || (i > 0 && c.is_ascii_digit())
+        })
+}
+
+fn label_key(labels: &[(&str, &str)]) -> Vec<(String, String)> {
+    let mut v: Vec<(String, String)> = labels
+        .iter()
+        .map(|(k, val)| {
+            assert!(valid_name(k), "invalid label name `{k}`");
+            (k.to_string(), val.to_string())
+        })
+        .collect();
+    v.sort();
+    v
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    fn get_or_insert(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        make: impl FnOnce() -> Handle,
+        want: &'static str,
+    ) -> Handle {
+        assert!(valid_name(name), "invalid metric name `{name}`");
+        let key = (name.to_string(), label_key(labels));
+        let mut map = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let entry = map.entry(key).or_insert_with(|| Entry {
+            help: help.to_string(),
+            handle: make(),
+        });
+        assert!(
+            entry.handle.kind() == want,
+            "metric `{name}` already registered as a {}, requested as a {want}",
+            entry.handle.kind()
+        );
+        entry.handle.clone()
+    }
+
+    /// Get-or-create a counter. Same (name, labels) → same cell, so two
+    /// resolutions from different threads accumulate together.
+    pub fn counter(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Counter {
+        match self.get_or_insert(
+            name,
+            help,
+            labels,
+            || Handle::Counter(Counter(Arc::new(AtomicU64::new(0)))),
+            "counter",
+        ) {
+            Handle::Counter(c) => c,
+            _ => unreachable!("kind asserted"),
+        }
+    }
+
+    /// Get-or-create a gauge.
+    pub fn gauge(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Gauge {
+        match self.get_or_insert(
+            name,
+            help,
+            labels,
+            || Handle::Gauge(Gauge(Arc::new(AtomicU64::new(0)))),
+            "gauge",
+        ) {
+            Handle::Gauge(g) => g,
+            _ => unreachable!("kind asserted"),
+        }
+    }
+
+    /// Get-or-create a histogram.
+    pub fn histogram(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Histogram {
+        match self.get_or_insert(
+            name,
+            help,
+            labels,
+            || Handle::Histogram(Histogram(Arc::new(Mutex::new(LogHistogram::new())))),
+            "histogram",
+        ) {
+            Handle::Histogram(h) => h,
+            _ => unreachable!("kind asserted"),
+        }
+    }
+
+    /// One consistent pass over the whole table: every metric is read
+    /// exactly once, under the registry lock, into plain values.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let map = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let samples = map
+            .iter()
+            .map(|((name, labels), entry)| MetricSample {
+                name: name.clone(),
+                labels: labels.clone(),
+                help: entry.help.clone(),
+                value: match &entry.handle {
+                    Handle::Counter(c) => SampleValue::Counter(c.get()),
+                    Handle::Gauge(g) => SampleValue::Gauge(g.get()),
+                    Handle::Histogram(h) => {
+                        let hist = h.0.lock().unwrap_or_else(|e| e.into_inner());
+                        SampleValue::Summary {
+                            count: hist.count(),
+                            sum: hist.mean_ms() * hist.count() as f64,
+                            min: hist.min_ms(),
+                            max: hist.max_ms(),
+                            p50: hist.percentile(50.0),
+                            p95: hist.percentile(95.0),
+                            p99: hist.percentile(99.0),
+                        }
+                    }
+                },
+            })
+            .collect();
+        MetricsSnapshot { samples }
+    }
+}
+
+/// The process-global registry the serve tier publishes into.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+/// One metric read out of a snapshot.
+#[derive(Debug, Clone)]
+pub struct MetricSample {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub help: String,
+    pub value: SampleValue,
+}
+
+#[derive(Debug, Clone)]
+pub enum SampleValue {
+    Counter(u64),
+    Gauge(f64),
+    /// A histogram scrape: count/sum plus the serving quantiles.
+    Summary {
+        count: u64,
+        sum: f64,
+        min: f64,
+        max: f64,
+        p50: f64,
+        p95: f64,
+        p99: f64,
+    },
+}
+
+/// A consistent point-in-time read of a [`Registry`], renderable as
+/// Prometheus text or JSON.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub samples: Vec<MetricSample>,
+}
+
+/// Prometheus label-value escaping: backslash, double-quote, newline.
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\")
+        .replace('"', "\\\"")
+        .replace('\n', "\\n")
+}
+
+/// HELP text escaping: backslash and newline only (quotes are legal).
+fn escape_help(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+/// Prometheus float spelling (`+Inf`/`-Inf`/`NaN` specials).
+fn fmt_f64(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+fn label_str(labels: &[(String, String)], extra: Option<(&str, &str)>) -> String {
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    if let Some((k, v)) = extra {
+        parts.push(format!("{k}=\"{}\"", escape_label(v)));
+    }
+    if parts.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", parts.join(","))
+    }
+}
+
+impl MetricsSnapshot {
+    /// Prometheus text exposition (format 0.0.4). Counters and gauges map
+    /// directly; histograms expose as `summary` — `{quantile="..."}`
+    /// samples plus `_sum`/`_count` — because the log-bucket histogram's
+    /// ~1000 buckets are useless as `le` buckets but its percentiles are
+    /// exactly what an SLO scrape wants.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut last_name: Option<&str> = None;
+        for s in &self.samples {
+            // Samples arrive sorted by (name, labels): emit the HELP/TYPE
+            // header once per metric family.
+            if last_name != Some(s.name.as_str()) {
+                let kind = match &s.value {
+                    SampleValue::Counter(_) => "counter",
+                    SampleValue::Gauge(_) => "gauge",
+                    SampleValue::Summary { .. } => "summary",
+                };
+                if !s.help.is_empty() {
+                    out.push_str(&format!("# HELP {} {}\n", s.name, escape_help(&s.help)));
+                }
+                out.push_str(&format!("# TYPE {} {kind}\n", s.name));
+                last_name = Some(s.name.as_str());
+            }
+            match &s.value {
+                SampleValue::Counter(v) => {
+                    out.push_str(&format!("{}{} {v}\n", s.name, label_str(&s.labels, None)));
+                }
+                SampleValue::Gauge(v) => {
+                    out.push_str(&format!(
+                        "{}{} {}\n",
+                        s.name,
+                        label_str(&s.labels, None),
+                        fmt_f64(*v)
+                    ));
+                }
+                SampleValue::Summary {
+                    count,
+                    sum,
+                    p50,
+                    p95,
+                    p99,
+                    ..
+                } => {
+                    for (q, v) in [("0.5", p50), ("0.95", p95), ("0.99", p99)] {
+                        out.push_str(&format!(
+                            "{}{} {}\n",
+                            s.name,
+                            label_str(&s.labels, Some(("quantile", q))),
+                            fmt_f64(*v)
+                        ));
+                    }
+                    out.push_str(&format!(
+                        "{}_sum{} {}\n",
+                        s.name,
+                        label_str(&s.labels, None),
+                        fmt_f64(*sum)
+                    ));
+                    out.push_str(&format!(
+                        "{}_count{} {count}\n",
+                        s.name,
+                        label_str(&s.labels, None)
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    /// JSON exposition via the repo's own [`Json`]: an object keyed by the
+    /// Prometheus sample identity (`name{labels}`), histograms as nested
+    /// objects.
+    pub fn to_json(&self) -> Json {
+        let mut obj = Json::obj();
+        for s in &self.samples {
+            let key = format!("{}{}", s.name, label_str(&s.labels, None));
+            let val = match &s.value {
+                SampleValue::Counter(v) => Json::from(*v as f64),
+                SampleValue::Gauge(v) => Json::from(*v),
+                SampleValue::Summary {
+                    count,
+                    sum,
+                    min,
+                    max,
+                    p50,
+                    p95,
+                    p99,
+                } => {
+                    let mut h = Json::obj();
+                    h.set("count", Json::from(*count as f64));
+                    h.set("sum", Json::from(*sum));
+                    h.set("min", Json::from(*min));
+                    h.set("max", Json::from(*max));
+                    h.set("p50", Json::from(*p50));
+                    h.set("p95", Json::from(*p95));
+                    h.set("p99", Json::from(*p99));
+                    h
+                }
+            };
+            obj.set(&key, val);
+        }
+        obj
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handles_share_cells_by_identity() {
+        let r = Registry::new();
+        let a = r.counter("test_requests_total", "requests", &[("model", "m1")]);
+        let b = r.counter("test_requests_total", "requests", &[("model", "m1")]);
+        let other = r.counter("test_requests_total", "requests", &[("model", "m2")]);
+        a.add(3);
+        b.inc();
+        other.inc();
+        assert_eq!(a.get(), 4, "same identity must share the cell");
+        assert_eq!(other.get(), 1, "different labels are a different cell");
+
+        let g = r.gauge("test_depth", "queue depth", &[]);
+        g.set(2.5);
+        assert_eq!(r.gauge("test_depth", "", &[]).get(), 2.5);
+
+        let h = r.histogram("test_ms", "latency", &[]);
+        h.record(1.0);
+        h.record(3.0);
+        assert_eq!(h.read().count(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "already registered")]
+    fn kind_mismatch_panics() {
+        let r = Registry::new();
+        let _ = r.counter("test_metric", "", &[]);
+        let _ = r.gauge("test_metric", "", &[]);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid metric name")]
+    fn bad_names_are_rejected() {
+        let _ = Registry::new().counter("bad name!", "", &[]);
+    }
+
+    #[test]
+    fn prometheus_exposition_is_well_formed() {
+        let r = Registry::new();
+        r.counter("aimet_batches_total", "Forwards executed", &[("model", "mobi\"x")])
+            .add(7);
+        r.gauge("aimet_fill_ratio", "rows / capacity", &[("model", "m1")])
+            .set(0.875);
+        let h = r.histogram("aimet_batch_ms", "per-batch time", &[("model", "m1")]);
+        for i in 0..100 {
+            h.record(1.0 + i as f64 * 0.01);
+        }
+        let text = r.snapshot().to_prometheus();
+
+        // Every family leads with HELP + TYPE, and every sample line is
+        // `name{labels} value`.
+        assert!(text.contains("# TYPE aimet_batches_total counter"), "{text}");
+        assert!(text.contains("# TYPE aimet_fill_ratio gauge"), "{text}");
+        assert!(text.contains("# TYPE aimet_batch_ms summary"), "{text}");
+        assert!(
+            text.contains("aimet_batches_total{model=\"mobi\\\"x\"} 7"),
+            "label escaping: {text}"
+        );
+        assert!(text.contains("aimet_fill_ratio{model=\"m1\"} 0.875"), "{text}");
+        assert!(
+            text.contains("aimet_batch_ms{model=\"m1\",quantile=\"0.5\"}"),
+            "{text}"
+        );
+        assert!(text.contains("aimet_batch_ms_count{model=\"m1\"} 100"), "{text}");
+        assert!(text.contains("aimet_batch_ms_sum{model=\"m1\"}"), "{text}");
+        // TYPE precedes the family's first sample.
+        let type_at = text.find("# TYPE aimet_batch_ms summary").unwrap();
+        let sample_at = text.find("aimet_batch_ms{").unwrap();
+        assert!(type_at < sample_at);
+        // No malformed lines: each non-comment line splits into exactly
+        // one metric identity and one value.
+        for line in text.lines().filter(|l| !l.is_empty() && !l.starts_with('#')) {
+            let (id, val) = line.rsplit_split(' ');
+            assert!(!id.is_empty() && !val.is_empty(), "bad line {line}");
+            assert!(
+                val.parse::<f64>().is_ok() || ["+Inf", "-Inf", "NaN"].contains(&val),
+                "unparseable value in {line}"
+            );
+        }
+    }
+
+    #[test]
+    fn json_exposition_round_trips_through_parser() {
+        let r = Registry::new();
+        r.counter("aimet_samples_total", "rows", &[("model", "m1")])
+            .add(12);
+        let h = r.histogram("aimet_wait_ms", "", &[]);
+        h.record(2.0);
+        let js = r.snapshot().to_json();
+        let parsed = crate::json::parse(&js.pretty()).expect("snapshot JSON parses");
+        assert_eq!(
+            parsed
+                .get("aimet_samples_total{model=\"m1\"}")
+                .and_then(|v| v.as_f64()),
+            Some(12.0)
+        );
+        let hist = parsed.get("aimet_wait_ms").expect("histogram entry");
+        assert_eq!(hist.get("count").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(hist.get("p50").and_then(|v| v.as_f64()), Some(2.0));
+    }
+
+    #[test]
+    fn snapshot_values_are_read_once() {
+        // Counter order inside one snapshot is consistent: a snapshot
+        // taken after N updates shows exactly N.
+        let r = Registry::new();
+        let c = r.counter("test_total", "", &[]);
+        for _ in 0..5 {
+            c.inc();
+        }
+        let snap = r.snapshot();
+        assert_eq!(snap.samples.len(), 1);
+        match snap.samples[0].value {
+            SampleValue::Counter(v) => assert_eq!(v, 5),
+            _ => panic!("expected counter"),
+        }
+    }
+
+    #[test]
+    fn global_registry_is_reachable() {
+        // Only existence + idempotence: exact contents belong to the
+        // per-test local registries (tests share this process).
+        let a = global() as *const Registry;
+        let b = global() as *const Registry;
+        assert_eq!(a, b);
+    }
+
+    /// Split "name{labels} value" at the LAST space (label values may
+    /// contain spaces).
+    trait RSplit {
+        fn rsplit_split(&self, c: char) -> (&str, &str);
+    }
+
+    impl RSplit for str {
+        fn rsplit_split(&self, c: char) -> (&str, &str) {
+            match self.rfind(c) {
+                Some(i) => (&self[..i], &self[i + 1..]),
+                None => (self, ""),
+            }
+        }
+    }
+}

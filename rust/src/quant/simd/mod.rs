@@ -303,6 +303,20 @@ pub fn count_clipped(_tier: SimdTier, q: &[i8], lo: i8, hi: i8) -> (u64, u64) {
     (c_lo, c_hi)
 }
 
+/// Streaming min/max over a written i8 output — the drift monitor's
+/// grid-utilization probe. Same post-pass contract as [`count_clipped`]:
+/// reads the finished buffer only, so monitored forwards stay
+/// bit-identical. The reduction autovectorizes on every tier.
+pub fn min_max_i8(_tier: SimdTier, q: &[i8]) -> (i8, i8) {
+    let mut mn = i8::MAX;
+    let mut mx = i8::MIN;
+    for &v in q {
+        mn = mn.min(v);
+        mx = mx.max(v);
+    }
+    (mn, mx)
+}
+
 // ---------------------------------------------------------------------------
 // Epilogues. The scalar bodies below are THE reference expressions — the
 // engine's sim-agreement contract rides on them (see `requantize_value`);
@@ -580,6 +594,20 @@ mod tests {
             assert!(!t.as_str().is_empty());
             assert_eq!(format!("{t}"), t.as_str());
         }
+    }
+
+    #[test]
+    fn min_max_i8_matches_iterator_reduction() {
+        for n in [1usize, 2, 15, 16, 17, 256, 1000] {
+            let q = i8_seq(n, n);
+            let want = (*q.iter().min().unwrap(), *q.iter().max().unwrap());
+            for &tier in &available_tiers() {
+                assert_eq!(min_max_i8(tier, &q), want, "{tier} n{n}");
+            }
+        }
+        // Empty slice returns the inverted sentinel pair; callers gate on
+        // non-empty outputs.
+        assert_eq!(min_max_i8(active_tier(), &[]), (i8::MAX, i8::MIN));
     }
 
     /// Every runnable tier's microkernel is bit-exact against a naive

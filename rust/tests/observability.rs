@@ -1,14 +1,17 @@
-//! PR 7 acceptance properties for the observability layer.
+//! Acceptance properties for the observability layer (PR 7 profiling +
+//! PR 8 drift monitoring).
 //!
-//! The contract: turning profiling on must never change what the engine
-//! computes (spans and clip counters are recorded *around* and *after*
-//! the kernels, never inside their arithmetic), drained traces must be
-//! structurally sound (nodes nest in their wavefront, busy time bounded
-//! by wall time), and the exports (table, Chrome trace JSON) must be
-//! well-formed on real models.
+//! The contract: turning profiling or drift monitoring on must never
+//! change what the engine computes (spans, clip counters, and drift
+//! sweeps are recorded *around* and *after* the kernels, never inside
+//! their arithmetic), drained traces must be structurally sound (nodes
+//! nest in their wavefront, busy time bounded by wall time), the exports
+//! (table, Chrome trace JSON) must be well-formed on real models, and the
+//! drift monitor must stay silent on calibration-distribution traffic
+//! while flagging shifted traffic — on every zoo model.
 
 use aimet::engine::{lower, QuantizedModel, Scratch};
-use aimet::obs::{self, ProfileReport, SpanKind};
+use aimet::obs::{self, DriftConfig, ProfileReport, SpanKind};
 use aimet::pool::with_thread_cap;
 use aimet::ptq::{standard_ptq_pipeline, PtqOptions};
 use aimet::task::TaskData;
@@ -52,6 +55,90 @@ fn profiled_forwards_are_bit_identical_across_zoo() {
                 });
             }
         }
+    }
+}
+
+#[test]
+fn monitored_forwards_are_bit_identical_across_zoo() {
+    // Drift monitoring on vs off, across the whole zoo, batch {1, 8} ×
+    // thread caps {1, 8}: every output byte identical. The sweep reads
+    // the finished buffers only — this is the property that lets the
+    // monitor run on production traffic.
+    for model in zoo::MODEL_NAMES {
+        let (qm, data) = lowered(model);
+        for &bs in &[1usize, 8] {
+            let (x, _) = data.batch(78_000, bs);
+            for &cap in &[1usize, 8] {
+                with_thread_cap(cap, || {
+                    let mon = qm.drift_monitor(DriftConfig {
+                        sample_every: 1,
+                        ..DriftConfig::default()
+                    });
+                    let mut s1 = Scratch::new();
+                    let mut s2 = Scratch::new();
+                    let plain: Vec<i8> = qm.forward_with(&x, &mut s1).data().to_vec();
+                    let (monitored, sampled) = qm.forward_monitored(&x, &mut s2, &mon);
+                    assert!(sampled, "{model}: sample_every=1 must sweep every batch");
+                    assert_eq!(
+                        plain,
+                        monitored.data(),
+                        "{model}/bs{bs}/cap{cap}: drift monitoring changed the forward"
+                    );
+                    let report = mon.report();
+                    assert!(
+                        report.nodes.iter().any(|n| n.elems > 0),
+                        "{model}/bs{bs}/cap{cap}: the sweep observed nothing"
+                    );
+                });
+            }
+        }
+    }
+}
+
+#[test]
+fn drift_monitor_flags_shifted_traffic_and_only_shifted_traffic() {
+    // The end-to-end detector property, zoo-wide: traffic drawn from the
+    // calibration distribution grades clean (zero drifting nodes), while
+    // the same traffic scaled/offset away from it raises the
+    // recalibration signal — the paper's stale-range failure mode made
+    // observable.
+    let cfg = DriftConfig {
+        sample_every: 1,
+        ..DriftConfig::default()
+    };
+    for model in zoo::MODEL_NAMES {
+        let (qm, data) = lowered(model);
+        let mut s = Scratch::new();
+
+        let mon = qm.drift_monitor(cfg);
+        for i in 0..8u64 {
+            let (x, _) = data.batch(80_000 + i, 4);
+            std::hint::black_box(qm.forward_monitored(&x, &mut s, &mon).0.data());
+        }
+        let clean = mon.report();
+        assert_eq!(clean.sampled_batches, 8);
+        assert_eq!(
+            clean.drifting, 0,
+            "{model}: calibration-distribution traffic must not drift:\n{}",
+            clean.render()
+        );
+        assert!(!clean.recalibrate, "{model}");
+
+        let mon = qm.drift_monitor(cfg);
+        for i in 0..8u64 {
+            let (x, _) = data.batch(80_000 + i, 4);
+            let shifted = aimet::tensor::Tensor::new(
+                x.shape(),
+                x.data().iter().map(|&v| 4.0 * v + 0.3).collect(),
+            );
+            std::hint::black_box(qm.forward_monitored(&shifted, &mut s, &mon).0.data());
+        }
+        let drifted = mon.report();
+        assert!(
+            drifted.recalibrate && drifted.drifting > 0,
+            "{model}: 4x-shifted traffic must flag the detector:\n{}",
+            drifted.render()
+        );
     }
 }
 

@@ -115,6 +115,24 @@ print(
     f"clip rate {fmt(e.get('clip_rate_mobimini'), '')}"
 )
 
+# Serving-metrics + drift-sampling overhead gate: forward_monitored at the
+# default 1/16 drift cadence plus the batcher's per-batch registry
+# publishing must stay within 1% of the plain b8 forward, measured
+# back-to-back in the same bench process (bit-identity is asserted there).
+mover = e.get("metrics_overhead_pct")
+if not isinstance(mover, (int, float)):
+    sys.exit("bench_check: BENCH_engine.json lacks metrics_overhead_pct")
+if mover > 1.0:
+    sys.exit(
+        f"bench_check: metrics+drift overhead {mover:.2f}% > 1% "
+        "(registry publish / drift sweep too hot)"
+    )
+print(
+    f"bench_check OK: metrics+drift overhead {mover:+.2f}% (<= 1%), "
+    f"drift false positives {fmt(e.get('drift_false_positive_nodes'), '')}, "
+    f"shift flagged {e.get('drift_shifted_flagged')}"
+)
+
 print(
     f"bench_check OK: engine batched {speedup:.2f}x fp32 (>= 1.5), "
     f"batch scaling {scaling:.2f}x (>= 2.0), "
@@ -218,6 +236,8 @@ entry = {
     "engine_b8_sps_segmini": e.get("engine_b8_sps_segmini"),
     "wavefronts": e.get("wavefronts"),
     "profile_overhead_pct": overhead,
+    "metrics_overhead_pct": mover,
+    "drift_false_positive_nodes": e.get("drift_false_positive_nodes"),
     "serve_b8_fill_ratio": e.get("serve_b8_fill_ratio"),
     "clip_rate_mobimini": e.get("clip_rate_mobimini"),
     "clip_rate_detmini": e.get("clip_rate_detmini"),

@@ -1,0 +1,110 @@
+#!/usr/bin/env python3
+"""Validate a Prometheus text-format (0.0.4) exposition file.
+
+Line-format checker for the serve-bench smoke in ci.sh: every line must
+be a `# HELP`, `# TYPE`, blank, or sample line; every sample's metric
+family must have a preceding TYPE declaration (summary samples may use
+the family's `_sum` / `_count` suffixes); and every sample value must
+parse as a float or one of the spellings `+Inf` / `-Inf` / `NaN`.
+
+Exits nonzero with a `file:line: message` diagnostic on the first
+violation, silently (exit 0) otherwise.
+"""
+
+import re
+import sys
+
+# Metric and label names per the exposition-format spec.
+NAME_RE = re.compile(r"[a-zA-Z_:][a-zA-Z0-9_:]*")
+LABEL_RE = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\["\\n])*)"')
+SPECIAL_VALUES = {"+Inf", "-Inf", "Inf", "NaN"}
+
+
+def fail(path, lineno, msg):
+    sys.exit(f"{path}:{lineno}: {msg}")
+
+
+def parse_labels(path, lineno, body):
+    """Validate the {...} label body of a sample line."""
+    pos = 0
+    while pos < len(body):
+        m = LABEL_RE.match(body, pos)
+        if not m:
+            fail(path, lineno, f"malformed label at ...{body[pos:]!r}")
+        pos = m.end()
+        if pos < len(body):
+            if body[pos] != ",":
+                fail(path, lineno, f"expected ',' between labels, got {body[pos]!r}")
+            pos += 1
+
+
+def check(path):
+    with open(path) as f:
+        lines = f.read().split("\n")
+    # Trailing newline produces one empty final element; that is fine.
+    typed = {}  # family name -> declared type
+    samples = 0
+    for lineno, line in enumerate(lines, 1):
+        if line == "":
+            continue
+        if line.startswith("# HELP "):
+            rest = line[len("# HELP ") :]
+            name = rest.split(" ", 1)[0]
+            if not NAME_RE.fullmatch(name):
+                fail(path, lineno, f"bad metric name in HELP: {name!r}")
+            continue
+        if line.startswith("# TYPE "):
+            parts = line[len("# TYPE ") :].split(" ")
+            if len(parts) != 2:
+                fail(path, lineno, f"TYPE line needs 'name kind': {line!r}")
+            name, kind = parts
+            if not NAME_RE.fullmatch(name):
+                fail(path, lineno, f"bad metric name in TYPE: {name!r}")
+            if kind not in ("counter", "gauge", "summary", "histogram", "untyped"):
+                fail(path, lineno, f"unknown metric type {kind!r}")
+            typed[name] = kind
+            continue
+        if line.startswith("#"):
+            fail(path, lineno, f"comment line is neither HELP nor TYPE: {line!r}")
+
+        # Sample line: name[{labels}] value  — split at the LAST space so
+        # label values containing spaces survive.
+        body, sep, value = line.rpartition(" ")
+        if not sep or not body:
+            fail(path, lineno, f"sample line has no value: {line!r}")
+        if value not in SPECIAL_VALUES:
+            try:
+                float(value)
+            except ValueError:
+                fail(path, lineno, f"unparseable sample value {value!r}")
+
+        m = NAME_RE.match(body)
+        if not m:
+            fail(path, lineno, f"sample line has no metric name: {line!r}")
+        name = m.group(0)
+        rest = body[m.end() :]
+        if rest:
+            if not (rest.startswith("{") and rest.endswith("}")):
+                fail(path, lineno, f"malformed label block: {rest!r}")
+            parse_labels(path, lineno, rest[1:-1])
+
+        # Summary families expose `<name>_sum` / `<name>_count` samples and
+        # quantile samples under the bare family name.
+        family = name
+        for suffix in ("_sum", "_count", "_bucket"):
+            if name.endswith(suffix) and name[: -len(suffix)] in typed:
+                family = name[: -len(suffix)]
+                break
+        if family not in typed:
+            fail(path, lineno, f"sample {name!r} has no preceding # TYPE")
+        samples += 1
+
+    if samples == 0:
+        fail(path, 0, "exposition contains no samples")
+    print(f"check_prom OK: {path}: {samples} samples across {len(typed)} families")
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 2:
+        sys.exit("usage: check_prom.py <exposition.prom>")
+    check(sys.argv[1])

@@ -48,6 +48,25 @@ echo "== ci: engine suite, profiling enabled (AIMET_PROFILE=1) =="
 (cd rust && AIMET_PROFILE=1 cargo test -q --test engine_integration)
 (cd rust && AIMET_PROFILE=1 cargo test -q --test observability)
 
+# Serving observability smoke: a short serve-bench run must emit a
+# Prometheus exposition that passes the line-format validator and a drift
+# CSV with the documented header. The shifted phase exercises the drift
+# detector end to end; with only 8 requests most nodes grade low-data,
+# which is fine — this stage validates the formats, the zoo-wide detector
+# properties live in tests/observability.rs.
+echo "== ci: serve-bench observability smoke (--metrics + --drift-report) =="
+SMOKE_DIR="$(mktemp -d)"
+trap 'rm -rf "$SMOKE_DIR"' EXIT
+(cd rust && cargo run --release --quiet -- serve-bench --model mobimini \
+    --clients 2 --requests 8 --drift-sample 1 --shift-inputs 4.0 \
+    --metrics "$SMOKE_DIR/serve.prom" --drift-report "$SMOKE_DIR/drift.csv")
+python3 "$SCRIPT_DIR/check_prom.py" "$SMOKE_DIR/serve.prom"
+if ! head -1 "$SMOKE_DIR/drift.csv" | grep -q '^run,node,name,verdict'; then
+    echo "ci: drift.csv header malformed: $(head -1 "$SMOKE_DIR/drift.csv")" >&2
+    exit 1
+fi
+echo "== ci: observability smoke OK =="
+
 echo "== ci: bench gates (scripts/bench_check.sh) =="
 "$SCRIPT_DIR/bench_check.sh"
 
