@@ -25,16 +25,19 @@
 mod common;
 
 use aimet::coordinator::experiments::{trained_model, Effort};
-use aimet::engine::{lower, run_serve_bench, BatchConfig, Scratch};
+use aimet::engine::{
+    lower, run_serve_bench, BatchConfig, BatchServer, Pending, Scratch, ServeError, ServeOptions,
+};
 use aimet::json::Json;
 use aimet::obs::DriftConfig;
 use aimet::ptq::{standard_ptq_pipeline, PtqOptions};
 use aimet::tensor::Tensor;
 use std::alloc::{GlobalAlloc, Layout, System};
+use std::panic::AssertUnwindSafe;
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
 
 /// Process-wide allocation counter: every `alloc`/`realloc` anywhere in the
 /// process (any thread, any module) bumps it. During the steady-state
@@ -306,6 +309,118 @@ fn main() {
         Json::from(b8.stats.arena_peak_bytes as f64),
     );
 
+    // Overload serving: open-loop clients offer ~2x the engine's batched
+    // capacity against a small bounded queue. Admission control must shed
+    // the excess (typed `QueueFull`, not latency collapse) while goodput
+    // holds near capacity and the p99 of ADMITTED requests stays bounded
+    // by queue depth — the acceptance story for the PR 9 admission path.
+    let offered_sps = 2.0 * eng_b8_sps;
+    let oclients = 8usize;
+    let per_client = 64usize;
+    let interval = Duration::from_secs_f64(oclients as f64 / offered_sps);
+    let oserver = BatchServer::start_with(
+        Arc::clone(&qm),
+        ServeOptions {
+            cfg: BatchConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+            },
+            label: Some("bench_overload".into()),
+            queue_cap: 16,
+            deadline: Some(Duration::from_millis(250)),
+            ..ServeOptions::default()
+        },
+    );
+    let t0 = Instant::now();
+    let (mut lat_ms, mut ok_n, mut shed_n, mut err_n) = (Vec::new(), 0u64, 0u64, 0u64);
+    std::thread::scope(|scope| {
+        let mut waiters = Vec::new();
+        for c in 0..oclients {
+            let client = oserver.client();
+            let samples = &samples;
+            // Submitter paces try_submit open-loop (never blocks on a
+            // reply, so offered load is independent of service rate)...
+            let (px, prx) = mpsc::channel::<(Pending, Instant)>();
+            scope.spawn(move || {
+                let start = Instant::now();
+                for i in 0..per_client {
+                    let due = interval * i as u32;
+                    while start.elapsed() < due {
+                        std::hint::spin_loop();
+                    }
+                    let x = samples[(c * per_client + i) % samples.len()].clone();
+                    let sent = Instant::now();
+                    match client.try_submit(x, None) {
+                        Ok(p) => {
+                            let _ = px.send((p, sent));
+                        }
+                        // Sheds are counted server-side; an open server
+                        // may only ever refuse with the typed QueueFull.
+                        Err(e) => assert_eq!(e, ServeError::QueueFull),
+                    }
+                }
+            });
+            // ...while a paired drainer records reply latency as replies
+            // land (per-client replies are FIFO, so the drain keeps up).
+            waiters.push(scope.spawn(move || {
+                let mut lat = Vec::new();
+                let (mut ok, mut err) = (0u64, 0u64);
+                while let Ok((p, sent)) = prx.recv() {
+                    match p.wait() {
+                        Ok(_) => {
+                            lat.push(sent.elapsed().as_secs_f64() * 1e3);
+                            ok += 1;
+                        }
+                        Err(_) => err += 1,
+                    }
+                }
+                (lat, ok, err)
+            }));
+        }
+        for w in waiters {
+            let (lat, ok, err) = w.join().expect("overload drainer");
+            lat_ms.extend(lat);
+            ok_n += ok;
+            err_n += err;
+        }
+    });
+    let owall = t0.elapsed().as_secs_f64();
+    let ostats = oserver.shutdown();
+    shed_n += ostats.shed;
+    let offered_total = (oclients * per_client) as u64;
+    assert_eq!(
+        ok_n + err_n + shed_n,
+        offered_total,
+        "overload accounting: every offered request resolves exactly once"
+    );
+    lat_ms.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    let pct = |p: f64| -> f64 {
+        if lat_ms.is_empty() {
+            return 0.0;
+        }
+        let rank = ((p / 100.0 * lat_ms.len() as f64).ceil() as usize).max(1);
+        lat_ms[rank - 1]
+    };
+    let goodput = ok_n as f64 / owall;
+    let shed_frac = shed_n as f64 / offered_total as f64;
+    println!(
+        "serve overload: offered {offered_sps:7.1} sps -> goodput {goodput:7.1} sps | \
+         shed {shed_n}/{offered_total} ({:.1}%) expired {} | admitted p50 {:.3} ms p99 {:.3} ms",
+        100.0 * shed_frac,
+        ostats.expired,
+        pct(50.0),
+        pct(99.0)
+    );
+    report.set("serve_overload_offered_sps", Json::from(offered_sps));
+    report.set("serve_overload_goodput_sps", Json::from(goodput));
+    report.set("serve_overload_shed_frac", Json::from(shed_frac));
+    report.set("serve_overload_p99_ms", Json::from(pct(99.0)));
+    report.set("serve_shed_rate", Json::from(ostats.shed_rate()));
+    report.set(
+        "serve_deadline_miss_rate",
+        Json::from(ostats.deadline_miss_rate()),
+    );
+
     // Metrics + drift-sampling overhead on the serve hot path, measured
     // back-to-back like the profiler gate above: a plain b8 forward vs
     // the full per-batch serving cost — `forward_monitored` at the
@@ -351,6 +466,37 @@ fn main() {
         DriftConfig::default().sample_every
     );
     report.set("metrics_overhead_pct", Json::from(metrics_overhead_pct));
+
+    // Robustness-machinery overhead with fault hooks OFF: the PR 9 batcher
+    // wraps every dispatch in an admission-gate load, a deadline check,
+    // and an unwind boundary. Measured back-to-back against the bare
+    // forward like the profiler/metrics gates; bench_check.sh gates it at
+    // <= 1% so fault tolerance stays free on the happy path.
+    let open_gate = AtomicBool::new(true);
+    let t_plain8r = common::median_secs(15, || {
+        std::hint::black_box(qm.forward_with(&x8, &mut scratch).data());
+    });
+    let t_robust8 = common::median_secs(15, || {
+        if !open_gate.load(Ordering::Relaxed) {
+            return;
+        }
+        let admitted = Instant::now();
+        let served = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            std::hint::black_box(qm.forward_with(&x8, &mut scratch).data());
+        }));
+        assert!(served.is_ok(), "no faults are injected here");
+        std::hint::black_box(admitted.elapsed() > Duration::from_secs(3600));
+    });
+    let robustness_overhead_pct = (t_robust8 / t_plain8r - 1.0) * 100.0;
+    println!(
+        "robust engine forward b8: {:7.3} ms ({robustness_overhead_pct:+.2}% vs plain, \
+         unwind boundary + deadline check, fault hooks off)",
+        t_robust8 * 1e3
+    );
+    report.set(
+        "robustness_overhead_pct",
+        Json::from(robustness_overhead_pct),
+    );
 
     // Drift-detector health numbers for the history record: false
     // positives on calibration-distribution traffic (target 0) and

@@ -27,7 +27,7 @@ use crate::compress::{compress_then_ptq, greedy_plan, SearchOptions};
 use crate::engine::{
     lower, run_serve_bench, run_serve_bench_with, BatchConfig, ServeMonitor, ServeOptions,
 };
-use crate::obs::{DriftConfig, DriftReport};
+use crate::obs::{DriftConfig, DriftReport, FaultPlan};
 use crate::ptq::{standard_ptq_pipeline, PtqOptions};
 use crate::qat::{fit_qat, TrainConfig};
 use crate::quantsim::default_config_json;
@@ -202,10 +202,19 @@ COMMANDS
                                  per-channel weight ranges as CSV
   serve-bench --model M [--clients N --requests R --max-batch B
                --max-wait-ms MS --threads T --effort fast|full]
+              [--queue-cap N --deadline-ms MS]
+              [--fault-seed S --fault-rate P]
               [--metrics OUT.prom --drift-report OUT.csv
                --drift-sample N --shift-inputs F]
                                  batched int8 serving: latency percentiles +
                                  throughput, coalesced vs batch-1;
+                                 --queue-cap bounds the admission queue
+                                 (default 1024), --deadline-ms expires
+                                 requests the batcher can't reach in time,
+                                 --fault-seed/--fault-rate inject seeded
+                                 deterministic forward panics + dispatch
+                                 delays at rate P (chaos drill; errors are
+                                 tallied, the server must survive),
                                  --metrics writes registry snapshots
                                  (Prometheus text, or JSON for .json paths),
                                  --drift-report writes per-node calibration
@@ -251,6 +260,10 @@ fn command_spec(cmd: &str) -> Option<(&'static [&'static str], usize)> {
                 "requests",
                 "max-batch",
                 "max-wait-ms",
+                "queue-cap",
+                "deadline-ms",
+                "fault-seed",
+                "fault-rate",
                 "threads",
                 "effort",
                 "metrics",
@@ -620,6 +633,41 @@ fn cmd_serve_bench(args: &Args) -> Result<i32, String> {
                 .to_string(),
         );
     }
+    let queue_cap = args.usize_or("queue-cap", crate::engine::DEFAULT_QUEUE_CAP)?;
+    if queue_cap == 0 {
+        return Err("flag --queue-cap must be >= 1".to_string());
+    }
+    let deadline = match args.opt::<f64>("deadline-ms")? {
+        None => None,
+        Some(ms) if ms.is_finite() && ms > 0.0 => {
+            Some(std::time::Duration::from_secs_f64(ms / 1e3))
+        }
+        Some(ms) => {
+            return Err(format!(
+                "flag --deadline-ms: must be finite and > 0, got `{ms}`"
+            ))
+        }
+    };
+    let fault_rate = args.opt::<f64>("fault-rate")?;
+    let fault_seed = args.opt::<u64>("fault-seed")?;
+    let fault = match (fault_seed, fault_rate) {
+        (_, Some(r)) if !r.is_finite() || !(0.0..=1.0).contains(&r) => {
+            return Err(format!("flag --fault-rate: must be in [0, 1], got `{r}`"))
+        }
+        (None, None) => None,
+        // A bare --fault-seed drills at a default 1% rate; a bare
+        // --fault-rate uses the plan's default seed.
+        (seed, rate) => {
+            let mut plan = FaultPlan {
+                seed: seed.unwrap_or(FaultPlan::default().seed),
+                ..FaultPlan::default()
+            };
+            let r = rate.unwrap_or(0.01);
+            plan.panic_rate = r;
+            plan.delay_rate = r;
+            Some(plan)
+        }
+    };
     let metrics_path = args.get("metrics").map(str::to_string);
     let drift_path = args.get("drift-report").map(str::to_string);
     if metrics_path.as_deref() == Some("") || drift_path.as_deref() == Some("") {
@@ -686,11 +734,26 @@ fn cmd_serve_bench(args: &Args) -> Result<i32, String> {
             },
             label: Some(model.clone()),
             drift: Some(std::sync::Arc::clone(&mon)),
+            queue_cap,
+            deadline,
+            fault,
         },
     );
     println!("{model} serving ({clients} clients x {requests} reqs, max wait {max_wait_ms} ms):");
     println!("  batch-1    : {}", b1.render());
     println!("  max-batch {max_batch}: {}", bn.render());
+    if let Some(fp) = &fault {
+        println!(
+            "  fault drill (seed {}, panic/delay rate {:.3}): {} panics + {} delays injected, \
+             {} requests answered ModelPanicked, {} expired, server drained clean",
+            fp.seed,
+            fp.panic_rate,
+            bn.stats.injected_panics,
+            bn.stats.injected_delays,
+            bn.stats.panicked,
+            bn.stats.expired
+        );
+    }
     println!(
         "  batched speedup: {:.2}x throughput, mean batch {:.2}",
         bn.throughput_sps / b1.throughput_sps.max(1e-9),
@@ -726,6 +789,11 @@ fn cmd_serve_bench(args: &Args) -> Result<i32, String> {
                     },
                     label: Some(format!("{model}_shifted")),
                     drift: Some(std::sync::Arc::clone(&mon2)),
+                    queue_cap,
+                    deadline,
+                    // The shifted replay grades drift, not robustness —
+                    // keep it unfaulted so verdicts compare cleanly.
+                    fault: None,
                 },
             );
             println!("  shifted x{f}: {}", bs.render());
@@ -1020,6 +1088,29 @@ mod tests {
         // And these are serve-bench flags only.
         assert_eq!(run(&sv(&["infer", "--shift-inputs", "2"])), 2);
         assert_eq!(run(&sv(&["infer", "--drift-report", "d.csv"])), 2);
+    }
+
+    /// The robustness flags (admission control, deadlines, fault
+    /// injection) validate before any training or lowering work starts.
+    #[test]
+    fn serve_bench_robustness_flags_validate_cheaply() {
+        // Admission control: the queue bound is >= 1 and numeric.
+        assert_eq!(run(&sv(&["serve-bench", "--queue-cap", "0"])), 2);
+        assert_eq!(run(&sv(&["serve-bench", "--queue-cap", "deep"])), 2);
+        // Deadlines are finite positive milliseconds.
+        assert_eq!(run(&sv(&["serve-bench", "--deadline-ms", "0"])), 2);
+        assert_eq!(run(&sv(&["serve-bench", "--deadline-ms", "-5"])), 2);
+        assert_eq!(run(&sv(&["serve-bench", "--deadline-ms", "inf"])), 2);
+        assert_eq!(run(&sv(&["serve-bench", "--deadline-ms", "soon"])), 2);
+        // Fault rates are probabilities; seeds are u64.
+        assert_eq!(run(&sv(&["serve-bench", "--fault-rate", "1.5"])), 2);
+        assert_eq!(run(&sv(&["serve-bench", "--fault-rate", "-0.1"])), 2);
+        assert_eq!(run(&sv(&["serve-bench", "--fault-rate", "nan"])), 2);
+        assert_eq!(run(&sv(&["serve-bench", "--fault-seed", "-1"])), 2);
+        assert_eq!(run(&sv(&["serve-bench", "--fault-seed", "lucky"])), 2);
+        // And they belong to serve-bench alone.
+        assert_eq!(run(&sv(&["infer", "--queue-cap", "8"])), 2);
+        assert_eq!(run(&sv(&["infer", "--fault-rate", "0.1"])), 2);
     }
 
     #[test]

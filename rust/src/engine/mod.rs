@@ -49,8 +49,8 @@ pub mod serve;
 
 pub use plan::{MemoryPlan, Scratch};
 pub use serve::{
-    run_serve_bench, run_serve_bench_with, BatchClient, BatchConfig, BatchServer, ServeMonitor,
-    ServeOptions, ServeReport, ServeStats,
+    run_serve_bench, run_serve_bench_with, BatchClient, BatchConfig, BatchServer, Pending,
+    ServeError, ServeMonitor, ServeOptions, ServeReport, ServeStats, DEFAULT_QUEUE_CAP,
 };
 
 use crate::graph::{lstm_forward, Input, Op};

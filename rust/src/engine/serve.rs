@@ -30,16 +30,75 @@
 //! Per-sample results are bit-identical to batch-1 execution: every
 //! integer kernel computes each sample's outputs independently of its
 //! batch neighbours (verified by `replies_match_direct_forward`).
+//!
+//! # Failure semantics
+//!
+//! Every submission resolves to exactly one `Result<Tensor, ServeError>`
+//! — the server never panics a caller and never strands one:
+//!
+//! * **Admission control**: the request queue is bounded
+//!   ([`ServeOptions::queue_cap`]). [`BatchClient::infer`] blocks when the
+//!   queue is full (backpressure); [`BatchClient::try_submit`] sheds
+//!   instead with [`ServeError::QueueFull`], so overload degrades to a
+//!   measured shed rate rather than unbounded memory growth.
+//! * **Deadlines**: a request may carry a deadline (or inherit
+//!   [`ServeOptions::deadline`]). The batcher sweeps expired requests out
+//!   *before* spending compute on them, replying
+//!   [`ServeError::DeadlineExceeded`] — a latency spike cannot cascade
+//!   into serving work nobody is waiting for.
+//! * **Panic isolation**: each batch forward runs under `catch_unwind`. A
+//!   poisoned batch replies [`ServeError::ModelPanicked`] to exactly its
+//!   own requests; the batcher thread, its warm `Scratch`, and any
+//!   attached drift monitor survive and keep serving. Requests whose
+//!   trailing shape disagrees with their batch are deferred into their
+//!   own forward, so one malformed submission can only poison itself.
+//! * **Graceful drain**: [`BatchServer::shutdown`] stops admission, then
+//!   the batcher flushes everything already queued before exiting; late
+//!   submissions get [`ServeError::ShuttingDown`].
+//!
+//! Fault injection for all of the above is deterministic and seeded
+//! ([`crate::obs::fault`]); `tests/serve_chaos.rs` is the storm suite.
 
 use super::{QuantizedModel, Scratch};
-use crate::obs::{registry, DriftMonitor, LogHistogram};
+use crate::obs::{fault, registry, DriftMonitor, FaultPlan, LogHistogram};
 use crate::tensor::Tensor;
+use std::collections::VecDeque;
+use std::panic::AssertUnwindSafe;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// Why a submission did not produce logits. Every variant is a normal
+/// serving outcome — callers match instead of unwinding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeError {
+    /// Admission control shed the request: the bounded queue was full.
+    QueueFull,
+    /// The request's deadline passed before a forward picked it up.
+    DeadlineExceeded,
+    /// The forward serving this request's batch panicked; the server
+    /// itself survived and keeps serving other batches.
+    ModelPanicked,
+    /// The server is (or finished) shutting down and no longer admits or
+    /// answers requests.
+    ShuttingDown,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            ServeError::QueueFull => "queue full: request shed by admission control",
+            ServeError::DeadlineExceeded => "deadline exceeded before the request was served",
+            ServeError::ModelPanicked => "model panicked while serving this request's batch",
+            ServeError::ShuttingDown => "batch server is shutting down",
+        })
+    }
+}
+
+impl std::error::Error for ServeError {}
 
 /// Micro-batching knobs.
 #[derive(Debug, Clone, Copy)]
@@ -60,10 +119,15 @@ impl Default for BatchConfig {
     }
 }
 
-/// Full serving configuration: batching knobs plus the observability
-/// attachments (all optional — `ServeOptions::default()` serves exactly
-/// like the bare [`BatchConfig`] path).
-#[derive(Clone, Default)]
+/// Default bound on queued requests — deep enough that a well-provisioned
+/// server never sheds, small enough that overload is bounded memory.
+pub const DEFAULT_QUEUE_CAP: usize = 1024;
+
+/// Full serving configuration: batching knobs plus admission control,
+/// deadlines, observability attachments, and fault injection (all
+/// optional — `ServeOptions::default()` serves exactly like the bare
+/// [`BatchConfig`] path).
+#[derive(Clone)]
 pub struct ServeOptions {
     pub cfg: BatchConfig,
     /// `model` label on every registry metric the batcher publishes.
@@ -73,17 +137,87 @@ pub struct ServeOptions {
     /// Attach a calibration-drift monitor: every `sample_every`-th batch
     /// forwards via `forward_monitored` (bit-identical, post-pass sweep).
     pub drift: Option<Arc<DriftMonitor>>,
+    /// Bound on queued requests ([`DEFAULT_QUEUE_CAP`] by default).
+    /// `infer` blocks when full (backpressure); `try_submit` sheds with
+    /// [`ServeError::QueueFull`].
+    pub queue_cap: usize,
+    /// Default deadline applied to requests that don't carry their own.
+    /// `None` = requests wait as long as it takes.
+    pub deadline: Option<Duration>,
+    /// Deterministic fault injection for chaos testing. `None` falls back
+    /// to the `AIMET_FAULTS` env plan; an inert plan costs one `Option`
+    /// check per batch.
+    pub fault: Option<FaultPlan>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions {
+            cfg: BatchConfig::default(),
+            label: None,
+            drift: None,
+            queue_cap: DEFAULT_QUEUE_CAP,
+            deadline: None,
+            fault: None,
+        }
+    }
 }
 
 struct Request {
     x: Tensor,
-    reply: Sender<Tensor>,
+    reply: Sender<Result<Tensor, ServeError>>,
+    /// When admission control accepted the request — deadlines are
+    /// measured from here, so queueing time counts against the budget.
+    admitted: Instant,
+    /// Per-request deadline; `None` inherits `ServeOptions::deadline`.
+    deadline: Option<Duration>,
+}
+
+/// Queue protocol: clients hold cloned senders indefinitely, so receiver
+/// disconnect alone cannot signal shutdown — an explicit control message
+/// flips the batcher into drain mode instead.
+enum Msg {
+    Req(Request),
+    Shutdown,
+}
+
+/// State shared between the server handle, its clients, and the batcher.
+struct Shared {
+    /// Admission gate: flipped off at shutdown so late submissions fail
+    /// fast with `ShuttingDown` instead of queueing into the drain.
+    open: AtomicBool,
+    /// Requests shed with `QueueFull` (clients increment; the batcher
+    /// folds the total into its final stats).
+    shed: AtomicU64,
+    /// The registry view of `shed`, resolved once per server.
+    shed_metric: registry::Counter,
+}
+
+impl Shared {
+    fn new(label: &str) -> Shared {
+        Shared {
+            open: AtomicBool::new(true),
+            shed: AtomicU64::new(0),
+            shed_metric: registry::global().counter(
+                "aimet_serve_shed_total",
+                "Requests shed by admission control (bounded queue full)",
+                &[("model", label)],
+            ),
+        }
+    }
+}
+
+/// The metrics label for one server: explicit, or unique-per-lowering.
+fn resolve_label(opts: &ServeOptions, model: &QuantizedModel) -> String {
+    opts.label
+        .clone()
+        .unwrap_or_else(|| format!("m{:x}", model.model_id))
 }
 
 /// What the batcher observed over its lifetime.
 #[derive(Debug, Clone, Default)]
 pub struct ServeStats {
-    /// Forwards executed.
+    /// Forwards executed successfully.
     pub batches: usize,
     /// Sample rows served (equals requests for the single-sample serving
     /// contract; multi-row submissions count every row).
@@ -105,6 +239,17 @@ pub struct ServeStats {
     pub compute_ns: u64,
     /// Forwards swept by the attached drift monitor (0 when none).
     pub drift_sampled: usize,
+    /// Requests shed by admission control (`QueueFull`).
+    pub shed: u64,
+    /// Requests dropped before compute (`DeadlineExceeded`).
+    pub expired: u64,
+    /// Requests answered `ModelPanicked`.
+    pub panicked: u64,
+    /// Forwards that panicked (isolated to their own batch).
+    pub panicked_batches: usize,
+    /// Fault-injection bookkeeping: panics / delays the plan fired.
+    pub injected_panics: u64,
+    pub injected_delays: u64,
 }
 
 impl ServeStats {
@@ -140,11 +285,32 @@ impl ServeStats {
             self.wait_ns as f64 / total as f64
         }
     }
+
+    /// Fraction of finished requests that were shed at admission.
+    pub fn shed_rate(&self) -> f64 {
+        let offered = self.samples as u64 + self.shed + self.expired + self.panicked;
+        if offered == 0 {
+            0.0
+        } else {
+            self.shed as f64 / offered as f64
+        }
+    }
+
+    /// Fraction of *admitted* requests that expired before compute.
+    pub fn deadline_miss_rate(&self) -> f64 {
+        let admitted = self.samples as u64 + self.expired + self.panicked;
+        if admitted == 0 {
+            0.0
+        } else {
+            self.expired as f64 / admitted as f64
+        }
+    }
 }
 
 /// The serving front-end: owns the batcher thread.
 pub struct BatchServer {
-    tx: Option<Sender<Request>>,
+    tx: SyncSender<Msg>,
+    shared: Arc<Shared>,
     handle: Option<JoinHandle<ServeStats>>,
 }
 
@@ -160,17 +326,21 @@ impl BatchServer {
         )
     }
 
-    /// Spawn the batcher with the full option set (metrics label, drift
-    /// monitor).
+    /// Spawn the batcher with the full option set (admission control,
+    /// deadlines, metrics label, drift monitor, fault plan).
     pub fn start_with(model: Arc<QuantizedModel>, opts: ServeOptions) -> BatchServer {
         assert!(opts.cfg.max_batch >= 1, "max_batch must be ≥ 1");
-        let (tx, rx) = channel::<Request>();
+        assert!(opts.queue_cap >= 1, "queue_cap must be ≥ 1");
+        let (tx, rx) = std::sync::mpsc::sync_channel::<Msg>(opts.queue_cap);
+        let shared = Arc::new(Shared::new(&resolve_label(&opts, &model)));
+        let batcher_shared = Arc::clone(&shared);
         let handle = std::thread::Builder::new()
             .name("aimet-serve".to_string())
-            .spawn(move || batcher_loop(model, opts, rx))
+            .spawn(move || batcher_loop(model, opts, rx, batcher_shared))
             .expect("spawn batcher");
         BatchServer {
-            tx: Some(tx),
+            tx,
+            shared,
             handle: Some(handle),
         }
     }
@@ -178,25 +348,34 @@ impl BatchServer {
     /// A handle for submitting requests; clone freely across threads.
     pub fn client(&self) -> BatchClient {
         BatchClient {
-            tx: self.tx.as_ref().expect("server running").clone(),
+            tx: self.tx.clone(),
+            shared: Arc::clone(&self.shared),
         }
     }
 
-    /// Stop accepting requests, drain the queue, join the batcher, and
-    /// return its stats.
+    /// Graceful drain: stop admitting, flush everything already queued,
+    /// join the batcher, and return its stats (which include the final
+    /// shed/expired/panicked accounting and the registry's last update).
     pub fn shutdown(mut self) -> ServeStats {
-        drop(self.tx.take());
-        self.handle
-            .take()
-            .expect("server running")
-            .join()
-            .expect("batcher thread")
+        self.shared.open.store(false, Ordering::Release);
+        let _ = self.tx.send(Msg::Shutdown);
+        match self.handle.take() {
+            Some(h) => h.join().unwrap_or_else(|_| {
+                // Defense in depth: per-batch forwards are isolated, so
+                // the batcher itself unwinding means a bug outside the
+                // guard — report, return what we can.
+                eprintln!("serve: batcher thread panicked outside its isolation guard");
+                ServeStats::default()
+            }),
+            None => ServeStats::default(),
+        }
     }
 }
 
 impl Drop for BatchServer {
     fn drop(&mut self) {
-        drop(self.tx.take());
+        self.shared.open.store(false, Ordering::Release);
+        let _ = self.tx.send(Msg::Shutdown);
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
@@ -206,43 +385,137 @@ impl Drop for BatchServer {
 /// Cloneable request handle.
 #[derive(Clone)]
 pub struct BatchClient {
-    tx: Sender<Request>,
+    tx: SyncSender<Msg>,
+    shared: Arc<Shared>,
+}
+
+/// An admitted request's reply slot.
+pub struct Pending {
+    rx: Receiver<Result<Tensor, ServeError>>,
+}
+
+impl Pending {
+    /// Block until the server answers. Every admitted request gets
+    /// exactly one reply; a server that drained away without reaching
+    /// this request answers `ShuttingDown` (via the dropped reply slot).
+    pub fn wait(self) -> Result<Tensor, ServeError> {
+        match self.rx.recv() {
+            Ok(res) => res,
+            Err(_) => Err(ServeError::ShuttingDown),
+        }
+    }
 }
 
 impl BatchClient {
     /// Blocking inference: submit one input (any leading batch size, but
     /// single-sample [1, ...] tensors are the serving contract) and wait
-    /// for its logits.
-    pub fn infer(&self, x: Tensor) -> Tensor {
+    /// for its logits. Blocks while the queue is full (backpressure);
+    /// never panics — shutdown and serving failures come back as
+    /// [`ServeError`]s.
+    pub fn infer(&self, x: Tensor) -> Result<Tensor, ServeError> {
+        self.submit(x, None)?.wait()
+    }
+
+    /// [`BatchClient::infer`] with a per-request deadline: if `deadline`
+    /// elapses (measured from admission) before a forward picks the
+    /// request up, the server answers `DeadlineExceeded` instead of
+    /// serving stale work.
+    pub fn infer_within(&self, x: Tensor, deadline: Duration) -> Result<Tensor, ServeError> {
+        self.submit(x, Some(deadline))?.wait()
+    }
+
+    /// Admit a request, blocking while the queue is full. Returns the
+    /// reply slot so callers can overlap submission with other work.
+    pub fn submit(&self, x: Tensor, deadline: Option<Duration>) -> Result<Pending, ServeError> {
+        if !self.shared.open.load(Ordering::Acquire) {
+            return Err(ServeError::ShuttingDown);
+        }
         let (rtx, rrx) = channel();
-        self.tx
-            .send(Request { x, reply: rtx })
-            .expect("batch server is running");
-        rrx.recv().expect("batch server replies before shutdown")
+        let req = Request {
+            x,
+            reply: rtx,
+            admitted: Instant::now(),
+            deadline,
+        };
+        match self.tx.send(Msg::Req(req)) {
+            Ok(()) => Ok(Pending { rx: rrx }),
+            Err(_) => Err(ServeError::ShuttingDown),
+        }
+    }
+
+    /// Admit a request without blocking: a full queue sheds the request
+    /// with [`ServeError::QueueFull`] (counted in stats and the
+    /// `aimet_serve_shed_total` metric) instead of queueing it.
+    pub fn try_submit(&self, x: Tensor, deadline: Option<Duration>) -> Result<Pending, ServeError> {
+        if !self.shared.open.load(Ordering::Acquire) {
+            return Err(ServeError::ShuttingDown);
+        }
+        let (rtx, rrx) = channel();
+        let req = Request {
+            x,
+            reply: rtx,
+            admitted: Instant::now(),
+            deadline,
+        };
+        match self.tx.try_send(Msg::Req(req)) {
+            Ok(()) => Ok(Pending { rx: rrx }),
+            Err(TrySendError::Full(_)) => {
+                self.shared.shed.fetch_add(1, Ordering::Relaxed);
+                self.shared.shed_metric.inc();
+                Err(ServeError::QueueFull)
+            }
+            Err(TrySendError::Disconnected(_)) => Err(ServeError::ShuttingDown),
+        }
+    }
+}
+
+/// Route one coalesced request into the batch if its trailing shape
+/// matches, else park it for its own later forward (shape isolation: a
+/// malformed submission must only be able to poison itself). Returns the
+/// rows added to the batch.
+fn admit_to_batch(
+    r: Request,
+    tail: &[usize],
+    reqs: &mut Vec<Request>,
+    deferred: &mut VecDeque<Request>,
+) -> usize {
+    if r.x.shape()[1..] == *tail {
+        let n = r.x.dim(0);
+        reqs.push(r);
+        n
+    } else {
+        deferred.push_back(r);
+        0
     }
 }
 
 /// Coalesce follow-up requests into `reqs` until `max_batch` rows are
-/// queued or the wait budget runs out. Returns the total row count.
-fn coalesce(reqs: &mut Vec<Request>, rx: &Receiver<Request>, cfg: &BatchConfig) -> usize {
-    let mut rows = reqs[0].x.dim(0);
+/// queued or the wait budget runs out (drain mode never waits). Returns
+/// true if a shutdown message was observed.
+fn coalesce(
+    reqs: &mut Vec<Request>,
+    deferred: &mut VecDeque<Request>,
+    rx: &Receiver<Msg>,
+    cfg: &BatchConfig,
+    draining: bool,
+) -> bool {
     if cfg.max_batch <= 1 {
-        return rows;
+        return false;
     }
-    if cfg.max_wait.is_zero() {
+    let tail: Vec<usize> = reqs[0].x.shape()[1..].to_vec();
+    let mut rows = reqs[0].x.dim(0);
+    if cfg.max_wait.is_zero() || draining {
         // Zero-wait: never sleep, never poll the clock — but still take
         // every request that is already sitting in the queue right now,
         // so a zero-wait server under load keeps its batching win.
         while rows < cfg.max_batch {
             match rx.try_recv() {
-                Ok(r) => {
-                    rows += r.x.dim(0);
-                    reqs.push(r);
-                }
+                Ok(Msg::Req(r)) => rows += admit_to_batch(r, &tail, reqs, deferred),
+                Ok(Msg::Shutdown) => return true,
                 Err(_) => break,
             }
         }
-        return rows;
+        return false;
     }
     let deadline = Instant::now() + cfg.max_wait;
     while rows < cfg.max_batch {
@@ -254,14 +527,14 @@ fn coalesce(reqs: &mut Vec<Request>, rx: &Receiver<Request>, cfg: &BatchConfig) 
             rx.recv_timeout(deadline - now)
         };
         match next {
-            Ok(r) => {
-                rows += r.x.dim(0);
-                reqs.push(r);
-            }
+            Ok(Msg::Req(r)) => rows += admit_to_batch(r, &tail, reqs, deferred),
+            // Stop waiting for stragglers: anything still queued is
+            // picked up by the drain sweeps.
+            Ok(Msg::Shutdown) => return true,
             Err(_) => break,
         }
     }
-    rows
+    false
 }
 
 /// The registry handles the batcher publishes into, resolved once at
@@ -273,6 +546,8 @@ struct ServeMetrics {
     wait_ns: registry::Counter,
     compute_ns: registry::Counter,
     drift_sampled: registry::Counter,
+    expired: registry::Counter,
+    panicked: registry::Counter,
     queue_depth: registry::Gauge,
     fill_ratio: registry::Gauge,
     batch_ms: registry::Histogram,
@@ -309,6 +584,16 @@ impl ServeMetrics {
                 "Forwards swept by the calibration-drift monitor",
                 l,
             ),
+            expired: r.counter(
+                "aimet_serve_expired_total",
+                "Requests dropped before compute because their deadline passed",
+                l,
+            ),
+            panicked: r.counter(
+                "aimet_serve_panicked_total",
+                "Requests answered ModelPanicked by the batch isolation guard",
+                l,
+            ),
             queue_depth: r.gauge(
                 "aimet_serve_queue_depth",
                 "Rows coalesced into the most recent forward (observed queue depth at dispatch)",
@@ -331,99 +616,196 @@ impl ServeMetrics {
 fn batcher_loop(
     model: Arc<QuantizedModel>,
     opts: ServeOptions,
-    rx: Receiver<Request>,
+    rx: Receiver<Msg>,
+    shared: Arc<Shared>,
 ) -> ServeStats {
     let cfg = opts.cfg;
     let mut stats = ServeStats {
         max_batch_cfg: cfg.max_batch,
         ..ServeStats::default()
     };
-    let label = opts
-        .label
-        .clone()
-        .unwrap_or_else(|| format!("m{:x}", model.model_id));
+    let label = resolve_label(&opts, &model);
     let metrics = ServeMetrics::resolve(&label);
+    // Fault plan resolution happens ONCE: the per-batch cost of disabled
+    // injection is this Option being None (the env gate behind env_plan
+    // is itself one relaxed load, paid here, never in the loop).
+    let fault_plan = opts.fault.filter(|f| f.is_active()).or_else(fault::env_plan);
     // One warm scratch for the batcher's whole lifetime: after the first
     // batch at each coalesced size, forwards are allocation-free.
     let mut scratch = Scratch::new();
     let mut reqs: Vec<Request> = Vec::new();
+    // Shape-mismatched requests parked for their own forward.
+    let mut deferred: VecDeque<Request> = VecDeque::new();
     let mut batch_data: Vec<f32> = Vec::new();
     let mut shape: Vec<usize> = Vec::new();
     // Wait time already forwarded to the registry counter (stats.wait_ns
     // accumulates per-batch; the counter takes deltas).
     let mut published_wait_ns = 0u64;
-    loop {
-        // Wait side: block for the next request (or shutdown — every
-        // client + server handle gone), then coalesce stragglers. Two
-        // `Instant::now` calls per *batch* — cheap against a forward, so
-        // the wait/compute split is always on.
+    // Drain mode: a Shutdown message was seen — flush what is queued
+    // without ever blocking, then exit.
+    let mut draining = false;
+    // Dispatch counter driving the fault plan's decision streams.
+    let mut batch_idx = 0u64;
+    'serve: loop {
+        // Wait side: pick the first request of the next batch — parked
+        // shape-mismatches first (each gets its own forward), then the
+        // queue — and coalesce stragglers. Two `Instant::now` calls per
+        // *batch* — cheap against a forward, so the wait/compute split is
+        // always on.
         let tw = Instant::now();
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => break,
-        };
-        reqs.push(first);
-        let rows = coalesce(&mut reqs, &rx, &cfg);
+        if let Some(r) = deferred.pop_front() {
+            reqs.push(r);
+        } else if draining {
+            match rx.try_recv() {
+                Ok(Msg::Req(r)) => reqs.push(r),
+                Ok(Msg::Shutdown) => continue 'serve,
+                // Queue flushed: the drain is complete.
+                Err(_) => break 'serve,
+            }
+        } else {
+            match rx.recv() {
+                Ok(Msg::Req(r)) => reqs.push(r),
+                Ok(Msg::Shutdown) | Err(_) => {
+                    draining = true;
+                    continue 'serve;
+                }
+            }
+        }
+        draining |= coalesce(&mut reqs, &mut deferred, &rx, &cfg, draining);
         stats.wait_ns += tw.elapsed().as_nanos() as u64;
         let tc = Instant::now();
-        // Assemble the batch in the reused buffer (capacity is warm after
-        // the first max-size batch).
-        let tail = &reqs[0].x.shape()[1..];
-        shape.clear();
-        shape.push(rows);
-        shape.extend_from_slice(tail);
-        batch_data.clear();
-        for r in &reqs {
-            assert_eq!(&r.x.shape()[1..], tail, "coalesced trailing shapes");
-            batch_data.extend_from_slice(r.x.data());
-        }
-        let batch = Tensor::new(&shape, std::mem::take(&mut batch_data));
-        let mut sampled = false;
-        let y = match &opts.drift {
-            Some(mon) => {
-                let (y, s) = model.forward_monitored(&batch, &mut scratch, mon);
-                sampled = s;
-                y
-            }
-            None => model.forward_with(&batch, &mut scratch),
+        // Fault hooks: decisions are a pure function of (seed, dispatch
+        // index), drawn before the expiry sweep so an injected stall can
+        // expire its own batch deterministically.
+        let (inject_delay, inject_panic) = match &fault_plan {
+            Some(fp) => (fp.delays(batch_idx), fp.panics(batch_idx)),
+            None => (false, false),
         };
-        let mut row = 0;
-        for r in &reqs {
-            let nr = r.x.dim(0);
-            // A dropped caller is fine — ignore the send error.
-            let _ = r.reply.send(y.dequantize_rows(row, row + nr));
-            row += nr;
+        batch_idx += 1;
+        if inject_delay {
+            std::thread::sleep(fault_plan.as_ref().unwrap().delay);
+            stats.injected_delays += 1;
+        }
+        // Expiry sweep: answer dead requests BEFORE spending compute on
+        // them, and keep them out of batch assembly.
+        let now = Instant::now();
+        reqs.retain(|r| {
+            let Some(d) = r.deadline.or(opts.deadline) else {
+                return true;
+            };
+            if now.duration_since(r.admitted) < d {
+                return true;
+            }
+            let _ = r.reply.send(Err(ServeError::DeadlineExceeded));
+            stats.expired += 1;
+            metrics.expired.inc();
+            false
+        });
+        if reqs.is_empty() {
+            stats.compute_ns += tc.elapsed().as_nanos() as u64;
+            continue 'serve;
+        }
+        let rows: usize = reqs.iter().map(|r| r.x.dim(0)).sum();
+        // Panic isolation: everything touching the model — assembly,
+        // forward, reply fan-out — runs under catch_unwind, so a poisoned
+        // batch answers its own requests with ModelPanicked while the
+        // batcher, its warm scratch (plans cache before push, verified in
+        // plan.rs), and the drift monitor survive. `replied` tracks the
+        // fan-out so a panic mid-reply still answers each request exactly
+        // once.
+        let replied = std::cell::Cell::new(0usize);
+        let mut sampled = false;
+        let forward = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            // Assemble the batch in the reused buffer (capacity is warm
+            // after the first max-size batch).
+            let tail = &reqs[0].x.shape()[1..];
+            shape.clear();
+            shape.push(rows);
+            shape.extend_from_slice(tail);
+            batch_data.clear();
+            for r in &reqs {
+                batch_data.extend_from_slice(r.x.data());
+            }
+            let batch = Tensor::new(&shape, std::mem::take(&mut batch_data));
+            if inject_panic {
+                fault::injected_panic();
+            }
+            let y = match &opts.drift {
+                Some(mon) => {
+                    let (y, s) = model.forward_monitored(&batch, &mut scratch, mon);
+                    sampled = s;
+                    y
+                }
+                None => model.forward_with(&batch, &mut scratch),
+            };
+            let mut row = 0;
+            for (i, r) in reqs.iter().enumerate() {
+                let nr = r.x.dim(0);
+                // A dropped caller is fine — ignore the send error.
+                let _ = r.reply.send(Ok(y.dequantize_rows(row, row + nr)));
+                replied.set(i + 1);
+                row += nr;
+            }
+            batch.into_data()
+        }));
+        if inject_panic {
+            stats.injected_panics += 1;
         }
         let batch_ns = tc.elapsed().as_nanos() as u64;
         stats.compute_ns += batch_ns;
-        stats.batches += 1;
-        stats.samples += rows;
-        stats.max_batch_seen = stats.max_batch_seen.max(rows);
-        if rows >= cfg.max_batch {
-            stats.full_batches += 1;
-            metrics.full_batches.inc();
+        match forward {
+            Ok(buf) => {
+                // Reclaim the assembly buffer for the next round.
+                batch_data = buf;
+                stats.batches += 1;
+                stats.samples += rows;
+                stats.max_batch_seen = stats.max_batch_seen.max(rows);
+                if rows >= cfg.max_batch {
+                    stats.full_batches += 1;
+                    metrics.full_batches.inc();
+                }
+                if sampled {
+                    stats.drift_sampled += 1;
+                    metrics.drift_sampled.inc();
+                }
+                // Publish the batch into the registry: a handful of
+                // relaxed atomics plus one uncontended mutex (the
+                // histogram) — amortized over a whole batch, invisible
+                // next to the forward.
+                metrics.batches.inc();
+                metrics.samples.add(rows as u64);
+                metrics.wait_ns.add(stats.wait_ns - published_wait_ns);
+                published_wait_ns = stats.wait_ns;
+                metrics.compute_ns.add(batch_ns);
+                metrics.queue_depth.set(rows as f64);
+                metrics.fill_ratio.set(stats.fill_ratio());
+                metrics.batch_ms.record(batch_ns as f64 / 1e6);
+            }
+            Err(_) => {
+                // The batch is poisoned — but only the batch. Answer
+                // every request the fan-out had not reached yet, then
+                // keep serving (the assembly buffer was consumed by the
+                // unwind; it re-warms on the next batch).
+                let unreplied = (reqs.len() - replied.get()) as u64;
+                for r in reqs.iter().skip(replied.get()) {
+                    let _ = r.reply.send(Err(ServeError::ModelPanicked));
+                }
+                stats.panicked += unreplied;
+                stats.panicked_batches += 1;
+                metrics.panicked.add(unreplied);
+            }
         }
-        if sampled {
-            stats.drift_sampled += 1;
-            metrics.drift_sampled.inc();
-        }
-        // Publish the batch into the registry: a handful of relaxed
-        // atomics plus one uncontended mutex (the histogram) — amortized
-        // over a whole batch, invisible next to the forward.
-        metrics.batches.inc();
-        metrics.samples.add(rows as u64);
-        metrics.wait_ns.add(stats.wait_ns - published_wait_ns);
-        published_wait_ns = stats.wait_ns;
-        metrics.compute_ns.add(batch_ns);
-        metrics.queue_depth.set(rows as f64);
-        metrics.fill_ratio.set(stats.fill_ratio());
-        metrics.batch_ms.record(batch_ns as f64 / 1e6);
-        // Reclaim the buffers for the next round.
-        batch_data = batch.into_data();
         reqs.clear();
     }
+    // Drain epilogue: the queue is flushed (deferred requests included —
+    // the drain branch only exits once both are empty) and every admitted
+    // request has been answered. Fold the client-side shed count in and
+    // publish the final registry state.
+    stats.shed = shared.shed.load(Ordering::Relaxed);
     stats.arena_peak_bytes = scratch.planned_peak_bytes();
     stats.plans_cached = scratch.cached_plans();
+    metrics.wait_ns.add(stats.wait_ns - published_wait_ns);
+    metrics.queue_depth.set(0.0);
     stats
 }
 
@@ -437,18 +819,23 @@ pub struct ServeReport {
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub p99_ms: f64,
-    /// End-to-end samples/second over the whole run.
+    /// End-to-end *successfully served* samples/second over the whole run
+    /// (goodput — shed/expired/panicked requests don't count).
     pub throughput_sps: f64,
     pub wall_s: f64,
-    /// The merged per-client latency histogram (the SLO-tracking handle:
-    /// any percentile, mergeable across runs, bounded memory).
+    /// Requests that resolved `Ok` / to a `ServeError`.
+    pub ok_requests: usize,
+    pub err_requests: usize,
+    /// The merged per-client latency histogram over `Ok` requests (the
+    /// SLO-tracking handle: any percentile, mergeable across runs,
+    /// bounded memory).
     pub latency: LogHistogram,
     pub stats: ServeStats,
 }
 
 impl ServeReport {
     pub fn render(&self) -> String {
-        format!(
+        let mut s = format!(
             "{} clients x {} reqs: {:.1} samples/s | latency p50 {:.2} ms, p95 {:.2} ms, \
              p99 {:.2} ms | {} forwards ({} full), mean batch {:.2} (max {}), fill {:.0}%, \
              wait/compute {:.0}/{:.0}%, arena {:.1} KiB",
@@ -466,7 +853,14 @@ impl ServeReport {
             100.0 * self.stats.wait_frac(),
             100.0 * (1.0 - self.stats.wait_frac()),
             self.stats.arena_peak_bytes as f64 / 1024.0
-        )
+        );
+        if self.err_requests > 0 {
+            s.push_str(&format!(
+                " | {} errors (shed {}, expired {}, panicked {})",
+                self.err_requests, self.stats.shed, self.stats.expired, self.stats.panicked
+            ));
+        }
+        s
     }
 }
 
@@ -483,7 +877,9 @@ pub struct ServeMonitor {
 }
 
 /// One snapshot write (tmp + rename). I/O errors are reported to stderr
-/// and otherwise swallowed: a failing sink must never take serving down.
+/// and otherwise swallowed: a failing sink (disk full, unwritable
+/// directory, target unlinked mid-run) must never take serving down —
+/// `serve_monitor_survives_unwritable_target` is the regression test.
 fn write_snapshot(path: &Path) {
     let snap = registry::global().snapshot();
     let body = if path.extension().is_some_and(|e| e == "json") {
@@ -588,8 +984,10 @@ pub fn run_serve_bench(
     )
 }
 
-/// [`run_serve_bench`] with the full option set (metrics label, drift
-/// monitor).
+/// [`run_serve_bench`] with the full option set (admission control,
+/// deadlines, metrics label, drift monitor, fault plan). Clients use the
+/// blocking submit path, so a full queue applies backpressure rather than
+/// shedding; errors (deadline, panic injection) are tallied per kind.
 pub fn run_serve_bench_with(
     model: Arc<QuantizedModel>,
     samples: &[Tensor],
@@ -603,28 +1001,38 @@ pub fn run_serve_bench_with(
     // Each client records into its own bounded histogram (~7.6 KiB);
     // merging them is exact, so memory is constant in request count —
     // there is no latency Vec to grow or sort.
-    let latency: LogHistogram = std::thread::scope(|scope| {
+    let (latency, ok_requests, err_requests) = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..clients)
             .map(|c| {
                 let client = server.client();
                 scope.spawn(move || {
                     let mut h = LogHistogram::new();
+                    let (mut ok, mut err) = (0usize, 0usize);
                     for r in 0..requests_per_client {
                         let x = samples[(c + r * clients) % samples.len()].clone();
                         let t = Instant::now();
-                        let y = client.infer(x);
-                        std::hint::black_box(&y);
-                        h.record_ms(t.elapsed().as_secs_f64() * 1e3);
+                        match client.infer(x) {
+                            Ok(y) => {
+                                std::hint::black_box(&y);
+                                h.record_ms(t.elapsed().as_secs_f64() * 1e3);
+                                ok += 1;
+                            }
+                            Err(_) => err += 1,
+                        }
                     }
-                    h
+                    (h, ok, err)
                 })
             })
             .collect();
         let mut all = LogHistogram::new();
+        let (mut ok, mut err) = (0usize, 0usize);
         for h in handles {
-            all.merge(&h.join().expect("client thread"));
+            let (ch, cok, cerr) = h.join().expect("client thread");
+            all.merge(&ch);
+            ok += cok;
+            err += cerr;
         }
-        all
+        (all, ok, err)
     });
     let wall_s = t0.elapsed().as_secs_f64();
     let stats = server.shutdown();
@@ -636,6 +1044,8 @@ pub fn run_serve_bench_with(
         p99_ms: latency.percentile(99.0),
         throughput_sps: latency.count() as f64 / wall_s.max(1e-9),
         wall_s,
+        ok_requests,
+        err_requests,
         latency,
         stats,
     }
@@ -664,6 +1074,35 @@ mod tests {
         }
     }
 
+    /// Direct-drive helpers: tests that pre-fill a queue and run
+    /// `batcher_loop` on this thread (deterministic "already queued"
+    /// state). An unbounded channel stands in for the server's bounded
+    /// one — `Receiver<Msg>` is the same type either way.
+    fn req_with(
+        x: Tensor,
+        deadline: Option<Duration>,
+    ) -> (Msg, Receiver<Result<Tensor, ServeError>>) {
+        let (rtx, rrx) = channel();
+        (
+            Msg::Req(Request {
+                x,
+                reply: rtx,
+                admitted: Instant::now(),
+                deadline,
+            }),
+            rrx,
+        )
+    }
+
+    fn req(x: Tensor) -> (Msg, Receiver<Result<Tensor, ServeError>>) {
+        req_with(x, None)
+    }
+
+    fn drive(qm: Arc<QuantizedModel>, opts: ServeOptions, rx: Receiver<Msg>) -> ServeStats {
+        let shared = Arc::new(Shared::new(&resolve_label(&opts, &qm)));
+        batcher_loop(qm, opts, rx, shared)
+    }
+
     #[test]
     fn replies_match_direct_forward() {
         // Whatever micro-batches the server forms, each caller must get
@@ -680,7 +1119,7 @@ mod tests {
                 scope.spawn(move || {
                     for r in 0..4 {
                         let (x, _) = ds.batch((c * 31 + r) as u64, 1);
-                        let got = client.infer(x.clone());
+                        let got = client.infer(x.clone()).expect("served");
                         assert_eq!(got, qm.forward(&x), "client {c} req {r}");
                     }
                 });
@@ -692,6 +1131,7 @@ mod tests {
         assert!(stats.max_batch_seen >= 1);
         assert!(stats.arena_peak_bytes > 0, "batcher scratch must be warm");
         assert!(stats.plans_cached >= 1);
+        assert_eq!(stats.shed + stats.expired + stats.panicked, 0);
     }
 
     #[test]
@@ -702,53 +1142,53 @@ mod tests {
         // batcher_loop directly with a pre-filled channel makes the
         // "already queued" state deterministic.
         let qm = model();
-        let (tx, rx) = channel::<Request>();
+        let (tx, rx) = channel::<Msg>();
         let ds = SynthImageNet::new(406);
         let mut expected = Vec::new();
         let mut replies = Vec::new();
         for i in 0..5u64 {
             let (x, _) = ds.batch(i, 1);
-            let (rtx, rrx) = channel();
             expected.push(qm.forward(&x));
+            let (msg, rrx) = req(x);
             replies.push(rrx);
-            tx.send(Request { x, reply: rtx }).unwrap();
+            tx.send(msg).unwrap();
         }
         drop(tx);
         let cfg = BatchConfig {
             max_batch: 8,
             max_wait: Duration::ZERO,
         };
-        let stats = batcher_loop(Arc::clone(&qm), opts_with(cfg), rx);
+        let stats = drive(Arc::clone(&qm), opts_with(cfg), rx);
         assert_eq!(stats.batches, 1, "queued requests must coalesce");
         assert_eq!(stats.samples, 5);
         assert_eq!(stats.max_batch_seen, 5);
         for (rrx, want) in replies.iter().zip(&expected) {
-            assert_eq!(&rrx.recv().unwrap(), want);
+            assert_eq!(&rrx.recv().unwrap().unwrap(), want);
         }
     }
 
     #[test]
     fn zero_wait_respects_max_batch() {
         let qm = model();
-        let (tx, rx) = channel::<Request>();
+        let (tx, rx) = channel::<Msg>();
         let ds = SynthImageNet::new(407);
         let mut replies = Vec::new();
         for i in 0..5u64 {
             let (x, _) = ds.batch(i, 1);
-            let (rtx, rrx) = channel();
+            let (msg, rrx) = req(x);
             replies.push(rrx);
-            tx.send(Request { x, reply: rtx }).unwrap();
+            tx.send(msg).unwrap();
         }
         drop(tx);
         let cfg = BatchConfig {
             max_batch: 2,
             max_wait: Duration::ZERO,
         };
-        let stats = batcher_loop(qm, opts_with(cfg), rx);
+        let stats = drive(qm, opts_with(cfg), rx);
         assert_eq!(stats.batches, 3, "5 queued requests at max_batch 2");
         assert_eq!(stats.max_batch_seen, 2);
         for r in &replies {
-            assert_eq!(r.recv().unwrap().dim(0), 1);
+            assert_eq!(r.recv().unwrap().unwrap().dim(0), 1);
         }
     }
 
@@ -764,7 +1204,7 @@ mod tests {
         let client = server.client();
         for r in 0..5 {
             let (x, _) = ds.batch(r, 1);
-            let y = client.infer(x);
+            let y = client.infer(x).expect("served");
             assert_eq!(y.dim(0), 1);
         }
         drop(client);
@@ -783,12 +1223,221 @@ mod tests {
     }
 
     #[test]
+    fn submit_after_shutdown_returns_shutting_down() {
+        // The PR-9 regression: a client outliving its server must get a
+        // typed error, never a panic (the old infer() unwrapped recv()).
+        let server = BatchServer::start(model(), BatchConfig::default());
+        let client = server.client();
+        let ds = SynthImageNet::new(411);
+        let (x, _) = ds.batch(0, 1);
+        let _ = server.shutdown();
+        assert_eq!(client.infer(x.clone()).unwrap_err(), ServeError::ShuttingDown);
+        assert!(matches!(
+            client.try_submit(x.clone(), None),
+            Err(ServeError::ShuttingDown)
+        ));
+        assert_eq!(
+            client.infer_within(x, Duration::from_secs(1)).unwrap_err(),
+            ServeError::ShuttingDown
+        );
+    }
+
+    #[test]
+    fn try_submit_sheds_exactly_when_the_queue_is_full() {
+        // A client against a cap-1 queue nobody drains: the first
+        // try_submit is admitted, the second is shed with QueueFull, and
+        // dropping the receiver turns the admitted request's reply into
+        // ShuttingDown (no reply is ever lost).
+        let (tx, rx) = std::sync::mpsc::sync_channel::<Msg>(1);
+        let shared = Arc::new(Shared::new("test_shed_unit"));
+        let client = BatchClient {
+            tx,
+            shared: Arc::clone(&shared),
+        };
+        let ds = SynthImageNet::new(412);
+        let (x, _) = ds.batch(0, 1);
+        let admitted = client.try_submit(x.clone(), None).expect("cap-1 queue admits one");
+        assert!(matches!(
+            client.try_submit(x.clone(), None),
+            Err(ServeError::QueueFull)
+        ));
+        assert_eq!(shared.shed.load(Ordering::Relaxed), 1);
+        drop(rx);
+        assert_eq!(admitted.wait().unwrap_err(), ServeError::ShuttingDown);
+        assert!(matches!(
+            client.try_submit(x, None),
+            Err(ServeError::ShuttingDown)
+        ));
+    }
+
+    #[test]
+    fn expired_requests_are_dropped_before_compute() {
+        // Two requests with an already-passed deadline sandwich two live
+        // ones: the batcher answers DeadlineExceeded without forwarding
+        // them and serves the rest bit-identically.
+        let qm = model();
+        let (tx, rx) = channel::<Msg>();
+        let ds = SynthImageNet::new(413);
+        let mut live = Vec::new();
+        let mut dead = Vec::new();
+        for i in 0..4u64 {
+            let (x, _) = ds.batch(i, 1);
+            if i % 2 == 0 {
+                let (msg, rrx) = req_with(x, Some(Duration::ZERO));
+                dead.push(rrx);
+                tx.send(msg).unwrap();
+            } else {
+                let want = qm.forward(&x);
+                let (msg, rrx) = req(x);
+                live.push((rrx, want));
+                tx.send(msg).unwrap();
+            }
+        }
+        drop(tx);
+        let cfg = BatchConfig {
+            max_batch: 8,
+            max_wait: Duration::ZERO,
+        };
+        let stats = drive(Arc::clone(&qm), opts_with(cfg), rx);
+        assert_eq!(stats.expired, 2);
+        assert_eq!(stats.samples, 2, "expired rows must not be forwarded");
+        assert_eq!(stats.batches, 1);
+        for rrx in &dead {
+            assert_eq!(rrx.recv().unwrap().unwrap_err(), ServeError::DeadlineExceeded);
+        }
+        for (rrx, want) in &live {
+            assert_eq!(&rrx.recv().unwrap().unwrap(), want);
+        }
+    }
+
+    #[test]
+    fn server_default_deadline_applies_to_plain_requests() {
+        // ServeOptions::deadline covers requests submitted without one:
+        // with a zero default deadline every plain request expires.
+        let qm = model();
+        let (tx, rx) = channel::<Msg>();
+        let ds = SynthImageNet::new(414);
+        let (x, _) = ds.batch(0, 1);
+        let (msg, rrx) = req(x);
+        tx.send(msg).unwrap();
+        drop(tx);
+        let opts = ServeOptions {
+            cfg: BatchConfig {
+                max_batch: 4,
+                max_wait: Duration::ZERO,
+            },
+            deadline: Some(Duration::ZERO),
+            ..ServeOptions::default()
+        };
+        let stats = drive(qm, opts, rx);
+        assert_eq!(stats.expired, 1);
+        assert_eq!(stats.batches, 0);
+        assert_eq!(rrx.recv().unwrap().unwrap_err(), ServeError::DeadlineExceeded);
+    }
+
+    #[test]
+    fn injected_panic_is_isolated_to_its_batch() {
+        // Pick a seed whose plan panics exactly on the first dispatch:
+        // the first request gets ModelPanicked, the server (same thread,
+        // same scratch) keeps serving, and later replies are
+        // bit-identical to direct forwards.
+        let seed = (0u64..)
+            .find(|&s| {
+                let p = FaultPlan {
+                    seed: s,
+                    panic_rate: 0.5,
+                    ..FaultPlan::default()
+                };
+                p.panics(0) && (1..8).all(|k| !p.panics(k))
+            })
+            .expect("a seed with exactly one early panic exists");
+        let qm = model();
+        let opts = ServeOptions {
+            cfg: BatchConfig {
+                max_batch: 4,
+                max_wait: Duration::ZERO,
+            },
+            fault: Some(FaultPlan {
+                seed,
+                panic_rate: 0.5,
+                ..FaultPlan::default()
+            }),
+            ..ServeOptions::default()
+        };
+        let server = BatchServer::start_with(Arc::clone(&qm), opts);
+        let client = server.client();
+        let ds = SynthImageNet::new(415);
+        let (x0, _) = ds.batch(0, 1);
+        assert_eq!(
+            client.infer(x0).unwrap_err(),
+            ServeError::ModelPanicked,
+            "dispatch 0 must hit the injected panic"
+        );
+        for i in 1..4u64 {
+            let (x, _) = ds.batch(i, 1);
+            let got = client.infer(x.clone()).expect("server survives the panic");
+            assert_eq!(got, qm.forward(&x), "post-panic replies bit-identical");
+        }
+        drop(client);
+        let stats = server.shutdown();
+        assert_eq!(stats.injected_panics, 1);
+        assert_eq!(stats.panicked, 1);
+        assert_eq!(stats.panicked_batches, 1);
+        assert_eq!(stats.samples, 3);
+        assert!(stats.arena_peak_bytes > 0, "scratch stays warm across the panic");
+    }
+
+    #[test]
+    fn poisoned_shape_is_deferred_and_only_poisons_itself() {
+        // One rank-2 submission rides along with four well-formed ones:
+        // the mismatch is deferred out of the assembled batch (its
+        // forward panics in shape inference, isolated by catch_unwind)
+        // and the well-formed requests are served normally.
+        let qm = model();
+        let (tx, rx) = channel::<Msg>();
+        let ds = SynthImageNet::new(416);
+        let mut good = Vec::new();
+        for i in 0..2u64 {
+            let (x, _) = ds.batch(i, 1);
+            let want = qm.forward(&x);
+            let (msg, rrx) = req(x);
+            good.push((rrx, want));
+            tx.send(msg).unwrap();
+        }
+        let (bad_msg, bad_rrx) = req(Tensor::new(&[1, 7], vec![0.5; 7]));
+        tx.send(bad_msg).unwrap();
+        for i in 2..4u64 {
+            let (x, _) = ds.batch(i, 1);
+            let want = qm.forward(&x);
+            let (msg, rrx) = req(x);
+            good.push((rrx, want));
+            tx.send(msg).unwrap();
+        }
+        drop(tx);
+        let cfg = BatchConfig {
+            max_batch: 8,
+            max_wait: Duration::ZERO,
+        };
+        let stats = drive(Arc::clone(&qm), opts_with(cfg), rx);
+        assert_eq!(stats.batches, 1, "well-formed requests share one forward");
+        assert_eq!(stats.samples, 4);
+        assert_eq!(stats.panicked, 1);
+        assert_eq!(stats.panicked_batches, 1);
+        assert_eq!(bad_rrx.recv().unwrap().unwrap_err(), ServeError::ModelPanicked);
+        for (rrx, want) in &good {
+            assert_eq!(&rrx.recv().unwrap().unwrap(), want, "batch-mates unharmed");
+        }
+    }
+
+    #[test]
     fn serve_bench_reports_sane_numbers() {
         let qm = model();
         let ds = SynthImageNet::new(405);
         let samples: Vec<Tensor> = (0..8).map(|i| ds.batch(i, 1).0).collect();
         let report = run_serve_bench(qm, &samples, 3, 4, BatchConfig::default());
         assert_eq!(report.stats.samples, 12);
+        assert_eq!(report.ok_requests, 12);
+        assert_eq!(report.err_requests, 0);
         assert!(report.throughput_sps > 0.0);
         assert!(report.p50_ms <= report.p95_ms && report.p95_ms <= report.p99_ms);
         assert_eq!(report.latency.count(), 12);
@@ -841,27 +1490,27 @@ mod tests {
         // telemetry: 5 rows over ceil(5/2)=3 forwards at max_batch 2 is a
         // fill ratio of 5/6, with 2 full batches.
         let qm = model();
-        let (tx, rx) = channel::<Request>();
+        let (tx, rx) = channel::<Msg>();
         let ds = SynthImageNet::new(408);
         let mut replies = Vec::new();
         for i in 0..5u64 {
             let (x, _) = ds.batch(i, 1);
-            let (rtx, rrx) = channel();
+            let (msg, rrx) = req(x);
             replies.push(rrx);
-            tx.send(Request { x, reply: rtx }).unwrap();
+            tx.send(msg).unwrap();
         }
         drop(tx);
         let cfg = BatchConfig {
             max_batch: 2,
             max_wait: Duration::ZERO,
         };
-        let stats = batcher_loop(qm, opts_with(cfg), rx);
+        let stats = drive(qm, opts_with(cfg), rx);
         assert_eq!(stats.max_batch_cfg, 2);
         assert_eq!(stats.full_batches, 2);
         assert!((stats.fill_ratio() - 5.0 / 6.0).abs() < 1e-12);
         assert!(stats.compute_ns > 0, "forwards must land in compute time");
         for r in &replies {
-            assert_eq!(r.recv().unwrap().dim(0), 1);
+            assert_eq!(r.recv().unwrap().unwrap().dim(0), 1);
         }
     }
 
@@ -876,16 +1525,16 @@ mod tests {
             min_batches: 1,
             ..crate::obs::DriftConfig::default()
         }));
-        let (tx, rx) = channel::<Request>();
+        let (tx, rx) = channel::<Msg>();
         let ds = SynthImageNet::new(409);
         let mut expected = Vec::new();
         let mut replies = Vec::new();
         for i in 0..6u64 {
             let (x, _) = ds.batch(i, 1);
-            let (rtx, rrx) = channel();
             expected.push(qm.forward(&x));
+            let (msg, rrx) = req(x);
             replies.push(rrx);
-            tx.send(Request { x, reply: rtx }).unwrap();
+            tx.send(msg).unwrap();
         }
         drop(tx);
         let opts = ServeOptions {
@@ -895,12 +1544,17 @@ mod tests {
             },
             label: Some("test_drift_serve".to_string()),
             drift: Some(Arc::clone(&mon)),
+            ..ServeOptions::default()
         };
-        let stats = batcher_loop(Arc::clone(&qm), opts, rx);
+        let stats = drive(Arc::clone(&qm), opts, rx);
         assert_eq!(stats.batches, 3);
         assert_eq!(stats.drift_sampled, 3, "sample_every=1 sweeps every batch");
         for (rrx, want) in replies.iter().zip(&expected) {
-            assert_eq!(&rrx.recv().unwrap(), want, "monitored replies bit-identical");
+            assert_eq!(
+                &rrx.recv().unwrap().unwrap(),
+                want,
+                "monitored replies bit-identical"
+            );
         }
         let report = mon.report();
         assert_eq!(report.sampled_batches, 3);
@@ -918,14 +1572,14 @@ mod tests {
         // A unique model label keeps this test's cells disjoint from every
         // other test sharing the process-global registry.
         let qm = model();
-        let (tx, rx) = channel::<Request>();
+        let (tx, rx) = channel::<Msg>();
         let ds = SynthImageNet::new(410);
         let mut replies = Vec::new();
         for i in 0..4u64 {
             let (x, _) = ds.batch(i, 1);
-            let (rtx, rrx) = channel();
+            let (msg, rrx) = req(x);
             replies.push(rrx);
-            tx.send(Request { x, reply: rtx }).unwrap();
+            tx.send(msg).unwrap();
         }
         drop(tx);
         let opts = ServeOptions {
@@ -934,11 +1588,11 @@ mod tests {
                 max_wait: Duration::ZERO,
             },
             label: Some("test_registry_publish".to_string()),
-            drift: None,
+            ..ServeOptions::default()
         };
-        let stats = batcher_loop(qm, opts, rx);
+        let stats = drive(qm, opts, rx);
         for r in &replies {
-            let _ = r.recv().unwrap();
+            let _ = r.recv().unwrap().unwrap();
         }
         let l: &[(&str, &str)] = &[("model", "test_registry_publish")];
         let reg = registry::global();
@@ -962,6 +1616,9 @@ mod tests {
             reg.histogram("aimet_serve_batch_ms", "", l).read().count(),
             stats.batches as u64
         );
+        assert_eq!(reg.counter("aimet_serve_shed_total", "", l).get(), 0);
+        assert_eq!(reg.counter("aimet_serve_expired_total", "", l).get(), 0);
+        assert_eq!(reg.counter("aimet_serve_panicked_total", "", l).get(), 0);
         let fill = reg.gauge("aimet_serve_fill_ratio", "", l).get();
         assert!((fill - stats.fill_ratio()).abs() < 1e-12, "fill {fill}");
     }
@@ -995,5 +1652,23 @@ mod tests {
         assert!(parsed.get("aimet_serve_monitor_test_total").is_some());
         let _ = std::fs::remove_file(&prom);
         let _ = std::fs::remove_file(&json);
+    }
+
+    #[test]
+    fn serve_monitor_survives_unwritable_target() {
+        // Snapshot writes into a directory that doesn't exist fail at the
+        // tmp-file write; the monitor must log and keep running rather
+        // than unwind (stop() would then panic on the dead thread's
+        // join... which is exactly what this guards against).
+        let bogus = std::env::temp_dir()
+            .join(format!("aimet-mon-missing-{}", std::process::id()))
+            .join("nested")
+            .join("metrics.prom");
+        let m = ServeMonitor::start(&bogus, Duration::from_millis(1));
+        // Let it attempt a few writes, then a clean stop proves the
+        // thread survived every failure.
+        std::thread::sleep(Duration::from_millis(10));
+        m.stop();
+        assert!(!bogus.exists());
     }
 }

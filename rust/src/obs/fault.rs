@@ -1,0 +1,249 @@
+//! Deterministic fault injection for the serving tier.
+//!
+//! A [`FaultPlan`] decides, as a pure function of `(seed, batch index)`,
+//! whether the batcher should inject a forward panic or a dispatch delay
+//! before serving a given batch. Decisions go through the repo's own
+//! [`crate::rng`] (no wall-clock randomness, no global mutable state), so
+//! a chaos run is bit-reproducible: the same seed, rates, and request
+//! sequence injects faults at exactly the same batch indices — which is
+//! what lets `tests/serve_chaos.rs` assert that successful replies are
+//! bit-identical to an unfaulted run.
+//!
+//! Same always-compiled discipline as [`super::spans`]: injection is
+//! compiled in unconditionally, and when no plan is installed the entire
+//! cost on the serve hot path is one `Option` check per batch (the
+//! env-seeded global gate behind [`env_plan`] is one relaxed atomic load,
+//! paid once at batcher startup, never per batch).
+//!
+//! Activation is explicit, either:
+//! * per-server, via `ServeOptions::fault` (what the chaos suite and the
+//!   CLI's `--fault-seed`/`--fault-rate` knobs use), or
+//! * process-wide, via the `AIMET_FAULTS` environment variable:
+//!   `AIMET_FAULTS="seed=42,panic=0.01,delay=0.05,delay_ms=2"`. Keys may
+//!   appear in any order; missing keys default to seed 1, rate 0, 2 ms.
+
+use crate::rng::Rng;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Duration;
+
+/// The marker every injected panic carries; the chaos suite's quiet panic
+/// hook and post-mortem assertions key on it.
+pub const INJECTED_PANIC_MSG: &str = "aimet fault injection: injected forward panic";
+
+/// A seeded, rate-based injection schedule. Copyable plain data — all the
+/// state lives in the batch index the caller feeds in, so one plan can be
+/// shared by value across servers and test assertions alike.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    /// Stream selector: distinct seeds give independent schedules.
+    pub seed: u64,
+    /// Probability (0..=1) that a given batch's forward panics.
+    pub panic_rate: f64,
+    /// Probability (0..=1) that a given batch's dispatch is delayed.
+    pub delay_rate: f64,
+    /// How long a delayed dispatch stalls.
+    pub delay: Duration,
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan {
+            seed: 1,
+            panic_rate: 0.0,
+            delay_rate: 0.0,
+            delay: Duration::from_millis(2),
+        }
+    }
+}
+
+/// One decision stream per (seed, batch, salt): splitmix-seeded xoshiro so
+/// consecutive batch indices still give well-distributed draws.
+fn draw(seed: u64, k: u64, salt: u64) -> f64 {
+    let mut r = Rng::new(
+        seed.wrapping_add(salt)
+            .wrapping_add(k.wrapping_mul(0x9e37_79b9_7f4a_7c15)),
+    );
+    // 53 mantissa bits -> exact dyadic in [0, 1).
+    (r.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+impl FaultPlan {
+    /// Does the plan inject a forward panic into batch `k`?
+    pub fn panics(&self, k: u64) -> bool {
+        self.panic_rate > 0.0 && draw(self.seed, k, 0x70616e6963) < self.panic_rate
+    }
+
+    /// Does the plan stall batch `k`'s dispatch?
+    pub fn delays(&self, k: u64) -> bool {
+        self.delay_rate > 0.0 && draw(self.seed, k, 0x64656c6179) < self.delay_rate
+    }
+
+    /// True when the plan can ever fire — servers skip the per-batch
+    /// bookkeeping entirely for inert plans.
+    pub fn is_active(&self) -> bool {
+        self.panic_rate > 0.0 || self.delay_rate > 0.0
+    }
+
+    /// First batch index in `0..n` that panics, if any — chaos tests use
+    /// this to pick seeds that provably fire within a bounded run.
+    pub fn first_panic_before(&self, n: u64) -> Option<u64> {
+        (0..n).find(|&k| self.panics(k))
+    }
+}
+
+/// Trip an injected forward panic. Kept in one place so the panic payload
+/// is always [`INJECTED_PANIC_MSG`].
+pub fn injected_panic() -> ! {
+    panic!("{INJECTED_PANIC_MSG}");
+}
+
+/// Tri-state env gate, same shape as [`super::enabled`]: 0 = uninit,
+/// 1 = off, 2 = on. The off path after first resolution is one relaxed
+/// load.
+static STATE: AtomicU8 = AtomicU8::new(0);
+const ST_UNINIT: u8 = 0;
+const ST_OFF: u8 = 1;
+const ST_ON: u8 = 2;
+
+static ENV_PLAN: OnceLock<Option<FaultPlan>> = OnceLock::new();
+
+/// The process-wide plan from `AIMET_FAULTS`, if one is configured and
+/// active. Batchers resolve this once at startup; afterwards the hot loop
+/// only checks its resolved `Option<FaultPlan>`.
+pub fn env_plan() -> Option<FaultPlan> {
+    match STATE.load(Ordering::Relaxed) {
+        ST_ON => *ENV_PLAN.get_or_init(parse_env),
+        ST_OFF => None,
+        _ => {
+            let plan = *ENV_PLAN.get_or_init(parse_env);
+            let want = if plan.is_some() { ST_ON } else { ST_OFF };
+            let _ = STATE.compare_exchange(ST_UNINIT, want, Ordering::Relaxed, Ordering::Relaxed);
+            plan
+        }
+    }
+}
+
+fn parse_env() -> Option<FaultPlan> {
+    parse_spec(&std::env::var("AIMET_FAULTS").ok()?)
+}
+
+/// Parse an `AIMET_FAULTS` spec (`seed=42,panic=0.01,delay=0.05,delay_ms=2`).
+/// Malformed pairs are ignored rather than panicking — a typo'd chaos env
+/// must not take the server down, it just injects nothing. An inert spec
+/// (no rate above zero) is `None`.
+fn parse_spec(raw: &str) -> Option<FaultPlan> {
+    let mut plan = FaultPlan::default();
+    for pair in raw.split(',') {
+        let Some((k, v)) = pair.split_once('=') else {
+            continue;
+        };
+        match (k.trim(), v.trim()) {
+            ("seed", v) => {
+                if let Ok(s) = v.parse() {
+                    plan.seed = s;
+                }
+            }
+            ("panic", v) => {
+                if let Ok(r) = v.parse::<f64>() {
+                    plan.panic_rate = r.clamp(0.0, 1.0);
+                }
+            }
+            ("delay", v) => {
+                if let Ok(r) = v.parse::<f64>() {
+                    plan.delay_rate = r.clamp(0.0, 1.0);
+                }
+            }
+            ("delay_ms", v) => {
+                if let Ok(ms) = v.parse::<f64>() {
+                    if ms.is_finite() && ms >= 0.0 {
+                        plan.delay = Duration::from_secs_f64(ms / 1e3);
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    plan.is_active().then_some(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decisions_are_deterministic_and_rate_shaped() {
+        let plan = FaultPlan {
+            seed: 42,
+            panic_rate: 0.25,
+            delay_rate: 0.5,
+            ..FaultPlan::default()
+        };
+        let again = plan;
+        let n = 10_000u64;
+        let mut panics = 0u64;
+        let mut delays = 0u64;
+        for k in 0..n {
+            assert_eq!(plan.panics(k), again.panics(k), "panic decision k={k}");
+            assert_eq!(plan.delays(k), again.delays(k), "delay decision k={k}");
+            panics += u64::from(plan.panics(k));
+            delays += u64::from(plan.delays(k));
+        }
+        let p = panics as f64 / n as f64;
+        let d = delays as f64 / n as f64;
+        assert!((p - 0.25).abs() < 0.02, "panic rate {p}");
+        assert!((d - 0.5).abs() < 0.02, "delay rate {d}");
+    }
+
+    #[test]
+    fn streams_are_independent_per_seed_and_kind() {
+        let a = FaultPlan {
+            seed: 1,
+            panic_rate: 0.5,
+            delay_rate: 0.5,
+            ..FaultPlan::default()
+        };
+        let b = FaultPlan { seed: 2, ..a };
+        let n = 4096u64;
+        let seed_diff = (0..n).filter(|&k| a.panics(k) != b.panics(k)).count();
+        let kind_diff = (0..n).filter(|&k| a.panics(k) != a.delays(k)).count();
+        assert!(seed_diff > n as usize / 4, "seeds must decorrelate: {seed_diff}");
+        assert!(kind_diff > n as usize / 4, "kinds must decorrelate: {kind_diff}");
+    }
+
+    #[test]
+    fn zero_rates_never_fire() {
+        let plan = FaultPlan::default();
+        assert!(!plan.is_active());
+        assert!((0..4096).all(|k| !plan.panics(k) && !plan.delays(k)));
+        assert_eq!(plan.first_panic_before(4096), None);
+    }
+
+    #[test]
+    fn first_panic_before_finds_the_earliest_hit() {
+        let plan = FaultPlan {
+            seed: 7,
+            panic_rate: 0.3,
+            ..FaultPlan::default()
+        };
+        let k = plan
+            .first_panic_before(64)
+            .expect("rate 0.3 fires within 64 draws");
+        assert!(plan.panics(k));
+        assert!((0..k).all(|j| !plan.panics(j)));
+    }
+
+    #[test]
+    fn spec_parser_handles_order_typos_and_inert_plans() {
+        // parse_spec is driven directly (no process-global env mutation —
+        // other tests run concurrently in this binary).
+        let p = parse_spec("delay_ms=5, panic=0.1 ,seed=9").expect("active plan");
+        assert_eq!(p.seed, 9);
+        assert!((p.panic_rate - 0.1).abs() < 1e-12);
+        assert_eq!(p.delay, Duration::from_millis(5));
+        // Inert and malformed specs inject nothing.
+        assert!(parse_spec("seed=3").is_none());
+        assert!(parse_spec("panic=lots,garbage").is_none());
+        assert!(parse_spec("panic=2.5").map(|p| p.panic_rate) == Some(1.0));
+    }
+}

@@ -1,6 +1,6 @@
 //! Engine-wide observability: always-compiled, near-zero-cost-when-off.
 //!
-//! Five pieces:
+//! Six pieces:
 //! - [`spans`] — a lock-free per-thread span recorder the executor feeds
 //!   per-node / per-wavefront timings and clip counters into;
 //! - [`hist`] — a fixed-size log-bucket latency histogram for the serve
@@ -10,7 +10,9 @@
 //! - [`registry`] — the process-global metrics registry the serve tier
 //!   publishes into, with Prometheus-text and JSON exposition;
 //! - [`drift`] — the sampled calibration-drift monitor grading served
-//!   traffic against the calibration-time int8 grids.
+//!   traffic against the calibration-time int8 grids;
+//! - [`fault`] — seeded, deterministic fault injection (forward panics,
+//!   dispatch delays) for chaos-testing the serving tier.
 //!
 //! The off path costs one relaxed atomic load per gate check
 //! ([`enabled`]), placed once per forward and once per node — no
@@ -27,12 +29,14 @@
 //! run uses).
 
 pub mod drift;
+pub mod fault;
 pub mod hist;
 pub mod registry;
 pub mod report;
 pub mod spans;
 
 pub use drift::{DriftConfig, DriftMonitor, DriftReport, DriftSink, NodeSpec, Verdict};
+pub use fault::FaultPlan;
 pub use hist::LogHistogram;
 pub use registry::{Counter, Gauge, Histogram, MetricsSnapshot, Registry};
 pub use report::{chrome_trace, ModelMeta, NodeMeta, ProfileReport};

@@ -523,6 +523,34 @@ mod tests {
     }
 
     #[test]
+    fn pool_is_reusable_after_a_propagated_panic() {
+        // The serving tier's panic-isolation contract leans on this: after
+        // parallel_chunks re-raises a worker panic at the submitter (and
+        // the submitter catches it), the SAME shared pool must run
+        // subsequent regions to completion with correct coverage — no
+        // wedged workers, no lost lanes, no stale panicked flag.
+        for round in 0..3 {
+            let poisoned = std::panic::catch_unwind(|| {
+                parallel_chunks(1000, 1, |s, _e| {
+                    if s >= 500 {
+                        panic!("boom in round {round}");
+                    }
+                });
+            });
+            assert!(poisoned.is_err(), "round {round}: panic must propagate");
+            let sum = AtomicU64::new(0);
+            parallel_chunks(997, 1, |s, e| {
+                sum.fetch_add((e - s) as u64, Ordering::Relaxed);
+            });
+            assert_eq!(
+                sum.load(Ordering::Relaxed),
+                997,
+                "round {round}: full coverage after a panicked region"
+            );
+        }
+    }
+
+    #[test]
     fn worker_scratch_reuses_capacity() {
         with_worker_scratch(|ws| {
             let s = ws.i32_slice(100);

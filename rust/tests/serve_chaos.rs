@@ -1,0 +1,464 @@
+//! Chaos acceptance suite for the fault-tolerant serving core (PR 9).
+//!
+//! Every test drives a live [`BatchServer`] through a storm — seeded
+//! forward panics, dispatch delays against deadlines, bounded-queue
+//! overload, mid-traffic shutdown — and checks the same four invariants
+//! the serving tier promises:
+//!
+//! 1. **No deadlock**: every `wait()` returns (a violation hangs the
+//!    test, which is the point).
+//! 2. **No lost reply**: every submitted request resolves to exactly one
+//!    `Ok` / `ServeError`, and the per-kind tallies tie out against the
+//!    batcher's own stats.
+//! 3. **Bit-identity**: every successful reply equals the unfaulted
+//!    oracle `qm.forward(x)` — injection may fail requests, never corrupt
+//!    them.
+//! 4. **Clean drain**: shutdown always returns stats whose accounting
+//!    covers every admitted request.
+//!
+//! Fault schedules are pure functions of (seed, dispatch index) via the
+//! repo RNG, so the storms here are reproducible run-to-run; seeds are
+//! *searched* (e.g. "panics at dispatch 0") rather than hoped for.
+
+use aimet::engine::{lower, BatchConfig, BatchServer, QuantizedModel, ServeError, ServeOptions};
+use aimet::obs::{fault, FaultPlan};
+use aimet::ptq::{standard_ptq_pipeline, PtqOptions};
+use aimet::task::TaskData;
+use aimet::tensor::Tensor;
+use aimet::zoo;
+use std::sync::{Arc, Once};
+use std::time::Duration;
+
+/// Injected panics are expected traffic in this suite: silence their
+/// default-hook backtraces (anything else still reports normally).
+fn quiet_injected_panics() {
+    static HOOK: Once = Once::new();
+    HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let payload = info.payload();
+            let msg = payload
+                .downcast_ref::<&str>()
+                .copied()
+                .or_else(|| payload.downcast_ref::<String>().map(|s| s.as_str()));
+            if msg.is_some_and(|m| m.contains(fault::INJECTED_PANIC_MSG)) {
+                return;
+            }
+            prev(info);
+        }));
+    });
+}
+
+/// Calibrate and lower one zoo model (same recipe as the engine suites).
+fn lowered(model: &str, seed: u64) -> (Arc<QuantizedModel>, TaskData) {
+    let g = zoo::build(model, seed).unwrap();
+    let data = TaskData::new(model, seed + 1).unwrap();
+    let calib = data.calibration(2, 8);
+    let out = standard_ptq_pipeline(&g, &calib, &PtqOptions::default());
+    (Arc::new(lower(&out.sim).expect("lowering")), data)
+}
+
+/// Outcome tally of one client's traffic against the oracle.
+#[derive(Default)]
+struct Tally {
+    ok: u64,
+    panicked: u64,
+    expired: u64,
+    shed: u64,
+    shutdown: u64,
+}
+
+impl Tally {
+    fn absorb(&mut self, res: Result<Tensor, ServeError>, want: &Tensor, ctx: &str) {
+        match res {
+            Ok(y) => {
+                assert_eq!(&y, want, "{ctx}: Ok replies must be bit-identical");
+                self.ok += 1;
+            }
+            Err(ServeError::ModelPanicked) => self.panicked += 1,
+            Err(ServeError::DeadlineExceeded) => self.expired += 1,
+            Err(ServeError::QueueFull) => self.shed += 1,
+            Err(ServeError::ShuttingDown) => self.shutdown += 1,
+        }
+    }
+
+    fn total(&self) -> u64 {
+        self.ok + self.panicked + self.expired + self.shed + self.shutdown
+    }
+
+    fn merge(&mut self, o: Tally) {
+        self.ok += o.ok;
+        self.panicked += o.panicked;
+        self.expired += o.expired;
+        self.shed += o.shed;
+        self.shutdown += o.shutdown;
+    }
+}
+
+#[test]
+fn panic_storm_loses_no_reply_and_ok_replies_stay_bit_identical() {
+    quiet_injected_panics();
+    // A seed whose panic stream provably fires within the first 8
+    // dispatches — 4 clients × 12 requests at max_batch 4 dispatch at
+    // least 12 times, so the storm is guaranteed to actually storm.
+    let rate = 0.25;
+    let seed = (0u64..)
+        .find(|&s| {
+            FaultPlan {
+                seed: s,
+                panic_rate: rate,
+                ..FaultPlan::default()
+            }
+            .first_panic_before(8)
+            .is_some()
+        })
+        .unwrap();
+    let (qm, data) = lowered("mobimini", 920);
+    let opts = ServeOptions {
+        cfg: BatchConfig {
+            max_batch: 4,
+            max_wait: Duration::from_micros(200),
+        },
+        fault: Some(FaultPlan {
+            seed,
+            panic_rate: rate,
+            ..FaultPlan::default()
+        }),
+        ..ServeOptions::default()
+    };
+    let server = BatchServer::start_with(Arc::clone(&qm), opts);
+    let tally = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..4)
+            .map(|c| {
+                let client = server.client();
+                let qm = Arc::clone(&qm);
+                let data = &data;
+                scope.spawn(move || {
+                    let mut t = Tally::default();
+                    for r in 0..12u64 {
+                        let (x, _) = data.batch(10_000 + c * 100 + r, 1);
+                        let want = qm.forward(&x);
+                        t.absorb(client.infer(x), &want, "panic storm");
+                    }
+                    t
+                })
+            })
+            .collect();
+        let mut all = Tally::default();
+        for h in handles {
+            all.merge(h.join().expect("client thread"));
+        }
+        all
+    });
+    let stats = server.shutdown();
+    // Exactly one reply per request, tallies tied to the batcher's books.
+    assert_eq!(tally.total(), 48, "every request resolves exactly once");
+    assert_eq!(tally.shed + tally.expired + tally.shutdown, 0);
+    assert_eq!(stats.samples as u64, tally.ok);
+    assert_eq!(stats.panicked, tally.panicked);
+    assert!(
+        stats.injected_panics >= 1,
+        "the chosen seed must actually fire"
+    );
+    assert!(stats.panicked_batches >= 1);
+    assert!(tally.ok >= 1, "a 25% storm must not kill all traffic");
+    assert_eq!(stats.shed, 0);
+}
+
+#[test]
+fn delay_storm_against_deadlines_expires_without_stranding() {
+    quiet_injected_panics();
+    // Every dispatch is stalled 5 ms (delay_rate 1 is deterministic)
+    // against a 2 ms deadline: the stalled batch's own requests expire
+    // before compute. A second wave submitted with a roomy per-request
+    // deadline must still be served bit-identically.
+    let (qm, data) = lowered("mobimini", 921);
+    let opts = ServeOptions {
+        cfg: BatchConfig {
+            max_batch: 4,
+            max_wait: Duration::ZERO,
+        },
+        deadline: Some(Duration::from_millis(2)),
+        fault: Some(FaultPlan {
+            seed: 3,
+            delay_rate: 1.0,
+            delay: Duration::from_millis(5),
+            ..FaultPlan::default()
+        }),
+        ..ServeOptions::default()
+    };
+    let server = BatchServer::start_with(Arc::clone(&qm), opts);
+    let client = server.client();
+    let mut tally = Tally::default();
+    // Wave 1: inherit the 2 ms server deadline — every request lands in a
+    // dispatch stalled past it, so every one must expire.
+    for r in 0..6u64 {
+        let (x, _) = data.batch(20_000 + r, 1);
+        let want = qm.forward(&x);
+        tally.absorb(client.infer(x), &want, "delay storm wave 1");
+    }
+    assert_eq!(tally.expired, 6, "5 ms stall beats every 2 ms deadline");
+    // Wave 2: explicit 10 s deadlines out-wait the stalls.
+    for r in 0..4u64 {
+        let (x, _) = data.batch(21_000 + r, 1);
+        let want = qm.forward(&x);
+        tally.absorb(
+            client.infer_within(x, Duration::from_secs(10)),
+            &want,
+            "delay storm wave 2",
+        );
+    }
+    drop(client);
+    let stats = server.shutdown();
+    assert_eq!(tally.total(), 10);
+    assert_eq!(tally.ok, 4, "roomy deadlines must be served");
+    assert_eq!(stats.expired, 6);
+    assert_eq!(stats.samples, 4);
+    assert!(
+        stats.injected_delays >= stats.batches as u64 + 1,
+        "rate-1.0 stalls every dispatch"
+    );
+}
+
+#[test]
+fn overload_sheds_with_queue_full_and_serves_every_admitted_request() {
+    quiet_injected_panics();
+    // Offered load >> capacity: the batcher is pinned in a 20 ms stall
+    // while one thread fires 24 try_submits back-to-back (microseconds),
+    // so a cap-2 queue must shed most of them — and everything admitted
+    // must still resolve Ok after the stall.
+    let (qm, data) = lowered("mobimini", 922);
+    let opts = ServeOptions {
+        cfg: BatchConfig {
+            max_batch: 2,
+            max_wait: Duration::ZERO,
+        },
+        queue_cap: 2,
+        fault: Some(FaultPlan {
+            seed: 5,
+            delay_rate: 1.0,
+            delay: Duration::from_millis(20),
+            ..FaultPlan::default()
+        }),
+        ..ServeOptions::default()
+    };
+    let server = BatchServer::start_with(Arc::clone(&qm), opts);
+    let client = server.client();
+    let mut pendings = Vec::new();
+    let mut tally = Tally::default();
+    // Prime one request so the batcher is inside its stall...
+    {
+        let (x, _) = data.batch(30_000, 1);
+        let want = qm.forward(&x);
+        pendings.push((client.submit(x, None).expect("primer admits"), want));
+    }
+    std::thread::sleep(Duration::from_millis(4));
+    // ...then spam far past the queue bound within the stall window.
+    for r in 0..24u64 {
+        let (x, _) = data.batch(30_001 + r, 1);
+        let want = qm.forward(&x);
+        match client.try_submit(x, None) {
+            Ok(p) => pendings.push((p, want)),
+            Err(e) => {
+                assert_eq!(e, ServeError::QueueFull, "overload error is typed");
+                tally.shed += 1;
+            }
+        }
+    }
+    assert!(
+        tally.shed >= 1,
+        "24 instant submits against a cap-2 queue must shed"
+    );
+    let admitted = pendings.len() as u64;
+    for (p, want) in pendings {
+        tally.absorb(p.wait(), &want, "overload admitted");
+    }
+    drop(client);
+    let stats = server.shutdown();
+    assert_eq!(tally.total(), 25, "every request resolves exactly once");
+    assert_eq!(tally.ok, admitted, "every admitted request is served");
+    assert_eq!(stats.samples as u64, admitted);
+    assert_eq!(stats.shed, tally.shed, "client sheds land in server stats");
+    assert_eq!(stats.expired + stats.panicked, 0);
+}
+
+#[test]
+fn shutdown_drains_queued_work_and_refuses_late_traffic() {
+    quiet_injected_panics();
+    // Queue a backlog behind a stalled batcher, then shut down: the drain
+    // must serve every admitted request (no ShuttingDown for work already
+    // accepted), and only post-shutdown submissions are refused.
+    let (qm, data) = lowered("mobimini", 923);
+    let opts = ServeOptions {
+        cfg: BatchConfig {
+            max_batch: 2,
+            max_wait: Duration::ZERO,
+        },
+        queue_cap: 32,
+        fault: Some(FaultPlan {
+            seed: 9,
+            delay_rate: 1.0,
+            delay: Duration::from_millis(3),
+            ..FaultPlan::default()
+        }),
+        ..ServeOptions::default()
+    };
+    let server = BatchServer::start_with(Arc::clone(&qm), opts);
+    let client = server.client();
+    let mut pendings = Vec::new();
+    for r in 0..10u64 {
+        let (x, _) = data.batch(40_000 + r, 1);
+        let want = qm.forward(&x);
+        pendings.push((client.try_submit(x, None).expect("cap 32 admits"), want));
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.samples, 10, "graceful drain serves the whole backlog");
+    let mut tally = Tally::default();
+    for (p, want) in pendings {
+        tally.absorb(p.wait(), &want, "drained backlog");
+    }
+    assert_eq!(tally.ok, 10);
+    let (x, _) = data.batch(41_000, 1);
+    assert_eq!(client.infer(x.clone()).unwrap_err(), ServeError::ShuttingDown);
+    assert!(matches!(
+        client.try_submit(x, None),
+        Err(ServeError::ShuttingDown)
+    ));
+}
+
+#[test]
+fn combined_storm_across_zoo_keeps_every_invariant() {
+    quiet_injected_panics();
+    // Panics AND delays at once under a (roomy) deadline, on every zoo
+    // model: the combined failure modes still lose nothing. Rates are
+    // moderate so served traffic and failures mix over 18 requests.
+    for (mi, model) in zoo::MODEL_NAMES.into_iter().enumerate() {
+        let (qm, data) = lowered(model, 930 + mi as u64);
+        let opts = ServeOptions {
+            cfg: BatchConfig {
+                max_batch: 3,
+                max_wait: Duration::from_micros(200),
+            },
+            queue_cap: 8,
+            deadline: Some(Duration::from_secs(30)),
+            fault: Some(FaultPlan {
+                seed: 77 + mi as u64,
+                panic_rate: 0.2,
+                delay_rate: 0.2,
+                delay: Duration::from_micros(500),
+                ..FaultPlan::default()
+            }),
+            ..ServeOptions::default()
+        };
+        let server = BatchServer::start_with(Arc::clone(&qm), opts);
+        let tally = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..3)
+                .map(|c| {
+                    let client = server.client();
+                    let qm = Arc::clone(&qm);
+                    let data = &data;
+                    scope.spawn(move || {
+                        let mut t = Tally::default();
+                        for r in 0..6u64 {
+                            let (x, _) = data.batch(50_000 + c * 64 + r, 1);
+                            let want = qm.forward(&x);
+                            t.absorb(client.infer(x), &want, model);
+                        }
+                        t
+                    })
+                })
+                .collect();
+            let mut all = Tally::default();
+            for h in handles {
+                all.merge(h.join().expect("client thread"));
+            }
+            all
+        });
+        let stats = server.shutdown();
+        assert_eq!(tally.total(), 18, "{model}: every request resolves once");
+        assert_eq!(tally.shed, 0, "{model}: blocking submits never shed");
+        assert_eq!(
+            stats.samples as u64, tally.ok,
+            "{model}: served tally ties out"
+        );
+        assert_eq!(
+            stats.panicked, tally.panicked,
+            "{model}: panic tally ties out"
+        );
+        assert_eq!(
+            stats.expired, tally.expired,
+            "{model}: expiry tally ties out"
+        );
+        assert_eq!(
+            stats.samples as u64 + stats.panicked + stats.expired,
+            18,
+            "{model}: the drain covered every admitted request"
+        );
+    }
+}
+
+#[test]
+fn faulted_ok_replies_match_a_fully_unfaulted_server_run() {
+    quiet_injected_panics();
+    // The bit-identity contract stated end-to-end: run the SAME request
+    // sequence through an unfaulted server and a panic+delay-stormed one
+    // (sequentially, one client, so pairing is exact) — every reply the
+    // storm run answers Ok must equal the unfaulted server's reply.
+    let (qm, data) = lowered("mobimini", 924);
+    let inputs: Vec<Tensor> = (0..10u64).map(|r| data.batch(60_000 + r, 1).0).collect();
+    let cfg = BatchConfig {
+        max_batch: 4,
+        max_wait: Duration::ZERO,
+    };
+    let clean_server = BatchServer::start(Arc::clone(&qm), cfg);
+    let clean_client = clean_server.client();
+    let clean: Vec<Tensor> = inputs
+        .iter()
+        .map(|x| clean_client.infer(x.clone()).expect("unfaulted serve"))
+        .collect();
+    drop(clean_client);
+    let clean_stats = clean_server.shutdown();
+    assert_eq!(clean_stats.samples, 10);
+    let seed = (0u64..)
+        .find(|&s| {
+            FaultPlan {
+                seed: s,
+                panic_rate: 0.4,
+                ..FaultPlan::default()
+            }
+            .first_panic_before(10)
+            .is_some()
+        })
+        .unwrap();
+    let opts = ServeOptions {
+        cfg,
+        fault: Some(FaultPlan {
+            seed,
+            panic_rate: 0.4,
+            delay_rate: 0.3,
+            delay: Duration::from_micros(300),
+            ..FaultPlan::default()
+        }),
+        ..ServeOptions::default()
+    };
+    let storm_server = BatchServer::start_with(Arc::clone(&qm), opts);
+    let storm_client = storm_server.client();
+    let mut ok = 0u64;
+    let mut panicked = 0u64;
+    for (x, want) in inputs.iter().zip(&clean) {
+        match storm_client.infer(x.clone()) {
+            Ok(y) => {
+                assert_eq!(&y, want, "storm Ok replies match the unfaulted run");
+                ok += 1;
+            }
+            Err(ServeError::ModelPanicked) => panicked += 1,
+            Err(e) => panic!("unexpected outcome under panic storm: {e}"),
+        }
+    }
+    drop(storm_client);
+    let stats = storm_server.shutdown();
+    assert_eq!(ok + panicked, 10);
+    assert_eq!(stats.samples as u64, ok);
+    assert_eq!(stats.panicked, panicked);
+    assert!(stats.injected_panics >= 1, "the storm must actually fire");
+}

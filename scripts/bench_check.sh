@@ -11,7 +11,10 @@
 #     below 2x batch-1 samples/sec, the packed engine performs ANY
 #     steady-state heap allocation per forward (rust/README.md §Engine),
 #     or the profiled-run overhead (span recorder + clip counters live)
-#     exceeds 3% of the plain run (README.md §Observability), or
+#     exceeds 3% of the plain run (README.md §Observability), or the
+#     robustness machinery (admission gate + deadline check + unwind
+#     boundary, fault hooks off) costs more than 1% of the plain b8
+#     forward (rust/README.md §Serving), or
 #   * batch-8 engine throughput regresses below 0.9x the previous run
 #     recorded in BENCH_history.jsonl (the perf ratchet; only applied when
 #     the previous run used the same thread count AND the same SIMD
@@ -133,6 +136,26 @@ print(
     f"shift flagged {e.get('drift_shifted_flagged')}"
 )
 
+# Robustness overhead gate: with fault hooks OFF, the PR 9 serving armor
+# (admission-gate load + deadline check + unwind boundary around every
+# dispatch) must stay within 1% of the bare b8 forward, measured
+# back-to-back in the same bench process. Fault tolerance is only free if
+# the happy path can't tell it's there.
+rover = e.get("robustness_overhead_pct")
+if not isinstance(rover, (int, float)):
+    sys.exit("bench_check: BENCH_engine.json lacks robustness_overhead_pct")
+if rover > 1.0:
+    sys.exit(
+        f"bench_check: robustness overhead {rover:.2f}% > 1% "
+        "(unwind boundary / deadline check too hot)"
+    )
+print(
+    f"bench_check OK: robustness overhead {rover:+.2f}% (<= 1%), "
+    f"overload goodput {fmt(e.get('serve_overload_goodput_sps'), ' sps')}, "
+    f"shed rate {fmt(e.get('serve_shed_rate'), '')}, "
+    f"deadline miss rate {fmt(e.get('serve_deadline_miss_rate'), '')}"
+)
+
 print(
     f"bench_check OK: engine batched {speedup:.2f}x fp32 (>= 1.5), "
     f"batch scaling {scaling:.2f}x (>= 2.0), "
@@ -237,6 +260,12 @@ entry = {
     "wavefronts": e.get("wavefronts"),
     "profile_overhead_pct": overhead,
     "metrics_overhead_pct": mover,
+    "robustness_overhead_pct": rover,
+    "serve_shed_rate": e.get("serve_shed_rate"),
+    "serve_deadline_miss_rate": e.get("serve_deadline_miss_rate"),
+    "serve_overload_goodput_sps": e.get("serve_overload_goodput_sps"),
+    "serve_overload_shed_frac": e.get("serve_overload_shed_frac"),
+    "serve_overload_p99_ms": e.get("serve_overload_p99_ms"),
     "drift_false_positive_nodes": e.get("drift_false_positive_nodes"),
     "serve_b8_fill_ratio": e.get("serve_b8_fill_ratio"),
     "clip_rate_mobimini": e.get("clip_rate_mobimini"),

@@ -40,6 +40,16 @@ echo "== ci: engine suite, wide pool (AIMET_THREADS=16) =="
 (cd rust && AIMET_THREADS=16 cargo test -q --test engine_integration)
 (cd rust && AIMET_THREADS=16 cargo test -q --lib engine::)
 
+# Fault tolerance must hold at any pool width: the chaos suite (seeded
+# panic/delay/overload storms against the batch server, exactly-one-reply
+# + bit-identity + clean-drain invariants) runs natively, then pinned to
+# a single worker thread where the batcher/client interleavings and the
+# panic-recovery path are maximally adversarial.
+echo "== ci: serve chaos suite (cargo test -q --test serve_chaos) =="
+(cd rust && cargo test -q --test serve_chaos)
+echo "== ci: serve chaos suite, single-thread pool (AIMET_THREADS=1) =="
+(cd rust && AIMET_THREADS=1 cargo test -q --test serve_chaos)
+
 # Observability must be a pure observer: the engine's agreement and
 # serving properties have to pass with the span recorder + clip counters
 # live on every forward (env-gated process-wide), and the observability
