@@ -68,3 +68,44 @@ pub fn gemm_i8_gops(m: usize, k: usize, n: usize, seed: u64) -> f64 {
     });
     2.0 * (m * k * n) as f64 / t / 1e9
 }
+
+/// Effective GOPS of the same packed GEMM with nibble-packed int4 weight
+/// panels (the W4A8 path): per-row signed 4-bit encodings so the QTensor
+/// narrows to two weights per byte and `gemm_requant_i8` routes through
+/// the n4 unpack-in-registers microkernel. Same activation/output grids
+/// and timing protocol as [`gemm_i8_gops`] so the two numbers are
+/// directly comparable — the W4A8/W8A8 ratio is the panel-bandwidth win.
+pub fn gemm_w4a8_gops(m: usize, k: usize, n: usize, seed: u64) -> f64 {
+    use aimet::quant::{Encoding, QTensor, Requant};
+    use aimet::rng::Rng;
+    use aimet::tensor::Tensor;
+    let mut rng = Rng::new(seed);
+    let wm = Tensor::randn(&mut rng, &[m, k], 0.5);
+    let encs: Vec<Encoding> = (0..m)
+        .map(|r| {
+            let row = &wm.data()[r * k..(r + 1) * k];
+            let mx = row.iter().fold(1e-3f32, |a, &v| a.max(v.abs()));
+            Encoding::from_min_max(-mx, mx, 4, true)
+        })
+        .collect();
+    let qw = QTensor::from_matrix_per_channel(&wm, &encs);
+    assert!(qw.is_nibble_packed(), "4-bit signed rows must nibble-pack");
+    let x_enc = Encoding::from_min_max(-2.0, 2.0, 8, false).signed_window();
+    let out_enc = Encoding::from_min_max(-8.0, 8.0, 8, false).signed_window();
+    let x8: Vec<i8> = (0..k * n).map(|i| ((i * 37 + 11) % 256) as u8 as i8).collect();
+    let rq = Requant {
+        mult: (0..m)
+            .map(|r| qw.row_scale(r) * x_enc.scale / out_enc.scale)
+            .collect(),
+        bias: vec![0.0; m],
+        z_out: out_enc.offset,
+        lo: out_enc.int_min,
+        hi: out_enc.int_max,
+    };
+    let mut out_i8 = vec![0i8; m * n];
+    let t = median_secs(15, || {
+        qw.gemm_requant_i8(&x8, n, &x_enc, &rq, &mut out_i8);
+        std::hint::black_box(&out_i8);
+    });
+    2.0 * (m * k * n) as f64 / t / 1e9
+}

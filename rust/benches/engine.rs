@@ -93,6 +93,21 @@ fn main() {
     let gemm_gops = common::gemm_i8_gops(256, 256, 256, 3400);
     println!("simd tier {tier}: i8 GEMM 256^3 at {gemm_gops:.2} GOP/s");
     report.set("gemm_gops", Json::from(gemm_gops));
+    // The nibble-packed W4A8 tier at the same shape/seed: bench_check.sh
+    // gates the ratio at >= 1.3x (halved weight-panel bandwidth must beat
+    // the in-register unpack cost).
+    let gemm_w4 = common::gemm_w4a8_gops(256, 256, 256, 3400);
+    println!(
+        "simd tier {tier}: w4a8 GEMM 256^3 at {gemm_w4:.2} GOP/s ({:.2}x w8a8)",
+        gemm_w4 / gemm_gops.max(1e-9)
+    );
+    report.set("gemm_w4a8_gops", Json::from(gemm_w4));
+    // Resident packed weight bytes of the served model (W4 layers count
+    // half) — the footprint the AMP search optimizes.
+    report.set(
+        "weight_bytes_mobimini",
+        Json::from(qm.packed_weight_bytes() as f64),
+    );
 
     let (x1, _) = data.batch(0, 1);
     let (x8, _) = data.batch(0, 8);
@@ -259,6 +274,10 @@ fn main() {
         );
         report.set(&format!("engine_b8_sps_{m}"), Json::from(sps));
         report.set(&format!("wavefronts_{m}"), Json::from(fronts));
+        report.set(
+            &format!("weight_bytes_{m}"),
+            Json::from(qm2.packed_weight_bytes() as f64),
+        );
         // Per-model quantization health: clip rate over one profiled
         // forward (history-tracked so saturation drift is visible).
         let session = qm2.profile_session();
@@ -267,6 +286,48 @@ fn main() {
         let rep2 = aimet::obs::ProfileReport::build(&qm2.profile_meta(xb.shape()), &prof2);
         report.set(&format!("clip_rate_{m}"), Json::from(rep2.clip_rate()));
     }
+
+    // Greedy per-layer bit-width search (the W4A8 AMP path) on the
+    // reference model: drop layers to nibble-packed 4-bit weights under a
+    // 60% byte budget and record what it costs in task quality.
+    // bench_check.sh gates packed-weight reduction >= 40% at
+    // |amp_eval_delta| <= 1 pt, and BENCH_history.jsonl tracks both.
+    let amp_eval = |sim: &aimet::quantsim::QuantizationSimModel| {
+        aimet::task::evaluate_sim(sim, model, &data, 4, 16).expect("zoo model evaluates")
+    };
+    let amp_ptq = PtqOptions {
+        adaround: aimet::ptq::AdaroundParameters {
+            iterations: 100,
+            max_rows: 1024,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let amp = aimet::compress::amp_greedy_plan(
+        &g,
+        &calib,
+        &amp_eval,
+        &amp_ptq,
+        &aimet::compress::AmpOptions::default(),
+    )
+    .expect("amp plan on the reference model");
+    let amp_reduction =
+        100.0 * (1.0 - amp.achieved_bytes as f64 / amp.base_bytes.max(1) as f64);
+    let amp_low = amp.bws.values().filter(|&&b| b < 8).count();
+    println!(
+        "amp search: weights {} -> {} B ({amp_reduction:.1}% reduction, {amp_low}/{} layers at 4b), \
+         eval {:.2} -> {:.2} (delta {:+.2} pts)",
+        amp.base_bytes,
+        amp.achieved_bytes,
+        amp.bws.len(),
+        amp.base_score,
+        amp.final_score,
+        amp.eval_delta
+    );
+    report.set("amp_weight_reduction_pct", Json::from(amp_reduction));
+    report.set("amp_eval_delta", Json::from(amp.eval_delta as f64));
+    report.set("amp_weight_bytes", Json::from(amp.achieved_bytes as f64));
+    report.set("amp_low_bw_layers", Json::from(amp_low as f64));
 
     // Closed-loop serving: batch-1 vs coalesced micro-batches.
     let qm = Arc::new(qm);

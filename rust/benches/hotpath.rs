@@ -172,14 +172,30 @@ fn main() {
     let tier = aimet::quant::active_tier();
     println!("simd dispatch tier: {tier}");
     report.set("simd_tier", Json::from(tier.as_str()));
+    let mut i8_256 = 0.0f64;
     for (key, m, k, n) in [
         ("gemm_i8_256_gops", 256usize, 256usize, 256usize),
         ("gemm_i8_skinny_gops", 64, 1024, 64),
     ] {
         let g = common::gemm_i8_gops(m, k, n, 3210);
+        if key == "gemm_i8_256_gops" {
+            i8_256 = g;
+        }
         println!("i8 GEMM {m}x{k}x{n} [{tier}]: {g:.2} GOP/s");
         report.set(key, Json::from(g));
     }
+
+    // Same microbench with nibble-packed int4 weight panels (the W4A8
+    // path): identical grids and protocol, so the ratio against the 8-bit
+    // number isolates the halved weight-panel bandwidth + in-register
+    // unpack cost. The acceptance bar is ≥1.3x at 256^3.
+    let g4 = common::gemm_w4a8_gops(256, 256, 256, 3210);
+    println!(
+        "w4a8 GEMM 256x256x256 [{tier}]: {g4:.2} GOP/s ({:.2}x w8a8)",
+        g4 / i8_256.max(1e-9)
+    );
+    report.set("gemm_w4a8_gops", Json::from(g4));
+    report.set("gemm_w4a8_over_w8a8", Json::from(g4 / i8_256.max(1e-9)));
 
     // Calibration data generation (should be negligible).
     let t_data = common::median_secs(9, || {

@@ -1,0 +1,356 @@
+//! AMP-style greedy per-layer weight bit-width search (W4A8).
+//!
+//! Mirrors the sensitivity-curve sweep of [`super::search`], but over
+//! *weight bit-widths* instead of MAC ratios: every weighted layer is
+//! scored with only its own weights dropped to the low bit-width (4 by
+//! default) while activations and every other layer stay at the W8A8
+//! base. Selection then sweeps an eval-score floor downward over the
+//! observed scores; at each floor every layer whose low-bit score clears
+//! the floor drops, and the first floor whose estimated packed-weight
+//! bytes meet the budget is verified against an exact joint lowering.
+//!
+//! A nibble-packed int4 K-panel is exactly half its 8-bit byte-panel size
+//! (two weights per byte, same `GEMM_MR` row padding), so the per-layer
+//! saving is layer-local and the additive greedy estimate is exact — the
+//! verification pass only guards the rare one-tailed weight tensor that
+//! falls back to byte panels.
+//!
+//! The final mixed-precision model applies AdaRound to the layers that
+//! dropped (rounding error dominates at 4 bits), freezes those encodings,
+//! and re-runs the standard range-setting steps for everything else.
+
+use std::collections::BTreeMap;
+
+use crate::engine;
+use crate::graph::{Graph, Op};
+use crate::pool::parallel_map;
+use crate::ptq::{
+    apply_adaround_for_layers, set_activation_ranges, set_weight_ranges,
+    standard_ptq_pipeline, PtqOptions,
+};
+use crate::quant::{per_channel_weight_encodings, weight_encoding, Quantizer};
+use crate::quantsim::{set_and_freeze_param_encodings, QuantizationSimModel};
+use crate::tensor::Tensor;
+
+/// Search configuration for the mixed-precision bit-width search.
+#[derive(Debug, Clone)]
+pub struct AmpOptions {
+    /// Packed-weight-byte budget relative to the all-8-bit engine lowering
+    /// (0 < r < 1): 0.6 asks for a >= 40% packed-byte reduction.
+    pub weight_budget: f32,
+    /// Low weight bit-width candidate offered to every layer (the high
+    /// candidate is the baseline `ptq.qp.param_bw`, normally 8).
+    pub low_bw: u32,
+    /// Run AdaRound on the dropped layers before the final joint
+    /// simulation.
+    pub adaround_low_bw_layers: bool,
+}
+
+impl Default for AmpOptions {
+    fn default() -> Self {
+        AmpOptions {
+            weight_budget: 0.6,
+            low_bw: 4,
+            adaround_low_bw_layers: true,
+        }
+    }
+}
+
+/// One layer's low-bit sensitivity point.
+#[derive(Debug, Clone)]
+pub struct BwCandidate {
+    pub layer: String,
+    /// Eval score with only this layer's weights at the low bit-width.
+    pub score: f32,
+    /// Packed bytes the layer occupies at the baseline width.
+    pub bytes_base: usize,
+}
+
+/// The search result: per-layer bit-widths plus everything needed for
+/// reports, and the final mixed-precision sim ready for [`engine::lower`].
+#[derive(Clone)]
+pub struct AmpOutcome {
+    /// Chosen weight bit-width for every weighted candidate layer.
+    pub bws: BTreeMap<String, u32>,
+    pub sensitivity: Vec<BwCandidate>,
+    pub base_score: f32,
+    /// Packed weight bytes of the all-8-bit lowered baseline.
+    pub base_bytes: usize,
+    /// First-order greedy estimate (additive per-layer halvings).
+    pub estimated_bytes: usize,
+    /// Exact packed bytes of the final lowered mixed-precision model.
+    pub achieved_bytes: usize,
+    /// The eval-score floor the selection settled on.
+    pub score_floor: f32,
+    /// Eval score of the final mixed-precision sim.
+    pub final_score: f32,
+    /// `final_score - base_score` (the acceptance bar is >= -1 pt).
+    pub eval_delta: f32,
+    /// Final mixed-precision sim: AdaRound'ed low-bit layers with frozen
+    /// encodings, standard range setting elsewhere.
+    pub sim: QuantizationSimModel,
+}
+
+/// Drop one layer's weight quantizer to `bw`, recomputing its encodings
+/// from the current graph weights (mirrors the param branch of
+/// `compute_encodings`, touching nothing else). Returns false for layers
+/// without a param slot.
+pub fn set_layer_weight_bw(sim: &mut QuantizationSimModel, name: &str, bw: u32) -> bool {
+    if !sim.set_param_bw(name, bw) {
+        return false;
+    }
+    let Some(idx) = sim.graph.find(name) else {
+        return false;
+    };
+    let Some(w) = sim.graph.nodes[idx].op.weight() else {
+        return false;
+    };
+    let Some(slot) = &mut sim.params[idx] else {
+        return false;
+    };
+    slot.quantizer = Some(if slot.per_channel {
+        Quantizer::per_channel(
+            per_channel_weight_encodings(w, slot.scheme, slot.bw, slot.symmetric, 0),
+            0,
+        )
+    } else {
+        Quantizer::per_tensor(weight_encoding(w, slot.scheme, slot.bw, slot.symmetric))
+    });
+    sim.invalidate_weight_cache();
+    true
+}
+
+/// Drop EVERY weighted layer's quantizer to `bw` — the forced all-low-bit
+/// configuration `scripts/ci.sh` re-runs the engine suites under. Returns
+/// how many layers changed.
+pub fn set_all_weight_bws(sim: &mut QuantizationSimModel, bw: u32) -> usize {
+    let names: Vec<String> = sim
+        .graph
+        .nodes
+        .iter()
+        .enumerate()
+        .filter(|(i, n)| {
+            matches!(
+                n.op,
+                Op::Conv2d { .. } | Op::DepthwiseConv2d { .. } | Op::Linear { .. }
+            ) && sim.params[*i].is_some()
+        })
+        .map(|(_, n)| n.name.clone())
+        .collect();
+    names
+        .iter()
+        .filter(|name| set_layer_weight_bw(sim, name, bw))
+        .count()
+}
+
+/// Run the sensitivity sweep + greedy per-layer bit-width selection.
+///
+/// `eval` scores a candidate sim (higher is better — the task metric); it
+/// is called from pool workers, so it must be pure w.r.t. its input.
+pub fn amp_greedy_plan(
+    g: &Graph,
+    calib: &[Tensor],
+    eval: &(dyn Fn(&QuantizationSimModel) -> f32 + Sync),
+    ptq: &PtqOptions,
+    opts: &AmpOptions,
+) -> Result<AmpOutcome, String> {
+    // W8A8 baseline: the exact model the budget is measured against.
+    let base_sim = standard_ptq_pipeline(g, calib, ptq).sim;
+    let base_score = eval(&base_sim);
+    let base_qm = engine::lower(&base_sim)?;
+    let base_bytes = base_qm.packed_weight_bytes();
+    let layer_bytes: BTreeMap<String, usize> = base_qm
+        .weight_layers()
+        .into_iter()
+        .map(|(name, _bw, bytes)| (name, bytes))
+        .collect();
+
+    // Candidates: weighted single-matrix layers. LSTMs stay at the
+    // baseline width (the engine keeps them f32 anyway).
+    let cands: Vec<String> = base_sim
+        .graph
+        .nodes
+        .iter()
+        .enumerate()
+        .filter(|(i, n)| {
+            matches!(
+                n.op,
+                Op::Conv2d { .. } | Op::DepthwiseConv2d { .. } | Op::Linear { .. }
+            ) && base_sim.params[*i].is_some()
+        })
+        .map(|(_, n)| n.name.clone())
+        .collect();
+
+    let low_bw = opts.low_bw;
+    let points: Vec<Option<BwCandidate>> = parallel_map(cands.len(), 1, |i| {
+        let name = &cands[i];
+        let mut sim = base_sim.clone();
+        if !set_layer_weight_bw(&mut sim, name, low_bw) {
+            return None;
+        }
+        let score = eval(&sim);
+        if !score.is_finite() {
+            // A blown-up candidate must not poison the floor sweep.
+            return None;
+        }
+        Some(BwCandidate {
+            layer: name.clone(),
+            score,
+            bytes_base: layer_bytes.get(name.as_str()).copied().unwrap_or(0),
+        })
+    });
+    let sensitivity: Vec<BwCandidate> = points.into_iter().flatten().collect();
+
+    // Selection: sweep the score floor downward over observed scores.
+    let target = (opts.weight_budget as f64 * base_bytes as f64) as usize;
+    let mut floors: Vec<f32> = sensitivity.iter().map(|c| c.score).collect();
+    floors.push(base_score);
+    floors.sort_by(|a, b| b.total_cmp(a));
+    floors.dedup();
+
+    let select = |floor: f32| -> (Vec<String>, usize) {
+        let mut low = Vec::new();
+        let mut bytes = base_bytes;
+        for c in &sensitivity {
+            if c.score >= floor {
+                low.push(c.layer.clone());
+                bytes -= c.bytes_base / 2;
+            }
+        }
+        (low, bytes)
+    };
+
+    // Exact verification lowers a jointly-dropped clone of the base sim
+    // (AdaRound never changes packed sizes, so it can wait until the
+    // floor is settled) and measures real packed bytes.
+    let verified_bytes = |low: &[String]| -> Result<usize, String> {
+        let mut sim = base_sim.clone();
+        for name in low {
+            set_layer_weight_bw(&mut sim, name, low_bw);
+        }
+        Ok(engine::lower(&sim)?.packed_weight_bytes())
+    };
+
+    let mut chosen = None;
+    for &floor in &floors {
+        let (low, est) = select(floor);
+        if est > target {
+            continue;
+        }
+        let actual = verified_bytes(&low)?;
+        if actual <= target {
+            chosen = Some((floor, low, est));
+            break;
+        }
+    }
+    let (score_floor, low, estimated_bytes) = match chosen {
+        Some(c) => c,
+        None => {
+            // Even all-low-bit misses the budget: take it anyway.
+            let (low, est) = select(f32::NEG_INFINITY);
+            (f32::NEG_INFINITY, low, est)
+        }
+    };
+
+    // Final mixed-precision sim. Order matters: `set_param_bw` clears the
+    // frozen flag, so widths are set *before* freezing the AdaRound
+    // encodings; `compute_encodings` and the range-setting passes then
+    // skip the frozen low-bit slots.
+    let mut sim = if opts.adaround_low_bw_layers && !low.is_empty() {
+        let bw_map: BTreeMap<String, u32> =
+            low.iter().map(|n| (n.clone(), low_bw)).collect();
+        let ada = apply_adaround_for_layers(
+            &base_sim.graph,
+            ptq.qp,
+            &ptq.cfg,
+            calib,
+            &ptq.adaround,
+            &bw_map,
+        );
+        let mut sim = QuantizationSimModel::new(ada.graph, ptq.cfg.clone(), ptq.qp);
+        for name in &low {
+            sim.set_param_bw(name, low_bw);
+        }
+        set_and_freeze_param_encodings(&mut sim, &ada.param_encodings);
+        sim
+    } else {
+        let mut sim =
+            QuantizationSimModel::new(base_sim.graph.clone(), ptq.cfg.clone(), ptq.qp);
+        for name in &low {
+            sim.set_param_bw(name, low_bw);
+        }
+        sim
+    };
+    sim.compute_encodings(calib);
+    set_weight_ranges(&mut sim, ptq.weight_scheme);
+    set_activation_ranges(&mut sim, calib, ptq.act_scheme);
+
+    let final_score = eval(&sim);
+    let achieved_bytes = engine::lower(&sim)?.packed_weight_bytes();
+
+    let mut bws: BTreeMap<String, u32> = cands
+        .iter()
+        .map(|n| (n.clone(), ptq.qp.param_bw))
+        .collect();
+    for name in &low {
+        bws.insert(name.clone(), low_bw);
+    }
+
+    Ok(AmpOutcome {
+        bws,
+        sensitivity,
+        base_score,
+        base_bytes,
+        estimated_bytes,
+        achieved_bytes,
+        score_floor,
+        final_score,
+        eval_delta: final_score - base_score,
+        sim,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zoo;
+
+    #[test]
+    fn amp_meets_byte_budget_on_mobimini() {
+        let g = zoo::build("mobimini", 21).unwrap();
+        let ds = crate::data::SynthImageNet::new(22);
+        let calib: Vec<Tensor> = (0..2).map(|i| ds.batch(i, 4).0).collect();
+        let (xe, _) = ds.batch(100, 8);
+        // A cheap smooth proxy score: negative output distortion vs FP32.
+        let y0 = g.forward(&xe);
+        let eval = move |sim: &QuantizationSimModel| -> f32 {
+            -sim.forward(&xe).sq_err(&y0)
+        };
+        let ptq = PtqOptions::default();
+        let opts = AmpOptions {
+            weight_budget: 0.6,
+            // Keep the test cheap: rounding optimization is covered by the
+            // AdaRound suite.
+            adaround_low_bw_layers: false,
+            ..AmpOptions::default()
+        };
+        let out = amp_greedy_plan(&g, &calib, &eval, &ptq, &opts).unwrap();
+        assert!(!out.sensitivity.is_empty());
+        assert!(
+            out.achieved_bytes as f64 <= 0.6 * out.base_bytes as f64,
+            "achieved {} vs base {}",
+            out.achieved_bytes,
+            out.base_bytes
+        );
+        // The additive estimate is exact for nibble-packed layers, so it
+        // can only over-count savings when a layer falls back to bytes.
+        assert!(out.estimated_bytes <= out.achieved_bytes + out.base_bytes / 10);
+        // Every candidate layer got a width, and dropped layers are 4-bit.
+        let dropped = out.bws.values().filter(|&&bw| bw == 4).count();
+        assert!(dropped > 0, "expected at least one 4-bit layer");
+        let qm = crate::engine::lower(&out.sim).unwrap();
+        for (name, bw, _) in qm.weight_layers() {
+            assert_eq!(out.bws.get(&name).copied().unwrap_or(8), bw, "{name}");
+        }
+    }
+}

@@ -18,10 +18,15 @@
 //! [`compress_then_ptq`] chains straight into the fig 4.1 PTQ pipeline:
 //! compress → BN fold → CLE → quantize.
 
+pub mod amp;
 pub mod prune;
 pub mod search;
 pub mod svd;
 
+pub use amp::{
+    amp_greedy_plan, set_all_weight_bws, set_layer_weight_bw, AmpOptions, AmpOutcome,
+    BwCandidate,
+};
 pub use prune::{find_prune_candidates, prune_channels, PruneCandidate, PruneReport};
 pub use search::{
     greedy_plan, CandidatePoint, CompressionKind, CompressionPlan, LayerChoice,

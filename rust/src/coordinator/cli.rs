@@ -10,6 +10,7 @@
 //! aimet ptq        --model M [...]     fig 4.1 pipeline + eval report
 //! aimet qat        --model M [...]     fig 5.2 pipeline + eval report
 //! aimet compress   --model M [...]     greedy SVD/prune search + PTQ compose
+//! aimet quantize-amp --model M [...]   greedy W4/W8 per-layer bit-width search
 //! aimet infer      --model M [...]     lower to the integer engine + validate vs sim
 //! aimet serve-bench --model M [...]    batched int8 serving latency/throughput
 //! aimet debug      [--effort E]         fig 4.5 debugging flow
@@ -23,7 +24,7 @@
 //! stray positionals — exits 2 with the valid-flag list.
 
 use super::experiments::{self, Effort};
-use crate::compress::{compress_then_ptq, greedy_plan, SearchOptions};
+use crate::compress::{amp_greedy_plan, compress_then_ptq, greedy_plan, AmpOptions, SearchOptions};
 use crate::engine::{
     lower, run_serve_bench, run_serve_bench_with, BatchConfig, ServeMonitor, ServeOptions,
 };
@@ -190,6 +191,15 @@ COMMANDS
                                  greedy spatial-SVD/channel-prune search to a
                                  MAC budget, then compress -> BN fold -> CLE ->
                                  quantize
+  quantize-amp --model M [--weight-budget F --low-bw B --adaround true
+                --adaround-iters N --calib-batches K --eval-batches K
+                --effort fast|full]
+                                 greedy per-layer weight bit-width search
+                                 (AMP): drop insensitive layers to B bits
+                                 (default 4, nibble-packed in the engine)
+                                 until packed weight bytes fit F x the
+                                 all-8-bit baseline (default 0.6), AdaRound
+                                 the dropped layers, report eval delta
   infer    --model M [--batch N --batches K --threads T --effort fast|full]
                      [--profile --trace OUT.json --ranges OUT.csv]
                                  train + PTQ-calibrate, lower to the integer-only
@@ -244,6 +254,19 @@ fn command_spec(cmd: &str) -> Option<(&'static [&'static str], usize)> {
                 "effort",
                 "calib-batches",
                 "eval-batches",
+            ],
+            0,
+        ),
+        "quantize-amp" => (
+            &[
+                "model",
+                "weight-budget",
+                "low-bw",
+                "adaround",
+                "adaround-iters",
+                "calib-batches",
+                "eval-batches",
+                "effort",
             ],
             0,
         ),
@@ -326,6 +349,7 @@ pub fn run(argv: &[String]) -> i32 {
         "ptq" => cmd_ptq(&args),
         "qat" => cmd_qat(&args),
         "compress" => cmd_compress(&args),
+        "quantize-amp" => cmd_quantize_amp(&args),
         "infer" => cmd_infer(&args),
         "serve-bench" => cmd_serve_bench(&args),
         "debug" => cmd_debug(&args),
@@ -488,6 +512,73 @@ fn cmd_compress(args: &Args) -> Result<i32, String> {
     Ok(0)
 }
 
+fn cmd_quantize_amp(args: &Args) -> Result<i32, String> {
+    let model = args.model()?;
+    let budget = args.f32_or("weight-budget", 0.6)?;
+    if !(budget > 0.0 && budget < 1.0) {
+        return Err(format!("--weight-budget must be in (0, 1), got {budget}"));
+    }
+    let low_bw = args.usize_or("low-bw", 4)? as u32;
+    if !(2..=4).contains(&low_bw) {
+        // > 4-bit weights don't nibble-pack, so dropping to them saves no
+        // packed bytes — the budget could never be met.
+        return Err(format!("--low-bw must be in [2, 4], got {low_bw}"));
+    }
+    let use_adaround = args.bool_or("adaround", true)?;
+    let effort = args.effort()?;
+    let calib_batches = args.usize_or("calib-batches", 4)?;
+    let eval_batches = args.usize_or("eval-batches", 3)?;
+    let ptq = PtqOptions {
+        adaround: crate::ptq::AdaroundParameters {
+            iterations: args.usize_or("adaround-iters", 200)?,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let (g, data, _) = experiments::trained_model(&model, effort, 1234);
+    let calib = data.calibration(calib_batches, 16);
+    let fp32 = evaluate_graph(&g, &model, &data, 6, 16)?;
+    // `model` was validated above, so this cannot fail on model name.
+    let eval = |sim: &crate::quantsim::QuantizationSimModel| {
+        evaluate_sim(sim, &model, &data, eval_batches, 16).expect("validated model")
+    };
+    let opts = AmpOptions {
+        weight_budget: budget,
+        low_bw,
+        adaround_low_bw_layers: use_adaround,
+    };
+    let out = amp_greedy_plan(&g, &calib, &eval, &ptq, &opts)?;
+    println!(
+        "sensitivity: {} layers probed at {low_bw}b (baseline {} = {:.2}, {} B packed)",
+        out.sensitivity.len(),
+        metrics::metric_name(&model),
+        out.base_score,
+        out.base_bytes
+    );
+    for c in &out.sensitivity {
+        println!(
+            "  {:<14} {low_bw}b score {:.2}  ({} B at 8b)",
+            c.layer, c.score, c.bytes_base
+        );
+    }
+    for (layer, bw) in &out.bws {
+        println!("plan: {layer} -> {bw}b");
+    }
+    let qm = lower(&out.sim).map_err(|e| format!("lowering failed: {e}"))?;
+    println!("{}", qm.describe());
+    println!(
+        "{model}: FP32 {fp32:.2} | W8A8 {:.2} | mixed W{low_bw}/W8 {:.2} (delta {:+.2}) | \
+         packed weights {} -> {} B ({:.1}%)",
+        out.base_score,
+        out.final_score,
+        out.eval_delta,
+        out.base_bytes,
+        out.achieved_bytes,
+        100.0 * out.achieved_bytes as f64 / out.base_bytes.max(1) as f64
+    );
+    Ok(0)
+}
+
 /// Train (fast) + PTQ-calibrate + lower one zoo model onto the integer
 /// engine, prepare serving samples. Shared by `infer` and `serve-bench`.
 fn lowered_model(
@@ -528,6 +619,11 @@ fn cmd_infer(args: &Args) -> Result<i32, String> {
         crate::quant::simd::active_tier(),
         crate::pool::num_threads()
     );
+    // Per-node weight widths: mixed-precision (quantize-amp) models show
+    // which layers run nibble-packed W4 panels and what they weigh.
+    for (name, bw, bytes) in qm.weight_layers() {
+        println!("  weight {name:<14} {bw:>2}b  {bytes:>8} B packed");
+    }
 
     let out_enc = *qm.output_encoding();
     let mut scratch = crate::engine::Scratch::new();
@@ -1049,6 +1145,25 @@ mod tests {
     #[test]
     fn compress_rejects_out_of_range_target() {
         assert_eq!(run(&sv(&["compress", "--target-ratio", "1.5"])), 2);
+    }
+
+    /// `quantize-amp` validates its flags before any training or search
+    /// work starts (all exit 2, no panic).
+    #[test]
+    fn quantize_amp_validates_cheaply() {
+        assert_eq!(run(&sv(&["quantize-amp", "--weight-budget", "1.5"])), 2);
+        assert_eq!(run(&sv(&["quantize-amp", "--weight-budget", "0"])), 2);
+        assert_eq!(run(&sv(&["quantize-amp", "--weight-budget", "half"])), 2);
+        // Only widths that nibble-pack (<= 4) can save packed bytes.
+        assert_eq!(run(&sv(&["quantize-amp", "--low-bw", "8"])), 2);
+        assert_eq!(run(&sv(&["quantize-amp", "--low-bw", "1"])), 2);
+        assert_eq!(run(&sv(&["quantize-amp", "--low-bw", "four"])), 2);
+        assert_eq!(run(&sv(&["quantize-amp", "--model", "mobimimi"])), 2);
+        assert_eq!(run(&sv(&["quantize-amp", "--adaround", "maybe"])), 2);
+        assert_eq!(run(&sv(&["quantize-amp", "--bogus", "1"])), 2);
+        // And the AMP flags belong to quantize-amp alone.
+        assert_eq!(run(&sv(&["infer", "--weight-budget", "0.5"])), 2);
+        assert_eq!(run(&sv(&["compress", "--low-bw", "4"])), 2);
     }
 
     /// The engine commands validate flags and model names before any

@@ -1365,6 +1365,56 @@ impl QuantizedModel {
         })
     }
 
+    /// Total packed weight bytes the GEMMs stream: nibble panels count two
+    /// weights per byte, byte panels one — the quantity the AMP search
+    /// budgets and the serve gauge exports.
+    pub fn packed_weight_bytes(&self) -> usize {
+        self.nodes
+            .iter()
+            .map(|n| match &n.op {
+                QOp::Conv { qw, .. } | QOp::Depthwise { qw, .. } | QOp::Linear { qw, .. } => {
+                    qw.packed_weight_bytes()
+                }
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Per-weighted-layer `(name, weight bit-width, packed weight bytes)`
+    /// in node order — what the CLI plan report prints per node.
+    pub fn weight_layers(&self) -> Vec<(String, u32, usize)> {
+        self.nodes
+            .iter()
+            .filter_map(|n| match &n.op {
+                QOp::Conv { qw, .. } | QOp::Depthwise { qw, .. } | QOp::Linear { qw, .. } => {
+                    Some((n.name.clone(), qw.bw(), qw.packed_weight_bytes()))
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Weighted-layer bit-width census, e.g. `"8b"` or `"3x4b+5x8b"`.
+    pub fn weight_bw_summary(&self) -> String {
+        let mut per_bw: std::collections::BTreeMap<u32, usize> = std::collections::BTreeMap::new();
+        for n in &self.nodes {
+            if let QOp::Conv { qw, .. } | QOp::Depthwise { qw, .. } | QOp::Linear { qw, .. } =
+                &n.op
+            {
+                *per_bw.entry(qw.bw()).or_default() += 1;
+            }
+        }
+        match per_bw.len() {
+            0 => "none".to_string(),
+            1 => format!("{}b", per_bw.keys().next().unwrap()),
+            _ => per_bw
+                .iter()
+                .map(|(bw, c)| format!("{c}x{bw}b"))
+                .collect::<Vec<_>>()
+                .join("+"),
+        }
+    }
+
     /// Number of activations fused into their producer's requantization
     /// (counts every `Identity`/`FusedAway` slot, including `Add`s folded
     /// by the epilogue-fusion pass).
@@ -1402,7 +1452,8 @@ impl QuantizedModel {
         let (fronts, width) = self.wavefront_summary();
         format!(
             "lowered {} nodes: {} fused activations, {} fused epilogues, {} f32 islands, \
-             {} wavefronts (max width {}), input {}b, output {}b, simd {}{}",
+             {} wavefronts (max width {}), input {}b, output {}b, weights {} ({} B packed), \
+             simd {}{}",
             self.nodes.len(),
             self.fused_activations(),
             self.fused_epilogues(),
@@ -1411,6 +1462,8 @@ impl QuantizedModel {
             width,
             self.input_enc.bw,
             self.output_encoding().bw,
+            self.weight_bw_summary(),
+            self.packed_weight_bytes(),
             simd::active_tier(),
             if islands == 0 { " — integer-only" } else { "" }
         )
@@ -2077,10 +2130,24 @@ mod tests {
         assert_eq!(qm.wavefront_summary(), (11, 1));
         let want = format!(
             "lowered 16 nodes: 5 fused activations, 2 fused epilogues, 0 f32 islands, \
-             11 wavefronts (max width 1), input 8b, output 8b, simd {} — integer-only",
+             11 wavefronts (max width 1), input 8b, output 8b, weights 8b ({} B packed), \
+             simd {} — integer-only",
+            qm.packed_weight_bytes(),
             simd::active_tier()
         );
         assert_eq!(qm.describe(), want);
+        // All-8-bit resmini: no layer nibble-packs (real weight tensors
+        // reach ±127 on the 8-bit grid), so the packed bytes are the byte
+        // stripe panels — rows padded to the GEMM_MR block, one byte each.
+        let by_panel: usize = qm
+            .weight_layers()
+            .iter()
+            .map(|(_, bw, b)| {
+                assert_eq!(*bw, 8);
+                *b
+            })
+            .sum();
+        assert_eq!(by_panel, qm.packed_weight_bytes());
         // Folding must not change a single output int.
         let data = crate::task::TaskData::new("resmini", 333).unwrap();
         let (x, _) = data.batch(0, 4);

@@ -60,6 +60,10 @@ pub struct MemoryPlan {
     pub total_bytes: usize,
     /// Number of distinct (non-aliased, non-empty) buffers planned.
     pub buffers: usize,
+    /// Packed weight bytes the model's GEMMs stream (shape-independent;
+    /// carried here so one plan line reports total resident footprint —
+    /// nibble-packed W4A8 layers show up as half their W8A8 size).
+    pub weight_bytes: usize,
     /// Identity stamp of the model this plan was built for — the
     /// [`Scratch`] cache key, so a scratch reused across models re-plans
     /// instead of executing against a stale layout.
@@ -92,11 +96,13 @@ impl MemoryPlan {
     /// One-line summary for CLI reports.
     pub fn describe(&self) -> String {
         format!(
-            "arena plan: peak {:.1} KiB across {} buffers ({:.1} KiB unshared, {:.2}x reuse)",
+            "arena plan: peak {:.1} KiB across {} buffers ({:.1} KiB unshared, {:.2}x reuse), \
+             {:.1} KiB packed weights",
             self.peak_bytes as f64 / 1024.0,
             self.buffers,
             self.total_bytes as f64 / 1024.0,
-            self.reuse_factor()
+            self.reuse_factor(),
+            self.weight_bytes as f64 / 1024.0
         )
     }
 
@@ -398,6 +404,7 @@ pub(crate) fn plan(model: &QuantizedModel, input_shape: &[usize]) -> MemoryPlan 
         peak_bytes: arena.heap_end,
         total_bytes: total,
         buffers,
+        weight_bytes: model.packed_weight_bytes(),
         model_id: model.model_id,
         wavefronts: fronts,
         front_live_bytes,

@@ -250,6 +250,9 @@ pub struct ServeStats {
     /// Fault-injection bookkeeping: panics / delays the plan fired.
     pub injected_panics: u64,
     pub injected_delays: u64,
+    /// Packed weight bytes of the served model (static per lowering;
+    /// mixed-precision W4A8 models report roughly half their W8A8 size).
+    pub weight_bytes: usize,
 }
 
 impl ServeStats {
@@ -550,6 +553,7 @@ struct ServeMetrics {
     panicked: registry::Counter,
     queue_depth: registry::Gauge,
     fill_ratio: registry::Gauge,
+    weight_bytes: registry::Gauge,
     batch_ms: registry::Histogram,
 }
 
@@ -604,6 +608,11 @@ impl ServeMetrics {
                 "Lifetime rows served over configured batch capacity",
                 l,
             ),
+            weight_bytes: r.gauge(
+                "aimet_serve_weight_bytes",
+                "Packed weight bytes of the served model (nibble-packed W4 layers count half)",
+                l,
+            ),
             batch_ms: r.histogram(
                 "aimet_serve_batch_ms",
                 "Per-batch serving time (assembly + forward + replies), milliseconds",
@@ -626,6 +635,9 @@ fn batcher_loop(
     };
     let label = resolve_label(&opts, &model);
     let metrics = ServeMetrics::resolve(&label);
+    // Static model facts published once: the resident weight footprint.
+    stats.weight_bytes = model.packed_weight_bytes();
+    metrics.weight_bytes.set(stats.weight_bytes as f64);
     // Fault plan resolution happens ONCE: the per-batch cost of disabled
     // injection is this Option being None (the env gate behind env_plan
     // is itself one relaxed load, paid here, never in the loop).
@@ -1621,6 +1633,11 @@ mod tests {
         assert_eq!(reg.counter("aimet_serve_panicked_total", "", l).get(), 0);
         let fill = reg.gauge("aimet_serve_fill_ratio", "", l).get();
         assert!((fill - stats.fill_ratio()).abs() < 1e-12, "fill {fill}");
+        // The resident weight footprint is published once at startup and
+        // mirrors both the stats field and the model itself.
+        let wb = reg.gauge("aimet_serve_weight_bytes", "", l).get();
+        assert!(stats.weight_bytes > 0, "served model has packed weights");
+        assert_eq!(wb, stats.weight_bytes as f64);
     }
 
     #[test]

@@ -262,7 +262,15 @@ impl DriftMonitor {
             } else {
                 (clip_hi + informative_lo) as f64 / elems as f64
             };
-            let rails = (spec.hi as i32 - spec.lo as i32).max(0) as f64;
+            // Utilization is judged against the span the node can actually
+            // produce: the clamp rails intersected with the encoding's
+            // integer grid. On narrow grids (4-bit weights shrink some
+            // output encodings well inside the i8 container) the rails
+            // alone overstate the reachable span and would flag healthy
+            // nodes as under-utilized.
+            let span_lo = spec.lo.max(spec.grid_lo);
+            let span_hi = spec.hi.min(spec.grid_hi);
+            let rails = (span_hi as i32 - span_lo as i32).max(0) as f64;
             let utilization = if elems == 0 {
                 0.0
             } else if rails <= 0.0 {
@@ -560,6 +568,49 @@ mod tests {
         assert_eq!(r.nodes[0].verdict, Verdict::UnderUtilized);
         assert!(r.nodes[0].utilization < 0.10);
         assert!(r.recalibrate);
+    }
+
+    #[test]
+    fn narrow_grid_spanned_fully_is_not_under_utilized() {
+        // A node whose output encoding spans a narrow integer grid (the
+        // shape 4-bit-weight layers produce) inside full i8 clamp rails:
+        // traffic covering the *grid* is healthy even though it covers a
+        // sliver of the rails. The denominator must be the rails∩grid
+        // intersection, not the raw rails.
+        let m = DriftMonitor::new(
+            vec![Some(NodeSpec {
+                name: "w4_conv".to_string(),
+                lo: -128,
+                hi: 127,
+                zero: 0,
+                grid_lo: -8,
+                grid_hi: 7,
+            })],
+            cfg(),
+        );
+        for _ in 0..6 {
+            feed(&m, 0, -8, 7, 0, 0, 1000);
+        }
+        let r = m.report();
+        assert_eq!(r.nodes[0].verdict, Verdict::Ok, "{:?}", r.nodes[0]);
+        assert!(r.nodes[0].utilization >= 1.0, "{}", r.nodes[0].utilization);
+        assert!(!r.recalibrate);
+        // But traffic shrinking inside that narrow grid still flags.
+        let m2 = DriftMonitor::new(
+            vec![Some(NodeSpec {
+                name: "w4_conv".to_string(),
+                lo: -128,
+                hi: 127,
+                zero: 0,
+                grid_lo: -8,
+                grid_hi: 7,
+            })],
+            cfg(),
+        );
+        for _ in 0..6 {
+            feed(&m2, 0, 0, 1, 0, 0, 1000);
+        }
+        assert_eq!(m2.report().nodes[0].verdict, Verdict::UnderUtilized);
     }
 
     #[test]

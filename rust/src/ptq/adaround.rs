@@ -113,6 +113,38 @@ pub fn apply_adaround(
     batches: &[Tensor],
     params: &AdaroundParameters,
 ) -> AdaroundResult {
+    adaround_with(g, qp, cfg, batches, params, |_| Some(qp.param_bw))
+}
+
+/// AdaRound restricted to the layers in `layer_bws`, each optimized on the
+/// grid of its *own* weight bit-width (the AMP search adarounds exactly the
+/// layers it drops to 4 bits). Unlisted layers keep their FP32 weights in
+/// the working graph — the sequential asymmetric reconstruction still sees
+/// every committed upstream layer — and get no frozen encoding, so a later
+/// `compute_encodings` ranges them normally at the sim's default bit-width.
+pub fn apply_adaround_for_layers(
+    g: &Graph,
+    qp: QuantParams,
+    cfg: &SimConfig,
+    batches: &[Tensor],
+    params: &AdaroundParameters,
+    layer_bws: &BTreeMap<String, u32>,
+) -> AdaroundResult {
+    adaround_with(g, qp, cfg, batches, params, |name| {
+        layer_bws.get(name).copied()
+    })
+}
+
+/// Shared AdaRound driver: `bw_of` decides, per weighted layer, whether to
+/// optimize it (`Some(bit-width)`) or leave it untouched (`None`).
+fn adaround_with(
+    g: &Graph,
+    qp: QuantParams,
+    cfg: &SimConfig,
+    batches: &[Tensor],
+    params: &AdaroundParameters,
+    bw_of: impl Fn(&str) -> Option<u32>,
+) -> AdaroundResult {
     assert!(!batches.is_empty(), "AdaRound requires calibration data");
     let mut out = g.clone();
     let mut encodings = BTreeMap::new();
@@ -132,13 +164,14 @@ pub fn apply_adaround(
             // fully-connected layers, §4.6).
             _ => continue,
         };
+        let Some(bw) = bw_of(&node.name) else { continue };
 
         // The quantization grid this layer is optimized against (derived
         // from the ORIGINAL weights, as AIMET freezes it).
         let encs: Vec<Encoding> = if per_channel {
-            per_channel_weight_encodings(weight, qp.scheme, qp.param_bw, cfg.param_symmetric, 0)
+            per_channel_weight_encodings(weight, qp.scheme, bw, cfg.param_symmetric, 0)
         } else {
-            vec![weight_encoding(weight, qp.scheme, qp.param_bw, cfg.param_symmetric)]
+            vec![weight_encoding(weight, qp.scheme, bw, cfg.param_symmetric)]
         };
 
         // Inputs from the partially-quantized model (earlier layers in

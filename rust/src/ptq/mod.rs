@@ -21,7 +21,10 @@ mod debug;
 mod pipeline;
 mod range_setting;
 
-pub use adaround::{apply_adaround, AdaroundLayerReport, AdaroundParameters, AdaroundResult};
+pub use adaround::{
+    apply_adaround, apply_adaround_for_layers, AdaroundLayerReport, AdaroundParameters,
+    AdaroundResult,
+};
 pub use bias_correction::{
     analytic_bias_correction, empirical_bias_correction, expected_relu,
 };

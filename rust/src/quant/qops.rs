@@ -119,7 +119,8 @@ pub struct QTensor {
     /// grouped into blocks of [`GEMM_MR`], each block stored k-major
     /// interleaved (`panels[blk·MR·K + k·MR + r]`), tail rows zero-padded.
     /// The inner GEMM loop then reads one contiguous `MR`-wide stripe per
-    /// `k` instead of `MR` strided rows. Present iff `data_i8` is.
+    /// `k` instead of `MR` strided rows. Present iff `data_i8` is and the
+    /// tensor did not nibble-pack (see `panels_n4`).
     panels: Option<Vec<i8>>,
     /// K-pair broadcast form of `panels` for the x86 `pmaddwd`
     /// microkernel: per block, per even `k`, [`GEMM_MR`] i32 entries each
@@ -136,6 +137,16 @@ pub struct QTensor {
     /// four k-steps of the widening MAC at once. Present iff `panels` is
     /// — built on x86-64 and aarch64, skipped elsewhere.
     panels_quads: Option<Vec<i32>>,
+    /// Nibble-packed int4 K-panel: the stripe panel with two weights per
+    /// byte, present when every integer fits the signed nibble window
+    /// [−8, 7] (the 4-bit signed grid; one-tailed 4-bit rows go up to 15
+    /// and stay on the byte path). Stripe element `k·MR + r` lives in byte
+    /// `k·MR/2 + r/2`, low nibble for even `r`, high for odd — so each
+    /// `k` step is `MR/2` adjacent bytes and the kernels sign-extend
+    /// nibbles to i8 in registers. When this form exists the byte panel
+    /// forms above are dropped (the whole point is halved weight traffic);
+    /// `data_i8` stays for the row-major Linear dot path.
+    panels_n4: Option<Vec<u8>>,
 }
 
 /// Build the i8 row-major copy + the three K-panel forms (i8 stripes,
@@ -218,6 +229,57 @@ fn pack_weight_i8(
     (Some(flat), Some(panels), pairs, quads)
 }
 
+/// Build the nibble-packed int4 mirror of the stripe panel, or `None`
+/// when any value falls outside the signed nibble window [−8, 7]. Layout:
+/// per block, stripe element `k·MR + r` → byte `k·(MR/2) + r/2`, even `r`
+/// in the low nibble, odd `r` in the high one — `MR/2` adjacent bytes per
+/// `k` step, tail rows zero-padded like the byte stripe.
+fn pack_weight_n4(rows: usize, cols: usize, data: &[i32]) -> Option<Vec<u8>> {
+    if data.iter().any(|&v| !(-8..=7).contains(&v)) {
+        return None;
+    }
+    let blocks = rows.div_ceil(GEMM_MR);
+    let stride = GEMM_MR / 2 * cols; // bytes per block (GEMM_MR is even)
+    let mut n4 = vec![0u8; blocks * stride];
+    for blk in 0..blocks {
+        let i0 = blk * GEMM_MR;
+        let rb = (rows - i0).min(GEMM_MR);
+        let dst = &mut n4[blk * stride..(blk + 1) * stride];
+        for r in 0..rb {
+            let src = &data[(i0 + r) * cols..(i0 + r + 1) * cols];
+            for (k, &v) in src.iter().enumerate() {
+                let nib = (v as u8) & 0x0f;
+                dst[k * (GEMM_MR / 2) + r / 2] |= if r & 1 == 0 { nib } else { nib << 4 };
+            }
+        }
+    }
+    Some(n4)
+}
+
+/// All packed weight forms of one integer matrix: the i8 row-major copy,
+/// the byte stripe/pair/quad panels, and the int4 nibble panel. When the
+/// nibble form exists it *replaces* the byte panel forms (halved GEMM
+/// weight traffic is the point of W4A8); `data_i8` is kept either way for
+/// the batch-major Linear dot kernel.
+#[allow(clippy::type_complexity)]
+fn pack_weight_forms(
+    rows: usize,
+    cols: usize,
+    data: &[i32],
+) -> (
+    Option<Vec<i8>>,
+    Option<Vec<i8>>,
+    Option<Vec<i32>>,
+    Option<Vec<i32>>,
+    Option<Vec<u8>>,
+) {
+    let (data_i8, panels, pairs, quads) = pack_weight_i8(rows, cols, data);
+    match pack_weight_n4(rows, cols, data) {
+        Some(n4) => (data_i8, None, None, None, Some(n4)),
+        None => (data_i8, panels, pairs, quads, None),
+    }
+}
+
 impl QTensor {
     /// Quantize a 2-D weight matrix. Weights must use a symmetric encoding
     /// — asymmetric weights would add the data-dependent cross term the
@@ -230,7 +292,8 @@ impl QTensor {
         let row_sums = (0..rows)
             .map(|r| data[r * cols..(r + 1) * cols].iter().map(|&v| v as i64).sum())
             .collect();
-        let (data_i8, panels, panels_pairs, panels_quads) = pack_weight_i8(rows, cols, &data);
+        let (data_i8, panels, panels_pairs, panels_quads, panels_n4) =
+            pack_weight_forms(rows, cols, &data);
         QTensor {
             rows,
             cols,
@@ -242,6 +305,7 @@ impl QTensor {
             panels,
             panels_pairs,
             panels_quads,
+            panels_n4,
         }
     }
 
@@ -276,7 +340,8 @@ impl QTensor {
         let row_sums = (0..rows)
             .map(|r| data[r * cols..(r + 1) * cols].iter().map(|&v| v as i64).sum())
             .collect();
-        let (data_i8, panels, panels_pairs, panels_quads) = pack_weight_i8(rows, cols, &data);
+        let (data_i8, panels, panels_pairs, panels_quads, panels_n4) =
+            pack_weight_forms(rows, cols, &data);
         QTensor {
             rows,
             cols,
@@ -288,6 +353,7 @@ impl QTensor {
             panels,
             panels_pairs,
             panels_quads,
+            panels_n4,
         }
     }
 
@@ -315,18 +381,45 @@ impl QTensor {
         &self.enc
     }
 
+    /// Weight bit-width (all rows of a per-channel tensor share it).
+    pub fn bw(&self) -> u32 {
+        self.enc.bw
+    }
+
     /// Integer values of output row `r` (the engine's depthwise kernel
     /// walks rows directly).
     pub fn row_ints(&self, r: usize) -> &[i32] {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
 
-    /// True when the weights also exist in packed i8 form (row-major copy
-    /// + K-panel layout). False only for tensors with rows on the unsigned
-    /// symmetric grid whose values exceed 127; integer kernels then widen
-    /// from the i32 form — bit-identical, just slower.
+    /// True when the weights also exist in a packed K-panel form (byte
+    /// stripe or int4 nibble). False only for tensors with rows on the
+    /// unsigned symmetric grid whose values exceed 127; integer kernels
+    /// then widen from the i32 form — bit-identical, just slower.
     pub fn is_packed(&self) -> bool {
-        self.panels.is_some()
+        self.panels.is_some() || self.panels_n4.is_some()
+    }
+
+    /// True when the GEMM streams the nibble-packed int4 weight form (two
+    /// weights per byte) — the W4A8 fast path.
+    pub fn is_nibble_packed(&self) -> bool {
+        self.panels_n4.is_some()
+    }
+
+    /// Bytes the GEMM actually streams for this weight tensor: the nibble
+    /// panel when present, else the byte stripe panel, else the i8 row
+    /// copy, else the raw i32 form. The engine's plan reporting and the
+    /// AMP weight-byte budget count exactly this.
+    pub fn packed_weight_bytes(&self) -> usize {
+        if let Some(p) = &self.panels_n4 {
+            p.len()
+        } else if let Some(p) = &self.panels {
+            p.len()
+        } else if let Some(d) = &self.data_i8 {
+            d.len()
+        } else {
+            4 * self.data.len()
+        }
     }
 
     /// The packed K-panel stripe of row block `blk` (layout: `k·MR + r`,
@@ -356,6 +449,16 @@ impl QTensor {
         self.panels_quads
             .as_ref()
             .map(|p| &p[blk * GEMM_MR * kq_n..(blk + 1) * GEMM_MR * kq_n])
+    }
+
+    /// The nibble-packed int4 panel of row block `blk` (layout: stripe
+    /// element `k·MR + r` in byte `k·(MR/2) + r/2`, even rows in the low
+    /// nibble). None when not nibble-packed.
+    fn n4_panel(&self, blk: usize) -> Option<&[u8]> {
+        let stride = GEMM_MR / 2 * self.cols;
+        self.panels_n4
+            .as_ref()
+            .map(|p| &p[blk * stride..(blk + 1) * stride])
     }
 
     /// True when the x86 VNNI kernel's biased (u8) activation path cannot
@@ -421,7 +524,18 @@ impl QTensor {
         debug_assert_eq!(panel.len(), k * nrt, "panel must be [K, nrt]");
         debug_assert_eq!(acc.len(), GEMM_MR * nrt, "acc must be [MR, nrt]");
         acc.fill(0);
-        if let Some(pw) = self.panel(blk) {
+        if let Some(pw4) = self.n4_panel(blk) {
+            // W4A8 fast path: weights stream as nibbles, sign-extended to
+            // i8 in registers inside each tier — identical i32 terms, so
+            // still bit-exact. (4-bit |w|max ≤ 8 keeps the VNNI u8-bias
+            // headroom for any real K, but keep the check anyway.)
+            let tier = if tier == SimdTier::Vnni && !self.u8_bias_headroom_ok() {
+                SimdTier::Avx2
+            } else {
+                tier
+            };
+            simd::acc_tile_n4_dispatch(tier, pw4, panel, k, nrt, acc);
+        } else if let Some(pw) = self.panel(blk) {
             // The VNNI kernel accumulates biased u8 activations; without
             // headroom for that, run the (still vectorized) AVX2 tier.
             let tier = if tier == SimdTier::Vnni && !self.u8_bias_headroom_ok() {

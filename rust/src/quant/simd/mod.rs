@@ -252,6 +252,114 @@ pub(crate) fn acc_tile_scalar_cols(
     }
 }
 
+/// Sign-extend the low nibble of a packed int4 weight byte: shift the
+/// nibble to the top of the byte, then arithmetic-shift it back down.
+#[inline]
+pub(crate) fn n4_lo(b: u8) -> i8 {
+    ((b << 4) as i8) >> 4
+}
+
+/// Sign-extend the high nibble of a packed int4 weight byte.
+#[inline]
+pub(crate) fn n4_hi(b: u8) -> i8 {
+    (b as i8) >> 4
+}
+
+/// The [`GEMM_MR`] weights of one `k` step of a nibble panel, sign-
+/// extended to i8 (rows 2i in the low nibble of byte i, rows 2i+1 high).
+#[inline]
+pub(crate) fn n4_row_weights(pw4: &[u8], kk: usize) -> [i8; GEMM_MR] {
+    let b = &pw4[kk * (GEMM_MR / 2)..kk * (GEMM_MR / 2) + GEMM_MR / 2];
+    [n4_lo(b[0]), n4_hi(b[0]), n4_lo(b[1]), n4_hi(b[1])]
+}
+
+/// Two adjacent k-steps' nibble weights as the two i16 halves of one i32
+/// — composed on the fly, bit-identical to the prebuilt `pairs` panel
+/// entry the `pmaddwd` kernels broadcast.
+#[cfg(target_arch = "x86_64")]
+#[inline]
+pub(crate) fn n4_pair(w0: i8, w1: i8) -> i32 {
+    ((w0 as i16 as u16 as u32) | ((w1 as i16 as u16 as u32) << 16)) as i32
+}
+
+/// Four adjacent k-steps' nibble weights as the four little-endian bytes
+/// of one i32 — composed on the fly, bit-identical to the prebuilt
+/// `quads` panel entry the `vpdpbusd`/`sdot` kernels broadcast.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[inline]
+pub(crate) fn n4_quad(w: [i8; 4]) -> i32 {
+    i32::from_le_bytes([w[0] as u8, w[1] as u8, w[2] as u8, w[3] as u8])
+}
+
+/// Accumulate `acc[r, j] += Σ_k w4[k, r] · panel[k, j]` for one
+/// nibble-packed weight block. `pw4` is the int4 mirror of the stripe
+/// panel (`QTensor::pack_weight_n4` layout: byte `k·(MR/2) + r/2`, even
+/// rows low nibble); `panel`/`acc` follow the [`acc_tile_dispatch`]
+/// contract. Every tier sign-extends the nibbles to i8 in registers and
+/// then runs the exact arithmetic of its 8-bit kernel, so results are
+/// bit-equal to packing the same ints through the byte path.
+pub(crate) fn acc_tile_n4_dispatch(
+    tier: SimdTier,
+    pw4: &[u8],
+    panel: &[i8],
+    k: usize,
+    nrt: usize,
+    acc: &mut [i32],
+) {
+    debug_assert_eq!(pw4.len(), k * (GEMM_MR / 2));
+    debug_assert_eq!(panel.len(), k * nrt);
+    debug_assert_eq!(acc.len(), GEMM_MR * nrt);
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the tier was runtime-detected (or explicitly listed by
+        // `available_tiers`), so the required features are present.
+        SimdTier::Vnni => unsafe { x86::acc_tile_vnni_n4(pw4, panel, k, nrt, acc) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above — AVX2 verified at detection time.
+        SimdTier::Avx2 => unsafe { x86::acc_tile_avx2_n4(pw4, panel, k, nrt, acc) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above — SSE4.1 verified at detection time.
+        SimdTier::Sse41 => unsafe { x86::acc_tile_sse41_n4(pw4, panel, k, nrt, acc) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: dotprod verified at detection time.
+        SimdTier::NeonDot => unsafe { neon::acc_tile_neondot_n4(pw4, panel, k, nrt, acc) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        SimdTier::Neon => unsafe { neon::acc_tile_neon_n4(pw4, panel, k, nrt, acc) },
+        _ => acc_tile_n4_scalar_cols(pw4, panel, k, nrt, 0, nrt, acc),
+    }
+}
+
+/// The scalar reference accumulation over a nibble panel, columns
+/// `j0..j1` — both the scalar tier's whole kernel and every SIMD tier's
+/// column tail. Mirrors [`acc_tile_scalar_cols`] with the weight read
+/// swapped for in-register nibble sign-extension.
+pub(crate) fn acc_tile_n4_scalar_cols(
+    pw4: &[u8],
+    panel: &[i8],
+    k: usize,
+    nrt: usize,
+    j0: usize,
+    j1: usize,
+    acc: &mut [i32],
+) {
+    let (a0, rest) = acc.split_at_mut(nrt);
+    let (a1, rest) = rest.split_at_mut(nrt);
+    let (a2, a3) = rest.split_at_mut(nrt);
+    for kk in 0..k {
+        let w = n4_row_weights(pw4, kk);
+        let (v0, v1, v2, v3) = (w[0] as i32, w[1] as i32, w[2] as i32, w[3] as i32);
+        let prow = &panel[kk * nrt + j0..kk * nrt + j1];
+        for (j, &xv) in prow.iter().enumerate() {
+            let xv = xv as i32;
+            a0[j0 + j] += v0 * xv;
+            a1[j0 + j] += v1 * xv;
+            a2[j0 + j] += v2 * xv;
+            a3[j0 + j] += v3 * xv;
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // i8 dot product (the batch-major Linear kernel's inner loop).
 // ---------------------------------------------------------------------------
@@ -622,6 +730,55 @@ mod tests {
             );
             let w_enc = Encoding::from_min_max(-1.0, 1.0, 8, true);
             let qw = QTensor::from_matrix(&w, &w_enc);
+            assert!(qw.is_packed());
+            for &nrt in &[1usize, 5, 8, 15, 16, 17, 31, 32, 33, 64] {
+                let panel = i8_seq(k * nrt, nrt);
+                for blk in 0..m.div_ceil(GEMM_MR) {
+                    let i0 = blk * GEMM_MR;
+                    let mut want = vec![0i32; GEMM_MR * nrt];
+                    for r in 0..(m - i0).min(GEMM_MR) {
+                        let wrow = qw.row_ints(i0 + r);
+                        for j in 0..nrt {
+                            want[r * nrt + j] = (0..k)
+                                .map(|kk| wrow[kk] * panel[kk * nrt + j] as i32)
+                                .sum();
+                        }
+                    }
+                    for &tier in &available_tiers() {
+                        let mut acc = vec![0i32; GEMM_MR * nrt];
+                        qw.acc_tile_tier(tier, blk, &panel, nrt, &mut acc);
+                        assert_eq!(acc, want, "{tier} m{m} k{k} nrt{nrt} blk{blk}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Nibble sign-extension round-trips every byte: both nibbles land in
+    /// [−8, 7] and re-packing the low 4 bits reproduces the byte.
+    #[test]
+    fn nibble_sign_extension_covers_all_bytes() {
+        for b in 0..=255u8 {
+            let (lo, hi) = (n4_lo(b), n4_hi(b));
+            assert!((-8..=7).contains(&(lo as i32)), "byte {b:#x} lo {lo}");
+            assert!((-8..=7).contains(&(hi as i32)), "byte {b:#x} hi {hi}");
+            assert_eq!(((hi as u8) << 4) | ((lo as u8) & 0x0f), b, "byte {b:#x}");
+        }
+    }
+
+    /// Every runnable tier's nibble-panel microkernel is bit-exact against
+    /// the naive i32 loop — the W4A8 contract. Signed 4-bit weights land
+    /// on [−7, 7], so the tensor always takes the nibble path.
+    #[test]
+    fn acc_tile_n4_all_tiers_match_naive() {
+        for &(m, k) in &[(4usize, 7usize), (4, 8), (6, 12), (1, 3), (5, 16), (8, 33)] {
+            let w = Tensor::new(
+                &[m, k],
+                i8_seq(m * k, m + k).iter().map(|&v| v as f32 / 127.0).collect(),
+            );
+            let w_enc = Encoding::from_min_max(-1.0, 1.0, 4, true);
+            let qw = QTensor::from_matrix(&w, &w_enc);
+            assert!(qw.is_nibble_packed(), "signed 4-bit weights nibble-pack");
             assert!(qw.is_packed());
             for &nrt in &[1usize, 5, 8, 15, 16, 17, 31, 32, 33, 64] {
                 let panel = i8_seq(k * nrt, nrt);

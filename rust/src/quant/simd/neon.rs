@@ -14,7 +14,7 @@
 //! exactly-representable bounds, and `vcvtnq_s32_f32` rounds ties-to-even
 //! exactly like `f32::round_ties_even`.
 
-use super::acc_tile_scalar_cols;
+use super::{acc_tile_n4_scalar_cols, acc_tile_scalar_cols, n4_quad, n4_row_weights};
 use crate::quant::{GEMM_MR, GEMM_NR};
 use std::arch::aarch64::*;
 
@@ -58,6 +58,54 @@ pub(crate) unsafe fn acc_tile_neon(
     }
     if jb < nrt {
         acc_tile_scalar_cols(pw, panel, k, nrt, jb, nrt, acc);
+    }
+}
+
+/// NEON 4×16 microkernel over the nibble-packed int4 panel: identical to
+/// [`acc_tile_neon`] except each row's weight broadcast is sign-extended
+/// from its nibble (shift-left / arithmetic-shift-right pair in a scalar
+/// register) before the `vdup`. The activation side and the widening MAC
+/// network are untouched, so the i32 terms — and the result — are
+/// bit-identical to the byte kernel on the same ints.
+pub(crate) unsafe fn acc_tile_neon_n4(
+    pw4: &[u8],
+    panel: &[i8],
+    k: usize,
+    nrt: usize,
+    acc: &mut [i32],
+) {
+    let pp = panel.as_ptr();
+    let ap = acc.as_mut_ptr();
+    let mut jb = 0usize;
+    while jb + GEMM_NR <= nrt {
+        let mut lanes = [[vdupq_n_s32(0); 4]; GEMM_MR];
+        for kk in 0..k {
+            let v = vld1q_s8(pp.add(kk * nrt + jb));
+            let lo = vmovl_s8(vget_low_s8(v));
+            let hi = vmovl_s8(vget_high_s8(v));
+            let x = [
+                vget_low_s16(lo),
+                vget_high_s16(lo),
+                vget_low_s16(hi),
+                vget_high_s16(hi),
+            ];
+            let wk = n4_row_weights(pw4, kk);
+            for (r, lane) in lanes.iter_mut().enumerate() {
+                let w = vdup_n_s16(wk[r] as i16);
+                for (q, l) in lane.iter_mut().enumerate() {
+                    *l = vmlal_s16(*l, x[q], w);
+                }
+            }
+        }
+        for (r, lane) in lanes.iter().enumerate() {
+            for (q, l) in lane.iter().enumerate() {
+                vst1q_s32(ap.add(r * nrt + jb + 4 * q), *l);
+            }
+        }
+        jb += GEMM_NR;
+    }
+    if jb < nrt {
+        acc_tile_n4_scalar_cols(pw4, panel, k, nrt, jb, nrt, acc);
     }
 }
 
@@ -151,6 +199,90 @@ pub(crate) unsafe fn acc_tile_neondot(
     for kk in 4 * kq_full..k {
         for r in 0..GEMM_MR {
             let w = pw[kk * GEMM_MR + r] as i32;
+            for j in 0..jb {
+                acc[r * nrt + j] += w * panel[kk * nrt + j] as i32;
+            }
+        }
+    }
+}
+
+/// NEON+dotprod 4×16 microkernel over the nibble panel (cf.
+/// [`acc_tile_neondot`]): the k-quad weight broadcast is composed on the
+/// fly from four sign-extended nibbles; `sdot` is signed×signed so no
+/// bias correction exists to adjust. Bit-identical to the byte kernel on
+/// the same ints.
+pub(crate) unsafe fn acc_tile_neondot_n4(
+    pw4: &[u8],
+    panel: &[i8],
+    k: usize,
+    nrt: usize,
+    acc: &mut [i32],
+) {
+    let kq_full = k / 4;
+    let pp = panel.as_ptr();
+    let ap = acc.as_mut_ptr();
+    let mut jb = 0usize;
+    while jb + GEMM_NR <= nrt {
+        let mut lanes = [[vdupq_n_s32(0); 4]; GEMM_MR];
+        for kq in 0..kq_full {
+            let k0 = 4 * kq;
+            // Four consecutive activation rows, byte-transposed so each
+            // 32-bit lane holds one column's [x(k0)..x(k0+3)] quad — the
+            // dual of the quad weight layout.
+            let a = vld1q_s8(pp.add(k0 * nrt + jb));
+            let b = vld1q_s8(pp.add((k0 + 1) * nrt + jb));
+            let c = vld1q_s8(pp.add((k0 + 2) * nrt + jb));
+            let d = vld1q_s8(pp.add((k0 + 3) * nrt + jb));
+            let t0 = vzip1q_s8(a, b);
+            let t1 = vzip2q_s8(a, b);
+            let t2 = vzip1q_s8(c, d);
+            let t3 = vzip2q_s8(c, d);
+            let x = [
+                // cols 0..3, 4..7, 8..11, 12..15
+                vreinterpretq_s8_s16(vzip1q_s16(
+                    vreinterpretq_s16_s8(t0),
+                    vreinterpretq_s16_s8(t2),
+                )),
+                vreinterpretq_s8_s16(vzip2q_s16(
+                    vreinterpretq_s16_s8(t0),
+                    vreinterpretq_s16_s8(t2),
+                )),
+                vreinterpretq_s8_s16(vzip1q_s16(
+                    vreinterpretq_s16_s8(t1),
+                    vreinterpretq_s16_s8(t3),
+                )),
+                vreinterpretq_s8_s16(vzip2q_s16(
+                    vreinterpretq_s16_s8(t1),
+                    vreinterpretq_s16_s8(t3),
+                )),
+            ];
+            let w0 = n4_row_weights(pw4, k0);
+            let w1 = n4_row_weights(pw4, k0 + 1);
+            let w2 = n4_row_weights(pw4, k0 + 2);
+            let w3 = n4_row_weights(pw4, k0 + 3);
+            for (r, lane) in lanes.iter_mut().enumerate() {
+                let w = vreinterpretq_s8_s32(vdupq_n_s32(n4_quad([w0[r], w1[r], w2[r], w3[r]])));
+                for (q, l) in lane.iter_mut().enumerate() {
+                    *l = sdot_128(*l, x[q], w);
+                }
+            }
+        }
+        for (r, lane) in lanes.iter().enumerate() {
+            for (q, l) in lane.iter().enumerate() {
+                vst1q_s32(ap.add(r * nrt + jb + 4 * q), *l);
+            }
+        }
+        jb += GEMM_NR;
+    }
+    if jb < nrt {
+        acc_tile_n4_scalar_cols(pw4, panel, k, nrt, jb, nrt, acc);
+    }
+    // K%4 tail rows: plain signed accumulation over the vectorized
+    // columns (scalar-cols above already covered jb..nrt for all k).
+    for kk in 4 * kq_full..k {
+        let wk = n4_row_weights(pw4, kk);
+        for (r, &wv) in wk.iter().enumerate() {
+            let w = wv as i32;
             for j in 0..jb {
                 acc[r * nrt + j] += w * panel[kk * nrt + j] as i32;
             }

@@ -22,7 +22,7 @@
 //! round commutes with the scalar round-then-clamp because rte is
 //! monotone and fixes integer bounds.
 
-use super::acc_tile_scalar_cols;
+use super::{acc_tile_n4_scalar_cols, acc_tile_scalar_cols, n4_pair, n4_quad, n4_row_weights};
 use crate::quant::{GEMM_MR, GEMM_NR};
 use std::arch::x86_64::*;
 
@@ -229,6 +229,204 @@ pub(crate) unsafe fn acc_tile_sse41(
     }
     if jb < nrt {
         acc_tile_scalar_cols(pw, panel, k, nrt, jb, nrt, acc);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Nibble-packed int4 (W4A8) GEMM microkernels. Each is its 8-bit sibling
+// with one change: the weight broadcast is composed on the fly from
+// sign-extended nibbles (mask-and-shift in scalar registers) instead of
+// read from a prebuilt pair/quad panel. The activation data path and the
+// multiply-accumulate network are untouched, so every i32 term — and
+// therefore the result — is bit-identical to running the same ints
+// through the byte kernels.
+// ---------------------------------------------------------------------------
+
+/// AVX2 4×16 microkernel over the nibble panel (cf. [`acc_tile_avx2`]).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn acc_tile_avx2_n4(
+    pw4: &[u8],
+    panel: &[i8],
+    k: usize,
+    nrt: usize,
+    acc: &mut [i32],
+) {
+    let kp_n = k.div_ceil(2);
+    let pp = panel.as_ptr();
+    let ap = acc.as_mut_ptr();
+    let mut jb = 0usize;
+    while jb + GEMM_NR <= nrt {
+        let mut lanes = [[_mm256_setzero_si256(); 2]; GEMM_MR];
+        for kp in 0..kp_n {
+            let k0 = 2 * kp;
+            let va =
+                _mm256_cvtepi8_epi16(_mm_loadu_si128(pp.add(k0 * nrt + jb) as *const __m128i));
+            let (vb, w1) = if k0 + 1 < k {
+                (
+                    _mm256_cvtepi8_epi16(_mm_loadu_si128(
+                        pp.add((k0 + 1) * nrt + jb) as *const __m128i,
+                    )),
+                    n4_row_weights(pw4, k0 + 1),
+                )
+            } else {
+                // Odd K: the pair's high weight is zero, so any activation
+                // value would do — zeros keep the load in bounds.
+                (_mm256_setzero_si256(), [0i8; GEMM_MR])
+            };
+            let w0 = n4_row_weights(pw4, k0);
+            let lo = _mm256_unpacklo_epi16(va, vb);
+            let hi = _mm256_unpackhi_epi16(va, vb);
+            for (r, lane) in lanes.iter_mut().enumerate() {
+                let w = _mm256_set1_epi32(n4_pair(w0[r], w1[r]));
+                lane[0] = _mm256_add_epi32(lane[0], _mm256_madd_epi16(lo, w));
+                lane[1] = _mm256_add_epi32(lane[1], _mm256_madd_epi16(hi, w));
+            }
+        }
+        for (r, lane) in lanes.iter().enumerate() {
+            let out0 = _mm256_permute2x128_si256::<0x20>(lane[0], lane[1]);
+            let out1 = _mm256_permute2x128_si256::<0x31>(lane[0], lane[1]);
+            _mm256_storeu_si256(ap.add(r * nrt + jb) as *mut __m256i, out0);
+            _mm256_storeu_si256(ap.add(r * nrt + jb + 8) as *mut __m256i, out1);
+        }
+        jb += GEMM_NR;
+    }
+    if jb < nrt {
+        acc_tile_n4_scalar_cols(pw4, panel, k, nrt, jb, nrt, acc);
+    }
+}
+
+/// VNNI 4×16 microkernel over the nibble panel (cf. [`acc_tile_vnni`]).
+/// The u8-bias correction reads its per-row weight sums from the nibbles;
+/// 4-bit |w|max ≤ 8 means the biased accumulation has i32 headroom for
+/// any practical K (the caller still checks).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn acc_tile_vnni_n4(
+    pw4: &[u8],
+    panel: &[i8],
+    k: usize,
+    nrt: usize,
+    acc: &mut [i32],
+) {
+    let kq_full = k / 4;
+    // Per-row weight sums over the vectorized K range, for the u8-bias
+    // correction (tail rows below never enter the biased path).
+    let mut wsum = [0i32; GEMM_MR];
+    for kk in 0..4 * kq_full {
+        let w = n4_row_weights(pw4, kk);
+        for (s, &wv) in wsum.iter_mut().zip(&w) {
+            *s += wv as i32;
+        }
+    }
+    let biasv = _mm256_set1_epi8(-128i8); // 0x80 in every byte
+    let pp = panel.as_ptr();
+    let ap = acc.as_mut_ptr();
+    let mut jb = 0usize;
+    while jb + GEMM_NR <= nrt {
+        let mut lanes = [[_mm256_setzero_si256(); 2]; GEMM_MR];
+        for kq in 0..kq_full {
+            let k0 = 4 * kq;
+            // Four consecutive activation rows, 16 columns each …
+            let a = _mm_loadu_si128(pp.add(k0 * nrt + jb) as *const __m128i);
+            let b = _mm_loadu_si128(pp.add((k0 + 1) * nrt + jb) as *const __m128i);
+            let c = _mm_loadu_si128(pp.add((k0 + 2) * nrt + jb) as *const __m128i);
+            let d = _mm_loadu_si128(pp.add((k0 + 3) * nrt + jb) as *const __m128i);
+            // … byte-transposed so each 32-bit lane holds one column's
+            // [x(k0), x(k0+1), x(k0+2), x(k0+3)] — the dual of the quad
+            // weight layout.
+            let t0 = _mm_unpacklo_epi8(a, b);
+            let t1 = _mm_unpackhi_epi8(a, b);
+            let t2 = _mm_unpacklo_epi8(c, d);
+            let t3 = _mm_unpackhi_epi8(c, d);
+            let u0 = _mm_unpacklo_epi16(t0, t2); // cols 0..3
+            let u1 = _mm_unpackhi_epi16(t0, t2); // cols 4..7
+            let u2 = _mm_unpacklo_epi16(t1, t3); // cols 8..11
+            let u3 = _mm_unpackhi_epi16(t1, t3); // cols 12..15
+            let x_lo = _mm256_xor_si256(_mm256_set_m128i(u1, u0), biasv);
+            let x_hi = _mm256_xor_si256(_mm256_set_m128i(u3, u2), biasv);
+            let w0 = n4_row_weights(pw4, k0);
+            let w1 = n4_row_weights(pw4, k0 + 1);
+            let w2 = n4_row_weights(pw4, k0 + 2);
+            let w3 = n4_row_weights(pw4, k0 + 3);
+            for (r, lane) in lanes.iter_mut().enumerate() {
+                let w = _mm256_set1_epi32(n4_quad([w0[r], w1[r], w2[r], w3[r]]));
+                lane[0] = dpbusd_256(lane[0], x_lo, w);
+                lane[1] = dpbusd_256(lane[1], x_hi, w);
+            }
+        }
+        for (r, lane) in lanes.iter().enumerate() {
+            let corr = _mm256_set1_epi32(128 * wsum[r]);
+            _mm256_storeu_si256(
+                ap.add(r * nrt + jb) as *mut __m256i,
+                _mm256_sub_epi32(lane[0], corr),
+            );
+            _mm256_storeu_si256(
+                ap.add(r * nrt + jb + 8) as *mut __m256i,
+                _mm256_sub_epi32(lane[1], corr),
+            );
+        }
+        jb += GEMM_NR;
+    }
+    if jb < nrt {
+        acc_tile_n4_scalar_cols(pw4, panel, k, nrt, jb, nrt, acc);
+    }
+    // K%4 tail rows: plain signed accumulation over the vectorized
+    // columns (the scalar-cols call above already covered jb..nrt).
+    for kk in 4 * kq_full..k {
+        let w = n4_row_weights(pw4, kk);
+        for (r, &wv) in w.iter().enumerate() {
+            let wv = wv as i32;
+            for j in 0..jb {
+                acc[r * nrt + j] += wv * panel[kk * nrt + j] as i32;
+            }
+        }
+    }
+}
+
+/// SSE4.1 4×8 microkernel over the nibble panel (cf. [`acc_tile_sse41`]).
+#[target_feature(enable = "sse4.1")]
+pub(crate) unsafe fn acc_tile_sse41_n4(
+    pw4: &[u8],
+    panel: &[i8],
+    k: usize,
+    nrt: usize,
+    acc: &mut [i32],
+) {
+    let kp_n = k.div_ceil(2);
+    let pp = panel.as_ptr();
+    let ap = acc.as_mut_ptr();
+    let mut jb = 0usize;
+    while jb + GEMM_NR / 2 <= nrt {
+        let mut lanes = [[_mm_setzero_si128(); 2]; GEMM_MR];
+        for kp in 0..kp_n {
+            let k0 = 2 * kp;
+            let va = _mm_cvtepi8_epi16(_mm_loadl_epi64(pp.add(k0 * nrt + jb) as *const __m128i));
+            let (vb, w1) = if k0 + 1 < k {
+                (
+                    _mm_cvtepi8_epi16(_mm_loadl_epi64(
+                        pp.add((k0 + 1) * nrt + jb) as *const __m128i,
+                    )),
+                    n4_row_weights(pw4, k0 + 1),
+                )
+            } else {
+                (_mm_setzero_si128(), [0i8; GEMM_MR])
+            };
+            let w0 = n4_row_weights(pw4, k0);
+            let lo = _mm_unpacklo_epi16(va, vb);
+            let hi = _mm_unpackhi_epi16(va, vb);
+            for (r, lane) in lanes.iter_mut().enumerate() {
+                let w = _mm_set1_epi32(n4_pair(w0[r], w1[r]));
+                lane[0] = _mm_add_epi32(lane[0], _mm_madd_epi16(lo, w));
+                lane[1] = _mm_add_epi32(lane[1], _mm_madd_epi16(hi, w));
+            }
+        }
+        for (r, lane) in lanes.iter().enumerate() {
+            _mm_storeu_si128(ap.add(r * nrt + jb) as *mut __m128i, lane[0]);
+            _mm_storeu_si128(ap.add(r * nrt + jb + 4) as *mut __m128i, lane[1]);
+        }
+        jb += GEMM_NR / 2;
+    }
+    if jb < nrt {
+        acc_tile_n4_scalar_cols(pw4, panel, k, nrt, jb, nrt, acc);
     }
 }
 

@@ -76,8 +76,36 @@ fn lowered(
     let mut opts = PtqOptions::default();
     opts.cfg.per_channel = per_channel;
     let out = standard_ptq_pipeline(&g, &calib, &opts);
-    let qm = lower(&out.sim).expect("lowering");
-    (out.sim, qm, data)
+    let mut sim = out.sim;
+    // scripts/ci.sh re-runs this whole suite with every weight tensor
+    // forced down to nibble-packed 4-bit panels (W4A8 everywhere).
+    if std::env::var("AIMET_FORCE_W4").as_deref() == Ok("1") {
+        assert!(aimet::compress::set_all_weight_bws(&mut sim, 4) > 0);
+    }
+    let qm = lower(&sim).expect("lowering");
+    (sim, qm, data)
+}
+
+/// Calibrate a PTQ sim, drop every weight tensor to 4 bits, and lower:
+/// the all-W4A8 configuration of the nibble-packed engine path.
+fn lowered_w4(
+    model: &str,
+    per_channel: bool,
+) -> (
+    QuantizationSimModel,
+    aimet::engine::QuantizedModel,
+    TaskData,
+) {
+    let g = zoo::build(model, 900).unwrap();
+    let data = TaskData::new(model, 901).unwrap();
+    let calib = data.calibration(3, 8);
+    let mut opts = PtqOptions::default();
+    opts.cfg.per_channel = per_channel;
+    let mut sim = standard_ptq_pipeline(&g, &calib, &opts).sim;
+    let dropped = aimet::compress::set_all_weight_bws(&mut sim, 4);
+    assert!(dropped > 0, "{model}: no weighted layers to drop");
+    let qm = lower(&sim).expect("lowering W4A8");
+    (sim, qm, data)
 }
 
 #[test]
@@ -216,6 +244,65 @@ fn wavefront_executor_is_bit_identical_across_thread_counts() {
     // resmini folds both residual Adds, speechmini sinks both LSTM halves.
     assert_eq!(lowered("resmini", false).1.fused_epilogues(), 2);
     assert_eq!(lowered("speechmini", false).1.fused_epilogues(), 2);
+}
+
+#[test]
+fn w4a8_engine_matches_sim_across_zoo() {
+    // The PR-10 tentpole property: with EVERY weight tensor at 4 bits the
+    // lowered engine runs nibble-packed int4 K-panels (unpacked to i8 in
+    // registers inside the SIMD tiers), and must still agree with the
+    // quantsim qdq forward to within one step — across the zoo, batch
+    // sizes {1, 3, 8}, both weight granularities, and thread caps {1, 8}.
+    for model in zoo::MODEL_NAMES {
+        for per_channel in [false, true] {
+            let (sim, qm, data) = lowered_w4(model, per_channel);
+            // Every weighted layer lowered at 4 bits.
+            for (name, bw, _) in qm.weight_layers() {
+                assert_eq!(bw, 4, "{model}/{name} lowered at {bw}b");
+            }
+            for &bs in &[1usize, 3, 8] {
+                let batches: Vec<Tensor> =
+                    (0..2).map(|i| data.batch(76_000 + i, bs).0).collect();
+                let (worst, gt1, total) = agreement(&sim, &qm, &batches);
+                assert_within_one_step(
+                    &format!("{model}/w4/pc{per_channel}/bs{bs}"),
+                    worst,
+                    gt1,
+                    total,
+                );
+            }
+            // The nibble-packed fast path is bit-identical to the i32
+            // reference engine at every thread cap.
+            let (x, _) = data.batch(77_000, 3);
+            let want = qm.forward_int_ref(&x);
+            for &threads in &[1usize, 8] {
+                let got = aimet::pool::with_thread_cap(threads, || {
+                    let mut s = aimet::engine::Scratch::new();
+                    qm.forward_with(&x, &mut s).to_owned_tensor()
+                });
+                assert_eq!(
+                    got.data(),
+                    want.data(),
+                    "{model}/w4/pc{per_channel}/t{threads} not bit-identical to ref"
+                );
+            }
+        }
+    }
+    // Nibble packing shrinks the resident weight footprint vs W8A8 (half
+    // per packed layer; one-tailed tensors may fall back to byte panels).
+    let (_, qm8, _) = lowered("mobimini", false);
+    let (_, qm4, _) = lowered_w4("mobimini", false);
+    assert!(
+        qm4.packed_weight_bytes() < qm8.packed_weight_bytes(),
+        "W4 {} B vs W8 {} B",
+        qm4.packed_weight_bytes(),
+        qm8.packed_weight_bytes()
+    );
+    assert!(
+        qm4.describe().contains("weights 4b"),
+        "{}",
+        qm4.describe()
+    );
 }
 
 #[test]

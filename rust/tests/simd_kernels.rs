@@ -131,6 +131,129 @@ fn unsigned_fallback_rows_match_rowwise_ref_over_grid() {
     }
 }
 
+/// Nibble-packed int4 rows (the W4A8 tentpole): 4-bit signed per-channel
+/// encodings narrow to two-weights-per-byte K-panels, and the packed GEMM
+/// — nibbles sign-extended to i8 in registers inside whatever tier
+/// dispatch selects — must equal both the i32 requantizing route over the
+/// flat weights and the naive rowwise reference, bit-for-bit, over odd K
+/// and every blocking boundary. This is the pack→unpack round trip at the
+/// public-API level: any mispacked or misextracted nibble shifts whole
+/// accumulators and fails equality.
+#[test]
+fn int4_nibble_gemm_matches_i32_route_and_ref_over_grid() {
+    let mut rng = Rng::new(9006);
+    for &m in &GRID {
+        for &k in &GRID {
+            for &n in &[1usize, 5, 16, 17, 65] {
+                let w = Tensor::randn(&mut rng, &[m, k], 0.6);
+                let encs: Vec<Encoding> = (0..m)
+                    .map(|r| {
+                        let row = &w.data()[r * k..(r + 1) * k];
+                        let mx = row.iter().fold(1e-3f32, |a, &v| a.max(v.abs()));
+                        Encoding::from_min_max(-mx, mx, 4, true)
+                    })
+                    .collect();
+                assert_eq!(encs[0].int_min, -7, "restricted signed 4-bit grid");
+                assert_eq!(encs[0].int_max, 7);
+                let qw = QTensor::from_matrix_per_channel(&w, &encs);
+                assert!(
+                    qw.is_nibble_packed(),
+                    "({m},{k}) signed 4-bit rows nibble-pack"
+                );
+                let x = Tensor::rand_uniform(&mut rng, &[k, n], -1.0, 3.0);
+                let x_enc = Encoding::from_min_max(-1.0, 3.0, 8, false);
+                assert_ne!(x_enc.offset, 0, "want a nonzero zero-point");
+                let x_enc_p = x_enc.signed_window();
+                let out_enc = Encoding::from_min_max(-4.0, 4.0, 8, false);
+                let out_enc_p = out_enc.signed_window();
+                let b: Vec<f32> = rng.normal_vec(m, 0.1);
+                let rq = |oe: &Encoding| Requant {
+                    mult: (0..m)
+                        .map(|r| qw.row_scale(r) * x_enc.scale / oe.scale)
+                        .collect(),
+                    bias: b.iter().map(|v| v / oe.scale).collect(),
+                    z_out: oe.offset,
+                    lo: oe.int_min,
+                    hi: oe.int_max,
+                };
+                let x_i32: Vec<i32> = x.data().iter().map(|&v| x_enc.quantize(v)).collect();
+                let x_i8: Vec<i8> =
+                    x.data().iter().map(|&v| x_enc_p.quantize(v) as i8).collect();
+                // Nibble-unpacking microkernel vs the i32 route (flat
+                // weights, no panels) on a re-centred grid.
+                let mut out32 = vec![0i32; m * n];
+                qw.gemm_requant(&x_i32, n, &x_enc, &rq(&out_enc), 1, n, &mut out32);
+                let mut out8 = vec![0i8; m * n];
+                qw.gemm_requant_i8(&x_i8, n, &x_enc_p, &rq(&out_enc_p), &mut out8);
+                for (i, (&q8, &q32)) in out8.iter().zip(&out32).enumerate() {
+                    assert_eq!(q8 as i32, q32 - 128, "({m},{k},{n}) elem {i}");
+                }
+                // And the blocked f32-epilogue path against the naive
+                // rowwise reference on the same 4-bit grids.
+                let got = qw.matmul(&x, &x_enc, Some(&b));
+                for r in 0..m {
+                    let wrow = Tensor::new(&[1, k], w.data()[r * k..(r + 1) * k].to_vec());
+                    let want =
+                        quantized_matmul_i32_ref(&wrow, &encs[r], &x, &x_enc, Some(&b[r..r + 1]));
+                    assert_eq!(
+                        &got.data()[r * n..(r + 1) * n],
+                        want.data(),
+                        "({m},{k},{n}) row {r}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// One-tailed 4-bit rows land on the unsigned [0, 15] grid: 15 overflows
+/// the signed nibble window, so the tensor must refuse to nibble-pack —
+/// but its ints still fit i8, so the byte-panel path applies and must
+/// stay bit-exact against the rowwise reference.
+#[test]
+fn int4_one_tailed_rows_fall_back_to_byte_panels() {
+    let mut rng = Rng::new(9007);
+    for &m in &GRID {
+        for &k in &GRID {
+            let n = 17usize;
+            let w = Tensor::randn(&mut rng, &[m, k], 0.6);
+            let mut encs: Vec<Encoding> = (0..m)
+                .map(|r| {
+                    let row = &w.data()[r * k..(r + 1) * k];
+                    let mx = row.iter().fold(1e-3f32, |a, &v| a.max(v.abs()));
+                    Encoding::from_min_max(-mx, mx, 4, true)
+                })
+                .collect();
+            // Row 0 goes one-tailed: its grid is [0, 15], beyond the
+            // signed nibble window, poisoning the whole-tensor pack gate.
+            encs[0] = Encoding::from_min_max(0.0, 2.0, 4, true);
+            assert_eq!(encs[0].int_min, 0, "one-tailed rows get the unsigned grid");
+            assert_eq!(encs[0].int_max, 15);
+            let mut wd = w.data().to_vec();
+            for v in wd.iter_mut().take(k) {
+                *v = v.abs();
+            }
+            wd[0] = 2.0; // quantizes to 15: guaranteed outside [-8, 7]
+            let w = Tensor::new(&[m, k], wd);
+            let qw = QTensor::from_matrix_per_channel(&w, &encs);
+            assert!(!qw.is_nibble_packed(), "({m},{k}) must not nibble-pack");
+            assert!(qw.is_packed(), "ints in [0, 15] still narrow to i8 panels");
+            let x = Tensor::rand_uniform(&mut rng, &[k, n], -2.0, 2.0);
+            let x_enc = Encoding::from_min_max(-2.0, 2.0, 8, false);
+            let got = qw.matmul(&x, &x_enc, None);
+            for r in 0..m {
+                let wrow = Tensor::new(&[1, k], w.data()[r * k..(r + 1) * k].to_vec());
+                let want = quantized_matmul_i32_ref(&wrow, &encs[r], &x, &x_enc, None);
+                assert_eq!(
+                    &got.data()[r * n..(r + 1) * n],
+                    want.data(),
+                    "({m},{k},{n}) row {r}"
+                );
+            }
+        }
+    }
+}
+
 /// The packed i8 GEMM (SIMD microkernel + vector requant epilogue)
 /// equals the i32 requantizing GEMM on a re-centred grid over the grid.
 #[test]

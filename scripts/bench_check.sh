@@ -1,8 +1,10 @@
 #!/usr/bin/env bash
 # Perf + compression + engine gate: build release, run the hotpath,
 # compression and engine benches, and fail if
-#   * BENCH_hotpath.json is missing or the quantsim/fp32 forward ratio
-#     exceeds the paper-motivated 3.0x budget (rust/README.md §Perf), or
+#   * BENCH_hotpath.json is missing, the quantsim/fp32 forward ratio
+#     exceeds the paper-motivated 3.0x budget, or the nibble-packed W4A8
+#     GEMM falls below 1.3x the w8a8 path at 256^3 (rust/README.md
+#     §Perf), or
 #   * BENCH_compress.json is missing, MAC reduction on the reference zoo
 #     model falls below 40%, or the compression eval-score delta exceeds
 #     2 points (rust/README.md §Compression), or
@@ -14,7 +16,9 @@
 #     exceeds 3% of the plain run (README.md §Observability), or the
 #     robustness machinery (admission gate + deadline check + unwind
 #     boundary, fault hooks off) costs more than 1% of the plain b8
-#     forward (rust/README.md §Serving), or
+#     forward (rust/README.md §Serving), or the AMP bit-width search
+#     sheds less than 40% of the packed weight bytes or moves the task
+#     score by more than 1 point (rust/README.md §Perf), or
 #   * batch-8 engine throughput regresses below 0.9x the previous run
 #     recorded in BENCH_history.jsonl (the perf ratchet; only applied when
 #     the previous run used the same thread count AND the same SIMD
@@ -62,6 +66,23 @@ print(
     f"int-GEMM speedup vs naive = {fmt(d.get('int_gemm_speedup_vs_naive'))}"
 )
 
+# W4A8 kernel gate: the nibble-packed int4 GEMM must beat the 8-bit
+# container path by >= 1.3x at 256^3 (same harness, same grids) — the
+# halved weight-panel bandwidth has to pay for the in-register unpack.
+w8 = d.get("gemm_i8_256_gops")
+w4 = d.get("gemm_w4a8_gops")
+if not isinstance(w8, (int, float)) or not isinstance(w4, (int, float)):
+    sys.exit("bench_check: BENCH_hotpath.json lacks gemm_i8_256_gops/gemm_w4a8_gops")
+if w4 < 1.3 * w8:
+    sys.exit(
+        f"bench_check: w4a8 GEMM {w4:.2f} GOP/s < 1.3x the w8a8 path "
+        f"({w8:.2f} GOP/s; floor {1.3 * w8:.2f})"
+    )
+print(
+    f"bench_check OK: w4a8 GEMM {w4:.2f} GOP/s = {w4 / w8:.2f}x w8a8 (>= 1.3x) "
+    f"[{d.get('simd_tier')}]"
+)
+
 with open("BENCH_compress.json") as f:
     c = json.load(f)
 
@@ -88,6 +109,24 @@ if speedup < 1.5:
     )
 if scaling < 2.0:
     sys.exit(f"bench_check: engine batch-8/batch-1 scaling {scaling:.2f}x < 2.0x")
+
+# AMP (greedy per-layer bit-width search) gate: on the reference model the
+# search must shed >= 40% of the packed weight bytes while the task score
+# moves by at most 1 point — the W4A8 deployment story in one number pair.
+amp_red = e.get("amp_weight_reduction_pct")
+amp_delta = e.get("amp_eval_delta")
+if not isinstance(amp_red, (int, float)) or not isinstance(amp_delta, (int, float)):
+    sys.exit("bench_check: BENCH_engine.json lacks amp_weight_reduction_pct/amp_eval_delta")
+if amp_red < 40.0:
+    sys.exit(f"bench_check: AMP packed-weight reduction {amp_red:.1f}% < 40%")
+if abs(amp_delta) > 1.0:
+    sys.exit(f"bench_check: AMP eval delta {amp_delta:+.2f} pts exceeds 1 point")
+print(
+    f"bench_check OK: AMP {amp_red:.1f}% packed-weight reduction "
+    f"(eval delta {amp_delta:+.2f} pts, "
+    f"{fmt(e.get('amp_low_bw_layers'), '')} layer(s) at 4b, "
+    f"served weights {fmt(e.get('weight_bytes_mobimini'), ' B')})"
+)
 
 # Zero-allocation gate: the packed data path (arena plan + worker scratch)
 # must not touch the heap in steady state. The bench counts through a
@@ -255,6 +294,12 @@ entry = {
     "threads": e.get("threads"),
     "simd_tier": e.get("simd_tier"),
     "gemm_gops": e.get("gemm_gops"),
+    "gemm_w4a8_gops": e.get("gemm_w4a8_gops"),
+    "weight_bytes_mobimini": e.get("weight_bytes_mobimini"),
+    "weight_bytes_detmini": e.get("weight_bytes_detmini"),
+    "weight_bytes_segmini": e.get("weight_bytes_segmini"),
+    "amp_weight_reduction_pct": amp_red,
+    "amp_eval_delta": amp_delta,
     "engine_b8_sps_detmini": e.get("engine_b8_sps_detmini"),
     "engine_b8_sps_segmini": e.get("engine_b8_sps_segmini"),
     "wavefronts": e.get("wavefronts"),

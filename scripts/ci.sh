@@ -28,6 +28,19 @@ echo "== ci: tier-1, native simd dispatch (cargo build --release && cargo test -
 echo "== ci: tier-1, forced-scalar dispatch (AIMET_FORCE_SCALAR=1 cargo test -q) =="
 (cd rust && AIMET_FORCE_SCALAR=1 cargo test -q)
 
+# Weight bit-width must be a pure capacity choice: with every weighted
+# layer forced to nibble-packed 4-bit (the W4A8 path), the kernel fuzz
+# suite and the engine-vs-sim agreement properties must still hold — on
+# the native SIMD tier (int4 unpack microkernels live) and again pinned
+# to the scalar reference, so the nibble panels are proven bit-identical
+# to the plain 4-bit grid on every dispatch path.
+echo "== ci: W4A8, native dispatch (AIMET_FORCE_W4=1) =="
+(cd rust && AIMET_FORCE_W4=1 cargo test -q --test engine_integration)
+(cd rust && AIMET_FORCE_W4=1 cargo test -q --test simd_kernels)
+echo "== ci: W4A8, forced-scalar dispatch (AIMET_FORCE_W4=1 AIMET_FORCE_SCALAR=1) =="
+(cd rust && AIMET_FORCE_W4=1 AIMET_FORCE_SCALAR=1 cargo test -q --test engine_integration)
+(cd rust && AIMET_FORCE_W4=1 AIMET_FORCE_SCALAR=1 cargo test -q --test simd_kernels)
+
 # Thread count must be a pure scheduling choice: the wavefront executor and
 # every parallel kernel are bit-identical at any pool width. Pin the engine
 # suite to a deterministic single thread, then to a high thread count so
